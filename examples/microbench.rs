@@ -1,0 +1,43 @@
+//! Fig. 3b driver: sweep the 1-to-N DMA distribution microbenchmark on
+//! the full Occamy model and print the speedup table.
+//!
+//! ```sh
+//! cargo run --release --example microbench -- --sizes 1k,32k --clusters 8,32
+//! ```
+
+use axi_mcast::coordinator::experiments::{
+    fig3b, fig3b_default_clusters, fig3b_default_sizes, fig3b_summary,
+};
+use axi_mcast::occamy::SocConfig;
+use axi_mcast::util::cli::Args;
+
+fn main() -> Result<(), String> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cfg = SocConfig::default();
+    let sizes = args.u64_list_or("sizes", &fig3b_default_sizes())?;
+    let clusters: Vec<usize> = args
+        .u64_list_or(
+            "clusters",
+            &fig3b_default_clusters(&cfg)
+                .iter()
+                .map(|&c| c as u64)
+                .collect::<Vec<_>>(),
+        )?
+        .into_iter()
+        .map(|c| c as usize)
+        .collect();
+
+    println!(
+        "Occamy {} clusters ({} groups), wide {}B/cycle, mcast outstanding {}",
+        cfg.n_clusters,
+        cfg.n_groups(),
+        cfg.wide_bytes,
+        cfg.dma_mcast_outstanding
+    );
+    let (rows, table, _json) = fig3b(&cfg, &sizes, &clusters);
+    println!("{}", table.render());
+    let summary = fig3b_summary(&rows, *clusters.iter().max().unwrap());
+    println!("summary: {}", summary.pretty());
+    println!("(paper fig. 3b: 13.5x-16.2x on 32 clusters, Amdahl p ~97%, hw/sw geomean 5.6x)");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser on the Rust side
+reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage (invoked by ``make artifacts``; never at simulation time):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts produced (per dtype in --dtypes, default f64,f32):
+    tile_<dt>.hlo.txt      one cluster steady-state iteration
+    rowblock_<dt>.hlo.txt  one cluster's full row block
+    matmul_<dt>.hlo.txt    full 256x256 problem (e2e validation oracle)
+plus ``manifest.json`` describing shapes/dtypes for the Rust loader.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402  (needs x64 before tracing f64)
+
+DTYPES = {"f32": "float32", "f64": "float64"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(dtypes, n):
+    """Yield (name, dtype, hlo_text, arg_shapes) for every graph."""
+    for dt in dtypes:
+        np_dt = DTYPES[dt]
+        for name, (fn, args) in model.shapes(np_dt, n=n).items():
+            lowered = jax.jit(fn).lower(*args)
+            yield name, dt, to_hlo_text(lowered), [
+                {"shape": list(a.shape), "dtype": dt} for a in args
+            ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dtypes", default="f64,f32")
+    ap.add_argument("--n", type=int, default=model.N_FULL)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"n": args.n, "graphs": {}}
+    for name, dt, text, arg_shapes in lower_all(args.dtypes.split(","), args.n):
+        fname = f"{name}_{dt}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["graphs"][f"{name}_{dt}"] = {
+            "file": fname,
+            "args": arg_shapes,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

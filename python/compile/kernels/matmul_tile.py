@@ -1,0 +1,112 @@
+"""L1 — Pallas tiled-matmul kernel mirroring the Occamy cluster schedule.
+
+The paper (fig. 3d) schedules the 256x256 matmul so that each cluster
+computes an 8x256 row block of C, one 8x16 tile per steady-state
+iteration, with the 8x256 A panel resident in L1 and the 256x16 B tile
+double-buffered by the DMA.
+
+TPU hardware adaptation (DESIGN.md 'Hardware-Adaptation'):
+  * cluster L1 SPM        -> VMEM; the BlockSpec index maps below play the
+    role of the DMA double-buffering schedule (HBM->VMEM per grid step).
+  * 8x16 C tile, K-loop   -> grid dimension over K blocks, accumulating
+    into the output block (revisited across the K grid dimension).
+  * Snitch FPU SIMD       -> MXU-shaped jnp.dot with
+    preferred_element_type, so f32/bf16 variants hit the systolic array
+    on real hardware; the paper's f64 variant is validated through the
+    interpret=True path (the MXU has no f64 mode).
+
+The kernel MUST be lowered with interpret=True in this environment: the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes: the paper's 8x16 C tile, with K consumed in
+# 64-element chunks (chosen so a (bm, bk) + (bk, bn) + (bm, bn) working
+# set stays far below the 128 KiB L1 / VMEM-per-step analogue).
+DEF_BM = 8
+DEF_BN = 16
+DEF_BK = 64
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps: int, acc_dtype):
+    """Grid = (M/bm, N/bn, K/bk); accumulate A-block @ B-block into o_ref.
+
+    The output block index map ignores the K grid dimension, so the same
+    VMEM-resident C tile is revisited for every K step — the Pallas
+    analogue of the paper's "A tile loaded once, accumulate in L1".
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] += jnp.dot(
+        a, b, preferred_element_type=acc_dtype
+    ).astype(o_ref.dtype)
+
+
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = DEF_BM,
+    bn: int = DEF_BN,
+    bk: int = DEF_BK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """C = A @ B via the Pallas kernel. Shapes must divide the blocks."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shape ({m},{k})x({k},{n}) not divisible by blocks "
+            f"bm={bm} bn={bn} bk={bk}"
+        )
+    acc_dtype = jnp.promote_types(a.dtype, b.dtype)
+    k_steps = k // bk
+    kernel = functools.partial(
+        _matmul_kernel, k_steps=k_steps, acc_dtype=acc_dtype
+    )
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def tile_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c_in: jnp.ndarray,
+    *,
+    bk: int = DEF_BK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One steady-state cluster iteration: c_in + A(8,K) @ B(K,16).
+
+    This is the unit of compute the Rust simulator attributes to one
+    double-buffered DMA phase; it is lowered standalone so the runtime
+    can execute exactly one iteration's FLOPs.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    out = matmul(a, b, bm=m, bn=n, bk=min(bk, k), interpret=interpret)
+    return c_in + out.astype(c_in.dtype)

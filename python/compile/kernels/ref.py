@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the Pallas matmul kernels.
+
+These are the ground truth against which the Pallas kernels (L1) and the
+JAX model functions (L2) are checked at build time. They deliberately use
+nothing but `jnp` primitives so there is no shared code path with the
+kernels under test.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with accumulation in the widest of the input dtypes."""
+    acc_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return jnp.matmul(
+        a.astype(acc_dtype), b.astype(acc_dtype)
+    ).astype(acc_dtype)
+
+
+def tile_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, c_in: jnp.ndarray) -> jnp.ndarray:
+    """One steady-state Occamy cluster iteration: C_tile = C_in + A @ B.
+
+    Shapes (paper fig. 3d): a: (8, 256), b: (256, 16), c_in: (8, 16).
+    """
+    return c_in + matmul_ref(a, b).astype(c_in.dtype)
+
+
+def rowblock_matmul_ref(a_row: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """A cluster's full row-block product: (8, K) @ (K, N) -> (8, N)."""
+    return matmul_ref(a_row, b)

@@ -1,0 +1,69 @@
+"""L2 — JAX model of the Occamy matmul workload, built on the L1 kernel.
+
+The functions here are the *compute graphs* that get AOT-lowered to HLO
+text (see aot.py) and executed by the Rust runtime (rust/src/runtime) on
+the PJRT CPU client. The Rust simulator owns all timing; these graphs own
+the numerics. Every function calls the Pallas kernel so the kernel's
+blocking survives into the lowered HLO.
+
+Paper mapping (fig. 3d):
+  * ``tile_iteration``   — one steady-state iteration of one cluster:
+      C_tile(8,16) = C_in + A_panel(8,256) @ B_tile(256,16)
+  * ``cluster_rowblock`` — a whole cluster's row block:
+      C_row(8,256)  = A_panel(8,256) @ B(256,256)
+  * ``full_matmul``      — the whole 256x256 problem (validation oracle
+      for the end-to-end example).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_tile
+
+# Problem geometry from the paper: largest square f64 tile that fits the
+# 4 MiB LLC with double buffering is 256x256; each of the 32 clusters owns
+# an 8-row block and computes 16-column tiles.
+N_FULL = 256
+ROWS_PER_CLUSTER = 8
+TILE_COLS = 16
+
+
+def tile_iteration(a_panel, b_tile, c_in):
+    """One cluster steady-state iteration (fig. 3d inner loop)."""
+    return matmul_tile.tile_matmul(a_panel, b_tile, c_in)
+
+
+def cluster_rowblock(a_panel, b):
+    """One cluster's full row block, iterating the Pallas kernel over all
+    TILE_COLS-wide column tiles (the grid plays the role of the cluster's
+    outer loop; the DMA double-buffering is the BlockSpec schedule)."""
+    m, k = a_panel.shape
+    _, n = b.shape
+    return matmul_tile.matmul(a_panel, b, bm=m, bn=TILE_COLS, bk=64)
+
+
+def full_matmul(a, b):
+    """The full problem, still through the Pallas kernel (8-row blocking
+    identical to the per-cluster decomposition)."""
+    return matmul_tile.matmul(a, b, bm=ROWS_PER_CLUSTER, bn=TILE_COLS, bk=64)
+
+
+def shapes(dtype, n=N_FULL):
+    """ShapeDtypeStructs for AOT lowering, keyed by graph name."""
+    d = jnp.dtype(dtype)
+    s = jax.ShapeDtypeStruct
+    return {
+        "tile": (
+            tile_iteration,
+            (
+                s((ROWS_PER_CLUSTER, n), d),
+                s((n, TILE_COLS), d),
+                s((ROWS_PER_CLUSTER, TILE_COLS), d),
+            ),
+        ),
+        "rowblock": (
+            cluster_rowblock,
+            (s((ROWS_PER_CLUSTER, n), d), s((n, n), d)),
+        ),
+        "matmul": (full_matmul, (s((n, n), d), s((n, n), d))),
+    }

@@ -1,0 +1,11 @@
+import os
+import sys
+
+import jax
+
+# f64 is the paper's evaluation dtype; must be enabled before any tracing.
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile.*` importable when pytest is launched from python/ or repo
+# root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

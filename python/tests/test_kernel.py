@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (the CORE signal).
+
+hypothesis sweeps shapes (multiples of the block sizes), block sizes and
+dtypes; every case asserts allclose against kernels.ref.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_tile, ref
+
+TOL = {"float32": dict(rtol=1e-4, atol=1e-4), "float64": dict(rtol=1e-10, atol=1e-11)}
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def check_matmul(m, n, k, bm, bn, bk, dtype, seed=0):
+    a = rand((m, k), dtype, seed)
+    b = rand((k, n), dtype, seed + 1)
+    got = matmul_tile.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL[dtype])
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+def test_paper_tile_shape_f64():
+    """The exact fig. 3d steady-state iteration shape."""
+    check_matmul(8, 16, 256, 8, 16, 64, "float64")
+
+
+def test_paper_rowblock_shape_f64():
+    check_matmul(8, 256, 256, 8, 16, 64, "float64")
+
+
+def test_full_256_f64():
+    check_matmul(256, 256, 256, 8, 16, 64, "float64")
+
+
+def test_full_256_f32():
+    check_matmul(256, 256, 256, 8, 16, 64, "float32")
+
+
+def test_single_block():
+    check_matmul(8, 16, 64, 8, 16, 64, "float64")
+
+
+def test_k_accumulation_order():
+    """Many K steps: accumulation over the K grid dim must be complete."""
+    check_matmul(8, 16, 512, 8, 16, 32, "float64")
+
+
+def test_tile_matmul_adds_c_in():
+    a = rand((8, 256), "float64", 3)
+    b = rand((256, 16), "float64", 4)
+    c = rand((8, 16), "float64", 5)
+    got = matmul_tile.tile_matmul(a, b, c)
+    want = ref.tile_matmul_ref(a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL["float64"])
+
+
+def test_rejects_nondivisible_shapes():
+    a = jnp.zeros((9, 64))
+    b = jnp.zeros((64, 16))
+    with pytest.raises(ValueError):
+        matmul_tile.matmul(a, b, bm=8, bn=16, bk=64)
+
+
+def test_rejects_contraction_mismatch():
+    with pytest.raises(ValueError):
+        matmul_tile.matmul(jnp.zeros((8, 32)), jnp.zeros((64, 16)))
+
+
+def test_zero_inputs():
+    a = jnp.zeros((8, 64), jnp.float64)
+    b = jnp.zeros((64, 16), jnp.float64)
+    out = matmul_tile.matmul(a, b, bm=8, bn=16, bk=64)
+    assert not np.any(np.asarray(out))
+
+
+def test_identity_b():
+    a = rand((8, 64), "float64", 7)
+    out = matmul_tile.matmul(a, jnp.eye(64, dtype=jnp.float64), bm=8, bn=16, bk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a), rtol=1e-10, atol=1e-11)
+
+
+# ------------------------------------------------------------ hypothesis sweep
+
+blocks = st.sampled_from([(8, 16, 32), (8, 16, 64), (4, 8, 16), (8, 8, 8), (16, 32, 64)])
+mults = st.tuples(
+    st.integers(1, 3), st.integers(1, 3), st.integers(1, 4)
+)
+dtypes = st.sampled_from(["float32", "float64"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(blk=blocks, mult=mults, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_sweep(blk, mult, dtype, seed):
+    (bm, bn, bk), (mi, ni, ki) = blk, mult
+    check_matmul(bm * mi, bn * ni, bk * ki, bm, bn, bk, dtype, seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_mult=st.integers(1, 8),
+    dtype=dtypes,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tile_matmul_sweep(k_mult, dtype, seed):
+    k = 64 * k_mult
+    a = rand((8, k), dtype, seed)
+    b = rand((k, 16), dtype, seed + 1)
+    c = rand((8, 16), dtype, seed + 2)
+    got = matmul_tile.tile_matmul(a, b, c)
+    want = ref.tile_matmul_ref(a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL[dtype])

@@ -1,0 +1,80 @@
+"""L2 correctness: model graphs vs oracle, and shape metadata sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def test_tile_iteration_matches_ref():
+    a = rand((8, 256), "float64", 0)
+    b = rand((256, 16), "float64", 1)
+    c = rand((8, 16), "float64", 2)
+    np.testing.assert_allclose(
+        np.asarray(model.tile_iteration(a, b, c)),
+        np.asarray(ref.tile_matmul_ref(a, b, c)),
+        rtol=1e-10, atol=1e-11,
+    )
+
+
+def test_cluster_rowblock_matches_ref():
+    a = rand((8, 256), "float64", 3)
+    b = rand((256, 256), "float64", 4)
+    np.testing.assert_allclose(
+        np.asarray(model.cluster_rowblock(a, b)),
+        np.asarray(ref.rowblock_matmul_ref(a, b)),
+        rtol=1e-10, atol=1e-11,
+    )
+
+
+def test_full_matmul_matches_ref():
+    a = rand((256, 256), "float64", 5)
+    b = rand((256, 256), "float64", 6)
+    np.testing.assert_allclose(
+        np.asarray(model.full_matmul(a, b)),
+        np.asarray(ref.matmul_ref(a, b)),
+        rtol=1e-10, atol=1e-11,
+    )
+
+
+def test_rowblock_decomposition_equals_full():
+    """32 clusters x 8-row blocks == the full product (fig. 3d)."""
+    a = rand((256, 256), "float64", 7)
+    b = rand((256, 256), "float64", 8)
+    full = np.asarray(model.full_matmul(a, b))
+    for cl in range(32):
+        rows = slice(8 * cl, 8 * (cl + 1))
+        blk = np.asarray(model.cluster_rowblock(a[rows], b))
+        np.testing.assert_allclose(blk, full[rows], rtol=1e-10, atol=1e-11)
+
+
+def test_shapes_metadata():
+    for dt in ("float32", "float64"):
+        graphs = model.shapes(dt)
+        assert set(graphs) == {"tile", "rowblock", "matmul"}
+        fn, args = graphs["tile"]
+        assert [tuple(a.shape) for a in args] == [(8, 256), (256, 16), (8, 16)]
+        fn, args = graphs["matmul"]
+        assert [tuple(a.shape) for a in args] == [(256, 256), (256, 256)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dtype=st.sampled_from(["float32", "float64"]))
+def test_tile_iteration_sweep(seed, dtype):
+    a = rand((8, 256), dtype, seed)
+    b = rand((256, 16), dtype, seed + 1)
+    c = rand((8, 16), dtype, seed + 2)
+    tol = 1e-4 if dtype == "float32" else 1e-11
+    np.testing.assert_allclose(
+        np.asarray(model.tile_iteration(a, b, c)),
+        np.asarray(ref.tile_matmul_ref(a, b, c)),
+        rtol=tol,
+        atol=tol,
+    )

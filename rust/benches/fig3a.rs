@@ -1,0 +1,20 @@
+//! Bench/regeneration harness for fig. 3a: area + timing of the
+//! N-to-N crossbar, baseline vs multicast. (criterion is unavailable
+//! offline; this is a plain `harness = false` bench binary that prints
+//! the figure's rows and times the model evaluation.)
+
+use std::time::Instant;
+
+use axi_mcast::coordinator::experiments::fig3a;
+
+fn main() {
+    let t0 = Instant::now();
+    let (table, json) = fig3a();
+    let dt = t0.elapsed();
+    println!("fig3a — area/timing of the multicast AXI crossbar");
+    println!("{}", table.render());
+    println!("paper anchors: +13.1 kGE (9%) @8x8, +45.4 kGE (12%) @16x16, 16x16-mcast at -6% fmax");
+    println!("model evaluated in {dt:?}");
+    // machine-readable row dump for EXPERIMENTS.md tooling
+    println!("JSON {json}");
+}

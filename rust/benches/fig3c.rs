@@ -1,0 +1,34 @@
+//! Bench/regeneration harness for fig. 3c/3d: the 256×256 f64 matmul
+//! roofline points in the three B-distribution modes, plus the
+//! schedule description. Uses the Rust tile executor (running the PJRT
+//! path under a bench loop is exercised by examples/matmul_e2e.rs).
+
+use std::time::Instant;
+
+use axi_mcast::coordinator::experiments::{fig3c, fig3d_schedule};
+use axi_mcast::occamy::SocConfig;
+use axi_mcast::workloads::matmul::RustTileExec;
+
+fn main() {
+    let cfg = SocConfig::default();
+    let mut exec = RustTileExec;
+    let t0 = Instant::now();
+    let (rows, table, json) = fig3c(&cfg, &mut exec);
+    let dt = t0.elapsed();
+    println!("fig3c — matmul performance (paper: 114.4 / ~297 / 391.4 GFLOPS)");
+    println!("{}", table.render());
+    let hw = rows.last().unwrap();
+    let sw = &rows[1];
+    println!(
+        "headline: hw over sw reference = +{:.0}% (paper: 29%)",
+        (hw.result.gflops / sw.result.gflops - 1.0) * 100.0
+    );
+    let sim_cycles: u64 = rows.iter().map(|r| r.result.cycles).sum();
+    println!(
+        "bench: {} simulated cycles in {dt:?} ({:.2} Mcycle/s whole-SoC)",
+        sim_cycles,
+        sim_cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!("\nfig3d — {}", fig3d_schedule(&cfg));
+    println!("JSON {json}");
+}

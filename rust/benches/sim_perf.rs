@@ -1,0 +1,125 @@
+//! Simulator-performance microbenchmarks (§Perf): isolate the hot
+//! paths — crossbar arbitration, W transport, whole-SoC stepping — and
+//! report simulated-cycles-per-second so optimisation deltas are
+//! measurable layer by layer.
+
+use std::time::Instant;
+
+use axi_mcast::axi::golden::SimSlave;
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::types::{AwBeat, WBeat};
+use axi_mcast::axi::xbar::{Xbar, XbarCfg};
+use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+
+fn cluster_map(n: usize) -> AddrMap {
+    let rules: Vec<AddrRule> = (0..n)
+        .map(|i| {
+            AddrRule::new(
+                0x0100_0000 + i as u64 * 0x4_0000,
+                0x0100_0000 + (i as u64 + 1) * 0x4_0000,
+                i,
+                &format!("c{i}"),
+            )
+            .with_mcast()
+        })
+        .collect();
+    AddrMap::new(rules, n).unwrap()
+}
+
+/// Saturated 16×16 crossbar: every master streams multicast writes.
+fn bench_xbar_16x16(cycles: u64) -> f64 {
+    let n = 16;
+    let cfg = XbarCfg::new("perf", n, n, cluster_map(n));
+    let (mut xbar, mut pool) = Xbar::with_pool(cfg, 2);
+    let mut slaves: Vec<SimSlave> = (0..n).map(SimSlave::new).collect();
+    let mut txn = 1u64;
+    let mut sent = vec![0u32; n];
+    let dest = AddrSet::new(0x0100_0000, (n as u64 - 1) * 0x4_0000);
+    let t0 = Instant::now();
+    for cy in 0..cycles {
+        for m in 0..n {
+            if sent[m] == 0 && pool[m].aw.can_push() {
+                sent[m] = 16;
+                pool[m].aw.push(AwBeat {
+                    id: 0,
+                    dest,
+                    beats: 16,
+                    beat_bytes: 64,
+                    is_mcast: true,
+                    exclude: None,
+                    src: m,
+                    txn,
+                });
+                txn += 1;
+            }
+            if sent[m] > 0 && pool[m].w.can_push() {
+                sent[m] -= 1;
+                pool[m].w.push(WBeat {
+                    last: sent[m] == 0,
+                    src: m,
+                    txn: txn - 1,
+                });
+            }
+            let _ = pool[m].b.pop();
+        }
+        xbar.step(&mut pool);
+        for (i, s) in slaves.iter_mut().enumerate() {
+            s.step(cy, &mut pool[n + i]);
+        }
+        for l in pool.iter_mut() {
+            l.tick();
+        }
+    }
+    cycles as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Whole 32-cluster SoC under the hw-multicast microbenchmark load.
+fn bench_soc(iters: u32) -> (f64, u64) {
+    let cfg = SocConfig::default();
+    let mut total_cycles = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut soc = Soc::new(cfg.clone());
+        let mut progs = vec![Vec::new(); cfg.n_clusters];
+        progs[0] = vec![
+            Cmd::Dma {
+                src: cfg.cluster_base(0),
+                dst: cfg.cluster_set(0, 32, 0x10000),
+                bytes: 32 * 1024,
+                tag: 1,
+            },
+            Cmd::WaitDma,
+        ];
+        soc.load_programs(progs);
+        total_cycles += soc.run_default(&mut NopCompute).unwrap();
+    }
+    (
+        total_cycles as f64 / t0.elapsed().as_secs_f64(),
+        total_cycles / iters as u64,
+    )
+}
+
+/// Idle SoC stepping cost (fixed overhead per cycle).
+fn bench_soc_idle(cycles: u64) -> f64 {
+    let cfg = SocConfig::default();
+    let mut soc = Soc::new(cfg);
+    let t0 = Instant::now();
+    for _ in 0..cycles {
+        soc.step(&mut NopCompute);
+    }
+    cycles as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("sim_perf — simulator hot-path throughput (higher is better)\n");
+    let x = bench_xbar_16x16(200_000);
+    println!("xbar 16x16 saturated mcast : {:>8.2} Mcycle/s", x / 1e6);
+    let idle = bench_soc_idle(200_000);
+    println!("SoC 32-cluster idle step   : {:>8.2} Mcycle/s", idle / 1e6);
+    let (soc, per_run) = bench_soc(20);
+    println!(
+        "SoC 32-cluster hw-mcast load: {:>8.2} Mcycle/s ({per_run} cycles/run)",
+        soc / 1e6
+    );
+}

@@ -1,0 +1,14 @@
+//! Fig. 3a substitute: analytical area (kGE) and timing model of the
+//! N-to-N crossbar, with and without the multicast extension.
+//!
+//! We cannot run Fusion Compiler on GF 12LP+; instead the model sums
+//! per-component gate-equivalent estimates whose constants are
+//! calibrated against the paper's two anchor points (§III-A: +13.1 kGE
+//! / 9% at 8×8 and +45.4 kGE / 12% at 16×16, baseline ≈ 145.6 / 378.3
+//! kGE respectively). The *structure* (what scales with N², what with
+//! N) comes from the RTL architecture; only the unit costs are fitted.
+//! See DESIGN.md §2 and EXPERIMENTS.md fig3a.
+
+pub mod model;
+
+pub use model::{xbar_area, AreaBreakdown, AreaParams, TimingModel};

@@ -1,0 +1,354 @@
+//! Address map + the extended (multicast-capable) address decoder.
+//!
+//! A crossbar is associated with a set of address rules, each mapping an
+//! address interval to a slave port. The paper extends the decoder so a
+//! mask-form request produces `aw_select`: the set of slave ports whose
+//! rules intersect the request's address set, together with the subset
+//! of destination addresses falling within each slave (§II-A).
+
+use super::mcast::{AddrSet, MfeError};
+use super::types::Addr;
+
+/// One address rule: `[start, end)` → slave port `slave`.
+#[derive(Debug, Clone)]
+pub struct AddrRule {
+    pub start: Addr,
+    pub end: Addr,
+    pub slave: usize,
+    /// Whether this region may be targeted by multicast requests; such
+    /// rules must be power-of-two sized and size-aligned (convertible to
+    /// mask form).
+    pub mcast: bool,
+    pub name: String,
+}
+
+impl AddrRule {
+    pub fn new(start: Addr, end: Addr, slave: usize, name: &str) -> AddrRule {
+        AddrRule {
+            start,
+            end,
+            slave,
+            mcast: false,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn with_mcast(mut self) -> AddrRule {
+        self.mcast = true;
+        self
+    }
+
+    pub fn contains(&self, a: Addr) -> bool {
+        a >= self.start && a < self.end
+    }
+}
+
+/// Errors building an address map.
+#[derive(Debug, thiserror::Error)]
+pub enum MapError {
+    #[error("rule '{name}': {source}")]
+    BadMcastRule {
+        name: String,
+        #[source]
+        source: MfeError,
+    },
+    #[error("rules '{a}' and '{b}' overlap")]
+    Overlap { a: String, b: String },
+    #[error("rule '{name}' targets slave {slave} >= {n_slaves}")]
+    BadSlave {
+        name: String,
+        slave: usize,
+        n_slaves: usize,
+    },
+}
+
+/// Result of multicast decode: the `aw_select` vector.
+#[derive(Debug, Clone, Default)]
+pub struct McastDecode {
+    /// `(slave port, subset of the request's addresses inside it)`,
+    /// ordered by slave port index (the priority-encoder order used to
+    /// pick the B ID source).
+    pub targets: Vec<(usize, AddrSet)>,
+    /// Number of requested addresses not covered by any matching rule
+    /// (⇒ DECERR contribution on the B join).
+    pub uncovered: u64,
+}
+
+impl McastDecode {
+    pub fn slave_set(&self) -> Vec<usize> {
+        self.targets.iter().map(|(s, _)| *s).collect()
+    }
+}
+
+/// The validated address map of one crossbar.
+#[derive(Debug, Clone)]
+pub struct AddrMap {
+    rules: Vec<AddrRule>,
+    /// Mask-form representation of every mcast-capable rule
+    /// (precomputed by the "convert all multicast rules to mask form"
+    /// logic in the paper).
+    mfe: Vec<Option<AddrSet>>,
+}
+
+impl AddrMap {
+    pub fn new(rules: Vec<AddrRule>, n_slaves: usize) -> Result<AddrMap, MapError> {
+        // validate slaves
+        for r in &rules {
+            if r.slave >= n_slaves {
+                return Err(MapError::BadSlave {
+                    name: r.name.clone(),
+                    slave: r.slave,
+                    n_slaves,
+                });
+            }
+        }
+        // validate non-overlap (O(n²), maps are small)
+        for (i, a) in rules.iter().enumerate() {
+            for b in rules.iter().skip(i + 1) {
+                if a.start < b.end && b.start < a.end {
+                    return Err(MapError::Overlap {
+                        a: a.name.clone(),
+                        b: b.name.clone(),
+                    });
+                }
+            }
+        }
+        // precompute MFE for mcast rules
+        let mut mfe = Vec::with_capacity(rules.len());
+        for r in &rules {
+            if r.mcast {
+                let s = AddrSet::from_interval(r.start, r.end).map_err(|e| {
+                    MapError::BadMcastRule {
+                        name: r.name.clone(),
+                        source: e,
+                    }
+                })?;
+                mfe.push(Some(s));
+            } else {
+                mfe.push(None);
+            }
+        }
+        Ok(AddrMap { rules, mfe })
+    }
+
+    pub fn rules(&self) -> &[AddrRule] {
+        &self.rules
+    }
+
+    /// Classic unicast decode: the slave whose rule contains `addr`.
+    pub fn decode_unicast(&self, addr: Addr) -> Option<usize> {
+        self.rules.iter().find(|r| r.contains(addr)).map(|r| r.slave)
+    }
+
+    /// Extended decode (fig. 2a "address decoder" + §II-A): compute
+    /// `aw_select` and per-slave subsets for a mask-form request.
+    ///
+    /// Unicast requests (singleton sets) also pass through here — they
+    /// match exactly one rule, multicast-capable or not.
+    pub fn decode(&self, req: &AddrSet) -> McastDecode {
+        if req.is_singleton() {
+            return match self.decode_unicast(req.addr) {
+                Some(slave) => McastDecode {
+                    targets: vec![(slave, *req)],
+                    uncovered: 0,
+                },
+                None => McastDecode {
+                    targets: Vec::new(),
+                    uncovered: 1,
+                },
+            };
+        }
+        let mut covered = 0u64;
+        // collect per-slave subsets; a slave may own several rules, so
+        // aggregate by slave index
+        let mut per_slave: Vec<(usize, AddrSet)> = Vec::new();
+        for (r, mfe) in self.rules.iter().zip(&self.mfe) {
+            let Some(rule_set) = mfe else {
+                // Non-mcast rule: a multicast request must not target it.
+                // Count any overlap as uncovered (⇒ DECERR), matching
+                // hardware where only mcast rules enter the extended
+                // decoder.
+                continue;
+            };
+            if let Some(sub) = req.intersect(rule_set) {
+                covered += sub.count();
+                per_slave.push((r.slave, sub));
+            }
+        }
+        per_slave.sort_by_key(|(s, _)| *s);
+        // merge subsets landing on the same slave via different rules:
+        // keep them as separate entries only if addresses differ; the
+        // demux forks one AW per *slave*, so collapse to the union's
+        // bounding set is not generally mask-representable — instead we
+        // keep the first subset and fold counts. In practice Occamy maps
+        // one rule per slave, so this path is exercised only in tests.
+        let mut targets: Vec<(usize, AddrSet)> = Vec::new();
+        for (s, sub) in per_slave {
+            match targets.last() {
+                Some((ls, _)) if *ls == s => { /* keep first subset */ }
+                _ => targets.push((s, sub)),
+            }
+        }
+        McastDecode {
+            targets,
+            uncovered: req.count().saturating_sub(covered),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_mini::{check, Config};
+
+    /// Occamy-like map: 4 clusters with 0x4_0000 stride at 0x0100_0000.
+    fn occamy4() -> AddrMap {
+        let stride = 0x4_0000u64;
+        let base = 0x0100_0000u64;
+        let mut rules: Vec<AddrRule> = (0..4)
+            .map(|i| {
+                AddrRule::new(
+                    base + i as u64 * stride,
+                    base + (i as u64 + 1) * stride,
+                    i,
+                    &format!("cluster{i}"),
+                )
+                .with_mcast()
+            })
+            .collect();
+        rules.push(AddrRule::new(0x8000_0000, 0x8040_0000, 4, "llc"));
+        AddrMap::new(rules, 5).unwrap()
+    }
+
+    #[test]
+    fn unicast_decode() {
+        let m = occamy4();
+        assert_eq!(m.decode_unicast(0x0100_0000), Some(0));
+        assert_eq!(m.decode_unicast(0x010C_0004), Some(3));
+        assert_eq!(m.decode_unicast(0x8000_0000), Some(4));
+        assert_eq!(m.decode_unicast(0x0), None);
+    }
+
+    #[test]
+    fn mcast_decode_all_clusters() {
+        let m = occamy4();
+        // broadcast offset 0x40 into all 4 clusters: mask the two
+        // cluster-index bits (18 and 19)
+        let req = AddrSet::new(0x0100_0040, 0x3 << 18);
+        let d = m.decode(&req);
+        assert_eq!(d.slave_set(), vec![0, 1, 2, 3]);
+        assert_eq!(d.uncovered, 0);
+        for (i, (s, sub)) in d.targets.iter().enumerate() {
+            assert_eq!(*s, i);
+            assert_eq!(sub.enumerate(), vec![0x0100_0040 + (i as u64) * 0x4_0000]);
+        }
+    }
+
+    #[test]
+    fn mcast_decode_subset_of_clusters() {
+        let m = occamy4();
+        // clusters 2 and 3 only: fix bit 19, mask bit 18
+        let req = AddrSet::new(0x0108_0000, 1 << 18);
+        let d = m.decode(&req);
+        assert_eq!(d.slave_set(), vec![2, 3]);
+        assert_eq!(d.uncovered, 0);
+    }
+
+    #[test]
+    fn mcast_to_nonmcast_region_is_uncovered() {
+        let m = occamy4();
+        // a masked request in LLC space (not mcast-capable)
+        let req = AddrSet::new(0x8000_0000, 1 << 6);
+        let d = m.decode(&req);
+        assert!(d.targets.is_empty());
+        assert_eq!(d.uncovered, 2);
+    }
+
+    #[test]
+    fn singleton_through_mcast_decoder() {
+        let m = occamy4();
+        let d = m.decode(&AddrSet::unicast(0x0104_0008));
+        assert_eq!(d.slave_set(), vec![1]);
+        assert_eq!(d.uncovered, 0);
+        let d = m.decode(&AddrSet::unicast(0x4));
+        assert!(d.targets.is_empty());
+        assert_eq!(d.uncovered, 1);
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let rules = vec![
+            AddrRule::new(0x0, 0x2000, 0, "a"),
+            AddrRule::new(0x1000, 0x3000, 1, "b"),
+        ];
+        assert!(matches!(
+            AddrMap::new(rules, 2),
+            Err(MapError::Overlap { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_mcast_rule_rejected() {
+        let rules = vec![AddrRule::new(0x1000, 0x4000, 0, "bad").with_mcast()];
+        assert!(matches!(
+            AddrMap::new(rules, 1),
+            Err(MapError::BadMcastRule { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_slave_rejected() {
+        let rules = vec![AddrRule::new(0x0, 0x1000, 3, "oops")];
+        assert!(matches!(AddrMap::new(rules, 2), Err(MapError::BadSlave { .. })));
+    }
+
+    #[test]
+    fn prop_decode_matches_bruteforce() {
+        // decoder subsets must equal brute-force membership per rule
+        let m = occamy4();
+        check(
+            "decode-vs-bruteforce",
+            Config::default(),
+            |g| {
+                // random request over the cluster region bit space
+                let mut mask = 0u64;
+                for _ in 0..g.u64_below(4) {
+                    mask |= 1u64 << (6 + g.u64_below(16)); // bits 6..21
+                }
+                AddrSet::new(0x0100_0000 | g.u64_below(1 << 21), mask)
+            },
+            |req| {
+                let d = m.decode(req);
+                let mut brute_cov = 0u64;
+                for addr in req.enumerate() {
+                    let slave = m.decode_unicast(addr);
+                    match slave {
+                        Some(s) => {
+                            brute_cov += 1;
+                            let entry = d.targets.iter().find(|(ts, _)| *ts == s);
+                            match entry {
+                                None => return Err(format!("slave {s} missing for {addr:#x}")),
+                                Some((_, sub)) => {
+                                    if !sub.contains(addr) {
+                                        return Err(format!(
+                                            "{addr:#x} not in subset {sub} of slave {s}"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                        None => {}
+                    }
+                }
+                if req.count() - brute_cov != d.uncovered {
+                    return Err(format!(
+                        "uncovered {} != brute {}",
+                        d.uncovered,
+                        req.count() - brute_cov
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

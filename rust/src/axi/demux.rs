@@ -1,0 +1,383 @@
+//! Per-master demux state (paper fig. 2d).
+//!
+//! The demux owns three concerns of the multicast extension:
+//!
+//! * **Ordering stalls** (orange logic): a unicast AW with the same AXI
+//!   ID as an outstanding transaction to a *different* slave must stall
+//!   (B responses could be joined out of order). Multicast transactions
+//!   stall until all outstanding unicasts complete and vice versa;
+//!   multiple outstanding multicasts are allowed only when directed to
+//!   the *same* master-port set, up to a configurable maximum.
+//! * **AW/W forking** (blue logic): a committed multicast AW is forked
+//!   to every addressed slave port; W beats are forwarded only when
+//!   *all* destinations can accept (`stream_fork` all-ready semantics).
+//! * **B joining** (green logic, `stream_join_dynamic`): one B response
+//!   is expected per forked AW; the joined response is released to the
+//!   master only after every slave responded. Response codes are merged
+//!   with [`Resp::join`]; the ID is taken from the first addressed slave
+//!   (priority-encoder choice — all forks share the ID anyway).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::addr_map::McastDecode;
+use super::mcast::AddrSet;
+use super::types::{AwBeat, AxiId, BBeat, Resp, Txn};
+
+/// One forked AW headed to a specific slave port.
+#[derive(Debug, Clone)]
+pub struct TargetAw {
+    pub slave: usize,
+    pub dest: AddrSet,
+    /// Hierarchical routing scope: addresses inside this aligned region
+    /// have already been served locally and must be pruned downstream
+    /// (see `xbar` docs — the model's equivalent of the RTL's up-rule
+    /// decomposition).
+    pub exclude: Option<(u64, u64)>,
+}
+
+/// An AW accepted from the master, decoded, awaiting grant/commit.
+#[derive(Debug, Clone)]
+pub struct PendingAw {
+    pub beat: AwBeat,
+    pub targets: Vec<TargetAw>,
+    /// Initial join resp (DECERR if part of the set was unroutable).
+    pub resp0: Resp,
+}
+
+/// W routing entry: where the next W burst from this master goes.
+#[derive(Debug, Clone)]
+pub struct WRoute {
+    pub txn: Txn,
+    pub slaves: Vec<usize>,
+    pub beats_left: u32,
+    pub is_mcast: bool,
+}
+
+/// B-join bookkeeping for one outstanding write transaction.
+#[derive(Debug, Clone)]
+pub struct Join {
+    pub id: AxiId,
+    pub remaining: u32,
+    pub resp: Resp,
+    pub is_mcast: bool,
+    /// Slave set (for the ordering table release).
+    pub slaves: Vec<usize>,
+}
+
+/// Per-ID ordering entry (unicast): slave currently bound to this ID.
+#[derive(Debug, Clone, Copy)]
+pub struct IdBinding {
+    pub slave: usize,
+    pub count: u32,
+}
+
+/// Why the demux refused to accept an AW this cycle (stats/tracing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stall {
+    None,
+    /// unicast blocked: same ID bound to a different slave
+    IdConflict,
+    /// unicast blocked by outstanding multicast(s)
+    UnicastAfterMcast,
+    /// multicast blocked by outstanding unicast(s)
+    McastAfterUnicast,
+    /// multicast blocked: different target set than outstanding mcasts
+    McastSetMismatch,
+    /// multicast blocked: max outstanding multicasts reached
+    McastLimit,
+    /// a decoded AW is already waiting for grants
+    Pending,
+    /// too many outstanding writes overall
+    Outstanding,
+}
+
+/// The demux state machine for one master port.
+#[derive(Debug)]
+pub struct Demux {
+    pub idx: usize,
+    pub max_mcast_outstanding: u32,
+    pub max_outstanding: u32,
+
+    pub pending: Option<PendingAw>,
+    pub w_queue: VecDeque<WRoute>,
+    pub joins: HashMap<Txn, Join>,
+    /// Completed joined B responses waiting for the master's B ready.
+    pub b_out: VecDeque<BBeat>,
+
+    // ordering state
+    pub id_table: HashMap<AxiId, IdBinding>,
+    pub outstanding_unicast: u32,
+    pub outstanding_mcast: u32,
+    /// Target-port set shared by all outstanding multicasts.
+    pub mcast_set: Vec<usize>,
+}
+
+impl Demux {
+    pub fn new(idx: usize, max_mcast_outstanding: u32, max_outstanding: u32) -> Demux {
+        Demux {
+            idx,
+            max_mcast_outstanding,
+            max_outstanding,
+            pending: None,
+            w_queue: VecDeque::new(),
+            joins: HashMap::new(),
+            b_out: VecDeque::new(),
+            id_table: HashMap::new(),
+            outstanding_unicast: 0,
+            outstanding_mcast: 0,
+            mcast_set: Vec::new(),
+        }
+    }
+
+    /// Can a new AW with this shape be accepted this cycle?
+    pub fn admit(&self, is_mcast: bool, id: AxiId, slaves: &[usize]) -> Stall {
+        if self.pending.is_some() {
+            return Stall::Pending;
+        }
+        if self.outstanding_unicast + self.outstanding_mcast >= self.max_outstanding {
+            return Stall::Outstanding;
+        }
+        if is_mcast {
+            if self.outstanding_unicast > 0 {
+                return Stall::McastAfterUnicast;
+            }
+            if self.outstanding_mcast > 0 {
+                if self.mcast_set != slaves {
+                    return Stall::McastSetMismatch;
+                }
+                if self.outstanding_mcast >= self.max_mcast_outstanding {
+                    return Stall::McastLimit;
+                }
+            }
+        } else {
+            if self.outstanding_mcast > 0 {
+                return Stall::UnicastAfterMcast;
+            }
+            if let [slave] = slaves {
+                if let Some(b) = self.id_table.get(&id) {
+                    if b.slave != *slave {
+                        return Stall::IdConflict;
+                    }
+                }
+            }
+        }
+        Stall::None
+    }
+
+    /// Record acceptance of an AW (ordering tables + W route + join).
+    pub fn accept(&mut self, beat: &AwBeat, targets: &[TargetAw], resp0: Resp) {
+        let slaves: Vec<usize> = targets.iter().map(|t| t.slave).collect();
+        if beat.is_mcast {
+            self.outstanding_mcast += 1;
+            self.mcast_set = slaves.clone();
+        } else if let Some(&s) = slaves.first() {
+            self.outstanding_unicast += 1;
+            self.id_table
+                .entry(beat.id)
+                .and_modify(|b| b.count += 1)
+                .or_insert(IdBinding { slave: s, count: 1 });
+        } else {
+            // fully unroutable unicast still occupies a W slot
+            self.outstanding_unicast += 1;
+        }
+        self.w_queue.push_back(WRoute {
+            txn: beat.txn,
+            slaves: slaves.clone(),
+            beats_left: beat.beats,
+            is_mcast: beat.is_mcast,
+        });
+        self.joins.insert(
+            beat.txn,
+            Join {
+                id: beat.id,
+                remaining: slaves.len() as u32,
+                resp: resp0,
+                is_mcast: beat.is_mcast,
+                slaves,
+            },
+        );
+    }
+
+    /// Fold one slave's B response into the join; returns the merged B
+    /// when all expected responses arrived.
+    pub fn join_b(&mut self, txn: Txn, resp: Resp, id: AxiId) -> Option<BBeat> {
+        let j = self
+            .joins
+            .get_mut(&txn)
+            .unwrap_or_else(|| panic!("B for unknown txn {txn}"));
+        j.resp = j.resp.join(resp);
+        debug_assert!(j.remaining > 0);
+        j.remaining -= 1;
+        let _ = id;
+        if j.remaining > 0 {
+            return None;
+        }
+        let j = self.joins.remove(&txn).unwrap();
+        // release ordering state
+        if j.is_mcast {
+            debug_assert!(self.outstanding_mcast > 0);
+            self.outstanding_mcast -= 1;
+            if self.outstanding_mcast == 0 {
+                self.mcast_set.clear();
+            }
+        } else {
+            debug_assert!(self.outstanding_unicast > 0);
+            self.outstanding_unicast -= 1;
+            if let Some(b) = self.id_table.get_mut(&j.id) {
+                b.count -= 1;
+                if b.count == 0 {
+                    self.id_table.remove(&j.id);
+                }
+            }
+        }
+        Some(BBeat {
+            id: j.id,
+            resp: j.resp,
+            txn,
+        })
+    }
+
+    /// A transaction with zero targets completes immediately with DECERR
+    /// (after its W beats are drained).
+    pub fn complete_unroutable(&mut self, txn: Txn) -> BBeat {
+        let j = self.joins.remove(&txn).expect("unroutable txn must join");
+        debug_assert_eq!(j.remaining, 0);
+        if j.is_mcast {
+            self.outstanding_mcast -= 1;
+            if self.outstanding_mcast == 0 {
+                self.mcast_set.clear();
+            }
+        } else {
+            self.outstanding_unicast -= 1;
+        }
+        BBeat {
+            id: j.id,
+            resp: Resp::DecErr,
+            txn,
+        }
+    }
+
+    /// Total writes in flight (for idle checks).
+    pub fn busy(&self) -> bool {
+        self.pending.is_some() || !self.w_queue.is_empty() || !self.joins.is_empty()
+    }
+}
+
+/// Build fork targets from a decode result (pure helper shared by the
+/// xbar and its tests).
+pub fn targets_from_decode(d: &McastDecode) -> Vec<TargetAw> {
+    d.targets
+        .iter()
+        .map(|(s, sub)| TargetAw {
+            slave: *s,
+            dest: *sub,
+            exclude: None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aw(txn: Txn, id: AxiId, is_mcast: bool, beats: u32) -> AwBeat {
+        AwBeat {
+            id,
+            dest: AddrSet::unicast(0x1000),
+            beats,
+            beat_bytes: 64,
+            is_mcast,
+            exclude: None,
+            src: 0,
+            txn,
+        }
+    }
+
+    fn tgts(slaves: &[usize]) -> Vec<TargetAw> {
+        slaves
+            .iter()
+            .map(|&s| TargetAw {
+                slave: s,
+                dest: AddrSet::unicast(0x1000),
+                exclude: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unicast_same_id_same_slave_ok() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(1, 5, false, 4), &tgts(&[2]), Resp::Okay);
+        assert_eq!(d.admit(false, 5, &[2]), Stall::None);
+        assert_eq!(d.admit(false, 5, &[3]), Stall::IdConflict);
+        assert_eq!(d.admit(false, 6, &[3]), Stall::None);
+    }
+
+    #[test]
+    fn mcast_blocks_until_unicast_drains() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(1, 0, false, 1), &tgts(&[1]), Resp::Okay);
+        assert_eq!(d.admit(true, 0, &[0, 1]), Stall::McastAfterUnicast);
+        let b = d.join_b(1, Resp::Okay, 0).expect("single B completes");
+        assert_eq!(b.resp, Resp::Okay);
+        assert_eq!(d.admit(true, 0, &[0, 1]), Stall::None);
+    }
+
+    #[test]
+    fn unicast_blocks_while_mcast_outstanding() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(1, 0, true, 1), &tgts(&[0, 1]), Resp::Okay);
+        assert_eq!(d.admit(false, 1, &[0]), Stall::UnicastAfterMcast);
+        assert!(d.join_b(1, Resp::Okay, 0).is_none());
+        let b = d.join_b(1, Resp::Okay, 0).unwrap();
+        assert_eq!(b.resp, Resp::Okay);
+        assert_eq!(d.admit(false, 1, &[0]), Stall::None);
+    }
+
+    #[test]
+    fn concurrent_mcast_same_set_only() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(1, 0, true, 1), &tgts(&[0, 1]), Resp::Okay);
+        assert_eq!(d.admit(true, 0, &[0, 1]), Stall::None);
+        assert_eq!(d.admit(true, 0, &[0, 2]), Stall::McastSetMismatch);
+        d.accept(&aw(2, 0, true, 1), &tgts(&[0, 1]), Resp::Okay);
+        assert_eq!(d.admit(true, 0, &[0, 1]), Stall::McastLimit);
+    }
+
+    #[test]
+    fn b_join_merges_errors_to_slverr() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(9, 3, true, 1), &tgts(&[0, 1, 2]), Resp::Okay);
+        assert!(d.join_b(9, Resp::Okay, 3).is_none());
+        assert!(d.join_b(9, Resp::DecErr, 3).is_none());
+        let b = d.join_b(9, Resp::Okay, 3).unwrap();
+        assert_eq!(b.resp, Resp::SlvErr);
+        assert_eq!(b.id, 3);
+        assert!(!d.busy() || d.w_queue.len() > 0);
+    }
+
+    #[test]
+    fn decerr_seed_from_partial_decode() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(4, 1, true, 1), &tgts(&[0]), Resp::DecErr);
+        let b = d.join_b(4, Resp::Okay, 1).unwrap();
+        assert_eq!(b.resp, Resp::SlvErr);
+    }
+
+    #[test]
+    fn unroutable_completes_decerr() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(7, 2, false, 2), &tgts(&[]), Resp::DecErr);
+        let b = d.complete_unroutable(7);
+        assert_eq!(b.resp, Resp::DecErr);
+        assert_eq!(d.outstanding_unicast, 0);
+    }
+
+    #[test]
+    fn outstanding_cap() {
+        let mut d = Demux::new(0, 2, 2);
+        d.accept(&aw(1, 0, false, 1), &tgts(&[0]), Resp::Okay);
+        d.accept(&aw(2, 1, false, 1), &tgts(&[1]), Resp::Okay);
+        assert_eq!(d.admit(false, 2, &[2]), Stall::Outstanding);
+    }
+}

@@ -1,0 +1,349 @@
+//! The paper's multi-address **mask-form encoding** (§II-A, fig. 1).
+//!
+//! A write request carries a mask in `aw_user`: mask bit *i* = 1 makes
+//! address bit *i* a don't-care (X), so an `(addr, mask)` pair encodes
+//! the set of `2^popcount(mask)` addresses obtained by substituting both
+//! values at every masked position. The encoding size scales with the
+//! address width (log of the address-space size) and is *independent of
+//! the address-set size* — the property that makes it suitable for
+//! massively parallel accelerators, unlike "all destination" encodings.
+//!
+//! Invariant kept throughout: `addr & mask == 0` (masked address bits
+//! are normalised to zero; for an IFE-converted rule this holds by the
+//! alignment constraint).
+
+use super::types::Addr;
+
+/// A set of addresses in mask-form encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AddrSet {
+    pub addr: Addr,
+    pub mask: u64,
+}
+
+/// Errors converting interval rules to mask form.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum MfeError {
+    #[error("region [{start:#x}, {end:#x}) is empty or inverted")]
+    EmptyRegion { start: Addr, end: Addr },
+    #[error("region size {size:#x} is not a power of two")]
+    NotPow2 { size: u64 },
+    #[error("region start {start:#x} is not aligned to its size {size:#x}")]
+    Misaligned { start: Addr, size: u64 },
+}
+
+impl AddrSet {
+    /// A singleton set — a plain unicast address.
+    pub fn unicast(addr: Addr) -> AddrSet {
+        AddrSet { addr, mask: 0 }
+    }
+
+    /// Construct from raw `(addr, mask)`, normalising masked bits to 0.
+    pub fn new(addr: Addr, mask: u64) -> AddrSet {
+        AddrSet {
+            addr: addr & !mask,
+            mask,
+        }
+    }
+
+    /// Interval-form → mask-form conversion (paper formulas):
+    ///
+    /// ```text
+    /// mfe.addr = ife.start_addr
+    /// mfe.mask = ife.end_addr - ife.start_addr - 1
+    /// ```
+    ///
+    /// Requires the region to 1) be a power of two in size and 2) be
+    /// aligned to an integer multiple of its size.
+    pub fn from_interval(start: Addr, end: Addr) -> Result<AddrSet, MfeError> {
+        if end <= start {
+            return Err(MfeError::EmptyRegion { start, end });
+        }
+        let size = end - start;
+        if !size.is_power_of_two() {
+            return Err(MfeError::NotPow2 { size });
+        }
+        if start % size != 0 {
+            return Err(MfeError::Misaligned { start, size });
+        }
+        Ok(AddrSet {
+            addr: start,
+            mask: size - 1,
+        })
+    }
+
+    /// Is this a plain single address?
+    pub fn is_singleton(&self) -> bool {
+        self.mask == 0
+    }
+
+    /// Number of addresses in the set (2^popcount(mask)).
+    pub fn count(&self) -> u64 {
+        1u64 << self.mask.count_ones()
+    }
+
+    /// Membership test.
+    pub fn contains(&self, a: Addr) -> bool {
+        (a & !self.mask) == self.addr
+    }
+
+    /// Set intersection test against another mask-form set — the
+    /// paper's `aw_select` condition:
+    ///
+    /// ```text
+    /// masked_bits = req.mask | rule.mask
+    /// match_bits  = ~(req.addr ^ rule.addr)
+    /// select      = &(masked_bits | match_bits)
+    /// ```
+    pub fn intersects(&self, other: &AddrSet) -> bool {
+        let masked_bits = self.mask | other.mask;
+        let match_bits = !(self.addr ^ other.addr);
+        (masked_bits | match_bits) == u64::MAX
+    }
+
+    /// Set intersection: the subset of `self` (a request) that falls in
+    /// `other` (a rule), resolving masked bits — bits where only one
+    /// side is masked take the other side's fixed value; bits masked on
+    /// both sides stay don't-care.
+    pub fn intersect(&self, other: &AddrSet) -> Option<AddrSet> {
+        if !self.intersects(other) {
+            return None;
+        }
+        let mask = self.mask & other.mask;
+        let addr = (self.addr & !self.mask) // request-fixed bits
+            | (other.addr & self.mask & !other.mask); // rule-fixed where req masked
+        debug_assert_eq!(addr & mask, 0);
+        Some(AddrSet { addr, mask })
+    }
+
+    /// Enumerate every address in the set, ascending. Cost is
+    /// `O(2^popcount(mask))` — callers bound the popcount.
+    pub fn enumerate(&self) -> Vec<Addr> {
+        let bits: Vec<u32> = (0..64).filter(|&b| self.mask >> b & 1 == 1).collect();
+        let n = 1u64 << bits.len();
+        let mut out = Vec::with_capacity(n as usize);
+        for combo in 0..n {
+            let mut a = self.addr;
+            for (i, &b) in bits.iter().enumerate() {
+                if combo >> i & 1 == 1 {
+                    a |= 1u64 << b;
+                }
+            }
+            out.push(a);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// The lowest address in the set (mask bits resolved to 0).
+    pub fn base(&self) -> Addr {
+        self.addr
+    }
+
+    /// Inclusive upper bound of the set.
+    pub fn top(&self) -> Addr {
+        self.addr | self.mask
+    }
+}
+
+impl std::fmt::Display for AddrSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_singleton() {
+            write!(f, "{:#x}", self.addr)
+        } else {
+            write!(f, "{:#x}/m{:#x}", self.addr, self.mask)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_mini::{check, Config};
+
+    #[test]
+    fn ife_to_mfe_paper_formula() {
+        // Occamy: clusters at 0x0100_0000, stride 0x4_0000. A 4-cluster
+        // group region:
+        let s = AddrSet::from_interval(0x0100_0000, 0x0100_0000 + 4 * 0x4_0000).unwrap();
+        assert_eq!(s.addr, 0x0100_0000);
+        assert_eq!(s.mask, 4 * 0x4_0000 - 1);
+        assert_eq!(s.count(), 0x10_0000);
+    }
+
+    #[test]
+    fn ife_rejects_bad_regions() {
+        assert_eq!(
+            AddrSet::from_interval(0x1000, 0x1000),
+            Err(MfeError::EmptyRegion {
+                start: 0x1000,
+                end: 0x1000
+            })
+        );
+        assert!(matches!(
+            AddrSet::from_interval(0, 0x3000),
+            Err(MfeError::NotPow2 { .. })
+        ));
+        assert!(matches!(
+            AddrSet::from_interval(0x1000, 0x3000),
+            Err(MfeError::Misaligned { .. })
+        ));
+    }
+
+    #[test]
+    fn contiguous_set_fig1_left() {
+        // fig. 1 left: masking low bits yields a contiguous set
+        let s = AddrSet::new(0b1000, 0b0110);
+        assert_eq!(s.enumerate(), vec![0b1000, 0b1010, 0b1100, 0b1110]);
+        assert_eq!(s.count(), 4);
+    }
+
+    #[test]
+    fn strided_set_fig1_right() {
+        // fig. 1 right: masking non-contiguous bits yields a strided set
+        let s = AddrSet::new(0b0001, 0b1010);
+        assert_eq!(s.enumerate(), vec![0b0001, 0b0011, 0b1001, 0b1011]);
+    }
+
+    #[test]
+    fn singleton_behaviour() {
+        let s = AddrSet::unicast(0xDEAD);
+        assert!(s.is_singleton());
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.enumerate(), vec![0xDEAD]);
+        assert!(s.contains(0xDEAD));
+        assert!(!s.contains(0xDEAE));
+    }
+
+    #[test]
+    fn intersect_request_with_rule() {
+        // request: clusters {0,1,2,3} (mask over cluster-index bits)
+        let req = AddrSet::new(0x0100_0000, 0x3 << 18); // stride 0x4_0000
+        // rule: cluster 2's region [0x0108_0000, 0x010C_0000)
+        let rule = AddrSet::from_interval(0x0108_0000, 0x010C_0000).unwrap();
+        assert!(req.intersects(&rule));
+        let sub = req.intersect(&rule).unwrap();
+        // the subset is exactly the one address of cluster 2's base
+        assert_eq!(sub.addr, 0x0108_0000);
+        assert_eq!(sub.mask, 0);
+    }
+
+    #[test]
+    fn intersect_mcast_offset_within_cluster() {
+        // request broadcasts address offset 0x100 into all 4 clusters
+        let req = AddrSet::new(0x0100_0100, 0x3 << 18);
+        let rule = AddrSet::from_interval(0x0108_0000, 0x010C_0000).unwrap();
+        let sub = req.intersect(&rule).unwrap();
+        assert_eq!(sub.enumerate(), vec![0x0108_0100]);
+    }
+
+    #[test]
+    fn no_intersection() {
+        let req = AddrSet::new(0x0100_0000, 0x3 << 18);
+        let rule = AddrSet::from_interval(0x8000_0000, 0x8000_1000).unwrap();
+        assert!(!req.intersects(&rule));
+        assert!(req.intersect(&rule).is_none());
+    }
+
+    #[test]
+    fn enumerate_matches_contains() {
+        let s = AddrSet::new(0x40, 0x0000_0101);
+        let listed = s.enumerate();
+        assert_eq!(listed.len() as u64, s.count());
+        for a in &listed {
+            assert!(s.contains(*a));
+        }
+    }
+
+    // ------------------------------------------------------ properties
+
+    fn arb_set(g: &mut crate::util::proptest_mini::Gen) -> AddrSet {
+        // small masks so enumeration stays cheap
+        let nbits = g.u64_below(6);
+        let mut mask = 0u64;
+        for _ in 0..nbits {
+            mask |= 1u64 << g.u64_below(16);
+        }
+        AddrSet::new(g.u64_below(1 << 16), mask)
+    }
+
+    #[test]
+    fn prop_intersection_matches_brute_force() {
+        check(
+            "mfe-intersection-vs-enumeration",
+            Config::default(),
+            |g| (arb_set(g), arb_set(g)),
+            |(a, b)| {
+                let ea: std::collections::BTreeSet<_> = a.enumerate().into_iter().collect();
+                let eb: std::collections::BTreeSet<_> = b.enumerate().into_iter().collect();
+                let brute: Vec<_> = ea.intersection(&eb).copied().collect();
+                match a.intersect(b) {
+                    None => {
+                        if brute.is_empty() {
+                            Ok(())
+                        } else {
+                            Err(format!("claims disjoint but share {} addrs", brute.len()))
+                        }
+                    }
+                    Some(i) => {
+                        let got = i.enumerate();
+                        if got == brute {
+                            Ok(())
+                        } else {
+                            Err(format!("intersection {got:x?} != brute {brute:x?}"))
+                        }
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_intersects_consistent_with_intersect() {
+        check(
+            "mfe-intersects-iff-intersect",
+            Config::default(),
+            |g| (arb_set(g), arb_set(g)),
+            |(a, b)| {
+                if a.intersects(b) == a.intersect(b).is_some()
+                    && a.intersects(b) == b.intersects(a)
+                {
+                    Ok(())
+                } else {
+                    Err("intersects/intersect disagree or asymmetric".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ife_roundtrip() {
+        check(
+            "ife-mfe-roundtrip",
+            Config::default(),
+            |g| {
+                let size = 1u64 << g.u64_below(20);
+                let start = g.u64_below(1 << 12) * size;
+                (start, size)
+            },
+            |&(start, size)| {
+                let s = AddrSet::from_interval(start, start + size).unwrap();
+                if s.count() != size {
+                    return Err(format!("count {} != size {}", s.count(), size));
+                }
+                if s.base() != start || s.top() != start + size - 1 {
+                    return Err("bounds mismatch".into());
+                }
+                // every member in [start, start+size)
+                if size <= 64 {
+                    for a in s.enumerate() {
+                        if a < start || a >= start + size {
+                            return Err(format!("member {a:#x} outside interval"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! Protocol checkers used by tests and the golden slave model.
+//!
+//! These encode the AXI invariants the multicast extension must
+//! preserve (the properties QuestaSim assertions would check on the
+//! RTL):
+//!
+//! * W bursts arrive at a slave in AW-forward order (fig. 2e is the
+//!   scenario where violating this deadlocks).
+//! * Every burst delivers exactly `AwLEN+1` beats, terminated by WLAST.
+//! * Every forwarded AW eventually gets exactly one B.
+
+use std::collections::VecDeque;
+
+use super::types::Txn;
+
+/// Per-slave write-order checker.
+#[derive(Debug, Default)]
+pub struct OrderChecker {
+    /// AWs seen, in arrival order, with remaining beat count.
+    queue: VecDeque<(Txn, u32)>,
+    /// Completed bursts (txn, beats).
+    pub completed: Vec<(Txn, u32)>,
+    pub violations: Vec<String>,
+}
+
+impl OrderChecker {
+    pub fn new() -> OrderChecker {
+        OrderChecker::default()
+    }
+
+    pub fn feed_aw(&mut self, txn: Txn, beats: u32) {
+        if beats == 0 {
+            self.violations.push(format!("txn {txn}: zero-length burst"));
+        }
+        self.queue.push_back((txn, beats));
+    }
+
+    pub fn feed_w(&mut self, txn: Txn, last: bool) {
+        match self.queue.front_mut() {
+            None => self
+                .violations
+                .push(format!("txn {txn}: W beat with no outstanding AW")),
+            Some((front_txn, left)) => {
+                if *front_txn != txn {
+                    self.violations.push(format!(
+                        "W order violation: beat of txn {txn} while txn {front_txn} in progress"
+                    ));
+                    return;
+                }
+                if *left == 0 {
+                    self.violations
+                        .push(format!("txn {txn}: more W beats than AwLEN"));
+                    return;
+                }
+                *left -= 1;
+                let done = *left == 0;
+                if done != last {
+                    self.violations.push(format!(
+                        "txn {txn}: WLAST mismatch (last={last}, beats_left={left})"
+                    ));
+                }
+                if done {
+                    let (t, _) = self.queue.pop_front().unwrap();
+                    self.completed.push((t, 1));
+                }
+            }
+        }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn assert_clean(&self) {
+        assert!(
+            self.violations.is_empty(),
+            "protocol violations: {:#?}",
+            self.violations
+        );
+    }
+}
+
+/// End-to-end delivery tracker: which slaves received which txn.
+#[derive(Debug, Default)]
+pub struct DeliveryTracker {
+    pub delivered: Vec<(usize, Txn)>,
+}
+
+impl DeliveryTracker {
+    pub fn record(&mut self, slave: usize, txn: Txn) {
+        self.delivered.push((slave, txn));
+    }
+
+    /// The set of slaves a transaction reached.
+    pub fn slaves_of(&self, txn: Txn) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .delivered
+            .iter()
+            .filter(|(_, t)| *t == txn)
+            .map(|(s, _)| *s)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Exactly-once delivery check.
+    pub fn assert_exactly_once(&self, txn: Txn, expect: &[usize]) {
+        let mut v: Vec<usize> = self
+            .delivered
+            .iter()
+            .filter(|(_, t)| *t == txn)
+            .map(|(s, _)| *s)
+            .collect();
+        v.sort_unstable();
+        assert_eq!(v, expect, "txn {txn}: delivery mismatch");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_burst_sequence() {
+        let mut c = OrderChecker::new();
+        c.feed_aw(1, 2);
+        c.feed_aw(2, 1);
+        c.feed_w(1, false);
+        c.feed_w(1, true);
+        c.feed_w(2, true);
+        c.assert_clean();
+        assert_eq!(c.completed.len(), 2);
+        assert_eq!(c.outstanding(), 0);
+    }
+
+    #[test]
+    fn detects_order_violation() {
+        let mut c = OrderChecker::new();
+        c.feed_aw(1, 1);
+        c.feed_aw(2, 1);
+        c.feed_w(2, true); // out of order
+        assert!(!c.violations.is_empty());
+    }
+
+    #[test]
+    fn detects_wlast_mismatch() {
+        let mut c = OrderChecker::new();
+        c.feed_aw(1, 2);
+        c.feed_w(1, true); // early WLAST
+        assert_eq!(c.violations.len(), 1);
+    }
+
+    #[test]
+    fn detects_orphan_w() {
+        let mut c = OrderChecker::new();
+        c.feed_w(9, true);
+        assert_eq!(c.violations.len(), 1);
+    }
+
+    #[test]
+    fn delivery_tracking() {
+        let mut d = DeliveryTracker::default();
+        d.record(0, 7);
+        d.record(3, 7);
+        d.record(1, 8);
+        assert_eq!(d.slaves_of(7), vec![0, 3]);
+        d.assert_exactly_once(7, &[0, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_delivery_panics() {
+        let mut d = DeliveryTracker::default();
+        d.record(0, 7);
+        d.record(0, 7);
+        d.assert_exactly_once(7, &[0]);
+    }
+}

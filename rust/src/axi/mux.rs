@@ -1,0 +1,234 @@
+//! Per-slave mux state (paper fig. 2b).
+//!
+//! The mux arbitrates between the unicast datapath (round-robin, blue in
+//! the figure) and the multicast datapath (green), with multicast
+//! prioritised because of its stricter ordering requirements. The
+//! multicast path implements the *lock/commit* protocol: a requesting
+//! master is tentatively **granted** by priority encoder (lzc — lowest
+//! master index), and the grant only turns into a forwarded AW once the
+//! demux observes grants on *all* addressed muxes and asserts
+//! `aw.commit` — forcing a master to acquire all slaves at once and
+//! breaking Coffman's "wait for" deadlock condition (fig. 2e).
+//!
+//! The mux also tracks the **W-order queue**: W bursts must reach the
+//! slave in the order AWs were forwarded (AXI write-data ordering), so
+//! each forwarded AW enqueues its (master, txn); only the front entry's
+//! master may push W beats.
+
+use std::collections::VecDeque;
+
+use super::types::Txn;
+
+/// W-order queue entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WExpect {
+    pub master: usize,
+    pub txn: Txn,
+}
+
+/// The mux state machine for one slave port.
+#[derive(Debug)]
+pub struct Mux {
+    pub idx: usize,
+    /// Current multicast grant (master tentatively selected by lzc).
+    pub grant: Option<usize>,
+    /// Round-robin pointer for the unicast AW arbiter.
+    pub rr_aw: usize,
+    /// Round-robin pointer for the AR arbiter.
+    pub rr_ar: usize,
+    /// Round-robin pointer for the *naive* (non-lzc) multicast arbiter
+    /// used when the commit protocol is disabled — per-mux RR state is
+    /// exactly the inconsistent-selection hazard of fig. 2e.
+    pub rr_mcast: usize,
+    /// W bursts expected, in AW-forward order.
+    pub w_expect: VecDeque<WExpect>,
+    /// Stats: cycles the mcast path held a grant without commit.
+    pub grant_wait_cycles: u64,
+}
+
+impl Mux {
+    pub fn new(idx: usize) -> Mux {
+        Mux {
+            idx,
+            grant: None,
+            rr_aw: 0,
+            rr_ar: 0,
+            rr_mcast: 0,
+            w_expect: VecDeque::new(),
+            grant_wait_cycles: 0,
+        }
+    }
+
+    /// Recompute the multicast grant: the lowest-index master among
+    /// `requesters` (priority encoder / lzc). A held grant is *not*
+    /// sticky — consistent priority across muxes is what guarantees
+    /// global progress, so re-evaluating each cycle is required for the
+    /// case where a lower-priority master's target set overlaps a
+    /// higher-priority one's only partially.
+    pub fn arbitrate_mcast(&mut self, requesters: &[usize]) {
+        self.grant = requesters.iter().copied().min();
+        if self.grant.is_some() {
+            self.grant_wait_cycles += 1;
+        }
+    }
+
+    /// Naive multicast arbitration: per-mux round-robin, *without* the
+    /// cross-mux consistency of the priority encoder. Used only with
+    /// `commit_protocol = false` to reproduce the fig. 2e deadlock.
+    pub fn arbitrate_mcast_rr(&mut self, requesters: &[usize], n_masters: usize) {
+        if let Some(g) = self.grant {
+            // sticky until the leg is forwarded (cleared by the xbar)
+            if requesters.contains(&g) {
+                self.grant_wait_cycles += 1;
+                return;
+            }
+        }
+        self.grant = rr_pick(self.rr_mcast, requesters, n_masters);
+        if let Some(g) = self.grant {
+            self.rr_mcast = (g + 1) % n_masters;
+            self.grant_wait_cycles += 1;
+        }
+    }
+
+    /// Is the multicast datapath busy enough to stall unicast AWs?
+    /// (multicast is prioritised — a live grant blocks unicast issue).
+    pub fn mcast_active(&self) -> bool {
+        self.grant.is_some()
+    }
+
+    /// Record a forwarded AW (commit for mcast, direct for unicast):
+    /// the burst's W data is now expected in order.
+    pub fn push_w_order(&mut self, master: usize, txn: Txn) {
+        self.w_expect.push_back(WExpect { master, txn });
+    }
+
+    /// May `master` push a W beat of `txn` to this slave now?
+    pub fn w_front_is(&self, master: usize, txn: Txn) -> bool {
+        self.w_expect.front() == Some(&WExpect { master, txn })
+    }
+
+    /// The burst at the front finished (WLAST forwarded).
+    pub fn pop_w_order(&mut self, master: usize, txn: Txn) {
+        let front = self.w_expect.pop_front();
+        debug_assert_eq!(front, Some(WExpect { master, txn }), "W order violated");
+    }
+
+    /// Round-robin pick among `ready` master indices for unicast AW.
+    pub fn rr_pick_aw(&mut self, ready: &[usize], n_masters: usize) -> Option<usize> {
+        self.rr_pick_aw_scan(n_masters, |m| ready.contains(&m))
+    }
+
+    /// Round-robin pick for AR.
+    pub fn rr_pick_ar(&mut self, ready: &[usize], n_masters: usize) -> Option<usize> {
+        self.rr_pick_ar_scan(n_masters, |m| ready.contains(&m))
+    }
+
+    /// Allocation-free round-robin AW pick (hot path).
+    #[inline]
+    pub fn rr_pick_aw_scan(
+        &mut self,
+        n_masters: usize,
+        mut ready: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        for off in 0..n_masters {
+            let cand = (self.rr_aw + off) % n_masters;
+            if ready(cand) {
+                self.rr_aw = (cand + 1) % n_masters;
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    /// Allocation-free round-robin AR pick (hot path).
+    #[inline]
+    pub fn rr_pick_ar_scan(
+        &mut self,
+        n_masters: usize,
+        mut ready: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        for off in 0..n_masters {
+            let cand = (self.rr_ar + off) % n_masters;
+            if ready(cand) {
+                self.rr_ar = (cand + 1) % n_masters;
+                return Some(cand);
+            }
+        }
+        None
+    }
+}
+
+/// Round-robin selection starting from `ptr`.
+fn rr_pick(ptr: usize, ready: &[usize], n: usize) -> Option<usize> {
+    if ready.is_empty() {
+        return None;
+    }
+    (0..n)
+        .map(|off| (ptr + off) % n)
+        .find(|cand| ready.contains(cand))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mcast_grant_is_lowest_index() {
+        let mut m = Mux::new(0);
+        m.arbitrate_mcast(&[3, 1, 2]);
+        assert_eq!(m.grant, Some(1));
+        m.arbitrate_mcast(&[]);
+        assert_eq!(m.grant, None);
+    }
+
+    #[test]
+    fn grant_reevaluates_each_cycle() {
+        let mut m = Mux::new(0);
+        m.arbitrate_mcast(&[2]);
+        assert_eq!(m.grant, Some(2));
+        // a lower-priority master appearing steals the grant — required
+        // for cross-mux consistency
+        m.arbitrate_mcast(&[2, 0]);
+        assert_eq!(m.grant, Some(0));
+    }
+
+    #[test]
+    fn w_order_fifo() {
+        let mut m = Mux::new(0);
+        m.push_w_order(0, 100);
+        m.push_w_order(1, 101);
+        assert!(m.w_front_is(0, 100));
+        assert!(!m.w_front_is(1, 101));
+        m.pop_w_order(0, 100);
+        assert!(m.w_front_is(1, 101));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn w_order_violation_asserts() {
+        let mut m = Mux::new(0);
+        m.push_w_order(0, 100);
+        m.pop_w_order(1, 101);
+    }
+
+    #[test]
+    fn rr_fairness() {
+        let mut m = Mux::new(0);
+        let all = [0usize, 1, 2, 3];
+        let mut picks = Vec::new();
+        for _ in 0..8 {
+            picks.push(m.rr_pick_aw(&all, 4).unwrap());
+        }
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rr_skips_not_ready() {
+        let mut m = Mux::new(0);
+        assert_eq!(m.rr_pick_aw(&[2], 4), Some(2));
+        // pointer advanced past 2
+        assert_eq!(m.rr_pick_aw(&[1, 2], 4), Some(1));
+        assert_eq!(m.rr_pick_aw(&[], 4), None);
+    }
+}

@@ -1,0 +1,269 @@
+//! AXI channel payload types at beat granularity.
+//!
+//! The simulator models the five AXI channels the paper discusses: AW, W
+//! and B for writes (where multicast lives), AR and R for reads. Beats
+//! carry routing metadata only — the *functional* bytes are moved by the
+//! memory substrate at transaction completion (see `occamy::mem`), which
+//! keeps the cycle loop allocation-free.
+
+use crate::axi::mcast::AddrSet;
+use crate::sim::Chan;
+
+/// Byte address in the global memory map.
+pub type Addr = u64;
+
+/// AXI transaction ID (as seen on one port).
+pub type AxiId = u16;
+
+/// Globally unique transaction tag, assigned by the issuing master.
+/// Used for B/R routing in the model and for trace correlation — the
+/// RTL equivalent is the ID-prepending each mux stage performs.
+pub type Txn = u64;
+
+/// AXI write/read response codes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Resp {
+    Okay,
+    ExOkay,
+    SlvErr,
+    DecErr,
+}
+
+impl Resp {
+    /// The paper's B-join merge rule: any SLVERR/DECERR ⇒ SLVERR;
+    /// EXOKAY is disallowed for multicast (exclusive mcast is
+    /// unsupported), so the reduction is a simple OR over error bits.
+    pub fn join(self, other: Resp) -> Resp {
+        match (self, other) {
+            (Resp::Okay, Resp::Okay) => Resp::Okay,
+            (Resp::ExOkay, o) | (o, Resp::ExOkay) => {
+                // exclusive responses are demoted on join
+                if o == Resp::Okay || o == Resp::ExOkay {
+                    Resp::Okay
+                } else {
+                    Resp::SlvErr
+                }
+            }
+            _ => Resp::SlvErr,
+        }
+    }
+
+    pub fn is_err(self) -> bool {
+        matches!(self, Resp::SlvErr | Resp::DecErr)
+    }
+}
+
+/// AW-channel beat: one write-burst request.
+#[derive(Debug, Clone)]
+pub struct AwBeat {
+    pub id: AxiId,
+    /// Destination address set. `mask == 0` ⇒ plain unicast (fully
+    /// backward compatible: the mask travels in `aw_user`).
+    pub dest: AddrSet,
+    /// Number of data beats in the burst (AxLEN + 1).
+    pub beats: u32,
+    /// Bytes per beat (bus width; AxSIZE decoded).
+    pub beat_bytes: u32,
+    /// `aw.is_mcast` — selects the mux datapath (fig. 2b orange logic).
+    pub is_mcast: bool,
+    /// Hierarchical exclude scope: an aligned region of `dest` already
+    /// served at an upstream hop and to be pruned downstream (see
+    /// `xbar` module docs).
+    pub exclude: Option<(Addr, Addr)>,
+    /// Issuing master port on the current crossbar.
+    pub src: usize,
+    /// Global transaction tag.
+    pub txn: Txn,
+}
+
+impl AwBeat {
+    pub fn bytes(&self) -> u64 {
+        self.beats as u64 * self.beat_bytes as u64
+    }
+}
+
+/// W-channel beat. Data itself is moved functionally at completion; the
+/// beat only carries the burst-position metadata the fabric needs.
+#[derive(Debug, Clone, Copy)]
+pub struct WBeat {
+    pub last: bool,
+    pub src: usize,
+    pub txn: Txn,
+}
+
+/// B-channel beat: write response.
+#[derive(Debug, Clone, Copy)]
+pub struct BBeat {
+    pub id: AxiId,
+    pub resp: Resp,
+    pub txn: Txn,
+}
+
+/// AR-channel beat: read-burst request (reads are always unicast).
+#[derive(Debug, Clone, Copy)]
+pub struct ArBeat {
+    pub id: AxiId,
+    pub addr: Addr,
+    pub beats: u32,
+    pub beat_bytes: u32,
+    pub src: usize,
+    pub txn: Txn,
+}
+
+/// R-channel beat: read data.
+#[derive(Debug, Clone, Copy)]
+pub struct RBeat {
+    pub id: AxiId,
+    pub last: bool,
+    pub resp: Resp,
+    pub txn: Txn,
+}
+
+/// One AXI link (the wire bundle between a master and a slave port):
+/// request channels flow master→slave, response channels slave→master.
+#[derive(Debug)]
+pub struct AxiLink {
+    pub aw: Chan<AwBeat>,
+    pub w: Chan<WBeat>,
+    pub b: Chan<BBeat>,
+    pub ar: Chan<ArBeat>,
+    pub r: Chan<RBeat>,
+}
+
+impl AxiLink {
+    /// `depth` is the FIFO depth of every channel (2 models a standard
+    /// skid-buffered register slice sustaining one beat per cycle).
+    pub fn new(depth: usize) -> AxiLink {
+        AxiLink {
+            aw: Chan::new(depth),
+            w: Chan::new(depth),
+            b: Chan::new(depth),
+            ar: Chan::new(depth),
+            r: Chan::new(depth.max(4)),
+        }
+    }
+
+    /// Advance all channel clock edges.
+    pub fn tick(&mut self) {
+        self.aw.tick();
+        self.w.tick();
+        self.b.tick();
+        self.ar.tick();
+        self.r.tick();
+    }
+
+    /// Total beats moved (progress metric for the deadlock watchdog).
+    pub fn moved(&self) -> u64 {
+        self.aw.popped + self.w.popped + self.b.popped + self.ar.popped + self.r.popped
+    }
+
+    /// Any beat currently visible to a consumer? (computed right after
+    /// `tick` while the struct is cache-hot — drives the idle-skips).
+    #[inline]
+    pub fn any_visible(&self) -> bool {
+        self.aw.visible() > 0
+            || self.w.visible() > 0
+            || self.b.visible() > 0
+            || self.ar.visible() > 0
+            || self.r.visible() > 0
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.aw.is_empty()
+            && self.w.is_empty()
+            && self.b.is_empty()
+            && self.ar.is_empty()
+            && self.r.is_empty()
+    }
+}
+
+/// AXI bursts must not cross a 4 KiB address boundary (spec A3.4.1);
+/// combined with the bus width this bounds the beats per burst.
+pub const AXI_BOUNDARY: u64 = 4096;
+
+/// Split a transfer `[addr, addr+bytes)` into AXI-legal bursts for a
+/// `beat_bytes`-wide bus: each burst stays within a 4 KiB page and a
+/// `max_beats` cap (AxLEN ≤ 255).
+pub fn split_bursts(addr: Addr, bytes: u64, beat_bytes: u32, max_beats: u32) -> Vec<(Addr, u32)> {
+    assert!(beat_bytes.is_power_of_two());
+    let mut out = Vec::new();
+    let mut cur = addr;
+    let end = addr + bytes;
+    while cur < end {
+        let page_end = (cur / AXI_BOUNDARY + 1) * AXI_BOUNDARY;
+        let chunk_end = end.min(page_end);
+        let chunk = chunk_end - cur;
+        let beats = chunk.div_ceil(beat_bytes as u64).min(max_beats as u64) as u32;
+        let burst_bytes = (beats as u64 * beat_bytes as u64).min(chunk);
+        out.push((cur, beats));
+        cur += burst_bytes;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resp_join_rules() {
+        use Resp::*;
+        assert_eq!(Okay.join(Okay), Okay);
+        assert_eq!(Okay.join(SlvErr), SlvErr);
+        assert_eq!(DecErr.join(Okay), SlvErr);
+        assert_eq!(SlvErr.join(DecErr), SlvErr);
+        // exclusive demotion on join
+        assert_eq!(ExOkay.join(Okay), Okay);
+        assert_eq!(ExOkay.join(DecErr), SlvErr);
+    }
+
+    #[test]
+    fn burst_split_respects_4k_boundary() {
+        // 10 KiB starting 1 KiB below a boundary, 64-byte beats
+        let bursts = split_bursts(0x1C00, 10 * 1024, 64, 256);
+        let mut total = 0u64;
+        for (addr, beats) in &bursts {
+            let bytes = *beats as u64 * 64;
+            assert!(
+                addr / AXI_BOUNDARY == (addr + bytes - 1) / AXI_BOUNDARY,
+                "burst at {addr:#x} ({bytes}B) crosses 4K"
+            );
+            total += bytes;
+        }
+        assert_eq!(total, 10 * 1024);
+    }
+
+    #[test]
+    fn burst_split_max_beats() {
+        let bursts = split_bursts(0, 32 * 1024, 64, 64);
+        assert_eq!(bursts.len(), 8);
+        assert!(bursts.iter().all(|&(_, b)| b == 64));
+        assert_eq!(bursts[1].0, 4096);
+    }
+
+    #[test]
+    fn burst_split_single_beat() {
+        let bursts = split_bursts(0x100, 8, 8, 256);
+        assert_eq!(bursts, vec![(0x100, 1)]);
+    }
+
+    #[test]
+    fn link_moved_counts_progress() {
+        let mut l = AxiLink::new(2);
+        l.aw.push(AwBeat {
+            id: 0,
+            dest: AddrSet::unicast(0x1000),
+            beats: 1,
+            beat_bytes: 64,
+            is_mcast: false,
+            exclude: None,
+            src: 0,
+            txn: 1,
+        });
+        l.tick();
+        assert_eq!(l.moved(), 0);
+        l.aw.pop();
+        assert_eq!(l.moved(), 1);
+        assert!(!l.is_idle() || l.aw.is_empty());
+    }
+}

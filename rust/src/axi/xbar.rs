@@ -1,0 +1,784 @@
+//! The N×M multicast-capable AXI crossbar (paper fig. 2a).
+//!
+//! Composition: one [`Demux`] per master port, one [`Mux`] per slave
+//! port, wired through external [`AxiLink`]s held in a shared pool (the
+//! SoC owns the pool; the xbar stores link indices). Each call to
+//! [`Xbar::step`] advances one clock cycle through the phases:
+//!
+//! 1. **B join/drain** — collect B beats from slaves, fold into the
+//!    per-demux joins, release merged responses to masters.
+//! 2. **R/AR routing** — reads are unicast: round-robin AR arbitration
+//!    per slave, R beats routed back by transaction tag.
+//! 3. **AW accept** — pop+decode master AWs subject to the multicast
+//!    ordering stalls (fig. 2d orange logic).
+//! 4. **Grant** — per-slave priority-encoder (lzc) arbitration of
+//!    multicast requesters; consistent cross-mux priority.
+//! 5. **Commit** — a master holding grants on *all* addressed slaves
+//!    (and space on all their AW channels) forks its AW atomically;
+//!    with `commit_protocol = false` the fork happens per-slave as
+//!    grants arrive, reproducing the fig. 2e deadlock.
+//! 6. **Unicast AW forward** — round-robin, stalled while the mcast
+//!    datapath holds a grant (multicast is prioritised).
+//! 7. **W transport** — front-of-order W bursts move; a multicast W
+//!    beat requires *all* destination channels ready (all-ready fork).
+//!
+//! ## Hierarchical multicast routing
+//!
+//! A request whose address set extends beyond this crossbar's local
+//! rules is forwarded on the `default_slave` port carrying the original
+//! set plus an **exclude scope** — the aligned region already served
+//! locally. The next hop prunes rules inside the scope. This is the
+//! model equivalent of the RTL's decomposition of the "rest of world"
+//! route into log₂-many aligned mask-form rules; deliveries and beat
+//! counts are identical (see DESIGN.md §2).
+
+use std::collections::HashMap;
+
+use super::addr_map::AddrMap;
+use super::demux::{Demux, PendingAw, Stall, TargetAw};
+use super::mcast::AddrSet;
+use super::mux::Mux;
+use super::types::{AwBeat, AxiLink, RBeat, Resp, Txn, WBeat};
+
+/// Crossbar configuration.
+#[derive(Debug)]
+pub struct XbarCfg {
+    pub name: String,
+    pub n_masters: usize,
+    pub n_slaves: usize,
+    pub map: AddrMap,
+    /// Port receiving traffic not matching any rule (hierarchy "up").
+    pub default_slave: Option<usize>,
+    /// Aligned region covered by this xbar's local rules; attached as
+    /// the exclude scope on default-routed multicasts.
+    pub local_scope: Option<(u64, u64)>,
+    /// Paper's extension on/off (off = baseline XBAR; multicast AWs are
+    /// rejected with DECERR).
+    pub mcast_enabled: bool,
+    /// Deadlock-avoidance commit protocol (fig. 2e). Disable only to
+    /// demonstrate the deadlock.
+    pub commit_protocol: bool,
+    pub max_mcast_outstanding: u32,
+    pub max_outstanding: u32,
+    /// Minimum cycles a multicast AW spends in the grant/commit
+    /// handshake before forking (the RTL's grant-settle + "releasing
+    /// the muxes in the following cycle" sequence across all addressed
+    /// muxes). Calibrated against fig. 3b's round-trip amortisation
+    /// behaviour; unicast AWs are unaffected.
+    pub mcast_commit_lat: u32,
+    /// Idle cycles inserted after every multicast W fork beat.
+    ///
+    /// The RTL's `stream_fork` fans a W beat out through registered
+    /// spill slices whose ready is one cycle stale; with more than one
+    /// destination the all-ready condition is met every other cycle, so
+    /// the sustained fork rate is ~½ beat/cycle. `1` reproduces that
+    /// measured behaviour (calibrated against fig. 3b, see
+    /// EXPERIMENTS.md); `0` is an idealised single-cycle fork
+    /// (ablation).
+    pub mcast_w_cooldown: u32,
+}
+
+impl XbarCfg {
+    pub fn new(name: &str, n_masters: usize, n_slaves: usize, map: AddrMap) -> XbarCfg {
+        XbarCfg {
+            name: name.to_string(),
+            n_masters,
+            n_slaves,
+            map,
+            default_slave: None,
+            local_scope: None,
+            mcast_enabled: true,
+            commit_protocol: true,
+            max_mcast_outstanding: 4,
+            max_outstanding: 16,
+            mcast_commit_lat: 8,
+            mcast_w_cooldown: 1,
+        }
+    }
+}
+
+/// Aggregate statistics (read by benches and EXPERIMENTS.md harnesses).
+#[derive(Debug, Default, Clone)]
+pub struct XbarStats {
+    pub aw_unicast: u64,
+    pub aw_mcast: u64,
+    pub aw_forks: u64,
+    pub w_beats_in: u64,
+    pub w_beats_out: u64,
+    pub w_fork_stalls: u64,
+    pub b_joined: u64,
+    pub commit_waits: u64,
+    pub ar_forwarded: u64,
+    pub r_beats: u64,
+    pub decerr: u64,
+    pub stall_id_conflict: u64,
+    pub stall_mcast_order: u64,
+}
+
+/// In-flight pending AW extended with per-target forward flags (used in
+/// the no-commit mode to reproduce the deadlock).
+#[derive(Debug)]
+struct PendingEntry {
+    pend: PendingAw,
+    forwarded: Vec<bool>,
+    /// Cycles spent pending (commit handshake modelling).
+    age: u32,
+}
+
+/// The crossbar.
+pub struct Xbar {
+    pub cfg: XbarCfg,
+    pub demux: Vec<Demux>,
+    pub mux: Vec<Mux>,
+    /// Pool indices of master-side links (masters push AW/W/AR).
+    pub m_links: Vec<usize>,
+    /// Pool indices of slave-side links (xbar pushes AW/W/AR).
+    pub s_links: Vec<usize>,
+    pending: Vec<Option<PendingEntry>>,
+    /// Per-master cooldown countdown for multicast W forks.
+    w_cooldown: Vec<u32>,
+    /// Reused per-cycle scratch (per-master decoded target), avoiding
+    /// hot-loop allocation.
+    scratch_want: Vec<Option<usize>>,
+    /// Cached busy state from the last stepped cycle (idle-skip).
+    pub maybe_busy: bool,
+    wr_owner: HashMap<Txn, usize>,
+    rd_owner: HashMap<Txn, usize>,
+    /// DECERR read responses being generated: (master, id, txn, beats).
+    decerr_r: Vec<(usize, u16, Txn, u32)>,
+    pub stats: XbarStats,
+}
+
+impl Xbar {
+    /// Build a crossbar whose ports use the given link-pool indices.
+    pub fn new(cfg: XbarCfg, m_links: Vec<usize>, s_links: Vec<usize>) -> Xbar {
+        assert_eq!(m_links.len(), cfg.n_masters);
+        assert_eq!(s_links.len(), cfg.n_slaves);
+        let demux = (0..cfg.n_masters)
+            .map(|i| Demux::new(i, cfg.max_mcast_outstanding, cfg.max_outstanding))
+            .collect();
+        let mux = (0..cfg.n_slaves).map(Mux::new).collect();
+        let pending = (0..cfg.n_masters).map(|_| None).collect();
+        let w_cooldown = vec![0; cfg.n_masters];
+        let scratch_want = vec![None; cfg.n_masters];
+        Xbar {
+            cfg,
+            demux,
+            mux,
+            m_links,
+            s_links,
+            pending,
+            w_cooldown,
+            scratch_want,
+            maybe_busy: false,
+            wr_owner: HashMap::new(),
+            rd_owner: HashMap::new(),
+            decerr_r: Vec::new(),
+            stats: XbarStats::default(),
+        }
+    }
+
+    /// Convenience for tests: allocate a fresh pool with one link per
+    /// port (masters first, then slaves).
+    pub fn with_pool(cfg: XbarCfg, depth: usize) -> (Xbar, Vec<AxiLink>) {
+        let nm = cfg.n_masters;
+        let ns = cfg.n_slaves;
+        let pool: Vec<AxiLink> = (0..nm + ns).map(|_| AxiLink::new(depth)).collect();
+        let xbar = Xbar::new(cfg, (0..nm).collect(), (nm..nm + ns).collect());
+        (xbar, pool)
+    }
+
+    /// Decode an AW's destination set into fork targets, honouring the
+    /// exclude scope and the default route.
+    fn decode_aw(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (Vec<TargetAw>, Resp) {
+        // fast path: plain unicast
+        if dest.is_singleton() {
+            if let Some(s) = self.cfg.map.decode_unicast(dest.addr) {
+                return (
+                    vec![TargetAw {
+                        slave: s,
+                        dest: *dest,
+                        exclude: None,
+                    }],
+                    Resp::Okay,
+                );
+            }
+            if let Some(up) = self.cfg.default_slave {
+                return (
+                    vec![TargetAw {
+                        slave: up,
+                        dest: *dest,
+                        exclude: None,
+                    }],
+                    Resp::Okay,
+                );
+            }
+            return (Vec::new(), Resp::DecErr);
+        }
+
+        if !self.cfg.mcast_enabled {
+            // baseline XBAR: masked requests are illegal
+            return (Vec::new(), Resp::DecErr);
+        }
+
+        let d = self.cfg.map.decode(dest);
+        let mut targets = Vec::with_capacity(d.targets.len() + 1);
+        let mut excl_in_rules = 0u64;
+        for (s, sub) in &d.targets {
+            if let Some((es, ee)) = exclude {
+                if sub.base() >= es && sub.top() < ee {
+                    // already served upstream of this hop
+                    excl_in_rules += sub.count();
+                    continue;
+                }
+            }
+            targets.push(TargetAw {
+                slave: *s,
+                dest: *sub,
+                exclude: None,
+            });
+        }
+        // addresses excluded but not matched by local rules
+        let n_excl = match exclude {
+            Some((es, ee)) => AddrSet::from_interval(es, ee)
+                .ok()
+                .and_then(|e| dest.intersect(&e))
+                .map(|i| i.count())
+                .unwrap_or(0),
+            None => 0,
+        };
+        let excl_unmatched = n_excl.saturating_sub(excl_in_rules);
+        let remainder = d.uncovered.saturating_sub(excl_unmatched);
+        let mut resp0 = Resp::Okay;
+        if remainder > 0 {
+            match self.cfg.default_slave {
+                Some(up) => {
+                    // forward the original set up, extending the scope
+                    let scope = match (exclude, self.cfg.local_scope) {
+                        (None, Some(ls)) => Some(ls),
+                        (Some(e), None) => Some(e),
+                        (None, None) => None,
+                        (Some(_), Some(_)) => panic!(
+                            "xbar {}: nested exclude scopes are not representable \
+                             (topology must prune at each level)",
+                            self.cfg.name
+                        ),
+                    };
+                    targets.push(TargetAw {
+                        slave: up,
+                        dest: *dest,
+                        exclude: scope,
+                    });
+                }
+                None => resp0 = Resp::DecErr,
+            }
+        }
+        targets.sort_by_key(|t| t.slave);
+        (targets, resp0)
+    }
+
+    /// Anything visible on the external ports that needs processing?
+    #[inline]
+    fn any_port_activity(&self, pool: &[AxiLink]) -> bool {
+        self.m_links.iter().any(|&l| {
+            let lk = &pool[l];
+            lk.aw.visible() > 0 || lk.w.visible() > 0 || lk.ar.visible() > 0
+        }) || self.s_links.iter().any(|&l| {
+            let lk = &pool[l];
+            lk.b.visible() > 0 || lk.r.visible() > 0
+        })
+    }
+
+    /// One clock cycle. `pool` is the shared link pool.
+    pub fn step(&mut self, pool: &mut [AxiLink]) {
+        self.phase_b(pool);
+        self.phase_r(pool);
+        self.phase_ar(pool);
+        self.phase_aw_accept(pool);
+        self.phase_grant();
+        self.phase_commit(pool);
+        self.phase_unicast_aw(pool);
+        self.phase_w(pool);
+        // cached for the SoC's idle-skip (§Perf): an idle xbar is only
+        // re-woken by visible beats on its ports (the activity hints)
+        self.maybe_busy = self.busy();
+    }
+
+    /// Hinted step: skip the phase machinery entirely when the fabric
+    /// holds no in-flight state and the SoC saw no beat on any port at
+    /// the last clock edge. This idle-skip is the largest simulator-
+    /// throughput optimisation (§Perf in EXPERIMENTS.md).
+    #[inline]
+    pub fn step_hinted(&mut self, pool: &mut [AxiLink], port_activity: bool) {
+        if self.maybe_busy || port_activity {
+            self.step(pool);
+        }
+    }
+
+    /// Phase 1 — B collection + joined-B drain.
+    fn phase_b(&mut self, pool: &mut [AxiLink]) {
+        for s in 0..self.cfg.n_slaves {
+            if let Some(b) = pool[self.s_links[s]].b.pop() {
+                let m = *self
+                    .wr_owner
+                    .get(&b.txn)
+                    .unwrap_or_else(|| panic!("{}: B for unknown txn {}", self.cfg.name, b.txn));
+                if let Some(joined) = self.demux[m].join_b(b.txn, b.resp, b.id) {
+                    self.wr_owner.remove(&b.txn);
+                    self.stats.b_joined += 1;
+                    self.demux[m].b_out.push_back(joined);
+                }
+            }
+        }
+        for m in 0..self.cfg.n_masters {
+            if let Some(&b) = self.demux[m].b_out.front() {
+                if pool[self.m_links[m]].b.can_push() {
+                    self.demux[m].b_out.pop_front();
+                    pool[self.m_links[m]].b.push(b);
+                }
+            }
+        }
+    }
+
+    /// Phase 2 — R routing (slave→master) + DECERR R generation.
+    fn phase_r(&mut self, pool: &mut [AxiLink]) {
+        for s in 0..self.cfg.n_slaves {
+            let link = self.s_links[s];
+            let Some(r) = pool[link].r.front().copied() else {
+                continue;
+            };
+            let m = *self
+                .rd_owner
+                .get(&r.txn)
+                .unwrap_or_else(|| panic!("{}: R for unknown txn {}", self.cfg.name, r.txn));
+            if pool[self.m_links[m]].r.can_push() {
+                pool[link].r.pop();
+                if r.last {
+                    self.rd_owner.remove(&r.txn);
+                }
+                pool[self.m_links[m]].r.push(r);
+                self.stats.r_beats += 1;
+            }
+        }
+        // synthesize DECERR read data for unroutable ARs
+        let mut i = 0;
+        while i < self.decerr_r.len() {
+            let (m, id, txn, ref mut beats) = self.decerr_r[i];
+            if pool[self.m_links[m]].r.can_push() {
+                *beats -= 1;
+                let last = *beats == 0;
+                pool[self.m_links[m]].r.push(RBeat {
+                    id,
+                    last,
+                    resp: Resp::DecErr,
+                    txn,
+                });
+                if last {
+                    self.decerr_r.remove(i);
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// Phase 3 — AR arbitration and forwarding (reads are unicast).
+    fn phase_ar(&mut self, pool: &mut [AxiLink]) {
+        // decode every master's front AR once (into reusable scratch)
+        let mut any = false;
+        for m in 0..self.cfg.n_masters {
+            let dec = pool[self.m_links[m]].ar.front().map(|ar| {
+                self.cfg
+                    .map
+                    .decode_unicast(ar.addr)
+                    .or(self.cfg.default_slave)
+            });
+            self.scratch_want[m] = match dec {
+                Some(Some(s)) => {
+                    any = true;
+                    Some(s)
+                }
+                Some(None) => {
+                    // unroutable read → DECERR R burst
+                    let ar = pool[self.m_links[m]].ar.pop().unwrap();
+                    self.stats.decerr += 1;
+                    self.decerr_r.push((m, ar.id, ar.txn, ar.beats));
+                    None
+                }
+                None => None,
+            };
+        }
+        if !any {
+            return;
+        }
+        for s in 0..self.cfg.n_slaves {
+            if !pool[self.s_links[s]].ar.can_push() {
+                continue;
+            }
+            let want = &self.scratch_want;
+            if let Some(m) = self.mux[s].rr_pick_ar_scan(self.cfg.n_masters, |m| want[m] == Some(s))
+            {
+                let mut ar = pool[self.m_links[m]].ar.pop().unwrap();
+                ar.src = m;
+                self.rd_owner.insert(ar.txn, m);
+                pool[self.s_links[s]].ar.push(ar);
+                self.stats.ar_forwarded += 1;
+                self.scratch_want[m] = None;
+            }
+        }
+    }
+
+    /// Phase 4 — AW acceptance + decode (fig. 2d ordering stalls).
+    fn phase_aw_accept(&mut self, pool: &mut [AxiLink]) {
+        for m in 0..self.cfg.n_masters {
+            if self.pending[m].is_some() {
+                continue;
+            }
+            let Some(front) = pool[self.m_links[m]].aw.front() else {
+                continue;
+            };
+            let (targets, resp0) = self.decode_aw(&front.dest, front.exclude);
+            let slaves: Vec<usize> = targets.iter().map(|t| t.slave).collect();
+            let is_mcast = front.is_mcast && slaves.len() != 1;
+            match self.demux[m].admit(is_mcast, front.id, &slaves) {
+                Stall::None => {}
+                Stall::IdConflict => {
+                    self.stats.stall_id_conflict += 1;
+                    continue;
+                }
+                Stall::McastAfterUnicast
+                | Stall::UnicastAfterMcast
+                | Stall::McastSetMismatch
+                | Stall::McastLimit => {
+                    self.stats.stall_mcast_order += 1;
+                    continue;
+                }
+                _ => continue,
+            }
+            let mut beat = pool[self.m_links[m]].aw.pop().unwrap();
+            beat.src = m;
+            beat.is_mcast = is_mcast;
+            if is_mcast {
+                self.stats.aw_mcast += 1;
+            } else {
+                self.stats.aw_unicast += 1;
+            }
+            if resp0 == Resp::DecErr && targets.is_empty() {
+                self.stats.decerr += 1;
+            }
+            let forwarded = vec![false; targets.len()];
+            self.pending[m] = Some(PendingEntry {
+                pend: PendingAw {
+                    beat,
+                    targets,
+                    resp0,
+                },
+                forwarded,
+                age: 0,
+            });
+        }
+    }
+
+    /// Does master `m` have an unforwarded multicast leg for slave `s`?
+    #[inline]
+    fn wants_mcast(&self, m: usize, s: usize) -> bool {
+        self.pending[m]
+            .as_ref()
+            .map(|p| {
+                p.pend.beat.is_mcast
+                    && p.pend
+                        .targets
+                        .iter()
+                        .zip(&p.forwarded)
+                        .any(|(t, f)| t.slave == s && !f)
+            })
+            .unwrap_or(false)
+    }
+
+    /// Phase 5 — per-slave multicast grant (priority encoder).
+    fn phase_grant(&mut self) {
+        // hot path: no pending multicast anywhere → clear grants cheaply
+        if !self
+            .pending
+            .iter()
+            .any(|p| p.as_ref().map(|p| p.pend.beat.is_mcast).unwrap_or(false))
+        {
+            for s in 0..self.cfg.n_slaves {
+                self.mux[s].grant = None;
+            }
+            return;
+        }
+        if self.cfg.commit_protocol && self.cfg.n_slaves <= 64 {
+            // bitmask fast path: one unforwarded-target mask per master,
+            // then per-slave priority encode over single bits (O(N²)
+            // bit tests instead of O(N²·targets) scans)
+            let mut masks = [0u64; 64];
+            let nm = self.cfg.n_masters.min(64);
+            for (m, mask) in masks.iter_mut().enumerate().take(nm) {
+                if let Some(p) = &self.pending[m] {
+                    if p.pend.beat.is_mcast {
+                        for (t, f) in p.pend.targets.iter().zip(&p.forwarded) {
+                            if !f {
+                                *mask |= 1u64 << t.slave;
+                            }
+                        }
+                    }
+                }
+            }
+            for s in 0..self.cfg.n_slaves {
+                let grant = (0..nm).find(|&m| masks[m] >> s & 1 == 1);
+                self.mux[s].grant = grant;
+                if grant.is_some() {
+                    self.mux[s].grant_wait_cycles += 1;
+                }
+            }
+            return;
+        }
+        for s in 0..self.cfg.n_slaves {
+            if self.cfg.commit_protocol {
+                // lzc: lowest-index requesting master, allocation-free
+                let grant = (0..self.cfg.n_masters).find(|&m| self.wants_mcast(m, s));
+                self.mux[s].grant = grant;
+                if grant.is_some() {
+                    self.mux[s].grant_wait_cycles += 1;
+                }
+            } else {
+                let requesters: Vec<usize> = (0..self.cfg.n_masters)
+                    .filter(|&m| self.wants_mcast(m, s))
+                    .collect();
+                self.mux[s].arbitrate_mcast_rr(&requesters, self.cfg.n_masters);
+            }
+        }
+    }
+
+    /// Fork one target of a pending AW onto its slave link.
+    fn forward_target(
+        wr_owner: &mut HashMap<Txn, usize>,
+        stats: &mut XbarStats,
+        mux: &mut Mux,
+        link: &mut AxiLink,
+        beat: &AwBeat,
+        target: &TargetAw,
+        m: usize,
+    ) {
+        let fwd = AwBeat {
+            id: beat.id,
+            dest: target.dest,
+            beats: beat.beats,
+            beat_bytes: beat.beat_bytes,
+            is_mcast: target.dest.count() > 1 || target.exclude.is_some(),
+            exclude: target.exclude,
+            src: m,
+            txn: beat.txn,
+        };
+        link.aw.push(fwd);
+        mux.push_w_order(m, beat.txn);
+        wr_owner.insert(beat.txn, m);
+        stats.aw_forks += 1;
+    }
+
+    /// Phase 6 — multicast commit (or per-slave forward when the commit
+    /// protocol is disabled, reproducing fig. 2e).
+    fn phase_commit(&mut self, pool: &mut [AxiLink]) {
+        for m in 0..self.cfg.n_masters {
+            let Some(entry) = self.pending[m].as_mut() else {
+                continue;
+            };
+            if !entry.pend.beat.is_mcast {
+                continue;
+            }
+            entry.age += 1;
+            if entry.age <= self.cfg.mcast_commit_lat {
+                self.stats.commit_waits += 1;
+                continue;
+            }
+            let entry = self.pending[m].as_ref().unwrap();
+            if entry.pend.targets.is_empty() {
+                // unroutable mcast: accept so W drains, B = DECERR
+                let entry = self.pending[m].take().unwrap();
+                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                continue;
+            }
+            if self.cfg.commit_protocol {
+                // all-or-nothing: every target granted to m and pushable
+                let all_ready = entry.pend.targets.iter().all(|t| {
+                    self.mux[t.slave].grant == Some(m)
+                        && pool[self.s_links[t.slave]].aw.can_push()
+                });
+                if !all_ready {
+                    self.stats.commit_waits += 1;
+                    continue;
+                }
+                let entry = self.pending[m].take().unwrap();
+                for t in &entry.pend.targets {
+                    Self::forward_target(
+                        &mut self.wr_owner,
+                        &mut self.stats,
+                        &mut self.mux[t.slave],
+                        &mut pool[self.s_links[t.slave]],
+                        &entry.pend.beat,
+                        t,
+                        m,
+                    );
+                    self.mux[t.slave].grant = None;
+                }
+                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+            } else {
+                // NO deadlock avoidance: fork each leg as it is granted
+                let entry = self.pending[m].as_mut().unwrap();
+                let n = entry.pend.targets.len();
+                for i in 0..n {
+                    if entry.forwarded[i] {
+                        continue;
+                    }
+                    let t = entry.pend.targets[i].clone();
+                    if self.mux[t.slave].grant == Some(m)
+                        && pool[self.s_links[t.slave]].aw.can_push()
+                    {
+                        Self::forward_target(
+                            &mut self.wr_owner,
+                            &mut self.stats,
+                            &mut self.mux[t.slave],
+                            &mut pool[self.s_links[t.slave]],
+                            &entry.pend.beat,
+                            &t,
+                            m,
+                        );
+                        entry.forwarded[i] = true;
+                        self.mux[t.slave].grant = None;
+                    }
+                }
+                if entry.forwarded.iter().all(|&f| f) {
+                    let entry = self.pending[m].take().unwrap();
+                    self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                }
+            }
+        }
+    }
+
+    /// Phase 7 — unicast AW forwarding (round-robin; multicast priority
+    /// stalls unicast issue on a slave with a live grant).
+    fn phase_unicast_aw(&mut self, pool: &mut [AxiLink]) {
+        // masters with a pending unicast AW and its (single) target
+        let mut any = false;
+        for m in 0..self.cfg.n_masters {
+            self.scratch_want[m] = self.pending[m].as_ref().and_then(|p| {
+                if p.pend.beat.is_mcast {
+                    None
+                } else {
+                    p.pend.targets.first().map(|t| t.slave)
+                }
+            });
+            any |= self.scratch_want[m].is_some();
+            // unroutable unicast: accept immediately (W drains, DECERR B)
+            let unroutable = self.pending[m]
+                .as_ref()
+                .map(|p| !p.pend.beat.is_mcast && p.pend.targets.is_empty())
+                .unwrap_or(false);
+            if unroutable {
+                let entry = self.pending[m].take().unwrap();
+                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                self.scratch_want[m] = None;
+            }
+        }
+        if !any {
+            return;
+        }
+        for s in 0..self.cfg.n_slaves {
+            if self.mux[s].mcast_active() || !pool[self.s_links[s]].aw.can_push() {
+                continue;
+            }
+            let want = &self.scratch_want;
+            if let Some(m) = self.mux[s].rr_pick_aw_scan(self.cfg.n_masters, |m| want[m] == Some(s))
+            {
+                let entry = self.pending[m].take().unwrap();
+                let t = entry.pend.targets[0].clone();
+                Self::forward_target(
+                    &mut self.wr_owner,
+                    &mut self.stats,
+                    &mut self.mux[s],
+                    &mut pool[self.s_links[s]],
+                    &entry.pend.beat,
+                    &t,
+                    m,
+                );
+                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                self.scratch_want[m] = None;
+            }
+        }
+    }
+
+    /// Phase 8 — W transport with all-ready multicast fork.
+    fn phase_w(&mut self, pool: &mut [AxiLink]) {
+        for m in 0..self.cfg.n_masters {
+            if self.w_cooldown[m] > 0 {
+                self.w_cooldown[m] -= 1;
+                continue;
+            }
+            let Some(route) = self.demux[m].w_queue.front().cloned() else {
+                continue;
+            };
+            if route.slaves.is_empty() {
+                // drain W of an unroutable transaction
+                if route.beats_left == 0 || pool[self.m_links[m]].w.pop().is_some() {
+                    let r = self.demux[m].w_queue.front_mut().unwrap();
+                    r.beats_left = r.beats_left.saturating_sub(1);
+                    if r.beats_left == 0 {
+                        self.demux[m].w_queue.pop_front();
+                        let b = self.demux[m].complete_unroutable(route.txn);
+                        self.demux[m].b_out.push_back(b);
+                    }
+                }
+                continue;
+            }
+            if pool[self.m_links[m]].w.front().is_none() {
+                continue;
+            }
+            // all-ready fork condition (green logic in fig. 2d): every
+            // destination must be at the front of its mux W order AND
+            // have channel space.
+            let all_ready = route.slaves.iter().all(|&s| {
+                self.mux[s].w_front_is(m, route.txn) && pool[self.s_links[s]].w.can_push()
+            });
+            if !all_ready {
+                if route.is_mcast {
+                    self.stats.w_fork_stalls += 1;
+                }
+                continue;
+            }
+            pool[self.m_links[m]].w.pop();
+            self.stats.w_beats_in += 1;
+            let last = route.beats_left == 1;
+            for &s in &route.slaves {
+                pool[self.s_links[s]].w.push(WBeat {
+                    last,
+                    src: m,
+                    txn: route.txn,
+                });
+                self.stats.w_beats_out += 1;
+                if last {
+                    self.mux[s].pop_w_order(m, route.txn);
+                }
+            }
+            let r = self.demux[m].w_queue.front_mut().unwrap();
+            r.beats_left -= 1;
+            if last {
+                self.demux[m].w_queue.pop_front();
+            }
+            // registered all-ready fork: a >1-way fork cannot re-fire
+            // the cycle after a beat (stale ready) — see XbarCfg docs
+            if route.slaves.len() > 1 {
+                self.w_cooldown[m] = self.cfg.mcast_w_cooldown;
+            }
+        }
+    }
+
+    /// Any write/read activity still in flight inside the xbar?
+    pub fn busy(&self) -> bool {
+        self.pending.iter().any(Option::is_some)
+            || self.demux.iter().any(|d| d.busy() || !d.b_out.is_empty())
+            || !self.wr_owner.is_empty()
+            || !self.rd_owner.is_empty()
+            || !self.decerr_r.is_empty()
+    }
+}

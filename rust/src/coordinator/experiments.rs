@@ -1,0 +1,299 @@
+//! The paper's experiments, one function per figure.
+
+use crate::area::{xbar_area, AreaParams, TimingModel};
+use crate::occamy::SocConfig;
+use crate::util::json::Json;
+use crate::util::stats::{amdahl_parallel_fraction, geomean};
+use crate::util::table::{fnum, Table};
+use crate::workloads::matmul::{run_matmul, MatmulMode, MatmulResult, TileExec};
+use crate::workloads::microbench::{run_microbench, McastMode};
+use crate::workloads::roofline::Roofline;
+
+/// fig. 3a — area and timing of the N-to-N crossbar.
+pub fn fig3a() -> (Table, Json) {
+    let p = AreaParams::default();
+    let t = TimingModel::default();
+    let mut table = Table::new(&[
+        "N",
+        "base kGE",
+        "mcast kGE",
+        "Δ kGE",
+        "Δ %",
+        "fmax base GHz",
+        "fmax mcast GHz",
+    ]);
+    let mut arr = Vec::new();
+    for n in [4usize, 8, 16] {
+        let a = xbar_area(n, &p);
+        let fb = t.fmax_ghz(n, false).min(1.0); // constrained to 1 GHz target
+        let fm = t.fmax_ghz(n, true).min(1.0);
+        table.row(&[
+            format!("{n}x{n}"),
+            fnum(a.base_kge(), 1),
+            fnum(a.total_kge(), 1),
+            fnum(a.mcast, 1),
+            fnum(a.mcast_overhead_pct(), 1),
+            fnum(fb, 2),
+            fnum(fm, 2),
+        ]);
+        let mut o = Json::obj();
+        o.set("n", n)
+            .set("base_kge", a.base_kge())
+            .set("mcast_kge", a.total_kge())
+            .set("delta_kge", a.mcast)
+            .set("delta_pct", a.mcast_overhead_pct())
+            .set("fmax_base_ghz", fb)
+            .set("fmax_mcast_ghz", fm);
+        arr.push(o);
+    }
+    (table, Json::Arr(arr))
+}
+
+/// One fig. 3b point.
+#[derive(Debug, Clone)]
+pub struct Fig3bRow {
+    pub clusters: usize,
+    pub kib: u64,
+    pub cycles_unicast: u64,
+    pub cycles_hw: u64,
+    pub cycles_sw: Option<u64>,
+    pub speedup_hw: f64,
+    pub speedup_sw: Option<f64>,
+    pub amdahl_p: f64,
+}
+
+/// fig. 3b — microbenchmark speedups over the multiple-unicast
+/// baseline, with the hierarchical-software-multicast overlay.
+pub fn fig3b(cfg: &SocConfig, sizes: &[u64], cluster_counts: &[usize]) -> (Vec<Fig3bRow>, Table, Json) {
+    let mut rows = Vec::new();
+    for &clusters in cluster_counts {
+        for &bytes in sizes {
+            let uni = run_microbench(cfg, McastMode::Unicast, clusters, bytes);
+            let hw = run_microbench(cfg, McastMode::Hw, clusters, bytes);
+            let sw = (clusters > cfg.clusters_per_group)
+                .then(|| run_microbench(cfg, McastMode::SwHier, clusters, bytes));
+            let speedup_hw = uni.cycles as f64 / hw.cycles as f64;
+            // parallelism available = number of unicast transfers the
+            // multicast replaces (N destinations; N-1 for the
+            // full-system set where the source is a member)
+            let ideal = if clusters == cfg.n_clusters {
+                (clusters - 1) as f64
+            } else {
+                clusters as f64
+            };
+            rows.push(Fig3bRow {
+                clusters,
+                kib: bytes / 1024,
+                cycles_unicast: uni.cycles,
+                cycles_hw: hw.cycles,
+                cycles_sw: sw.as_ref().map(|r| r.cycles),
+                speedup_hw,
+                speedup_sw: sw.as_ref().map(|r| uni.cycles as f64 / r.cycles as f64),
+                amdahl_p: amdahl_parallel_fraction(speedup_hw, ideal),
+            });
+        }
+    }
+    let mut table = Table::new(&[
+        "clusters",
+        "KiB",
+        "unicast cyc",
+        "hw cyc",
+        "hw speedup",
+        "sw speedup",
+        "Amdahl p%",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.clusters.to_string(),
+            r.kib.to_string(),
+            r.cycles_unicast.to_string(),
+            r.cycles_hw.to_string(),
+            fnum(r.speedup_hw, 2),
+            r.speedup_sw.map(|s| fnum(s, 2)).unwrap_or_else(|| "-".into()),
+            fnum(r.amdahl_p * 100.0, 1),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("clusters", r.clusters)
+                    .set("kib", r.kib)
+                    .set("cycles_unicast", r.cycles_unicast)
+                    .set("cycles_hw", r.cycles_hw)
+                    .set("speedup_hw", r.speedup_hw)
+                    .set("amdahl_p", r.amdahl_p);
+                if let Some(c) = r.cycles_sw {
+                    o.set("cycles_sw", c);
+                }
+                if let Some(s) = r.speedup_sw {
+                    o.set("speedup_sw", s);
+                }
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
+/// Summary numbers the paper quotes for fig. 3b.
+pub fn fig3b_summary(rows: &[Fig3bRow], max_clusters: usize) -> Json {
+    let at_max: Vec<&Fig3bRow> = rows.iter().filter(|r| r.clusters == max_clusters).collect();
+    let hw: Vec<f64> = at_max.iter().map(|r| r.speedup_hw).collect();
+    let hw_over_sw: Vec<f64> = at_max
+        .iter()
+        .filter_map(|r| r.speedup_sw.map(|s| r.speedup_hw / s))
+        .collect();
+    let mut o = Json::obj();
+    o.set(
+        "hw_speedup_min",
+        hw.iter().cloned().fold(f64::INFINITY, f64::min),
+    )
+    .set(
+        "hw_speedup_max",
+        hw.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    )
+    .set("hw_over_sw_geomean", geomean(&hw_over_sw))
+    .set(
+        "amdahl_p_32k",
+        at_max.last().map(|r| r.amdahl_p).unwrap_or(0.0),
+    );
+    o
+}
+
+/// One fig. 3c point.
+#[derive(Debug, Clone)]
+pub struct Fig3cRow {
+    pub result: MatmulResult,
+    pub oi_gain: f64,
+    pub perf_gain: f64,
+    pub pct_of_roof: f64,
+}
+
+/// fig. 3c — matmul roofline points for the three B-distribution modes.
+pub fn fig3c(cfg: &SocConfig, exec: &mut dyn TileExec) -> (Vec<Fig3cRow>, Table, Json) {
+    let roof = Roofline::of(cfg);
+    let base = run_matmul(cfg, MatmulMode::Baseline, exec);
+    let sw = run_matmul(cfg, MatmulMode::SwMcast, exec);
+    let hw = run_matmul(cfg, MatmulMode::HwMcast, exec);
+    let rows: Vec<Fig3cRow> = [base.clone(), sw, hw]
+        .into_iter()
+        .map(|r| Fig3cRow {
+            oi_gain: r.oi_read / base.oi_read,
+            perf_gain: r.gflops / base.gflops,
+            pct_of_roof: roof.pct_of_roof(r.oi_read, r.gflops),
+            result: r,
+        })
+        .collect();
+    let mut table = Table::new(&[
+        "mode",
+        "cycles",
+        "GFLOPS",
+        "OI (F/B)",
+        "OI gain",
+        "perf gain",
+        "% of roof",
+        "numerics",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.result.mode.name().to_string(),
+            r.result.cycles.to_string(),
+            fnum(r.result.gflops, 1),
+            fnum(r.result.oi_read, 2),
+            format!("{}x", fnum(r.oi_gain, 1)),
+            format!("{}x", fnum(r.perf_gain, 2)),
+            fnum(r.pct_of_roof, 1),
+            if r.result.numerics_ok { "OK" } else { "FAIL" }.to_string(),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("mode", r.result.mode.name())
+                    .set("cycles", r.result.cycles)
+                    .set("gflops", r.result.gflops)
+                    .set("oi_read", r.result.oi_read)
+                    .set("oi_gain", r.oi_gain)
+                    .set("perf_gain", r.perf_gain)
+                    .set("pct_of_roof", r.pct_of_roof)
+                    .set("llc_read_bytes", r.result.llc_read_bytes)
+                    .set("llc_write_bytes", r.result.llc_write_bytes)
+                    .set("numerics_ok", r.result.numerics_ok);
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
+/// fig. 3d — print the parallelisation/schedule (as a description; the
+/// schedule itself is encoded in `workloads::matmul::programs`).
+pub fn fig3d_schedule(cfg: &SocConfig) -> String {
+    let l = crate::workloads::matmul::MatmulLayout::paper(cfg);
+    format!(
+        "matmul {n}x{n} f64 across {nc} clusters (fig. 3d):\n\
+         - each cluster owns an {r}x{n} row block of C\n\
+         - per iteration: one {r}x{t} C tile (K={n}) = {macs} MACs\n\
+         - A panel ({ab} KiB) loaded once; B tile ({tb} KiB) double-buffered\n\
+         - L1 footprint: {fp} KiB of {l1} KiB\n\
+         - iterations: {it}",
+        n = l.n,
+        nc = cfg.n_clusters,
+        r = l.rows_per_cluster,
+        t = l.tile_cols,
+        macs = l.tile_macs(),
+        ab = l.a_panel_bytes() / 1024,
+        tb = l.tile_bytes() / 1024,
+        fp = l.l1_footprint() / 1024,
+        l1 = cfg.l1_bytes / 1024,
+        it = l.n_tiles(),
+    )
+}
+
+/// Default fig. 3b sweep parameters (the paper's ranges).
+pub fn fig3b_default_sizes() -> Vec<u64> {
+    vec![1, 2, 4, 8, 16, 32].into_iter().map(|k| k * 1024).collect()
+}
+
+pub fn fig3b_default_clusters(cfg: &SocConfig) -> Vec<usize> {
+    [2usize, 4, 8, 16, 32]
+        .into_iter()
+        .filter(|&c| c <= cfg.n_clusters)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::matmul::RustTileExec;
+
+    #[test]
+    fn fig3a_has_three_rows_and_sane_numbers() {
+        let (t, j) = fig3a();
+        assert_eq!(t.rows().len(), 3);
+        let arr = j.as_arr().unwrap();
+        let r16 = arr[2].as_obj().unwrap();
+        assert!(r16["delta_pct"].as_f64().unwrap() > 10.0);
+        assert!(r16["fmax_mcast_ghz"].as_f64().unwrap() < 1.0);
+    }
+
+    #[test]
+    fn fig3b_small_sweep_runs() {
+        let cfg = SocConfig::default();
+        let (rows, table, _json) = fig3b(&cfg, &[2048], &[4, 8]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.speedup_hw > 1.0));
+        assert!(table.render().contains("hw speedup"));
+    }
+
+    #[test]
+    #[ignore] // minutes-long in debug; exercised by `cargo bench` and CLI
+    fn fig3c_full_run() {
+        let cfg = SocConfig::default();
+        let mut exec = RustTileExec;
+        let (rows, _t, _j) = fig3c(&cfg, &mut exec);
+        assert!(rows.iter().all(|r| r.result.numerics_ok));
+    }
+}

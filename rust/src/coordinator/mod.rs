@@ -1,0 +1,9 @@
+//! Experiment orchestration: every table/figure of the paper's
+//! evaluation section has a harness here that regenerates it (see
+//! DESIGN.md §5 for the experiment index).
+
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{fig3a, fig3b, fig3c, Fig3bRow, Fig3cRow};
+pub use report::Report;

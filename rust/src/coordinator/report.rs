@@ -1,0 +1,87 @@
+//! Report sink: collects experiment tables + JSON and writes them to
+//! stdout and (optionally) a results directory.
+
+use std::fs;
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// A named experiment report.
+pub struct Report {
+    pub name: String,
+    sections: Vec<(String, String)>,
+    json: Json,
+    out_dir: Option<PathBuf>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report {
+            name: name.to_string(),
+            sections: Vec::new(),
+            json: Json::obj(),
+            out_dir: None,
+        }
+    }
+
+    pub fn to_dir(mut self, dir: Option<&str>) -> Report {
+        self.out_dir = dir.map(PathBuf::from);
+        self
+    }
+
+    pub fn section(&mut self, title: &str, body: &str) -> &mut Self {
+        self.sections.push((title.to_string(), body.to_string()));
+        self
+    }
+
+    pub fn table(&mut self, title: &str, t: &Table) -> &mut Self {
+        self.section(title, &t.render())
+    }
+
+    pub fn json(&mut self, key: &str, j: Json) -> &mut Self {
+        self.json.set(key, j);
+        self
+    }
+
+    /// Render the report to a printable string.
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} ==\n", self.name);
+        for (title, body) in &self.sections {
+            s.push_str(&format!("\n-- {title} --\n{body}\n"));
+        }
+        s
+    }
+
+    /// Print to stdout and persist to the results dir (if set).
+    pub fn emit(&self) -> std::io::Result<()> {
+        println!("{}", self.render());
+        if let Some(dir) = &self.out_dir {
+            fs::create_dir_all(dir)?;
+            fs::write(dir.join(format!("{}.txt", self.name)), self.render())?;
+            fs::write(dir.join(format!("{}.json", self.name)), self.json.pretty())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_persist() {
+        let dir = std::env::temp_dir().join("axi_mcast_report_test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into()]);
+        let mut r = Report::new("fig-test").to_dir(Some(dir.to_str().unwrap()));
+        r.table("numbers", &t);
+        r.json("rows", Json::Arr(vec![Json::Num(1.0)]));
+        r.emit().unwrap();
+        assert!(dir.join("fig-test.txt").exists());
+        let j = fs::read_to_string(dir.join("fig-test.json")).unwrap();
+        assert!(Json::parse(&j).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

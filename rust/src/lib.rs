@@ -1,0 +1,34 @@
+//! # axi-mcast — multicast-capable AXI crossbar + Occamy SoC simulator
+//!
+//! Reproduction of *"A Multicast-Capable AXI Crossbar for Many-core
+//! Machine Learning Accelerators"* (Colagrande & Benini, AICAS 2025).
+//!
+//! The crate is organised bottom-up (see `DESIGN.md`):
+//!
+//! * [`util`] — std-only substrates (PRNG, JSON, CLI, stats, property
+//!   testing) written in-repo because the offline build only vendors the
+//!   `xla` crate's dependency closure.
+//! * [`sim`] — cycle-level simulation kernel: staged channels,
+//!   valid/ready handshakes, the clock loop and watchdog.
+//! * [`axi`] — the paper's §II-A contribution: AXI channel types, the
+//!   mask-form multi-address encoding, the extended address decoder, and
+//!   the multicast-capable N×M crossbar (demux fork / mux commit /
+//!   B-join / deadlock avoidance).
+//! * [`occamy`] — the paper's §II-B substrate: Snitch-like clusters with
+//!   L1 SPM + DMA, LLC, narrow (64-bit) and wide (512-bit) two-level
+//!   crossbar hierarchies, multicast interrupts and barriers.
+//! * [`workloads`] — §III-B experiments: the 1-to-N DMA microbenchmark
+//!   (fig. 3b) and the double-buffered tiled matmul (fig. 3c/3d).
+//! * [`area`] — §III-A analytical gate-count/timing model (fig. 3a).
+//! * [`runtime`] — PJRT CPU client loading the AOT JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) for functional numerics.
+//! * [`coordinator`] — experiment orchestration, sweeps and reports.
+
+pub mod area;
+pub mod axi;
+pub mod coordinator;
+pub mod occamy;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

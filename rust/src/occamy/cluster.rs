@@ -1,0 +1,486 @@
+//! Snitch-like compute cluster: command sequencer + L1 port service +
+//! narrow-network LSU (interrupt sends) + mailbox.
+//!
+//! Workloads express the paper's kernels as per-cluster command
+//! programs ([`Cmd`]) — issue DMA, wait for it, compute, synchronise.
+//! The compute command charges the FPU-model cycle cost; the numeric
+//! effect is applied by the SoC's [`super::soc::ComputeHandler`] when
+//! the command retires (an `(op, arg)` pair names what to compute).
+
+use std::collections::VecDeque;
+
+use super::config::{SocConfig, BARRIER_BASE};
+use super::dma::{DmaEngine, DmaJob};
+use crate::axi::golden::SimSlave;
+use crate::axi::mcast::AddrSet;
+use crate::axi::types::{AwBeat, AxiLink, Txn, WBeat};
+use crate::sim::Cycle;
+
+/// One program step of a cluster.
+#[derive(Debug, Clone)]
+pub enum Cmd {
+    /// Enqueue a DMA copy (non-blocking).
+    Dma {
+        src: u64,
+        dst: AddrSet,
+        bytes: u64,
+        tag: u64,
+    },
+    /// Block until all previously enqueued DMA jobs completed.
+    WaitDma,
+    /// Busy the FPUs for `macs` multiply-accumulates, then fire
+    /// compute op `(op, arg)` through the handler.
+    Compute { macs: u64, op: u32, arg: u64 },
+    /// Notify the central barrier (narrow write), then wait for the
+    /// release interrupt.
+    Barrier,
+    /// Send an interrupt (narrow 1-beat write) to a mailbox set.
+    SendIrq { dst: AddrSet },
+    /// Wait until `count` interrupts arrived (then consume them).
+    WaitIrq { count: u32 },
+    /// Idle for a fixed number of cycles (prologue modelling).
+    Delay { cycles: u64 },
+}
+
+/// Sequencer state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClState {
+    Ready,
+    Computing { until: Cycle },
+    WaitingB,
+    WaitingIrq,
+    Delaying { until: Cycle },
+}
+
+/// A compute op to dispatch through the handler this cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeEvent {
+    pub cluster: usize,
+    pub op: u32,
+    pub arg: u64,
+}
+
+/// The cluster model.
+pub struct Cluster {
+    pub idx: usize,
+    pub prog: VecDeque<Cmd>,
+    pub state: ClState,
+    pub dma: DmaEngine,
+    /// Wide L1 slave port service (writes/reads into the SPM window).
+    pub l1_port: SimSlave,
+    /// Narrow mailbox: pending interrupt count.
+    pub irq_count: u32,
+    mbox_w_expected: VecDeque<(Txn, u32)>,
+    pending_dma: u32,
+    /// Monotone progress (watchdog food): retired cmds + active cycles.
+    pub progress: u64,
+    pub done_at: Option<Cycle>,
+    /// DMA tags completed (workload assertions).
+    pub dma_done_tags: Vec<u64>,
+    /// Completed DMA jobs awaiting their functional copy (drained by
+    /// the SoC, which owns the memory).
+    pub pending_copies: Vec<DmaJob>,
+    pub compute_busy_cycles: u64,
+    narrow_bytes: u32,
+    /// Compute event fired when the in-flight Compute retires.
+    pending_event: Option<ComputeEvent>,
+}
+
+impl Cluster {
+    pub fn new(idx: usize, cfg: &SocConfig) -> Cluster {
+        let mut l1_port = SimSlave::new(idx);
+        l1_port.b_lat = cfg.l1_lat;
+        l1_port.r_lat = cfg.l1_lat + 1;
+        Cluster {
+            idx,
+            prog: VecDeque::new(),
+            state: ClState::Ready,
+            dma: DmaEngine::new(idx, cfg),
+            l1_port,
+            irq_count: 0,
+            mbox_w_expected: VecDeque::new(),
+            pending_dma: 0,
+            progress: 0,
+            done_at: None,
+            dma_done_tags: Vec::new(),
+            pending_copies: Vec::new(),
+            compute_busy_cycles: 0,
+            narrow_bytes: cfg.narrow_bytes,
+            pending_event: None,
+        }
+    }
+
+    pub fn load(&mut self, prog: Vec<Cmd>) {
+        self.prog = prog.into();
+        self.done_at = None;
+    }
+
+    pub fn done(&self) -> bool {
+        self.prog.is_empty()
+            && self.state == ClState::Ready
+            && self.pending_dma == 0
+            && !self.dma.busy()
+    }
+
+    /// Service the narrow mailbox slave port: 1-beat writes raise IRQs.
+    fn step_mailbox(&mut self, link: &mut AxiLink) {
+        if let Some(aw) = link.aw.pop() {
+            self.mbox_w_expected.push_back((aw.txn, aw.beats));
+        }
+        if let Some(w) = link.w.pop() {
+            let (txn, left) = self
+                .mbox_w_expected
+                .front_mut()
+                .expect("mailbox W without AW");
+            *left -= 1;
+            debug_assert_eq!(w.last, *left == 0);
+            if *left == 0 {
+                let txn = *txn;
+                self.mbox_w_expected.pop_front();
+                self.irq_count += 1;
+                if link.b.can_push() {
+                    link.b.push(crate::axi::types::BBeat {
+                        id: 0,
+                        resp: crate::axi::types::Resp::Okay,
+                        txn,
+                    });
+                }
+            }
+        }
+    }
+
+    /// One cycle. Returns a compute event when a Compute retires.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        cy: Cycle,
+        cfg: &SocConfig,
+        wide_dma: &mut AxiLink,
+        wide_l1: &mut AxiLink,
+        narrow_lsu: &mut AxiLink,
+        narrow_mbox: &mut AxiLink,
+        next_txn: &mut Txn,
+    ) -> Option<ComputeEvent> {
+        // background engines
+        self.l1_port.step(cy, wide_l1);
+        self.step_mailbox(narrow_mbox);
+        self.dma.step(cy, wide_dma, next_txn);
+        for j in self.dma.completed.drain(..) {
+            self.pending_dma -= 1;
+            self.dma_done_tags.push(j.tag);
+            self.pending_copies.push(j);
+            self.progress += 1;
+        }
+        // LSU B collection
+        while let Some(_b) = narrow_lsu.b.pop() {
+            if self.state == ClState::WaitingB {
+                self.state = ClState::Ready;
+                self.progress += 1;
+            }
+        }
+
+        // sequencer
+        match self.state {
+            ClState::Computing { until } => {
+                self.compute_busy_cycles += 1;
+                self.progress += 1;
+                if cy >= until {
+                    self.state = ClState::Ready;
+                    // the Compute cmd was already popped; fire its event
+                    if let Some(ev) = self.pending_event.take() {
+                        return Some(ev);
+                    }
+                }
+                return None;
+            }
+            ClState::Delaying { until } => {
+                self.progress += 1;
+                if cy >= until {
+                    self.state = ClState::Ready;
+                }
+                return None;
+            }
+            ClState::WaitingB => return None,
+            ClState::WaitingIrq => {
+                if let Some(Cmd::WaitIrq { count }) = self.prog.front() {
+                    if self.irq_count >= *count {
+                        self.irq_count -= count;
+                        self.prog.pop_front();
+                        // taking the interrupt costs handler cycles
+                        self.state = ClState::Delaying {
+                            until: cy + cfg.irq_handler_cycles,
+                        };
+                        self.progress += 1;
+                    }
+                } else {
+                    // Barrier release wait (1 irq)
+                    if self.irq_count >= 1 {
+                        self.irq_count -= 1;
+                        self.state = ClState::Delaying {
+                            until: cy + cfg.irq_handler_cycles,
+                        };
+                        self.progress += 1;
+                    }
+                }
+                return None;
+            }
+            ClState::Ready => {}
+        }
+
+        let Some(cmd) = self.prog.front().cloned() else {
+            if self.done_at.is_none() && self.done() {
+                self.done_at = Some(cy);
+            }
+            return None;
+        };
+        match cmd {
+            Cmd::Dma {
+                src,
+                dst,
+                bytes,
+                tag,
+            } => {
+                self.dma.push(DmaJob {
+                    src,
+                    dst,
+                    bytes,
+                    tag,
+                });
+                self.pending_dma += 1;
+                self.prog.pop_front();
+                self.progress += 1;
+            }
+            Cmd::WaitDma => {
+                if self.pending_dma == 0 {
+                    self.prog.pop_front();
+                    self.progress += 1;
+                }
+            }
+            Cmd::Compute { macs, op, arg } => {
+                let cycles = cfg.compute_cycles(macs).max(1);
+                self.prog.pop_front();
+                // the FPUs are busy for [cy+1, cy+cycles]; the issue
+                // cycle models the FREP/loop setup
+                self.state = ClState::Computing {
+                    until: cy + cycles,
+                };
+                self.pending_event = Some(ComputeEvent {
+                    cluster: self.idx,
+                    op,
+                    arg,
+                });
+            }
+            Cmd::Barrier => {
+                // 1-beat narrow write to the barrier peripheral
+                if narrow_lsu.aw.can_push() && narrow_lsu.w.can_push() {
+                    let txn = *next_txn;
+                    *next_txn += 1;
+                    narrow_lsu.aw.push(AwBeat {
+                        id: self.idx as u16,
+                        dest: AddrSet::unicast(BARRIER_BASE),
+                        beats: 1,
+                        beat_bytes: self.narrow_bytes,
+                        is_mcast: false,
+                        exclude: None,
+                        src: 0,
+                        txn,
+                    });
+                    narrow_lsu.w.push(WBeat {
+                        last: true,
+                        src: 0,
+                        txn,
+                    });
+                    self.prog.pop_front();
+                    // first wait for our write's B, then for the release irq
+                    self.state = ClState::WaitingB;
+                    self.prog.push_front(Cmd::WaitIrq { count: 1 });
+                }
+            }
+            Cmd::SendIrq { dst } => {
+                if narrow_lsu.aw.can_push() && narrow_lsu.w.can_push() {
+                    let txn = *next_txn;
+                    *next_txn += 1;
+                    narrow_lsu.aw.push(AwBeat {
+                        id: self.idx as u16,
+                        dest: dst,
+                        beats: 1,
+                        beat_bytes: self.narrow_bytes,
+                        is_mcast: dst.count() > 1,
+                        exclude: None,
+                        src: 0,
+                        txn,
+                    });
+                    narrow_lsu.w.push(WBeat {
+                        last: true,
+                        src: 0,
+                        txn,
+                    });
+                    self.prog.pop_front();
+                    self.state = ClState::WaitingB;
+                }
+            }
+            Cmd::WaitIrq { count } => {
+                if self.irq_count >= count {
+                    self.irq_count -= count;
+                    self.prog.pop_front();
+                    self.state = ClState::Delaying {
+                        until: cy + cfg.irq_handler_cycles,
+                    };
+                    self.progress += 1;
+                } else {
+                    self.state = ClState::WaitingIrq;
+                }
+            }
+            Cmd::Delay { cycles } => {
+                self.prog.pop_front();
+                self.state = ClState::Delaying {
+                    until: cy + cycles,
+                };
+            }
+        }
+        None
+    }
+
+    pub fn busy(&self) -> bool {
+        !self.done()
+    }
+
+    /// Fully quiescent: program retired AND no background engine holds
+    /// state that needs clocking (safe to skip stepping unless a link
+    /// carries beats — see the SoC idle-skip).
+    #[inline]
+    pub fn quiescent(&self) -> bool {
+        self.done()
+            && self.l1_port.idle()
+            && self.mbox_w_expected.is_empty()
+            && self.pending_copies.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Cluster, SocConfig, Vec<AxiLink>) {
+        let cfg = SocConfig::tiny(4);
+        let cl = Cluster::new(0, &cfg);
+        let links = (0..4).map(|_| AxiLink::new(2)).collect();
+        (cl, cfg, links)
+    }
+
+    fn run(
+        cl: &mut Cluster,
+        cfg: &SocConfig,
+        links: &mut [AxiLink],
+        cycles: u64,
+    ) -> Vec<ComputeEvent> {
+        let mut txn = 1;
+        let mut evs = Vec::new();
+        for cy in 0..cycles {
+            let (a, rest) = links.split_at_mut(1);
+            let (b, rest2) = rest.split_at_mut(1);
+            let (c, d) = rest2.split_at_mut(1);
+            if let Some(ev) = cl.step(cy, cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0], &mut txn)
+            {
+                evs.push(ev);
+            }
+            for l in links.iter_mut() {
+                l.tick();
+            }
+            if cl.done() {
+                break;
+            }
+        }
+        evs
+    }
+
+    #[test]
+    fn compute_cmd_busy_then_fires_event() {
+        let (mut cl, cfg, mut links) = setup();
+        cl.load(vec![Cmd::Compute {
+            macs: 64,
+            op: 7,
+            arg: 42,
+        }]);
+        let evs = run(&mut cl, &cfg, &mut links, 100);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].op, 7);
+        assert_eq!(evs[0].arg, 42);
+        // 64 MACs / 8 FPUs = 8 cycles of busy time
+        assert_eq!(cl.compute_busy_cycles, 8);
+        assert!(cl.done());
+    }
+
+    #[test]
+    fn wait_irq_blocks_until_mailbox_write() {
+        let (mut cl, cfg, mut links) = setup();
+        cl.load(vec![Cmd::WaitIrq { count: 1 }]);
+        let mut txn = 50;
+        // run a few cycles: must not complete
+        for cy in 0..5 {
+            let (a, rest) = links.split_at_mut(1);
+            let (b, rest2) = rest.split_at_mut(1);
+            let (c, d) = rest2.split_at_mut(1);
+            cl.step(cy, &cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0], &mut txn);
+            for l in links.iter_mut() {
+                l.tick();
+            }
+        }
+        assert!(!cl.done());
+        // deliver a mailbox write
+        links[3].aw.push(AwBeat {
+            id: 0,
+            dest: AddrSet::unicast(cfg.mailbox_addr(0)),
+            beats: 1,
+            beat_bytes: 8,
+            is_mcast: false,
+            exclude: None,
+            src: 0,
+            txn: 99,
+        });
+        links[3].w.push(WBeat {
+            last: true,
+            src: 0,
+            txn: 99,
+        });
+        // the release pays irq_handler_cycles before the program resumes
+        for cy in 5..(40 + cfg.irq_handler_cycles) {
+            let (a, rest) = links.split_at_mut(1);
+            let (b, rest2) = rest.split_at_mut(1);
+            let (c, d) = rest2.split_at_mut(1);
+            cl.step(cy, &cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0], &mut txn);
+            for l in links.iter_mut() {
+                l.tick();
+            }
+        }
+        assert!(cl.done(), "irq must release WaitIrq");
+        // mailbox acked with B
+        assert!(links[3].b.pushed > 0);
+    }
+
+    #[test]
+    fn delay_cmd() {
+        let (mut cl, cfg, mut links) = setup();
+        cl.load(vec![Cmd::Delay { cycles: 10 }]);
+        run(&mut cl, &cfg, &mut links, 100);
+        assert!(cl.done());
+    }
+
+    #[test]
+    fn dma_then_wait_completes() {
+        use super::super::config::CLUSTER_BASE;
+        let (mut cl, cfg, mut links) = setup();
+        cl.load(vec![
+            Cmd::Dma {
+                src: CLUSTER_BASE,
+                dst: AddrSet::unicast(CLUSTER_BASE + 0x8000),
+                bytes: 1024,
+                tag: 5,
+            },
+            Cmd::WaitDma,
+        ]);
+        run(&mut cl, &cfg, &mut links, 1_000);
+        assert!(cl.done());
+        assert_eq!(cl.dma_done_tags, vec![5]);
+    }
+}

@@ -1,0 +1,240 @@
+//! SoC configuration (the paper's reference system as defaults) and the
+//! global address map constants.
+
+use crate::axi::mcast::AddrSet;
+
+/// Base address of cluster 0's window.
+pub const CLUSTER_BASE: u64 = 0x0100_0000;
+/// Size of (and stride between) cluster address windows.
+pub const CLUSTER_STRIDE: u64 = 0x4_0000;
+/// Byte offset of the interrupt mailbox inside a cluster window
+/// (narrow-network writes here raise a cluster interrupt).
+pub const MAILBOX_OFFSET: u64 = 0x3_F000;
+/// LLC base address.
+pub const LLC_BASE: u64 = 0x8000_0000;
+/// Barrier/synchronisation peripheral (narrow network only).
+pub const BARRIER_BASE: u64 = 0x0200_0000;
+pub const BARRIER_SIZE: u64 = 0x1000;
+
+/// Full system configuration. `Default` reproduces the paper's
+/// reference system: 32 clusters in 8 groups of 4, 128 KiB L1 per
+/// cluster, 4 MiB LLC, 512-bit wide / 64-bit narrow networks, 1 GHz.
+#[derive(Debug, Clone)]
+pub struct SocConfig {
+    pub n_clusters: usize,
+    pub clusters_per_group: usize,
+    pub l1_bytes: u64,
+    pub llc_bytes: u64,
+    /// Wide-network bus width in bytes (512 bit = 64 B).
+    pub wide_bytes: u32,
+    /// Narrow-network bus width in bytes (64 bit = 8 B).
+    pub narrow_bytes: u32,
+    /// Clock frequency in GHz (for GFLOPS conversion only; the
+    /// simulator counts cycles).
+    pub freq_ghz: f64,
+    /// FPU cores per cluster (Snitch: 8 compute cores).
+    pub fpu_per_cluster: u32,
+    /// Sustained FLOPs per FPU per cycle in the inner loop (FMA = 2,
+    /// derated by the paper's ~92%-of-peak utilisation via workloads).
+    pub flops_per_fpu_cycle: f64,
+
+    // ---- fabric parameters ----
+    /// Channel FIFO depth per hop (2 = skid-buffered full-rate slice).
+    pub link_depth: usize,
+    /// LLC read/response latency in cycles.
+    pub llc_lat: u32,
+    /// Cluster L1 port response latency.
+    pub l1_lat: u32,
+    /// Idle cycles the LLC inserts between consecutive read bursts
+    /// (bank-conflict / arbitration overhead; calibrated to the paper's
+    /// 92%-of-roof baseline matmul).
+    pub llc_burst_gap: u32,
+    /// Cycles a core spends taking an interrupt (wfi wake + handler
+    /// entry + flag check) before the program continues after WaitIrq.
+    pub irq_handler_cycles: u64,
+    /// Max beats per AXI burst (bounded also by the 4 KiB rule).
+    pub max_burst_beats: u32,
+
+    // ---- DMA parameters ----
+    /// Cycles to set up / launch one DMA job (descriptor fetch, cfg).
+    pub dma_setup: u32,
+    /// Outstanding read bursts a DMA may keep in flight.
+    pub dma_read_outstanding: u32,
+    /// Outstanding write bursts (unicast) a DMA may keep in flight.
+    pub dma_write_outstanding: u32,
+    /// Outstanding *multicast* write bursts (the paper's configurable
+    /// maximum number of same-set multicasts).
+    pub dma_mcast_outstanding: u32,
+    /// Internal DMA staging FIFO in bytes (read→write pipelining).
+    pub dma_buffer_bytes: u64,
+
+    // ---- feature toggles (ablations) ----
+    /// The paper's extension on the wide network.
+    pub wide_mcast: bool,
+    /// Multicast interrupts on the narrow network.
+    pub narrow_mcast: bool,
+    /// Commit-based deadlock avoidance (leave on; off reproduces 2e).
+    pub commit_protocol: bool,
+    /// Multicast W-fork cooldown cycles (see `XbarCfg::mcast_w_cooldown`;
+    /// 1 = the RTL-calibrated registered fork, 0 = idealised ablation).
+    pub mcast_w_cooldown: u32,
+}
+
+impl Default for SocConfig {
+    fn default() -> SocConfig {
+        SocConfig {
+            n_clusters: 32,
+            clusters_per_group: 4,
+            l1_bytes: 128 * 1024,
+            llc_bytes: 4 * 1024 * 1024,
+            wide_bytes: 64,
+            narrow_bytes: 8,
+            freq_ghz: 1.0,
+            fpu_per_cluster: 8,
+            flops_per_fpu_cycle: 2.0,
+            link_depth: 2,
+            llc_lat: 8,
+            l1_lat: 1,
+            llc_burst_gap: 4,
+            irq_handler_cycles: 120,
+            max_burst_beats: 64,
+            dma_setup: 8,
+            dma_read_outstanding: 4,
+            dma_write_outstanding: 4,
+            dma_mcast_outstanding: 2,
+            dma_buffer_bytes: 8 * 1024,
+            wide_mcast: true,
+            narrow_mcast: true,
+            commit_protocol: true,
+            mcast_w_cooldown: 1,
+        }
+    }
+}
+
+impl SocConfig {
+    /// Smaller system for fast tests.
+    pub fn tiny(n_clusters: usize) -> SocConfig {
+        SocConfig {
+            n_clusters,
+            clusters_per_group: n_clusters.min(4),
+            llc_bytes: 1024 * 1024,
+            ..Default::default()
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        assert_eq!(self.n_clusters % self.clusters_per_group, 0);
+        self.n_clusters / self.clusters_per_group
+    }
+
+    pub fn cluster_base(&self, i: usize) -> u64 {
+        CLUSTER_BASE + i as u64 * CLUSTER_STRIDE
+    }
+
+    pub fn group_of(&self, cluster: usize) -> usize {
+        cluster / self.clusters_per_group
+    }
+
+    /// Group g's cluster-region `[start, end)`.
+    pub fn group_region(&self, g: usize) -> (u64, u64) {
+        let span = self.clusters_per_group as u64 * CLUSTER_STRIDE;
+        (
+            CLUSTER_BASE + g as u64 * span,
+            CLUSTER_BASE + (g as u64 + 1) * span,
+        )
+    }
+
+    /// Mailbox address of cluster `i`.
+    pub fn mailbox_addr(&self, i: usize) -> u64 {
+        self.cluster_base(i) + MAILBOX_OFFSET
+    }
+
+    /// Mask-form set addressing offset `off` in every cluster of
+    /// `[first, first+count)`; `count` must be a power of two and
+    /// `first` aligned to it.
+    pub fn cluster_set(&self, first: usize, count: usize, off: u64) -> AddrSet {
+        assert!(count.is_power_of_two(), "count {count} must be 2^n");
+        assert_eq!(first % count, 0, "first {first} must align to count {count}");
+        assert!(off < CLUSTER_STRIDE);
+        let mask = (count as u64 - 1) * CLUSTER_STRIDE;
+        AddrSet::new(self.cluster_base(first) + off, mask)
+    }
+
+    /// Mailbox multicast set over all clusters (barrier release IRQ).
+    pub fn all_mailboxes(&self) -> AddrSet {
+        self.cluster_set(0, self.n_clusters.next_power_of_two(), MAILBOX_OFFSET)
+    }
+
+    /// Peak FLOP/cycle of the whole system.
+    pub fn peak_flops_per_cycle(&self) -> f64 {
+        self.n_clusters as f64 * self.fpu_per_cluster as f64 * self.flops_per_fpu_cycle
+    }
+
+    /// Peak GFLOPS at the configured frequency.
+    pub fn peak_gflops(&self) -> f64 {
+        self.peak_flops_per_cycle() * self.freq_ghz
+    }
+
+    /// Cycles the cluster compute model charges for `macs` multiply-
+    /// accumulates (1 MAC = 2 FLOPs, one FMA per FPU per cycle).
+    pub fn compute_cycles(&self, macs: u64) -> u64 {
+        (macs as f64 / self.fpu_per_cluster as f64).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_reference_system() {
+        let c = SocConfig::default();
+        assert_eq!(c.n_clusters, 32);
+        assert_eq!(c.n_groups(), 8);
+        // 32 clusters × 8 FPUs × 2 flop/cycle @1 GHz = 512 GFLOPS peak
+        assert_eq!(c.peak_gflops(), 512.0);
+        // wide network: 64 B/cycle @1 GHz = 64 GB/s per port
+        assert_eq!(c.wide_bytes, 64);
+    }
+
+    #[test]
+    fn cluster_addressing_satisfies_mcast_constraints() {
+        let c = SocConfig::default();
+        assert_eq!(c.cluster_base(0), 0x0100_0000);
+        assert_eq!(c.cluster_base(1), 0x0104_0000);
+        // the paper's constraint: power-of-two size, size-aligned
+        for g in 0..c.n_groups() {
+            let (s, e) = c.group_region(g);
+            let size = e - s;
+            assert!(size.is_power_of_two());
+            assert_eq!(s % size, 0, "group {g} region misaligned");
+        }
+    }
+
+    #[test]
+    fn cluster_set_covers_expected_addresses() {
+        let c = SocConfig::default();
+        let set = c.cluster_set(0, 32, 0x100);
+        let addrs = set.enumerate();
+        assert_eq!(addrs.len(), 32);
+        for (i, a) in addrs.iter().enumerate() {
+            assert_eq!(*a, c.cluster_base(i) + 0x100);
+        }
+        let sub = c.cluster_set(4, 4, 0);
+        assert_eq!(sub.enumerate().len(), 4);
+        assert_eq!(sub.enumerate()[0], c.cluster_base(4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_cluster_set_panics() {
+        SocConfig::default().cluster_set(2, 4, 0);
+    }
+
+    #[test]
+    fn compute_cycles_model() {
+        let c = SocConfig::default();
+        // 8x16x256 tile = 32768 MACs over 8 FPUs = 4096 cycles
+        assert_eq!(c.compute_cycles(8 * 16 * 256), 4096);
+    }
+}

@@ -1,0 +1,437 @@
+//! Cluster DMA engine (the paper's extended Snitch cluster iDMA).
+//!
+//! A job copies `bytes` from a source address to a (possibly multicast)
+//! destination set. The engine:
+//!
+//! * reads the source through the wide network (AR/R bursts) unless the
+//!   source is the cluster's own L1 (read at line rate locally);
+//! * streams the data out as AXI write bursts — a multicast destination
+//!   produces mask-form AW beats (`aw_user` mask), the fabric forks them;
+//! * respects the AXI 4 KiB rule and a configurable burst length, keeps
+//!   a bounded number of bursts in flight (separately for reads, unicast
+//!   writes and multicast writes — the paper's "configurable maximum
+//!   number" of outstanding same-set multicasts), and pipelines
+//!   read→write through a bounded staging buffer;
+//! * reports completed jobs so the SoC can apply the functional copy.
+
+use std::collections::VecDeque;
+
+use super::config::SocConfig;
+use crate::axi::mcast::AddrSet;
+use crate::axi::types::{split_bursts, ArBeat, AwBeat, AxiLink, Txn, WBeat};
+use crate::sim::Cycle;
+
+/// One DMA transfer request.
+#[derive(Debug, Clone)]
+pub struct DmaJob {
+    pub src: u64,
+    pub dst: AddrSet,
+    pub bytes: u64,
+    /// Workload-visible tag (completion tracking).
+    pub tag: u64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct DmaStats {
+    pub jobs: u64,
+    pub bytes: u64,
+    pub read_beats: u64,
+    pub write_beats: u64,
+    pub aw_issued: u64,
+    pub busy_cycles: u64,
+    pub stall_rx_empty: u64,
+    pub stall_tx_backpressure: u64,
+}
+
+#[derive(Debug)]
+struct Active {
+    job: DmaJob,
+    setup_left: u32,
+    src_local: bool,
+    dst_local: bool,
+    // read side
+    rd_bursts: Vec<(u64, u32)>,
+    rd_next: usize,
+    rd_inflight: u32,
+    rx_bytes: u64,
+    rx_total: u64,
+    // write side
+    wr_bursts: Vec<(u64, u32)>,
+    wr_next: usize,
+    w_stream: VecDeque<(Txn, u32)>,
+    b_pending: u32,
+    // local-to-local copy timer
+    local_left: u64,
+}
+
+/// The engine. One per cluster, attached to the cluster's wide master
+/// port.
+pub struct DmaEngine {
+    pub cluster: usize,
+    beat_bytes: u32,
+    max_burst: u32,
+    setup: u32,
+    rd_out: u32,
+    wr_out: u32,
+    mc_out: u32,
+    buf_bytes: u64,
+    pub queue: VecDeque<DmaJob>,
+    active: Option<Active>,
+    pub completed: Vec<DmaJob>,
+    pub stats: DmaStats,
+}
+
+impl DmaEngine {
+    pub fn new(cluster: usize, cfg: &SocConfig) -> DmaEngine {
+        DmaEngine {
+            cluster,
+            beat_bytes: cfg.wide_bytes,
+            max_burst: cfg.max_burst_beats,
+            setup: cfg.dma_setup,
+            rd_out: cfg.dma_read_outstanding,
+            wr_out: cfg.dma_write_outstanding,
+            mc_out: cfg.dma_mcast_outstanding,
+            buf_bytes: cfg.dma_buffer_bytes,
+            queue: VecDeque::new(),
+            active: None,
+            completed: Vec::new(),
+            stats: DmaStats::default(),
+        }
+    }
+
+    pub fn push(&mut self, job: DmaJob) {
+        assert!(
+            job.bytes > 0 && job.bytes % self.beat_bytes as u64 == 0,
+            "DMA job bytes ({}) must be a positive multiple of the bus width ({})",
+            job.bytes,
+            self.beat_bytes
+        );
+        self.queue.push_back(job);
+    }
+
+    pub fn busy(&self) -> bool {
+        self.active.is_some() || !self.queue.is_empty()
+    }
+
+    /// Is `addr` inside this cluster's own window?
+    fn is_local(&self, addr: u64) -> bool {
+        use super::config::{CLUSTER_BASE, CLUSTER_STRIDE};
+        addr >= CLUSTER_BASE + self.cluster as u64 * CLUSTER_STRIDE
+            && addr < CLUSTER_BASE + (self.cluster as u64 + 1) * CLUSTER_STRIDE
+    }
+
+    fn start(&mut self, job: DmaJob) {
+        let src_local = self.is_local(job.src);
+        let dst_local = job.dst.is_singleton() && self.is_local(job.dst.addr);
+        let rd_bursts = if src_local {
+            Vec::new()
+        } else {
+            split_bursts(job.src, job.bytes, self.beat_bytes, self.max_burst)
+        };
+        let wr_bursts = if dst_local {
+            Vec::new()
+        } else {
+            // offsets relative to the destination base; the mask is
+            // orthogonal to the offset bits (asserted in cluster_set)
+            split_bursts(job.dst.addr, job.bytes, self.beat_bytes, self.max_burst)
+        };
+        let local_left = if src_local && dst_local {
+            job.bytes.div_ceil(self.beat_bytes as u64)
+        } else {
+            0
+        };
+        self.stats.jobs += 1;
+        self.stats.bytes += job.bytes;
+        self.active = Some(Active {
+            setup_left: self.setup,
+            src_local,
+            dst_local,
+            rd_bursts,
+            rd_next: 0,
+            rd_inflight: 0,
+            rx_bytes: 0,
+            rx_total: 0,
+            wr_bursts,
+            wr_next: 0,
+            w_stream: VecDeque::new(),
+            b_pending: 0,
+            local_left,
+            job,
+        });
+    }
+
+    /// One cycle on the cluster's wide master link.
+    pub fn step(&mut self, _cy: Cycle, link: &mut AxiLink, next_txn: &mut Txn) {
+        if self.active.is_none() {
+            if let Some(job) = self.queue.pop_front() {
+                self.start(job);
+            } else {
+                return;
+            }
+        }
+        self.stats.busy_cycles += 1;
+        let beat = self.beat_bytes as u64;
+
+        // ---- responses (always drain) ----
+        {
+            let a = self.active.as_mut().unwrap();
+            if let Some(r) = link.r.front() {
+                // accept R only if staging space (bounded buffer)
+                if a.rx_bytes + beat <= self.buf_bytes {
+                    let r = *r;
+                    link.r.pop();
+                    a.rx_bytes += beat;
+                    a.rx_total += beat;
+                    self.stats.read_beats += 1;
+                    if r.last {
+                        a.rd_inflight -= 1;
+                    }
+                }
+            }
+            while let Some(_b) = link.b.pop() {
+                a.b_pending -= 1;
+            }
+        }
+
+        let a = self.active.as_mut().unwrap();
+        if a.setup_left > 0 {
+            a.setup_left -= 1;
+            return;
+        }
+
+        // ---- pure local copy ----
+        if a.src_local && a.dst_local {
+            if a.local_left > 0 {
+                a.local_left -= 1;
+            }
+            if a.local_left == 0 {
+                let done = self.active.take().unwrap();
+                self.completed.push(done.job);
+            }
+            return;
+        }
+
+        // ---- read side ----
+        if a.src_local {
+            // local SPM read at line rate into staging
+            if a.rx_total < a.job.bytes && a.rx_bytes + beat <= self.buf_bytes {
+                let take = beat.min(a.job.bytes - a.rx_total);
+                a.rx_bytes += take;
+                a.rx_total += take;
+            }
+        } else if a.rd_next < a.rd_bursts.len()
+            && a.rd_inflight < self.rd_out
+            && link.ar.can_push()
+        {
+            let (addr, beats) = a.rd_bursts[a.rd_next];
+            a.rd_next += 1;
+            a.rd_inflight += 1;
+            let txn = *next_txn;
+            *next_txn += 1;
+            link.ar.push(ArBeat {
+                id: self.cluster as u16,
+                addr,
+                beats,
+                beat_bytes: self.beat_bytes,
+                src: 0,
+                txn,
+            });
+        }
+
+        // ---- write side ----
+        if a.dst_local {
+            // local SPM write drains the staging FIFO at line rate
+            a.rx_bytes = a.rx_bytes.saturating_sub(beat);
+        } else {
+            let is_mcast = a.job.dst.count() > 1;
+            let out_cap = if is_mcast { self.mc_out } else { self.wr_out };
+            // bursts with AW issued and B not yet received
+            let outstanding = a.b_pending;
+            if a.wr_next < a.wr_bursts.len() && outstanding < out_cap && link.aw.can_push() {
+                let (addr, beats) = a.wr_bursts[a.wr_next];
+                a.wr_next += 1;
+                let txn = *next_txn;
+                *next_txn += 1;
+                link.aw.push(AwBeat {
+                    id: self.cluster as u16,
+                    dest: AddrSet::new(addr, a.job.dst.mask),
+                    beats,
+                    beat_bytes: self.beat_bytes,
+                    is_mcast,
+                    exclude: None,
+                    src: 0,
+                    txn,
+                });
+                a.w_stream.push_back((txn, beats));
+                a.b_pending += 1;
+                self.stats.aw_issued += 1;
+            }
+            // stream W beats of the oldest issued burst
+            if let Some(&(txn, left)) = a.w_stream.front() {
+                if a.rx_bytes >= beat.min(a.job.bytes) && link.w.can_push() {
+                    a.rx_bytes = a.rx_bytes.saturating_sub(beat);
+                    link.w.push(WBeat {
+                        last: left == 1,
+                        src: 0,
+                        txn,
+                    });
+                    self.stats.write_beats += 1;
+                    if left == 1 {
+                        a.w_stream.pop_front();
+                    } else {
+                        a.w_stream.front_mut().unwrap().1 -= 1;
+                    }
+                } else if a.rx_bytes < beat {
+                    self.stats.stall_rx_empty += 1;
+                } else {
+                    self.stats.stall_tx_backpressure += 1;
+                }
+            }
+        }
+
+        // ---- completion ----
+        let a = self.active.as_ref().unwrap();
+        let reads_done = a.src_local || (a.rd_next == a.rd_bursts.len() && a.rd_inflight == 0);
+        let rx_done = a.src_local || a.rx_total >= a.job.bytes;
+        let writes_done = if a.dst_local {
+            rx_done
+        } else {
+            a.wr_next == a.wr_bursts.len() && a.w_stream.is_empty() && a.b_pending == 0
+        };
+        if reads_done && rx_done && writes_done {
+            let done = self.active.take().unwrap();
+            self.completed.push(done.job);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::golden::SimSlave;
+    use crate::occamy::config::{CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE};
+
+    fn engine() -> DmaEngine {
+        DmaEngine::new(0, &SocConfig::tiny(4))
+    }
+
+    /// Drive the engine against a directly-attached golden slave (no
+    /// xbar) to unit-test burst issue and completion.
+    fn run_against_slave(dma: &mut DmaEngine, cycles: u64) -> SimSlave {
+        let mut slave = SimSlave::new(0);
+        let mut link = AxiLink::new(2);
+        let mut txn = 1;
+        for cy in 0..cycles {
+            dma.step(cy, &mut link, &mut txn);
+            slave.step(cy, &mut link);
+            link.tick();
+            if !dma.busy() {
+                break;
+            }
+        }
+        slave
+    }
+
+    #[test]
+    fn remote_write_job_issues_bursts_and_completes() {
+        let mut dma = engine();
+        // 8 KiB from local L1 to cluster 1: 2 bursts of 64 beats
+        dma.push(DmaJob {
+            src: CLUSTER_BASE, // cluster 0 = local
+            dst: AddrSet::unicast(CLUSTER_BASE + CLUSTER_STRIDE),
+            bytes: 8 * 1024,
+            tag: 1,
+        });
+        let slave = run_against_slave(&mut dma, 5_000);
+        slave.assert_clean();
+        assert_eq!(dma.completed.len(), 1);
+        assert_eq!(dma.stats.aw_issued, 2);
+        assert_eq!(dma.stats.write_beats, 128);
+        assert_eq!(slave.writes.len(), 2);
+    }
+
+    #[test]
+    fn remote_read_job_issues_ars() {
+        let mut dma = engine();
+        // LLC -> local L1: read-only on the network
+        dma.push(DmaJob {
+            src: LLC_BASE,
+            dst: AddrSet::unicast(CLUSTER_BASE + 0x1000),
+            bytes: 4 * 1024,
+            tag: 2,
+        });
+        let slave = run_against_slave(&mut dma, 5_000);
+        assert_eq!(dma.completed.len(), 1);
+        assert_eq!(slave.reads.len(), 1); // one 64-beat burst
+        assert_eq!(dma.stats.read_beats, 64);
+        assert_eq!(dma.stats.aw_issued, 0, "local dst needs no network write");
+    }
+
+    #[test]
+    fn mcast_write_uses_mask_and_bounded_outstanding() {
+        let mut dma = engine();
+        let dst = AddrSet::new(CLUSTER_BASE + CLUSTER_STRIDE, 0); // placeholder
+        let _ = dst;
+        let mc = SocConfig::tiny(4).cluster_set(0, 4, 0x2000);
+        dma.push(DmaJob {
+            src: CLUSTER_BASE + 0x1000, // local (cluster 0 window)
+            dst: mc,
+            bytes: 16 * 1024,
+            tag: 3,
+        });
+        let slave = run_against_slave(&mut dma, 10_000);
+        slave.assert_clean();
+        assert_eq!(dma.completed.len(), 1);
+        // 16 KiB / 4 KiB page = 4 bursts, each with the multicast mask
+        assert_eq!(dma.stats.aw_issued, 4);
+        for w in &slave.writes {
+            assert_eq!(w.beats, 64);
+        }
+    }
+
+    #[test]
+    fn local_copy_costs_line_rate_cycles() {
+        let mut dma = engine();
+        dma.push(DmaJob {
+            src: CLUSTER_BASE,
+            dst: AddrSet::unicast(CLUSTER_BASE + 0x8000),
+            bytes: 4096,
+            tag: 4,
+        });
+        let mut link = AxiLink::new(2);
+        let mut txn = 1;
+        let mut cycles = 0;
+        for cy in 0..1_000 {
+            dma.step(cy, &mut link, &mut txn);
+            link.tick();
+            cycles = cy;
+            if !dma.busy() {
+                break;
+            }
+        }
+        assert_eq!(dma.completed.len(), 1);
+        // setup (8) + 64 line cycles, small slack
+        assert!(cycles >= 64 && cycles < 64 + 16, "cycles={cycles}");
+    }
+
+    #[test]
+    fn jobs_serialise_with_setup_gap() {
+        let mut dma = engine();
+        for i in 0..3 {
+            dma.push(DmaJob {
+                src: CLUSTER_BASE,
+                dst: AddrSet::unicast(CLUSTER_BASE + CLUSTER_STRIDE + i * 0x1000),
+                bytes: 1024,
+                tag: i,
+            });
+        }
+        let slave = run_against_slave(&mut dma, 10_000);
+        slave.assert_clean();
+        assert_eq!(dma.completed.len(), 3);
+        assert_eq!(
+            dma.completed.iter().map(|j| j.tag).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "jobs must complete in issue order"
+        );
+    }
+}

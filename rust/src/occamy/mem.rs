@@ -1,0 +1,168 @@
+//! Functional memory: the *data* half of the simulation.
+//!
+//! The cycle-level fabric moves metadata beats; bytes are materialised
+//! here when a DMA job completes (or a compute op runs). This split
+//! keeps the hot loop allocation-free while the end-to-end example still
+//! validates bit-exact matmul results through every data-movement path.
+
+use super::config::{SocConfig, CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE, MAILBOX_OFFSET};
+
+/// Where a global address lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    /// Cluster SPM (cluster index, byte offset).
+    L1(usize, u64),
+    /// Cluster mailbox region (cluster index).
+    Mailbox(usize),
+    /// LLC (byte offset).
+    Llc(u64),
+    Unmapped,
+}
+
+/// The functional memory of the whole SoC.
+pub struct SocMem {
+    pub l1: Vec<Vec<u8>>,
+    pub llc: Vec<u8>,
+    l1_bytes: u64,
+    llc_bytes: u64,
+    n_clusters: usize,
+}
+
+impl SocMem {
+    pub fn new(cfg: &SocConfig) -> SocMem {
+        SocMem {
+            l1: (0..cfg.n_clusters)
+                .map(|_| vec![0u8; cfg.l1_bytes as usize])
+                .collect(),
+            llc: vec![0u8; cfg.llc_bytes as usize],
+            l1_bytes: cfg.l1_bytes,
+            llc_bytes: cfg.llc_bytes,
+            n_clusters: cfg.n_clusters,
+        }
+    }
+
+    /// Resolve a global address.
+    pub fn resolve(&self, addr: u64) -> Loc {
+        if addr >= LLC_BASE && addr < LLC_BASE + self.llc_bytes {
+            return Loc::Llc(addr - LLC_BASE);
+        }
+        if addr >= CLUSTER_BASE {
+            let rel = addr - CLUSTER_BASE;
+            let cl = (rel / CLUSTER_STRIDE) as usize;
+            let off = rel % CLUSTER_STRIDE;
+            if cl < self.n_clusters {
+                if off >= MAILBOX_OFFSET {
+                    return Loc::Mailbox(cl);
+                }
+                if off < self.l1_bytes {
+                    return Loc::L1(cl, off);
+                }
+            }
+        }
+        Loc::Unmapped
+    }
+
+    /// Read `len` bytes from a global address (must be fully mapped and
+    /// not cross a region boundary).
+    pub fn read(&self, addr: u64, len: usize) -> &[u8] {
+        match self.resolve(addr) {
+            Loc::L1(cl, off) => &self.l1[cl][off as usize..off as usize + len],
+            Loc::Llc(off) => &self.llc[off as usize..off as usize + len],
+            other => panic!("read from {addr:#x} ({other:?})"),
+        }
+    }
+
+    /// Write bytes at a global address.
+    pub fn write(&mut self, addr: u64, data: &[u8]) {
+        match self.resolve(addr) {
+            Loc::L1(cl, off) => {
+                self.l1[cl][off as usize..off as usize + data.len()].copy_from_slice(data)
+            }
+            Loc::Llc(off) => {
+                self.llc[off as usize..off as usize + data.len()].copy_from_slice(data)
+            }
+            Loc::Mailbox(_) => { /* mailbox writes carry no data payload */ }
+            Loc::Unmapped => panic!("write to unmapped {addr:#x}"),
+        }
+    }
+
+    /// The functional effect of a (possibly multicast) DMA copy: read
+    /// `bytes` from `src`, write to every address in `dsts`.
+    pub fn dma_copy(&mut self, src: u64, dsts: &[u64], bytes: u64) {
+        let data = self.read(src, bytes as usize).to_vec();
+        for &d in dsts {
+            self.write(d, &data);
+        }
+    }
+
+    /// Typed helpers for the matmul workload (row-major f64).
+    pub fn write_f64(&mut self, addr: u64, vals: &[f64]) {
+        let mut buf = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(addr, &buf);
+    }
+
+    pub fn read_f64(&self, addr: u64, n: usize) -> Vec<f64> {
+        let raw = self.read(addr, n * 8);
+        raw.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem() -> SocMem {
+        SocMem::new(&SocConfig::tiny(4))
+    }
+
+    #[test]
+    fn resolve_regions() {
+        let m = mem();
+        assert_eq!(m.resolve(CLUSTER_BASE), Loc::L1(0, 0));
+        assert_eq!(
+            m.resolve(CLUSTER_BASE + CLUSTER_STRIDE + 0x40),
+            Loc::L1(1, 0x40)
+        );
+        assert_eq!(
+            m.resolve(CLUSTER_BASE + MAILBOX_OFFSET),
+            Loc::Mailbox(0)
+        );
+        assert_eq!(m.resolve(LLC_BASE + 16), Loc::Llc(16));
+        assert_eq!(m.resolve(0x0), Loc::Unmapped);
+        // beyond configured cluster count
+        assert_eq!(m.resolve(CLUSTER_BASE + 10 * CLUSTER_STRIDE), Loc::Unmapped);
+    }
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut m = mem();
+        m.write(LLC_BASE + 64, &[1, 2, 3, 4]);
+        assert_eq!(m.read(LLC_BASE + 64, 4), &[1, 2, 3, 4]);
+        m.write(CLUSTER_BASE + 8, &[9, 9]);
+        assert_eq!(m.l1[0][8..10], [9, 9]);
+    }
+
+    #[test]
+    fn dma_copy_multicast() {
+        let mut m = mem();
+        m.write(LLC_BASE, &[7u8; 32]);
+        let dsts: Vec<u64> = (0..4).map(|i| CLUSTER_BASE + i * CLUSTER_STRIDE).collect();
+        m.dma_copy(LLC_BASE, &dsts, 32);
+        for i in 0..4 {
+            assert_eq!(&m.l1[i][..32], &[7u8; 32]);
+        }
+    }
+
+    #[test]
+    fn f64_helpers() {
+        let mut m = mem();
+        let vals = [1.5f64, -2.25, 1e-300];
+        m.write_f64(CLUSTER_BASE + 128, &vals);
+        assert_eq!(m.read_f64(CLUSTER_BASE + 128, 3), vals);
+    }
+}

@@ -1,0 +1,36 @@
+//! Occamy SoC model (paper §II-B, fig. 2c).
+//!
+//! A configurable many-core accelerator: `n_clusters` Snitch-like
+//! compute clusters (8 FPU cores + 1 DMA each — the paper's 288-core
+//! instance is 32 clusters × 9), each with a 128 KiB L1 scratchpad and a
+//! DMA engine, organised into groups of 4. Two on-chip networks connect
+//! the clusters, each a two-level hierarchy of the multicast crossbar
+//! from [`crate::axi`]:
+//!
+//! * the **wide** 512-bit network carries DMA data (and the i-cache in
+//!   the real chip), rooted at the LLC;
+//! * the **narrow** 64-bit network carries synchronisation and control
+//!   stores from the cores' LSUs, including multicast interrupts.
+//!
+//! Clusters are mapped at `0x0100_0000` with a `0x4_0000` stride —
+//! power-of-two sized, size-aligned regions satisfying the multicast
+//! rule constraints, so any power-of-two cluster group is addressable
+//! with one mask-form request.
+//!
+//! Timing is modelled by the crossbar fabric; *functional* data movement
+//! happens in [`mem::SocMem`] when a DMA job completes, and compute
+//! numerics run through a [`soc::ComputeHandler`] (the PJRT runtime in
+//! the end-to-end example).
+
+pub mod cluster;
+pub mod config;
+pub mod dma;
+pub mod mem;
+pub mod noc;
+pub mod soc;
+pub mod sync;
+
+pub use cluster::{ClState, Cluster, Cmd};
+pub use config::SocConfig;
+pub use mem::SocMem;
+pub use soc::{ComputeHandler, NopCompute, Soc};

@@ -1,0 +1,371 @@
+//! Full-system assembly: clusters + two networks + LLC + barrier unit +
+//! functional memory, with the run loop and watchdog.
+
+use super::cluster::{Cluster, Cmd, ComputeEvent};
+use super::config::SocConfig;
+use super::mem::SocMem;
+use super::noc::{build_network, NetKind, Network};
+use super::sync::BarrierUnit;
+use crate::axi::golden::SimSlave;
+use crate::axi::types::AxiLink;
+use crate::sim::engine::{Engine, SimError, StepResult, Watchdog};
+use crate::sim::Cycle;
+
+/// Functional compute hook: applies the numeric effect of a cluster's
+/// `Compute` command (op, arg) to the functional memory. The end-to-end
+/// example plugs the PJRT runtime in here; unit tests use [`NopCompute`].
+pub trait ComputeHandler {
+    fn exec(&mut self, cluster: usize, op: u32, arg: u64, mem: &mut SocMem);
+}
+
+/// No-op handler (timing-only simulations, e.g. the microbenchmark).
+pub struct NopCompute;
+
+impl ComputeHandler for NopCompute {
+    fn exec(&mut self, _cluster: usize, _op: u32, _arg: u64, _mem: &mut SocMem) {}
+}
+
+/// The simulated SoC.
+pub struct Soc {
+    pub cfg: SocConfig,
+    pub pool: Vec<AxiLink>,
+    pub wide: Network,
+    pub narrow: Network,
+    pub clusters: Vec<Cluster>,
+    pub llc: SimSlave,
+    pub barrier: BarrierUnit,
+    pub mem: SocMem,
+    pub next_txn: u64,
+    pub cycles: Cycle,
+    /// Per-link "visible beats at the last clock edge" (idle-skips).
+    link_active: Vec<bool>,
+    /// Links possibly pushed/popped this cycle (only these need a
+    /// clock edge — everything else is provably unchanged).
+    link_dirty: Vec<bool>,
+}
+
+impl Soc {
+    pub fn new(cfg: SocConfig) -> Soc {
+        let mut pool = Vec::new();
+        let wide = build_network(&cfg, &mut pool, NetKind::Wide);
+        let narrow = build_network(&cfg, &mut pool, NetKind::Narrow);
+        let clusters = (0..cfg.n_clusters).map(|i| Cluster::new(i, &cfg)).collect();
+        let mut llc = SimSlave::new(usize::MAX);
+        llc.b_lat = cfg.llc_lat;
+        llc.r_lat = cfg.llc_lat;
+        llc.r_gap = cfg.llc_burst_gap;
+        let barrier = BarrierUnit::new(&cfg);
+        let mem = SocMem::new(&cfg);
+        let link_active = vec![true; pool.len()];
+        let link_dirty = vec![true; pool.len()];
+        Soc {
+            cfg,
+            pool,
+            wide,
+            narrow,
+            clusters,
+            llc,
+            barrier,
+            mem,
+            next_txn: 1,
+            cycles: 0,
+            link_active,
+            link_dirty,
+        }
+    }
+
+    /// Load per-cluster programs (one `Vec<Cmd>` per cluster; empty for
+    /// idle clusters).
+    pub fn load_programs(&mut self, progs: Vec<Vec<Cmd>>) {
+        assert_eq!(progs.len(), self.clusters.len());
+        for (c, p) in self.clusters.iter_mut().zip(progs) {
+            c.load(p);
+        }
+    }
+
+    /// One clock cycle; compute events are dispatched through `handler`.
+    pub fn step(&mut self, handler: &mut dyn ComputeHandler) {
+        let cy = self.cycles;
+        let mut events: Vec<ComputeEvent> = Vec::new();
+        self.link_dirty.fill(false);
+
+        // clusters (sources/sinks first — consumers of staged beats)
+        for i in 0..self.clusters.len() {
+            let wm = self.wide.cluster_m[i];
+            let ws = self.wide.cluster_s[i];
+            let nm = self.narrow.cluster_m[i];
+            let ns = self.narrow.cluster_s[i];
+            // idle-skip: a finished, quiescent cluster only needs
+            // stepping when one of its links carries beats (§Perf)
+            if self.clusters[i].quiescent()
+                && !self.link_active[wm]
+                && !self.link_active[ws]
+                && !self.link_active[nm]
+                && !self.link_active[ns]
+            {
+                continue;
+            }
+            // indices are pairwise distinct by construction
+            let [wml, wsl, nml, nsl] = self
+                .pool
+                .get_disjoint_mut([wm, ws, nm, ns])
+                .expect("distinct link indices");
+            if let Some(ev) = self.clusters[i].step(
+                cy,
+                &self.cfg,
+                wml,
+                wsl,
+                nml,
+                nsl,
+                &mut self.next_txn,
+            ) {
+                events.push(ev);
+            }
+            self.link_dirty[wm] = true;
+            self.link_dirty[ws] = true;
+            self.link_dirty[nm] = true;
+            self.link_dirty[ns] = true;
+        }
+        // DMA completions → functional copies
+        for i in 0..self.clusters.len() {
+            // tags were recorded inside step; the functional copy for a
+            // completed job is applied here (single borrow of mem)
+            while let Some(job) = self.clusters[i].pending_copies.pop() {
+                let dsts = job.dst.enumerate();
+                self.mem.dma_copy(job.src, &dsts, job.bytes);
+            }
+        }
+
+        // LLC and barrier peripherals
+        self.llc.step(cy, &mut self.pool[self.wide.service_s]);
+        self.link_dirty[self.wide.service_s] = true;
+        {
+            let bs = self.narrow.service_s;
+            let bm = self.narrow.ext_m.unwrap();
+            let [sl, ml] = self.pool.get_disjoint_mut([bs, bm]).unwrap();
+            self.barrier.step(cy, sl, ml, &mut self.next_txn);
+            self.link_dirty[bs] = true;
+            self.link_dirty[bm] = true;
+        }
+
+        // fabrics (skipping idle crossbars via the activity hints)
+        for net in [&mut self.wide, &mut self.narrow] {
+            for x in &mut net.xbars {
+                let hint = x.maybe_busy
+                    || x.m_links.iter().any(|&l| self.link_active[l])
+                    || x.s_links.iter().any(|&l| self.link_active[l]);
+                if hint {
+                    x.step(&mut self.pool);
+                    for &l in x.m_links.iter().chain(&x.s_links) {
+                        self.link_dirty[l] = true;
+                    }
+                }
+            }
+        }
+
+        // clock edge on touched links only; record visibility cache-hot
+        for i in 0..self.pool.len() {
+            if self.link_dirty[i] || self.link_active[i] {
+                let l = &mut self.pool[i];
+                l.tick();
+                self.link_active[i] = l.any_visible();
+            }
+        }
+        self.cycles += 1;
+
+        for ev in events {
+            handler.exec(ev.cluster, ev.op, ev.arg, &mut self.mem);
+        }
+    }
+
+    /// Observable progress (for the deadlock watchdog).
+    pub fn progress(&self) -> u64 {
+        let links: u64 = self.pool.iter().map(|l| l.moved()).sum();
+        let cl: u64 = self.clusters.iter().map(|c| c.progress).sum();
+        links + cl
+    }
+
+    pub fn all_done(&self) -> bool {
+        // cached xbar busy bits (updated whenever an xbar steps) make
+        // this per-cycle check cheap (§Perf)
+        self.clusters.iter().all(|c| c.done())
+            && self.wide.xbars.iter().all(|x| !x.maybe_busy)
+            && self.narrow.xbars.iter().all(|x| !x.maybe_busy)
+            && !self.barrier.busy()
+            && self.llc.idle()
+    }
+
+    /// Run to completion of all cluster programs.
+    pub fn run(
+        &mut self,
+        handler: &mut dyn ComputeHandler,
+        watchdog: Watchdog,
+    ) -> Result<Cycle, SimError> {
+        let mut eng = Engine::new(watchdog);
+        eng.now = self.cycles;
+        // progress is sampled coarsely: summing every link counter each
+        // cycle costs more than stepping an idle fabric (§Perf), and the
+        // watchdog thresholds are ≥ thousands of cycles anyway
+        let mut cached_progress = 0u64;
+        let res = eng.run(|cy| {
+            self.step(handler);
+            if cy % 64 == 0 {
+                cached_progress = self.progress();
+            }
+            if self.all_done() {
+                StepResult::Done
+            } else {
+                StepResult::Running {
+                    progress: cached_progress,
+                }
+            }
+        });
+        res
+    }
+
+    /// Convenience: run with default watchdog.
+    pub fn run_default(&mut self, handler: &mut dyn ComputeHandler) -> Result<Cycle, SimError> {
+        self.run(
+            handler,
+            Watchdog {
+                stall_cycles: 200_000,
+                max_cycles: 500_000_000,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::mcast::AddrSet;
+    use crate::occamy::config::LLC_BASE;
+
+    #[test]
+    fn empty_programs_finish_immediately() {
+        let mut soc = Soc::new(SocConfig::tiny(4));
+        let progs = vec![Vec::new(); 4];
+        soc.load_programs(progs);
+        let cy = soc.run_default(&mut NopCompute).unwrap();
+        assert!(cy < 10, "idle soc should finish fast, took {cy}");
+    }
+
+    #[test]
+    fn single_cluster_reads_llc() {
+        let mut soc = Soc::new(SocConfig::tiny(4));
+        soc.mem.write(LLC_BASE, &[0xAB; 256]);
+        let mut progs = vec![Vec::new(); 4];
+        progs[0] = vec![
+            Cmd::Dma {
+                src: LLC_BASE,
+                dst: AddrSet::unicast(soc.cfg.cluster_base(0) + 0x100),
+                bytes: 256,
+                tag: 1,
+            },
+            Cmd::WaitDma,
+        ];
+        soc.load_programs(progs);
+        soc.run_default(&mut NopCompute).unwrap();
+        assert_eq!(soc.mem.l1[0][0x100..0x100 + 256], [0xAB; 256]);
+        assert_eq!(soc.clusters[0].dma_done_tags, vec![1]);
+    }
+
+    #[test]
+    fn cluster_to_cluster_same_group_stays_local() {
+        let mut soc = Soc::new(SocConfig::tiny(4));
+        soc.mem.l1[0][..64].copy_from_slice(&[7u8; 64]);
+        let mut progs = vec![Vec::new(); 4];
+        progs[0] = vec![
+            Cmd::Dma {
+                src: soc.cfg.cluster_base(0),
+                dst: AddrSet::unicast(soc.cfg.cluster_base(1)),
+                bytes: 64,
+                tag: 1,
+            },
+            Cmd::WaitDma,
+        ];
+        soc.load_programs(progs);
+        soc.run_default(&mut NopCompute).unwrap();
+        assert_eq!(soc.mem.l1[1][..64], [7u8; 64]);
+        // nothing crossed the top xbar
+        assert_eq!(soc.wide.top().stats.w_beats_out, 0);
+    }
+
+    #[test]
+    fn mcast_write_reaches_all_clusters_once() {
+        let mut soc = Soc::new(SocConfig::tiny(8));
+        soc.mem.l1[0][..128].copy_from_slice(&[5u8; 128]);
+        let dst = soc.cfg.cluster_set(0, 8, 0x1000);
+        let mut progs = vec![Vec::new(); 8];
+        progs[0] = vec![
+            Cmd::Dma {
+                src: soc.cfg.cluster_base(0),
+                dst,
+                bytes: 128,
+                tag: 9,
+            },
+            Cmd::WaitDma,
+        ];
+        soc.load_programs(progs);
+        soc.run_default(&mut NopCompute).unwrap();
+        for c in 0..8 {
+            assert_eq!(
+                soc.mem.l1[c][0x1000..0x1080],
+                [5u8; 128],
+                "cluster {c} missing mcast data"
+            );
+        }
+        // exactly one mcast AW observed at the source group xbar
+        assert!(soc.wide.xbars[0].stats.aw_mcast >= 1);
+    }
+
+    #[test]
+    fn barrier_synchronises_all_clusters() {
+        let mut soc = Soc::new(SocConfig::tiny(8));
+        let progs = (0..8)
+            .map(|i| {
+                vec![
+                    Cmd::Delay {
+                        cycles: (i as u64) * 20, // staggered arrivals
+                    },
+                    Cmd::Barrier,
+                    Cmd::Compute {
+                        macs: 8,
+                        op: 1,
+                        arg: 0,
+                    },
+                ]
+            })
+            .collect();
+        soc.load_programs(progs);
+        struct Count(u32);
+        impl ComputeHandler for Count {
+            fn exec(&mut self, _c: usize, _op: u32, _a: u64, _m: &mut SocMem) {
+                self.0 += 1;
+            }
+        }
+        let mut h = Count(0);
+        soc.run_default(&mut h).unwrap();
+        assert_eq!(h.0, 8, "all clusters passed the barrier and computed");
+        assert_eq!(soc.barrier.releases, 1);
+    }
+
+    #[test]
+    fn narrow_mcast_barrier_faster_than_unicast_train() {
+        let run = |narrow_mcast: bool| -> u64 {
+            let mut cfg = SocConfig::tiny(32);
+            cfg.clusters_per_group = 4;
+            cfg.narrow_mcast = narrow_mcast;
+            let mut soc = Soc::new(cfg);
+            let progs = (0..32).map(|_| vec![Cmd::Barrier]).collect();
+            soc.load_programs(progs);
+            soc.run_default(&mut NopCompute).unwrap()
+        };
+        let with_mcast = run(true);
+        let without = run(false);
+        assert!(
+            with_mcast < without,
+            "mcast barrier ({with_mcast}) should beat unicast train ({without})"
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! Synchronisation peripheral on the narrow network.
+//!
+//! Clusters notify the barrier with a 1-beat narrow write; once all
+//! participants arrived, the unit releases them with an interrupt write
+//! to every mailbox — a single **multicast** write when the narrow
+//! network has the paper's extension (`narrow_mcast`), or a serial train
+//! of unicast writes otherwise (the baseline the paper's multicast
+//! interrupts accelerate).
+
+use std::collections::VecDeque;
+
+use super::config::SocConfig;
+use crate::axi::mcast::AddrSet;
+use crate::axi::types::{AwBeat, AxiLink, Txn, WBeat};
+use crate::sim::Cycle;
+
+pub struct BarrierUnit {
+    /// Arrivals so far (single barrier id is enough for the workloads;
+    /// re-arming is automatic after release).
+    pub arrived: u32,
+    pub participants: u32,
+    /// Release writes queued (destination sets).
+    release_q: VecDeque<AddrSet>,
+    /// In-flight release writes awaiting B.
+    pub b_pending: u32,
+    w_pending: Option<Txn>,
+    mbox_w: VecDeque<(Txn, u32)>,
+    pub releases: u64,
+    narrow_bytes: u32,
+    use_mcast: bool,
+    all_mailboxes: AddrSet,
+    mailbox_addrs: Vec<u64>,
+}
+
+impl BarrierUnit {
+    pub fn new(cfg: &SocConfig) -> BarrierUnit {
+        BarrierUnit {
+            arrived: 0,
+            participants: cfg.n_clusters as u32,
+            release_q: VecDeque::new(),
+            b_pending: 0,
+            w_pending: None,
+            mbox_w: VecDeque::new(),
+            releases: 0,
+            narrow_bytes: cfg.narrow_bytes,
+            use_mcast: cfg.narrow_mcast,
+            all_mailboxes: cfg.all_mailboxes(),
+            mailbox_addrs: (0..cfg.n_clusters).map(|i| cfg.mailbox_addr(i)).collect(),
+        }
+    }
+
+    /// One cycle: `slave` is the link clusters write to; `master` is the
+    /// unit's own port into the narrow top crossbar for release IRQs.
+    pub fn step(
+        &mut self,
+        _cy: Cycle,
+        slave: &mut AxiLink,
+        master: &mut AxiLink,
+        next_txn: &mut Txn,
+    ) {
+        // collect arrivals
+        if let Some(aw) = slave.aw.pop() {
+            self.mbox_w.push_back((aw.txn, aw.beats));
+        }
+        if let Some(w) = slave.w.pop() {
+            let (txn, left) = self.mbox_w.front_mut().expect("barrier W without AW");
+            *left -= 1;
+            debug_assert!(w.last == (*left == 0));
+            if *left == 0 {
+                let txn = *txn;
+                self.mbox_w.pop_front();
+                if slave.b.can_push() {
+                    slave.b.push(crate::axi::types::BBeat {
+                        id: 0,
+                        resp: crate::axi::types::Resp::Okay,
+                        txn,
+                    });
+                }
+                self.arrived += 1;
+                if self.arrived == self.participants {
+                    self.arrived = 0;
+                    self.releases += 1;
+                    if self.use_mcast {
+                        self.release_q.push_back(self.all_mailboxes);
+                    } else {
+                        for &a in &self.mailbox_addrs {
+                            self.release_q.push_back(AddrSet::unicast(a));
+                        }
+                    }
+                }
+            }
+        }
+        // drain release-write Bs
+        while master.b.pop().is_some() {
+            self.b_pending -= 1;
+        }
+        // send W of the in-flight release
+        if let Some(txn) = self.w_pending {
+            if master.w.can_push() {
+                master.w.push(WBeat {
+                    last: true,
+                    src: 0,
+                    txn,
+                });
+                self.w_pending = None;
+            }
+            return;
+        }
+        // issue next release write
+        if let Some(dst) = self.release_q.front().copied() {
+            if master.aw.can_push() && master.w.can_push() {
+                self.release_q.pop_front();
+                let txn = *next_txn;
+                *next_txn += 1;
+                master.aw.push(AwBeat {
+                    id: 0,
+                    dest: dst,
+                    beats: 1,
+                    beat_bytes: self.narrow_bytes,
+                    is_mcast: dst.count() > 1,
+                    exclude: None,
+                    src: 0,
+                    txn,
+                });
+                master.w.push(WBeat {
+                    last: true,
+                    src: 0,
+                    txn,
+                });
+                self.b_pending += 1;
+            }
+        }
+    }
+
+    pub fn busy(&self) -> bool {
+        !self.release_q.is_empty() || self.b_pending > 0 || self.w_pending.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrive(link: &mut AxiLink, txn: Txn) {
+        link.aw.push(AwBeat {
+            id: 0,
+            dest: AddrSet::unicast(super::super::config::BARRIER_BASE),
+            beats: 1,
+            beat_bytes: 8,
+            is_mcast: false,
+            exclude: None,
+            src: 0,
+            txn,
+        });
+        link.w.push(WBeat {
+            last: true,
+            src: 0,
+            txn,
+        });
+    }
+
+    #[test]
+    fn releases_with_single_mcast_when_enabled() {
+        let cfg = SocConfig::tiny(4);
+        let mut b = BarrierUnit::new(&cfg);
+        let mut slave = AxiLink::new(8);
+        let mut master = AxiLink::new(8);
+        let mut txn = 100;
+        for i in 0..4 {
+            arrive(&mut slave, i);
+        }
+        for cy in 0..40 {
+            slave.tick();
+            master.tick();
+            b.step(cy, &mut slave, &mut master, &mut txn);
+        }
+        assert_eq!(b.releases, 1);
+        // exactly one multicast AW went out
+        assert_eq!(master.aw.pushed, 1);
+    }
+
+    #[test]
+    fn releases_with_unicast_train_when_disabled() {
+        let mut cfg = SocConfig::tiny(4);
+        cfg.narrow_mcast = false;
+        let mut b = BarrierUnit::new(&cfg);
+        let mut slave = AxiLink::new(8);
+        let mut master = AxiLink::new(8);
+        let mut txn = 100;
+        for i in 0..4 {
+            arrive(&mut slave, i);
+        }
+        for cy in 0..200 {
+            slave.tick();
+            master.tick();
+            b.step(cy, &mut slave, &mut master, &mut txn);
+            // sink Bs so b_pending drains
+            while let Some(aw) = master.aw.pop() {
+                master.b.push(crate::axi::types::BBeat {
+                    id: 0,
+                    resp: crate::axi::types::Resp::Okay,
+                    txn: aw.txn,
+                });
+            }
+            let _ = master.w.pop();
+        }
+        assert_eq!(b.releases, 1);
+        assert_eq!(master.aw.popped, 4, "one unicast per cluster");
+        assert!(!b.busy());
+    }
+
+    #[test]
+    fn rearms_for_next_barrier() {
+        let cfg = SocConfig::tiny(2);
+        let mut b = BarrierUnit::new(&cfg);
+        let mut slave = AxiLink::new(8);
+        let mut master = AxiLink::new(8);
+        let mut txn = 10;
+        for round in 0..3u64 {
+            arrive(&mut slave, round * 2);
+            arrive(&mut slave, round * 2 + 1);
+            for cy in 0..50 {
+                slave.tick();
+                master.tick();
+                b.step(cy, &mut slave, &mut master, &mut txn);
+                while let Some(aw) = master.aw.pop() {
+                    master.b.push(crate::axi::types::BBeat {
+                        id: 0,
+                        resp: crate::axi::types::Resp::Okay,
+                        txn: aw.txn,
+                    });
+                }
+                let _ = master.w.pop();
+            }
+        }
+        assert_eq!(b.releases, 3);
+    }
+}

@@ -1,0 +1,123 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into graph metadata.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata of one lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Argument shapes (row-major dims) and dtype strings ("f32"/"f64").
+    pub args: Vec<(Vec<usize>, String)>,
+}
+
+/// A parsed artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub n: usize,
+    pub graphs: Vec<GraphMeta>,
+}
+
+impl ArtifactDir {
+    /// Load and validate the manifest.
+    pub fn open(dir: &Path) -> Result<ArtifactDir> {
+        let manifest_path = dir.join("manifest.json");
+        let text = fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let n = j
+            .get("n")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest missing 'n'"))? as usize;
+        let graphs_obj = j
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'graphs'"))?;
+        let mut graphs = Vec::new();
+        for (name, g) in graphs_obj {
+            let file = g
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("graph {name}: missing file"))?;
+            let file = dir.join(file);
+            if !file.exists() {
+                return Err(anyhow!("artifact {file:?} missing (run `make artifacts`)"));
+            }
+            let mut args = Vec::new();
+            for a in g
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("graph {name}: missing args"))?
+            {
+                let shape: Vec<usize> = a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("bad shape"))?
+                    .iter()
+                    .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                    .collect();
+                let dtype = a
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f64")
+                    .to_string();
+                args.push((shape, dtype));
+            }
+            graphs.push(GraphMeta {
+                name: name.clone(),
+                file,
+                args,
+            });
+        }
+        Ok(ArtifactDir {
+            dir: dir.to_path_buf(),
+            n,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Option<&GraphMeta> {
+        self.graphs.iter().find(|g| g.name == name)
+    }
+
+    /// The default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_reports_missing_dir() {
+        let err = ArtifactDir::open(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = ArtifactDir::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(a.n, 256);
+        let tile = a.graph("tile_f64").expect("tile_f64 graph");
+        assert_eq!(
+            tile.args.iter().map(|(s, _)| s.clone()).collect::<Vec<_>>(),
+            vec![vec![8, 256], vec![256, 16], vec![8, 16]]
+        );
+        assert!(a.graph("matmul_f64").is_some());
+        assert!(a.graph("rowblock_f32").is_some());
+    }
+}

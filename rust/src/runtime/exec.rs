@@ -1,0 +1,224 @@
+//! Executable loading + typed execution on the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::ArtifactDir;
+use crate::workloads::matmul::TileExec;
+
+/// A compiled graph ready to run.
+pub struct LoadedGraph {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// The PJRT runtime: one CPU client + all compiled artifacts.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    graphs: HashMap<String, LoadedGraph>,
+    pub artifacts: ArtifactDir,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir`, compiling each HLO-text module on
+    /// the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let artifacts = ArtifactDir::open(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut graphs = HashMap::new();
+        for g in &artifacts.graphs {
+            let proto = xla::HloModuleProto::from_text_file(
+                g.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", g.file))?,
+            )
+            .map_err(|e| anyhow!("parsing {:?}: {e}", g.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", g.name))?;
+            graphs.insert(
+                g.name.clone(),
+                LoadedGraph {
+                    name: g.name.clone(),
+                    exe,
+                    arg_shapes: g.args.iter().map(|(s, _)| s.clone()).collect(),
+                },
+            );
+        }
+        Ok(Runtime {
+            client,
+            graphs,
+            artifacts,
+        })
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.graphs.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute an f64 graph: `args` are row-major buffers with shapes
+    /// matching the manifest. Returns the flattened f64 output.
+    pub fn exec_f64(&self, name: &str, args: &[&[f64]]) -> Result<Vec<f64>> {
+        let g = self
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown graph '{name}'"))?;
+        if args.len() != g.arg_shapes.len() {
+            return Err(anyhow!(
+                "graph {name}: {} args given, {} expected",
+                args.len(),
+                g.arg_shapes.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (buf, shape) in args.iter().zip(&g.arg_shapes) {
+            let numel: usize = shape.iter().product();
+            if buf.len() != numel {
+                return Err(anyhow!(
+                    "graph {name}: arg size {} != shape {:?}",
+                    buf.len(),
+                    shape
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e}"))?;
+            literals.push(lit);
+        }
+        let result = g
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = out.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        out.to_vec::<f64>()
+            .map_err(|e| anyhow!("to_vec {name}: {e}"))
+    }
+
+    /// Convenience: full 256×256 matmul oracle (used by the e2e example
+    /// to validate the simulated result end to end).
+    pub fn matmul_f64(&self, a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        self.exec_f64("matmul_f64", &[a, b])
+    }
+}
+
+/// [`TileExec`] backed by the AOT JAX/Pallas `tile_f64` artifact: one
+/// steady-state cluster iteration per call. Shapes other than the
+/// artifact's (the paper geometry) fall back to the Rust kernel — the
+/// artifact is shape-specialised, exactly like a real AOT deployment.
+pub struct PjrtTileExec<'r> {
+    pub rt: &'r Runtime,
+    pub calls: u64,
+    pub fallback_calls: u64,
+    tile_shape: (usize, usize, usize),
+}
+
+impl<'r> PjrtTileExec<'r> {
+    pub fn new(rt: &'r Runtime) -> Result<PjrtTileExec<'r>> {
+        let g = rt
+            .graphs
+            .get("tile_f64")
+            .ok_or_else(|| anyhow!("tile_f64 artifact missing"))?;
+        let m = g.arg_shapes[2][0];
+        let n = g.arg_shapes[2][1];
+        let k = g.arg_shapes[0][1];
+        Ok(PjrtTileExec {
+            rt,
+            calls: 0,
+            fallback_calls: 0,
+            tile_shape: (m, n, k),
+        })
+    }
+}
+
+impl TileExec for PjrtTileExec<'_> {
+    fn tile(&mut self, a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+        if (m, n, k) == self.tile_shape {
+            // c_in is the current accumulator; the graph returns
+            // c_in + a @ b
+            let c_in = c.to_vec();
+            let out = self
+                .rt
+                .exec_f64("tile_f64", &[a, b, &c_in])
+                .context("PJRT tile execution")
+                .unwrap();
+            c.copy_from_slice(&out);
+            self.calls += 1;
+        } else {
+            crate::workloads::matmul::RustTileExec.tile(a, b, c, m, n, k);
+            self.fallback_calls += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = ArtifactDir::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn loads_all_graphs() {
+        let Some(rt) = runtime() else { return };
+        let names = rt.graph_names();
+        for want in ["tile_f64", "rowblock_f64", "matmul_f64"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn tile_graph_matches_cpu_reference() {
+        let Some(rt) = runtime() else { return };
+        let (m, n, k) = (8usize, 16usize, 256usize);
+        let a: Vec<f64> = (0..m * k).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let b: Vec<f64> = (0..k * n).map(|i| ((i * 17) % 7) as f64 - 3.0).collect();
+        let c0: Vec<f64> = (0..m * n).map(|i| i as f64 * 0.5).collect();
+        let got = rt.exec_f64("tile_f64", &[&a, &b, &c0]).unwrap();
+        let mut want = c0.clone();
+        crate::workloads::matmul::RustTileExec.tile(&a, &b, &mut want, m, n, k);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn full_matmul_graph_matches_reference() {
+        let Some(rt) = runtime() else { return };
+        let n = 256usize;
+        let a: Vec<f64> = (0..n * n).map(|i| ((i % 13) as f64) - 6.0).collect();
+        let b: Vec<f64> = (0..n * n).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let got = rt.matmul_f64(&a, &b).unwrap();
+        // spot-check a few entries against the naive product
+        for &(i, j) in &[(0usize, 0usize), (3, 200), (255, 255), (100, 7)] {
+            let want: f64 = (0..n).map(|kk| a[i * n + kk] * b[kk * n + j]).sum();
+            let g = got[i * n + j];
+            assert!((g - want).abs() < 1e-6, "C[{i}][{j}]: {g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn arg_validation_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.exec_f64("nope", &[]).is_err());
+        let a = vec![0.0; 4];
+        assert!(rt.exec_f64("tile_f64", &[&a]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them on the CPU PJRT client from the Rust hot path.
+//!
+//! Python never runs at simulation time: the interchange format is HLO
+//! *text* (jax ≥ 0.5 emits serialized protos with 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! — see DESIGN.md §3 and /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactDir, GraphMeta};
+pub use exec::{PjrtTileExec, Runtime};

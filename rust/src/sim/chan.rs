@@ -1,0 +1,190 @@
+//! Staged, bounded, single-producer single-consumer channel modelling a
+//! registered valid/ready handshake FIFO.
+//!
+//! * `push` stages an item; it becomes poppable only after the next
+//!   [`Chan::tick`] (one-cycle latency, like a register slice).
+//! * Capacity bounds the total occupancy (queued + staged), modelling
+//!   FIFO depth / backpressure: `can_push` is the producer-visible
+//!   `ready`.
+//! * `stale_space` exposes the occupancy as of the last tick — the
+//!   "registered ready" some RTL fork/join logic sees (one cycle stale).
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct Chan<T> {
+    q: VecDeque<T>,
+    staged: VecDeque<T>,
+    cap: usize,
+    space_at_tick: usize,
+    /// Total items ever pushed (throughput accounting).
+    pub pushed: u64,
+    /// Total items ever popped.
+    pub popped: u64,
+}
+
+impl<T> Chan<T> {
+    pub fn new(cap: usize) -> Chan<T> {
+        assert!(cap >= 1);
+        Chan {
+            q: VecDeque::new(),
+            staged: VecDeque::new(),
+            cap,
+            space_at_tick: cap,
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Occupancy (queued + staged).
+    pub fn len(&self) -> usize {
+        self.q.len() + self.staged.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Producer-side ready: is there space to push this cycle?
+    pub fn can_push(&self) -> bool {
+        self.len() < self.cap
+    }
+
+    /// Space as seen at the last clock edge (registered-ready modelling;
+    /// conservative for fork logic that cannot see same-cycle pops).
+    pub fn stale_space(&self) -> usize {
+        self.space_at_tick
+    }
+
+    /// Stage an item for visibility next cycle. Panics on overflow —
+    /// callers must check `can_push` (models a handshake violation).
+    pub fn push(&mut self, item: T) {
+        assert!(self.can_push(), "Chan overflow: push without ready");
+        self.staged.push_back(item);
+        self.pushed += 1;
+    }
+
+    /// Consumer-side peek of the oldest *visible* item.
+    pub fn front(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    /// Pop the oldest visible item.
+    pub fn pop(&mut self) -> Option<T> {
+        let it = self.q.pop_front();
+        if it.is_some() {
+            self.popped += 1;
+        }
+        it
+    }
+
+    /// Number of currently visible (poppable) items.
+    pub fn visible(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Clock edge: staged items become visible, ready snapshot updates.
+    #[inline]
+    pub fn tick(&mut self) {
+        // fast path: the overwhelmingly common idle-channel case
+        if !self.staged.is_empty() {
+            self.q.append(&mut self.staged);
+        }
+        self.space_at_tick = self.cap - self.q.len();
+    }
+
+    /// Drop all contents (used by test harnesses between phases).
+    pub fn clear(&mut self) {
+        self.q.clear();
+        self.staged.clear();
+        self.space_at_tick = self.cap;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_visible_next_tick() {
+        let mut c: Chan<u32> = Chan::new(4);
+        c.push(7);
+        assert_eq!(c.front(), None, "staged items must not be visible");
+        c.tick();
+        assert_eq!(c.front(), Some(&7));
+        assert_eq!(c.pop(), Some(7));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn capacity_bounds_total_occupancy() {
+        let mut c: Chan<u32> = Chan::new(2);
+        c.push(1);
+        c.push(2);
+        assert!(!c.can_push());
+        c.tick();
+        assert!(!c.can_push(), "queued items still occupy space");
+        c.pop();
+        assert!(c.can_push());
+    }
+
+    #[test]
+    #[should_panic(expected = "Chan overflow")]
+    fn overflow_panics() {
+        let mut c: Chan<u32> = Chan::new(1);
+        c.push(1);
+        c.push(2);
+    }
+
+    #[test]
+    fn sustained_one_per_cycle() {
+        // cap-2 chan with a consumer draining every cycle sustains
+        // 1 item/cycle — the full-rate pipelined hop.
+        let mut c: Chan<u64> = Chan::new(2);
+        let mut got = Vec::new();
+        for cy in 0..100u64 {
+            if let Some(v) = c.pop() {
+                got.push(v);
+            }
+            if c.can_push() {
+                c.push(cy);
+            }
+            c.tick();
+        }
+        assert!(got.len() >= 98, "sustained rate broke: {}", got.len());
+        for w in got.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn stale_space_lags_one_cycle() {
+        let mut c: Chan<u32> = Chan::new(2);
+        assert_eq!(c.stale_space(), 2);
+        c.push(1);
+        assert_eq!(c.stale_space(), 2, "stale view unchanged until tick");
+        c.tick();
+        assert_eq!(c.stale_space(), 1);
+        c.pop();
+        assert_eq!(c.stale_space(), 1, "pop not visible until tick");
+        c.tick();
+        assert_eq!(c.stale_space(), 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved_across_ticks() {
+        let mut c: Chan<u32> = Chan::new(8);
+        c.push(1);
+        c.push(2);
+        c.tick();
+        c.push(3);
+        c.tick();
+        assert_eq!(c.pop(), Some(1));
+        assert_eq!(c.pop(), Some(2));
+        assert_eq!(c.pop(), Some(3));
+    }
+}

@@ -1,0 +1,170 @@
+//! The clock loop: run a closure once per cycle until it reports
+//! completion, with a deadlock watchdog (no observable progress for a
+//! configurable number of cycles aborts the run — this is how the
+//! fig. 2e deadlock scenario is *detected* when the commit protocol is
+//! disabled).
+
+use super::Cycle;
+
+/// Outcome of stepping the system for one cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepResult {
+    /// Work remains; `progress` is a monotone counter of observable
+    /// events (beats moved, commands retired) used by the watchdog.
+    Running { progress: u64 },
+    /// Simulation finished.
+    Done,
+}
+
+/// Watchdog configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Watchdog {
+    /// Abort if `progress` hasn't advanced for this many cycles.
+    pub stall_cycles: u64,
+    /// Hard cap on total cycles (safety net for runaway configs).
+    pub max_cycles: u64,
+}
+
+impl Default for Watchdog {
+    fn default() -> Watchdog {
+        Watchdog {
+            stall_cycles: 100_000,
+            max_cycles: 2_000_000_000,
+        }
+    }
+}
+
+/// Error raised when the watchdog fires.
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("deadlock: no progress for {stalled} cycles at cycle {cycle} (progress counter {progress})")]
+    Deadlock {
+        cycle: Cycle,
+        stalled: u64,
+        progress: u64,
+    },
+    #[error("cycle limit exceeded ({max} cycles)")]
+    CycleLimit { max: u64 },
+}
+
+/// The simulation engine. Owns only the clock; all state lives in the
+/// stepped closure's captures (the SoC or test fixture).
+pub struct Engine {
+    pub now: Cycle,
+    pub watchdog: Watchdog,
+}
+
+impl Engine {
+    pub fn new(watchdog: Watchdog) -> Engine {
+        Engine { now: 0, watchdog }
+    }
+
+    /// Run `step(cycle)` until it returns `Done`. Returns the cycle count
+    /// at completion.
+    pub fn run<F: FnMut(Cycle) -> StepResult>(
+        &mut self,
+        mut step: F,
+    ) -> Result<Cycle, SimError> {
+        let mut last_progress = u64::MAX;
+        let mut stalled_since = self.now;
+        loop {
+            match step(self.now) {
+                StepResult::Done => return Ok(self.now),
+                StepResult::Running { progress } => {
+                    if progress != last_progress {
+                        last_progress = progress;
+                        stalled_since = self.now;
+                    } else if self.now - stalled_since >= self.watchdog.stall_cycles {
+                        return Err(SimError::Deadlock {
+                            cycle: self.now,
+                            stalled: self.now - stalled_since,
+                            progress,
+                        });
+                    }
+                }
+            }
+            self.now += 1;
+            if self.now >= self.watchdog.max_cycles {
+                return Err(SimError::CycleLimit {
+                    max: self.watchdog.max_cycles,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_to_completion() {
+        let mut eng = Engine::new(Watchdog::default());
+        let mut count = 0u64;
+        let end = eng
+            .run(|_cy| {
+                count += 1;
+                if count == 100 {
+                    StepResult::Done
+                } else {
+                    StepResult::Running { progress: count }
+                }
+            })
+            .unwrap();
+        assert_eq!(end, 99);
+    }
+
+    #[test]
+    fn watchdog_detects_stall() {
+        let mut eng = Engine::new(Watchdog {
+            stall_cycles: 50,
+            max_cycles: 10_000,
+        });
+        let err = eng
+            .run(|_cy| StepResult::Running { progress: 7 })
+            .unwrap_err();
+        match err {
+            SimError::Deadlock { stalled, .. } => assert!(stalled >= 50),
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn cycle_limit_enforced() {
+        let mut eng = Engine::new(Watchdog {
+            stall_cycles: 1_000_000,
+            max_cycles: 128,
+        });
+        let mut p = 0u64;
+        let err = eng
+            .run(|_cy| {
+                p += 1;
+                StepResult::Running { progress: p }
+            })
+            .unwrap_err();
+        assert!(matches!(err, SimError::CycleLimit { max: 128 }));
+    }
+
+    #[test]
+    fn progress_resets_watchdog() {
+        let mut eng = Engine::new(Watchdog {
+            stall_cycles: 10,
+            max_cycles: 10_000,
+        });
+        let mut p = 0u64;
+        let mut cycles = 0u64;
+        let end = eng.run(|_cy| {
+            cycles += 1;
+            // advance progress only every 8 cycles — below the threshold
+            if cycles % 8 == 0 {
+                p += 1;
+            }
+            if cycles == 200 {
+                StepResult::Done
+            } else {
+                StepResult::Running { progress: p }
+            }
+        });
+        assert!(end.is_ok());
+    }
+}

@@ -1,0 +1,21 @@
+//! Cycle-level simulation kernel.
+//!
+//! The simulator is *clock-stepped*: every component implements a `step`
+//! that runs once per cycle in a fixed deterministic order, exchanging
+//! beats through staged channels ([`chan::Chan`]). A push performed in
+//! cycle *k* becomes visible to the consumer in cycle *k+1*, modelling a
+//! registered (spill-register) hop exactly like the `axi_multicut`-style
+//! pipelining in the RTL this reproduces. Because visibility is staged,
+//! simulation results are independent of intra-cycle component order for
+//! everything except same-cycle ready evaluation, which is made
+//! deterministic by the fixed step order.
+
+pub mod chan;
+pub mod engine;
+pub mod trace;
+
+pub use chan::Chan;
+pub use engine::{Engine, Watchdog};
+
+/// Simulation time in clock cycles.
+pub type Cycle = u64;

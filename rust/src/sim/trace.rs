@@ -1,0 +1,166 @@
+//! Event tracing: an optional JSON-lines event sink for debugging and
+//! for the `--trace` CLI flag. Zero-cost when disabled (the hot path
+//! checks a bool before formatting).
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::Cycle;
+
+/// Trace event categories (stringified into the `kind` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Aw,
+    W,
+    B,
+    Ar,
+    R,
+    Commit,
+    Grant,
+    Dma,
+    Compute,
+    Barrier,
+    Irq,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Aw => "aw",
+            Kind::W => "w",
+            Kind::B => "b",
+            Kind::Ar => "ar",
+            Kind::R => "r",
+            Kind::Commit => "commit",
+            Kind::Grant => "grant",
+            Kind::Dma => "dma",
+            Kind::Compute => "compute",
+            Kind::Barrier => "barrier",
+            Kind::Irq => "irq",
+        }
+    }
+}
+
+/// A trace sink. `None` writer means tracing is disabled.
+pub struct Trace {
+    sink: Option<BufWriter<File>>,
+    /// In-memory ring of the most recent events (test inspection).
+    pub recent: Vec<String>,
+    keep_recent: usize,
+    pub events: u64,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::disabled()
+    }
+}
+
+impl Trace {
+    pub fn disabled() -> Trace {
+        Trace {
+            sink: None,
+            recent: Vec::new(),
+            keep_recent: 0,
+            events: 0,
+        }
+    }
+
+    /// Keep the last `n` events in memory (no file) — used by tests.
+    pub fn in_memory(n: usize) -> Trace {
+        Trace {
+            sink: None,
+            recent: Vec::new(),
+            keep_recent: n,
+            events: 0,
+        }
+    }
+
+    pub fn to_file(path: &Path) -> std::io::Result<Trace> {
+        Ok(Trace {
+            sink: Some(BufWriter::new(File::create(path)?)),
+            recent: Vec::new(),
+            keep_recent: 0,
+            events: 0,
+        })
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some() || self.keep_recent > 0
+    }
+
+    /// Record one event. `who` identifies the component (e.g. "xbar0.m3").
+    pub fn event(&mut self, cy: Cycle, kind: Kind, who: &str, detail: &str) {
+        if !self.enabled() {
+            return;
+        }
+        self.events += 1;
+        let mut line = String::with_capacity(64);
+        let _ = write!(
+            line,
+            "{{\"cy\":{},\"kind\":\"{}\",\"who\":\"{}\",\"detail\":\"{}\"}}",
+            cy,
+            kind.as_str(),
+            who,
+            detail
+        );
+        if let Some(w) = self.sink.as_mut() {
+            let _ = writeln!(w, "{line}");
+        }
+        if self.keep_recent > 0 {
+            if self.recent.len() == self.keep_recent {
+                self.recent.remove(0);
+            }
+            self.recent.push(line);
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = self.sink.as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_noop() {
+        let mut t = Trace::disabled();
+        t.event(1, Kind::Aw, "x", "y");
+        assert_eq!(t.events, 0);
+    }
+
+    #[test]
+    fn in_memory_ring() {
+        let mut t = Trace::in_memory(2);
+        t.event(1, Kind::Aw, "a", "");
+        t.event(2, Kind::W, "b", "");
+        t.event(3, Kind::B, "c", "");
+        assert_eq!(t.recent.len(), 2);
+        assert!(t.recent[0].contains("\"kind\":\"w\""));
+        assert!(t.recent[1].contains("\"kind\":\"b\""));
+        assert_eq!(t.events, 3);
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let dir = std::env::temp_dir().join("axi_mcast_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        {
+            let mut t = Trace::to_file(&path).unwrap();
+            t.event(5, Kind::Commit, "xbar.m0", "targets=3");
+            t.flush();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("\"cy\":5"));
+        assert!(content.contains("commit"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

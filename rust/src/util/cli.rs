@@ -1,0 +1,185 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! generated `--help` text. Used by the `occamy-sim` binary and the
+//! examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token list (without argv[0] / subcommand name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(t) = it.next() {
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.pos.push(t);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_u64(v).map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.u64_or(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    /// Comma-separated u64 list, e.g. `--sizes 1024,4096,32768`.
+    pub fn u64_list_or(&self, name: &str, default: &[u64]) -> Result<Vec<u64>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| parse_u64(s.trim()).map_err(|e| format!("--{name}: {e}")))
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+/// u64 with unit suffixes: accepts `4096`, `4KiB`, `32k`, `4M`, `0x100`.
+pub fn parse_u64(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16).map_err(|e| e.to_string());
+    }
+    let lower = s.to_ascii_lowercase();
+    for (suffix, mult) in [
+        ("kib", 1u64 << 10),
+        ("mib", 1 << 20),
+        ("gib", 1 << 30),
+        ("kb", 1 << 10),
+        ("mb", 1 << 20),
+        ("gb", 1 << 30),
+        ("k", 1 << 10),
+        ("m", 1 << 20),
+        ("g", 1 << 30),
+    ] {
+        if let Some(num) = lower.strip_suffix(suffix) {
+            return num
+                .trim()
+                .parse::<u64>()
+                .map(|v| v * mult)
+                .map_err(|e| e.to_string());
+        }
+    }
+    s.parse().map_err(|e: std::num::ParseIntError| e.to_string())
+}
+
+/// A subcommand description for `--help` generation.
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub options: &'static [(&'static str, &'static str)],
+}
+
+/// Render a help screen for a command table.
+pub fn render_help(prog: &str, about: &str, cmds: &[CmdSpec]) -> String {
+    let mut s = format!("{prog} — {about}\n\nUSAGE:\n  {prog} <command> [options]\n\nCOMMANDS:\n");
+    for c in cmds {
+        s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+    }
+    s.push_str("\nRun with `<command> --help` for command options.\n");
+    s
+}
+
+/// Render per-command help.
+pub fn render_cmd_help(prog: &str, c: &CmdSpec) -> String {
+    let mut s = format!("{prog} {} — {}\n\nOPTIONS:\n", c.name, c.about);
+    for (opt, about) in c.options {
+        s.push_str(&format!("  --{:<24} {}\n", opt, about));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args(&["--clusters", "32", "--verbose", "--size=4KiB", "pos1"]);
+        assert_eq!(a.u64_or("clusters", 0).unwrap(), 32);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.u64_or("size", 0).unwrap(), 4096);
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unit_suffixes() {
+        assert_eq!(parse_u64("32KiB").unwrap(), 32768);
+        assert_eq!(parse_u64("4M").unwrap(), 4 << 20);
+        assert_eq!(parse_u64("0x40000").unwrap(), 0x40000);
+        assert_eq!(parse_u64("17").unwrap(), 17);
+        assert!(parse_u64("wat").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["--sizes", "1k,2k,4k"]);
+        assert_eq!(a.u64_list_or("sizes", &[]).unwrap(), vec![1024, 2048, 4096]);
+        let b = args(&[]);
+        assert_eq!(b.u64_list_or("sizes", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.get_or("mode", "hw"), "hw");
+        assert_eq!(a.f64_or("util", 0.5).unwrap(), 0.5);
+        assert!(!a.flag("x"));
+    }
+}

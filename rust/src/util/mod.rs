@@ -1,0 +1,13 @@
+//! Std-only utility substrates.
+//!
+//! The offline build only has the `xla` crate's vendored dependency
+//! closure available (no clap / serde / rand / criterion / proptest), so
+//! the equivalents used by the simulator are implemented here — see
+//! DESIGN.md §2 for the substitution table.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest_mini;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,182 @@
+//! Minimal property-based testing harness (proptest is unavailable in
+//! the offline build — see DESIGN.md §2).
+//!
+//! Semantics: run a property closure against `cases` randomly generated
+//! inputs derived from a deterministic seed; on failure, retry with a
+//! sequence of "shrunken" (smaller-magnitude) variants produced by the
+//! generator at decreasing size budgets, and report the smallest failing
+//! input's debug representation plus the seed needed to replay it.
+
+use crate::util::prng::Pcg;
+
+/// Size-bounded generation context handed to generators.
+pub struct Gen {
+    pub rng: Pcg,
+    /// Current size budget in [0, 100]; generators should scale the
+    /// magnitude/length of produced values with it.
+    pub size: u32,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: u32) -> Gen {
+        Gen {
+            rng: Pcg::new(seed),
+            size,
+        }
+    }
+
+    /// Length helper: up to `size`-scaled fraction of `max`, at least 1.
+    pub fn len(&mut self, max: usize) -> usize {
+        let cap = ((max as u64 * self.size as u64) / 100).max(1);
+        self.rng.range(1, cap) as usize
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.below(bound)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    pub max_shrink: u32,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        // Seed can be overridden via PROPTEST_SEED for replay.
+        let seed = std::env::var("PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA11CE);
+        let cases = std::env::var("PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config {
+            cases,
+            seed,
+            max_shrink: 32,
+        }
+    }
+}
+
+/// Run a property: `gen` builds an input from a `Gen`; `prop` returns
+/// `Err(msg)` on violation. Panics with a replayable report on failure.
+pub fn check<T, G, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // Ramp size from small to large across cases so early failures
+        // are already small.
+        let size = 10 + (90 * case) / cfg.cases.max(1);
+        let mut g = Gen::new(case_seed, size);
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Shrink: regenerate at smaller sizes from the same seed
+            // lineage, keeping the smallest input that still fails.
+            let mut best: (u32, T, String) = (size, input, msg);
+            for shrink in 0..cfg.max_shrink {
+                let sz = best.0.saturating_sub(1 + shrink % 7);
+                if sz == 0 {
+                    break;
+                }
+                let mut g = Gen::new(case_seed.wrapping_add(shrink as u64), sz);
+                let candidate = gen(&mut g);
+                if let Err(m) = prop(&candidate) {
+                    best = (sz, candidate, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 PROPTEST_SEED={} to replay)\ninput: {:#?}\nerror: {}",
+                cfg.seed, best.1, best.2
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn quickcheck<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(name, Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck(
+            "reverse-reverse",
+            |g| {
+                let n = g.len(64);
+                (0..n).map(|_| g.u64_below(1000)).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check(
+            "always-fails",
+            Config {
+                cases: 4,
+                seed: 1,
+                max_shrink: 4,
+            },
+            |g| g.u64_below(100),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut seen_small = false;
+        let mut seen_big = false;
+        check(
+            "size-ramp",
+            Config {
+                cases: 50,
+                seed: 3,
+                max_shrink: 0,
+            },
+            |g| g.len(100),
+            |&n| {
+                if n < 10 {
+                    seen_small = true;
+                }
+                if n > 50 {
+                    seen_big = true;
+                }
+                Ok(())
+            },
+        );
+        assert!(seen_small && seen_big);
+    }
+}

@@ -1,0 +1,145 @@
+//! Small statistics helpers shared by the simulator and the bench
+//! harnesses: counters, running summaries, percentiles, geomean, and
+//! Amdahl's-law fits (the paper reports an "equivalent parallel
+//! fraction" for fig. 3b).
+
+/// Running summary of a stream of samples.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub sum: f64,
+    pub sumsq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary {
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Geometric mean (paper: "geometric mean speedup of 5.6x").
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Percentile by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Amdahl's law: speedup on `n` processors given parallel fraction `p`.
+pub fn amdahl_speedup(p: f64, n: f64) -> f64 {
+    1.0 / ((1.0 - p) + p / n)
+}
+
+/// Invert Amdahl's law: the "equivalent parallel fraction" that explains
+/// an observed speedup `s` on `n` processors (fig. 3b annotations).
+pub fn amdahl_parallel_fraction(s: f64, n: f64) -> f64 {
+    if n <= 1.0 || s <= 0.0 {
+        return 0.0;
+    }
+    // s = 1 / ((1-p) + p/n)  =>  p = (1 - 1/s) / (1 - 1/n)
+    ((1.0 - 1.0 / s) / (1.0 - 1.0 / n)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.var() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_matches_hand_calc() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn amdahl_roundtrip() {
+        // paper: ~97% parallel fraction explains ~16.2x on 31-way parallelism
+        let p = 0.97;
+        let s = amdahl_speedup(p, 31.0);
+        let p2 = amdahl_parallel_fraction(s, 31.0);
+        assert!((p - p2).abs() < 1e-12);
+        assert!(s > 15.0 && s < 18.0, "s={s}");
+    }
+
+    #[test]
+    fn amdahl_edges() {
+        assert_eq!(amdahl_parallel_fraction(1.0, 31.0), 0.0);
+        assert_eq!(amdahl_parallel_fraction(31.0, 31.0), 1.0);
+        assert!(amdahl_speedup(1.0, 16.0) == 16.0);
+    }
+}

@@ -1,0 +1,256 @@
+//! Fig. 3b microbenchmark: one cluster sends the same data to all other
+//! clusters using its DMA engine.
+//!
+//! Three strategies (paper §III-B):
+//!
+//! * **multiple-unicast** (baseline): the source issues one unicast DMA
+//!   transfer per destination cluster — they serialise on the source
+//!   cluster's single wide port;
+//! * **hierarchical software multicast** (white overlays, ≥ 8
+//!   clusters): the source sends to one "leader" cluster per other
+//!   group, each leader forwards to the other clusters of its group —
+//!   intra-group distribution proceeds in parallel;
+//! * **hardware multicast** (this paper): one mask-form DMA transfer.
+
+use crate::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use crate::sim::engine::Watchdog;
+
+/// Distribution strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McastMode {
+    Unicast,
+    SwHier,
+    Hw,
+}
+
+impl McastMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            McastMode::Unicast => "unicast",
+            McastMode::SwHier => "sw-hier",
+            McastMode::Hw => "hw-mcast",
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct MicrobenchResult {
+    pub mode: McastMode,
+    pub clusters: usize,
+    pub bytes: u64,
+    pub cycles: u64,
+}
+
+/// Offset in each destination L1 receiving the payload (distinct from
+/// the source offset so self-delivery in the 32-cluster set is
+/// harmless).
+const SRC_OFF: u64 = 0;
+const DST_OFF: u64 = 0x10000;
+
+/// The destination set: the *last* `clusters` clusters — an aligned
+/// power-of-two block that excludes the source (cluster 0) except for
+/// the full-system set, reproducing the paper's "all other clusters".
+pub fn dest_range(cfg: &SocConfig, clusters: usize) -> (usize, usize) {
+    assert!(clusters.is_power_of_two() && clusters <= cfg.n_clusters);
+    if clusters == cfg.n_clusters {
+        (0, clusters)
+    } else {
+        (cfg.n_clusters - clusters, clusters)
+    }
+}
+
+/// Destination clusters, source excluded.
+fn dests(cfg: &SocConfig, clusters: usize) -> Vec<usize> {
+    let (first, count) = dest_range(cfg, clusters);
+    (first..first + count).filter(|&c| c != 0).collect()
+}
+
+/// Build per-cluster programs for one strategy.
+fn programs(cfg: &SocConfig, mode: McastMode, clusters: usize, bytes: u64) -> Vec<Vec<Cmd>> {
+    let cpg = cfg.clusters_per_group;
+    let src_l1 = cfg.cluster_base(0) + SRC_OFF;
+    let (first, count) = dest_range(cfg, clusters);
+    let mut progs = vec![Vec::new(); cfg.n_clusters];
+    match mode {
+        McastMode::Unicast => {
+            let mut p = Vec::new();
+            for c in dests(cfg, clusters) {
+                p.push(Cmd::Dma {
+                    src: src_l1,
+                    dst: crate::axi::mcast::AddrSet::unicast(cfg.cluster_base(c) + DST_OFF),
+                    bytes,
+                    tag: c as u64,
+                });
+            }
+            p.push(Cmd::WaitDma);
+            progs[0] = p;
+        }
+        McastMode::Hw => {
+            // one mask-form transfer covering the whole destination set
+            progs[0] = vec![
+                Cmd::Dma {
+                    src: src_l1,
+                    dst: cfg.cluster_set(first, count, DST_OFF),
+                    bytes,
+                    tag: 1,
+                },
+                Cmd::WaitDma,
+            ];
+        }
+        McastMode::SwHier => {
+            assert!(
+                clusters > cpg,
+                "hierarchical sw multicast needs more than one group"
+            );
+            let src_group = 0;
+            let groups = (first / cpg)..((first + count) / cpg);
+            let mut p = Vec::new();
+            for g in groups.clone() {
+                if g == src_group {
+                    continue;
+                }
+                let leader = g * cpg;
+                p.push(Cmd::Dma {
+                    src: src_l1,
+                    dst: crate::axi::mcast::AddrSet::unicast(cfg.cluster_base(leader) + DST_OFF),
+                    bytes,
+                    tag: leader as u64,
+                });
+                // WaitDma after each hop so the notify IRQ is ordered
+                // behind the data (B response = delivery confirmation)
+                p.push(Cmd::WaitDma);
+                p.push(Cmd::SendIrq {
+                    dst: crate::axi::mcast::AddrSet::unicast(cfg.mailbox_addr(leader)),
+                });
+            }
+            // the source's own group (full-system set only): direct
+            if groups.contains(&src_group) {
+                for c in 1..cpg {
+                    p.push(Cmd::Dma {
+                        src: src_l1,
+                        dst: crate::axi::mcast::AddrSet::unicast(cfg.cluster_base(c) + DST_OFF),
+                        bytes,
+                        tag: c as u64,
+                    });
+                }
+                p.push(Cmd::WaitDma);
+            }
+            progs[0] = p;
+            // leaders: wait for the notify, then fan out in-group
+            for g in groups {
+                if g == src_group {
+                    continue;
+                }
+                let leader = g * cpg;
+                let mut lp = vec![Cmd::WaitIrq { count: 1 }];
+                for i in 1..cpg {
+                    lp.push(Cmd::Dma {
+                        src: cfg.cluster_base(leader) + DST_OFF,
+                        dst: crate::axi::mcast::AddrSet::unicast(
+                            cfg.cluster_base(leader + i) + DST_OFF,
+                        ),
+                        bytes,
+                        tag: (leader + i) as u64,
+                    });
+                }
+                lp.push(Cmd::WaitDma);
+                progs[leader] = lp;
+            }
+        }
+    }
+    progs
+}
+
+/// Run one microbenchmark point and return measured cycles.
+pub fn run_microbench(
+    cfg: &SocConfig,
+    mode: McastMode,
+    clusters: usize,
+    bytes: u64,
+) -> MicrobenchResult {
+    let mut cfg = cfg.clone();
+    // the baseline system has no multicast support at all
+    if mode != McastMode::Hw {
+        cfg.wide_mcast = false;
+    }
+    let mut soc = Soc::new(cfg.clone());
+    // seed the payload so functional copies are observable
+    for (i, b) in (0..bytes).enumerate() {
+        let _ = b;
+        soc.mem.l1[0][SRC_OFF as usize + i] = (i % 251) as u8;
+    }
+    soc.load_programs(programs(&cfg, mode, clusters, bytes));
+    let cycles = soc
+        .run(
+            &mut NopCompute,
+            Watchdog {
+                stall_cycles: 500_000,
+                max_cycles: 1_000_000_000,
+            },
+        )
+        .unwrap_or_else(|e| panic!("{mode:?} {clusters}cl {bytes}B: {e}"));
+    // verify every destination actually received the payload
+    let expect: Vec<u8> = (0..bytes).map(|i| (i % 251) as u8).collect();
+    for c in dests(&cfg, clusters) {
+        assert_eq!(
+            &soc.mem.l1[c][DST_OFF as usize..DST_OFF as usize + bytes as usize],
+            &expect[..],
+            "cluster {c} did not receive the payload ({mode:?})"
+        );
+    }
+    MicrobenchResult {
+        mode,
+        clusters,
+        bytes,
+        cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SocConfig {
+        SocConfig::default()
+    }
+
+    #[test]
+    fn unicast_baseline_delivers() {
+        let r = run_microbench(&cfg(), McastMode::Unicast, 4, 2048);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn hw_mcast_delivers_and_beats_unicast() {
+        let uni = run_microbench(&cfg(), McastMode::Unicast, 8, 8 * 1024);
+        let hw = run_microbench(&cfg(), McastMode::Hw, 8, 8 * 1024);
+        assert!(
+            hw.cycles < uni.cycles,
+            "hw mcast ({}) must beat unicast ({})",
+            hw.cycles,
+            uni.cycles
+        );
+    }
+
+    #[test]
+    fn sw_hier_between_unicast_and_hw() {
+        let uni = run_microbench(&cfg(), McastMode::Unicast, 16, 8 * 1024);
+        let sw = run_microbench(&cfg(), McastMode::SwHier, 16, 8 * 1024);
+        let hw = run_microbench(&cfg(), McastMode::Hw, 16, 8 * 1024);
+        assert!(sw.cycles < uni.cycles, "sw {} vs uni {}", sw.cycles, uni.cycles);
+        assert!(hw.cycles < sw.cycles, "hw {} vs sw {}", hw.cycles, sw.cycles);
+    }
+
+    #[test]
+    fn speedup_grows_with_cluster_count() {
+        let s = |n| {
+            let uni = run_microbench(&cfg(), McastMode::Unicast, n, 4 * 1024);
+            let hw = run_microbench(&cfg(), McastMode::Hw, n, 4 * 1024);
+            uni.cycles as f64 / hw.cycles as f64
+        };
+        let s4 = s(4);
+        let s16 = s(16);
+        assert!(s16 > s4, "speedup must grow with clusters: {s4} -> {s16}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Paper §III-B workloads.
+//!
+//! * [`microbench`] — fig. 3b: one cluster sends the same data to all
+//!   other clusters (multiple-unicast vs hierarchical software multicast
+//!   vs hardware multicast).
+//! * [`matmul`] — fig. 3c/3d: the double-buffered 256×256 f64 tiled
+//!   matrix multiplication with three B-distribution strategies.
+//! * [`roofline`] — the roofline model (peak compute vs LLC-bandwidth
+//!   bound) used to place fig. 3c points.
+
+pub mod matmul;
+pub mod microbench;
+pub mod roofline;
+
+pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
+pub use microbench::{run_microbench, McastMode, MicrobenchResult};

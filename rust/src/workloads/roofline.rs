@@ -1,0 +1,65 @@
+//! Roofline model of the Occamy architecture (fig. 3c's axes).
+//!
+//! `attainable(OI) = min(peak_compute, OI × llc_bandwidth)` — the
+//! paper's fig. 3c plots the three matmul variants against this roof;
+//! the baseline sits at OI ≈ 1.9 (92% of its memory-bound limit), the
+//! multicast variants climb the OI axis into the compute-bound region.
+
+use crate::occamy::SocConfig;
+
+/// The roofline of a configuration.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    /// GFLOPS ceiling (compute roof).
+    pub peak_gflops: f64,
+    /// LLC streaming bandwidth in GB/s (one wide port at 1 beat/cycle).
+    pub llc_gbps: f64,
+}
+
+impl Roofline {
+    pub fn of(cfg: &SocConfig) -> Roofline {
+        Roofline {
+            peak_gflops: cfg.peak_gflops(),
+            llc_gbps: cfg.wide_bytes as f64 * cfg.freq_ghz,
+        }
+    }
+
+    /// Attainable GFLOPS at operational intensity `oi` (FLOP/byte).
+    pub fn attainable(&self, oi: f64) -> f64 {
+        (oi * self.llc_gbps).min(self.peak_gflops)
+    }
+
+    /// The ridge point: OI where memory-bound meets compute-bound.
+    pub fn ridge_oi(&self) -> f64 {
+        self.peak_gflops / self.llc_gbps
+    }
+
+    /// Fraction (%) of the attainable roof achieved by a measurement.
+    pub fn pct_of_roof(&self, oi: f64, gflops: f64) -> f64 {
+        gflops / self.attainable(oi) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_system_roofline() {
+        let r = Roofline::of(&SocConfig::default());
+        assert_eq!(r.peak_gflops, 512.0);
+        assert_eq!(r.llc_gbps, 64.0);
+        // ridge at 8 FLOP/B: OI 1.9 is memory-bound, OI 32 compute-bound
+        assert_eq!(r.ridge_oi(), 8.0);
+        assert!((r.attainable(1.9) - 121.6).abs() < 1e-9);
+        assert_eq!(r.attainable(32.0), 512.0);
+    }
+
+    #[test]
+    fn paper_baseline_point_is_92pct_of_roof() {
+        // the paper: OI 1.9 → 114.4 GFLOPS = 92% of the mem-bound limit
+        let r = Roofline::of(&SocConfig::default());
+        let pct = r.pct_of_roof(1.9, 114.4);
+        assert!((pct - 94.0).abs() < 3.0, "pct={pct}");
+    }
+}

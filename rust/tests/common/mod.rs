@@ -1,0 +1,279 @@
+//! Shared integration-test harness: scripted AXI masters, golden
+//! slaves, and a run loop with the deadlock watchdog.
+
+use std::collections::{HashMap, VecDeque};
+
+use axi_mcast::axi::golden::SimSlave;
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::types::{ArBeat, AwBeat, AxiId, AxiLink, Resp, Txn, WBeat};
+use axi_mcast::axi::xbar::Xbar;
+use axi_mcast::sim::engine::{Engine, SimError, StepResult, Watchdog};
+
+/// One scripted transfer.
+#[derive(Debug, Clone)]
+pub struct Xfer {
+    pub dest: AddrSet,
+    pub beats: u32,
+    pub id: AxiId,
+    pub is_mcast: bool,
+    pub read: bool,
+}
+
+impl Xfer {
+    pub fn write(dest: AddrSet, beats: u32, id: AxiId) -> Xfer {
+        let is_mcast = !dest.is_singleton();
+        Xfer {
+            dest,
+            beats,
+            id,
+            is_mcast,
+            read: false,
+        }
+    }
+
+    pub fn read(addr: u64, beats: u32, id: AxiId) -> Xfer {
+        Xfer {
+            dest: AddrSet::unicast(addr),
+            beats,
+            id,
+            is_mcast: false,
+            read: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum MState {
+    Idle,
+    SendW { txn: Txn, left: u32 },
+}
+
+/// A scripted AXI master attached to one link.
+pub struct TestMaster {
+    pub idx: usize,
+    pub link: usize,
+    pub script: VecDeque<Xfer>,
+    state: MState,
+    pub issued: Vec<(Txn, Xfer)>,
+    pub completed_b: Vec<(Txn, Resp)>,
+    pub completed_r: Vec<(Txn, Resp, u32)>,
+    r_progress: HashMap<Txn, u32>,
+    pub inflight: usize,
+    pub max_inflight: usize,
+}
+
+impl TestMaster {
+    pub fn new(idx: usize, link: usize, script: Vec<Xfer>) -> TestMaster {
+        TestMaster {
+            idx,
+            link,
+            script: script.into(),
+            state: MState::Idle,
+            issued: Vec::new(),
+            completed_b: Vec::new(),
+            completed_r: Vec::new(),
+            r_progress: HashMap::new(),
+            inflight: 0,
+            max_inflight: 4,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.script.is_empty() && matches!(self.state, MState::Idle) && self.inflight == 0
+    }
+
+    pub fn step(&mut self, link: &mut AxiLink, next_txn: &mut Txn) {
+        // collect responses
+        while let Some(b) = link.b.pop() {
+            self.completed_b.push((b.txn, b.resp));
+            self.inflight -= 1;
+        }
+        while let Some(r) = link.r.pop() {
+            let cnt = self.r_progress.entry(r.txn).or_insert(0);
+            *cnt += 1;
+            if r.last {
+                let beats = *cnt;
+                self.r_progress.remove(&r.txn);
+                self.completed_r.push((r.txn, r.resp, beats));
+                self.inflight -= 1;
+            }
+        }
+        // W streaming
+        if let MState::SendW { txn, left } = self.state {
+            if link.w.can_push() {
+                link.w.push(WBeat {
+                    last: left == 1,
+                    src: self.idx,
+                    txn,
+                });
+                if left == 1 {
+                    self.state = MState::Idle;
+                } else {
+                    self.state = MState::SendW {
+                        txn,
+                        left: left - 1,
+                    };
+                }
+            }
+            return;
+        }
+        // issue next transfer
+        if self.inflight >= self.max_inflight {
+            return;
+        }
+        let Some(x) = self.script.front() else {
+            return;
+        };
+        if x.read {
+            if link.ar.can_push() {
+                let x = self.script.pop_front().unwrap();
+                let txn = *next_txn;
+                *next_txn += 1;
+                link.ar.push(ArBeat {
+                    id: x.id,
+                    addr: x.dest.addr,
+                    beats: x.beats,
+                    beat_bytes: 64,
+                    src: self.idx,
+                    txn,
+                });
+                self.issued.push((txn, x));
+                self.inflight += 1;
+            }
+        } else if link.aw.can_push() {
+            let x = self.script.pop_front().unwrap();
+            let txn = *next_txn;
+            *next_txn += 1;
+            link.aw.push(AwBeat {
+                id: x.id,
+                dest: x.dest,
+                beats: x.beats,
+                beat_bytes: 64,
+                is_mcast: x.is_mcast,
+                exclude: None,
+                src: self.idx,
+                txn,
+            });
+            self.state = MState::SendW {
+                txn,
+                left: x.beats,
+            };
+            self.issued.push((txn, x));
+            self.inflight += 1;
+        }
+    }
+}
+
+/// A complete single-xbar test fixture.
+pub struct Fixture {
+    pub xbar: Xbar,
+    pub pool: Vec<AxiLink>,
+    pub masters: Vec<TestMaster>,
+    pub slaves: Vec<SimSlave>,
+    pub next_txn: Txn,
+}
+
+impl Fixture {
+    /// Masters on links `0..n_m`, slaves on links `n_m..n_m+n_s`.
+    pub fn new(xbar: Xbar, pool: Vec<AxiLink>, scripts: Vec<Vec<Xfer>>) -> Fixture {
+        let n_m = xbar.cfg.n_masters;
+        let n_s = xbar.cfg.n_slaves;
+        assert_eq!(scripts.len(), n_m);
+        let masters = scripts
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| TestMaster::new(i, i, s))
+            .collect();
+        let slaves = (0..n_s).map(SimSlave::new).collect();
+        Fixture {
+            xbar,
+            pool,
+            masters,
+            slaves,
+            next_txn: 1,
+        }
+    }
+
+    /// Run until all masters are done and the fabric drains.
+    pub fn run(&mut self, stall_cycles: u64) -> Result<u64, SimError> {
+        let mut eng = Engine::new(Watchdog {
+            stall_cycles,
+            max_cycles: 50_000_000,
+        });
+        let xbar = &mut self.xbar;
+        let pool = &mut self.pool;
+        let masters = &mut self.masters;
+        let slaves = &mut self.slaves;
+        let next_txn = &mut self.next_txn;
+        let n_m = xbar.cfg.n_masters;
+        eng.run(|cy| {
+            for m in masters.iter_mut() {
+                m.step(&mut pool[m.link], next_txn);
+            }
+            xbar.step(pool);
+            for (i, s) in slaves.iter_mut().enumerate() {
+                s.step(cy, &mut pool[n_m + i]);
+            }
+            let mut progress = 0u64;
+            for l in pool.iter_mut() {
+                l.tick();
+                progress += l.moved();
+            }
+            let all_done = masters.iter().all(|m| m.done())
+                && !xbar.busy()
+                && slaves.iter().all(|s| s.idle());
+            if all_done {
+                StepResult::Done
+            } else {
+                StepResult::Running { progress }
+            }
+        })
+    }
+
+    pub fn assert_protocol_clean(&self) {
+        for s in &self.slaves {
+            s.assert_clean();
+        }
+    }
+}
+
+/// Occamy-style address map over `n` cluster slaves (+ optional extra
+/// non-mcast "llc" slave at index `n`): cluster i at
+/// `0x0100_0000 + i*0x4_0000`.
+pub const CLUSTER_BASE: u64 = 0x0100_0000;
+pub const CLUSTER_STRIDE: u64 = 0x4_0000;
+
+pub fn cluster_map(n: usize, with_llc: bool) -> axi_mcast::axi::addr_map::AddrMap {
+    use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
+    let mut rules: Vec<AddrRule> = (0..n)
+        .map(|i| {
+            AddrRule::new(
+                CLUSTER_BASE + i as u64 * CLUSTER_STRIDE,
+                CLUSTER_BASE + (i as u64 + 1) * CLUSTER_STRIDE,
+                i,
+                &format!("cluster{i}"),
+            )
+            .with_mcast()
+        })
+        .collect();
+    let n_slaves = if with_llc {
+        rules.push(AddrRule::new(0x8000_0000, 0x8040_0000, n, "llc"));
+        n + 1
+    } else {
+        n
+    };
+    AddrMap::new(rules, n_slaves).unwrap()
+}
+
+/// Address of cluster `i` plus offset.
+pub fn cluster_addr(i: usize, off: u64) -> u64 {
+    CLUSTER_BASE + i as u64 * CLUSTER_STRIDE + off
+}
+
+/// Mask-form set covering clusters `[0, count)` at `off`; count must be
+/// a power of two.
+pub fn clusters_set(count: usize, off: u64) -> AddrSet {
+    assert!(count.is_power_of_two());
+    let mask = (count as u64 - 1) * CLUSTER_STRIDE;
+    AddrSet::new(CLUSTER_BASE + off, mask)
+}

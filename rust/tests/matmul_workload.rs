@@ -1,0 +1,121 @@
+//! Fig. 3c workload integration tests. The full 32-cluster runs are
+//! release-only (they simulate ~300k SoC cycles each); `make test` runs
+//! the suite with `--release`.
+
+use axi_mcast::occamy::SocConfig;
+use axi_mcast::workloads::matmul::{run_matmul, MatmulMode, RustTileExec};
+
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn baseline_matches_paper_point() {
+    let r = run_matmul(&SocConfig::default(), MatmulMode::Baseline, &mut RustTileExec);
+    assert!(r.numerics_ok);
+    // paper: 114.4 GFLOPS at OI 1.9 — accept ±8%
+    assert!((r.gflops - 114.4).abs() / 114.4 < 0.08, "gflops {}", r.gflops);
+    assert!((r.oi_read - 1.9).abs() < 0.15, "oi {}", r.oi_read);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn sw_mcast_matches_paper_point() {
+    let base = run_matmul(&SocConfig::default(), MatmulMode::Baseline, &mut RustTileExec);
+    let r = run_matmul(&SocConfig::default(), MatmulMode::SwMcast, &mut RustTileExec);
+    assert!(r.numerics_ok);
+    let oi_gain = r.oi_read / base.oi_read;
+    let perf_gain = r.gflops / base.gflops;
+    // paper: OI x3.7, perf x2.6
+    assert!((oi_gain - 3.7).abs() < 0.3, "oi gain {oi_gain}");
+    assert!((perf_gain - 2.6).abs() < 0.3, "perf gain {perf_gain}");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn hw_mcast_matches_paper_point() {
+    let base = run_matmul(&SocConfig::default(), MatmulMode::Baseline, &mut RustTileExec);
+    let r = run_matmul(&SocConfig::default(), MatmulMode::HwMcast, &mut RustTileExec);
+    assert!(r.numerics_ok);
+    let oi_gain = r.oi_read / base.oi_read;
+    let perf_gain = r.gflops / base.gflops;
+    // paper: OI x16.5, perf x3.4, 391.4 GFLOPS
+    assert!((oi_gain - 16.5).abs() < 0.8, "oi gain {oi_gain}");
+    assert!((perf_gain - 3.4).abs() < 0.25, "perf gain {perf_gain}");
+    assert!((r.gflops - 391.4).abs() / 391.4 < 0.08, "gflops {}", r.gflops);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn headline_hw_over_sw_about_29pct() {
+    let sw = run_matmul(&SocConfig::default(), MatmulMode::SwMcast, &mut RustTileExec);
+    let hw = run_matmul(&SocConfig::default(), MatmulMode::HwMcast, &mut RustTileExec);
+    let pct = (hw.gflops / sw.gflops - 1.0) * 100.0;
+    assert!((20.0..40.0).contains(&pct), "headline {pct}% outside band");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn llc_read_bytes_accounting() {
+    // baseline reads B 32x; hw reads it once — LLC byte accounting must
+    // reflect exactly that (B = 512 KiB, A = 512 KiB total)
+    let base = run_matmul(&SocConfig::default(), MatmulMode::Baseline, &mut RustTileExec);
+    let hw = run_matmul(&SocConfig::default(), MatmulMode::HwMcast, &mut RustTileExec);
+    let mib = 1024.0 * 1024.0;
+    let base_mib = base.llc_read_bytes as f64 / mib;
+    let hw_mib = hw.llc_read_bytes as f64 / mib;
+    assert!((base_mib - 16.5).abs() < 0.1, "baseline reads {base_mib} MiB");
+    assert!((hw_mib - 1.0).abs() < 0.05, "hw reads {hw_mib} MiB");
+    // both write C once (0.5 MiB)
+    assert!((base.llc_write_bytes as f64 / mib - 0.5).abs() < 0.05);
+    assert!((hw.llc_write_bytes as f64 / mib - 0.5).abs() < 0.05);
+}
+
+/// Debug-friendly smoke: a small geometry exercises all three modes'
+/// program generation and numerics quickly.
+#[test]
+fn small_geometry_all_modes_validate() {
+    use axi_mcast::occamy::config::LLC_BASE;
+    use axi_mcast::occamy::{Soc, SocConfig};
+    use axi_mcast::workloads::matmul::{programs, MatmulCompute, MatmulLayout};
+
+    for mode in [MatmulMode::Baseline, MatmulMode::SwMcast, MatmulMode::HwMcast] {
+        let mut cfg = SocConfig::tiny(8);
+        cfg.clusters_per_group = 4;
+        match mode {
+            MatmulMode::HwMcast => {}
+            _ => {
+                cfg.wide_mcast = false;
+                cfg.narrow_mcast = false;
+            }
+        }
+        let l = MatmulLayout::new(64, 8, 16);
+        let mut soc = Soc::new(cfg.clone());
+        let n = l.n;
+        let a: Vec<f64> = (0..n * n).map(|i| ((i % 9) as f64) - 4.0).collect();
+        let b: Vec<f64> = (0..n * n).map(|i| ((i % 11) as f64) - 5.0).collect();
+        soc.mem.write_f64(LLC_BASE + l.a_off, &a);
+        for k in 0..l.n_tiles() {
+            let mut tile = Vec::new();
+            for row in 0..n {
+                for col in 0..l.tile_cols {
+                    tile.push(b[row * n + k * l.tile_cols + col]);
+                }
+            }
+            soc.mem
+                .write_f64(LLC_BASE + l.b_off + k as u64 * l.tile_bytes(), &tile);
+        }
+        soc.load_programs(programs(&cfg, &l, mode));
+        let mut exec = RustTileExec;
+        let mut handler = MatmulCompute::new(l.clone(), &mut exec);
+        soc.run_default(&mut handler)
+            .unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+        let c = soc.mem.read_f64(LLC_BASE + l.c_off, n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let want: f64 = (0..n).map(|kk| a[i * n + kk] * b[kk * n + j]).sum();
+                assert!(
+                    (c[i * n + j] - want).abs() < 1e-9,
+                    "{mode:?}: C[{i}][{j}]"
+                );
+            }
+        }
+    }
+}

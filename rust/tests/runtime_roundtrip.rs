@@ -1,0 +1,94 @@
+//! Rust half of the AOT interchange contract: load every HLO-text
+//! artifact produced by `python/compile/aot.py`, execute on the PJRT
+//! CPU client, and cross-check numerics against the Rust reference.
+//! Skips (with a note) when artifacts haven't been built.
+
+use axi_mcast::runtime::{ArtifactDir, PjrtTileExec, Runtime};
+use axi_mcast::workloads::matmul::{RustTileExec, TileExec};
+
+fn runtime() -> Option<Runtime> {
+    let dir = ArtifactDir::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn all_six_artifacts_compile() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.graph_names().len(), 6, "{:?}", rt.graph_names());
+}
+
+#[test]
+fn rowblock_graph_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let (m, n, k) = (8usize, 256usize, 256usize);
+    let a: Vec<f64> = (0..m * k).map(|i| ((i * 31 % 17) as f64) - 8.0).collect();
+    let b: Vec<f64> = (0..k * n).map(|i| ((i * 13 % 9) as f64) - 4.0).collect();
+    let got = rt.exec_f64("rowblock_f64", &[&a, &b]).unwrap();
+    let mut want = vec![0.0; m * n];
+    RustTileExec.tile(&a, &b, &mut want, m, n, k);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-9, "elem {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn pjrt_tile_exec_paper_shape_and_fallback() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = PjrtTileExec::new(&rt).unwrap();
+    // paper shape → PJRT
+    let (m, n, k) = (8, 16, 256);
+    let a = vec![1.0; m * k];
+    let b = vec![2.0; k * n];
+    let mut c = vec![3.0; m * n];
+    exec.tile(&a, &b, &mut c, m, n, k);
+    assert_eq!(exec.calls, 1);
+    assert!(c.iter().all(|&v| (v - (3.0 + 512.0)).abs() < 1e-9));
+    // other shape → Rust fallback
+    let mut c2 = vec![0.0; 4];
+    exec.tile(&[1.0, 0.0, 0.0, 1.0], &[5.0, 6.0, 7.0, 8.0], &mut c2, 2, 2, 2);
+    assert_eq!(exec.fallback_calls, 1);
+    assert_eq!(c2, vec![5.0, 6.0, 7.0, 8.0]);
+}
+
+#[test]
+fn f32_artifacts_also_execute() {
+    let Some(rt) = runtime() else { return };
+    // f32 graphs exist and compile; execution path is f64-typed in the
+    // runtime helper, so just assert presence + arg metadata here.
+    let g = rt.artifacts.graph("tile_f32").expect("tile_f32");
+    assert_eq!(g.args[0].1, "f32");
+}
+
+/// The full-stack sanity loop the paper's fig. 3d describes, in
+/// miniature: 16 iterations of the tile graph accumulate one cluster's
+/// row block; the result must equal the rowblock graph's output.
+#[test]
+fn iterated_tiles_equal_rowblock() {
+    let Some(rt) = runtime() else { return };
+    let (m, n, k, tiles) = (8usize, 16usize, 256usize, 16usize);
+    let a: Vec<f64> = (0..m * k).map(|i| ((i % 23) as f64) * 0.25 - 2.0).collect();
+    let b_full: Vec<f64> = (0..k * k).map(|i| ((i % 19) as f64) * 0.5 - 4.0).collect();
+    let rowblock = rt.exec_f64("rowblock_f64", &[&a, &b_full]).unwrap();
+    for t in 0..tiles {
+        // B tile t: columns t*16..(t+1)*16
+        let mut b_tile = Vec::with_capacity(k * n);
+        for row in 0..k {
+            for col in 0..n {
+                b_tile.push(b_full[row * k + t * n + col]);
+            }
+        }
+        let c0 = vec![0.0; m * n];
+        let got = rt.exec_f64("tile_f64", &[&a, &b_tile, &c0]).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let w = rowblock[i * k + t * n + j];
+                let g = got[i * n + j];
+                assert!((g - w).abs() < 1e-9, "tile {t} [{i}][{j}]: {g} vs {w}");
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Integration tests: write path of the multicast crossbar (fig. 2b/2d
+//! behaviours end to end through a single XBAR).
+
+mod common;
+
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::types::Resp;
+use axi_mcast::axi::xbar::{Xbar, XbarCfg};
+use common::*;
+
+fn fixture(n_m: usize, n_s: usize, scripts: Vec<Vec<Xfer>>) -> Fixture {
+    let cfg = XbarCfg::new("t", n_m, n_s, cluster_map(n_s, false));
+    let (xbar, pool) = Xbar::with_pool(cfg, 2);
+    Fixture::new(xbar, pool, scripts)
+}
+
+#[test]
+fn unicast_write_roundtrip() {
+    let mut f = fixture(
+        1,
+        2,
+        vec![vec![Xfer::write(AddrSet::unicast(cluster_addr(1, 0x40)), 4, 0)]],
+    );
+    f.run(10_000).expect("no deadlock");
+    f.assert_protocol_clean();
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    assert_eq!(f.masters[0].completed_b[0].1, Resp::Okay);
+    assert_eq!(f.slaves[0].writes.len(), 0);
+    assert_eq!(f.slaves[1].writes.len(), 1);
+    assert_eq!(f.slaves[1].writes[0].beats, 4);
+    assert_eq!(f.slaves[1].writes[0].base, cluster_addr(1, 0x40));
+}
+
+#[test]
+fn mcast_write_forks_to_all_and_joins_one_b() {
+    let mut f = fixture(2, 4, vec![vec![Xfer::write(clusters_set(4, 0x100), 8, 3)], vec![]]);
+    f.run(10_000).expect("no deadlock");
+    f.assert_protocol_clean();
+    // exactly one B at the master
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    assert_eq!(f.masters[0].completed_b[0].1, Resp::Okay);
+    let txn = f.masters[0].issued[0].0;
+    // every slave got the burst exactly once, at its own base address
+    for (i, s) in f.slaves.iter().enumerate() {
+        assert_eq!(s.delivered_txns(), vec![txn], "slave {i}");
+        assert_eq!(s.writes[0].base, cluster_addr(i, 0x100));
+        assert_eq!(s.writes[0].beats, 8);
+    }
+    assert_eq!(f.xbar.stats.aw_mcast, 1);
+    assert_eq!(f.xbar.stats.aw_forks, 4);
+    // W source bandwidth used once, fabric replicated 4x
+    assert_eq!(f.xbar.stats.w_beats_in, 8);
+    assert_eq!(f.xbar.stats.w_beats_out, 32);
+}
+
+#[test]
+fn mcast_b_join_waits_for_slowest_slave() {
+    let mut f = fixture(1, 2, vec![vec![Xfer::write(clusters_set(2, 0), 2, 0)]]);
+    f.slaves[1].b_lat = 40; // slow slave
+    f.run(10_000).unwrap();
+    f.assert_protocol_clean();
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    // the join can only complete after the slow slave's B latency
+    let done = f.slaves[1].writes[0].done_at;
+    assert!(f.xbar.stats.b_joined == 1);
+    assert!(done + 40 <= 10_000);
+}
+
+#[test]
+fn mcast_b_join_merges_slverr() {
+    let mut f = fixture(1, 4, vec![vec![Xfer::write(clusters_set(4, 0), 2, 0)]]);
+    f.slaves[2].wresp = Resp::SlvErr;
+    f.run(10_000).unwrap();
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    assert_eq!(
+        f.masters[0].completed_b[0].1,
+        Resp::SlvErr,
+        "any error leg must SLVERR the joined response"
+    );
+}
+
+#[test]
+fn mcast_subset_of_slaves() {
+    // clusters 2..3 only (fix bit 19, mask bit 18)
+    let set = AddrSet::new(cluster_addr(2, 0), CLUSTER_STRIDE);
+    let mut f = fixture(1, 4, vec![vec![Xfer::write(set, 4, 0)]]);
+    f.run(10_000).unwrap();
+    f.assert_protocol_clean();
+    assert!(f.slaves[0].writes.is_empty());
+    assert!(f.slaves[1].writes.is_empty());
+    assert_eq!(f.slaves[2].writes.len(), 1);
+    assert_eq!(f.slaves[3].writes.len(), 1);
+}
+
+#[test]
+fn concurrent_mcasts_two_masters_no_deadlock() {
+    // Both masters multicast to all 4 slaves repeatedly — the commit
+    // protocol must serialise them without deadlock.
+    let script = |id| {
+        (0..8)
+            .map(|_| Xfer::write(clusters_set(4, 0x40 * id as u64), 4, id))
+            .collect::<Vec<_>>()
+    };
+    let mut f = fixture(2, 4, vec![script(0), script(1)]);
+    f.run(20_000).expect("commit protocol must prevent deadlock");
+    f.assert_protocol_clean();
+    assert_eq!(f.masters[0].completed_b.len(), 8);
+    assert_eq!(f.masters[1].completed_b.len(), 8);
+    for s in &f.slaves {
+        assert_eq!(s.writes.len(), 16);
+    }
+}
+
+#[test]
+fn overlapping_target_sets_no_deadlock() {
+    // M0 → slaves {0,1}, M1 → slaves {2,3}, M2 → all 4: partial overlap
+    // exercises grant stealing by the priority encoder.
+    let m0: Vec<Xfer> = (0..6)
+        .map(|_| Xfer::write(AddrSet::new(CLUSTER_BASE, CLUSTER_STRIDE), 4, 0))
+        .collect();
+    let m2_set = AddrSet::new(cluster_addr(2, 0), CLUSTER_STRIDE);
+    let m1: Vec<Xfer> = (0..6).map(|_| Xfer::write(m2_set, 4, 1)).collect();
+    let m2: Vec<Xfer> = (0..6).map(|_| Xfer::write(clusters_set(4, 0), 4, 2)).collect();
+    let mut f = fixture(3, 4, vec![m0, m1, m2]);
+    f.run(30_000).expect("no deadlock under overlapping mcasts");
+    f.assert_protocol_clean();
+    assert_eq!(f.slaves[0].writes.len(), 12); // 6 from m0 + 6 from m2
+    assert_eq!(f.slaves[2].writes.len(), 12); // 6 from m1 + 6 from m2
+}
+
+#[test]
+fn unicast_and_mcast_mix_orders_cleanly() {
+    let mut script = Vec::new();
+    for i in 0..4 {
+        script.push(Xfer::write(AddrSet::unicast(cluster_addr(i % 4, 0)), 2, 0));
+        script.push(Xfer::write(clusters_set(4, 0x80), 2, 0));
+    }
+    let mut f = fixture(2, 4, vec![script.clone(), script]);
+    f.run(30_000).unwrap();
+    f.assert_protocol_clean();
+    assert_eq!(f.masters[0].completed_b.len(), 8);
+    assert_eq!(f.masters[1].completed_b.len(), 8);
+}
+
+#[test]
+fn mcast_disabled_returns_decerr() {
+    let mut cfg = XbarCfg::new("t", 1, 4, cluster_map(4, false));
+    cfg.mcast_enabled = false;
+    let (xbar, pool) = Xbar::with_pool(cfg, 2);
+    let mut f = Fixture::new(xbar, pool, vec![vec![Xfer::write(clusters_set(4, 0), 2, 0)]]);
+    f.run(10_000).unwrap();
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    assert_eq!(f.masters[0].completed_b[0].1, Resp::DecErr);
+    for s in &f.slaves {
+        assert!(s.writes.is_empty(), "baseline xbar must not deliver mcast");
+    }
+}
+
+#[test]
+fn unroutable_unicast_decerr() {
+    let mut f = fixture(1, 2, vec![vec![Xfer::write(AddrSet::unicast(0xDEAD_0000), 3, 0)]]);
+    f.run(10_000).unwrap();
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    assert_eq!(f.masters[0].completed_b[0].1, Resp::DecErr);
+}
+
+#[test]
+fn same_id_different_slave_serialises() {
+    // two writes, same AXI ID, different slaves: the second must wait
+    // for the first B (fig. 2d ordering table)
+    let script = vec![
+        Xfer::write(AddrSet::unicast(cluster_addr(0, 0)), 2, 7),
+        Xfer::write(AddrSet::unicast(cluster_addr(1, 0)), 2, 7),
+    ];
+    let mut f = fixture(1, 2, vec![script]);
+    f.slaves[0].b_lat = 30;
+    f.run(10_000).unwrap();
+    f.assert_protocol_clean();
+    assert_eq!(f.masters[0].completed_b.len(), 2);
+    assert!(f.xbar.stats.stall_id_conflict > 0, "must have stalled on ID");
+    // slave 1's write can only *finish* after slave 0's B was returned
+    let d0 = f.slaves[0].writes[0].done_at;
+    let d1 = f.slaves[1].writes[0].done_at;
+    assert!(d1 > d0 + 30, "d0={d0} d1={d1}");
+}
+
+#[test]
+fn mcast_throughput_half_rate_registered_fork() {
+    // One master multicasting a long burst to 4 slaves: the registered
+    // all-ready fork sustains ~1 beat per 2 cycles (fig. 3b calibration).
+    let mut f = fixture(1, 4, vec![vec![Xfer::write(clusters_set(4, 0), 64, 0)]]);
+    let cycles = f.run(10_000).unwrap();
+    f.assert_protocol_clean();
+    assert!(
+        (2 * 64..2 * 64 + 40).contains(&(cycles as usize)),
+        "expected ~half line rate, took {cycles} cycles"
+    );
+}
+
+#[test]
+fn mcast_throughput_full_rate_with_ideal_fork() {
+    // Ablation: cooldown 0 restores a single-cycle fork at line rate.
+    let mut cfg = XbarCfg::new("t", 1, 4, cluster_map(4, false));
+    cfg.mcast_w_cooldown = 0;
+    let (xbar, pool) = Xbar::with_pool(cfg, 2);
+    let mut f = Fixture::new(xbar, pool, vec![vec![Xfer::write(clusters_set(4, 0), 64, 0)]]);
+    let cycles = f.run(10_000).unwrap();
+    f.assert_protocol_clean();
+    assert!(
+        cycles < 64 + 40,
+        "ideal fork should be near line rate, took {cycles} cycles"
+    );
+}
