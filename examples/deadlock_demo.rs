@@ -8,12 +8,13 @@
 
 use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
 use axi_mcast::axi::mcast::AddrSet;
-use axi_mcast::axi::types::{AwBeat, WBeat};
+use axi_mcast::axi::types::{AwBeat, LinkId, WBeat};
 use axi_mcast::axi::xbar::{Xbar, XbarCfg};
 use axi_mcast::util::cli::Args;
 
 struct Master {
-    link: usize,
+    idx: usize,
+    link: LinkId,
     to_send: u32,
     txn: u64,
     started: bool,
@@ -49,9 +50,10 @@ fn main() -> Result<(), String> {
     xbar.mux[1].rr_mcast = 1;
 
     let both = AddrSet::new(0x0100_0000, 0x4_0000); // slaves {0,1}
+    let s_links = xbar.s_links.clone();
     let mut masters = [
-        Master { link: 0, to_send: 16, txn: 1, started: false, got_b: false },
-        Master { link: 1, to_send: 16, txn: 2, started: false, got_b: false },
+        Master { idx: 0, link: xbar.m_links[0], to_send: 16, txn: 1, started: false, got_b: false },
+        Master { idx: 1, link: xbar.m_links[1], to_send: 16, txn: 2, started: false, got_b: false },
     ];
     let mut slaves: Vec<axi_mcast::axi::golden::SimSlave> =
         (0..2).map(axi_mcast::axi::golden::SimSlave::new).collect();
@@ -69,13 +71,13 @@ fn main() -> Result<(), String> {
                     beat_bytes: 64,
                     is_mcast: true,
                     exclude: None,
-                    src: m.link,
+                    src: m.idx,
                     txn: m.txn,
                 });
             }
             if m.started && m.to_send > 0 && pool[m.link].w.can_push() {
                 m.to_send -= 1;
-                pool[m.link].w.push(WBeat { last: m.to_send == 0, src: m.link, txn: m.txn });
+                pool[m.link].w.push(WBeat { last: m.to_send == 0, src: m.idx, txn: m.txn });
             }
             if pool[m.link].b.pop().is_some() {
                 m.got_b = true;
@@ -83,13 +85,10 @@ fn main() -> Result<(), String> {
         }
         xbar.step(&mut pool);
         for (i, s) in slaves.iter_mut().enumerate() {
-            s.step(cy, &mut pool[2 + i]);
+            s.step(cy, &mut pool[s_links[i]]);
         }
-        let mut moved = 0;
-        for l in pool.iter_mut() {
-            l.tick();
-            moved += l.moved();
-        }
+        pool.tick_all();
+        let moved = pool.moved_total();
         if moved != moved_prev {
             moved_prev = moved;
             last_move = cy;

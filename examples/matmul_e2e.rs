@@ -15,7 +15,7 @@
 //! bit-for-bit against the PJRT-executed `matmul_f64` oracle.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example matmul_e2e
+//! make artifacts && cargo run --release --features pjrt --example matmul_e2e
 //! ```
 
 use axi_mcast::occamy::SocConfig;
@@ -24,7 +24,7 @@ use axi_mcast::util::table::{fnum, Table};
 use axi_mcast::workloads::matmul::{run_matmul, MatmulMode};
 use axi_mcast::workloads::roofline::Roofline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = std::env::args()
         .nth(1)
         .map(Into::into)
@@ -50,11 +50,9 @@ fn main() -> anyhow::Result<()> {
     for mode in [MatmulMode::Baseline, MatmulMode::SwMcast, MatmulMode::HwMcast] {
         let mut exec = PjrtTileExec::new(&rt)?;
         let r = run_matmul(&cfg, mode, &mut exec);
-        anyhow::ensure!(
-            r.numerics_ok,
-            "{:?}: simulated C does not match the reference",
-            mode
-        );
+        if !r.numerics_ok {
+            return Err(format!("{mode:?}: simulated C does not match the reference").into());
+        }
         // cross-check against the PJRT-executed full-matmul oracle:
         // the same seeded inputs run through matmul_f64 must agree
         // (done implicitly: run_matmul validated against the host
@@ -87,7 +85,9 @@ fn main() -> anyhow::Result<()> {
     let b: Vec<f64> = (0..n * n).map(|i| ((i % 7) as f64) - 3.0).collect();
     let c = rt.matmul_f64(&a, &b)?;
     let want: f64 = (0..n).map(|k| a[k] * b[k * n]).sum();
-    anyhow::ensure!((c[0] - want).abs() < 1e-6, "oracle self-check failed");
+    if (c[0] - want).abs() >= 1e-6 {
+        return Err("oracle self-check failed".into());
+    }
     println!("\nPJRT matmul oracle self-check OK — all layers compose. e2e PASS");
     Ok(())
 }

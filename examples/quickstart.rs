@@ -48,9 +48,11 @@ fn main() {
     let cfg = XbarCfg::new("quickstart", 1, 4, map);
     let (mut xbar, mut pool) = Xbar::with_pool(cfg, 2);
     let mut slaves: Vec<SimSlave> = (0..4).map(SimSlave::new).collect();
+    let m0 = xbar.m_links[0];
+    let s_links = xbar.s_links.clone();
 
     // one 8-beat multicast write burst
-    pool[0].aw.push(AwBeat {
+    pool[m0].aw.push(AwBeat {
         id: 0,
         dest,
         beats: 8,
@@ -63,9 +65,9 @@ fn main() {
     let mut beats_left = 8;
     let mut b_at = None;
     for cy in 0..200u64 {
-        if beats_left > 0 && pool[0].w.can_push() {
+        if beats_left > 0 && pool[m0].w.can_push() {
             beats_left -= 1;
-            pool[0].w.push(WBeat {
+            pool[m0].w.push(WBeat {
                 last: beats_left == 0,
                 src: 0,
                 txn: 1,
@@ -73,15 +75,13 @@ fn main() {
         }
         xbar.step(&mut pool);
         for (i, s) in slaves.iter_mut().enumerate() {
-            s.step(cy, &mut pool[1 + i]);
+            s.step(cy, &mut pool[s_links[i]]);
         }
-        if let Some(b) = pool[0].b.pop() {
+        if let Some(b) = pool[m0].b.pop() {
             b_at = Some((cy, b.resp));
             break;
         }
-        for l in pool.iter_mut() {
-            l.tick();
-        }
+        pool.tick_all();
     }
 
     let (cy, resp) = b_at.expect("joined B response");

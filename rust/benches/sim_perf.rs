@@ -32,6 +32,8 @@ fn bench_xbar_16x16(cycles: u64) -> f64 {
     let n = 16;
     let cfg = XbarCfg::new("perf", n, n, cluster_map(n));
     let (mut xbar, mut pool) = Xbar::with_pool(cfg, 2);
+    let m_links = xbar.m_links.clone();
+    let s_links = xbar.s_links.clone();
     let mut slaves: Vec<SimSlave> = (0..n).map(SimSlave::new).collect();
     let mut txn = 1u64;
     let mut sent = vec![0u32; n];
@@ -39,9 +41,10 @@ fn bench_xbar_16x16(cycles: u64) -> f64 {
     let t0 = Instant::now();
     for cy in 0..cycles {
         for m in 0..n {
-            if sent[m] == 0 && pool[m].aw.can_push() {
+            let ml = m_links[m];
+            if sent[m] == 0 && pool[ml].aw.can_push() {
                 sent[m] = 16;
-                pool[m].aw.push(AwBeat {
+                pool[ml].aw.push(AwBeat {
                     id: 0,
                     dest,
                     beats: 16,
@@ -53,23 +56,21 @@ fn bench_xbar_16x16(cycles: u64) -> f64 {
                 });
                 txn += 1;
             }
-            if sent[m] > 0 && pool[m].w.can_push() {
+            if sent[m] > 0 && pool[ml].w.can_push() {
                 sent[m] -= 1;
-                pool[m].w.push(WBeat {
+                pool[ml].w.push(WBeat {
                     last: sent[m] == 0,
                     src: m,
                     txn: txn - 1,
                 });
             }
-            let _ = pool[m].b.pop();
+            let _ = pool[ml].b.pop();
         }
         xbar.step(&mut pool);
         for (i, s) in slaves.iter_mut().enumerate() {
-            s.step(cy, &mut pool[n + i]);
+            s.step(cy, &mut pool[s_links[i]]);
         }
-        for l in pool.iter_mut() {
-            l.tick();
-        }
+        pool.tick_all();
     }
     cycles as f64 / t0.elapsed().as_secs_f64()
 }

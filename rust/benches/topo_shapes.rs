@@ -1,0 +1,38 @@
+//! Bench/regeneration harness for the topology-shape sweep: the 1-to-N
+//! broadcast on every canned shape (flat N×N, 2-level tree, 3-level
+//! tree, mesh of tiles), hardware multicast vs the unicast train, with
+//! beat-level fork accounting and simulator throughput.
+
+use std::time::Instant;
+
+use axi_mcast::coordinator::experiments::{assert_topo_row_invariants, topo_sweep};
+
+fn main() {
+    let (endpoints, bursts, beats) = (16usize, 8usize, 32u32);
+    let t0 = Instant::now();
+    let (rows, table, json) = topo_sweep(endpoints, bursts, beats);
+    let dt = t0.elapsed();
+    println!(
+        "topo_shapes — {endpoints}-endpoint 1-to-N broadcast, {bursts} rounds x {beats} beats"
+    );
+    println!("{}", table.render());
+    let mut sim_cycles = 0u64;
+    for r in &rows {
+        assert_topo_row_invariants(r);
+        sim_cycles += r.uni.cycles + r.hw.cycles;
+        println!(
+            "{:<12} mcast beat amplification: {} W in -> {} W out ({} forked), speedup {:.2}x",
+            r.hw.shape,
+            r.hw.stats.w_beats_in,
+            r.hw.stats.w_beats_out,
+            r.hw.stats.w_fork_extra,
+            r.speedup
+        );
+    }
+    println!(
+        "bench: {} simulated cycles in {dt:?} ({:.2} Mcycle/s)",
+        sim_cycles,
+        sim_cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!("JSON {json}");
+}

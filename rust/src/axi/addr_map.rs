@@ -44,22 +44,41 @@ impl AddrRule {
 }
 
 /// Errors building an address map.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MapError {
-    #[error("rule '{name}': {source}")]
     BadMcastRule {
         name: String,
-        #[source]
         source: MfeError,
     },
-    #[error("rules '{a}' and '{b}' overlap")]
     Overlap { a: String, b: String },
-    #[error("rule '{name}' targets slave {slave} >= {n_slaves}")]
     BadSlave {
         name: String,
         slave: usize,
         n_slaves: usize,
     },
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::BadMcastRule { name, source } => write!(f, "rule '{name}': {source}"),
+            MapError::Overlap { a, b } => write!(f, "rules '{a}' and '{b}' overlap"),
+            MapError::BadSlave {
+                name,
+                slave,
+                n_slaves,
+            } => write!(f, "rule '{name}' targets slave {slave} >= {n_slaves}"),
+        }
+    }
+}
+
+impl std::error::Error for MapError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MapError::BadMcastRule { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// Result of multicast decode: the `aw_select` vector.

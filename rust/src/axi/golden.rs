@@ -9,7 +9,7 @@
 use std::collections::VecDeque;
 
 use super::monitor::OrderChecker;
-use super::types::{AxiLink, BBeat, RBeat, Resp, Txn};
+use super::types::{AxiLink, BBeat, LinkId, LinkPool, RBeat, Resp, Txn};
 use crate::sim::Cycle;
 
 /// A recorded, completed write burst.
@@ -138,6 +138,11 @@ impl SimSlave {
                 }
             }
         }
+    }
+
+    /// One cycle against a pooled link (topology-built fabrics).
+    pub fn step_on(&mut self, cy: Cycle, pool: &mut LinkPool, link: LinkId) {
+        self.step(cy, &mut pool[link]);
     }
 
     pub fn assert_clean(&self) {

@@ -22,15 +22,30 @@ pub struct AddrSet {
 }
 
 /// Errors converting interval rules to mask form.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MfeError {
-    #[error("region [{start:#x}, {end:#x}) is empty or inverted")]
     EmptyRegion { start: Addr, end: Addr },
-    #[error("region size {size:#x} is not a power of two")]
     NotPow2 { size: u64 },
-    #[error("region start {start:#x} is not aligned to its size {size:#x}")]
     Misaligned { start: Addr, size: u64 },
 }
+
+impl std::fmt::Display for MfeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MfeError::EmptyRegion { start, end } => {
+                write!(f, "region [{start:#x}, {end:#x}) is empty or inverted")
+            }
+            MfeError::NotPow2 { size } => {
+                write!(f, "region size {size:#x} is not a power of two")
+            }
+            MfeError::Misaligned { start, size } => {
+                write!(f, "region start {start:#x} is not aligned to its size {size:#x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MfeError {}
 
 impl AddrSet {
     /// A singleton set — a plain unicast address.

@@ -16,6 +16,9 @@
 //!   grant/commit fabric, and AR/R read routing.
 //! * [`monitor`] — protocol checkers used by tests.
 //! * [`golden`] — reference memory model for traffic equivalence tests.
+//! * [`topology`] — declarative builder instantiating arbitrary
+//!   hierarchical multi-crossbar graphs (flat, trees, meshes) over a
+//!   shared [`types::LinkPool`].
 
 pub mod addr_map;
 pub mod demux;
@@ -23,10 +26,12 @@ pub mod golden;
 pub mod mcast;
 pub mod monitor;
 pub mod mux;
+pub mod topology;
 pub mod types;
 pub mod xbar;
 
 pub use addr_map::{AddrMap, AddrRule, McastDecode};
 pub use mcast::AddrSet;
+pub use topology::{Topology, TopologyBuilder, TopoShape};
 pub use types::*;
 pub use xbar::{Xbar, XbarCfg, XbarStats};

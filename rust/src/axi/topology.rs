@@ -1,0 +1,782 @@
+//! Declarative topology subsystem: build arbitrary hierarchical graphs
+//! of multicast crossbars over one shared [`LinkPool`].
+//!
+//! Before this module the two-level Occamy shape was hard-wired in
+//! `occamy::noc`; the builder makes topology *data*:
+//!
+//! * [`TopologyBuilder`] — the low-level graph API: add crossbar nodes,
+//!   wire slave→master ports with fresh pool links, expose named
+//!   external ports, then [`TopologyBuilder::build`] (every port must
+//!   be wired exactly once).
+//! * [`build_tree`] — K-ary trees of any depth over a uniform endpoint
+//!   array, with hierarchical exclude-scope multicast routing at every
+//!   level. `arity = [n]` degenerates to a flat N×M crossbar;
+//!   `arity = [4, 8]` is the paper's Occamy group/top pair
+//!   (`occamy::noc::build_network` is one instance of it);
+//!   deeper arities give 3+-level hierarchies (the scope-merge rule in
+//!   `Xbar::decode_aw` keeps pruning exact).
+//! * [`build_mesh`] — a fully-connected mesh of peer crossbar tiles
+//!   with direct per-region routes (no default port, no scopes): a
+//!   multicast decomposes into per-tile mask-form subsets at the source
+//!   tile, one hop to every peer.
+//!
+//! All shapes deliver a given multicast request to exactly the decoded
+//! endpoint set, exactly once — the parity suites in
+//! `tests/topology_parity.rs` check beat-set equality across shapes
+//! against the flat golden reference.
+
+use super::addr_map::{AddrMap, AddrRule};
+use super::types::{AxiLink, LinkId, LinkPool};
+use super::xbar::{Xbar, XbarCfg, XbarStats};
+use crate::sim::sched::Scheduler;
+use crate::sim::Cycle;
+
+/// Handle to a crossbar node inside a builder/topology (index into
+/// `Topology::xbars`, stable across `build`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+struct NodeSpec {
+    cfg: XbarCfg,
+    m_ports: Vec<Option<LinkId>>,
+    s_ports: Vec<Option<LinkId>>,
+}
+
+/// Low-level declarative graph builder.
+pub struct TopologyBuilder<'p> {
+    name: String,
+    pool: &'p mut LinkPool,
+    link_depth: usize,
+    nodes: Vec<NodeSpec>,
+    ext_m: Vec<(String, LinkId)>,
+    ext_s: Vec<(String, LinkId)>,
+}
+
+impl<'p> TopologyBuilder<'p> {
+    pub fn new(name: &str, pool: &'p mut LinkPool, link_depth: usize) -> TopologyBuilder<'p> {
+        TopologyBuilder {
+            name: name.to_string(),
+            pool,
+            link_depth,
+            nodes: Vec::new(),
+            ext_m: Vec::new(),
+            ext_s: Vec::new(),
+        }
+    }
+
+    fn fresh_link(&mut self) -> LinkId {
+        self.pool.alloc(AxiLink::new(self.link_depth))
+    }
+
+    /// Add a crossbar node; its ports start unwired.
+    pub fn node(&mut self, cfg: XbarCfg) -> NodeId {
+        let (nm, ns) = (cfg.n_masters, cfg.n_slaves);
+        self.nodes.push(NodeSpec {
+            cfg,
+            m_ports: vec![None; nm],
+            s_ports: vec![None; ns],
+        });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    fn bind_m(&mut self, node: NodeId, port: usize, link: LinkId) {
+        let slot = &mut self.nodes[node.0].m_ports[port];
+        assert!(
+            slot.is_none(),
+            "{}: node {} master port {port} wired twice",
+            self.name,
+            node.0
+        );
+        *slot = Some(link);
+    }
+
+    fn bind_s(&mut self, node: NodeId, port: usize, link: LinkId) {
+        let slot = &mut self.nodes[node.0].s_ports[port];
+        assert!(
+            slot.is_none(),
+            "{}: node {} slave port {port} wired twice",
+            self.name,
+            node.0
+        );
+        *slot = Some(link);
+    }
+
+    /// Wire `from`'s slave port into `to`'s master port with a fresh
+    /// link (requests flow from→to; responses back).
+    pub fn connect(&mut self, from: NodeId, s_port: usize, to: NodeId, m_port: usize) -> LinkId {
+        let l = self.fresh_link();
+        self.bind_s(from, s_port, l);
+        self.bind_m(to, m_port, l);
+        l
+    }
+
+    /// Expose a master port to an external device (the device pushes
+    /// requests into the returned link).
+    pub fn ext_master(&mut self, node: NodeId, m_port: usize, name: &str) -> LinkId {
+        let l = self.fresh_link();
+        self.bind_m(node, m_port, l);
+        self.ext_m.push((name.to_string(), l));
+        l
+    }
+
+    /// Expose a slave port to an external device (the fabric delivers
+    /// requests on the returned link).
+    pub fn ext_slave(&mut self, node: NodeId, s_port: usize, name: &str) -> LinkId {
+        let l = self.fresh_link();
+        self.bind_s(node, s_port, l);
+        self.ext_s.push((name.to_string(), l));
+        l
+    }
+
+    /// Instantiate the crossbars. Panics on any unwired port — a
+    /// topology with dangling ports would deadlock silently.
+    pub fn build(self) -> Topology {
+        let name = self.name;
+        let xbars: Vec<Xbar> = self
+            .nodes
+            .into_iter()
+            .enumerate()
+            .map(|(n, spec)| {
+                let m: Vec<LinkId> = spec
+                    .m_ports
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, l)| {
+                        l.unwrap_or_else(|| {
+                            panic!("{name}: node {n} master port {p} left unwired")
+                        })
+                    })
+                    .collect();
+                let s: Vec<LinkId> = spec
+                    .s_ports
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, l)| {
+                        l.unwrap_or_else(|| panic!("{name}: node {n} slave port {p} left unwired"))
+                    })
+                    .collect();
+                Xbar::new(spec.cfg, m, s)
+            })
+            .collect();
+        Topology {
+            name,
+            xbars,
+            ext_m: self.ext_m,
+            ext_s: self.ext_s,
+        }
+    }
+}
+
+/// A built crossbar graph.
+pub struct Topology {
+    pub name: String,
+    pub xbars: Vec<Xbar>,
+    ext_m: Vec<(String, LinkId)>,
+    ext_s: Vec<(String, LinkId)>,
+}
+
+impl Topology {
+    pub fn ext_masters(&self) -> &[(String, LinkId)] {
+        &self.ext_m
+    }
+
+    pub fn ext_slaves(&self) -> &[(String, LinkId)] {
+        &self.ext_s
+    }
+
+    /// Look up a named external master link.
+    pub fn ext_master(&self, name: &str) -> LinkId {
+        self.ext_m
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("{}: no external master '{name}'", self.name))
+            .1
+    }
+
+    /// Look up a named external slave link.
+    pub fn ext_slave(&self, name: &str) -> LinkId {
+        self.ext_s
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("{}: no external slave '{name}'", self.name))
+            .1
+    }
+
+    /// Advance every crossbar one cycle (unscheduled).
+    pub fn step(&mut self, pool: &mut LinkPool) {
+        for x in &mut self.xbars {
+            x.step(pool);
+        }
+    }
+
+    /// Advance with idle-skips through the generic scheduler.
+    pub fn step_scheduled(&mut self, cy: Cycle, pool: &mut LinkPool, sched: &mut Scheduler) {
+        step_xbars_scheduled(&mut self.xbars, cy, pool, sched);
+    }
+
+    /// Precise in-flight check (scans crossbar state).
+    pub fn busy(&self) -> bool {
+        self.xbars.iter().any(|x| x.busy())
+    }
+
+    /// Cheap cached busy check (updated whenever an xbar steps).
+    pub fn maybe_busy(&self) -> bool {
+        self.xbars.iter().any(|x| x.maybe_busy)
+    }
+
+    /// Aggregate statistics over all crossbars.
+    pub fn stats_sum(&self) -> XbarStats {
+        sum_xbar_stats(&self.xbars)
+    }
+}
+
+/// Step a crossbar set with idle-skips (shared by [`Topology`] and
+/// `occamy::noc::Network`, which flattens a topology).
+pub fn step_xbars_scheduled(
+    xbars: &mut [Xbar],
+    cy: Cycle,
+    pool: &mut LinkPool,
+    sched: &mut Scheduler,
+) {
+    for x in xbars {
+        sched.step_component(cy, x, pool);
+    }
+}
+
+/// Aggregate statistics over a crossbar set.
+pub fn sum_xbar_stats(xbars: &[Xbar]) -> XbarStats {
+    let mut acc = XbarStats::default();
+    for x in xbars {
+        acc.add(&x.stats);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------- shapes
+
+/// Uniform array of endpoint windows: endpoint `i` owns
+/// `[base + i*stride, base + (i+1)*stride)`. `stride` must be a power
+/// of two and `base` aligned to every aggregate the shapes form, so any
+/// power-of-two endpoint group is one mask-form rule.
+#[derive(Debug, Clone)]
+pub struct EndpointMap {
+    pub base: u64,
+    pub stride: u64,
+    pub count: usize,
+}
+
+impl EndpointMap {
+    pub fn addr(&self, i: usize) -> u64 {
+        self.base + i as u64 * self.stride
+    }
+
+    /// `[start, end)` region of endpoints `[first, first+count)`.
+    pub fn region(&self, first: usize, count: usize) -> (u64, u64) {
+        (self.addr(first), self.addr(first + count))
+    }
+
+    fn rule(&self, i: usize, slave: usize) -> AddrRule {
+        AddrRule::new(self.addr(i), self.addr(i + 1), slave, &format!("ep{i}")).with_mcast()
+    }
+}
+
+/// Knobs shared by the canned shape builders (a strict subset of
+/// [`XbarCfg`]; everything else keeps the crossbar defaults, with a
+/// per-node `tune` hook for the rest).
+#[derive(Debug, Clone)]
+pub struct FabricParams {
+    pub mcast_enabled: bool,
+    pub commit_protocol: bool,
+    pub mcast_w_cooldown: u32,
+}
+
+impl Default for FabricParams {
+    fn default() -> FabricParams {
+        FabricParams {
+            mcast_enabled: true,
+            commit_protocol: true,
+            mcast_w_cooldown: 1,
+        }
+    }
+}
+
+impl FabricParams {
+    fn apply(&self, cfg: &mut XbarCfg) {
+        cfg.mcast_enabled = self.mcast_enabled;
+        cfg.commit_protocol = self.commit_protocol;
+        cfg.mcast_w_cooldown = self.mcast_w_cooldown;
+    }
+}
+
+/// A K-ary tree specification. `arity` lists children-per-node bottom-up:
+/// `arity[0]` endpoints per leaf crossbar, `arity[1]` leaves per next
+/// level, …; the product must equal `endpoints.count` so the final
+/// level is a single root. Extra root-level ports model service
+/// devices (LLC, barrier peripheral) and extra injectors (barrier
+/// unit's own master port).
+#[derive(Debug, Clone)]
+pub struct TreeSpec {
+    pub name: String,
+    pub endpoints: EndpointMap,
+    pub arity: Vec<usize>,
+    pub params: FabricParams,
+    /// Root-level service windows `(start, end, name)` — plain unicast
+    /// rules (not multicast-capable), one slave port each.
+    pub services: Vec<(u64, u64, String)>,
+    /// Extra master ports on the root node (named `top{i}-m`).
+    pub n_root_masters: usize,
+}
+
+/// A tree topology plus its endpoint/service link handles.
+pub struct TreeTopology {
+    pub topo: Topology,
+    /// Per endpoint: the link its master drives requests into.
+    pub endpoint_m: Vec<LinkId>,
+    /// Per endpoint: the link delivering requests to its slave port.
+    pub endpoint_s: Vec<LinkId>,
+    /// One per `TreeSpec::services` entry, in order.
+    pub service_s: Vec<LinkId>,
+    /// One per extra root master port.
+    pub root_m: Vec<LinkId>,
+    /// Root node (also `topo.xbars.last()`).
+    pub root: NodeId,
+}
+
+/// Build a hierarchical tree; `tune(cfg, level)` may adjust each node's
+/// crossbar knobs (level 0 = leaves, `arity.len() - 1` = root).
+pub fn build_tree(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    spec: &TreeSpec,
+    mut tune: impl FnMut(&mut XbarCfg, usize),
+) -> TreeTopology {
+    let eps = &spec.endpoints;
+    assert!(!spec.arity.is_empty(), "{}: empty arity", spec.name);
+    assert!(
+        eps.stride.is_power_of_two(),
+        "{}: endpoint stride must be a power of two",
+        spec.name
+    );
+    let levels = spec.arity.len();
+    // nodes per level and endpoints covered per node
+    let mut n_nodes = Vec::with_capacity(levels);
+    let mut span = Vec::with_capacity(levels); // endpoints per node
+    let mut cover = 1usize;
+    for (l, &a) in spec.arity.iter().enumerate() {
+        assert!(a >= 1, "{}: arity[{l}] must be >= 1", spec.name);
+        cover *= a;
+        assert_eq!(
+            eps.count % cover,
+            0,
+            "{}: arity prefix {cover} must divide {} endpoints",
+            spec.name,
+            eps.count
+        );
+        span.push(cover);
+        n_nodes.push(eps.count / cover);
+    }
+    assert_eq!(
+        n_nodes[levels - 1],
+        1,
+        "{}: arity product must equal the endpoint count (single root)",
+        spec.name
+    );
+
+    let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
+
+    // --- leaf level: endpoint rules ---
+    let mut endpoint_m = Vec::with_capacity(eps.count);
+    let mut endpoint_s = Vec::with_capacity(eps.count);
+    let a0 = spec.arity[0];
+    let is_root_level = |l: usize| l == levels - 1;
+    let mut level_nodes: Vec<NodeId> = Vec::new();
+    for g in 0..n_nodes[0] {
+        let first = g * a0;
+        let rules: Vec<AddrRule> = (0..a0).map(|i| eps.rule(first + i, i)).collect();
+        let root = is_root_level(0);
+        let extra_s = if root { spec.services.len() } else { 1 };
+        let extra_m = if root { spec.n_root_masters } else { 1 };
+        let mut rules = rules;
+        if root {
+            for (si, (s, e, name)) in spec.services.iter().enumerate() {
+                rules.push(AddrRule::new(*s, *e, a0 + si, name));
+            }
+        }
+        let n_slaves = a0 + extra_s;
+        let n_masters = a0 + extra_m;
+        let map = AddrMap::new(rules, n_slaves)
+            .unwrap_or_else(|e| panic!("{}: leaf {g} map: {e}", spec.name));
+        let mut cfg = XbarCfg::new(&format!("{}-l0n{}", spec.name, g), n_masters, n_slaves, map);
+        spec.params.apply(&mut cfg);
+        if !root {
+            cfg.default_slave = Some(a0);
+            cfg.local_scope = Some(eps.region(first, a0));
+        }
+        tune(&mut cfg, 0);
+        let node = b.node(cfg);
+        for i in 0..a0 {
+            endpoint_m.push(b.ext_master(node, i, &format!("ep{}-m", first + i)));
+            endpoint_s.push(b.ext_slave(node, i, &format!("ep{}-s", first + i)));
+        }
+        level_nodes.push(node);
+    }
+
+    // --- upper levels: child-region rules ---
+    for l in 1..levels {
+        let al = spec.arity[l];
+        let child_span = span[l - 1];
+        let root = is_root_level(l);
+        let mut next_nodes = Vec::with_capacity(n_nodes[l]);
+        for k in 0..n_nodes[l] {
+            let first_ep = k * span[l];
+            let mut rules: Vec<AddrRule> = (0..al)
+                .map(|j| {
+                    let (s, e) = eps.region(first_ep + j * child_span, child_span);
+                    AddrRule::new(s, e, j, &format!("child{j}")).with_mcast()
+                })
+                .collect();
+            let extra_s = if root { spec.services.len() } else { 1 };
+            let extra_m = if root { spec.n_root_masters } else { 1 };
+            if root {
+                for (si, (s, e, name)) in spec.services.iter().enumerate() {
+                    rules.push(AddrRule::new(*s, *e, al + si, name));
+                }
+            }
+            let n_slaves = al + extra_s;
+            let n_masters = al + extra_m;
+            let map = AddrMap::new(rules, n_slaves)
+                .unwrap_or_else(|e| panic!("{}: level {l} node {k} map: {e}", spec.name));
+            let mut cfg =
+                XbarCfg::new(&format!("{}-l{}n{}", spec.name, l, k), n_masters, n_slaves, map);
+            spec.params.apply(&mut cfg);
+            if !root {
+                cfg.default_slave = Some(al);
+                cfg.local_scope = Some(eps.region(first_ep, span[l]));
+            }
+            tune(&mut cfg, l);
+            let node = b.node(cfg);
+            // wire the children: child j's up-out slave port feeds this
+            // node's master port j; this node's slave port j feeds child
+            // j's down-in master port.
+            let child_a = spec.arity[l - 1];
+            for j in 0..al {
+                let child = level_nodes[k * al + j];
+                b.connect(child, child_a, node, j);
+                b.connect(node, j, child, child_a);
+            }
+            next_nodes.push(node);
+        }
+        level_nodes = next_nodes;
+    }
+
+    let root = *level_nodes.last().expect("tree has a root");
+    let root_al = spec.arity[levels - 1];
+    let service_s: Vec<LinkId> = spec
+        .services
+        .iter()
+        .enumerate()
+        .map(|(si, (_, _, name))| b.ext_slave(root, root_al + si, name))
+        .collect();
+    let root_m: Vec<LinkId> = (0..spec.n_root_masters)
+        .map(|i| b.ext_master(root, root_al + i, &format!("top{i}-m")))
+        .collect();
+
+    TreeTopology {
+        topo: b.build(),
+        endpoint_m,
+        endpoint_s,
+        service_s,
+        root_m,
+        root,
+    }
+}
+
+/// A fully-connected mesh of `tiles` peer crossbars, each owning a
+/// contiguous aligned block of endpoints with direct point-to-point
+/// routes to every other tile's region.
+#[derive(Debug, Clone)]
+pub struct MeshSpec {
+    pub name: String,
+    pub endpoints: EndpointMap,
+    pub tiles: usize,
+    pub params: FabricParams,
+}
+
+pub struct MeshTopology {
+    pub topo: Topology,
+    pub endpoint_m: Vec<LinkId>,
+    pub endpoint_s: Vec<LinkId>,
+}
+
+pub fn build_mesh(pool: &mut LinkPool, link_depth: usize, spec: &MeshSpec) -> MeshTopology {
+    let eps = &spec.endpoints;
+    let t = spec.tiles;
+    assert!(t >= 2, "{}: a mesh needs at least 2 tiles", spec.name);
+    assert_eq!(
+        eps.count % t,
+        0,
+        "{}: tiles must divide the endpoint count",
+        spec.name
+    );
+    let e = eps.count / t;
+    let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
+
+    // nodes first (ports: masters = e locals + t-1 peers-in;
+    // slaves = e locals + t-1 peers-out)
+    let mut nodes = Vec::with_capacity(t);
+    for q in 0..t {
+        let first = q * e;
+        let mut rules: Vec<AddrRule> = (0..e).map(|i| eps.rule(first + i, i)).collect();
+        let mut port = e;
+        for p in 0..t {
+            if p == q {
+                continue;
+            }
+            let (s, end) = eps.region(p * e, e);
+            rules.push(AddrRule::new(s, end, port, &format!("tile{p}")).with_mcast());
+            port += 1;
+        }
+        let n = e + t - 1;
+        let map = AddrMap::new(rules, n)
+            .unwrap_or_else(|err| panic!("{}: tile {q} map: {err}", spec.name));
+        let mut cfg = XbarCfg::new(&format!("{}-t{}", spec.name, q), n, n, map);
+        spec.params.apply(&mut cfg);
+        nodes.push(b.node(cfg));
+    }
+
+    // endpoint ports
+    let mut endpoint_m = Vec::with_capacity(eps.count);
+    let mut endpoint_s = Vec::with_capacity(eps.count);
+    for q in 0..t {
+        for i in 0..e {
+            let ep = q * e + i;
+            endpoint_m.push(b.ext_master(nodes[q], i, &format!("ep{ep}-m")));
+            endpoint_s.push(b.ext_slave(nodes[q], i, &format!("ep{ep}-s")));
+        }
+    }
+
+    // peer wiring: q's out-port for p → p's in-port for q
+    let out_port = |q: usize, p: usize| e + if p < q { p } else { p - 1 };
+    let in_port = |p: usize, q: usize| e + if q < p { q } else { q - 1 };
+    for q in 0..t {
+        for p in 0..t {
+            if p == q {
+                continue;
+            }
+            b.connect(nodes[q], out_port(q, p), nodes[p], in_port(p, q));
+        }
+    }
+
+    MeshTopology {
+        topo: b.build(),
+        endpoint_m,
+        endpoint_s,
+    }
+}
+
+/// Canned shapes for sweeps and parity tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopoShape {
+    /// Single N×N crossbar.
+    Flat,
+    /// Hierarchical tree with the given bottom-up arity.
+    Tree { arity: Vec<usize> },
+    /// Fully-connected mesh of peer tiles.
+    Mesh { tiles: usize },
+}
+
+impl TopoShape {
+    pub fn label(&self) -> String {
+        match self {
+            TopoShape::Flat => "flat".to_string(),
+            TopoShape::Tree { arity } => {
+                let parts: Vec<String> = arity.iter().map(|a| a.to_string()).collect();
+                format!("tree{}", parts.join("x"))
+            }
+            TopoShape::Mesh { tiles } => format!("mesh{tiles}"),
+        }
+    }
+}
+
+/// A shape-built fabric with uniform endpoint handles.
+pub struct BuiltTopo {
+    pub topo: Topology,
+    pub endpoint_m: Vec<LinkId>,
+    pub endpoint_s: Vec<LinkId>,
+}
+
+/// Instantiate one of the canned shapes over `endpoints`.
+pub fn build_shape(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    endpoints: EndpointMap,
+    params: FabricParams,
+    shape: &TopoShape,
+) -> BuiltTopo {
+    match shape {
+        // flat is the degenerate single-level tree
+        TopoShape::Flat | TopoShape::Tree { .. } => {
+            let arity = match shape {
+                TopoShape::Tree { arity } => arity.clone(),
+                _ => vec![endpoints.count],
+            };
+            let spec = TreeSpec {
+                name: shape.label(),
+                endpoints,
+                arity,
+                params,
+                services: Vec::new(),
+                n_root_masters: 0,
+            };
+            let t = build_tree(pool, link_depth, &spec, |_, _| {});
+            BuiltTopo {
+                topo: t.topo,
+                endpoint_m: t.endpoint_m,
+                endpoint_s: t.endpoint_s,
+            }
+        }
+        TopoShape::Mesh { tiles } => {
+            let spec = MeshSpec {
+                name: format!("mesh-{tiles}"),
+                endpoints,
+                tiles: *tiles,
+                params,
+            };
+            let m = build_mesh(pool, link_depth, &spec);
+            BuiltTopo {
+                topo: m.topo,
+                endpoint_m: m.endpoint_m,
+                endpoint_s: m.endpoint_s,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eps(n: usize) -> EndpointMap {
+        EndpointMap {
+            base: 0x0100_0000,
+            stride: 0x4_0000,
+            count: n,
+        }
+    }
+
+    #[test]
+    fn flat_is_single_node() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(8),
+            FabricParams::default(),
+            &TopoShape::Flat,
+        );
+        assert_eq!(t.topo.xbars.len(), 1);
+        assert_eq!(t.topo.xbars[0].cfg.n_masters, 8);
+        assert_eq!(t.topo.xbars[0].cfg.n_slaves, 8);
+        assert!(t.topo.xbars[0].cfg.default_slave.is_none());
+        assert_eq!(t.endpoint_m.len(), 8);
+        assert_eq!(pool.len(), 16);
+    }
+
+    #[test]
+    fn two_level_tree_matches_occamy_shape() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(32),
+            FabricParams::default(),
+            &TopoShape::Tree { arity: vec![4, 8] },
+        );
+        // 8 leaves + 1 root
+        assert_eq!(t.topo.xbars.len(), 9);
+        let root = t.topo.xbars.last().unwrap();
+        assert_eq!(root.cfg.n_masters, 8);
+        assert_eq!(root.cfg.n_slaves, 8);
+        assert!(root.cfg.default_slave.is_none());
+        for leaf in &t.topo.xbars[..8] {
+            assert_eq!(leaf.cfg.default_slave, Some(4));
+            let (s, e) = leaf.cfg.local_scope.unwrap();
+            assert!((e - s).is_power_of_two());
+            assert_eq!(s % (e - s), 0);
+        }
+    }
+
+    #[test]
+    fn three_level_tree_builds() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(16),
+            FabricParams::default(),
+            &TopoShape::Tree {
+                arity: vec![2, 4, 2],
+            },
+        );
+        // 8 leaves of 2 + 4 mids of 2 leaves + 1 root of 4 mids
+        assert_eq!(t.topo.xbars.len(), 13);
+        // mids keep a default route and an aligned scope
+        for mid in &t.topo.xbars[8..12] {
+            assert_eq!(mid.cfg.default_slave, Some(2));
+            let (s, e) = mid.cfg.local_scope.unwrap();
+            assert_eq!(e - s, 4 * 0x4_0000);
+            assert_eq!(s % (e - s), 0);
+        }
+        assert!(t.topo.xbars[12].cfg.default_slave.is_none());
+    }
+
+    #[test]
+    fn mesh_is_fully_connected() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(16),
+            FabricParams::default(),
+            &TopoShape::Mesh { tiles: 4 },
+        );
+        assert_eq!(t.topo.xbars.len(), 4);
+        for x in &t.topo.xbars {
+            // 4 locals + 3 peers on both sides
+            assert_eq!(x.cfg.n_masters, 7);
+            assert_eq!(x.cfg.n_slaves, 7);
+            assert!(x.cfg.default_slave.is_none());
+            // every address in the endpoint space decodes somewhere
+            assert_eq!(x.cfg.map.rules().len(), 7);
+        }
+        // 16 endpoint pairs + 4*3 peer links
+        assert_eq!(pool.len(), 32 + 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "unwired")]
+    fn unwired_port_panics() {
+        let mut pool = LinkPool::new();
+        let mut b = TopologyBuilder::new("bad", &mut pool, 2);
+        let rules = vec![AddrRule::new(0, 0x1000, 0, "only")];
+        let cfg = XbarCfg::new("x", 1, 1, AddrMap::new(rules, 1).unwrap());
+        let n = b.node(cfg);
+        b.ext_master(n, 0, "m0");
+        // slave port 0 left unwired
+        b.build();
+    }
+
+    #[test]
+    fn ext_lookup_by_name() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(4),
+            FabricParams::default(),
+            &TopoShape::Flat,
+        );
+        assert_eq!(t.topo.ext_master("ep0-m"), t.endpoint_m[0]);
+        assert_eq!(t.topo.ext_slave("ep3-s"), t.endpoint_s[3]);
+    }
+}

@@ -9,6 +9,13 @@
 use crate::axi::mcast::AddrSet;
 use crate::sim::Chan;
 
+pub use crate::sim::link::LinkId;
+
+/// Pool of AXI links shared by a component graph (crossbars, endpoint
+/// models, peripherals). All link access is through typed [`LinkId`]
+/// handles — see `sim::link`.
+pub type LinkPool = crate::sim::link::Pool<AxiLink>;
+
 /// Byte address in the global memory map.
 pub type Addr = u64;
 
@@ -174,6 +181,21 @@ impl AxiLink {
             && self.b.is_empty()
             && self.ar.is_empty()
             && self.r.is_empty()
+    }
+}
+
+impl crate::sim::link::Link for AxiLink {
+    fn tick(&mut self) {
+        AxiLink::tick(self)
+    }
+    fn any_visible(&self) -> bool {
+        AxiLink::any_visible(self)
+    }
+    fn is_idle(&self) -> bool {
+        AxiLink::is_idle(self)
+    }
+    fn moved(&self) -> u64 {
+        AxiLink::moved(self)
     }
 }
 

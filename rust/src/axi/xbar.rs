@@ -1,9 +1,10 @@
 //! The N×M multicast-capable AXI crossbar (paper fig. 2a).
 //!
 //! Composition: one [`Demux`] per master port, one [`Mux`] per slave
-//! port, wired through external [`AxiLink`]s held in a shared pool (the
-//! SoC owns the pool; the xbar stores link indices). Each call to
-//! [`Xbar::step`] advances one clock cycle through the phases:
+//! port, wired through external [`AxiLink`]s held in a shared
+//! [`LinkPool`] (the SoC or topology owns the pool; the xbar stores
+//! typed [`LinkId`] handles). Each call to [`Xbar::step`] advances one
+//! clock cycle through the phases:
 //!
 //! 1. **B join/drain** — collect B beats from slaves, fold into the
 //!    per-demux joins, release merged responses to masters.
@@ -38,7 +39,9 @@ use super::addr_map::AddrMap;
 use super::demux::{Demux, PendingAw, Stall, TargetAw};
 use super::mcast::AddrSet;
 use super::mux::Mux;
-use super::types::{AwBeat, AxiLink, RBeat, Resp, Txn, WBeat};
+use super::types::{AwBeat, AxiLink, LinkId, LinkPool, RBeat, Resp, Txn, WBeat};
+use crate::sim::sched::Component;
+use crate::sim::Cycle;
 
 /// Crossbar configuration.
 #[derive(Debug)]
@@ -113,6 +116,30 @@ pub struct XbarStats {
     pub decerr: u64,
     pub stall_id_conflict: u64,
     pub stall_mcast_order: u64,
+    /// Extra W beats produced by multicast forking: for every W beat
+    /// entering, `fanout - 1` additional beats leave. Invariant checked
+    /// by the integration suites: `w_beats_out == w_beats_in + w_fork_extra`.
+    pub w_fork_extra: u64,
+}
+
+impl XbarStats {
+    /// Accumulate another crossbar's counters (network/topology sums).
+    pub fn add(&mut self, o: &XbarStats) {
+        self.aw_unicast += o.aw_unicast;
+        self.aw_mcast += o.aw_mcast;
+        self.aw_forks += o.aw_forks;
+        self.w_beats_in += o.w_beats_in;
+        self.w_beats_out += o.w_beats_out;
+        self.w_fork_stalls += o.w_fork_stalls;
+        self.b_joined += o.b_joined;
+        self.commit_waits += o.commit_waits;
+        self.ar_forwarded += o.ar_forwarded;
+        self.r_beats += o.r_beats;
+        self.decerr += o.decerr;
+        self.stall_id_conflict += o.stall_id_conflict;
+        self.stall_mcast_order += o.stall_mcast_order;
+        self.w_fork_extra += o.w_fork_extra;
+    }
 }
 
 /// In-flight pending AW extended with per-target forward flags (used in
@@ -130,10 +157,16 @@ pub struct Xbar {
     pub cfg: XbarCfg,
     pub demux: Vec<Demux>,
     pub mux: Vec<Mux>,
-    /// Pool indices of master-side links (masters push AW/W/AR).
-    pub m_links: Vec<usize>,
-    /// Pool indices of slave-side links (xbar pushes AW/W/AR).
-    pub s_links: Vec<usize>,
+    /// Master-side links (masters push AW/W/AR). Read-only after
+    /// construction: `Component::ports()` serves a cached copy, so
+    /// rewiring a built xbar would desync the scheduler's wake hints.
+    pub m_links: Vec<LinkId>,
+    /// Slave-side links (xbar pushes AW/W/AR). Read-only after
+    /// construction (see `m_links`).
+    pub s_links: Vec<LinkId>,
+    /// All external ports (`m_links` then `s_links`), cached for the
+    /// scheduler's wake/dirty bookkeeping.
+    ports: Vec<LinkId>,
     pending: Vec<Option<PendingEntry>>,
     /// Per-master cooldown countdown for multicast W forks.
     w_cooldown: Vec<u32>,
@@ -150,8 +183,8 @@ pub struct Xbar {
 }
 
 impl Xbar {
-    /// Build a crossbar whose ports use the given link-pool indices.
-    pub fn new(cfg: XbarCfg, m_links: Vec<usize>, s_links: Vec<usize>) -> Xbar {
+    /// Build a crossbar whose ports use the given pool links.
+    pub fn new(cfg: XbarCfg, m_links: Vec<LinkId>, s_links: Vec<LinkId>) -> Xbar {
         assert_eq!(m_links.len(), cfg.n_masters);
         assert_eq!(s_links.len(), cfg.n_slaves);
         let demux = (0..cfg.n_masters)
@@ -161,12 +194,14 @@ impl Xbar {
         let pending = (0..cfg.n_masters).map(|_| None).collect();
         let w_cooldown = vec![0; cfg.n_masters];
         let scratch_want = vec![None; cfg.n_masters];
+        let ports: Vec<LinkId> = m_links.iter().chain(s_links.iter()).copied().collect();
         Xbar {
             cfg,
             demux,
             mux,
             m_links,
             s_links,
+            ports,
             pending,
             w_cooldown,
             scratch_want,
@@ -180,12 +215,13 @@ impl Xbar {
 
     /// Convenience for tests: allocate a fresh pool with one link per
     /// port (masters first, then slaves).
-    pub fn with_pool(cfg: XbarCfg, depth: usize) -> (Xbar, Vec<AxiLink>) {
+    pub fn with_pool(cfg: XbarCfg, depth: usize) -> (Xbar, LinkPool) {
         let nm = cfg.n_masters;
         let ns = cfg.n_slaves;
-        let pool: Vec<AxiLink> = (0..nm + ns).map(|_| AxiLink::new(depth)).collect();
-        let xbar = Xbar::new(cfg, (0..nm).collect(), (nm..nm + ns).collect());
-        (xbar, pool)
+        let mut pool = LinkPool::new();
+        let m_links: Vec<LinkId> = (0..nm).map(|_| pool.alloc(AxiLink::new(depth))).collect();
+        let s_links: Vec<LinkId> = (0..ns).map(|_| pool.alloc(AxiLink::new(depth))).collect();
+        (Xbar::new(cfg, m_links, s_links), pool)
     }
 
     /// Decode an AW's destination set into fork targets, honouring the
@@ -253,16 +289,31 @@ impl Xbar {
         if remainder > 0 {
             match self.cfg.default_slave {
                 Some(up) => {
-                    // forward the original set up, extending the scope
+                    // Forward the original set up, extending the scope.
+                    // Nested scopes merge to the outer region: in a
+                    // well-formed hierarchy the incoming exclude (served
+                    // at a lower level) is contained in this crossbar's
+                    // local scope, and the union of "already served"
+                    // addresses is exactly the outer aligned region.
+                    // Disjoint scopes (a malformed topology) stay
+                    // unrepresentable.
                     let scope = match (exclude, self.cfg.local_scope) {
-                        (None, Some(ls)) => Some(ls),
-                        (Some(e), None) => Some(e),
-                        (None, None) => None,
-                        (Some(_), Some(_)) => panic!(
-                            "xbar {}: nested exclude scopes are not representable \
-                             (topology must prune at each level)",
-                            self.cfg.name
-                        ),
+                        (None, s) => s,
+                        (e @ Some(_), None) => e,
+                        (Some((es, ee)), Some((ls, le))) => {
+                            if ls <= es && ee <= le {
+                                Some((ls, le))
+                            } else if es <= ls && le <= ee {
+                                Some((es, ee))
+                            } else {
+                                panic!(
+                                    "xbar {}: disjoint exclude scopes \
+                                     [{es:#x},{ee:#x}) vs local [{ls:#x},{le:#x}) \
+                                     are not representable (scopes must nest)",
+                                    self.cfg.name
+                                )
+                            }
+                        }
                     };
                     targets.push(TargetAw {
                         slave: up,
@@ -277,20 +328,8 @@ impl Xbar {
         (targets, resp0)
     }
 
-    /// Anything visible on the external ports that needs processing?
-    #[inline]
-    fn any_port_activity(&self, pool: &[AxiLink]) -> bool {
-        self.m_links.iter().any(|&l| {
-            let lk = &pool[l];
-            lk.aw.visible() > 0 || lk.w.visible() > 0 || lk.ar.visible() > 0
-        }) || self.s_links.iter().any(|&l| {
-            let lk = &pool[l];
-            lk.b.visible() > 0 || lk.r.visible() > 0
-        })
-    }
-
     /// One clock cycle. `pool` is the shared link pool.
-    pub fn step(&mut self, pool: &mut [AxiLink]) {
+    pub fn step(&mut self, pool: &mut LinkPool) {
         self.phase_b(pool);
         self.phase_r(pool);
         self.phase_ar(pool);
@@ -299,24 +338,13 @@ impl Xbar {
         self.phase_commit(pool);
         self.phase_unicast_aw(pool);
         self.phase_w(pool);
-        // cached for the SoC's idle-skip (§Perf): an idle xbar is only
-        // re-woken by visible beats on its ports (the activity hints)
+        // cached for the scheduler's idle-skip (§Perf): an idle xbar is
+        // only re-woken by visible beats on its ports (activity hints)
         self.maybe_busy = self.busy();
     }
 
-    /// Hinted step: skip the phase machinery entirely when the fabric
-    /// holds no in-flight state and the SoC saw no beat on any port at
-    /// the last clock edge. This idle-skip is the largest simulator-
-    /// throughput optimisation (§Perf in EXPERIMENTS.md).
-    #[inline]
-    pub fn step_hinted(&mut self, pool: &mut [AxiLink], port_activity: bool) {
-        if self.maybe_busy || port_activity {
-            self.step(pool);
-        }
-    }
-
     /// Phase 1 — B collection + joined-B drain.
-    fn phase_b(&mut self, pool: &mut [AxiLink]) {
+    fn phase_b(&mut self, pool: &mut LinkPool) {
         for s in 0..self.cfg.n_slaves {
             if let Some(b) = pool[self.s_links[s]].b.pop() {
                 let m = *self
@@ -341,7 +369,7 @@ impl Xbar {
     }
 
     /// Phase 2 — R routing (slave→master) + DECERR R generation.
-    fn phase_r(&mut self, pool: &mut [AxiLink]) {
+    fn phase_r(&mut self, pool: &mut LinkPool) {
         for s in 0..self.cfg.n_slaves {
             let link = self.s_links[s];
             let Some(r) = pool[link].r.front().copied() else {
@@ -383,7 +411,7 @@ impl Xbar {
     }
 
     /// Phase 3 — AR arbitration and forwarding (reads are unicast).
-    fn phase_ar(&mut self, pool: &mut [AxiLink]) {
+    fn phase_ar(&mut self, pool: &mut LinkPool) {
         // decode every master's front AR once (into reusable scratch)
         let mut any = false;
         for m in 0..self.cfg.n_masters {
@@ -429,7 +457,7 @@ impl Xbar {
     }
 
     /// Phase 4 — AW acceptance + decode (fig. 2d ordering stalls).
-    fn phase_aw_accept(&mut self, pool: &mut [AxiLink]) {
+    fn phase_aw_accept(&mut self, pool: &mut LinkPool) {
         for m in 0..self.cfg.n_masters {
             if self.pending[m].is_some() {
                 continue;
@@ -579,7 +607,7 @@ impl Xbar {
 
     /// Phase 6 — multicast commit (or per-slave forward when the commit
     /// protocol is disabled, reproducing fig. 2e).
-    fn phase_commit(&mut self, pool: &mut [AxiLink]) {
+    fn phase_commit(&mut self, pool: &mut LinkPool) {
         for m in 0..self.cfg.n_masters {
             let Some(entry) = self.pending[m].as_mut() else {
                 continue;
@@ -658,7 +686,7 @@ impl Xbar {
 
     /// Phase 7 — unicast AW forwarding (round-robin; multicast priority
     /// stalls unicast issue on a slave with a live grant).
-    fn phase_unicast_aw(&mut self, pool: &mut [AxiLink]) {
+    fn phase_unicast_aw(&mut self, pool: &mut LinkPool) {
         // masters with a pending unicast AW and its (single) target
         let mut any = false;
         for m in 0..self.cfg.n_masters {
@@ -709,7 +737,7 @@ impl Xbar {
     }
 
     /// Phase 8 — W transport with all-ready multicast fork.
-    fn phase_w(&mut self, pool: &mut [AxiLink]) {
+    fn phase_w(&mut self, pool: &mut LinkPool) {
         for m in 0..self.cfg.n_masters {
             if self.w_cooldown[m] > 0 {
                 self.w_cooldown[m] -= 1;
@@ -748,6 +776,7 @@ impl Xbar {
             }
             pool[self.m_links[m]].w.pop();
             self.stats.w_beats_in += 1;
+            self.stats.w_fork_extra += route.slaves.len() as u64 - 1;
             let last = route.beats_left == 1;
             for &s in &route.slaves {
                 pool[self.s_links[s]].w.push(WBeat {
@@ -780,5 +809,21 @@ impl Xbar {
             || !self.wr_owner.is_empty()
             || !self.rd_owner.is_empty()
             || !self.decerr_r.is_empty()
+    }
+}
+
+impl Component<AxiLink> for Xbar {
+    fn step(&mut self, _cy: Cycle, pool: &mut LinkPool) {
+        Xbar::step(self, pool);
+    }
+
+    /// Safe to skip when the last stepped cycle left nothing in flight;
+    /// the scheduler re-wakes the xbar on port activity.
+    fn quiescent(&self) -> bool {
+        !self.maybe_busy
+    }
+
+    fn ports(&self) -> &[LinkId] {
+        &self.ports
     }
 }

@@ -1,4 +1,5 @@
-//! The paper's experiments, one function per figure.
+//! The paper's experiments, one function per figure — plus the
+//! topology-shape sweep enabled by the topology subsystem.
 
 use crate::area::{xbar_area, AreaParams, TimingModel};
 use crate::occamy::SocConfig;
@@ -8,6 +9,7 @@ use crate::util::table::{fnum, Table};
 use crate::workloads::matmul::{run_matmul, MatmulMode, MatmulResult, TileExec};
 use crate::workloads::microbench::{run_microbench, McastMode};
 use crate::workloads::roofline::Roofline;
+use crate::workloads::topo_sweep::{default_shapes, run_topo_broadcast, TopoRunResult};
 
 /// fig. 3a — area and timing of the N-to-N crossbar.
 pub fn fig3a() -> (Table, Json) {
@@ -252,6 +254,100 @@ pub fn fig3d_schedule(cfg: &SocConfig) -> String {
     )
 }
 
+/// One topology-sweep comparison point (per shape: unicast vs mcast).
+#[derive(Debug, Clone)]
+pub struct TopoSweepRow {
+    pub uni: TopoRunResult,
+    pub hw: TopoRunResult,
+    pub speedup: f64,
+}
+
+/// Topology-shape sweep: the 1-to-N broadcast on every canned shape
+/// (flat, 2-level tree, 3-level tree, mesh), hardware multicast vs the
+/// unicast train, with beat-level fork accounting.
+pub fn topo_sweep(
+    n_endpoints: usize,
+    bursts: usize,
+    beats: u32,
+) -> (Vec<TopoSweepRow>, Table, Json) {
+    let mut rows = Vec::new();
+    for shape in default_shapes(n_endpoints) {
+        let uni = run_topo_broadcast(&shape, n_endpoints, bursts, beats, false)
+            .unwrap_or_else(|e| panic!("{}: unicast run: {e}", shape.label()));
+        let hw = run_topo_broadcast(&shape, n_endpoints, bursts, beats, true)
+            .unwrap_or_else(|e| panic!("{}: mcast run: {e}", shape.label()));
+        rows.push(TopoSweepRow {
+            speedup: uni.cycles as f64 / hw.cycles as f64,
+            uni,
+            hw,
+        });
+    }
+    let mut table = Table::new(&[
+        "shape",
+        "xbars",
+        "uni cyc",
+        "mcast cyc",
+        "speedup",
+        "mcast AWs",
+        "forked AWs",
+        "W in",
+        "W out",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.hw.shape.clone(),
+            r.hw.n_xbars.to_string(),
+            r.uni.cycles.to_string(),
+            r.hw.cycles.to_string(),
+            fnum(r.speedup, 2),
+            r.hw.stats.aw_mcast.to_string(),
+            r.hw.stats.aw_forks.to_string(),
+            r.hw.stats.w_beats_in.to_string(),
+            r.hw.stats.w_beats_out.to_string(),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("shape", r.hw.shape.as_str())
+                    .set("n_endpoints", r.hw.n_endpoints)
+                    .set("n_xbars", r.hw.n_xbars)
+                    .set("cycles_unicast", r.uni.cycles)
+                    .set("cycles_mcast", r.hw.cycles)
+                    .set("speedup", r.speedup)
+                    .set("aw_mcast", r.hw.stats.aw_mcast)
+                    .set("aw_forks", r.hw.stats.aw_forks)
+                    .set("w_beats_in", r.hw.stats.w_beats_in)
+                    .set("w_beats_out", r.hw.stats.w_beats_out)
+                    .set("w_fork_extra", r.hw.stats.w_fork_extra);
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
+/// Sanity check a [`TopoSweepRow`]'s beat accounting (shared by tests
+/// and the bench).
+pub fn assert_topo_row_invariants(r: &TopoSweepRow) {
+    for run in [&r.uni, &r.hw] {
+        assert_eq!(
+            run.stats.w_beats_out,
+            run.stats.w_beats_in + run.stats.w_fork_extra,
+            "{}: W fork accounting broken",
+            run.shape
+        );
+        assert_eq!(run.stats.decerr, 0, "{}: unexpected DECERR", run.shape);
+        assert_eq!(
+            run.delivered_bursts(),
+            (run.n_endpoints * (run.deliveries[0].len())) as u64,
+            "{}: uneven delivery",
+            run.shape
+        );
+    }
+}
+
 /// Default fig. 3b sweep parameters (the paper's ranges).
 pub fn fig3b_default_sizes() -> Vec<u64> {
     vec![1, 2, 4, 8, 16, 32].into_iter().map(|k| k * 1024).collect()
@@ -277,6 +373,24 @@ mod tests {
         let r16 = arr[2].as_obj().unwrap();
         assert!(r16["delta_pct"].as_f64().unwrap() > 10.0);
         assert!(r16["fmax_mcast_ghz"].as_f64().unwrap() < 1.0);
+    }
+
+    #[test]
+    fn topo_sweep_covers_shapes_and_mcast_wins() {
+        let (rows, table, json) = topo_sweep(16, 2, 8);
+        // flat + 2-level tree + 3-level tree + mesh
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert_topo_row_invariants(r);
+            assert!(
+                r.speedup > 1.0,
+                "{}: multicast must beat the unicast train ({:.2})",
+                r.hw.shape,
+                r.speedup
+            );
+        }
+        assert!(table.render().contains("mcast cyc"));
+        assert_eq!(json.as_arr().unwrap().len(), 4);
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod experiments;
 pub mod report;
 
-pub use experiments::{fig3a, fig3b, fig3c, Fig3bRow, Fig3cRow};
+pub use experiments::{fig3a, fig3b, fig3c, topo_sweep, Fig3bRow, Fig3cRow, TopoSweepRow};
 pub use report::Report;

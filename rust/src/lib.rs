@@ -8,12 +8,14 @@
 //! * [`util`] — std-only substrates (PRNG, JSON, CLI, stats, property
 //!   testing) written in-repo because the offline build only vendors the
 //!   `xla` crate's dependency closure.
-//! * [`sim`] — cycle-level simulation kernel: staged channels,
-//!   valid/ready handshakes, the clock loop and watchdog.
+//! * [`sim`] — cycle-level simulation kernel: staged channels, the
+//!   typed link pool, the component scheduler (generic idle-skips),
+//!   the clock loop and watchdog.
 //! * [`axi`] — the paper's §II-A contribution: AXI channel types, the
-//!   mask-form multi-address encoding, the extended address decoder, and
+//!   mask-form multi-address encoding, the extended address decoder,
 //!   the multicast-capable N×M crossbar (demux fork / mux commit /
-//!   B-join / deadlock avoidance).
+//!   B-join / deadlock avoidance), and the topology subsystem building
+//!   arbitrary hierarchical crossbar graphs (flat / trees / meshes).
 //! * [`occamy`] — the paper's §II-B substrate: Snitch-like clusters with
 //!   L1 SPM + DMA, LLC, narrow (64-bit) and wide (512-bit) two-level
 //!   crossbar hierarchies, multicast interrupts and barriers.

@@ -7,6 +7,7 @@
 //! occamy-sim fig3c [--exec pjrt|rust] [--artifacts DIR]
 //! occamy-sim fig3d                       # schedule description
 //! occamy-sim microbench --mode hw --clusters 32 --size 32KiB
+//! occamy-sim toposweep [--endpoints 16]  # topology-shape sweep
 //! occamy-sim all [--out results]
 //! ```
 
@@ -14,7 +15,7 @@ use std::process::ExitCode;
 
 use axi_mcast::coordinator::experiments::{
     fig3a, fig3b, fig3b_default_clusters, fig3b_default_sizes, fig3b_summary, fig3c,
-    fig3d_schedule,
+    fig3d_schedule, topo_sweep,
 };
 use axi_mcast::coordinator::Report;
 use axi_mcast::occamy::SocConfig;
@@ -62,8 +63,18 @@ const CMDS: &[CmdSpec] = &[
         ],
     },
     CmdSpec {
+        name: "toposweep",
+        about: "1-to-N broadcast across topology shapes (flat/tree/mesh), mcast vs unicast",
+        options: &[
+            ("endpoints", "endpoint count, power of two (default 16)"),
+            ("bursts", "broadcast rounds (default 4)"),
+            ("beats", "beats per burst (default 16)"),
+            ("out", "results directory"),
+        ],
+    },
+    CmdSpec {
         name: "all",
-        about: "regenerate every figure (fig3a, fig3b, fig3c, fig3d)",
+        about: "regenerate every figure (fig3a, fig3b, fig3c, fig3d, toposweep)",
         options: &[
             ("exec", "tile executor for fig3c: rust | pjrt"),
             ("out", "results directory (default results)"),
@@ -101,7 +112,7 @@ fn main() -> ExitCode {
     match run(&cmd, &args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }
@@ -111,7 +122,7 @@ fn make_exec<'r>(
     kind: &str,
     rt: &'r mut Option<Runtime>,
     artifacts: &str,
-) -> anyhow::Result<Box<dyn TileExec + 'r>> {
+) -> Result<Box<dyn TileExec + 'r>, String> {
     match kind {
         "rust" => Ok(Box::new(RustTileExec)),
         "pjrt" => {
@@ -120,14 +131,45 @@ fn make_exec<'r>(
             } else {
                 artifacts.into()
             };
-            *rt = Some(Runtime::load(&dir)?);
-            Ok(Box::new(PjrtTileExec::new(rt.as_ref().unwrap())?))
+            *rt = Some(Runtime::load(&dir).map_err(|e| e.to_string())?);
+            Ok(Box::new(
+                PjrtTileExec::new(rt.as_ref().unwrap()).map_err(|e| e.to_string())?,
+            ))
         }
-        other => anyhow::bail!("unknown --exec '{other}' (rust|pjrt)"),
+        other => Err(format!("unknown --exec '{other}' (rust|pjrt)")),
     }
 }
 
-fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+fn emit(r: &Report) -> Result<(), String> {
+    r.emit().map_err(|e| format!("writing report: {e}"))
+}
+
+fn run_toposweep(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let endpoints = args.usize_or("endpoints", 16)?;
+    if !endpoints.is_power_of_two() || endpoints < 4 {
+        return Err(format!(
+            "--endpoints must be a power of two >= 4 (broadcast sets are mask-form), got {endpoints}"
+        ));
+    }
+    let bursts = args.usize_or("bursts", 4)?;
+    if bursts == 0 {
+        return Err("--bursts must be >= 1".to_string());
+    }
+    let beats = args.u64_or("beats", 16)? as u32;
+    if beats == 0 {
+        return Err("--beats must be >= 1".to_string());
+    }
+    let (_rows, table, json) = topo_sweep(endpoints, bursts, beats);
+    let mut r = Report::new("toposweep").to_dir(out);
+    r.table(
+        "1-to-N broadcast across topology shapes (hw mcast vs unicast train)",
+        &table,
+    );
+    r.json("rows", json);
+    emit(&r)
+}
+
+fn run(cmd: &str, args: &Args) -> Result<(), String> {
     let cfg = SocConfig::default();
     let out = args.get("out");
     match cmd {
@@ -136,12 +178,10 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let mut r = Report::new("fig3a").to_dir(out);
             r.table("Area of the N-to-N AXI XBAR (GF12LP+ model, fig. 3a)", &table);
             r.json("rows", json);
-            r.emit()?;
+            emit(&r)?;
         }
         "fig3b" => {
-            let sizes = args
-                .u64_list_or("sizes", &fig3b_default_sizes())
-                .map_err(anyhow::Error::msg)?;
+            let sizes = args.u64_list_or("sizes", &fig3b_default_sizes())?;
             let clusters: Vec<usize> = args
                 .u64_list_or(
                     "clusters",
@@ -149,8 +189,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                         .iter()
                         .map(|&c| c as u64)
                         .collect::<Vec<_>>(),
-                )
-                .map_err(anyhow::Error::msg)?
+                )?
                 .into_iter()
                 .map(|c| c as usize)
                 .collect();
@@ -164,7 +203,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
             r.json("rows", json);
             r.json("summary", summary);
-            r.emit()?;
+            emit(&r)?;
         }
         "fig3c" => {
             let mut rt = None;
@@ -180,7 +219,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 &table,
             );
             r.json("rows", json);
-            r.emit()?;
+            emit(&r)?;
         }
         "fig3d" => {
             println!("{}", fig3d_schedule(&cfg));
@@ -190,10 +229,10 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 "unicast" => McastMode::Unicast,
                 "sw-hier" => McastMode::SwHier,
                 "hw" => McastMode::Hw,
-                m => anyhow::bail!("unknown --mode '{m}'"),
+                m => return Err(format!("unknown --mode '{m}'")),
             };
-            let clusters = args.usize_or("clusters", 32).map_err(anyhow::Error::msg)?;
-            let size = args.u64_or("size", 32 * 1024).map_err(anyhow::Error::msg)?;
+            let clusters = args.usize_or("clusters", 32)?;
+            let size = args.u64_or("size", 32 * 1024)?;
             let res = run_microbench(&cfg, mode, clusters, size);
             println!(
                 "{} {} clusters {} bytes: {} cycles ({:.2} delivered bytes/cycle)",
@@ -204,13 +243,16 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 size as f64 * (clusters - 1) as f64 / res.cycles as f64
             );
         }
+        "toposweep" => {
+            run_toposweep(args, out)?;
+        }
         "all" => {
             let out = Some(args.get_or("out", "results"));
             let (t_a, j_a) = fig3a();
             let mut r = Report::new("fig3a").to_dir(out);
             r.table("Area of the N-to-N AXI XBAR (fig. 3a)", &t_a);
             r.json("rows", j_a);
-            r.emit()?;
+            emit(&r)?;
 
             let sizes = fig3b_default_sizes();
             let clusters = fig3b_default_clusters(&cfg);
@@ -221,7 +263,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             r.section("Summary", &summary.pretty());
             r.json("rows", j_b);
             r.json("summary", summary);
-            r.emit()?;
+            emit(&r)?;
 
             let mut rt = None;
             let mut exec = make_exec(args.get_or("exec", "rust"), &mut rt, "")?;
@@ -229,11 +271,13 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let mut r = Report::new("fig3c").to_dir(out);
             r.table("Matmul performance (fig. 3c)", &t_c);
             r.json("rows", j_c);
-            r.emit()?;
+            emit(&r)?;
+
+            run_toposweep(args, out)?;
 
             println!("{}", fig3d_schedule(&cfg));
         }
-        other => anyhow::bail!("unknown command '{other}' (see --help)"),
+        other => return Err(format!("unknown command '{other}' (see --help)")),
     }
     Ok(())
 }

@@ -1,7 +1,10 @@
-//! Two-level crossbar hierarchy builder (fig. 2c).
+//! Occamy's two networks, each one instance of the generic topology
+//! subsystem (fig. 2c): a 2-level tree — one group crossbar per
+//! 4-cluster group plus a top-level crossbar — built by
+//! [`crate::axi::topology::build_tree`] with `arity =
+//! [clusters_per_group, n_groups]`.
 //!
-//! Each network (wide and narrow) is a tree: one group crossbar per
-//! 4-cluster group plus a top-level crossbar. Per group crossbar:
+//! Per group crossbar (tree leaf):
 //!
 //! * master ports: the 4 local cluster sources + 1 "down-in" from top;
 //! * slave ports:  the 4 local cluster sinks + 1 "up-out" to top;
@@ -9,14 +12,18 @@
 //!   the up port as default route; the group's cluster region is the
 //!   local exclude scope for hierarchical multicast.
 //!
-//! Top crossbar: one master port per group (up-in) [+ the barrier unit
-//! on the narrow network]; one slave port per group (down-out) + the
-//! LLC (wide) / barrier peripheral (narrow).
+//! Top crossbar (tree root): one master port per group [+ the barrier
+//! unit on the narrow network]; one slave port per group + the LLC
+//! (wide) / barrier peripheral (narrow) as the root service window.
 
-use super::config::{SocConfig, BARRIER_BASE, BARRIER_SIZE, LLC_BASE};
-use crate::axi::addr_map::{AddrMap, AddrRule};
-use crate::axi::types::AxiLink;
-use crate::axi::xbar::{Xbar, XbarCfg};
+use super::config::{SocConfig, BARRIER_BASE, BARRIER_SIZE, CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE};
+use crate::axi::topology::{
+    build_tree, step_xbars_scheduled, sum_xbar_stats, EndpointMap, FabricParams, TreeSpec,
+};
+use crate::axi::types::{LinkId, LinkPool};
+use crate::axi::xbar::{Xbar, XbarStats};
+use crate::sim::sched::Scheduler;
+use crate::sim::Cycle;
 
 /// Which of the two networks to build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,42 +32,34 @@ pub enum NetKind {
     Narrow,
 }
 
-/// One built network: group xbars + top xbar + the link indices of all
+/// One built network: group xbars + top xbar + the links of all
 /// external ports.
 pub struct Network {
     pub kind: NetKind,
     /// Group crossbars, then the top crossbar last.
     pub xbars: Vec<Xbar>,
     /// Per cluster: link the cluster pushes requests into.
-    pub cluster_m: Vec<usize>,
+    pub cluster_m: Vec<LinkId>,
     /// Per cluster: link delivering requests to the cluster's slave
     /// port (wide: L1 window; narrow: mailbox).
-    pub cluster_s: Vec<usize>,
+    pub cluster_s: Vec<LinkId>,
     /// Wide: the LLC's link. Narrow: the barrier peripheral's slave link.
-    pub service_s: usize,
+    pub service_s: LinkId,
     /// Narrow only: the barrier unit's own master port into the top.
-    pub ext_m: Option<usize>,
+    pub ext_m: Option<LinkId>,
 }
 
 impl Network {
-    /// Advance all crossbars one cycle.
-    pub fn step(&mut self, pool: &mut [AxiLink]) {
+    /// Advance all crossbars one cycle (unscheduled).
+    pub fn step(&mut self, pool: &mut LinkPool) {
         for x in &mut self.xbars {
             x.step(pool);
         }
     }
 
-    /// Hinted step: `link_active[l]` says link `l` had visible beats at
-    /// the last clock edge; idle crossbars are skipped entirely.
-    pub fn step_hinted(&mut self, pool: &mut [AxiLink], link_active: &[bool]) {
-        for x in &mut self.xbars {
-            let hint = x.maybe_busy
-                || x.m_links.iter().any(|&l| link_active[l])
-                || x.s_links.iter().any(|&l| link_active[l]);
-            if hint {
-                x.step(pool);
-            }
-        }
+    /// Advance with idle-skips through the generic scheduler.
+    pub fn step_scheduled(&mut self, cy: Cycle, pool: &mut LinkPool, sched: &mut Scheduler) {
+        step_xbars_scheduled(&mut self.xbars, cy, pool, sched);
     }
 
     pub fn busy(&self) -> bool {
@@ -72,138 +71,60 @@ impl Network {
     }
 
     /// Aggregate stats over all crossbars.
-    pub fn stats_sum(&self) -> crate::axi::xbar::XbarStats {
-        let mut acc = crate::axi::xbar::XbarStats::default();
-        for x in &self.xbars {
-            let s = &x.stats;
-            acc.aw_unicast += s.aw_unicast;
-            acc.aw_mcast += s.aw_mcast;
-            acc.aw_forks += s.aw_forks;
-            acc.w_beats_in += s.w_beats_in;
-            acc.w_beats_out += s.w_beats_out;
-            acc.w_fork_stalls += s.w_fork_stalls;
-            acc.b_joined += s.b_joined;
-            acc.commit_waits += s.commit_waits;
-            acc.ar_forwarded += s.ar_forwarded;
-            acc.r_beats += s.r_beats;
-            acc.decerr += s.decerr;
-            acc.stall_id_conflict += s.stall_id_conflict;
-            acc.stall_mcast_order += s.stall_mcast_order;
-        }
-        acc
+    pub fn stats_sum(&self) -> XbarStats {
+        sum_xbar_stats(&self.xbars)
     }
 }
 
-fn alloc_link(pool: &mut Vec<AxiLink>, depth: usize) -> usize {
-    pool.push(AxiLink::new(depth));
-    pool.len() - 1
-}
-
 /// Build one network over the shared link pool.
-pub fn build_network(cfg: &SocConfig, pool: &mut Vec<AxiLink>, kind: NetKind) -> Network {
-    let n_groups = cfg.n_groups();
-    let cpg = cfg.clusters_per_group;
-    let depth = cfg.link_depth;
+pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Network {
     let mcast = match kind {
         NetKind::Wide => cfg.wide_mcast,
         NetKind::Narrow => cfg.narrow_mcast,
     };
-
-    let cluster_m: Vec<usize> = (0..cfg.n_clusters)
-        .map(|_| alloc_link(pool, depth))
-        .collect();
-    let cluster_s: Vec<usize> = (0..cfg.n_clusters)
-        .map(|_| alloc_link(pool, depth))
-        .collect();
-    let up: Vec<usize> = (0..n_groups).map(|_| alloc_link(pool, depth)).collect();
-    let down: Vec<usize> = (0..n_groups).map(|_| alloc_link(pool, depth)).collect();
-    let service_s = alloc_link(pool, depth);
-    let ext_m = match kind {
-        NetKind::Narrow => Some(alloc_link(pool, depth)),
-        NetKind::Wide => None,
+    let service = match kind {
+        NetKind::Wide => (LLC_BASE, LLC_BASE + cfg.llc_bytes, "llc".to_string()),
+        NetKind::Narrow => (
+            BARRIER_BASE,
+            BARRIER_BASE + BARRIER_SIZE,
+            "barrier".to_string(),
+        ),
     };
-
-    let mut xbars = Vec::with_capacity(n_groups + 1);
-
-    // group crossbars
-    for g in 0..n_groups {
-        let first = g * cpg;
-        let rules: Vec<AddrRule> = (0..cpg)
-            .map(|i| {
-                let c = first + i;
-                AddrRule::new(
-                    cfg.cluster_base(c),
-                    cfg.cluster_base(c) + super::config::CLUSTER_STRIDE,
-                    i,
-                    &format!("cluster{c}"),
-                )
-                .with_mcast()
-            })
-            .collect();
-        let map = AddrMap::new(rules, cpg + 1).expect("group map");
-        let mut xcfg = XbarCfg::new(
-            &format!("{:?}-g{}", kind, g),
-            cpg + 1, // 4 clusters + down-in
-            cpg + 1, // 4 clusters + up-out
-            map,
-        );
-        xcfg.default_slave = Some(cpg);
-        xcfg.local_scope = Some(cfg.group_region(g));
-        xcfg.mcast_enabled = mcast;
-        xcfg.commit_protocol = cfg.commit_protocol;
-        xcfg.mcast_w_cooldown = cfg.mcast_w_cooldown;
-        let m_links: Vec<usize> = (0..cpg)
-            .map(|i| cluster_m[first + i])
-            .chain([down[g]])
-            .collect();
-        let s_links: Vec<usize> = (0..cpg)
-            .map(|i| cluster_s[first + i])
-            .chain([up[g]])
-            .collect();
-        xbars.push(Xbar::new(xcfg, m_links, s_links));
-    }
-
-    // top crossbar
-    {
-        let mut rules: Vec<AddrRule> = (0..n_groups)
-            .map(|g| {
-                let (s, e) = cfg.group_region(g);
-                AddrRule::new(s, e, g, &format!("group{g}")).with_mcast()
-            })
-            .collect();
-        let service_rule = match kind {
-            NetKind::Wide => AddrRule::new(LLC_BASE, LLC_BASE + cfg.llc_bytes, n_groups, "llc"),
-            NetKind::Narrow => {
-                AddrRule::new(BARRIER_BASE, BARRIER_BASE + BARRIER_SIZE, n_groups, "barrier")
-            }
-        };
-        rules.push(service_rule);
-        let n_slaves = n_groups + 1;
-        let n_masters = n_groups + ext_m.iter().len();
-        let map = AddrMap::new(rules, n_slaves).expect("top map");
-        let mut xcfg = XbarCfg::new(&format!("{:?}-top", kind), n_masters, n_slaves, map);
-        xcfg.mcast_enabled = mcast;
-        xcfg.commit_protocol = cfg.commit_protocol;
-        xcfg.mcast_w_cooldown = cfg.mcast_w_cooldown;
-        // larger top xbar gets more outstanding room
-        xcfg.max_outstanding = 64;
-        xcfg.max_mcast_outstanding = cfg.dma_mcast_outstanding.max(2) * 2;
-        let mut m_links = up.clone();
-        if let Some(e) = ext_m {
-            m_links.push(e);
+    let n_root_masters = match kind {
+        NetKind::Narrow => 1, // the barrier unit injects release IRQs
+        NetKind::Wide => 0,
+    };
+    let spec = TreeSpec {
+        name: format!("{kind:?}"),
+        endpoints: EndpointMap {
+            base: CLUSTER_BASE,
+            stride: CLUSTER_STRIDE,
+            count: cfg.n_clusters,
+        },
+        arity: vec![cfg.clusters_per_group, cfg.n_groups()],
+        params: FabricParams {
+            mcast_enabled: mcast,
+            commit_protocol: cfg.commit_protocol,
+            mcast_w_cooldown: cfg.mcast_w_cooldown,
+        },
+        services: vec![service],
+        n_root_masters,
+    };
+    let top_level = spec.arity.len() - 1;
+    let built = build_tree(pool, cfg.link_depth, &spec, |xcfg, level| {
+        if level == top_level {
+            // larger top xbar gets more outstanding room
+            xcfg.max_outstanding = 64;
+            xcfg.max_mcast_outstanding = cfg.dma_mcast_outstanding.max(2) * 2;
         }
-        let mut s_links = down.clone();
-        s_links.push(service_s);
-        xbars.push(Xbar::new(xcfg, m_links, s_links));
-    }
-
+    });
     Network {
         kind,
-        xbars,
-        cluster_m,
-        cluster_s,
-        service_s,
-        ext_m,
+        xbars: built.topo.xbars,
+        cluster_m: built.endpoint_m,
+        cluster_s: built.endpoint_s,
+        service_s: built.service_s[0],
+        ext_m: built.root_m.first().copied(),
     }
 }
 
@@ -214,7 +135,7 @@ mod tests {
     #[test]
     fn wide_network_shape() {
         let cfg = SocConfig::default();
-        let mut pool = Vec::new();
+        let mut pool = LinkPool::new();
         let net = build_network(&cfg, &mut pool, NetKind::Wide);
         assert_eq!(net.xbars.len(), 9); // 8 groups + top
         assert_eq!(net.cluster_m.len(), 32);
@@ -227,7 +148,7 @@ mod tests {
     #[test]
     fn narrow_network_has_barrier_master() {
         let cfg = SocConfig::default();
-        let mut pool = Vec::new();
+        let mut pool = LinkPool::new();
         let net = build_network(&cfg, &mut pool, NetKind::Narrow);
         assert!(net.ext_m.is_some());
         assert_eq!(net.top().cfg.n_masters, 9);
@@ -236,12 +157,24 @@ mod tests {
     #[test]
     fn group_scope_is_aligned() {
         let cfg = SocConfig::default();
-        let mut pool = Vec::new();
+        let mut pool = LinkPool::new();
         let net = build_network(&cfg, &mut pool, NetKind::Wide);
         for g in 0..8 {
             let (s, e) = net.xbars[g].cfg.local_scope.unwrap();
             assert!((e - s).is_power_of_two());
             assert_eq!(s % (e - s), 0);
         }
+    }
+
+    #[test]
+    fn group_default_routes_up() {
+        let cfg = SocConfig::tiny(8);
+        let mut pool = LinkPool::new();
+        let net = build_network(&cfg, &mut pool, NetKind::Wide);
+        assert_eq!(net.xbars.len(), 3); // 2 groups + top
+        for g in 0..2 {
+            assert_eq!(net.xbars[g].cfg.default_slave, Some(4));
+        }
+        assert!(net.top().cfg.default_slave.is_none());
     }
 }

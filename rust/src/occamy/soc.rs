@@ -1,5 +1,10 @@
 //! Full-system assembly: clusters + two networks + LLC + barrier unit +
 //! functional memory, with the run loop and watchdog.
+//!
+//! All beat transport goes through one shared [`LinkPool`]; idle-skips
+//! (the §Perf optimisation) are delegated to the generic
+//! [`Scheduler`] from the sim kernel — the SoC only declares which
+//! links each component touches.
 
 use super::cluster::{Cluster, Cmd, ComputeEvent};
 use super::config::SocConfig;
@@ -7,8 +12,9 @@ use super::mem::SocMem;
 use super::noc::{build_network, NetKind, Network};
 use super::sync::BarrierUnit;
 use crate::axi::golden::SimSlave;
-use crate::axi::types::AxiLink;
+use crate::axi::types::LinkPool;
 use crate::sim::engine::{Engine, SimError, StepResult, Watchdog};
+use crate::sim::sched::Scheduler;
 use crate::sim::Cycle;
 
 /// Functional compute hook: applies the numeric effect of a cluster's
@@ -28,7 +34,7 @@ impl ComputeHandler for NopCompute {
 /// The simulated SoC.
 pub struct Soc {
     pub cfg: SocConfig,
-    pub pool: Vec<AxiLink>,
+    pub pool: LinkPool,
     pub wide: Network,
     pub narrow: Network,
     pub clusters: Vec<Cluster>,
@@ -37,16 +43,13 @@ pub struct Soc {
     pub mem: SocMem,
     pub next_txn: u64,
     pub cycles: Cycle,
-    /// Per-link "visible beats at the last clock edge" (idle-skips).
-    link_active: Vec<bool>,
-    /// Links possibly pushed/popped this cycle (only these need a
-    /// clock edge — everything else is provably unchanged).
-    link_dirty: Vec<bool>,
+    /// Link activity/dirty tracking (idle-skips, §Perf).
+    sched: Scheduler,
 }
 
 impl Soc {
     pub fn new(cfg: SocConfig) -> Soc {
-        let mut pool = Vec::new();
+        let mut pool = LinkPool::new();
         let wide = build_network(&cfg, &mut pool, NetKind::Wide);
         let narrow = build_network(&cfg, &mut pool, NetKind::Narrow);
         let clusters = (0..cfg.n_clusters).map(|i| Cluster::new(i, &cfg)).collect();
@@ -56,8 +59,7 @@ impl Soc {
         llc.r_gap = cfg.llc_burst_gap;
         let barrier = BarrierUnit::new(&cfg);
         let mem = SocMem::new(&cfg);
-        let link_active = vec![true; pool.len()];
-        let link_dirty = vec![true; pool.len()];
+        let sched = Scheduler::new(pool.len());
         Soc {
             cfg,
             pool,
@@ -69,8 +71,7 @@ impl Soc {
             mem,
             next_txn: 1,
             cycles: 0,
-            link_active,
-            link_dirty,
+            sched,
         }
     }
 
@@ -87,7 +88,7 @@ impl Soc {
     pub fn step(&mut self, handler: &mut dyn ComputeHandler) {
         let cy = self.cycles;
         let mut events: Vec<ComputeEvent> = Vec::new();
-        self.link_dirty.fill(false);
+        self.sched.begin_cycle();
 
         // clusters (sources/sinks first — consumers of staged beats)
         for i in 0..self.clusters.len() {
@@ -95,21 +96,17 @@ impl Soc {
             let ws = self.wide.cluster_s[i];
             let nm = self.narrow.cluster_m[i];
             let ns = self.narrow.cluster_s[i];
+            let ports = [wm, ws, nm, ns];
             // idle-skip: a finished, quiescent cluster only needs
             // stepping when one of its links carries beats (§Perf)
-            if self.clusters[i].quiescent()
-                && !self.link_active[wm]
-                && !self.link_active[ws]
-                && !self.link_active[nm]
-                && !self.link_active[ns]
+            if !self
+                .sched
+                .should_step(self.clusters[i].quiescent(), &ports)
             {
                 continue;
             }
-            // indices are pairwise distinct by construction
-            let [wml, wsl, nml, nsl] = self
-                .pool
-                .get_disjoint_mut([wm, ws, nm, ns])
-                .expect("distinct link indices");
+            // links are pairwise distinct by construction
+            let [wml, wsl, nml, nsl] = self.pool.get_disjoint_mut(ports);
             if let Some(ev) = self.clusters[i].step(
                 cy,
                 &self.cfg,
@@ -121,10 +118,7 @@ impl Soc {
             ) {
                 events.push(ev);
             }
-            self.link_dirty[wm] = true;
-            self.link_dirty[ws] = true;
-            self.link_dirty[nm] = true;
-            self.link_dirty[ns] = true;
+            self.sched.mark_all_dirty(&ports);
         }
         // DMA completions → functional copies
         for i in 0..self.clusters.len() {
@@ -137,40 +131,25 @@ impl Soc {
         }
 
         // LLC and barrier peripherals
-        self.llc.step(cy, &mut self.pool[self.wide.service_s]);
-        self.link_dirty[self.wide.service_s] = true;
+        self.llc.step_on(cy, &mut self.pool, self.wide.service_s);
+        self.sched.mark_dirty(self.wide.service_s);
         {
             let bs = self.narrow.service_s;
             let bm = self.narrow.ext_m.unwrap();
-            let [sl, ml] = self.pool.get_disjoint_mut([bs, bm]).unwrap();
+            let [sl, ml] = self.pool.get_disjoint_mut([bs, bm]);
             self.barrier.step(cy, sl, ml, &mut self.next_txn);
-            self.link_dirty[bs] = true;
-            self.link_dirty[bm] = true;
+            self.sched.mark_dirty(bs);
+            self.sched.mark_dirty(bm);
         }
 
-        // fabrics (skipping idle crossbars via the activity hints)
-        for net in [&mut self.wide, &mut self.narrow] {
-            for x in &mut net.xbars {
-                let hint = x.maybe_busy
-                    || x.m_links.iter().any(|&l| self.link_active[l])
-                    || x.s_links.iter().any(|&l| self.link_active[l]);
-                if hint {
-                    x.step(&mut self.pool);
-                    for &l in x.m_links.iter().chain(&x.s_links) {
-                        self.link_dirty[l] = true;
-                    }
-                }
-            }
-        }
+        // fabrics (idle crossbars skipped via the scheduler hints)
+        self.wide
+            .step_scheduled(cy, &mut self.pool, &mut self.sched);
+        self.narrow
+            .step_scheduled(cy, &mut self.pool, &mut self.sched);
 
-        // clock edge on touched links only; record visibility cache-hot
-        for i in 0..self.pool.len() {
-            if self.link_dirty[i] || self.link_active[i] {
-                let l = &mut self.pool[i];
-                l.tick();
-                self.link_active[i] = l.any_visible();
-            }
-        }
+        // clock edge on touched links only; activity recorded cache-hot
+        self.sched.end_cycle(&mut self.pool);
         self.cycles += 1;
 
         for ev in events {
@@ -180,7 +159,7 @@ impl Soc {
 
     /// Observable progress (for the deadlock watchdog).
     pub fn progress(&self) -> u64 {
-        let links: u64 = self.pool.iter().map(|l| l.moved()).sum();
+        let links = self.pool.moved_total();
         let cl: u64 = self.clusters.iter().map(|c| c.progress).sum();
         links + cl
     }

@@ -4,9 +4,27 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::util::json::Json;
+
+/// Runtime-layer error (std-only; the offline build vendors no error
+/// crates — see DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Build a [`RuntimeError`] from anything displayable.
+pub fn rt_err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Metadata of one lowered graph.
 #[derive(Debug, Clone)]
@@ -29,37 +47,42 @@ impl ArtifactDir {
     /// Load and validate the manifest.
     pub fn open(dir: &Path) -> Result<ArtifactDir> {
         let manifest_path = dir.join("manifest.json");
-        let text = fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let text = fs::read_to_string(&manifest_path).map_err(|e| {
+            rt_err(format!(
+                "reading {manifest_path:?} (run `make artifacts`): {e}"
+            ))
+        })?;
+        let j = Json::parse(&text).map_err(|e| rt_err(format!("manifest parse: {e}")))?;
         let n = j
             .get("n")
             .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("manifest missing 'n'"))? as usize;
+            .ok_or_else(|| rt_err("manifest missing 'n'"))? as usize;
         let graphs_obj = j
             .get("graphs")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest missing 'graphs'"))?;
+            .ok_or_else(|| rt_err("manifest missing 'graphs'"))?;
         let mut graphs = Vec::new();
         for (name, g) in graphs_obj {
             let file = g
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("graph {name}: missing file"))?;
+                .ok_or_else(|| rt_err(format!("graph {name}: missing file")))?;
             let file = dir.join(file);
             if !file.exists() {
-                return Err(anyhow!("artifact {file:?} missing (run `make artifacts`)"));
+                return Err(rt_err(format!(
+                    "artifact {file:?} missing (run `make artifacts`)"
+                )));
             }
             let mut args = Vec::new();
             for a in g
                 .get("args")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("graph {name}: missing args"))?
+                .ok_or_else(|| rt_err(format!("graph {name}: missing args")))?
             {
                 let shape: Vec<usize> = a
                     .get("shape")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("bad shape"))?
+                    .ok_or_else(|| rt_err("bad shape"))?
                     .iter()
                     .map(|d| d.as_f64().unwrap_or(0.0) as usize)
                     .collect();

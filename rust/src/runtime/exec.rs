@@ -1,11 +1,13 @@
 //! Executable loading + typed execution on the PJRT CPU client.
+//!
+//! Compiled only with the `pjrt` cargo feature (requires a vendored
+//! `xla` crate); the default build uses `exec_stub.rs` with identical
+//! signatures.
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
-use super::artifacts::ArtifactDir;
+use super::artifacts::{rt_err, ArtifactDir, Result};
 use crate::workloads::matmul::TileExec;
 
 /// A compiled graph ready to run.
@@ -27,19 +29,19 @@ impl Runtime {
     /// the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {
         let artifacts = ArtifactDir::open(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| rt_err(format!("PJRT cpu client: {e}")))?;
         let mut graphs = HashMap::new();
         for g in &artifacts.graphs {
             let proto = xla::HloModuleProto::from_text_file(
                 g.file
                     .to_str()
-                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", g.file))?,
+                    .ok_or_else(|| rt_err(format!("non-utf8 path {:?}", g.file)))?,
             )
-            .map_err(|e| anyhow!("parsing {:?}: {e}", g.file))?;
+            .map_err(|e| rt_err(format!("parsing {:?}: {e}", g.file)))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", g.name))?;
+                .map_err(|e| rt_err(format!("compiling {}: {e}", g.name)))?;
             graphs.insert(
                 g.name.clone(),
                 LoadedGraph {
@@ -68,41 +70,41 @@ impl Runtime {
         let g = self
             .graphs
             .get(name)
-            .ok_or_else(|| anyhow!("unknown graph '{name}'"))?;
+            .ok_or_else(|| rt_err(format!("unknown graph '{name}'")))?;
         if args.len() != g.arg_shapes.len() {
-            return Err(anyhow!(
+            return Err(rt_err(format!(
                 "graph {name}: {} args given, {} expected",
                 args.len(),
                 g.arg_shapes.len()
-            ));
+            )));
         }
         let mut literals = Vec::with_capacity(args.len());
         for (buf, shape) in args.iter().zip(&g.arg_shapes) {
             let numel: usize = shape.iter().product();
             if buf.len() != numel {
-                return Err(anyhow!(
+                return Err(rt_err(format!(
                     "graph {name}: arg size {} != shape {:?}",
                     buf.len(),
                     shape
-                ));
+                )));
             }
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(buf)
                 .reshape(&dims)
-                .map_err(|e| anyhow!("reshape {shape:?}: {e}"))?;
+                .map_err(|e| rt_err(format!("reshape {shape:?}: {e}")))?;
             literals.push(lit);
         }
         let result = g
             .exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+            .map_err(|e| rt_err(format!("execute {name}: {e}")))?;
         let out = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+            .map_err(|e| rt_err(format!("fetch {name}: {e}")))?;
         // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = out.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        let out = out.to_tuple1().map_err(|e| rt_err(format!("untuple {name}: {e}")))?;
         out.to_vec::<f64>()
-            .map_err(|e| anyhow!("to_vec {name}: {e}"))
+            .map_err(|e| rt_err(format!("to_vec {name}: {e}")))
     }
 
     /// Convenience: full 256×256 matmul oracle (used by the e2e example
@@ -128,7 +130,7 @@ impl<'r> PjrtTileExec<'r> {
         let g = rt
             .graphs
             .get("tile_f64")
-            .ok_or_else(|| anyhow!("tile_f64 artifact missing"))?;
+            .ok_or_else(|| rt_err("tile_f64 artifact missing"))?;
         let m = g.arg_shapes[2][0];
         let n = g.arg_shapes[2][1];
         let k = g.arg_shapes[0][1];
@@ -150,8 +152,7 @@ impl TileExec for PjrtTileExec<'_> {
             let out = self
                 .rt
                 .exec_f64("tile_f64", &[a, b, &c_in])
-                .context("PJRT tile execution")
-                .unwrap();
+                .expect("PJRT tile execution");
             c.copy_from_slice(&out);
             self.calls += 1;
         } else {

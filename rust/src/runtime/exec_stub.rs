@@ -1,0 +1,64 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off (the
+//! default — the offline build has no vendored `xla` crate).
+//!
+//! Keeps the exact public surface of `exec.rs` so the CLI, tests and
+//! examples compile either way: loading reports a clear error, and the
+//! tile executor falls back to the Rust reference kernel.
+
+use std::path::Path;
+
+use super::artifacts::{rt_err, ArtifactDir, Result, RuntimeError};
+use crate::workloads::matmul::TileExec;
+
+fn unavailable() -> RuntimeError {
+    rt_err(
+        "PJRT runtime unavailable: built without the `pjrt` feature \
+         (requires a vendored xla crate — see DESIGN.md §3)",
+    )
+}
+
+/// The PJRT runtime (stub: artifacts parse, execution is unavailable).
+pub struct Runtime {
+    pub artifacts: ArtifactDir,
+}
+
+impl Runtime {
+    /// Validate the artifact directory, then report that execution
+    /// needs the `pjrt` feature.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let _artifacts = ArtifactDir::open(dir)?;
+        Err(unavailable())
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn exec_f64(&self, _name: &str, _args: &[&[f64]]) -> Result<Vec<f64>> {
+        Err(unavailable())
+    }
+
+    pub fn matmul_f64(&self, _a: &[f64], _b: &[f64]) -> Result<Vec<f64>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub tile executor: every call falls back to the Rust kernel.
+pub struct PjrtTileExec<'r> {
+    pub rt: &'r Runtime,
+    pub calls: u64,
+    pub fallback_calls: u64,
+}
+
+impl<'r> PjrtTileExec<'r> {
+    pub fn new(_rt: &'r Runtime) -> Result<PjrtTileExec<'r>> {
+        Err(unavailable())
+    }
+}
+
+impl TileExec for PjrtTileExec<'_> {
+    fn tile(&mut self, a: &[f64], b: &[f64], c: &mut [f64], m: usize, n: usize, k: usize) {
+        crate::workloads::matmul::RustTileExec.tile(a, b, c, m, n, k);
+        self.fallback_calls += 1;
+    }
+}

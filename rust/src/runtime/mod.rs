@@ -8,7 +8,11 @@
 //! — see DESIGN.md §3 and /opt/xla-example/README.md).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 
-pub use artifacts::{ArtifactDir, GraphMeta};
+pub use artifacts::{ArtifactDir, GraphMeta, RuntimeError};
 pub use exec::{PjrtTileExec, Runtime};

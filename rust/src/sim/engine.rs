@@ -35,17 +35,34 @@ impl Default for Watchdog {
 }
 
 /// Error raised when the watchdog fires.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimError {
-    #[error("deadlock: no progress for {stalled} cycles at cycle {cycle} (progress counter {progress})")]
     Deadlock {
         cycle: Cycle,
         stalled: u64,
         progress: u64,
     },
-    #[error("cycle limit exceeded ({max} cycles)")]
     CycleLimit { max: u64 },
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock {
+                cycle,
+                stalled,
+                progress,
+            } => write!(
+                f,
+                "deadlock: no progress for {stalled} cycles at cycle {cycle} \
+                 (progress counter {progress})"
+            ),
+            SimError::CycleLimit { max } => write!(f, "cycle limit exceeded ({max} cycles)"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// The simulation engine. Owns only the clock; all state lives in the
 /// stepped closure's captures (the SoC or test fixture).

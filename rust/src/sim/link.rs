@@ -1,0 +1,211 @@
+//! Typed link handles and the shared link pool.
+//!
+//! Components exchange beats over *links* (bundles of staged channels)
+//! owned by a [`Pool`]. A component never holds a link directly — it
+//! holds [`LinkId`] handles and resolves them against the pool each
+//! cycle. This keeps the component graph data (the topology subsystem
+//! builds arbitrary graphs over one pool) while making aliasing
+//! explicit: disjoint mutable access goes through
+//! [`Pool::get_disjoint_mut`], everything else through indexing.
+//!
+//! The pool is generic over the link type so the scheduler in
+//! [`super::sched`] stays independent of the AXI layer; `axi::types`
+//! instantiates it as `Pool<AxiLink>` (aliased `LinkPool`).
+
+use std::ops::{Index, IndexMut};
+
+/// Behaviour the simulation kernel needs from a link.
+pub trait Link {
+    /// Advance the clock edge on every channel of the link.
+    fn tick(&mut self);
+    /// Any beat visible to a consumer (sampled right after [`tick`])?
+    ///
+    /// [`tick`]: Link::tick
+    fn any_visible(&self) -> bool;
+    /// All channels empty — no staged and no visible beats.
+    fn is_idle(&self) -> bool;
+    /// Total beats ever consumed (monotone progress for watchdogs).
+    fn moved(&self) -> u64;
+}
+
+/// Typed handle into a [`Pool`]. Replaces the raw `usize` indices the
+/// pre-topology code threaded around: a `LinkId` can only be obtained
+/// by allocating a link, so mixing up port numbers and link indices is
+/// a type error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(u32);
+
+impl LinkId {
+    /// Position inside the owning pool (stable for the pool's lifetime).
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for LinkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "link{}", self.0)
+    }
+}
+
+/// Arena owning every link of a component graph. Allocation is
+/// append-only; ids stay valid for the pool's lifetime.
+#[derive(Debug)]
+pub struct Pool<L> {
+    links: Vec<L>,
+}
+
+impl<L> Default for Pool<L> {
+    fn default() -> Pool<L> {
+        Pool::new()
+    }
+}
+
+impl<L> Pool<L> {
+    pub fn new() -> Pool<L> {
+        Pool { links: Vec::new() }
+    }
+
+    /// Add a link, returning its handle.
+    pub fn alloc(&mut self, link: L) -> LinkId {
+        let id = LinkId(u32::try_from(self.links.len()).expect("link pool overflow"));
+        self.links.push(link);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Handle of the `i`-th allocated link (panics out of range).
+    pub fn id_at(&self, i: usize) -> LinkId {
+        assert!(i < self.links.len(), "link index {i} out of range");
+        LinkId(i as u32)
+    }
+
+    /// All handles, in allocation order.
+    pub fn ids(&self) -> Vec<LinkId> {
+        (0..self.links.len() as u32).map(LinkId).collect()
+    }
+
+    /// Disjoint mutable access to several links at once (panics if any
+    /// two ids alias — the topology builder never hands out duplicate
+    /// port wirings, so aliasing here is a wiring bug).
+    pub fn get_disjoint_mut<const N: usize>(&mut self, ids: [LinkId; N]) -> [&mut L; N] {
+        self.links
+            .get_disjoint_mut(ids.map(LinkId::index))
+            .expect("link ids must be distinct and in range")
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, L> {
+        self.links.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, L> {
+        self.links.iter_mut()
+    }
+}
+
+impl<L: Link> Pool<L> {
+    /// Clock edge on every link (test/fixture loops; the scheduler
+    /// ticks selectively instead).
+    pub fn tick_all(&mut self) {
+        for l in &mut self.links {
+            l.tick();
+        }
+    }
+
+    /// Total beats moved across the pool (watchdog progress).
+    pub fn moved_total(&self) -> u64 {
+        self.links.iter().map(|l| l.moved()).sum()
+    }
+}
+
+impl<L> Index<LinkId> for Pool<L> {
+    type Output = L;
+    #[inline]
+    fn index(&self, id: LinkId) -> &L {
+        &self.links[id.index()]
+    }
+}
+
+impl<L> IndexMut<LinkId> for Pool<L> {
+    #[inline]
+    fn index_mut(&mut self, id: LinkId) -> &mut L {
+        &mut self.links[id.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct FakeLink {
+        ticks: u64,
+        visible: bool,
+    }
+
+    impl Link for FakeLink {
+        fn tick(&mut self) {
+            self.ticks += 1;
+        }
+        fn any_visible(&self) -> bool {
+            self.visible
+        }
+        fn is_idle(&self) -> bool {
+            !self.visible
+        }
+        fn moved(&self) -> u64 {
+            self.ticks
+        }
+    }
+
+    #[test]
+    fn alloc_and_index() {
+        let mut p: Pool<FakeLink> = Pool::new();
+        let a = p.alloc(FakeLink::default());
+        let b = p.alloc(FakeLink::default());
+        assert_ne!(a, b);
+        assert_eq!(a.index(), 0);
+        assert_eq!(p.id_at(1), b);
+        p[a].visible = true;
+        assert!(p[a].any_visible());
+        assert!(!p[b].any_visible());
+        assert_eq!(p.ids(), vec![a, b]);
+    }
+
+    #[test]
+    fn disjoint_mut_gives_both() {
+        let mut p: Pool<FakeLink> = Pool::new();
+        let a = p.alloc(FakeLink::default());
+        let b = p.alloc(FakeLink::default());
+        let [la, lb] = p.get_disjoint_mut([a, b]);
+        la.ticks = 3;
+        lb.ticks = 5;
+        assert_eq!(p.moved_total(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn disjoint_mut_rejects_aliases() {
+        let mut p: Pool<FakeLink> = Pool::new();
+        let a = p.alloc(FakeLink::default());
+        let _ = p.get_disjoint_mut([a, a]);
+    }
+
+    #[test]
+    fn tick_all_touches_every_link() {
+        let mut p: Pool<FakeLink> = Pool::new();
+        for _ in 0..4 {
+            p.alloc(FakeLink::default());
+        }
+        p.tick_all();
+        assert!(p.iter().all(|l| l.ticks == 1));
+    }
+}

@@ -12,10 +12,14 @@
 
 pub mod chan;
 pub mod engine;
+pub mod link;
+pub mod sched;
 pub mod trace;
 
 pub use chan::Chan;
 pub use engine::{Engine, Watchdog};
+pub use link::{Link, LinkId, Pool};
+pub use sched::{Component, Scheduler};
 
 /// Simulation time in clock cycles.
 pub type Cycle = u64;

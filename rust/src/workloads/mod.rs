@@ -7,10 +7,14 @@
 //!   matrix multiplication with three B-distribution strategies.
 //! * [`roofline`] — the roofline model (peak compute vs LLC-bandwidth
 //!   bound) used to place fig. 3c points.
+//! * [`topo_sweep`] — the 1-to-N broadcast run across topology shapes
+//!   (flat / tree / mesh) built by `axi::topology`.
 
 pub mod matmul;
 pub mod microbench;
 pub mod roofline;
+pub mod topo_sweep;
 
 pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
 pub use microbench::{run_microbench, McastMode, MicrobenchResult};
+pub use topo_sweep::{run_topo_broadcast, run_topo_script, TopoRunResult};

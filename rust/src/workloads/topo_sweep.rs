@@ -1,0 +1,326 @@
+//! Topology-shape sweep: the 1-to-N distribution microbenchmark run
+//! directly on fabrics built by the topology subsystem (no Occamy SoC
+//! around them), across shapes — flat N×N, hierarchical trees, and a
+//! mesh of crossbar tiles — in hardware-multicast vs unicast-train
+//! mode.
+//!
+//! The scenario reports cycles plus the aggregate [`XbarStats`] so the
+//! multicast claim is visible at beat granularity: one mask-form AW in,
+//! `fanout` AWs forked, `w_beats_out == w_beats_in + w_fork_extra`.
+//! Used by `coordinator::experiments::topo_sweep`, the `topo_shapes`
+//! bench and the `topology_parity` integration suite.
+
+use crate::axi::golden::SimSlave;
+use crate::axi::mcast::AddrSet;
+use crate::axi::topology::{build_shape, BuiltTopo, EndpointMap, FabricParams, TopoShape};
+use crate::axi::types::{AwBeat, LinkPool, WBeat};
+use crate::axi::xbar::XbarStats;
+use crate::sim::engine::{Engine, SimError, StepResult, Watchdog};
+use crate::sim::sched::Scheduler;
+
+/// Endpoint window layout used by the sweep (Occamy-like cluster map).
+pub const TOPO_EP_BASE: u64 = 0x0100_0000;
+pub const TOPO_EP_STRIDE: u64 = 0x4_0000;
+/// Offset inside each endpoint window receiving the payload.
+pub const TOPO_DST_OFF: u64 = 0x1000;
+
+/// Endpoint map of `n` sweep endpoints.
+pub fn topo_endpoints(n: usize) -> EndpointMap {
+    EndpointMap {
+        base: TOPO_EP_BASE,
+        stride: TOPO_EP_STRIDE,
+        count: n,
+    }
+}
+
+/// One measured run.
+#[derive(Debug, Clone)]
+pub struct TopoRunResult {
+    pub shape: String,
+    pub n_endpoints: usize,
+    pub mcast: bool,
+    pub cycles: u64,
+    pub n_xbars: usize,
+    /// Aggregate over every crossbar in the fabric.
+    pub stats: XbarStats,
+    /// Per endpoint: delivered write bursts as `(base addr, beats)`.
+    pub deliveries: Vec<Vec<(u64, u32)>>,
+}
+
+impl TopoRunResult {
+    pub fn delivered_bursts(&self) -> u64 {
+        self.deliveries.iter().map(|d| d.len() as u64).sum()
+    }
+}
+
+/// The broadcast script: `bursts` rounds of sending `beats`-beat bursts
+/// from endpoint 0 to every endpoint. In multicast mode each round is
+/// one mask-form transfer; in unicast mode it is a train of `n`
+/// transfers.
+pub fn broadcast_script(n_endpoints: usize, bursts: usize, beats: u32, mcast: bool) -> Vec<(AddrSet, u32)> {
+    assert!(
+        n_endpoints.is_power_of_two(),
+        "broadcast set must be a power of two"
+    );
+    let eps = topo_endpoints(n_endpoints);
+    let mut script = Vec::new();
+    for _ in 0..bursts {
+        if mcast {
+            let mask = (n_endpoints as u64 - 1) * eps.stride;
+            script.push((AddrSet::new(eps.base + TOPO_DST_OFF, mask), beats));
+        } else {
+            for i in 0..n_endpoints {
+                script.push((AddrSet::unicast(eps.addr(i) + TOPO_DST_OFF), beats));
+            }
+        }
+    }
+    script
+}
+
+/// Scripted write master driving one fabric link.
+struct ScriptMaster {
+    script: std::collections::VecDeque<(AddrSet, u32)>,
+    sending: Option<(u64, u32)>, // (txn, beats left)
+    inflight: u32,
+    max_inflight: u32,
+    next_txn: u64,
+    next_id: u16,
+}
+
+impl ScriptMaster {
+    fn new(script: Vec<(AddrSet, u32)>) -> ScriptMaster {
+        ScriptMaster {
+            script: script.into(),
+            sending: None,
+            inflight: 0,
+            max_inflight: 4,
+            next_txn: 1,
+            next_id: 0,
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.script.is_empty() && self.sending.is_none() && self.inflight == 0
+    }
+
+    fn step(&mut self, link: &mut crate::axi::types::AxiLink) {
+        while link.b.pop().is_some() {
+            self.inflight -= 1;
+        }
+        if let Some((txn, left)) = self.sending {
+            if link.w.can_push() {
+                link.w.push(WBeat {
+                    last: left == 1,
+                    src: 0,
+                    txn,
+                });
+                self.sending = if left == 1 { None } else { Some((txn, left - 1)) };
+            }
+            return;
+        }
+        if self.inflight >= self.max_inflight {
+            return;
+        }
+        let Some(&(dest, beats)) = self.script.front() else {
+            return;
+        };
+        if link.aw.can_push() && link.w.can_push() {
+            self.script.pop_front();
+            let txn = self.next_txn;
+            self.next_txn += 1;
+            let id = self.next_id;
+            self.next_id = (self.next_id + 1) % 4;
+            link.aw.push(AwBeat {
+                id,
+                dest,
+                beats,
+                beat_bytes: 64,
+                is_mcast: !dest.is_singleton(),
+                exclude: None,
+                src: 0,
+                txn,
+            });
+            self.sending = Some((txn, beats));
+            self.inflight += 1;
+        }
+    }
+}
+
+/// Run a write script from endpoint 0 through a shape-built fabric,
+/// with golden slaves on every endpoint. Fabric multicast support
+/// follows `mcast` (unicast scripts run on a baseline fabric, exactly
+/// like the paper's baseline comparison).
+pub fn run_topo_script(
+    shape: &TopoShape,
+    n_endpoints: usize,
+    script: Vec<(AddrSet, u32)>,
+    mcast: bool,
+) -> Result<TopoRunResult, SimError> {
+    let mut pool = LinkPool::new();
+    let params = FabricParams {
+        mcast_enabled: mcast,
+        ..FabricParams::default()
+    };
+    let BuiltTopo {
+        mut topo,
+        endpoint_m,
+        endpoint_s,
+    } = build_shape(&mut pool, 2, topo_endpoints(n_endpoints), params, shape);
+    let src = endpoint_m[0];
+    let mut master = ScriptMaster::new(script);
+    let mut slaves: Vec<SimSlave> = (0..n_endpoints).map(SimSlave::new).collect();
+    let mut sched = Scheduler::new(pool.len());
+
+    let mut eng = Engine::new(Watchdog {
+        stall_cycles: 100_000,
+        max_cycles: 50_000_000,
+    });
+    let cycles = eng.run(|cy| {
+        sched.begin_cycle();
+        // (no post-done drain needed: done() requires inflight == 0,
+        // which means every B was already popped from the src link)
+        if !master.done() {
+            master.step(&mut pool[src]);
+            sched.mark_dirty(src);
+        }
+        topo.step_scheduled(cy, &mut pool, &mut sched);
+        for (i, s) in slaves.iter_mut().enumerate() {
+            let link = endpoint_s[i];
+            if !s.idle() || sched.is_active(link) {
+                s.step_on(cy, &mut pool, link);
+                sched.mark_dirty(link);
+            }
+        }
+        sched.end_cycle(&mut pool);
+        let all_done = master.done()
+            && !topo.busy()
+            && slaves.iter().all(|s| s.idle());
+        if all_done {
+            StepResult::Done
+        } else {
+            StepResult::Running {
+                progress: pool.moved_total(),
+            }
+        }
+    })?;
+
+    for s in &slaves {
+        s.assert_clean();
+    }
+    let deliveries = slaves
+        .iter()
+        .map(|s| s.writes.iter().map(|w| (w.base, w.beats)).collect())
+        .collect();
+    Ok(TopoRunResult {
+        shape: shape.label(),
+        n_endpoints,
+        mcast,
+        cycles,
+        n_xbars: topo.xbars.len(),
+        stats: topo.stats_sum(),
+        deliveries,
+    })
+}
+
+/// One broadcast point (see [`broadcast_script`]).
+pub fn run_topo_broadcast(
+    shape: &TopoShape,
+    n_endpoints: usize,
+    bursts: usize,
+    beats: u32,
+    mcast: bool,
+) -> Result<TopoRunResult, SimError> {
+    let script = broadcast_script(n_endpoints, bursts, beats, mcast);
+    let res = run_topo_script(shape, n_endpoints, script, mcast)?;
+    // every endpoint must have received every round exactly once
+    for (i, d) in res.deliveries.iter().enumerate() {
+        assert_eq!(
+            d.len(),
+            bursts,
+            "{}: endpoint {i} got {} bursts, want {bursts}",
+            res.shape,
+            d.len()
+        );
+        let want_base = topo_endpoints(n_endpoints).addr(i) + TOPO_DST_OFF;
+        for (base, b) in d {
+            assert_eq!(*base, want_base, "{}: endpoint {i} base", res.shape);
+            assert_eq!(*b, beats, "{}: endpoint {i} beats", res.shape);
+        }
+    }
+    Ok(res)
+}
+
+/// The default shape set swept by the experiment/bench for `n`
+/// endpoints (power of two, ≥ 16 for the deeper shapes).
+pub fn default_shapes(n: usize) -> Vec<TopoShape> {
+    let mut shapes = vec![TopoShape::Flat];
+    if n >= 16 {
+        shapes.push(TopoShape::Tree {
+            arity: vec![4, n / 4],
+        });
+        shapes.push(TopoShape::Tree {
+            arity: vec![2, 2, n / 4],
+        });
+        shapes.push(TopoShape::Mesh { tiles: 4 });
+    } else if n >= 4 {
+        shapes.push(TopoShape::Tree {
+            arity: vec![2, n / 2],
+        });
+        shapes.push(TopoShape::Mesh { tiles: 2 });
+    }
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_broadcast_delivers_and_mcast_wins() {
+        let uni = run_topo_broadcast(&TopoShape::Flat, 8, 2, 16, false).unwrap();
+        let hw = run_topo_broadcast(&TopoShape::Flat, 8, 2, 16, true).unwrap();
+        assert_eq!(uni.delivered_bursts(), 16);
+        assert_eq!(hw.delivered_bursts(), 16);
+        assert!(
+            hw.cycles < uni.cycles,
+            "hw mcast ({}) must beat unicast ({})",
+            hw.cycles,
+            uni.cycles
+        );
+        // one mask-form AW per round, forked to all 8 endpoints
+        assert_eq!(hw.stats.aw_mcast, 2);
+        assert_eq!(hw.stats.aw_forks, 16);
+    }
+
+    #[test]
+    fn stats_invariant_holds_across_shapes() {
+        for shape in default_shapes(16) {
+            for mcast in [false, true] {
+                let r = run_topo_broadcast(&shape, 16, 2, 8, mcast).unwrap();
+                assert_eq!(
+                    r.stats.w_beats_out,
+                    r.stats.w_beats_in + r.stats.w_fork_extra,
+                    "{}: W fork accounting broken",
+                    r.shape
+                );
+                assert_eq!(r.stats.decerr, 0, "{}: unexpected DECERR", r.shape);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_and_mesh_match_flat_deliveries() {
+        let flat = run_topo_broadcast(&TopoShape::Flat, 16, 1, 4, true).unwrap();
+        for shape in [
+            TopoShape::Tree { arity: vec![4, 4] },
+            TopoShape::Mesh { tiles: 4 },
+        ] {
+            let r = run_topo_broadcast(&shape, 16, 1, 4, true).unwrap();
+            assert_eq!(
+                r.deliveries, flat.deliveries,
+                "{} deliveries diverge from flat",
+                r.shape
+            );
+        }
+    }
+}

@@ -5,7 +5,7 @@ use std::collections::{HashMap, VecDeque};
 
 use axi_mcast::axi::golden::SimSlave;
 use axi_mcast::axi::mcast::AddrSet;
-use axi_mcast::axi::types::{ArBeat, AwBeat, AxiId, AxiLink, Resp, Txn, WBeat};
+use axi_mcast::axi::types::{ArBeat, AwBeat, AxiId, AxiLink, LinkId, LinkPool, Resp, Txn, WBeat};
 use axi_mcast::axi::xbar::Xbar;
 use axi_mcast::sim::engine::{Engine, SimError, StepResult, Watchdog};
 
@@ -51,7 +51,7 @@ enum MState {
 /// A scripted AXI master attached to one link.
 pub struct TestMaster {
     pub idx: usize,
-    pub link: usize,
+    pub link: LinkId,
     pub script: VecDeque<Xfer>,
     state: MState,
     pub issued: Vec<(Txn, Xfer)>,
@@ -63,7 +63,7 @@ pub struct TestMaster {
 }
 
 impl TestMaster {
-    pub fn new(idx: usize, link: usize, script: Vec<Xfer>) -> TestMaster {
+    pub fn new(idx: usize, link: LinkId, script: Vec<Xfer>) -> TestMaster {
         TestMaster {
             idx,
             link,
@@ -167,22 +167,23 @@ impl TestMaster {
 /// A complete single-xbar test fixture.
 pub struct Fixture {
     pub xbar: Xbar,
-    pub pool: Vec<AxiLink>,
+    pub pool: LinkPool,
     pub masters: Vec<TestMaster>,
     pub slaves: Vec<SimSlave>,
     pub next_txn: Txn,
 }
 
 impl Fixture {
-    /// Masters on links `0..n_m`, slaves on links `n_m..n_m+n_s`.
-    pub fn new(xbar: Xbar, pool: Vec<AxiLink>, scripts: Vec<Vec<Xfer>>) -> Fixture {
+    /// Masters on the xbar's master-side links, slaves on its
+    /// slave-side links (the `Xbar::with_pool` layout).
+    pub fn new(xbar: Xbar, pool: LinkPool, scripts: Vec<Vec<Xfer>>) -> Fixture {
         let n_m = xbar.cfg.n_masters;
         let n_s = xbar.cfg.n_slaves;
         assert_eq!(scripts.len(), n_m);
         let masters = scripts
             .into_iter()
             .enumerate()
-            .map(|(i, s)| TestMaster::new(i, i, s))
+            .map(|(i, s)| TestMaster::new(i, xbar.m_links[i], s))
             .collect();
         let slaves = (0..n_s).map(SimSlave::new).collect();
         Fixture {
@@ -205,20 +206,17 @@ impl Fixture {
         let masters = &mut self.masters;
         let slaves = &mut self.slaves;
         let next_txn = &mut self.next_txn;
-        let n_m = xbar.cfg.n_masters;
+        let s_links: Vec<LinkId> = xbar.s_links.clone();
         eng.run(|cy| {
             for m in masters.iter_mut() {
                 m.step(&mut pool[m.link], next_txn);
             }
             xbar.step(pool);
             for (i, s) in slaves.iter_mut().enumerate() {
-                s.step(cy, &mut pool[n_m + i]);
+                s.step(cy, &mut pool[s_links[i]]);
             }
-            let mut progress = 0u64;
-            for l in pool.iter_mut() {
-                l.tick();
-                progress += l.moved();
-            }
+            pool.tick_all();
+            let progress = pool.moved_total();
             let all_done = masters.iter().all(|m| m.done())
                 && !xbar.busy()
                 && slaves.iter().all(|s| s.idle());

@@ -42,6 +42,43 @@ fn mcast_crosses_hierarchy_exactly_once_per_cluster() {
 }
 
 #[test]
+fn topology_built_network_stats_invariants() {
+    // The Occamy networks are TopologyBuilder trees now; after a full
+    // hierarchical broadcast every crossbar must satisfy the beat
+    // accounting invariants: W replication is exactly the fork extra,
+    // and an mcast-enabled fabric never DECERRs well-formed traffic.
+    let cfg = SocConfig::default();
+    let mut soc = Soc::new(cfg.clone());
+    let mut progs = vec![Vec::new(); 32];
+    progs[3] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(3),
+            dst: cfg.cluster_set(0, 32, 0x4000),
+            bytes: 2048,
+            tag: 1,
+        },
+        Cmd::WaitDma,
+    ];
+    soc.load_programs(progs);
+    soc.run_default(&mut NopCompute).unwrap();
+    for net in [&soc.wide, &soc.narrow] {
+        for x in &net.xbars {
+            assert_eq!(
+                x.stats.w_beats_out,
+                x.stats.w_beats_in + x.stats.w_fork_extra,
+                "{}: W fork accounting broken",
+                x.cfg.name
+            );
+            assert_eq!(x.stats.decerr, 0, "{}: unexpected DECERR", x.cfg.name);
+        }
+        let sum = net.stats_sum();
+        assert_eq!(sum.w_beats_out, sum.w_beats_in + sum.w_fork_extra);
+    }
+    // the broadcast actually replicated beats somewhere in the fabric
+    assert!(soc.wide.stats_sum().w_fork_extra > 0);
+}
+
+#[test]
 fn unicast_traffic_unaffected_by_mcast_extension() {
     // same unicast workload on baseline and extended fabric → identical
     // cycle counts (backward compatibility claim)

@@ -1,0 +1,250 @@
+//! Topology parity suites: any multicast set routed through a
+//! hierarchical topology (2-level tree, 3-level tree, mesh of tiles)
+//! must deliver the *identical* beat set as the flat golden crossbar —
+//! the hierarchical exclude-scope decomposition is semantically
+//! invisible.
+//!
+//! Two layers of checking:
+//!
+//! * a pure-decode property (fast, many cases): decompose a random
+//!   mask-form request the way a 2-level tree does — leaf decode +
+//!   exclude-scoped re-decode at the root — and compare covered
+//!   addresses against the flat decode;
+//! * end-to-end simulation properties (fewer cases): random multicast
+//!   scripts run through shape-built fabrics, comparing per-endpoint
+//!   delivered `(base, beats)` sets against the flat run.
+
+use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::topology::TopoShape;
+use axi_mcast::util::proptest_mini::{check, Config, Gen};
+use axi_mcast::workloads::topo_sweep::{
+    run_topo_broadcast, run_topo_script, topo_endpoints, TOPO_DST_OFF,
+};
+
+const N_EP: usize = 16;
+const STRIDE: u64 = 0x4_0000;
+
+/// Occamy-like flat map over all 16 endpoints.
+fn flat_map() -> AddrMap {
+    let eps = topo_endpoints(N_EP);
+    let rules: Vec<AddrRule> = (0..N_EP)
+        .map(|i| {
+            AddrRule::new(eps.addr(i), eps.addr(i + 1), i, &format!("ep{i}")).with_mcast()
+        })
+        .collect();
+    AddrMap::new(rules, N_EP).unwrap()
+}
+
+/// Random aligned multicast set over the endpoint space: a power-of-two
+/// group of endpoints at an aligned first index, plus a random offset
+/// inside the window.
+fn arb_mcast_set(g: &mut Gen) -> AddrSet {
+    let eps = topo_endpoints(N_EP);
+    let log = g.u64_below(5); // group size 1..16
+    let count = 1usize << log;
+    let first = (g.u64_below((N_EP / count) as u64) as usize) * count;
+    let off = g.u64_below(0x1000) * 8;
+    let mask = (count as u64 - 1) * STRIDE;
+    AddrSet::new(eps.addr(first) + off, mask)
+}
+
+/// The satellite property: AddrSet/AddrMap hierarchical exclude-scope
+/// decomposition covers exactly the flat decode, with no address
+/// duplicated or dropped, for every leaf position of a 2-level tree.
+#[test]
+fn prop_exclude_scope_decomposition_matches_flat_decode() {
+    let flat = flat_map();
+    let eps = topo_endpoints(N_EP);
+    // 4 leaves of 4 endpoints; leaf rules map a leaf's local endpoints
+    let leaf_map = |leaf: usize| -> AddrMap {
+        let first = leaf * 4;
+        let rules: Vec<AddrRule> = (0..4)
+            .map(|i| {
+                AddrRule::new(
+                    eps.addr(first + i),
+                    eps.addr(first + i + 1),
+                    i,
+                    &format!("ep{}", first + i),
+                )
+                .with_mcast()
+            })
+            .collect();
+        AddrMap::new(rules, 4).unwrap()
+    };
+    // root rules map leaf regions
+    let root_rules: Vec<AddrRule> = (0..4)
+        .map(|l| {
+            let (s, e) = eps.region(l * 4, 4);
+            AddrRule::new(s, e, l, &format!("leaf{l}")).with_mcast()
+        })
+        .collect();
+    let root = AddrMap::new(root_rules, 4).unwrap();
+
+    check(
+        "exclude-scope-decomposition",
+        Config::default(),
+        |g| (arb_mcast_set(g), g.u64_below(4) as usize),
+        |&(req, src_leaf)| {
+            // ---- flat reference: the set of covered addresses ----
+            let flat_dec = flat.decode(&req);
+            let mut flat_addrs: Vec<u64> = flat_dec
+                .targets
+                .iter()
+                .flat_map(|(_, sub)| sub.enumerate())
+                .collect();
+            flat_addrs.sort_unstable();
+
+            // ---- hierarchical decomposition, entering at src_leaf ----
+            let local = leaf_map(src_leaf).decode(&req);
+            let mut tree_addrs: Vec<u64> = local
+                .targets
+                .iter()
+                .flat_map(|(_, sub)| sub.enumerate())
+                .collect();
+            if local.uncovered > 0 {
+                // forward up with the leaf's region as exclude scope
+                let scope = eps.region(src_leaf * 4, 4);
+                let up = root.decode(&req);
+                for (leaf, sub) in &up.targets {
+                    if sub.base() >= scope.0 && sub.top() < scope.1 {
+                        continue; // pruned: already served locally
+                    }
+                    // down at that leaf: decode the per-leaf subset
+                    let down = leaf_map(*leaf).decode(sub);
+                    if down.uncovered > 0 {
+                        return Err(format!(
+                            "leaf {leaf}: {} addrs of {sub} unroutable",
+                            down.uncovered
+                        ));
+                    }
+                    tree_addrs.extend(down.targets.iter().flat_map(|(_, s)| s.enumerate()));
+                }
+            }
+            tree_addrs.sort_unstable();
+            let dup = tree_addrs.windows(2).any(|w| w[0] == w[1]);
+            if dup {
+                return Err(format!("duplicate delivery in {tree_addrs:x?}"));
+            }
+            if tree_addrs != flat_addrs {
+                return Err(format!(
+                    "tree covers {tree_addrs:x?}, flat covers {flat_addrs:x?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End-to-end: random multicast scripts through every hierarchical
+/// shape deliver the identical beat set as the flat fabric.
+#[test]
+fn prop_random_mcast_scripts_match_flat_end_to_end() {
+    let shapes = [
+        TopoShape::Tree { arity: vec![4, 4] },
+        TopoShape::Tree {
+            arity: vec![2, 2, 4],
+        },
+        TopoShape::Mesh { tiles: 4 },
+    ];
+    check(
+        "topology-beat-parity",
+        Config {
+            cases: 12,
+            ..Config::default()
+        },
+        |g| {
+            let n = 1 + g.u64_below(4) as usize;
+            (0..n)
+                .map(|_| {
+                    // offsets must keep bursts inside an endpoint window
+                    let set = arb_mcast_set(g);
+                    let beats = 1 + g.u64_below(8) as u32;
+                    (set, beats)
+                })
+                .collect::<Vec<_>>()
+        },
+        |script| {
+            let flat = run_topo_script(&TopoShape::Flat, N_EP, script.clone(), true)
+                .map_err(|e| format!("flat: {e}"))?;
+            for shape in &shapes {
+                let r = run_topo_script(shape, N_EP, script.clone(), true)
+                    .map_err(|e| format!("{}: {e}", shape.label()))?;
+                if r.deliveries != flat.deliveries {
+                    return Err(format!(
+                        "{}: deliveries {:?} != flat {:?}",
+                        shape.label(),
+                        r.deliveries,
+                        flat.deliveries
+                    ));
+                }
+                if r.stats.w_beats_out != r.stats.w_beats_in + r.stats.w_fork_extra {
+                    return Err(format!("{}: W fork accounting broken", shape.label()));
+                }
+                if r.stats.decerr != 0 {
+                    return Err(format!("{}: unexpected DECERR", shape.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The broadcast microbenchmark runs end-to-end on every shape with
+/// multicast beating the unicast train, and the per-xbar stats
+/// invariants hold.
+#[test]
+fn broadcast_runs_on_all_shapes_with_invariants() {
+    for shape in [
+        TopoShape::Flat,
+        TopoShape::Tree { arity: vec![4, 4] },
+        TopoShape::Tree {
+            arity: vec![2, 2, 4],
+        },
+        TopoShape::Mesh { tiles: 4 },
+    ] {
+        let uni = run_topo_broadcast(&shape, N_EP, 2, 16, false)
+            .unwrap_or_else(|e| panic!("{}: unicast: {e}", shape.label()));
+        let hw = run_topo_broadcast(&shape, N_EP, 2, 16, true)
+            .unwrap_or_else(|e| panic!("{}: mcast: {e}", shape.label()));
+        assert!(
+            hw.cycles < uni.cycles,
+            "{}: mcast ({}) must beat unicast ({})",
+            shape.label(),
+            hw.cycles,
+            uni.cycles
+        );
+        for r in [&uni, &hw] {
+            assert_eq!(
+                r.stats.w_beats_out,
+                r.stats.w_beats_in + r.stats.w_fork_extra,
+                "{}: W fork accounting",
+                r.shape
+            );
+            assert_eq!(r.stats.decerr, 0, "{}: DECERR", r.shape);
+        }
+        // the delivered beat totals are mode-independent
+        assert_eq!(uni.deliveries, hw.deliveries, "{}", shape.label());
+    }
+}
+
+/// Payload bases: every delivered burst lands at its endpoint's
+/// `base + DST_OFF` window regardless of shape (no address corruption
+/// through the exclude-scope rewrite).
+#[test]
+fn delivered_bases_are_exact() {
+    let eps = topo_endpoints(N_EP);
+    for shape in [
+        TopoShape::Tree { arity: vec![4, 4] },
+        TopoShape::Mesh { tiles: 4 },
+    ] {
+        let r = run_topo_broadcast(&shape, N_EP, 3, 4, true).unwrap();
+        for (i, d) in r.deliveries.iter().enumerate() {
+            assert_eq!(d.len(), 3);
+            for (base, beats) in d {
+                assert_eq!(*base, eps.addr(i) + TOPO_DST_OFF);
+                assert_eq!(*beats, 4);
+            }
+        }
+    }
+}
