@@ -1,16 +1,34 @@
 //! Simulator-performance microbenchmarks (§Perf): isolate the hot
-//! paths — crossbar arbitration, W transport, whole-SoC stepping — and
-//! report simulated-cycles-per-second so optimisation deltas are
-//! measurable layer by layer.
+//! paths — crossbar arbitration, W transport, whole-SoC stepping, the
+//! event-horizon run loop — and report simulated-cycles-per-second so
+//! optimisation deltas are measurable layer by layer.
+//!
+//! Every scenario runs in the optimised configuration and in ablation
+//! modes (`naive` = worklists/dense-table/horizon off, the bit-identical
+//! reference checked by `tests/perf_parity.rs`; `no-horizon` = optimised
+//! crossbars but per-cycle stepping), so each §Perf layer's contribution
+//! stays visible. Results are written to `BENCH_sim_perf.json` at the
+//! repo root (schema in EXPERIMENTS.md §Perf); a pre-existing file is
+//! folded in as the `baseline` so the perf trajectory is recorded
+//! PR over PR.
+//!
+//! ```sh
+//! cargo bench --bench sim_perf                 # full run, writes JSON
+//! cargo bench --bench sim_perf -- --cycles 20000 --iters 4   # CI-sized
+//! cargo bench --bench sim_perf -- --no-json    # print only
+//! ```
 
 use std::time::Instant;
 
+use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
 use axi_mcast::axi::golden::SimSlave;
 use axi_mcast::axi::mcast::AddrSet;
 use axi_mcast::axi::types::{AwBeat, WBeat};
 use axi_mcast::axi::xbar::{Xbar, XbarCfg};
-use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
 use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use axi_mcast::sim::engine::{Engine, StepResult, Watchdog};
+use axi_mcast::util::cli::Args;
+use axi_mcast::util::json::Json;
 
 fn cluster_map(n: usize) -> AddrMap {
     let rules: Vec<AddrRule> = (0..n)
@@ -27,10 +45,36 @@ fn cluster_map(n: usize) -> AddrMap {
     AddrMap::new(rules, n).unwrap()
 }
 
+/// One measured scenario variant.
+struct Row {
+    scenario: &'static str,
+    variant: &'static str,
+    mcycle_per_s: f64,
+    sim_cycles: u64,
+    wall_s: f64,
+    /// Simulated cycles per workload run (load scenarios only).
+    cycles_per_run: Option<u64>,
+}
+
+impl Row {
+    fn new(scenario: &'static str, variant: &'static str, sim_cycles: u64, wall_s: f64) -> Row {
+        Row {
+            scenario,
+            variant,
+            mcycle_per_s: sim_cycles as f64 / wall_s / 1e6,
+            sim_cycles,
+            wall_s,
+            cycles_per_run: None,
+        }
+    }
+}
+
 /// Saturated 16×16 crossbar: every master streams multicast writes.
-fn bench_xbar_16x16(cycles: u64) -> f64 {
+/// Construction is outside the timed region.
+fn bench_xbar_16x16(cycles: u64, force_naive: bool) -> Row {
     let n = 16;
-    let cfg = XbarCfg::new("perf", n, n, cluster_map(n));
+    let mut cfg = XbarCfg::new("perf", n, n, cluster_map(n));
+    cfg.force_naive = force_naive;
     let (mut xbar, mut pool) = Xbar::with_pool(cfg, 2);
     let m_links = xbar.m_links.clone();
     let s_links = xbar.s_links.clone();
@@ -72,55 +116,257 @@ fn bench_xbar_16x16(cycles: u64) -> f64 {
         }
         pool.tick_all();
     }
-    cycles as f64 / t0.elapsed().as_secs_f64()
-}
-
-/// Whole 32-cluster SoC under the hw-multicast microbenchmark load.
-fn bench_soc(iters: u32) -> (f64, u64) {
-    let cfg = SocConfig::default();
-    let mut total_cycles = 0u64;
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        let mut soc = Soc::new(cfg.clone());
-        let mut progs = vec![Vec::new(); cfg.n_clusters];
-        progs[0] = vec![
-            Cmd::Dma {
-                src: cfg.cluster_base(0),
-                dst: cfg.cluster_set(0, 32, 0x10000),
-                bytes: 32 * 1024,
-                tag: 1,
-            },
-            Cmd::WaitDma,
-        ];
-        soc.load_programs(progs);
-        total_cycles += soc.run_default(&mut NopCompute).unwrap();
-    }
-    (
-        total_cycles as f64 / t0.elapsed().as_secs_f64(),
-        total_cycles / iters as u64,
+    let variant = if force_naive { "naive" } else { "opt" };
+    Row::new(
+        "xbar 16x16 saturated mcast",
+        variant,
+        cycles,
+        t0.elapsed().as_secs_f64(),
     )
 }
 
-/// Idle SoC stepping cost (fixed overhead per cycle).
-fn bench_soc_idle(cycles: u64) -> f64 {
-    let cfg = SocConfig::default();
+/// Idle SoC stepping cost (fixed overhead per cycle). Construction and
+/// settling are outside the timed region.
+fn bench_soc_idle(cycles: u64, force_naive: bool) -> Row {
+    let cfg = SocConfig {
+        force_naive,
+        ..SocConfig::default()
+    };
     let mut soc = Soc::new(cfg);
+    // settle the initial all-active link state so the measured region
+    // is the steady idle edge
+    for _ in 0..4 {
+        soc.step(&mut NopCompute);
+    }
     let t0 = Instant::now();
     for _ in 0..cycles {
         soc.step(&mut NopCompute);
     }
-    cycles as f64 / t0.elapsed().as_secs_f64()
+    let variant = if force_naive { "naive" } else { "opt" };
+    Row::new(
+        "SoC 32-cluster idle step",
+        variant,
+        cycles,
+        t0.elapsed().as_secs_f64(),
+    )
+}
+
+fn mcast_load_program(cfg: &SocConfig) -> Vec<Vec<Cmd>> {
+    let mut progs = vec![Vec::new(); cfg.n_clusters];
+    progs[0] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: cfg.cluster_set(0, 32, 0x10000),
+            bytes: 32 * 1024,
+            tag: 1,
+        },
+        Cmd::WaitDma,
+    ];
+    progs
+}
+
+/// Whole 32-cluster SoC under the hw-multicast microbenchmark load.
+/// `Soc::new` (SocMem allocation!) happens outside the timed region:
+/// only `run` is measured; cycles/s and cycles/run report separately.
+fn bench_soc_load(iters: u32, force_naive: bool) -> Row {
+    let cfg = SocConfig {
+        force_naive,
+        ..SocConfig::default()
+    };
+    let mut total_cycles = 0u64;
+    let mut wall = 0.0f64;
+    for _ in 0..iters {
+        let mut soc = Soc::new(cfg.clone());
+        soc.load_programs(mcast_load_program(&cfg));
+        let t0 = Instant::now();
+        total_cycles += soc.run_default(&mut NopCompute).unwrap();
+        wall += t0.elapsed().as_secs_f64();
+    }
+    let variant = if force_naive { "naive" } else { "opt" };
+    let mut row = Row::new("SoC 32-cluster hw-mcast load", variant, total_cycles, wall);
+    row.cycles_per_run = Some(total_cycles / iters as u64);
+    row
+}
+
+fn stagger_program(n: usize) -> Vec<Vec<Cmd>> {
+    (0..n)
+        .map(|i| {
+            vec![
+                Cmd::Delay {
+                    cycles: 200 + (i as u64) * 400,
+                },
+                Cmd::Barrier,
+                Cmd::Compute {
+                    macs: 4096,
+                    op: 1,
+                    arg: 0,
+                },
+            ]
+        })
+        .collect()
+}
+
+/// Per-cycle `Soc::run` equivalent without `try_skip`: same Engine,
+/// watchdog and coarse progress sampling as the real run loop, so the
+/// `no-horizon` variant differs from `opt` only in the event horizon.
+fn run_per_cycle(soc: &mut Soc) -> u64 {
+    let mut eng = Engine::new(Watchdog {
+        stall_cycles: 200_000,
+        max_cycles: 500_000_000,
+    });
+    eng.now = soc.cycles;
+    let mut cached_progress = 0u64;
+    let mut last_sample = soc.cycles;
+    eng.run(|cy| {
+        soc.step(&mut NopCompute);
+        if soc.all_done() {
+            return StepResult::Done;
+        }
+        if cy >= last_sample + 64 {
+            cached_progress = soc.progress();
+            last_sample = cy;
+        }
+        StepResult::Running {
+            progress: cached_progress,
+        }
+    })
+    .unwrap()
+}
+
+/// Latency-dominated barrier staggering: the event-horizon showcase.
+/// `no-horizon` uses the same optimised crossbars but steps every
+/// cycle, isolating layer (b) from layer (a). All variants run through
+/// the Engine (identical harness cost, and a deadlock regression fails
+/// via the watchdog instead of hanging CI).
+fn bench_soc_stagger(iters: u32, variant: &'static str) -> Row {
+    let cfg = SocConfig {
+        force_naive: variant == "naive",
+        ..SocConfig::default()
+    };
+    let horizon = variant == "opt";
+    let mut total_cycles = 0u64;
+    let mut wall = 0.0f64;
+    for _ in 0..iters {
+        let mut soc = Soc::new(cfg.clone());
+        soc.load_programs(stagger_program(cfg.n_clusters));
+        let t0 = Instant::now();
+        total_cycles += if horizon {
+            soc.run_default(&mut NopCompute).unwrap()
+        } else {
+            run_per_cycle(&mut soc)
+        };
+        wall += t0.elapsed().as_secs_f64();
+    }
+    let mut row = Row::new("SoC 32-cluster barrier stagger", variant, total_cycles, wall);
+    row.cycles_per_run = Some(total_cycles / iters as u64);
+    row
+}
+
+fn rows_to_json(rows: &[Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("scenario", r.scenario)
+                    .set("variant", r.variant)
+                    .set("mcycle_per_s", (r.mcycle_per_s * 100.0).round() / 100.0)
+                    .set("sim_cycles", r.sim_cycles)
+                    .set("wall_s", r.wall_s);
+                match r.cycles_per_run {
+                    Some(c) => o.set("cycles_per_run", c),
+                    None => o.set("cycles_per_run", Json::Null),
+                };
+                o
+            })
+            .collect(),
+    )
+}
+
+fn opt_over_naive(rows: &[Row], scenario: &str) -> Option<f64> {
+    let get = |v: &str| {
+        rows.iter()
+            .find(|r| r.scenario == scenario && r.variant == v)
+            .map(|r| r.mcycle_per_s)
+    };
+    match (get("opt"), get("naive")) {
+        (Some(o), Some(n)) if n > 0.0 => Some(o / n),
+        _ => None,
+    }
 }
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let cycles = args.u64_or("cycles", 200_000).unwrap().max(1);
+    let iters = (args.u64_or("iters", 20).unwrap() as u32).max(1);
+    let default_json = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_perf.json");
+    let json_path = args.get_or("json", default_json).to_string();
+    let write_json = !args.flag("no-json");
+
     println!("sim_perf — simulator hot-path throughput (higher is better)\n");
-    let x = bench_xbar_16x16(200_000);
-    println!("xbar 16x16 saturated mcast : {:>8.2} Mcycle/s", x / 1e6);
-    let idle = bench_soc_idle(200_000);
-    println!("SoC 32-cluster idle step   : {:>8.2} Mcycle/s", idle / 1e6);
-    let (soc, per_run) = bench_soc(20);
-    println!(
-        "SoC 32-cluster hw-mcast load: {:>8.2} Mcycle/s ({per_run} cycles/run)",
-        soc / 1e6
-    );
+    let mut rows: Vec<Row> = Vec::new();
+    for naive in [false, true] {
+        rows.push(bench_xbar_16x16(cycles, naive));
+        rows.push(bench_soc_idle(cycles, naive));
+        rows.push(bench_soc_load(iters, naive));
+    }
+    for variant in ["opt", "no-horizon", "naive"] {
+        rows.push(bench_soc_stagger(iters.clamp(1, 8), variant));
+    }
+    rows.sort_by(|a, b| (a.scenario, a.variant).cmp(&(b.scenario, b.variant)));
+
+    for r in &rows {
+        let per_run = r
+            .cycles_per_run
+            .map(|c| format!(" ({c} cycles/run)"))
+            .unwrap_or_default();
+        println!(
+            "{:<32} {:<10} : {:>9.2} Mcycle/s{per_run}",
+            r.scenario, r.variant, r.mcycle_per_s
+        );
+    }
+    println!();
+    let scenarios = [
+        "SoC 32-cluster idle step",
+        "xbar 16x16 saturated mcast",
+        "SoC 32-cluster hw-mcast load",
+        "SoC 32-cluster barrier stagger",
+    ];
+    let mut speedups = Json::obj();
+    for s in scenarios {
+        if let Some(x) = opt_over_naive(&rows, s) {
+            println!("speedup opt/naive  {s:<32} : {x:.2}x");
+            speedups.set(s, (x * 100.0).round() / 100.0);
+        }
+    }
+
+    if !write_json {
+        return;
+    }
+    // fold a pre-existing result file in as the baseline (one level:
+    // the old file's own baseline is dropped)
+    let baseline = std::fs::read_to_string(&json_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .map(|mut old| {
+            if let Json::Obj(m) = &mut old {
+                m.remove("baseline");
+            }
+            old
+        })
+        .unwrap_or(Json::Null);
+    let mut out = Json::obj();
+    out.set("bench", "sim_perf")
+        .set("schema", 1u64)
+        .set("config", {
+            let mut c = Json::obj();
+            c.set("cycles", cycles).set("iters", iters as u64);
+            c
+        })
+        .set("scenarios", rows_to_json(&rows))
+        .set("speedup_opt_over_naive", speedups)
+        .set("baseline", baseline);
+    match std::fs::write(&json_path, out.pretty() + "\n") {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
 }

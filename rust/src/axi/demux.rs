@@ -21,7 +21,8 @@ use std::collections::{HashMap, VecDeque};
 
 use super::addr_map::McastDecode;
 use super::mcast::AddrSet;
-use super::types::{AwBeat, AxiId, BBeat, Resp, Txn};
+use super::types::{AwBeat, AxiId, BBeat, Resp, SlaveVec, Txn, FORK_INLINE};
+use crate::util::inline_vec::InlineVec;
 
 /// One forked AW headed to a specific slave port.
 #[derive(Debug, Clone)]
@@ -35,11 +36,15 @@ pub struct TargetAw {
     pub exclude: Option<(u64, u64)>,
 }
 
+/// Fork-target list of one decoded AW, allocation-free up to
+/// [`FORK_INLINE`] destinations (§Perf).
+pub type TargetVec = InlineVec<TargetAw, FORK_INLINE>;
+
 /// An AW accepted from the master, decoded, awaiting grant/commit.
 #[derive(Debug, Clone)]
 pub struct PendingAw {
     pub beat: AwBeat,
-    pub targets: Vec<TargetAw>,
+    pub targets: TargetVec,
     /// Initial join resp (DECERR if part of the set was unroutable).
     pub resp0: Resp,
 }
@@ -48,7 +53,7 @@ pub struct PendingAw {
 #[derive(Debug, Clone)]
 pub struct WRoute {
     pub txn: Txn,
-    pub slaves: Vec<usize>,
+    pub slaves: SlaveVec,
     pub beats_left: u32,
     pub is_mcast: bool,
 }
@@ -61,7 +66,7 @@ pub struct Join {
     pub resp: Resp,
     pub is_mcast: bool,
     /// Slave set (for the ordering table release).
-    pub slaves: Vec<usize>,
+    pub slaves: SlaveVec,
 }
 
 /// Per-ID ordering entry (unicast): slave currently bound to this ID.
@@ -109,7 +114,7 @@ pub struct Demux {
     pub outstanding_unicast: u32,
     pub outstanding_mcast: u32,
     /// Target-port set shared by all outstanding multicasts.
-    pub mcast_set: Vec<usize>,
+    pub mcast_set: SlaveVec,
 }
 
 impl Demux {
@@ -125,7 +130,7 @@ impl Demux {
             id_table: HashMap::new(),
             outstanding_unicast: 0,
             outstanding_mcast: 0,
-            mcast_set: Vec::new(),
+            mcast_set: SlaveVec::new(),
         }
     }
 
@@ -142,7 +147,7 @@ impl Demux {
                 return Stall::McastAfterUnicast;
             }
             if self.outstanding_mcast > 0 {
-                if self.mcast_set != slaves {
+                if self.mcast_set.as_slice() != slaves {
                     return Stall::McastSetMismatch;
                 }
                 if self.outstanding_mcast >= self.max_mcast_outstanding {
@@ -166,7 +171,7 @@ impl Demux {
 
     /// Record acceptance of an AW (ordering tables + W route + join).
     pub fn accept(&mut self, beat: &AwBeat, targets: &[TargetAw], resp0: Resp) {
-        let slaves: Vec<usize> = targets.iter().map(|t| t.slave).collect();
+        let slaves: SlaveVec = targets.iter().map(|t| t.slave).collect();
         if beat.is_mcast {
             self.outstanding_mcast += 1;
             self.mcast_set = slaves.clone();

@@ -153,6 +153,23 @@ impl SimSlave {
         self.w_queue.is_empty() && self.b_sched.is_empty() && self.r_jobs.is_empty()
     }
 
+    /// Event horizon (§Perf): the earliest cycle ≥ `now` at which this
+    /// slave can act without new input — its response schedule is kept
+    /// in absolute cycles, so waiting costs nothing to skip (no
+    /// per-cycle state to advance). In-progress W bursts wait on beats
+    /// (port activity) and contribute nothing.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let mut ev: Option<Cycle> = None;
+        let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
+        if let Some(&(ready, _)) = self.b_sched.front() {
+            fold(ready.max(now));
+        }
+        if let Some(&(ready, _, _, _)) = self.r_jobs.front() {
+            fold(ready.max(now));
+        }
+        ev
+    }
+
     /// Transactions delivered to this slave, in completion order.
     pub fn delivered_txns(&self) -> Vec<Txn> {
         self.writes.iter().map(|w| w.txn).collect()

@@ -224,6 +224,18 @@ impl Topology {
         self.xbars.iter().any(|x| x.maybe_busy)
     }
 
+    /// Event horizon over all crossbars (§Perf).
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        self.xbars.iter().filter_map(|x| x.next_event(now)).min()
+    }
+
+    /// Bulk-advance `k` pure-wait cycles on every non-quiescent xbar.
+    pub fn skip(&mut self, k: u64) {
+        for x in &mut self.xbars {
+            x.skip(k);
+        }
+    }
+
     /// Aggregate statistics over all crossbars.
     pub fn stats_sum(&self) -> XbarStats {
         sum_xbar_stats(&self.xbars)
@@ -288,6 +300,9 @@ pub struct FabricParams {
     pub mcast_enabled: bool,
     pub commit_protocol: bool,
     pub mcast_w_cooldown: u32,
+    /// §Perf reference mode: build the crossbars with their worklist /
+    /// dense-table fast paths disabled (see `XbarCfg::force_naive`).
+    pub force_naive: bool,
 }
 
 impl Default for FabricParams {
@@ -296,6 +311,7 @@ impl Default for FabricParams {
             mcast_enabled: true,
             commit_protocol: true,
             mcast_w_cooldown: 1,
+            force_naive: false,
         }
     }
 }
@@ -305,6 +321,7 @@ impl FabricParams {
         cfg.mcast_enabled = self.mcast_enabled;
         cfg.commit_protocol = self.commit_protocol;
         cfg.mcast_w_cooldown = self.mcast_w_cooldown;
+        cfg.force_naive = self.force_naive;
     }
 }
 

@@ -8,8 +8,19 @@
 
 use crate::axi::mcast::AddrSet;
 use crate::sim::Chan;
+use crate::util::inline_vec::InlineVec;
 
 pub use crate::sim::link::LinkId;
+
+/// Inline capacity of per-transaction fork-target lists (§Perf): sized
+/// for the widest fork in the shipped topologies (the 16-endpoint flat
+/// crossbar plus a default route). Wider forks spill to the heap and
+/// stay correct — they just lose the allocation-free fast path.
+pub const FORK_INLINE: usize = 17;
+
+/// Slave-port set of one transaction (fork destinations), inline up to
+/// [`FORK_INLINE`] entries.
+pub type SlaveVec = InlineVec<usize, FORK_INLINE>;
 
 /// Pool of AXI links shared by a component graph (crossbars, endpoint
 /// models, peripherals). All link access is through typed [`LinkId`]

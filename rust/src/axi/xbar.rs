@@ -32,16 +32,38 @@
 //! model equivalent of the RTL's decomposition of the "rest of world"
 //! route into log₂-many aligned mask-form rules; deliveries and beat
 //! counts are identical (see DESIGN.md §2).
+//!
+//! ## §Perf: allocation-free, O(active) hot paths
+//!
+//! * B/R owner lookup goes through a dense open-addressed
+//!   [`TxnTable`] instead of a SipHash `HashMap`.
+//! * Decoded fork-target lists live in [`InlineVec`]s
+//!   ([`TargetVec`]/[`SlaveVec`]); a per-master decode cache keyed by
+//!   the front AW's txn avoids re-decoding while a request stalls.
+//! * Per-master **worklist bitmasks** (`mask_pending`/`mask_w`/
+//!   `mask_b_out`, plus an input-visibility scan computed once per
+//!   step) let every phase iterate set bits in ascending order instead
+//!   of scanning `0..n_masters` — identical arbitration order, cost
+//!   proportional to actual activity.
+//! * `XbarCfg::force_naive` turns the worklists and the dense table
+//!   off (falling back to full scans + `HashMap`): the bit-identical
+//!   reference mode checked by `tests/perf_parity.rs` and measured as
+//!   an ablation layer by `benches/sim_perf.rs`. Crossbars wider than
+//!   64 ports use the naive scans automatically.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 
 use super::addr_map::AddrMap;
-use super::demux::{Demux, PendingAw, Stall, TargetAw};
+use super::demux::{Demux, PendingAw, Stall, TargetAw, TargetVec};
 use super::mcast::AddrSet;
 use super::mux::Mux;
-use super::types::{AwBeat, AxiLink, LinkId, LinkPool, RBeat, Resp, Txn, WBeat};
+use super::types::{
+    AwBeat, AxiLink, LinkId, LinkPool, RBeat, Resp, SlaveVec, Txn, WBeat, FORK_INLINE,
+};
 use crate::sim::sched::Component;
 use crate::sim::Cycle;
+use crate::util::dense::TxnTable;
+use crate::util::inline_vec::InlineVec;
 
 /// Crossbar configuration.
 #[derive(Debug)]
@@ -79,6 +101,11 @@ pub struct XbarCfg {
     /// EXPERIMENTS.md); `0` is an idealised single-cycle fork
     /// (ablation).
     pub mcast_w_cooldown: u32,
+    /// Reference/ablation mode (§Perf): disable the worklist bitmasks
+    /// and the dense txn table, restoring the scan-everything PR-1
+    /// behaviour. Simulated cycles and stats are bit-identical either
+    /// way (`tests/perf_parity.rs`).
+    pub force_naive: bool,
 }
 
 impl XbarCfg {
@@ -96,12 +123,13 @@ impl XbarCfg {
             max_outstanding: 16,
             mcast_commit_lat: 8,
             mcast_w_cooldown: 1,
+            force_naive: false,
         }
     }
 }
 
 /// Aggregate statistics (read by benches and EXPERIMENTS.md harnesses).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct XbarStats {
     pub aw_unicast: u64,
     pub aw_mcast: u64,
@@ -147,9 +175,19 @@ impl XbarStats {
 #[derive(Debug)]
 struct PendingEntry {
     pend: PendingAw,
-    forwarded: Vec<bool>,
+    forwarded: InlineVec<bool, FORK_INLINE>,
     /// Cycles spent pending (commit handshake modelling).
     age: u32,
+}
+
+/// Memoised decode of one master's front AW (§Perf): a stalled request
+/// is re-examined every cycle, but its decode is pure in the beat, so
+/// it is computed once per transaction instead of once per cycle.
+#[derive(Debug)]
+struct DecCache {
+    txn: Txn,
+    targets: TargetVec,
+    resp0: Resp,
 }
 
 /// The crossbar.
@@ -171,15 +209,32 @@ pub struct Xbar {
     /// Per-master cooldown countdown for multicast W forks.
     w_cooldown: Vec<u32>,
     /// Reused per-cycle scratch (per-master decoded target), avoiding
-    /// hot-loop allocation.
+    /// hot-loop allocation. Invariant: all `None` between phases.
     scratch_want: Vec<Option<usize>>,
+    /// Per-master decode memo for the front AW (§Perf).
+    dec_cache: Vec<Option<DecCache>>,
     /// Cached busy state from the last stepped cycle (idle-skip).
     pub maybe_busy: bool,
-    wr_owner: HashMap<Txn, usize>,
-    rd_owner: HashMap<Txn, usize>,
+    wr_owner: TxnTable,
+    rd_owner: TxnTable,
     /// DECERR read responses being generated: (master, id, txn, beats).
-    decerr_r: Vec<(usize, u16, Txn, u32)>,
+    /// VecDeque so the common front-completion removal is O(1).
+    decerr_r: VecDeque<(usize, u16, Txn, u32)>,
     pub stats: XbarStats,
+
+    // ---- worklists (§Perf) ----
+    /// Bitmasks valid when `use_masks`: masters with a decoded pending
+    /// AW / a live W route or fork cooldown / queued joined Bs.
+    mask_pending: u64,
+    mask_w: u64,
+    mask_b_out: u64,
+    /// Pending multicast count (O(1) grant-phase early-out).
+    n_pending_mcast: u32,
+    /// Any mux may hold a stale grant (cleared once after the last
+    /// pending multicast retires).
+    grants_live: bool,
+    /// Worklists enabled: `!force_naive` and ≤64 ports per side.
+    use_masks: bool,
 }
 
 impl Xbar {
@@ -194,7 +249,10 @@ impl Xbar {
         let pending = (0..cfg.n_masters).map(|_| None).collect();
         let w_cooldown = vec![0; cfg.n_masters];
         let scratch_want = vec![None; cfg.n_masters];
+        let dec_cache = (0..cfg.n_masters).map(|_| None).collect();
         let ports: Vec<LinkId> = m_links.iter().chain(s_links.iter()).copied().collect();
+        let use_masks = !cfg.force_naive && cfg.n_masters <= 64 && cfg.n_slaves <= 64;
+        let force_naive = cfg.force_naive;
         Xbar {
             cfg,
             demux,
@@ -205,11 +263,18 @@ impl Xbar {
             pending,
             w_cooldown,
             scratch_want,
+            dec_cache,
             maybe_busy: false,
-            wr_owner: HashMap::new(),
-            rd_owner: HashMap::new(),
-            decerr_r: Vec::new(),
+            wr_owner: TxnTable::new(force_naive),
+            rd_owner: TxnTable::new(force_naive),
+            decerr_r: VecDeque::new(),
             stats: XbarStats::default(),
+            mask_pending: 0,
+            mask_w: 0,
+            mask_b_out: 0,
+            n_pending_mcast: 0,
+            grants_live: false,
+            use_masks,
         }
     }
 
@@ -224,41 +289,92 @@ impl Xbar {
         (Xbar::new(cfg, m_links, s_links), pool)
     }
 
+    // ---- worklist bookkeeping (no-ops semantically; the masks are
+    // pure accelerators and ignored in naive mode) ----
+
+    #[inline]
+    fn note_pending(&mut self, m: usize, set: bool) {
+        if m < 64 {
+            if set {
+                self.mask_pending |= 1u64 << m;
+            } else {
+                self.mask_pending &= !(1u64 << m);
+            }
+        }
+    }
+
+    #[inline]
+    fn note_w(&mut self, m: usize) {
+        if m < 64 {
+            self.mask_w |= 1u64 << m;
+        }
+    }
+
+    #[inline]
+    fn note_b_out(&mut self, m: usize) {
+        if m < 64 {
+            self.mask_b_out |= 1u64 << m;
+        }
+    }
+
+    /// Run `f` for each index in `mask` (ascending — the same order as
+    /// the naive scan, so arbitration is unaffected), or for `0..n`
+    /// when the worklists are disabled.
+    #[inline]
+    fn for_each(
+        &mut self,
+        mask: u64,
+        n: usize,
+        pool: &mut LinkPool,
+        mut f: impl FnMut(&mut Xbar, usize, &mut LinkPool),
+    ) {
+        if self.use_masks {
+            let mut bits = mask;
+            while bits != 0 {
+                let i = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                f(self, i, pool);
+            }
+        } else {
+            for i in 0..n {
+                f(self, i, pool);
+            }
+        }
+    }
+
     /// Decode an AW's destination set into fork targets, honouring the
     /// exclude scope and the default route.
-    fn decode_aw(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (Vec<TargetAw>, Resp) {
+    fn decode_aw(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (TargetVec, Resp) {
         // fast path: plain unicast
         if dest.is_singleton() {
             if let Some(s) = self.cfg.map.decode_unicast(dest.addr) {
-                return (
-                    vec![TargetAw {
-                        slave: s,
-                        dest: *dest,
-                        exclude: None,
-                    }],
-                    Resp::Okay,
-                );
+                let mut t = TargetVec::new();
+                t.push(TargetAw {
+                    slave: s,
+                    dest: *dest,
+                    exclude: None,
+                });
+                return (t, Resp::Okay);
             }
             if let Some(up) = self.cfg.default_slave {
-                return (
-                    vec![TargetAw {
-                        slave: up,
-                        dest: *dest,
-                        exclude: None,
-                    }],
-                    Resp::Okay,
-                );
+                let mut t = TargetVec::new();
+                t.push(TargetAw {
+                    slave: up,
+                    dest: *dest,
+                    exclude: None,
+                });
+                return (t, Resp::Okay);
             }
-            return (Vec::new(), Resp::DecErr);
+            return (TargetVec::new(), Resp::DecErr);
         }
 
         if !self.cfg.mcast_enabled {
             // baseline XBAR: masked requests are illegal
-            return (Vec::new(), Resp::DecErr);
+            return (TargetVec::new(), Resp::DecErr);
         }
 
         let d = self.cfg.map.decode(dest);
-        let mut targets = Vec::with_capacity(d.targets.len() + 1);
+        let mut targets = TargetVec::new();
         let mut excl_in_rules = 0u64;
         for (s, sub) in &d.targets {
             if let Some((es, ee)) = exclude {
@@ -330,10 +446,33 @@ impl Xbar {
 
     /// One clock cycle. `pool` is the shared link pool.
     pub fn step(&mut self, pool: &mut LinkPool) {
-        self.phase_b(pool);
-        self.phase_r(pool);
-        self.phase_ar(pool);
-        self.phase_aw_accept(pool);
+        // one consolidated input-visibility scan (§Perf): which ports
+        // carry beats this cycle; the phases then iterate set bits only
+        let (mut in_aw, mut in_ar, mut in_b, mut in_r) = (0u64, 0u64, 0u64, 0u64);
+        if self.use_masks {
+            for (m, &l) in self.m_links.iter().enumerate() {
+                let link = &pool[l];
+                if link.aw.visible() > 0 {
+                    in_aw |= 1u64 << m;
+                }
+                if link.ar.visible() > 0 {
+                    in_ar |= 1u64 << m;
+                }
+            }
+            for (s, &l) in self.s_links.iter().enumerate() {
+                let link = &pool[l];
+                if link.b.visible() > 0 {
+                    in_b |= 1u64 << s;
+                }
+                if link.r.visible() > 0 {
+                    in_r |= 1u64 << s;
+                }
+            }
+        }
+        self.phase_b(pool, in_b);
+        self.phase_r(pool, in_r);
+        self.phase_ar(pool, in_ar);
+        self.phase_aw_accept(pool, in_aw);
         self.phase_grant();
         self.phase_commit(pool);
         self.phase_unicast_aw(pool);
@@ -344,50 +483,57 @@ impl Xbar {
     }
 
     /// Phase 1 — B collection + joined-B drain.
-    fn phase_b(&mut self, pool: &mut LinkPool) {
-        for s in 0..self.cfg.n_slaves {
-            if let Some(b) = pool[self.s_links[s]].b.pop() {
-                let m = *self
+    fn phase_b(&mut self, pool: &mut LinkPool, in_b: u64) {
+        let ns = self.cfg.n_slaves;
+        self.for_each(in_b, ns, pool, |xb, s, pool| {
+            if let Some(b) = pool[xb.s_links[s]].b.pop() {
+                let m = xb
                     .wr_owner
-                    .get(&b.txn)
-                    .unwrap_or_else(|| panic!("{}: B for unknown txn {}", self.cfg.name, b.txn));
-                if let Some(joined) = self.demux[m].join_b(b.txn, b.resp, b.id) {
-                    self.wr_owner.remove(&b.txn);
-                    self.stats.b_joined += 1;
-                    self.demux[m].b_out.push_back(joined);
+                    .get(b.txn)
+                    .unwrap_or_else(|| panic!("{}: B for unknown txn {}", xb.cfg.name, b.txn));
+                if let Some(joined) = xb.demux[m].join_b(b.txn, b.resp, b.id) {
+                    xb.wr_owner.remove(b.txn);
+                    xb.stats.b_joined += 1;
+                    xb.demux[m].b_out.push_back(joined);
+                    xb.note_b_out(m);
                 }
             }
-        }
-        for m in 0..self.cfg.n_masters {
-            if let Some(&b) = self.demux[m].b_out.front() {
-                if pool[self.m_links[m]].b.can_push() {
-                    self.demux[m].b_out.pop_front();
-                    pool[self.m_links[m]].b.push(b);
+        });
+        let nm = self.cfg.n_masters;
+        self.for_each(self.mask_b_out, nm, pool, |xb, m, pool| {
+            if let Some(&b) = xb.demux[m].b_out.front() {
+                if pool[xb.m_links[m]].b.can_push() {
+                    xb.demux[m].b_out.pop_front();
+                    pool[xb.m_links[m]].b.push(b);
                 }
             }
-        }
+            if m < 64 && xb.demux[m].b_out.is_empty() {
+                xb.mask_b_out &= !(1u64 << m);
+            }
+        });
     }
 
     /// Phase 2 — R routing (slave→master) + DECERR R generation.
-    fn phase_r(&mut self, pool: &mut LinkPool) {
-        for s in 0..self.cfg.n_slaves {
-            let link = self.s_links[s];
+    fn phase_r(&mut self, pool: &mut LinkPool, in_r: u64) {
+        let ns = self.cfg.n_slaves;
+        self.for_each(in_r, ns, pool, |xb, s, pool| {
+            let link = xb.s_links[s];
             let Some(r) = pool[link].r.front().copied() else {
-                continue;
+                return;
             };
-            let m = *self
+            let m = xb
                 .rd_owner
-                .get(&r.txn)
-                .unwrap_or_else(|| panic!("{}: R for unknown txn {}", self.cfg.name, r.txn));
-            if pool[self.m_links[m]].r.can_push() {
+                .get(r.txn)
+                .unwrap_or_else(|| panic!("{}: R for unknown txn {}", xb.cfg.name, r.txn));
+            if pool[xb.m_links[m]].r.can_push() {
                 pool[link].r.pop();
                 if r.last {
-                    self.rd_owner.remove(&r.txn);
+                    xb.rd_owner.remove(r.txn);
                 }
-                pool[self.m_links[m]].r.push(r);
-                self.stats.r_beats += 1;
+                pool[xb.m_links[m]].r.push(r);
+                xb.stats.r_beats += 1;
             }
-        }
+        });
         // synthesize DECERR read data for unroutable ARs
         let mut i = 0;
         while i < self.decerr_r.len() {
@@ -402,7 +548,7 @@ impl Xbar {
                     txn,
                 });
                 if last {
-                    self.decerr_r.remove(i);
+                    let _ = self.decerr_r.remove(i);
                     continue;
                 }
             }
@@ -411,100 +557,122 @@ impl Xbar {
     }
 
     /// Phase 3 — AR arbitration and forwarding (reads are unicast).
-    fn phase_ar(&mut self, pool: &mut LinkPool) {
-        // decode every master's front AR once (into reusable scratch)
+    fn phase_ar(&mut self, pool: &mut LinkPool, in_ar: u64) {
+        // decode every visible front AR once (into reusable scratch)
         let mut any = false;
-        for m in 0..self.cfg.n_masters {
-            let dec = pool[self.m_links[m]].ar.front().map(|ar| {
-                self.cfg
+        let nm = self.cfg.n_masters;
+        self.for_each(in_ar, nm, pool, |xb, m, pool| {
+            let dec = pool[xb.m_links[m]].ar.front().map(|ar| {
+                xb.cfg
                     .map
                     .decode_unicast(ar.addr)
-                    .or(self.cfg.default_slave)
+                    .or(xb.cfg.default_slave)
             });
-            self.scratch_want[m] = match dec {
+            xb.scratch_want[m] = match dec {
                 Some(Some(s)) => {
                     any = true;
                     Some(s)
                 }
                 Some(None) => {
                     // unroutable read → DECERR R burst
-                    let ar = pool[self.m_links[m]].ar.pop().unwrap();
-                    self.stats.decerr += 1;
-                    self.decerr_r.push((m, ar.id, ar.txn, ar.beats));
+                    let ar = pool[xb.m_links[m]].ar.pop().unwrap();
+                    xb.stats.decerr += 1;
+                    xb.decerr_r.push_back((m, ar.id, ar.txn, ar.beats));
                     None
                 }
                 None => None,
             };
-        }
-        if !any {
-            return;
-        }
-        for s in 0..self.cfg.n_slaves {
-            if !pool[self.s_links[s]].ar.can_push() {
-                continue;
+        });
+        if any {
+            for s in 0..self.cfg.n_slaves {
+                if !pool[self.s_links[s]].ar.can_push() {
+                    continue;
+                }
+                let want = &self.scratch_want;
+                if let Some(m) =
+                    self.mux[s].rr_pick_ar_scan(self.cfg.n_masters, |m| want[m] == Some(s))
+                {
+                    let mut ar = pool[self.m_links[m]].ar.pop().unwrap();
+                    ar.src = m;
+                    self.rd_owner.insert(ar.txn, m);
+                    pool[self.s_links[s]].ar.push(ar);
+                    self.stats.ar_forwarded += 1;
+                    self.scratch_want[m] = None;
+                }
             }
-            let want = &self.scratch_want;
-            if let Some(m) = self.mux[s].rr_pick_ar_scan(self.cfg.n_masters, |m| want[m] == Some(s))
-            {
-                let mut ar = pool[self.m_links[m]].ar.pop().unwrap();
-                ar.src = m;
-                self.rd_owner.insert(ar.txn, m);
-                pool[self.s_links[s]].ar.push(ar);
-                self.stats.ar_forwarded += 1;
-                self.scratch_want[m] = None;
-            }
         }
+        // restore the all-None scratch invariant over the touched set
+        self.for_each(in_ar, nm, pool, |xb, m, _| xb.scratch_want[m] = None);
     }
 
     /// Phase 4 — AW acceptance + decode (fig. 2d ordering stalls).
-    fn phase_aw_accept(&mut self, pool: &mut LinkPool) {
-        for m in 0..self.cfg.n_masters {
-            if self.pending[m].is_some() {
-                continue;
+    fn phase_aw_accept(&mut self, pool: &mut LinkPool, in_aw: u64) {
+        let nm = self.cfg.n_masters;
+        self.for_each(in_aw, nm, pool, |xb, m, pool| {
+            if xb.pending[m].is_some() {
+                return;
             }
-            let Some(front) = pool[self.m_links[m]].aw.front() else {
-                continue;
+            let Some(front) = pool[xb.m_links[m]].aw.front() else {
+                return;
             };
-            let (targets, resp0) = self.decode_aw(&front.dest, front.exclude);
-            let slaves: Vec<usize> = targets.iter().map(|t| t.slave).collect();
-            let is_mcast = front.is_mcast && slaves.len() != 1;
-            match self.demux[m].admit(is_mcast, front.id, &slaves) {
+            let (dest, exclude, txn, id, mcast_req) =
+                (front.dest, front.exclude, front.txn, front.id, front.is_mcast);
+            // memoised decode: a stalled front AW is re-examined every
+            // cycle but decoded only once
+            let hit = xb.dec_cache[m].as_ref().is_some_and(|c| c.txn == txn);
+            if !hit {
+                let (targets, resp0) = xb.decode_aw(&dest, exclude);
+                xb.dec_cache[m] = Some(DecCache {
+                    txn,
+                    targets,
+                    resp0,
+                });
+            }
+            let cache = xb.dec_cache[m].as_ref().unwrap();
+            let slaves: SlaveVec = cache.targets.iter().map(|t| t.slave).collect();
+            let is_mcast = mcast_req && slaves.len() != 1;
+            match xb.demux[m].admit(is_mcast, id, &slaves) {
                 Stall::None => {}
                 Stall::IdConflict => {
-                    self.stats.stall_id_conflict += 1;
-                    continue;
+                    xb.stats.stall_id_conflict += 1;
+                    return;
                 }
                 Stall::McastAfterUnicast
                 | Stall::UnicastAfterMcast
                 | Stall::McastSetMismatch
                 | Stall::McastLimit => {
-                    self.stats.stall_mcast_order += 1;
-                    continue;
+                    xb.stats.stall_mcast_order += 1;
+                    return;
                 }
-                _ => continue,
+                _ => return,
             }
-            let mut beat = pool[self.m_links[m]].aw.pop().unwrap();
+            let mut beat = pool[xb.m_links[m]].aw.pop().unwrap();
             beat.src = m;
             beat.is_mcast = is_mcast;
             if is_mcast {
-                self.stats.aw_mcast += 1;
+                xb.stats.aw_mcast += 1;
             } else {
-                self.stats.aw_unicast += 1;
+                xb.stats.aw_unicast += 1;
             }
-            if resp0 == Resp::DecErr && targets.is_empty() {
-                self.stats.decerr += 1;
+            let cache = xb.dec_cache[m].take().unwrap();
+            if cache.resp0 == Resp::DecErr && cache.targets.is_empty() {
+                xb.stats.decerr += 1;
             }
-            let forwarded = vec![false; targets.len()];
-            self.pending[m] = Some(PendingEntry {
+            let n_targets = cache.targets.len();
+            xb.pending[m] = Some(PendingEntry {
                 pend: PendingAw {
                     beat,
-                    targets,
-                    resp0,
+                    targets: cache.targets,
+                    resp0: cache.resp0,
                 },
-                forwarded,
+                forwarded: InlineVec::from_elem(false, n_targets),
                 age: 0,
             });
-        }
+            xb.note_pending(m, true);
+            if is_mcast {
+                xb.n_pending_mcast += 1;
+            }
+        });
     }
 
     /// Does master `m` have an unforwarded multicast leg for slave `s`?
@@ -517,7 +685,7 @@ impl Xbar {
                     && p.pend
                         .targets
                         .iter()
-                        .zip(&p.forwarded)
+                        .zip(p.forwarded.iter())
                         .any(|(t, f)| t.slave == s && !f)
             })
             .unwrap_or(false)
@@ -526,16 +694,24 @@ impl Xbar {
     /// Phase 5 — per-slave multicast grant (priority encoder).
     fn phase_grant(&mut self) {
         // hot path: no pending multicast anywhere → clear grants cheaply
-        if !self
-            .pending
-            .iter()
-            .any(|p| p.as_ref().map(|p| p.pend.beat.is_mcast).unwrap_or(false))
-        {
-            for s in 0..self.cfg.n_slaves {
-                self.mux[s].grant = None;
+        // (with worklists the check is O(1) and the clear runs once)
+        let any_mcast = if self.use_masks {
+            self.n_pending_mcast > 0
+        } else {
+            self.pending
+                .iter()
+                .any(|p| p.as_ref().map(|p| p.pend.beat.is_mcast).unwrap_or(false))
+        };
+        if !any_mcast {
+            if self.grants_live || !self.use_masks {
+                for s in 0..self.cfg.n_slaves {
+                    self.mux[s].grant = None;
+                }
+                self.grants_live = false;
             }
             return;
         }
+        self.grants_live = true;
         if self.cfg.commit_protocol && self.cfg.n_slaves <= 64 {
             // bitmask fast path: one unforwarded-target mask per master,
             // then per-slave priority encode over single bits (O(N²)
@@ -545,7 +721,7 @@ impl Xbar {
             for (m, mask) in masks.iter_mut().enumerate().take(nm) {
                 if let Some(p) = &self.pending[m] {
                     if p.pend.beat.is_mcast {
-                        for (t, f) in p.pend.targets.iter().zip(&p.forwarded) {
+                        for (t, f) in p.pend.targets.iter().zip(p.forwarded.iter()) {
                             if !f {
                                 *mask |= 1u64 << t.slave;
                             }
@@ -571,7 +747,7 @@ impl Xbar {
                     self.mux[s].grant_wait_cycles += 1;
                 }
             } else {
-                let requesters: Vec<usize> = (0..self.cfg.n_masters)
+                let requesters: InlineVec<usize, FORK_INLINE> = (0..self.cfg.n_masters)
                     .filter(|&m| self.wants_mcast(m, s))
                     .collect();
                 self.mux[s].arbitrate_mcast_rr(&requesters, self.cfg.n_masters);
@@ -581,7 +757,7 @@ impl Xbar {
 
     /// Fork one target of a pending AW onto its slave link.
     fn forward_target(
-        wr_owner: &mut HashMap<Txn, usize>,
+        wr_owner: &mut TxnTable,
         stats: &mut XbarStats,
         mux: &mut Mux,
         link: &mut AxiLink,
@@ -608,197 +784,233 @@ impl Xbar {
     /// Phase 6 — multicast commit (or per-slave forward when the commit
     /// protocol is disabled, reproducing fig. 2e).
     fn phase_commit(&mut self, pool: &mut LinkPool) {
-        for m in 0..self.cfg.n_masters {
-            let Some(entry) = self.pending[m].as_mut() else {
-                continue;
+        if self.use_masks && self.n_pending_mcast == 0 {
+            return;
+        }
+        let nm = self.cfg.n_masters;
+        let snapshot = self.mask_pending;
+        self.for_each(snapshot, nm, pool, |xb, m, pool| {
+            let Some(entry) = xb.pending[m].as_mut() else {
+                return;
             };
             if !entry.pend.beat.is_mcast {
-                continue;
+                return;
             }
             entry.age += 1;
-            if entry.age <= self.cfg.mcast_commit_lat {
-                self.stats.commit_waits += 1;
-                continue;
+            if entry.age <= xb.cfg.mcast_commit_lat {
+                xb.stats.commit_waits += 1;
+                return;
             }
-            let entry = self.pending[m].as_ref().unwrap();
+            let entry = xb.pending[m].as_ref().unwrap();
             if entry.pend.targets.is_empty() {
                 // unroutable mcast: accept so W drains, B = DECERR
-                let entry = self.pending[m].take().unwrap();
-                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
-                continue;
+                let entry = xb.pending[m].take().unwrap();
+                xb.note_pending(m, false);
+                xb.n_pending_mcast -= 1;
+                xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                xb.note_w(m);
+                return;
             }
-            if self.cfg.commit_protocol {
+            if xb.cfg.commit_protocol {
                 // all-or-nothing: every target granted to m and pushable
                 let all_ready = entry.pend.targets.iter().all(|t| {
-                    self.mux[t.slave].grant == Some(m)
-                        && pool[self.s_links[t.slave]].aw.can_push()
+                    xb.mux[t.slave].grant == Some(m) && pool[xb.s_links[t.slave]].aw.can_push()
                 });
                 if !all_ready {
-                    self.stats.commit_waits += 1;
-                    continue;
+                    xb.stats.commit_waits += 1;
+                    return;
                 }
-                let entry = self.pending[m].take().unwrap();
-                for t in &entry.pend.targets {
+                let entry = xb.pending[m].take().unwrap();
+                xb.note_pending(m, false);
+                xb.n_pending_mcast -= 1;
+                for t in entry.pend.targets.iter() {
                     Self::forward_target(
-                        &mut self.wr_owner,
-                        &mut self.stats,
-                        &mut self.mux[t.slave],
-                        &mut pool[self.s_links[t.slave]],
+                        &mut xb.wr_owner,
+                        &mut xb.stats,
+                        &mut xb.mux[t.slave],
+                        &mut pool[xb.s_links[t.slave]],
                         &entry.pend.beat,
                         t,
                         m,
                     );
-                    self.mux[t.slave].grant = None;
+                    xb.mux[t.slave].grant = None;
                 }
-                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                xb.note_w(m);
             } else {
                 // NO deadlock avoidance: fork each leg as it is granted
-                let entry = self.pending[m].as_mut().unwrap();
+                let entry = xb.pending[m].as_mut().unwrap();
                 let n = entry.pend.targets.len();
                 for i in 0..n {
                     if entry.forwarded[i] {
                         continue;
                     }
                     let t = entry.pend.targets[i].clone();
-                    if self.mux[t.slave].grant == Some(m)
-                        && pool[self.s_links[t.slave]].aw.can_push()
+                    if xb.mux[t.slave].grant == Some(m)
+                        && pool[xb.s_links[t.slave]].aw.can_push()
                     {
                         Self::forward_target(
-                            &mut self.wr_owner,
-                            &mut self.stats,
-                            &mut self.mux[t.slave],
-                            &mut pool[self.s_links[t.slave]],
+                            &mut xb.wr_owner,
+                            &mut xb.stats,
+                            &mut xb.mux[t.slave],
+                            &mut pool[xb.s_links[t.slave]],
                             &entry.pend.beat,
                             &t,
                             m,
                         );
                         entry.forwarded[i] = true;
-                        self.mux[t.slave].grant = None;
+                        xb.mux[t.slave].grant = None;
                     }
                 }
                 if entry.forwarded.iter().all(|&f| f) {
-                    let entry = self.pending[m].take().unwrap();
-                    self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                    let entry = xb.pending[m].take().unwrap();
+                    xb.note_pending(m, false);
+                    xb.n_pending_mcast -= 1;
+                    xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                    xb.note_w(m);
                 }
             }
-        }
+        });
     }
 
     /// Phase 7 — unicast AW forwarding (round-robin; multicast priority
     /// stalls unicast issue on a slave with a live grant).
     fn phase_unicast_aw(&mut self, pool: &mut LinkPool) {
+        if self.use_masks && self.mask_pending == 0 {
+            return;
+        }
         // masters with a pending unicast AW and its (single) target
         let mut any = false;
-        for m in 0..self.cfg.n_masters {
-            self.scratch_want[m] = self.pending[m].as_ref().and_then(|p| {
+        let nm = self.cfg.n_masters;
+        let snapshot = self.mask_pending;
+        self.for_each(snapshot, nm, pool, |xb, m, _pool| {
+            xb.scratch_want[m] = xb.pending[m].as_ref().and_then(|p| {
                 if p.pend.beat.is_mcast {
                     None
                 } else {
                     p.pend.targets.first().map(|t| t.slave)
                 }
             });
-            any |= self.scratch_want[m].is_some();
+            any |= xb.scratch_want[m].is_some();
             // unroutable unicast: accept immediately (W drains, DECERR B)
-            let unroutable = self.pending[m]
+            let unroutable = xb.pending[m]
                 .as_ref()
                 .map(|p| !p.pend.beat.is_mcast && p.pend.targets.is_empty())
                 .unwrap_or(false);
             if unroutable {
-                let entry = self.pending[m].take().unwrap();
-                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
-                self.scratch_want[m] = None;
+                let entry = xb.pending[m].take().unwrap();
+                xb.note_pending(m, false);
+                xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                xb.note_w(m);
+                xb.scratch_want[m] = None;
+            }
+        });
+        if any {
+            for s in 0..self.cfg.n_slaves {
+                if self.mux[s].mcast_active() || !pool[self.s_links[s]].aw.can_push() {
+                    continue;
+                }
+                let want = &self.scratch_want;
+                if let Some(m) =
+                    self.mux[s].rr_pick_aw_scan(self.cfg.n_masters, |m| want[m] == Some(s))
+                {
+                    let entry = self.pending[m].take().unwrap();
+                    self.note_pending(m, false);
+                    let t = entry.pend.targets[0].clone();
+                    Self::forward_target(
+                        &mut self.wr_owner,
+                        &mut self.stats,
+                        &mut self.mux[s],
+                        &mut pool[self.s_links[s]],
+                        &entry.pend.beat,
+                        &t,
+                        m,
+                    );
+                    self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
+                    self.note_w(m);
+                    self.scratch_want[m] = None;
+                }
             }
         }
-        if !any {
-            return;
-        }
-        for s in 0..self.cfg.n_slaves {
-            if self.mux[s].mcast_active() || !pool[self.s_links[s]].aw.can_push() {
-                continue;
-            }
-            let want = &self.scratch_want;
-            if let Some(m) = self.mux[s].rr_pick_aw_scan(self.cfg.n_masters, |m| want[m] == Some(s))
-            {
-                let entry = self.pending[m].take().unwrap();
-                let t = entry.pend.targets[0].clone();
-                Self::forward_target(
-                    &mut self.wr_owner,
-                    &mut self.stats,
-                    &mut self.mux[s],
-                    &mut pool[self.s_links[s]],
-                    &entry.pend.beat,
-                    &t,
-                    m,
-                );
-                self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
-                self.scratch_want[m] = None;
-            }
-        }
+        // restore the all-None scratch invariant over the touched set
+        self.for_each(snapshot, nm, pool, |xb, m, _| xb.scratch_want[m] = None);
     }
 
     /// Phase 8 — W transport with all-ready multicast fork.
     fn phase_w(&mut self, pool: &mut LinkPool) {
-        for m in 0..self.cfg.n_masters {
-            if self.w_cooldown[m] > 0 {
-                self.w_cooldown[m] -= 1;
-                continue;
+        let nm = self.cfg.n_masters;
+        self.for_each(self.mask_w, nm, pool, |xb, m, pool| xb.w_master(m, pool));
+    }
+
+    /// Per-master W transport (one call per active master per cycle).
+    fn w_master(&mut self, m: usize, pool: &mut LinkPool) {
+        if self.w_cooldown[m] > 0 {
+            self.w_cooldown[m] -= 1;
+            return;
+        }
+        let Some(route) = self.demux[m].w_queue.front() else {
+            // lazy worklist clear: no route and no cooldown left
+            if m < 64 {
+                self.mask_w &= !(1u64 << m);
             }
-            let Some(route) = self.demux[m].w_queue.front().cloned() else {
-                continue;
-            };
-            if route.slaves.is_empty() {
-                // drain W of an unroutable transaction
-                if route.beats_left == 0 || pool[self.m_links[m]].w.pop().is_some() {
-                    let r = self.demux[m].w_queue.front_mut().unwrap();
-                    r.beats_left = r.beats_left.saturating_sub(1);
-                    if r.beats_left == 0 {
-                        self.demux[m].w_queue.pop_front();
-                        let b = self.demux[m].complete_unroutable(route.txn);
-                        self.demux[m].b_out.push_back(b);
-                    }
-                }
-                continue;
-            }
-            if pool[self.m_links[m]].w.front().is_none() {
-                continue;
-            }
-            // all-ready fork condition (green logic in fig. 2d): every
-            // destination must be at the front of its mux W order AND
-            // have channel space.
-            let all_ready = route.slaves.iter().all(|&s| {
-                self.mux[s].w_front_is(m, route.txn) && pool[self.s_links[s]].w.can_push()
-            });
-            if !all_ready {
-                if route.is_mcast {
-                    self.stats.w_fork_stalls += 1;
-                }
-                continue;
-            }
-            pool[self.m_links[m]].w.pop();
-            self.stats.w_beats_in += 1;
-            self.stats.w_fork_extra += route.slaves.len() as u64 - 1;
-            let last = route.beats_left == 1;
-            for &s in &route.slaves {
-                pool[self.s_links[s]].w.push(WBeat {
-                    last,
-                    src: m,
-                    txn: route.txn,
-                });
-                self.stats.w_beats_out += 1;
-                if last {
-                    self.mux[s].pop_w_order(m, route.txn);
+            return;
+        };
+        let txn = route.txn;
+        let beats_left = route.beats_left;
+        let is_mcast = route.is_mcast;
+        if route.slaves.is_empty() {
+            // drain W of an unroutable transaction
+            if beats_left == 0 || pool[self.m_links[m]].w.pop().is_some() {
+                let r = self.demux[m].w_queue.front_mut().unwrap();
+                r.beats_left = r.beats_left.saturating_sub(1);
+                if r.beats_left == 0 {
+                    self.demux[m].w_queue.pop_front();
+                    let b = self.demux[m].complete_unroutable(txn);
+                    self.demux[m].b_out.push_back(b);
+                    self.note_b_out(m);
                 }
             }
-            let r = self.demux[m].w_queue.front_mut().unwrap();
-            r.beats_left -= 1;
+            return;
+        }
+        if pool[self.m_links[m]].w.front().is_none() {
+            return;
+        }
+        // inline copy of the route's slave set (memcpy up to
+        // FORK_INLINE entries — replaces the old per-cycle Vec clone,
+        // and only runs when a W beat is actually present)
+        let slaves: SlaveVec = self.demux[m].w_queue.front().unwrap().slaves.clone();
+        // all-ready fork condition (green logic in fig. 2d): every
+        // destination must be at the front of its mux W order AND
+        // have channel space.
+        let all_ready = slaves
+            .iter()
+            .all(|&s| self.mux[s].w_front_is(m, txn) && pool[self.s_links[s]].w.can_push());
+        if !all_ready {
+            if is_mcast {
+                self.stats.w_fork_stalls += 1;
+            }
+            return;
+        }
+        pool[self.m_links[m]].w.pop();
+        self.stats.w_beats_in += 1;
+        self.stats.w_fork_extra += slaves.len() as u64 - 1;
+        let last = beats_left == 1;
+        for &s in slaves.iter() {
+            pool[self.s_links[s]].w.push(WBeat { last, src: m, txn });
+            self.stats.w_beats_out += 1;
             if last {
-                self.demux[m].w_queue.pop_front();
+                self.mux[s].pop_w_order(m, txn);
             }
-            // registered all-ready fork: a >1-way fork cannot re-fire
-            // the cycle after a beat (stale ready) — see XbarCfg docs
-            if route.slaves.len() > 1 {
-                self.w_cooldown[m] = self.cfg.mcast_w_cooldown;
-            }
+        }
+        let r = self.demux[m].w_queue.front_mut().unwrap();
+        r.beats_left -= 1;
+        if last {
+            self.demux[m].w_queue.pop_front();
+        }
+        // registered all-ready fork: a >1-way fork cannot re-fire
+        // the cycle after a beat (stale ready) — see XbarCfg docs
+        if slaves.len() > 1 {
+            self.w_cooldown[m] = self.cfg.mcast_w_cooldown;
         }
     }
 
@@ -809,6 +1021,122 @@ impl Xbar {
             || !self.wr_owner.is_empty()
             || !self.rd_owner.is_empty()
             || !self.decerr_r.is_empty()
+    }
+
+    /// Event horizon (§Perf): the earliest cycle ≥ `now` at which
+    /// stepping this crossbar can do anything beyond the bulk timer
+    /// advancement applied by [`Xbar::skip`]. `None` means the xbar is
+    /// idle or waiting purely on port activity.
+    ///
+    /// Precondition: all pool links are idle (the SoC only consults the
+    /// horizon when the scheduler reports no active links), so every
+    /// channel's `can_push` holds and no beat is consumable.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if !self.maybe_busy {
+            return None;
+        }
+        let mut ev: Option<Cycle> = None;
+        let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
+        if !self.decerr_r.is_empty() {
+            fold(now);
+        }
+        let lat = self.cfg.mcast_commit_lat;
+        for m in 0..self.cfg.n_masters {
+            if !self.demux[m].b_out.is_empty() {
+                fold(now);
+            }
+            if self.w_cooldown[m] == 0 {
+                if let Some(r) = self.demux[m].w_queue.front() {
+                    if r.slaves.is_empty() && r.beats_left == 0 {
+                        // unroutable drain completes without any beat
+                        fold(now);
+                    }
+                    // otherwise W transport waits on master beats
+                }
+            }
+            // (a live cooldown alone needs no wake: it only decays, and
+            // the bulk advancement handles that)
+            let Some(e) = &self.pending[m] else {
+                continue;
+            };
+            if !e.pend.beat.is_mcast {
+                // unicast pending forwards (or completes) on the next
+                // step — never skip over it
+                fold(now);
+            } else if e.age < lat {
+                // pure commit-handshake aging; first actionable step is
+                // the one entered with age == lat
+                fold(now + (lat - e.age) as u64);
+            } else if e.pend.targets.is_empty() {
+                // aged unroutable mcast is accepted on the next step
+                fold(now);
+            } else if self.cfg.commit_protocol {
+                // grants are stable between steps: commit fires iff
+                // every target mux is granted to m (links idle ⇒ all
+                // AW channels pushable)
+                if e.pend.targets.iter().all(|t| self.mux[t.slave].grant == Some(m)) {
+                    fold(now);
+                }
+                // else: unblocked only by another master's commit (its
+                // own event) or port activity
+            } else {
+                // no-commit mode forwards any granted unforwarded leg
+                let can_fork = e
+                    .pend
+                    .targets
+                    .iter()
+                    .zip(e.forwarded.iter())
+                    .any(|(t, &f)| !f && self.mux[t.slave].grant == Some(m));
+                if can_fork {
+                    fold(now);
+                }
+            }
+        }
+        ev
+    }
+
+    /// Bulk-advance `k` pure-wait cycles (§Perf event horizon): apply
+    /// exactly the per-cycle timer decrements and wait-statistics that
+    /// `k` consecutive no-op steps would have applied. Must only be
+    /// called for spans `next_event` declared action-free, and only on
+    /// crossbars the scheduler would actually have stepped
+    /// (`maybe_busy` — a quiescent xbar's timers are frozen in the
+    /// per-cycle mode too).
+    pub fn skip(&mut self, k: u64) {
+        if k == 0 || !self.maybe_busy {
+            return;
+        }
+        for c in self.w_cooldown.iter_mut() {
+            *c = (*c as u64).saturating_sub(k) as u32;
+        }
+        let lat = self.cfg.mcast_commit_lat as u64;
+        let mut any_mcast = false;
+        for p in self.pending.iter_mut().flatten() {
+            if !p.pend.beat.is_mcast {
+                continue;
+            }
+            any_mcast = true;
+            let a0 = p.age as u64;
+            p.age = (a0 + k).min(u32::MAX as u64) as u32;
+            // per skipped cycle the commit phase counts one wait: while
+            // aging (age ≤ lat) in both modes, and additionally while
+            // blocked on grants in the commit-protocol mode
+            let waits = if self.cfg.commit_protocol {
+                k
+            } else {
+                k.min(lat.saturating_sub(a0))
+            };
+            self.stats.commit_waits += waits;
+        }
+        if any_mcast {
+            // the grant phase re-arbitrates to the same stable grants
+            // each skipped cycle, counting one wait per granted mux
+            for s in 0..self.cfg.n_slaves {
+                if self.mux[s].grant.is_some() {
+                    self.mux[s].grant_wait_cycles += k;
+                }
+            }
+        }
     }
 }
 
@@ -825,5 +1153,9 @@ impl Component<AxiLink> for Xbar {
 
     fn ports(&self) -> &[LinkId] {
         &self.ports
+    }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        Xbar::next_event(self, now)
     }
 }

@@ -355,6 +355,81 @@ impl Cluster {
             && self.mbox_w_expected.is_empty()
             && self.pending_copies.is_empty()
     }
+
+    /// Event horizon (§Perf): the earliest cycle ≥ `now` at which
+    /// stepping this cluster can do anything beyond pure timer
+    /// decrements, assuming no beat arrives on its links until then.
+    /// `None` = idle or waiting solely on the network / an interrupt.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.quiescent() {
+            return None;
+        }
+        let mut ev: Option<Cycle> = None;
+        let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
+        // defensive: these queues are drained inside every stepped
+        // cycle, but if anything lingers, act immediately
+        if !self.pending_copies.is_empty() || !self.dma.completed.is_empty() {
+            fold(now);
+        }
+        match self.state {
+            // the deadline step transitions (and fires the compute
+            // event); everything before it only bumps busy counters
+            ClState::Computing { until } | ClState::Delaying { until } => fold(until.max(now)),
+            ClState::WaitingB => {}
+            ClState::WaitingIrq => {
+                // satisfied waits retire on the next step; unsatisfied
+                // ones move only on a mailbox write (port activity)
+                let need = match self.prog.front() {
+                    Some(Cmd::WaitIrq { count }) => *count,
+                    _ => 1,
+                };
+                if self.irq_count >= need {
+                    fold(now);
+                }
+            }
+            ClState::Ready => {
+                match self.prog.front() {
+                    // a blocked WaitDma step is a pure no-op: the DMA
+                    // engine's own deadlines (folded below) or beats on
+                    // its port drive the next state change
+                    Some(Cmd::WaitDma) if self.pending_dma > 0 => {}
+                    Some(_) => fold(now),
+                    None => {
+                        if self.done_at.is_none() && self.done() {
+                            // the next step records the retirement cycle
+                            fold(now);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(e) = self.l1_port.next_event(now) {
+            fold(e);
+        }
+        if let Some(e) = self.dma.next_event(now) {
+            fold(e);
+        }
+        // mailbox partial bursts wait on W beats: port activity only
+        ev
+    }
+
+    /// Bulk-advance `k` pure-wait cycles (§Perf event horizon): apply
+    /// the per-cycle counter bumps that `k` consecutive no-op steps of
+    /// this cluster would have applied. Only call for spans that
+    /// `next_event` declared action-free.
+    pub fn skip(&mut self, k: u64) {
+        match self.state {
+            ClState::Computing { .. } => {
+                self.compute_busy_cycles += k;
+                self.progress += k;
+            }
+            ClState::Delaying { .. } => {
+                self.progress += k;
+            }
+            _ => {}
+        }
+        self.dma.skip(k);
+    }
 }
 
 #[cfg(test)]

@@ -78,6 +78,12 @@ pub struct SocConfig {
     /// Multicast W-fork cooldown cycles (see `XbarCfg::mcast_w_cooldown`;
     /// 1 = the RTL-calibrated registered fork, 0 = idealised ablation).
     pub mcast_w_cooldown: u32,
+    /// §Perf reference/ablation mode: disable the event-horizon cycle
+    /// skipping in `Soc::run` and the crossbar worklist/dense-table
+    /// fast paths (`XbarCfg::force_naive`). Simulated cycle counts and
+    /// statistics are bit-identical either way — proven by
+    /// `tests/perf_parity.rs`; only wall-clock throughput differs.
+    pub force_naive: bool,
 }
 
 impl Default for SocConfig {
@@ -107,6 +113,7 @@ impl Default for SocConfig {
             narrow_mcast: true,
             commit_protocol: true,
             mcast_w_cooldown: 1,
+            force_naive: false,
         }
     }
 }

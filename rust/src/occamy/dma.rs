@@ -31,7 +31,7 @@ pub struct DmaJob {
     pub tag: u64,
 }
 
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct DmaStats {
     pub jobs: u64,
     pub bytes: u64,
@@ -303,6 +303,121 @@ impl DmaEngine {
             self.completed.push(done.job);
         }
     }
+
+    /// What would the next step do, absent any port activity? Shared
+    /// classifier keeping [`DmaEngine::next_event`] and
+    /// [`DmaEngine::skip`] in exact agreement (§Perf event horizon).
+    fn classify(&self) -> DmaIdle {
+        let Some(a) = &self.active else {
+            return if self.queue.is_empty() {
+                DmaIdle::Idle
+            } else {
+                DmaIdle::ActNow
+            };
+        };
+        if a.setup_left > 0 {
+            return DmaIdle::Setup(a.setup_left);
+        }
+        if a.src_local && a.dst_local {
+            return DmaIdle::LocalCopy(a.local_left.max(1));
+        }
+        let beat = self.beat_bytes as u64;
+        // read side can make progress on its own
+        if a.src_local {
+            if a.rx_total < a.job.bytes && a.rx_bytes + beat <= self.buf_bytes {
+                return DmaIdle::ActNow;
+            }
+        } else if a.rd_next < a.rd_bursts.len() && a.rd_inflight < self.rd_out {
+            // idle links ⇒ AR channel pushable
+            return DmaIdle::ActNow;
+        }
+        // write side
+        if a.dst_local {
+            if a.rx_bytes > 0 {
+                return DmaIdle::ActNow;
+            }
+        } else {
+            let is_mcast = a.job.dst.count() > 1;
+            let out_cap = if is_mcast { self.mc_out } else { self.wr_out };
+            if a.wr_next < a.wr_bursts.len() && a.b_pending < out_cap {
+                return DmaIdle::ActNow;
+            }
+            // mirror the step's send condition exactly (beat.min covers
+            // sub-beat jobs, even though push() currently rejects them)
+            if !a.w_stream.is_empty() && a.rx_bytes >= beat.min(a.job.bytes) {
+                return DmaIdle::ActNow;
+            }
+        }
+        // purely waiting on R data / B responses from the network
+        DmaIdle::Wait {
+            w_starved: !a.dst_local && !a.w_stream.is_empty(),
+        }
+    }
+
+    /// Event horizon: earliest cycle ≥ `now` at which a step can do
+    /// more than decrement internal timers, assuming idle links.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        match self.classify() {
+            DmaIdle::Idle => None,
+            DmaIdle::ActNow => Some(now),
+            // `setup_left` pure-decrement steps precede the first
+            // actionable one
+            DmaIdle::Setup(s) => Some(now + s as u64),
+            // the copy completes in the step that decrements
+            // `local_left` to zero
+            DmaIdle::LocalCopy(l) => Some(now + l - 1),
+            DmaIdle::Wait { .. } => None,
+        }
+    }
+
+    /// Bulk-advance `k` pure-wait cycles: exactly the timer decrements
+    /// and wait statistics `k` consecutive no-op steps would apply.
+    pub fn skip(&mut self, k: u64) {
+        if k == 0 {
+            return;
+        }
+        let cls = self.classify();
+        let Some(a) = self.active.as_mut() else {
+            return;
+        };
+        match cls {
+            DmaIdle::Idle | DmaIdle::ActNow => {}
+            DmaIdle::Setup(_) => {
+                self.stats.busy_cycles += k;
+                a.setup_left = (a.setup_left as u64).saturating_sub(k) as u32;
+            }
+            DmaIdle::LocalCopy(_) => {
+                self.stats.busy_cycles += k;
+                a.local_left = a.local_left.saturating_sub(k);
+            }
+            DmaIdle::Wait { w_starved } => {
+                self.stats.busy_cycles += k;
+                if w_starved {
+                    // the write pipe sits on an issued burst with an
+                    // empty staging FIFO every one of those cycles
+                    self.stats.stall_rx_empty += k;
+                }
+            }
+        }
+    }
+}
+
+/// Idle-classification of a [`DmaEngine`] between steps (see
+/// [`DmaEngine::classify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DmaIdle {
+    /// No job active or queued.
+    Idle,
+    /// The very next step performs real work — never skip over it.
+    ActNow,
+    /// Job-setup countdown: this many pure-decrement steps remain.
+    Setup(u32),
+    /// Local L1→L1 copy: this many line-rate cycles remain.
+    LocalCopy(u64),
+    /// Waiting on R/B beats from the network; `w_starved` when an
+    /// issued write burst is stalled on the empty staging FIFO (the
+    /// per-cycle `stall_rx_empty` condition).
+    Wait { w_starved: bool },
 }
 
 #[cfg(test)]

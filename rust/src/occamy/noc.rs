@@ -66,6 +66,19 @@ impl Network {
         self.xbars.iter().any(|x| x.busy())
     }
 
+    /// Event horizon over all crossbars (§Perf): earliest internal
+    /// crossbar event, `None` when every xbar is idle or port-driven.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        self.xbars.iter().filter_map(|x| x.next_event(now)).min()
+    }
+
+    /// Bulk-advance `k` pure-wait cycles on every non-quiescent xbar.
+    pub fn skip(&mut self, k: u64) {
+        for x in &mut self.xbars {
+            x.skip(k);
+        }
+    }
+
     pub fn top(&self) -> &Xbar {
         self.xbars.last().unwrap()
     }
@@ -106,6 +119,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
             mcast_enabled: mcast,
             commit_protocol: cfg.commit_protocol,
             mcast_w_cooldown: cfg.mcast_w_cooldown,
+            force_naive: cfg.force_naive,
         },
         services: vec![service],
         n_root_masters,

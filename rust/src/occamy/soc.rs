@@ -45,6 +45,13 @@ pub struct Soc {
     pub cycles: Cycle,
     /// Link activity/dirty tracking (idle-skips, §Perf).
     sched: Scheduler,
+    /// Reused per-cycle compute-event buffer (§Perf: the step loop
+    /// allocates nothing).
+    event_buf: Vec<ComputeEvent>,
+    /// Total cycles fast-forwarded by the event horizon (observability:
+    /// the parity suite asserts the horizon actually engages on
+    /// latency-dominated workloads; always 0 under `force_naive`).
+    pub skipped_cycles: u64,
 }
 
 impl Soc {
@@ -72,6 +79,8 @@ impl Soc {
             next_txn: 1,
             cycles: 0,
             sched,
+            event_buf: Vec::new(),
+            skipped_cycles: 0,
         }
     }
 
@@ -87,7 +96,7 @@ impl Soc {
     /// One clock cycle; compute events are dispatched through `handler`.
     pub fn step(&mut self, handler: &mut dyn ComputeHandler) {
         let cy = self.cycles;
-        let mut events: Vec<ComputeEvent> = Vec::new();
+        debug_assert!(self.event_buf.is_empty());
         self.sched.begin_cycle();
 
         // clusters (sources/sinks first — consumers of staged beats)
@@ -116,7 +125,7 @@ impl Soc {
                 nsl,
                 &mut self.next_txn,
             ) {
-                events.push(ev);
+                self.event_buf.push(ev);
             }
             self.sched.mark_all_dirty(&ports);
         }
@@ -130,16 +139,27 @@ impl Soc {
             }
         }
 
-        // LLC and barrier peripherals
-        self.llc.step_on(cy, &mut self.pool, self.wide.service_s);
-        self.sched.mark_dirty(self.wide.service_s);
+        // LLC and barrier peripherals, gated like any other component
+        // (§Perf): stepping them with no in-flight state and no beats
+        // on their links is provably a no-op
+        let ls = self.wide.service_s;
+        if !self.llc.idle() || self.sched.is_active(ls) {
+            self.llc.step_on(cy, &mut self.pool, ls);
+            self.sched.mark_dirty(ls);
+        }
         {
             let bs = self.narrow.service_s;
             let bm = self.narrow.ext_m.unwrap();
-            let [sl, ml] = self.pool.get_disjoint_mut([bs, bm]);
-            self.barrier.step(cy, sl, ml, &mut self.next_txn);
-            self.sched.mark_dirty(bs);
-            self.sched.mark_dirty(bm);
+            if self.barrier.busy()
+                || self.barrier.pending_input()
+                || self.sched.is_active(bs)
+                || self.sched.is_active(bm)
+            {
+                let [sl, ml] = self.pool.get_disjoint_mut([bs, bm]);
+                self.barrier.step(cy, sl, ml, &mut self.next_txn);
+                self.sched.mark_dirty(bs);
+                self.sched.mark_dirty(bm);
+            }
         }
 
         // fabrics (idle crossbars skipped via the scheduler hints)
@@ -152,9 +172,67 @@ impl Soc {
         self.sched.end_cycle(&mut self.pool);
         self.cycles += 1;
 
-        for ev in events {
+        for ev in self.event_buf.drain(..) {
             handler.exec(ev.cluster, ev.op, ev.arg, &mut self.mem);
         }
+    }
+
+    /// Event-horizon fast-forward (§Perf): when no link carries beats,
+    /// every busy component is either waiting on its ports or counting
+    /// an internal timer. Jump the clock to the earliest internal event
+    /// and bulk-advance all timers — latency-dominated phases (barrier
+    /// staggering, LLC round-trips, commit handshakes) then cost O(1)
+    /// instead of O(latency). Returns the cycles skipped (0 = none).
+    ///
+    /// Simulated time is unaffected: cycle counts and statistics stay
+    /// bit-identical to per-cycle stepping (`tests/perf_parity.rs`).
+    pub fn try_skip(&mut self) -> u64 {
+        if self.cfg.force_naive || !self.sched.links_idle() {
+            return 0;
+        }
+        let now = self.cycles;
+        let mut ev: Option<Cycle> = None;
+        let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
+        for c in &self.clusters {
+            if let Some(e) = c.next_event(now) {
+                fold(e);
+            }
+        }
+        if let Some(e) = self.wide.next_event(now) {
+            fold(e);
+        }
+        if let Some(e) = self.narrow.next_event(now) {
+            fold(e);
+        }
+        if let Some(e) = self.llc.next_event(now) {
+            fold(e);
+        }
+        if let Some(e) = self.barrier.next_event(now) {
+            fold(e);
+        }
+        let Some(target) = ev else {
+            // no internal events at all: either done (caller checks) or
+            // a genuine stall — leave it to the per-cycle watchdog
+            return 0;
+        };
+        if target <= now {
+            return 0;
+        }
+        let k = target - now;
+        for c in &mut self.clusters {
+            // only components the per-cycle mode would have stepped may
+            // advance their timers (a quiescent cluster's are frozen)
+            if !c.quiescent() {
+                c.skip(k);
+            }
+        }
+        self.wide.skip(k);
+        self.narrow.skip(k);
+        // the LLC and barrier schedule in absolute cycles: nothing to
+        // advance
+        self.cycles = target;
+        self.skipped_cycles += k;
+        k
     }
 
     /// Observable progress (for the deadlock watchdog).
@@ -174,7 +252,9 @@ impl Soc {
             && self.llc.idle()
     }
 
-    /// Run to completion of all cluster programs.
+    /// Run to completion of all cluster programs, fast-forwarding over
+    /// pure timer waits (§Perf event horizon; disabled by
+    /// `SocConfig::force_naive`).
     pub fn run(
         &mut self,
         handler: &mut dyn ComputeHandler,
@@ -184,15 +264,27 @@ impl Soc {
         eng.now = self.cycles;
         // progress is sampled coarsely: summing every link counter each
         // cycle costs more than stepping an idle fabric (§Perf), and the
-        // watchdog thresholds are ≥ thousands of cycles anyway
+        // watchdog thresholds are ≥ thousands of cycles anyway. Skips
+        // force a resample so the bulk-advanced counters feed the
+        // watchdog immediately.
         let mut cached_progress = 0u64;
+        let mut last_sample = self.cycles;
         let res = eng.run(|cy| {
+            debug_assert_eq!(cy, self.cycles, "engine and SoC clocks desynced");
             self.step(handler);
-            if cy % 64 == 0 {
-                cached_progress = self.progress();
-            }
             if self.all_done() {
-                StepResult::Done
+                return StepResult::Done;
+            }
+            let skipped = self.try_skip();
+            if skipped > 0 || self.cycles >= last_sample + 64 {
+                cached_progress = self.progress();
+                last_sample = self.cycles;
+            }
+            if skipped > 0 {
+                StepResult::SkipTo {
+                    progress: cached_progress,
+                    next: self.cycles,
+                }
             } else {
                 StepResult::Running {
                     progress: cached_progress,

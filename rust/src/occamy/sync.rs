@@ -135,6 +135,23 @@ impl BarrierUnit {
     pub fn busy(&self) -> bool {
         !self.release_q.is_empty() || self.b_pending > 0 || self.w_pending.is_some()
     }
+
+    /// Anything queued on the slave side mid-burst? (Wake condition for
+    /// the SoC's peripheral gating — a partial burst itself only moves
+    /// on new W beats, so it does not block the event horizon.)
+    pub fn pending_input(&self) -> bool {
+        !self.mbox_w.is_empty()
+    }
+
+    /// Event horizon (§Perf): the unit acts on its own only when it has
+    /// release writes to issue; everything else is reactive.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if !self.release_q.is_empty() || self.w_pending.is_some() {
+            Some(now)
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]

@@ -12,6 +12,12 @@ pub enum StepResult {
     /// Work remains; `progress` is a monotone counter of observable
     /// events (beats moved, commands retired) used by the watchdog.
     Running { progress: u64 },
+    /// Work remains, and the stepped system proved that every cycle up
+    /// to (excluding) `next` is a pure timer wait which it has already
+    /// bulk-advanced — the clock jumps straight to `next` (§Perf event
+    /// horizon). A skip counts as a single watchdog tick: skipped
+    /// spans are productive by construction.
+    SkipTo { progress: u64, next: Cycle },
     /// Simulation finished.
     Done,
 }
@@ -78,35 +84,64 @@ impl Engine {
 
     /// Run `step(cycle)` until it returns `Done`. Returns the cycle count
     /// at completion.
+    ///
+    /// The watchdog counts *stepped* cycles without progress (for plain
+    /// `Running` sequences this equals the elapsed-cycle criterion used
+    /// before the event horizon existed); a `SkipTo` span counts as one
+    /// tick because its cycles were proven to be pure timer waits.
     pub fn run<F: FnMut(Cycle) -> StepResult>(
         &mut self,
         mut step: F,
     ) -> Result<Cycle, SimError> {
         let mut last_progress = u64::MAX;
-        let mut stalled_since = self.now;
+        let mut stall_ticks = 0u64;
         loop {
-            match step(self.now) {
+            let next = match step(self.now) {
                 StepResult::Done => return Ok(self.now),
                 StepResult::Running { progress } => {
-                    if progress != last_progress {
-                        last_progress = progress;
-                        stalled_since = self.now;
-                    } else if self.now - stalled_since >= self.watchdog.stall_cycles {
-                        return Err(SimError::Deadlock {
-                            cycle: self.now,
-                            stalled: self.now - stalled_since,
-                            progress,
-                        });
-                    }
+                    self.watch(progress, &mut last_progress, &mut stall_ticks)?;
+                    self.now + 1
                 }
-            }
-            self.now += 1;
+                StepResult::SkipTo { progress, next } => {
+                    assert!(
+                        next > self.now,
+                        "SkipTo must advance the clock ({next} <= {})",
+                        self.now
+                    );
+                    self.watch(progress, &mut last_progress, &mut stall_ticks)?;
+                    next
+                }
+            };
+            self.now = next;
             if self.now >= self.watchdog.max_cycles {
                 return Err(SimError::CycleLimit {
                     max: self.watchdog.max_cycles,
                 });
             }
         }
+    }
+
+    /// One watchdog tick: reset on progress, trip on sustained stall.
+    fn watch(
+        &self,
+        progress: u64,
+        last_progress: &mut u64,
+        stall_ticks: &mut u64,
+    ) -> Result<(), SimError> {
+        if progress != *last_progress {
+            *last_progress = progress;
+            *stall_ticks = 0;
+            return Ok(());
+        }
+        *stall_ticks += 1;
+        if *stall_ticks >= self.watchdog.stall_cycles {
+            return Err(SimError::Deadlock {
+                cycle: self.now,
+                stalled: *stall_ticks,
+                progress,
+            });
+        }
+        Ok(())
     }
 }
 
@@ -160,6 +195,57 @@ mod tests {
             })
             .unwrap_err();
         assert!(matches!(err, SimError::CycleLimit { max: 128 }));
+    }
+
+    #[test]
+    fn skip_to_jumps_the_clock() {
+        let mut eng = Engine::new(Watchdog {
+            stall_cycles: 10,
+            max_cycles: 100_000,
+        });
+        let mut stepped = Vec::new();
+        let end = eng
+            .run(|cy| {
+                stepped.push(cy);
+                if cy >= 5_000 {
+                    StepResult::Done
+                } else if cy % 2 == 0 {
+                    // pretend cycles (cy, cy+1000) are pure timer waits
+                    StepResult::SkipTo {
+                        progress: cy,
+                        next: cy + 1_000,
+                    }
+                } else {
+                    StepResult::Running { progress: cy }
+                }
+            })
+            .unwrap();
+        assert_eq!(end, 5_000);
+        // only the stepped cycles paid wall-clock
+        assert_eq!(stepped, vec![0, 1_000, 2_000, 3_000, 4_000, 5_000]);
+    }
+
+    #[test]
+    fn skips_without_progress_do_not_trip_watchdog_early() {
+        let mut eng = Engine::new(Watchdog {
+            stall_cycles: 8,
+            max_cycles: 1_000_000,
+        });
+        // progress never changes; each step skips 100 cycles. The
+        // watchdog counts steps (8), not elapsed cycles (800).
+        let err = eng
+            .run(|cy| StepResult::SkipTo {
+                progress: 7,
+                next: cy + 100,
+            })
+            .unwrap_err();
+        match err {
+            SimError::Deadlock { stalled, cycle, .. } => {
+                assert_eq!(stalled, 8);
+                assert_eq!(cycle, 800);
+            }
+            other => panic!("wrong error: {other}"),
+        }
     }
 
     #[test]

@@ -12,6 +12,18 @@
 //!   carried beats (`active`) pay a clock edge — everything else is
 //!   provably unchanged.
 //!
+//! Both sets are tracked as **index lists** (not just flag vectors), so
+//! a fully-idle cycle costs O(touched links), not O(all links): on the
+//! 32-cluster SoC an idle edge touches ~0 of ~350 links (§Perf,
+//! `benches/sim_perf.rs` "idle step" scenario).
+//!
+//! The trait also carries the **event horizon** hook
+//! ([`Component::next_event`]): the earliest cycle at which stepping
+//! the component could do anything beyond decrementing internal timers.
+//! When every link is idle, a driver (e.g. `occamy::Soc::run`) can
+//! fast-forward the clock to the horizon instead of stepping through
+//! latency waits cycle by cycle.
+//!
 //! [`quiescent`]: Component::quiescent
 
 use super::link::{Link, LinkId, Pool};
@@ -36,12 +48,37 @@ pub trait Component<L: Link> {
     /// component; stepping it marks all of them dirty.
     fn ports(&self) -> &[LinkId];
 
+    /// Event horizon: the earliest cycle ≥ `now` at which stepping this
+    /// component could do anything beyond pure internal timer
+    /// advancement, assuming **no port activity** until then. `None`
+    /// means the component is idle or waiting solely on its ports.
+    ///
+    /// The default is maximally conservative — a busy component claims
+    /// an event every cycle, which simply disables fast-forwarding
+    /// around it. Implementations that override this must also provide
+    /// a matching bulk-advance (see `axi::Xbar::skip`) so skipped
+    /// cycles stay bit-identical to stepped ones.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.quiescent() {
+            None
+        } else {
+            Some(now)
+        }
+    }
+
     /// Hinted step: skip the step entirely when idle and unprompted.
     fn step_hinted(&mut self, cy: Cycle, pool: &mut Pool<L>, port_activity: bool) {
         if port_activity || !self.quiescent() {
             self.step(cy, pool);
         }
     }
+}
+
+/// Fold one event deadline into a running horizon minimum (shared by
+/// every [`Component::next_event`] implementation).
+#[inline]
+pub fn fold_min(ev: &mut Option<Cycle>, e: Cycle) {
+    *ev = Some(ev.map_or(e, |cur| cur.min(e)));
 }
 
 /// Per-link activity tracker driving the idle skips.
@@ -51,6 +88,12 @@ pub struct Scheduler {
     active: Vec<bool>,
     /// Link possibly pushed/popped this cycle.
     dirty: Vec<bool>,
+    /// Indices with `dirty` set (unique — guarded by the flag).
+    touched: Vec<u32>,
+    /// Indices with `active` set (unique — rebuilt at each edge).
+    active_idx: Vec<u32>,
+    /// Scratch for rebuilding `active_idx` without reallocating.
+    scratch: Vec<u32>,
 }
 
 impl Scheduler {
@@ -58,20 +101,28 @@ impl Scheduler {
     pub fn new(n_links: usize) -> Scheduler {
         Scheduler {
             active: vec![true; n_links],
-            dirty: vec![true; n_links],
+            dirty: vec![false; n_links],
+            touched: Vec::new(),
+            active_idx: (0..n_links as u32).collect(),
+            scratch: Vec::new(),
         }
     }
 
     /// Track links added to the pool after construction (new links
     /// start active).
     pub fn sync(&mut self, n_links: usize) {
+        let old = self.active.len();
         self.active.resize(n_links, true);
-        self.dirty.resize(n_links, true);
+        self.dirty.resize(n_links, false);
+        self.active_idx.extend(old as u32..n_links as u32);
     }
 
-    /// Start a cycle: nothing touched yet.
+    /// Start a cycle: nothing touched yet (clears the previous cycle's
+    /// dirty set in O(touched)).
     pub fn begin_cycle(&mut self) {
-        self.dirty.fill(false);
+        for i in self.touched.drain(..) {
+            self.dirty[i as usize] = false;
+        }
     }
 
     #[inline]
@@ -84,14 +135,25 @@ impl Scheduler {
         ids.iter().any(|&id| self.active[id.index()])
     }
 
+    /// No link carried visible beats at the last clock edge — the
+    /// entry condition for event-horizon fast-forwarding.
+    #[inline]
+    pub fn links_idle(&self) -> bool {
+        self.active_idx.is_empty()
+    }
+
     #[inline]
     pub fn mark_dirty(&mut self, id: LinkId) {
-        self.dirty[id.index()] = true;
+        let i = id.index();
+        if !self.dirty[i] {
+            self.dirty[i] = true;
+            self.touched.push(i as u32);
+        }
     }
 
     pub fn mark_all_dirty(&mut self, ids: &[LinkId]) {
         for &id in ids {
-            self.dirty[id.index()] = true;
+            self.mark_dirty(id);
         }
     }
 
@@ -113,23 +175,44 @@ impl Scheduler {
         }
         c.step(cy, pool);
         for &id in c.ports() {
-            self.dirty[id.index()] = true;
+            self.mark_dirty(id);
         }
         true
     }
 
     /// End of cycle: clock edge on touched links only, refresh the
-    /// activity snapshot while each link is cache-hot.
+    /// activity snapshot while each link is cache-hot. O(touched +
+    /// previously-active), not O(all links).
     pub fn end_cycle<L: Link>(&mut self, pool: &mut Pool<L>) {
         debug_assert_eq!(self.active.len(), pool.len(), "scheduler out of sync");
-        for i in 0..pool.len() {
-            if self.dirty[i] || self.active[i] {
-                let id = pool.id_at(i);
-                let l = &mut pool[id];
-                l.tick();
-                self.active[i] = l.any_visible();
+        self.scratch.clear();
+        // dirtied links that were not active (the active pass below
+        // handles the overlap — each link ticks exactly once)
+        for &i in &self.touched {
+            let iu = i as usize;
+            if self.active[iu] {
+                continue;
+            }
+            let id = pool.id_at(iu);
+            let l = &mut pool[id];
+            l.tick();
+            if l.any_visible() {
+                self.active[iu] = true;
+                self.scratch.push(i);
             }
         }
+        for &i in &self.active_idx {
+            let iu = i as usize;
+            let id = pool.id_at(iu);
+            let l = &mut pool[id];
+            l.tick();
+            let vis = l.any_visible();
+            self.active[iu] = vis;
+            if vis {
+                self.scratch.push(i);
+            }
+        }
+        std::mem::swap(&mut self.active_idx, &mut self.scratch);
     }
 }
 
@@ -210,12 +293,14 @@ mod tests {
         sched.begin_cycle();
         assert!(!sched.step_component(3, &mut c, &mut pool));
         sched.end_cycle(&mut pool);
+        assert!(sched.links_idle());
         // inject a beat; producer marks the link dirty
         pool[a].staged = 1;
         sched.begin_cycle();
         sched.mark_dirty(a);
         sched.step_component(4, &mut c, &mut pool); // not yet visible
         sched.end_cycle(&mut pool);
+        assert!(!sched.links_idle());
         // beat visible now → component wakes and consumes it
         sched.begin_cycle();
         assert!(sched.step_component(5, &mut c, &mut pool));
@@ -291,5 +376,34 @@ mod tests {
         sched.end_cycle(&mut pool);
         assert_eq!(pool[a].ticks, base + 1);
         assert_eq!(pool[b].ticks, base);
+    }
+
+    #[test]
+    fn dirty_and_active_link_ticks_exactly_once() {
+        let mut pool: Pool<FakeLink> = Pool::new();
+        let a = pool.alloc(FakeLink::default());
+        let mut sched = Scheduler::new(pool.len());
+        // make `a` active (visible beat survives the edge)
+        pool[a].staged = 2;
+        sched.begin_cycle();
+        sched.mark_dirty(a);
+        sched.end_cycle(&mut pool);
+        assert!(sched.is_active(a));
+        let base = pool[a].ticks;
+        // active AND dirtied in the same cycle: one edge only
+        sched.begin_cycle();
+        sched.mark_dirty(a);
+        sched.mark_dirty(a); // duplicate marks are idempotent
+        sched.end_cycle(&mut pool);
+        assert_eq!(pool[a].ticks, base + 1);
+    }
+
+    #[test]
+    fn default_next_event_is_conservative() {
+        let ports = Vec::new();
+        let mut c = Copier { ports, held: 1 };
+        assert_eq!(c.next_event(10), Some(10), "busy → event now");
+        c.held = 0;
+        assert_eq!(c.next_event(10), None, "idle → no internal events");
     }
 }

@@ -1,0 +1,321 @@
+//! Dense open-addressed transaction-owner table (§Perf).
+//!
+//! The crossbar routes B and R beats back to their issuing master by
+//! transaction tag. The seed used `HashMap<Txn, usize>`, paying SipHash
+//! plus cache-hostile buckets on the hottest per-beat path.
+//! [`TxnTable`] replaces it with a power-of-two open-addressed table
+//! (Fibonacci multiply-shift hash, linear probing, backward-shift
+//! deletion — no tombstones). Keys are the simulator's monotonically
+//! assigned, globally unique txn tags, which are always non-zero, so 0
+//! doubles as the empty-slot marker.
+//!
+//! `TxnTable::new(force_std)` can fall back to the std `HashMap` at
+//! runtime — the `force_naive` ablation mode used by the perf-parity
+//! suite and the `sim_perf` layer benchmarks.
+
+use std::collections::HashMap;
+
+/// Fibonacci multiplier (2^64 / φ), the standard multiply-shift mixer.
+const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Open-addressed map from non-zero `u64` txn tags to `usize` values.
+#[derive(Debug, Clone)]
+pub struct DenseTxnMap {
+    /// `(key, value)`; `key == 0` marks an empty slot.
+    slots: Vec<(u64, usize)>,
+    /// Occupied slot count.
+    len: usize,
+    /// `slots.len() - 1` (capacity is a power of two).
+    mask: usize,
+    /// Shift for the multiply-shift hash (`64 - log2(capacity)`).
+    shift: u32,
+}
+
+impl DenseTxnMap {
+    pub fn new() -> DenseTxnMap {
+        DenseTxnMap::with_log2_capacity(4)
+    }
+
+    fn with_log2_capacity(log2: u32) -> DenseTxnMap {
+        let cap = 1usize << log2;
+        DenseTxnMap {
+            slots: vec![(0, 0); cap],
+            len: 0,
+            mask: cap - 1,
+            shift: 64 - log2,
+        }
+    }
+
+    #[inline]
+    fn home(&self, key: u64) -> usize {
+        (key.wrapping_mul(FIB) >> self.shift) as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.fill((0, 0));
+        self.len = 0;
+    }
+
+    /// Probe distance of the key at `slot` (how far from its home).
+    #[inline]
+    fn displacement(&self, slot: usize, key: u64) -> usize {
+        slot.wrapping_sub(self.home(key)) & self.mask
+    }
+
+    fn grow(&mut self) {
+        let log2 = 64 - self.shift + 1;
+        let mut bigger = DenseTxnMap::with_log2_capacity(log2);
+        for &(k, v) in &self.slots {
+            if k != 0 {
+                bigger.insert(k, v);
+            }
+        }
+        *self = bigger;
+    }
+
+    /// Insert or overwrite. Panics on key 0 (reserved marker).
+    pub fn insert(&mut self, key: u64, value: usize) {
+        assert_ne!(key, 0, "txn tag 0 is reserved");
+        // grow at 50% load so probe chains stay short
+        if (self.len + 1) * 2 > self.slots.len() {
+            self.grow();
+        }
+        let mut i = self.home(key);
+        loop {
+            let (k, _) = self.slots[i];
+            if k == 0 {
+                self.slots[i] = (key, value);
+                self.len += 1;
+                return;
+            }
+            if k == key {
+                self.slots[i].1 = value;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Index of `key`'s slot, if present. Linear probing with
+    /// backward-shift deletion keeps every probe run contiguous, so
+    /// hitting an empty slot proves absence; load ≤ 50% keeps runs
+    /// short and guarantees an empty slot exists.
+    #[inline]
+    fn find(&self, key: u64) -> Option<usize> {
+        let mut i = self.home(key);
+        loop {
+            let (k, _) = self.slots[i];
+            if k == key {
+                return Some(i);
+            }
+            if k == 0 {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    pub fn get(&self, key: u64) -> Option<usize> {
+        self.find(key).map(|i| self.slots[i].1)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.find(key).is_some()
+    }
+
+    /// Remove with backward-shift deletion (no tombstones): residents
+    /// after the hole whose home lies at or before the hole slide back,
+    /// keeping every probe run contiguous (the `find` invariant).
+    pub fn remove(&mut self, key: u64) -> Option<usize> {
+        let mut hole = self.find(key)?;
+        let value = self.slots[hole].1;
+        self.len -= 1;
+        let mut j = (hole + 1) & self.mask;
+        loop {
+            let (k, v) = self.slots[j];
+            if k == 0 {
+                self.slots[hole] = (0, 0);
+                return Some(value);
+            }
+            // resident at j may fill the hole only if its home is at or
+            // cyclically before the hole; otherwise it stays put
+            if self.displacement(j, k) >= (j.wrapping_sub(hole) & self.mask) {
+                self.slots[hole] = (k, v);
+                hole = j;
+            }
+            j = (j + 1) & self.mask;
+        }
+    }
+}
+
+impl Default for DenseTxnMap {
+    fn default() -> DenseTxnMap {
+        DenseTxnMap::new()
+    }
+}
+
+/// Owner table used by the crossbar: dense by default, std `HashMap`
+/// in the `force_naive` reference/ablation mode.
+#[derive(Debug, Clone)]
+pub enum TxnTable {
+    Dense(DenseTxnMap),
+    Std(HashMap<u64, usize>),
+}
+
+impl TxnTable {
+    pub fn new(force_std: bool) -> TxnTable {
+        if force_std {
+            TxnTable::Std(HashMap::new())
+        } else {
+            TxnTable::Dense(DenseTxnMap::new())
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, key: u64, value: usize) {
+        match self {
+            TxnTable::Dense(m) => m.insert(key, value),
+            TxnTable::Std(m) => {
+                m.insert(key, value);
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<usize> {
+        match self {
+            TxnTable::Dense(m) => m.get(key),
+            TxnTable::Std(m) => m.get(&key).copied(),
+        }
+    }
+
+    #[inline]
+    pub fn remove(&mut self, key: u64) -> Option<usize> {
+        match self {
+            TxnTable::Dense(m) => m.remove(key),
+            TxnTable::Std(m) => m.remove(&key),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TxnTable::Dense(m) => m.len(),
+            TxnTable::Std(m) => m.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut m = DenseTxnMap::new();
+        assert!(m.is_empty());
+        m.insert(1, 10);
+        m.insert(2, 20);
+        assert_eq!(m.get(1), Some(10));
+        assert_eq!(m.get(2), Some(20));
+        assert_eq!(m.get(3), None);
+        m.insert(1, 11); // overwrite
+        assert_eq!(m.get(1), Some(11));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.remove(1), Some(11));
+        assert_eq!(m.remove(1), None);
+        assert_eq!(m.get(2), Some(20));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m = DenseTxnMap::new();
+        for k in 1..=1000u64 {
+            m.insert(k, k as usize * 3);
+        }
+        assert_eq!(m.len(), 1000);
+        for k in 1..=1000u64 {
+            assert_eq!(m.get(k), Some(k as usize * 3), "key {k}");
+        }
+    }
+
+    #[test]
+    fn monotone_txn_lifecycle() {
+        // the crossbar's actual pattern: monotone inserts, bounded
+        // in-flight window, removal in roughly-insertion order
+        let mut m = DenseTxnMap::new();
+        let mut next = 1u64;
+        for round in 0..2000u64 {
+            m.insert(next, (round % 32) as usize);
+            next += 1;
+            if next > 16 {
+                assert!(m.remove(next - 16).is_some());
+            }
+        }
+        assert_eq!(m.len(), 15);
+    }
+
+    #[test]
+    fn randomized_against_hashmap() {
+        let mut rng = Pcg::new(0xDE5E);
+        let mut dense = DenseTxnMap::new();
+        let mut gold: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..20_000 {
+            // small key space forces heavy collision/removal churn
+            let key = 1 + rng.below(256);
+            match rng.below(10) {
+                0..=5 => {
+                    let v = rng.below(1000) as usize;
+                    dense.insert(key, v);
+                    gold.insert(key, v);
+                }
+                6..=8 => {
+                    assert_eq!(dense.remove(key), gold.remove(&key), "remove {key}");
+                }
+                _ => {
+                    assert_eq!(dense.get(key), gold.get(&key).copied(), "get {key}");
+                }
+            }
+            assert_eq!(dense.len(), gold.len());
+        }
+        for (&k, &v) in &gold {
+            assert_eq!(dense.get(k), Some(v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "reserved")]
+    fn zero_key_rejected() {
+        DenseTxnMap::new().insert(0, 1);
+    }
+
+    #[test]
+    fn txn_table_modes_agree() {
+        let mut a = TxnTable::new(false);
+        let mut b = TxnTable::new(true);
+        for k in 1..=100u64 {
+            a.insert(k, k as usize);
+            b.insert(k, k as usize);
+        }
+        for k in (1..=100u64).step_by(3) {
+            assert_eq!(a.remove(k), b.remove(k));
+        }
+        for k in 1..=100u64 {
+            assert_eq!(a.get(k), b.get(k), "key {k}");
+        }
+        assert_eq!(a.len(), b.len());
+    }
+}

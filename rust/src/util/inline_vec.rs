@@ -1,0 +1,287 @@
+//! Fixed-capacity inline vector with heap spill (§Perf).
+//!
+//! The crossbar hot paths used to allocate a handful of small `Vec`s
+//! per accepted AW (`Vec<TargetAw>`, `Vec<usize>`, `vec![false; …]`)
+//! and clone one of them *per master per cycle* in `phase_w`.
+//! [`InlineVec`] keeps up to `N` elements inline (no allocation, and
+//! `clone` is a memcpy for `Copy` payloads); pushing past `N` spills to
+//! a heap `Vec` so correctness never depends on the capacity guess —
+//! exotic topologies with >`N`-way forks just lose the optimisation.
+//! Replaces smallvec/arrayvec, which are unavailable offline (DESIGN.md
+//! §2).
+
+use std::fmt;
+use std::mem::MaybeUninit;
+use std::ops::{Deref, DerefMut};
+
+pub struct InlineVec<T, const N: usize> {
+    /// Elements `0..len` are initialised iff `spill` is `None`.
+    buf: [MaybeUninit<T>; N],
+    len: usize,
+    /// Once set, *all* elements live here and `len` is 0.
+    spill: Option<Vec<T>>,
+}
+
+impl<T, const N: usize> InlineVec<T, N> {
+    pub fn new() -> InlineVec<T, N> {
+        InlineVec {
+            // An array of `MaybeUninit` is valid uninitialised.
+            buf: unsafe { MaybeUninit::<[MaybeUninit<T>; N]>::uninit().assume_init() },
+            len: 0,
+            spill: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.spill {
+            Some(v) => v.len(),
+            None => self.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Did this vector outgrow its inline capacity?
+    pub fn spilled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    pub fn push(&mut self, value: T) {
+        if let Some(v) = &mut self.spill {
+            v.push(value);
+            return;
+        }
+        if self.len == N {
+            let mut v = Vec::with_capacity(N + 1);
+            // move the inline elements out; `len = 0` first so a panic
+            // in Vec::push cannot double-drop them
+            let len = std::mem::replace(&mut self.len, 0);
+            for slot in &self.buf[..len] {
+                v.push(unsafe { slot.as_ptr().read() });
+            }
+            v.push(value);
+            self.spill = Some(v);
+            return;
+        }
+        self.buf[self.len] = MaybeUninit::new(value);
+        self.len += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        if let Some(v) = &mut self.spill {
+            return v.pop();
+        }
+        if self.len == 0 {
+            return None;
+        }
+        self.len -= 1;
+        Some(unsafe { self.buf[self.len].as_ptr().read() })
+    }
+
+    pub fn clear(&mut self) {
+        if let Some(v) = &mut self.spill {
+            v.clear();
+            return;
+        }
+        let len = std::mem::replace(&mut self.len, 0);
+        unsafe {
+            std::ptr::drop_in_place(std::ptr::slice_from_raw_parts_mut(
+                self.buf.as_mut_ptr() as *mut T,
+                len,
+            ));
+        }
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match &self.spill {
+            Some(v) => v,
+            None => unsafe {
+                std::slice::from_raw_parts(self.buf.as_ptr() as *const T, self.len)
+            },
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        match &mut self.spill {
+            Some(v) => v,
+            None => unsafe {
+                std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut T, self.len)
+            },
+        }
+    }
+
+    /// `n` copies of `value` (the `vec![x; n]` replacement).
+    pub fn from_elem(value: T, n: usize) -> InlineVec<T, N>
+    where
+        T: Clone,
+    {
+        let mut v = InlineVec::new();
+        for _ in 0..n {
+            v.push(value.clone());
+        }
+        v
+    }
+}
+
+impl<T, const N: usize> Drop for InlineVec<T, N> {
+    fn drop(&mut self) {
+        if self.spill.is_none() {
+            self.clear();
+        }
+    }
+}
+
+impl<T, const N: usize> Default for InlineVec<T, N> {
+    fn default() -> InlineVec<T, N> {
+        InlineVec::new()
+    }
+}
+
+impl<T, const N: usize> Deref for InlineVec<T, N> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T, const N: usize> DerefMut for InlineVec<T, N> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Clone, const N: usize> Clone for InlineVec<T, N> {
+    fn clone(&self) -> InlineVec<T, N> {
+        let mut v = InlineVec::new();
+        for x in self.as_slice() {
+            v.push(x.clone());
+        }
+        v
+    }
+}
+
+impl<T: fmt::Debug, const N: usize> fmt::Debug for InlineVec<T, N> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: PartialEq, const N: usize> PartialEq for InlineVec<T, N> {
+    fn eq(&self, other: &InlineVec<T, N>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Eq, const N: usize> Eq for InlineVec<T, N> {}
+
+impl<T: PartialEq, const N: usize> PartialEq<[T]> for InlineVec<T, N> {
+    fn eq(&self, other: &[T]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<T, const N: usize> Extend<T> for InlineVec<T, N> {
+    fn extend<I: IntoIterator<Item = T>>(&mut self, iter: I) {
+        for x in iter {
+            self.push(x);
+        }
+    }
+}
+
+impl<T, const N: usize> FromIterator<T> for InlineVec<T, N> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> InlineVec<T, N> {
+        let mut v = InlineVec::new();
+        v.extend(iter);
+        v
+    }
+}
+
+impl<'a, T, const N: usize> IntoIterator for &'a InlineVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::rc::Rc;
+
+    #[test]
+    fn push_pop_inline() {
+        let mut v: InlineVec<u32, 4> = InlineVec::new();
+        assert!(v.is_empty());
+        v.push(1);
+        v.push(2);
+        assert_eq!(v.as_slice(), &[1, 2]);
+        assert_eq!(v.pop(), Some(2));
+        assert_eq!(v.pop(), Some(1));
+        assert_eq!(v.pop(), None);
+        assert!(!v.spilled());
+    }
+
+    #[test]
+    fn spills_past_capacity_and_preserves_order() {
+        let mut v: InlineVec<u32, 2> = InlineVec::new();
+        for i in 0..10 {
+            v.push(i);
+        }
+        assert!(v.spilled());
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.as_slice(), &(0..10).collect::<Vec<_>>()[..]);
+        assert_eq!(v.pop(), Some(9));
+    }
+
+    #[test]
+    fn clone_and_eq() {
+        let v: InlineVec<u32, 4> = [3u32, 1, 2].into_iter().collect();
+        let mut w = v.clone();
+        assert_eq!(v, w);
+        w.sort_unstable(); // slice methods via DerefMut
+        assert_eq!(w.as_slice(), &[1, 2, 3]);
+        assert_ne!(v, w);
+        assert!(w == *[1u32, 2, 3].as_slice());
+    }
+
+    #[test]
+    fn from_elem_matches_vec_macro() {
+        let v: InlineVec<bool, 4> = InlineVec::from_elem(false, 7);
+        assert_eq!(v.len(), 7);
+        assert!(v.spilled());
+        assert!(v.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn drops_inline_elements_exactly_once() {
+        let rc = Rc::new(());
+        {
+            let mut v: InlineVec<Rc<()>, 4> = InlineVec::new();
+            v.push(rc.clone());
+            v.push(rc.clone());
+            assert_eq!(Rc::strong_count(&rc), 3);
+            v.clear();
+            assert_eq!(Rc::strong_count(&rc), 1);
+            v.push(rc.clone());
+        }
+        assert_eq!(Rc::strong_count(&rc), 1);
+    }
+
+    #[test]
+    fn drops_through_spill_exactly_once() {
+        let rc = Rc::new(());
+        {
+            let mut v: InlineVec<Rc<()>, 2> = InlineVec::new();
+            for _ in 0..5 {
+                v.push(rc.clone());
+            }
+            assert_eq!(Rc::strong_count(&rc), 6);
+        }
+        assert_eq!(Rc::strong_count(&rc), 1);
+    }
+}

@@ -6,6 +6,8 @@
 //! DESIGN.md §2 for the substitution table.
 
 pub mod cli;
+pub mod dense;
+pub mod inline_vec;
 pub mod json;
 pub mod prng;
 pub mod proptest_mini;

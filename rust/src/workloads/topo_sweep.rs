@@ -146,6 +146,15 @@ impl ScriptMaster {
     }
 }
 
+/// Wall-clock split of one scripted run (§Perf `topo_shapes` timing
+/// mode): fabric construction vs the simulation loop proper, so
+/// throughput numbers are not polluted by `build_shape` allocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TopoTiming {
+    pub build_s: f64,
+    pub run_s: f64,
+}
+
 /// Run a write script from endpoint 0 through a shape-built fabric,
 /// with golden slaves on every endpoint. Fabric multicast support
 /// follows `mcast` (unicast scripts run on a baseline fabric, exactly
@@ -156,6 +165,17 @@ pub fn run_topo_script(
     script: Vec<(AddrSet, u32)>,
     mcast: bool,
 ) -> Result<TopoRunResult, SimError> {
+    run_topo_script_timed(shape, n_endpoints, script, mcast).map(|(r, _)| r)
+}
+
+/// [`run_topo_script`] with the construction/run wall-clock split.
+pub fn run_topo_script_timed(
+    shape: &TopoShape,
+    n_endpoints: usize,
+    script: Vec<(AddrSet, u32)>,
+    mcast: bool,
+) -> Result<(TopoRunResult, TopoTiming), SimError> {
+    let t_build = std::time::Instant::now();
     let mut pool = LinkPool::new();
     let params = FabricParams {
         mcast_enabled: mcast,
@@ -170,6 +190,8 @@ pub fn run_topo_script(
     let mut master = ScriptMaster::new(script);
     let mut slaves: Vec<SimSlave> = (0..n_endpoints).map(SimSlave::new).collect();
     let mut sched = Scheduler::new(pool.len());
+    let build_s = t_build.elapsed().as_secs_f64();
+    let t_run = std::time::Instant::now();
 
     let mut eng = Engine::new(Watchdog {
         stall_cycles: 100_000,
@@ -204,6 +226,8 @@ pub fn run_topo_script(
         }
     })?;
 
+    let run_s = t_run.elapsed().as_secs_f64();
+
     for s in &slaves {
         s.assert_clean();
     }
@@ -211,15 +235,18 @@ pub fn run_topo_script(
         .iter()
         .map(|s| s.writes.iter().map(|w| (w.base, w.beats)).collect())
         .collect();
-    Ok(TopoRunResult {
-        shape: shape.label(),
-        n_endpoints,
-        mcast,
-        cycles,
-        n_xbars: topo.xbars.len(),
-        stats: topo.stats_sum(),
-        deliveries,
-    })
+    Ok((
+        TopoRunResult {
+            shape: shape.label(),
+            n_endpoints,
+            mcast,
+            cycles,
+            n_xbars: topo.xbars.len(),
+            stats: topo.stats_sum(),
+            deliveries,
+        },
+        TopoTiming { build_s, run_s },
+    ))
 }
 
 /// One broadcast point (see [`broadcast_script`]).

@@ -1,0 +1,407 @@
+//! §Perf parity suite: the optimised simulation core (worklist
+//! bitmasks + dense txn table in the crossbar, event-horizon cycle
+//! skipping in `Soc::run`) must be **bit-identical** in simulated time
+//! and statistics to the `force_naive` reference mode — only wall-clock
+//! throughput may differ. Property-tested across random crossbar
+//! scripts and random SoC workloads from `util::proptest_mini`.
+
+mod common;
+
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::types::Resp;
+use axi_mcast::axi::xbar::{Xbar, XbarCfg, XbarStats};
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use axi_mcast::util::proptest_mini::{check, Config, Gen};
+use common::{cluster_addr, cluster_map, clusters_set, Fixture, Xfer};
+
+// ---------------------------------------------------------------- xbar
+
+/// Random mixed read/write/multicast scripts (including unroutable
+/// addresses, exercising the DECERR paths).
+fn random_scripts(g: &mut Gen, n_masters: usize, n_slaves: usize) -> Vec<Vec<Xfer>> {
+    (0..n_masters)
+        .map(|m| {
+            let len = g.len(10);
+            (0..len)
+                .map(|i| {
+                    let beats = 1 + g.u64_below(8) as u32;
+                    let id = (g.u64_below(3)) as u16;
+                    match g.u64_below(10) {
+                        0..=3 => {
+                            // unicast write
+                            let s = g.u64_below(n_slaves as u64) as usize;
+                            Xfer::write(AddrSet::unicast(cluster_addr(s, 0x40 * i as u64)), beats, id)
+                        }
+                        4..=6 => {
+                            // multicast write over an aligned power-of-two set
+                            let max_log = (n_slaves as u64).trailing_zeros().max(1) as u64;
+                            let log = 1 + g.u64_below(max_log);
+                            let count = (1usize << log).min(n_slaves);
+                            Xfer::write(clusters_set(count, 0x80 * (m as u64 + 1)), beats, id)
+                        }
+                        7..=8 => {
+                            // unicast read
+                            let s = g.u64_below(n_slaves as u64) as usize;
+                            Xfer::read(cluster_addr(s, 0x100), beats, id)
+                        }
+                        _ => {
+                            // unroutable (DECERR write or read)
+                            if g.bool(0.5) {
+                                Xfer::write(AddrSet::unicast(0x9000_0000), beats, id)
+                            } else {
+                                Xfer::read(0x9000_0000, beats, id)
+                            }
+                        }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+struct XbarOutcome {
+    cycles: u64,
+    stats: XbarStats,
+    delivered: Vec<Vec<u64>>,
+    responses: Vec<Vec<(u64, Resp)>>,
+}
+
+fn run_xbar(
+    n_masters: usize,
+    n_slaves: usize,
+    scripts: &[Vec<Xfer>],
+    force_naive: bool,
+) -> XbarOutcome {
+    let mut cfg = XbarCfg::new("parity", n_masters, n_slaves, cluster_map(n_slaves, false));
+    cfg.force_naive = force_naive;
+    let (xbar, pool) = Xbar::with_pool(cfg, 2);
+    let mut f = Fixture::new(xbar, pool, scripts.to_vec());
+    let cycles = f.run(100_000).expect("parity fixture deadlocked");
+    f.assert_protocol_clean();
+    XbarOutcome {
+        cycles,
+        stats: f.xbar.stats.clone(),
+        delivered: f.slaves.iter().map(|s| s.delivered_txns()).collect(),
+        responses: f
+            .masters
+            .iter()
+            .map(|m| m.completed_b.clone())
+            .collect(),
+    }
+}
+
+#[test]
+fn xbar_worklists_match_naive_reference() {
+    check(
+        "xbar-perf-parity",
+        Config {
+            cases: 48,
+            ..Config::default()
+        },
+        |g| {
+            let n_masters = 2 + g.u64_below(4) as usize;
+            // power-of-two slave counts so multicast sets stay aligned
+            let n_slaves = 1usize << (1 + g.u64_below(3));
+            let scripts = random_scripts(g, n_masters, n_slaves);
+            (n_masters, n_slaves, scripts)
+        },
+        |(n_masters, n_slaves, scripts)| {
+            let opt = run_xbar(*n_masters, *n_slaves, scripts, false);
+            let naive = run_xbar(*n_masters, *n_slaves, scripts, true);
+            if opt.cycles != naive.cycles {
+                return Err(format!(
+                    "cycle divergence: opt {} vs naive {}",
+                    opt.cycles, naive.cycles
+                ));
+            }
+            if opt.stats != naive.stats {
+                return Err(format!(
+                    "stats divergence:\nopt   {:?}\nnaive {:?}",
+                    opt.stats, naive.stats
+                ));
+            }
+            if opt.delivered != naive.delivered {
+                return Err("per-slave delivery order diverged".into());
+            }
+            if opt.responses != naive.responses {
+                return Err("master response streams diverged".into());
+            }
+            if opt.stats.w_beats_out != opt.stats.w_beats_in + opt.stats.w_fork_extra {
+                return Err("W fork invariant broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn xbar_parity_holds_without_commit_protocol() {
+    // disjoint-set no-commit traffic (the fig. 2e configuration minus
+    // the deadlock): the per-leg forward path must also be identical
+    let scripts = vec![
+        vec![Xfer::write(clusters_set(2, 0x0), 8, 0); 4],
+        vec![Xfer::write(AddrSet::unicast(cluster_addr(3, 0x40)), 8, 1); 4],
+    ];
+    let run = |force_naive: bool| {
+        let mut cfg = XbarCfg::new("nc", 2, 4, cluster_map(4, false));
+        cfg.commit_protocol = false;
+        cfg.force_naive = force_naive;
+        let (xbar, pool) = Xbar::with_pool(cfg, 2);
+        let mut f = Fixture::new(xbar, pool, scripts.clone());
+        let cycles = f.run(100_000).expect("disjoint no-commit deadlocked");
+        (cycles, f.xbar.stats.clone())
+    };
+    let (c_opt, s_opt) = run(false);
+    let (c_naive, s_naive) = run(true);
+    assert_eq!(c_opt, c_naive, "no-commit cycle divergence");
+    assert_eq!(s_opt, s_naive, "no-commit stats divergence");
+}
+
+// ----------------------------------------------------------------- soc
+
+/// Random per-cluster programs: delays, computes, unicast/multicast
+/// DMAs and globally-consistent barrier rounds.
+fn random_soc_programs(g: &mut Gen, cfg: &SocConfig) -> Vec<Vec<Cmd>> {
+    let n = cfg.n_clusters;
+    let barriers = g.u64_below(3) as usize;
+    (0..n)
+        .map(|c| {
+            let mut prog = Vec::new();
+            for round in 0..=barriers {
+                let work = g.u64_below(3);
+                for w in 0..work {
+                    match g.u64_below(4) {
+                        0 => prog.push(Cmd::Delay {
+                            cycles: 1 + g.u64_below(200),
+                        }),
+                        1 => prog.push(Cmd::Compute {
+                            macs: 1 + g.u64_below(512),
+                            op: 0,
+                            arg: 0,
+                        }),
+                        _ => {
+                            let bytes = 64 * (1 + g.u64_below(16));
+                            let dst = if g.bool(0.4) {
+                                // aligned multicast set
+                                let count = (1usize << (1 + g.u64_below(2))).min(n);
+                                let first = (c / count) * count;
+                                cfg.cluster_set(first, count, 0x8000)
+                            } else {
+                                let t = g.u64_below(n as u64) as usize;
+                                AddrSet::unicast(cfg.cluster_base(t) + 0xC000)
+                            };
+                            let src = if g.bool(0.5) {
+                                cfg.cluster_base(c)
+                            } else {
+                                axi_mcast::occamy::config::LLC_BASE + 0x100 * c as u64
+                            };
+                            prog.push(Cmd::Dma {
+                                src,
+                                dst,
+                                bytes,
+                                tag: round as u64 * 10 + w,
+                            });
+                            prog.push(Cmd::WaitDma);
+                        }
+                    }
+                }
+                if round < barriers {
+                    prog.push(Cmd::Barrier);
+                }
+            }
+            prog
+        })
+        .collect()
+}
+
+struct SocOutcome {
+    cycles: u64,
+    /// Horizon engagement (not compared: wall-clock-side observability).
+    skipped: u64,
+    wide: XbarStats,
+    narrow: XbarStats,
+    releases: u64,
+    progress: Vec<u64>,
+    compute_busy: Vec<u64>,
+    done_at: Vec<Option<u64>>,
+    dma_stats: Vec<axi_mcast::occamy::dma::DmaStats>,
+    dma_tags: Vec<Vec<u64>>,
+    l1: Vec<Vec<u8>>,
+}
+
+fn run_soc(cfg: &SocConfig, progs: Vec<Vec<Cmd>>, force_naive: bool) -> SocOutcome {
+    let cfg = SocConfig {
+        force_naive,
+        ..cfg.clone()
+    };
+    let mut soc = Soc::new(cfg);
+    soc.load_programs(progs);
+    let cycles = soc.run_default(&mut NopCompute).expect("soc parity run");
+    SocOutcome {
+        cycles,
+        skipped: soc.skipped_cycles,
+        wide: soc.wide.stats_sum(),
+        narrow: soc.narrow.stats_sum(),
+        releases: soc.barrier.releases,
+        progress: soc.clusters.iter().map(|c| c.progress).collect(),
+        compute_busy: soc.clusters.iter().map(|c| c.compute_busy_cycles).collect(),
+        done_at: soc.clusters.iter().map(|c| c.done_at).collect(),
+        dma_stats: soc.clusters.iter().map(|c| c.dma.stats.clone()).collect(),
+        dma_tags: soc.clusters.iter().map(|c| c.dma_done_tags.clone()).collect(),
+        l1: soc.mem.l1.clone(),
+    }
+}
+
+fn compare_soc(opt: &SocOutcome, naive: &SocOutcome) -> Result<(), String> {
+    if opt.cycles != naive.cycles {
+        return Err(format!(
+            "cycle divergence: opt {} vs naive {}",
+            opt.cycles, naive.cycles
+        ));
+    }
+    if opt.wide != naive.wide || opt.narrow != naive.narrow {
+        return Err(format!(
+            "xbar stats divergence:\nopt  wide {:?} narrow {:?}\nnaive wide {:?} narrow {:?}",
+            opt.wide, opt.narrow, naive.wide, naive.narrow
+        ));
+    }
+    if opt.releases != naive.releases {
+        return Err("barrier release divergence".into());
+    }
+    if opt.progress != naive.progress {
+        return Err("cluster progress counters diverged".into());
+    }
+    if opt.compute_busy != naive.compute_busy {
+        return Err("compute busy-cycle counters diverged".into());
+    }
+    if opt.done_at != naive.done_at {
+        return Err(format!(
+            "done_at diverged: opt {:?} vs naive {:?}",
+            opt.done_at, naive.done_at
+        ));
+    }
+    if opt.dma_stats != naive.dma_stats {
+        return Err(format!(
+            "dma stats diverged:\nopt   {:?}\nnaive {:?}",
+            opt.dma_stats, naive.dma_stats
+        ));
+    }
+    if opt.dma_tags != naive.dma_tags {
+        return Err("dma completion tag order diverged".into());
+    }
+    if opt.l1 != naive.l1 {
+        return Err("functional memory diverged".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn soc_event_horizon_matches_naive_reference() {
+    let cfg = SocConfig::tiny(8);
+    check(
+        "soc-perf-parity",
+        Config {
+            cases: 10,
+            ..Config::default()
+        },
+        |g| random_soc_programs(g, &cfg),
+        |progs| {
+            let opt = run_soc(&cfg, progs.clone(), false);
+            let naive = run_soc(&cfg, progs.clone(), true);
+            compare_soc(&opt, &naive)
+        },
+    );
+}
+
+#[test]
+fn barrier_stagger_horizon_parity() {
+    // the event-horizon showcase workload: long staggered delays +
+    // barrier + compute, where skipping covers most simulated time
+    let cfg = SocConfig::tiny(8);
+    let progs: Vec<Vec<Cmd>> = (0..8)
+        .map(|i| {
+            vec![
+                Cmd::Delay {
+                    cycles: 100 + (i as u64) * 500,
+                },
+                Cmd::Barrier,
+                Cmd::Compute {
+                    macs: 4096,
+                    op: 1,
+                    arg: 0,
+                },
+            ]
+        })
+        .collect();
+    let opt = run_soc(&cfg, progs.clone(), false);
+    let naive = run_soc(&cfg, progs, true);
+    compare_soc(&opt, &naive).unwrap();
+    // the run is latency-dominated: the final delay alone is 3600
+    assert!(opt.cycles > 3_600, "stagger run suspiciously short");
+    // the horizon must actually engage (and naive must never skip)
+    assert!(
+        opt.skipped > opt.cycles / 2,
+        "horizon barely engaged: skipped {} of {} cycles",
+        opt.skipped,
+        opt.cycles
+    );
+    assert_eq!(naive.skipped, 0, "force_naive must never fast-forward");
+}
+
+#[test]
+fn llc_roundtrip_horizon_parity() {
+    // LLC-latency-dominated reads: DMA pulls from the LLC while
+    // everything else idles, exercising the SimSlave schedule horizon
+    let mut cfg = SocConfig::tiny(4);
+    cfg.llc_lat = 40; // exaggerate the round-trip
+    let mut progs = vec![Vec::new(); 4];
+    progs[0] = vec![
+        Cmd::Dma {
+            src: axi_mcast::occamy::config::LLC_BASE,
+            dst: AddrSet::unicast(cfg.cluster_base(0) + 0x100),
+            bytes: 4 * 1024,
+            tag: 1,
+        },
+        Cmd::WaitDma,
+        Cmd::Delay { cycles: 300 },
+    ];
+    let opt = run_soc(&cfg, progs.clone(), false);
+    let naive = run_soc(&cfg, progs, true);
+    compare_soc(&opt, &naive).unwrap();
+    // LLC round-trips and the DMA wait must be skippable (a blocked
+    // WaitDma is a pure no-op step — cluster.rs next_event)
+    assert!(
+        opt.skipped > 0,
+        "horizon never engaged on the LLC round-trip workload"
+    );
+}
+
+#[test]
+fn dma_overlap_horizon_parity() {
+    // DMA running while the sequencer delays: exercises the DMA
+    // setup/local/wait classification and its bulk skip accounting
+    let cfg = SocConfig::tiny(4);
+    let mut progs = vec![Vec::new(); 4];
+    progs[0] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: cfg.cluster_set(0, 4, 0x4000),
+            bytes: 8 * 1024,
+            tag: 1,
+        },
+        Cmd::Delay { cycles: 900 },
+        Cmd::WaitDma,
+        // local L1→L1 copy: pure LocalCopy countdown
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: AddrSet::unicast(cfg.cluster_base(0) + 0x10000),
+            bytes: 4 * 1024,
+            tag: 2,
+        },
+        Cmd::WaitDma,
+    ];
+    let opt = run_soc(&cfg, progs.clone(), false);
+    let naive = run_soc(&cfg, progs, true);
+    compare_soc(&opt, &naive).unwrap();
+    assert!(opt.skipped > 0, "horizon never engaged on the DMA overlap");
+}
