@@ -517,15 +517,30 @@ pub struct MeshSpec {
     pub endpoints: EndpointMap,
     pub tiles: usize,
     pub params: FabricParams,
+    /// Service windows `(start, end, name)` hosted on tile 0 — plain
+    /// unicast rules, one extra slave port each on the host tile; every
+    /// other tile routes the window through its direct link to tile 0
+    /// (the mesh counterpart of the tree's root services).
+    pub services: Vec<(u64, u64, String)>,
 }
 
 pub struct MeshTopology {
     pub topo: Topology,
     pub endpoint_m: Vec<LinkId>,
     pub endpoint_s: Vec<LinkId>,
+    /// One per [`MeshSpec::services`] entry, in order (all on tile 0).
+    pub service_s: Vec<LinkId>,
 }
 
-pub fn build_mesh(pool: &mut LinkPool, link_depth: usize, spec: &MeshSpec) -> MeshTopology {
+/// Build a fully-connected mesh; `tune(cfg, tile)` may adjust each
+/// tile's crossbar knobs before instantiation (mirrors [`build_tree`]'s
+/// per-level hook).
+pub fn build_mesh(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    spec: &MeshSpec,
+    mut tune: impl FnMut(&mut XbarCfg, usize),
+) -> MeshTopology {
     let eps = &spec.endpoints;
     let t = spec.tiles;
     assert!(t >= 2, "{}: a mesh needs at least 2 tiles", spec.name);
@@ -539,7 +554,7 @@ pub fn build_mesh(pool: &mut LinkPool, link_depth: usize, spec: &MeshSpec) -> Me
     let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
 
     // nodes first (ports: masters = e locals + t-1 peers-in;
-    // slaves = e locals + t-1 peers-out)
+    // slaves = e locals + t-1 peers-out [+ services on tile 0])
     let mut nodes = Vec::with_capacity(t);
     for q in 0..t {
         let first = q * e;
@@ -553,11 +568,20 @@ pub fn build_mesh(pool: &mut LinkPool, link_depth: usize, spec: &MeshSpec) -> Me
             rules.push(AddrRule::new(s, end, port, &format!("tile{p}")).with_mcast());
             port += 1;
         }
-        let n = e + t - 1;
-        let map = AddrMap::new(rules, n)
+        // service windows: dedicated slave ports on the host tile; the
+        // other tiles reuse their direct route to tile 0
+        let to_tile0 = e; // out_port(q, 0) for q > 0
+        for (si, (s, end, name)) in spec.services.iter().enumerate() {
+            let slave = if q == 0 { e + t - 1 + si } else { to_tile0 };
+            rules.push(AddrRule::new(*s, *end, slave, name));
+        }
+        let n_slaves = e + t - 1 + if q == 0 { spec.services.len() } else { 0 };
+        let n_masters = e + t - 1;
+        let map = AddrMap::new(rules, n_slaves)
             .unwrap_or_else(|err| panic!("{}: tile {q} map: {err}", spec.name));
-        let mut cfg = XbarCfg::new(&format!("{}-t{}", spec.name, q), n, n, map);
+        let mut cfg = XbarCfg::new(&format!("{}-t{}", spec.name, q), n_masters, n_slaves, map);
         spec.params.apply(&mut cfg);
+        tune(&mut cfg, q);
         nodes.push(b.node(cfg));
     }
 
@@ -584,10 +608,19 @@ pub fn build_mesh(pool: &mut LinkPool, link_depth: usize, spec: &MeshSpec) -> Me
         }
     }
 
+    // service slave ports (tile 0)
+    let service_s: Vec<LinkId> = spec
+        .services
+        .iter()
+        .enumerate()
+        .map(|(si, (_, _, name))| b.ext_slave(nodes[0], e + t - 1 + si, name))
+        .collect();
+
     MeshTopology {
         topo: b.build(),
         endpoint_m,
         endpoint_s,
+        service_s,
     }
 }
 
@@ -658,8 +691,9 @@ pub fn build_shape(
                 endpoints,
                 tiles: *tiles,
                 params,
+                services: Vec::new(),
             };
-            let m = build_mesh(pool, link_depth, &spec);
+            let m = build_mesh(pool, link_depth, &spec, |_, _| {});
             BuiltTopo {
                 topo: m.topo,
                 endpoint_m: m.endpoint_m,
@@ -768,6 +802,27 @@ mod tests {
         }
         // 16 endpoint pairs + 4*3 peer links
         assert_eq!(pool.len(), 32 + 12);
+    }
+
+    #[test]
+    fn mesh_hosts_services_on_tile0() {
+        let mut pool = LinkPool::new();
+        let spec = MeshSpec {
+            name: "svc-mesh".into(),
+            endpoints: eps(8),
+            tiles: 2,
+            params: FabricParams::default(),
+            services: vec![(0x8000_0000, 0x8010_0000, "llc".into())],
+        };
+        let t = build_mesh(&mut pool, 2, &spec, |_, _| {});
+        assert_eq!(t.service_s.len(), 1);
+        // tile 0 hosts the window on a dedicated slave port; tile 1
+        // reuses its direct route to tile 0 (no extra port)
+        assert_eq!(t.topo.xbars[0].cfg.n_slaves, 4 + 1 + 1);
+        assert_eq!(t.topo.xbars[1].cfg.n_slaves, 4 + 1);
+        assert_eq!(t.topo.xbars[0].cfg.n_masters, 5);
+        assert_eq!(t.topo.xbars[1].cfg.n_masters, 5);
+        assert_eq!(t.topo.ext_slave("llc"), t.service_s[0]);
     }
 
     #[test]

@@ -2,10 +2,11 @@
 //! topology-shape sweep enabled by the topology subsystem.
 
 use crate::area::{xbar_area, AreaParams, TimingModel};
-use crate::occamy::SocConfig;
+use crate::occamy::{SocConfig, WideShape};
 use crate::util::json::Json;
 use crate::util::stats::{amdahl_parallel_fraction, geomean};
 use crate::util::table::{fnum, Table};
+use crate::workloads::collectives::{run_collective, CollMode, CollOp, CollectiveResult};
 use crate::workloads::matmul::{run_matmul, MatmulMode, MatmulResult, TileExec};
 use crate::workloads::microbench::{run_microbench, McastMode};
 use crate::workloads::roofline::Roofline;
@@ -348,6 +349,156 @@ pub fn assert_topo_row_invariants(r: &TopoSweepRow) {
     }
 }
 
+/// One collectives comparison point: software baseline vs
+/// multicast-accelerated strategy for one `(op, shape)` pair.
+#[derive(Debug, Clone)]
+pub struct CollRow {
+    pub sw: CollectiveResult,
+    pub hw: CollectiveResult,
+    pub speedup: f64,
+}
+
+/// The collectives experiment: every requested op on every requested
+/// wide-network shape, software baseline vs multicast-accelerated
+/// schedule, with injected-beat and fork accounting per row.
+pub fn collectives(
+    cfg: &SocConfig,
+    ops: &[CollOp],
+    shapes: &[WideShape],
+    bytes: u64,
+) -> (Vec<CollRow>, Table, Json) {
+    let mut rows = Vec::new();
+    for shape in shapes {
+        let mut cfg = cfg.clone();
+        cfg.wide_shape = shape.clone();
+        for &op in ops {
+            let sw = run_collective(&cfg, op, CollMode::Sw, bytes);
+            let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
+            rows.push(CollRow {
+                speedup: sw.cycles as f64 / hw.cycles as f64,
+                sw,
+                hw,
+            });
+        }
+    }
+    let mut table = Table::new(&[
+        "op",
+        "shape",
+        "KiB",
+        "sw cyc",
+        "hw cyc",
+        "speedup",
+        "sw inj W",
+        "hw inj W",
+        "mcast AWs",
+        "forked AWs",
+        "numerics",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.hw.op.name().to_string(),
+            r.hw.shape.clone(),
+            (r.hw.bytes / 1024).to_string(),
+            r.sw.cycles.to_string(),
+            r.hw.cycles.to_string(),
+            fnum(r.speedup, 2),
+            r.sw.dma_w_beats.to_string(),
+            r.hw.dma_w_beats.to_string(),
+            r.hw.wide.aw_mcast.to_string(),
+            r.hw.wide.aw_forks.to_string(),
+            if r.sw.numerics_ok && r.hw.numerics_ok {
+                "OK"
+            } else {
+                "FAIL"
+            }
+            .to_string(),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("op", r.hw.op.name())
+                    .set("shape", r.hw.shape.as_str())
+                    .set("clusters", r.hw.clusters)
+                    .set("bytes", r.hw.bytes)
+                    .set("cycles_sw", r.sw.cycles)
+                    .set("cycles_hw", r.hw.cycles)
+                    .set("speedup", r.speedup)
+                    .set("dma_w_beats_sw", r.sw.dma_w_beats)
+                    .set("dma_w_beats_hw", r.hw.dma_w_beats)
+                    .set("aw_mcast", r.hw.wide.aw_mcast)
+                    .set("aw_forks", r.hw.wide.aw_forks)
+                    .set("w_beats_in_hw", r.hw.wide.w_beats_in)
+                    .set("w_beats_out_hw", r.hw.wide.w_beats_out)
+                    .set("w_fork_extra_hw", r.hw.wide.w_fork_extra)
+                    .set("combines_sw", r.sw.combines)
+                    .set("combines_hw", r.hw.combines)
+                    .set("numerics_ok", r.sw.numerics_ok && r.hw.numerics_ok);
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
+/// Per-op geomean speedup summary over all swept shapes.
+pub fn collectives_summary(rows: &[CollRow]) -> Json {
+    let mut o = Json::obj();
+    for op in CollOp::ALL {
+        let s: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.hw.op == op)
+            .map(|r| r.speedup)
+            .collect();
+        if !s.is_empty() {
+            o.set(&format!("{}_speedup_geomean", op.name()), geomean(&s));
+        }
+    }
+    o
+}
+
+/// Sanity-check a [`CollRow`]: bit-exact numerics on both strategies,
+/// W fork accounting on every crossbar, no decode errors, and the
+/// multicast invariant — the hw strategy never *injects* more W beats
+/// into the fabric than the unicast baseline (the fork pays per-hop
+/// amplification, visible in `w_fork_extra`, never per-source cost).
+pub fn assert_coll_row_invariants(r: &CollRow) {
+    for run in [&r.sw, &r.hw] {
+        assert!(
+            run.numerics_ok,
+            "{} {} on {}: result buffers diverge from the scalar reference",
+            run.op.name(),
+            run.mode.name(),
+            run.shape
+        );
+        assert_eq!(
+            run.wide.w_beats_out,
+            run.wide.w_beats_in + run.wide.w_fork_extra,
+            "{} {} on {}: W fork accounting broken",
+            run.op.name(),
+            run.mode.name(),
+            run.shape
+        );
+        assert_eq!(
+            run.wide.decerr,
+            0,
+            "{} {} on {}: unexpected DECERR",
+            run.op.name(),
+            run.mode.name(),
+            run.shape
+        );
+    }
+    assert!(
+        r.hw.dma_w_beats <= r.sw.dma_w_beats,
+        "{} on {}: hw strategy injects more W beats than the baseline ({} > {})",
+        r.hw.op.name(),
+        r.hw.shape,
+        r.hw.dma_w_beats,
+        r.sw.dma_w_beats
+    );
+}
+
 /// Default fig. 3b sweep parameters (the paper's ranges).
 pub fn fig3b_default_sizes() -> Vec<u64> {
     vec![1, 2, 4, 8, 16, 32].into_iter().map(|k| k * 1024).collect()
@@ -391,6 +542,24 @@ mod tests {
         }
         assert!(table.render().contains("mcast cyc"));
         assert_eq!(json.as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn collectives_rows_cover_ops_and_hold_invariants() {
+        let cfg = SocConfig::tiny(4);
+        let shapes = [WideShape::Groups, WideShape::Flat];
+        let (rows, table, json) = collectives(&cfg, &CollOp::ALL, &shapes, 2048);
+        assert_eq!(rows.len(), 8); // 4 ops x 2 shapes
+        for r in &rows {
+            assert_coll_row_invariants(r);
+        }
+        assert!(table.render().contains("speedup"));
+        assert_eq!(json.as_arr().unwrap().len(), 8);
+        let summary = collectives_summary(&rows);
+        assert!(summary
+            .get("broadcast_speedup_geomean")
+            .and_then(|v| v.as_f64())
+            .is_some());
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Experiment orchestration: every table/figure of the paper's
-//! evaluation section has a harness here that regenerates it (see
-//! DESIGN.md §5 for the experiment index).
+//! evaluation section has a harness here that regenerates it, plus the
+//! extension sweeps (topology shapes, collective operations) — see
+//! DESIGN.md §5 for the experiment index and §6 for the collective
+//! schedules.
 
 pub mod experiments;
 pub mod report;
 
-pub use experiments::{fig3a, fig3b, fig3c, topo_sweep, Fig3bRow, Fig3cRow, TopoSweepRow};
+pub use experiments::{
+    collectives, fig3a, fig3b, fig3c, topo_sweep, CollRow, Fig3bRow, Fig3cRow, TopoSweepRow,
+};
 pub use report::Report;

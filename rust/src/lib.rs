@@ -1,29 +1,57 @@
 //! # axi-mcast — multicast-capable AXI crossbar + Occamy SoC simulator
 //!
 //! Reproduction of *"A Multicast-Capable AXI Crossbar for Many-core
-//! Machine Learning Accelerators"* (Colagrande & Benini, AICAS 2025).
+//! Machine Learning Accelerators"* (Colagrande & Benini, AICAS 2025):
+//! the mask-form multi-address AXI extension, the multicast N×M
+//! crossbar with commit-based deadlock avoidance, a cycle-level model
+//! of the 32-cluster Occamy accelerator built on it, and the paper's
+//! full evaluation plus extension suites (topology shapes, collective
+//! communication), regenerable offline via the `occamy-sim` binary.
 //!
-//! The crate is organised bottom-up (see `DESIGN.md`):
+//! ## Quick start
 //!
-//! * [`util`] — std-only substrates (PRNG, JSON, CLI, stats, property
-//!   testing) written in-repo because the offline build only vendors the
-//!   `xla` crate's dependency closure.
+//! ```sh
+//! cargo build --release
+//! cargo test -q
+//! cargo run --release --bin occamy-sim -- all --out results
+//! ```
+//!
+//! ## Architecture map (bottom-up)
+//!
+//! The crate is layered; each module only uses the ones listed before
+//! it (see `DESIGN.md` for the module map and the RTL-substitution
+//! contract, `EXPERIMENTS.md` for how every number is regenerated):
+//!
+//! * [`util`] — std-only substrates (PRNG, JSON, CLI, stats, tables,
+//!   property testing, inline vectors, dense txn tables) written
+//!   in-repo because the offline build vendors no general-purpose
+//!   crates.
 //! * [`sim`] — cycle-level simulation kernel: staged channels, the
 //!   typed link pool, the component scheduler (generic idle-skips),
-//!   the clock loop and watchdog.
+//!   the clock loop, watchdog and event-horizon fast-forwarding.
 //! * [`axi`] — the paper's §II-A contribution: AXI channel types, the
 //!   mask-form multi-address encoding, the extended address decoder,
 //!   the multicast-capable N×M crossbar (demux fork / mux commit /
 //!   B-join / deadlock avoidance), and the topology subsystem building
-//!   arbitrary hierarchical crossbar graphs (flat / trees / meshes).
-//! * [`occamy`] — the paper's §II-B substrate: Snitch-like clusters with
-//!   L1 SPM + DMA, LLC, narrow (64-bit) and wide (512-bit) two-level
-//!   crossbar hierarchies, multicast interrupts and barriers.
-//! * [`workloads`] — §III-B experiments: the 1-to-N DMA microbenchmark
-//!   (fig. 3b) and the double-buffered tiled matmul (fig. 3c/3d).
+//!   arbitrary crossbar graphs (flat / K-ary trees / meshes, with
+//!   service windows on the root or host tile).
+//! * [`occamy`] — the paper's §II-B substrate: Snitch-like clusters
+//!   with L1 SPM + DMA, LLC, wide (512-bit) and narrow (64-bit)
+//!   networks in any [`occamy::WideShape`], multicast interrupts and
+//!   barriers, and the functional memory carrying the data half of the
+//!   simulation.
+//! * [`workloads`] — §III-B experiments and extensions: the 1-to-N DMA
+//!   microbenchmark (fig. 3b), the double-buffered tiled matmul
+//!   (fig. 3c/3d), the roofline model, the topology-shape broadcast
+//!   sweep, and the collective-communication suite
+//!   ([`workloads::collectives`]: broadcast / all-gather /
+//!   reduce-scatter / all-reduce, software baselines vs
+//!   multicast-accelerated schedules with bit-exact reduction
+//!   validation).
 //! * [`area`] — §III-A analytical gate-count/timing model (fig. 3a).
-//! * [`runtime`] — PJRT CPU client loading the AOT JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`) for functional numerics.
+//! * [`runtime`] — PJRT CPU client loading the AOT JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for functional numerics
+//!   (feature `pjrt`; a stub keeps the default build std-only).
 //! * [`coordinator`] — experiment orchestration, sweeps and reports.
 
 pub mod area;

@@ -8,19 +8,21 @@
 //! occamy-sim fig3d                       # schedule description
 //! occamy-sim microbench --mode hw --clusters 32 --size 32KiB
 //! occamy-sim toposweep [--endpoints 16]  # topology-shape sweep
+//! occamy-sim collectives [--op all] [--shape all] [--mode both]
 //! occamy-sim all [--out results]
 //! ```
 
 use std::process::ExitCode;
 
 use axi_mcast::coordinator::experiments::{
-    fig3a, fig3b, fig3b_default_clusters, fig3b_default_sizes, fig3b_summary, fig3c,
-    fig3d_schedule, topo_sweep,
+    collectives, collectives_summary, fig3a, fig3b, fig3b_default_clusters, fig3b_default_sizes,
+    fig3b_summary, fig3c, fig3d_schedule, topo_sweep,
 };
 use axi_mcast::coordinator::Report;
-use axi_mcast::occamy::SocConfig;
+use axi_mcast::occamy::{SocConfig, WideShape};
 use axi_mcast::runtime::{ArtifactDir, PjrtTileExec, Runtime};
 use axi_mcast::util::cli::{render_cmd_help, render_help, Args, CmdSpec};
+use axi_mcast::workloads::collectives::{self as coll, run_collective, CollMode, CollOp};
 use axi_mcast::workloads::matmul::{RustTileExec, TileExec};
 use axi_mcast::workloads::microbench::{run_microbench, McastMode};
 
@@ -73,8 +75,20 @@ const CMDS: &[CmdSpec] = &[
         ],
     },
     CmdSpec {
+        name: "collectives",
+        about: "collective ops (broadcast/all-gather/reduce-scatter/all-reduce), sw vs hw-mcast",
+        options: &[
+            ("op", "all | broadcast | allgather | reducescatter | allreduce (default all)"),
+            ("size", "vector size per collective (default 8KiB)"),
+            ("clusters", "cluster count, power of two (default 32)"),
+            ("shape", "all | groups | flat | mesh (wide-network topology, default all)"),
+            ("mode", "both | sw | hw (default both; both also prints speedups)"),
+            ("out", "results directory"),
+        ],
+    },
+    CmdSpec {
         name: "all",
-        about: "regenerate every figure (fig3a, fig3b, fig3c, fig3d, toposweep)",
+        about: "regenerate every figure (fig3a, fig3b, fig3c, fig3d, toposweep, collectives)",
         options: &[
             ("exec", "tile executor for fig3c: rust | pjrt"),
             ("out", "results directory (default results)"),
@@ -169,6 +183,103 @@ fn run_toposweep(args: &Args, out: Option<&str>) -> Result<(), String> {
     emit(&r)
 }
 
+fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let clusters = args.usize_or("clusters", 32)?;
+    if !clusters.is_power_of_two() || clusters < 2 {
+        return Err(format!(
+            "--clusters must be a power of two >= 2 (collectives address mask-form sets), \
+             got {clusters}"
+        ));
+    }
+    let cfg = SocConfig {
+        n_clusters: clusters,
+        clusters_per_group: clusters.min(4),
+        ..SocConfig::default()
+    };
+    let bytes = args.u64_or("size", 8 * 1024)?;
+    let step = cfg.wide_bytes as u64 * clusters as u64;
+    if bytes == 0 || bytes % step != 0 {
+        return Err(format!(
+            "--size must be a positive multiple of bus width x clusters ({step} B), got {bytes}"
+        ));
+    }
+    let ops: Vec<CollOp> = match args.get_or("op", "all") {
+        "all" => CollOp::ALL.to_vec(),
+        s => vec![CollOp::parse(s).ok_or_else(|| {
+            format!("unknown --op '{s}' (broadcast|allgather|reducescatter|allreduce|all)")
+        })?],
+    };
+    // reject oversized runs up front instead of panicking mid-sweep in
+    // the library's footprint assert
+    let layout = axi_mcast::workloads::collectives::CollLayout::new(&cfg, bytes);
+    for &op in &ops {
+        let fp = [CollMode::Sw, CollMode::Hw]
+            .into_iter()
+            .map(|m| layout.footprint(op, m))
+            .max()
+            .unwrap();
+        if fp > cfg.l1_bytes {
+            return Err(format!(
+                "--size {bytes} needs {fp} B of L1 per cluster for {} (of {} available at \
+                 {clusters} clusters); pass a smaller --size",
+                op.name(),
+                cfg.l1_bytes
+            ));
+        }
+    }
+    let shapes: Vec<WideShape> = match args.get_or("shape", "all") {
+        "all" => coll::default_shapes(&cfg),
+        "groups" => vec![WideShape::Groups],
+        "flat" => vec![WideShape::Flat],
+        "mesh" => {
+            if cfg.n_groups() < 2 {
+                return Err("--shape mesh needs at least 2 groups of clusters".to_string());
+            }
+            vec![WideShape::Mesh(cfg.n_groups())]
+        }
+        s => return Err(format!("unknown --shape '{s}' (groups|flat|mesh|all)")),
+    };
+    let mut r = Report::new("collectives").to_dir(out);
+    match args.get_or("mode", "both") {
+        "both" => {
+            let (rows, table, json) = collectives(&cfg, &ops, &shapes, bytes);
+            let summary = collectives_summary(&rows);
+            r.table(
+                "Collective operations: software baseline vs hw-multicast schedule",
+                &table,
+            );
+            r.section("Speedup summary (geomean over shapes)", &summary.pretty());
+            r.json("rows", json);
+            r.json("summary", summary);
+        }
+        m => {
+            let mode = CollMode::parse(m)
+                .ok_or_else(|| format!("unknown --mode '{m}' (both|sw|hw)"))?;
+            let mut table = axi_mcast::util::table::Table::new(&[
+                "op", "shape", "KiB", "cycles", "inj W", "mcast AWs", "numerics",
+            ]);
+            for shape in &shapes {
+                let mut cfg = cfg.clone();
+                cfg.wide_shape = shape.clone();
+                for &op in &ops {
+                    let res = run_collective(&cfg, op, mode, bytes);
+                    table.row(&[
+                        res.op.name().to_string(),
+                        res.shape.clone(),
+                        (res.bytes / 1024).to_string(),
+                        res.cycles.to_string(),
+                        res.dma_w_beats.to_string(),
+                        res.wide.aw_mcast.to_string(),
+                        if res.numerics_ok { "OK" } else { "FAIL" }.to_string(),
+                    ]);
+                }
+            }
+            r.table(&format!("Collective operations ({} only)", mode.name()), &table);
+        }
+    }
+    emit(&r)
+}
+
 fn run(cmd: &str, args: &Args) -> Result<(), String> {
     let cfg = SocConfig::default();
     let out = args.get("out");
@@ -246,6 +357,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         "toposweep" => {
             run_toposweep(args, out)?;
         }
+        "collectives" => {
+            run_collectives(args, out)?;
+        }
         "all" => {
             let out = Some(args.get_or("out", "results"));
             let (t_a, j_a) = fig3a();
@@ -274,6 +388,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             emit(&r)?;
 
             run_toposweep(args, out)?;
+            // collectives with default parameters (the `all` --clusters
+            // flag is fig3b's comma list, not a single count)
+            run_collectives(&Args::default(), out)?;
 
             println!("{}", fig3d_schedule(&cfg));
         }

@@ -16,6 +16,40 @@ pub const LLC_BASE: u64 = 0x8000_0000;
 pub const BARRIER_BASE: u64 = 0x0200_0000;
 pub const BARRIER_SIZE: u64 = 0x1000;
 
+/// Shape of the *wide* (data) network — which topology from
+/// [`crate::axi::topology`] carries the DMA traffic. The narrow
+/// (control) network always keeps the paper's group/top tree: the
+/// barrier unit needs the tree root's extra master port.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WideShape {
+    /// The paper's reference 2-level hierarchy: one group crossbar per
+    /// `clusters_per_group` clusters plus a top crossbar (fig. 2c).
+    Groups,
+    /// A single flat crossbar over all clusters + the LLC.
+    Flat,
+    /// A custom tree: bottom-up arity whose product must equal
+    /// `n_clusters` (`[4, 8]` is [`WideShape::Groups`] for 32 clusters).
+    Tree(Vec<usize>),
+    /// A fully-connected mesh of this many peer crossbar tiles; the LLC
+    /// is hosted on tile 0.
+    Mesh(usize),
+}
+
+impl WideShape {
+    /// Short identifier used in experiment tables/JSON.
+    pub fn label(&self) -> String {
+        match self {
+            WideShape::Groups => "groups".to_string(),
+            WideShape::Flat => "flat".to_string(),
+            WideShape::Tree(arity) => {
+                let parts: Vec<String> = arity.iter().map(|a| a.to_string()).collect();
+                format!("tree{}", parts.join("x"))
+            }
+            WideShape::Mesh(tiles) => format!("mesh{tiles}"),
+        }
+    }
+}
+
 /// Full system configuration. `Default` reproduces the paper's
 /// reference system: 32 clusters in 8 groups of 4, 128 KiB L1 per
 /// cluster, 4 MiB LLC, 512-bit wide / 64-bit narrow networks, 1 GHz.
@@ -54,6 +88,9 @@ pub struct SocConfig {
     pub irq_handler_cycles: u64,
     /// Max beats per AXI burst (bounded also by the 4 KiB rule).
     pub max_burst_beats: u32,
+    /// Wide-network topology (the collectives suite sweeps this; the
+    /// narrow network always keeps the paper's group/top tree).
+    pub wide_shape: WideShape,
 
     // ---- DMA parameters ----
     /// Cycles to set up / launch one DMA job (descriptor fetch, cfg).
@@ -104,6 +141,7 @@ impl Default for SocConfig {
             llc_burst_gap: 4,
             irq_handler_cycles: 120,
             max_burst_beats: 64,
+            wide_shape: WideShape::Groups,
             dma_setup: 8,
             dma_read_outstanding: 4,
             dma_write_outstanding: 4,

@@ -95,6 +95,19 @@ impl SocMem {
         }
     }
 
+    /// Reduction combining (the collectives' N-to-1 path): element-wise
+    /// `dst[i] += src[i]` over `n` f64 values. `dst` and `src` may live
+    /// in different regions; overlapping in-place ranges are a caller
+    /// bug (the collective layouts keep contribution slots disjoint).
+    pub fn add_f64(&mut self, dst: u64, src: u64, n: usize) {
+        let s = self.read_f64(src, n);
+        let mut d = self.read_f64(dst, n);
+        for (dv, sv) in d.iter_mut().zip(&s) {
+            *dv += *sv;
+        }
+        self.write_f64(dst, &d);
+    }
+
     /// Typed helpers for the matmul workload (row-major f64).
     pub fn write_f64(&mut self, addr: u64, vals: &[f64]) {
         let mut buf = Vec::with_capacity(vals.len() * 8);
@@ -164,5 +177,16 @@ mod tests {
         let vals = [1.5f64, -2.25, 1e-300];
         m.write_f64(CLUSTER_BASE + 128, &vals);
         assert_eq!(m.read_f64(CLUSTER_BASE + 128, 3), vals);
+    }
+
+    #[test]
+    fn add_f64_combines_elementwise() {
+        let mut m = mem();
+        m.write_f64(CLUSTER_BASE, &[1.0, 2.0, 3.0]);
+        m.write_f64(LLC_BASE, &[10.0, 20.0, 30.0]);
+        m.add_f64(CLUSTER_BASE, LLC_BASE, 3);
+        assert_eq!(m.read_f64(CLUSTER_BASE, 3), vec![11.0, 22.0, 33.0]);
+        // src untouched
+        assert_eq!(m.read_f64(LLC_BASE, 3), vec![10.0, 20.0, 30.0]);
     }
 }

@@ -31,6 +31,6 @@ pub mod soc;
 pub mod sync;
 
 pub use cluster::{ClState, Cluster, Cmd};
-pub use config::SocConfig;
+pub use config::{SocConfig, WideShape};
 pub use mem::SocMem;
 pub use soc::{ComputeHandler, NopCompute, Soc};

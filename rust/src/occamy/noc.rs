@@ -16,9 +16,12 @@
 //! unit on the narrow network]; one slave port per group + the LLC
 //! (wide) / barrier peripheral (narrow) as the root service window.
 
-use super::config::{SocConfig, BARRIER_BASE, BARRIER_SIZE, CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE};
+use super::config::{
+    SocConfig, WideShape, BARRIER_BASE, BARRIER_SIZE, CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE,
+};
 use crate::axi::topology::{
-    build_tree, step_xbars_scheduled, sum_xbar_stats, EndpointMap, FabricParams, TreeSpec,
+    build_mesh, build_tree, step_xbars_scheduled, sum_xbar_stats, EndpointMap, FabricParams,
+    MeshSpec, TreeSpec,
 };
 use crate::axi::types::{LinkId, LinkPool};
 use crate::axi::xbar::{Xbar, XbarStats};
@@ -89,7 +92,10 @@ impl Network {
     }
 }
 
-/// Build one network over the shared link pool.
+/// Build one network over the shared link pool. The wide network's
+/// topology follows [`SocConfig::wide_shape`]; the narrow network is
+/// always the paper's group/top tree (the barrier unit needs the tree
+/// root's extra master port).
 pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Network {
     let mcast = match kind {
         NetKind::Wide => cfg.wide_mcast,
@@ -103,24 +109,70 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
             "barrier".to_string(),
         ),
     };
+    let endpoints = EndpointMap {
+        base: CLUSTER_BASE,
+        stride: CLUSTER_STRIDE,
+        count: cfg.n_clusters,
+    };
+    let params = FabricParams {
+        mcast_enabled: mcast,
+        commit_protocol: cfg.commit_protocol,
+        mcast_w_cooldown: cfg.mcast_w_cooldown,
+        force_naive: cfg.force_naive,
+    };
+    // outstanding budget of the fabric's converging point (tree root /
+    // every mesh tile — a tile is both leaf and root)
+    let root_outstanding = 64;
+    let root_mcast_outstanding = cfg.dma_mcast_outstanding.max(2) * 2;
+
+    if kind == NetKind::Wide {
+        if let WideShape::Mesh(tiles) = cfg.wide_shape {
+            let spec = MeshSpec {
+                name: format!("{kind:?}"),
+                endpoints,
+                tiles,
+                params,
+                services: vec![service],
+            };
+            let built = build_mesh(pool, cfg.link_depth, &spec, |xcfg, _tile| {
+                xcfg.max_outstanding = root_outstanding;
+                xcfg.max_mcast_outstanding = root_mcast_outstanding;
+            });
+            return Network {
+                kind,
+                xbars: built.topo.xbars,
+                cluster_m: built.endpoint_m,
+                cluster_s: built.endpoint_s,
+                service_s: built.service_s[0],
+                ext_m: None,
+            };
+        }
+    }
+
+    let arity = match (kind, &cfg.wide_shape) {
+        (NetKind::Narrow, _) | (NetKind::Wide, WideShape::Groups) => {
+            vec![cfg.clusters_per_group, cfg.n_groups()]
+        }
+        (NetKind::Wide, WideShape::Flat) => vec![cfg.n_clusters],
+        (NetKind::Wide, WideShape::Tree(a)) => {
+            assert_eq!(
+                a.iter().product::<usize>(),
+                cfg.n_clusters,
+                "wide_shape tree arity must cover all clusters"
+            );
+            a.clone()
+        }
+        (NetKind::Wide, WideShape::Mesh(_)) => unreachable!("handled above"),
+    };
     let n_root_masters = match kind {
         NetKind::Narrow => 1, // the barrier unit injects release IRQs
         NetKind::Wide => 0,
     };
     let spec = TreeSpec {
         name: format!("{kind:?}"),
-        endpoints: EndpointMap {
-            base: CLUSTER_BASE,
-            stride: CLUSTER_STRIDE,
-            count: cfg.n_clusters,
-        },
-        arity: vec![cfg.clusters_per_group, cfg.n_groups()],
-        params: FabricParams {
-            mcast_enabled: mcast,
-            commit_protocol: cfg.commit_protocol,
-            mcast_w_cooldown: cfg.mcast_w_cooldown,
-            force_naive: cfg.force_naive,
-        },
+        endpoints,
+        arity,
+        params,
         services: vec![service],
         n_root_masters,
     };
@@ -128,8 +180,8 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
     let built = build_tree(pool, cfg.link_depth, &spec, |xcfg, level| {
         if level == top_level {
             // larger top xbar gets more outstanding room
-            xcfg.max_outstanding = 64;
-            xcfg.max_mcast_outstanding = cfg.dma_mcast_outstanding.max(2) * 2;
+            xcfg.max_outstanding = root_outstanding;
+            xcfg.max_mcast_outstanding = root_mcast_outstanding;
         }
     });
     Network {
@@ -177,6 +229,27 @@ mod tests {
             let (s, e) = net.xbars[g].cfg.local_scope.unwrap();
             assert!((e - s).is_power_of_two());
             assert_eq!(s % (e - s), 0);
+        }
+    }
+
+    #[test]
+    fn wide_shapes_build_with_llc_service() {
+        for (shape, want_xbars) in [
+            (WideShape::Flat, 1),
+            (WideShape::Tree(vec![2, 2, 2]), 7), // 4 leaves + 2 mids + root
+            (WideShape::Mesh(2), 2),
+        ] {
+            let mut cfg = SocConfig::tiny(8);
+            cfg.wide_shape = shape.clone();
+            let mut pool = LinkPool::new();
+            let net = build_network(&cfg, &mut pool, NetKind::Wide);
+            assert_eq!(net.xbars.len(), want_xbars, "{shape:?}");
+            assert_eq!(net.cluster_m.len(), 8);
+            // the narrow network keeps the group tree and its barrier
+            // master regardless of the wide shape
+            let nn = build_network(&cfg, &mut pool, NetKind::Narrow);
+            assert!(nn.ext_m.is_some());
+            assert_eq!(nn.xbars.len(), 3);
         }
     }
 

@@ -391,6 +391,49 @@ mod tests {
     }
 
     #[test]
+    fn mcast_and_llc_work_on_flat_and_mesh_wide_shapes() {
+        use crate::occamy::WideShape;
+        for shape in [WideShape::Flat, WideShape::Mesh(2)] {
+            let mut cfg = SocConfig::tiny(8);
+            cfg.wide_shape = shape.clone();
+            let mut soc = Soc::new(cfg.clone());
+            soc.mem.l1[0][..128].copy_from_slice(&[0x6B; 128]);
+            soc.mem.write(LLC_BASE, &[0x3C; 64]);
+            let mut progs = vec![Vec::new(); 8];
+            progs[0] = vec![
+                Cmd::Dma {
+                    src: soc.cfg.cluster_base(0),
+                    dst: soc.cfg.cluster_set(0, 8, 0x1000),
+                    bytes: 128,
+                    tag: 1,
+                },
+                Cmd::WaitDma,
+            ];
+            // a far-tile cluster reads the LLC (mesh: routes via tile 0)
+            progs[7] = vec![
+                Cmd::Dma {
+                    src: LLC_BASE,
+                    dst: AddrSet::unicast(soc.cfg.cluster_base(7) + 0x4000),
+                    bytes: 64,
+                    tag: 2,
+                },
+                Cmd::WaitDma,
+            ];
+            soc.load_programs(progs);
+            soc.run_default(&mut NopCompute).unwrap();
+            for c in 0..8 {
+                assert_eq!(
+                    soc.mem.l1[c][0x1000..0x1080],
+                    [0x6B; 128],
+                    "{shape:?}: cluster {c} missing mcast data"
+                );
+            }
+            assert_eq!(soc.mem.l1[7][0x4000..0x4040], [0x3C; 64], "{shape:?}: LLC read");
+            assert!(soc.wide.stats_sum().aw_mcast >= 1);
+        }
+    }
+
+    #[test]
     fn barrier_synchronises_all_clusters() {
         let mut soc = Soc::new(SocConfig::tiny(8));
         let progs = (0..8)

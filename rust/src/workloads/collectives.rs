@@ -1,0 +1,895 @@
+//! Collective-communication suite on the multicast fabric.
+//!
+//! Four collectives — **broadcast**, **all-gather**, **reduce-scatter**
+//! and **all-reduce** — run over all `n_clusters` clusters of the
+//! Occamy model, on every wide-network topology shape
+//! ([`WideShape`]: the paper's group/top tree, a flat crossbar, deeper
+//! trees, a mesh of tiles), each in two strategies:
+//!
+//! * [`CollMode::Sw`] — software baselines built from unicast DMA
+//!   transfers: binomial-tree (recursive-doubling) broadcast, ring
+//!   all-gather, ring reduce-scatter, and ring reduce-scatter +
+//!   all-gather for all-reduce — with unicast mailbox interrupts for
+//!   the per-step notifies (both multicast extensions disabled, the
+//!   paper's baseline system);
+//! * [`CollMode::Hw`] — the distribution phases use the hardware 1-to-N
+//!   fork: broadcast is one mask-form multicast; all-gather gathers to
+//!   a root and re-distributes the concatenated buffer with a single
+//!   multicast; all-reduce reduces hierarchically (members → group
+//!   leaders → root, the fabric's first *converging* N-to-1 pattern)
+//!   and multicasts the result down; reduce-scatter has no distribution
+//!   phase, so its `Hw` variant is the direct all-to-all scatter of
+//!   contribution chunks (converging traffic, still unicast).
+//!
+//! All-gather deliberately does **not** issue N concurrent global
+//! multicasts: two simultaneous all-cluster multicasts from different
+//! sources can form the documented inter-level W-order deadlock
+//! (DESIGN.md §1, `tests/occamy_system.rs::
+//! global_broadcast_contention_deadlocks_documented_limitation`), so
+//! the schedule keeps at most one global multicast in flight — the
+//! gather-to-root phase converges over plain unicasts instead.
+//!
+//! **Correctness.** The cycle-level fabric moves metadata beats; bytes
+//! materialise in [`SocMem`] when a DMA job completes, and reduction
+//! combining runs through the [`CollectiveCompute`] handler (op codes
+//! [`OP_RS_COMBINE`]…[`OP_AR_FINAL`]) against per-cluster contribution
+//! buffers ([`CollLayout`]). Contributions are small integers stored as
+//! f64, so every sum is exact and the final buffers are bit-identical
+//! to the scalar reference reduction regardless of combine order —
+//! asserted after every run (`numerics_ok`) and in
+//! `tests/collectives.rs`.
+//!
+//! **Cost accounting.** Each result records the W beats the cluster
+//! DMAs inject into the fabric (`dma_w_beats`) — the source-port cost
+//! the multicast fork amortises — plus the aggregate wide-network
+//! [`XbarStats`]. The invariant asserted by the experiment rows: the
+//! `Hw` strategy never injects more W beats than the `Sw` baseline.
+
+use crate::axi::mcast::AddrSet;
+use crate::axi::xbar::XbarStats;
+use crate::occamy::config::MAILBOX_OFFSET;
+use crate::occamy::{Cmd, ComputeHandler, Soc, SocConfig, SocMem, WideShape};
+use crate::sim::engine::Watchdog;
+
+/// Which collective to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollOp {
+    Broadcast,
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+}
+
+impl CollOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollOp::Broadcast => "broadcast",
+            CollOp::AllGather => "all-gather",
+            CollOp::ReduceScatter => "reduce-scatter",
+            CollOp::AllReduce => "all-reduce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CollOp> {
+        match s {
+            "broadcast" | "bcast" => Some(CollOp::Broadcast),
+            "all-gather" | "allgather" => Some(CollOp::AllGather),
+            "reduce-scatter" | "reducescatter" => Some(CollOp::ReduceScatter),
+            "all-reduce" | "allreduce" => Some(CollOp::AllReduce),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [CollOp; 4] = [
+        CollOp::Broadcast,
+        CollOp::AllGather,
+        CollOp::ReduceScatter,
+        CollOp::AllReduce,
+    ];
+}
+
+/// Distribution strategy (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollMode {
+    /// Unicast-only software schedule (baseline system, no multicast).
+    Sw,
+    /// Multicast-accelerated distribution phases.
+    Hw,
+}
+
+impl CollMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollMode::Sw => "sw",
+            CollMode::Hw => "hw-mcast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CollMode> {
+        match s {
+            "sw" | "unicast" => Some(CollMode::Sw),
+            "hw" | "hw-mcast" | "mcast" => Some(CollMode::Hw),
+            _ => None,
+        }
+    }
+}
+
+/// Per-cluster L1 layout of one collective run. All offsets are
+/// relative to the cluster window base; `chunk = bytes / n`.
+///
+/// ```text
+/// data    [bytes]            rank's contribution / broadcast payload
+/// acc     [bytes]            broadcast result; reduce-scatter result (chunk)
+/// gather  [bytes]            all-gather / all-reduce result (n chunks)
+/// work    [chunk]            ring reduce-scatter running partial
+/// recv    [(n-1) * chunk]    ring staging, one slot per round (no reuse,
+///                            so a lagging neighbour can never be overrun)
+/// slots   [n*chunk or (cpg-1)*bytes]   contribution slots: direct
+///                            reduce-scatter (indexed by sender) /
+///                            group members' vectors at a leader
+/// lslots  [(groups-1)*bytes] leader partial vectors at the root
+/// ```
+#[derive(Debug, Clone)]
+pub struct CollLayout {
+    pub n: usize,
+    pub cpg: usize,
+    pub n_groups: usize,
+    pub bytes: u64,
+    pub chunk: u64,
+    pub data: u64,
+    pub acc: u64,
+    pub gather: u64,
+    pub work: u64,
+    pub recv: u64,
+    pub slots: u64,
+    pub lslots: u64,
+}
+
+impl CollLayout {
+    pub fn new(cfg: &SocConfig, bytes: u64) -> CollLayout {
+        let n = cfg.n_clusters;
+        assert!(n >= 2, "a collective needs at least 2 clusters");
+        assert!(
+            n.is_power_of_two(),
+            "collectives address mask-form sets: n_clusters ({n}) must be a power of two"
+        );
+        assert!(
+            bytes > 0 && bytes % (cfg.wide_bytes as u64 * n as u64) == 0,
+            "collective size ({bytes} B) must be a positive multiple of \
+             bus width x clusters ({} B)",
+            cfg.wide_bytes as u64 * n as u64
+        );
+        let chunk = bytes / n as u64;
+        let cpg = cfg.clusters_per_group;
+        let n_groups = cfg.n_groups();
+        let data = 0;
+        let acc = data + bytes;
+        let gather = acc + bytes;
+        let work = gather + bytes;
+        let recv = work + chunk;
+        let slots = recv + (n as u64 - 1) * chunk;
+        // the slot region serves both the direct reduce-scatter
+        // (n chunks = bytes) and the hierarchical reduce's member
+        // vectors ((cpg-1) full vectors)
+        let slot_region = bytes.max(cpg.saturating_sub(1) as u64 * bytes);
+        let lslots = slots + slot_region;
+        CollLayout {
+            n,
+            cpg,
+            n_groups,
+            bytes,
+            chunk,
+            data,
+            acc,
+            gather,
+            work,
+            recv,
+            slots,
+            lslots,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        (self.bytes / 8) as usize
+    }
+
+    pub fn chunk_elems(&self) -> usize {
+        (self.chunk / 8) as usize
+    }
+
+    /// L1 bytes one cluster needs for `(op, mode)`.
+    pub fn footprint(&self, op: CollOp, mode: CollMode) -> u64 {
+        match (op, mode) {
+            (CollOp::Broadcast, _) => self.gather,
+            (CollOp::AllGather, _) => self.work,
+            (CollOp::ReduceScatter, CollMode::Sw) => self.slots,
+            (CollOp::ReduceScatter, CollMode::Hw) => self.slots + self.bytes,
+            (CollOp::AllReduce, CollMode::Sw) => self.slots,
+            (CollOp::AllReduce, CollMode::Hw) => {
+                self.lslots + self.n_groups.saturating_sub(1) as u64 * self.bytes
+            }
+        }
+    }
+}
+
+// ---- reduction compute ops (dispatched through ComputeHandler) ----
+
+/// Ring reduce-scatter combine of round `arg & 0xffff_ffff`; bit 32 set
+/// = the final round writes into the rank's gather slot (all-reduce)
+/// instead of `acc` (standalone reduce-scatter).
+pub const OP_RS_COMBINE: u32 = 10;
+/// Direct reduce-scatter: fold own chunk + all peer contribution slots
+/// into `acc`.
+pub const OP_RS_DIRECT: u32 = 11;
+/// Group leader partial: own vector + member slots into `acc`.
+pub const OP_AR_PARTIAL: u32 = 12;
+/// Root final: own vector + member slots + leader partials into
+/// `gather`.
+pub const OP_AR_FINAL: u32 = 13;
+
+/// The collectives' functional compute handler: applies the reduction
+/// combining ops against the [`CollLayout`] buffers.
+pub struct CollectiveCompute {
+    pub layout: CollLayout,
+    pub combines: u64,
+}
+
+impl CollectiveCompute {
+    pub fn new(layout: CollLayout) -> CollectiveCompute {
+        CollectiveCompute {
+            layout,
+            combines: 0,
+        }
+    }
+}
+
+impl ComputeHandler for CollectiveCompute {
+    fn exec(&mut self, cluster: usize, op: u32, arg: u64, mem: &mut SocMem) {
+        let l = &self.layout;
+        let base = crate::occamy::config::CLUSTER_BASE
+            + cluster as u64 * crate::occamy::config::CLUSTER_STRIDE;
+        let (se, ce) = (l.elems(), l.chunk_elems());
+        match op {
+            OP_RS_COMBINE => {
+                let t = (arg & 0xffff_ffff) as usize;
+                let to_gather = arg >> 32 != 0;
+                let r = cluster;
+                let n = l.n;
+                // chunk combined this round (see `programs`: round t
+                // receives partial chunk (r - t - 2) mod n)
+                let c = (r + 2 * n - t - 2) % n;
+                let own = mem.read_f64(base + l.data + c as u64 * l.chunk, ce);
+                let dst = if t + 2 >= n {
+                    // final round: the fully reduced chunk lands at its
+                    // result location
+                    if to_gather {
+                        base + l.gather + r as u64 * l.chunk
+                    } else {
+                        base + l.acc
+                    }
+                } else {
+                    base + l.work
+                };
+                mem.write_f64(dst, &own);
+                mem.add_f64(dst, base + l.recv + t as u64 * l.chunk, ce);
+            }
+            OP_RS_DIRECT => {
+                let r = cluster;
+                let own = mem.read_f64(base + l.data + r as u64 * l.chunk, ce);
+                mem.write_f64(base + l.acc, &own);
+                for j in 0..l.n {
+                    if j == r {
+                        continue;
+                    }
+                    mem.add_f64(base + l.acc, base + l.slots + j as u64 * l.chunk, ce);
+                }
+            }
+            OP_AR_PARTIAL => {
+                let own = mem.read_f64(base + l.data, se);
+                mem.write_f64(base + l.acc, &own);
+                for i in 0..l.cpg - 1 {
+                    mem.add_f64(base + l.acc, base + l.slots + i as u64 * l.bytes, se);
+                }
+            }
+            OP_AR_FINAL => {
+                let own = mem.read_f64(base + l.data, se);
+                mem.write_f64(base + l.gather, &own);
+                for i in 0..l.cpg - 1 {
+                    mem.add_f64(base + l.gather, base + l.slots + i as u64 * l.bytes, se);
+                }
+                for i in 0..l.n_groups - 1 {
+                    mem.add_f64(base + l.gather, base + l.lslots + i as u64 * l.bytes, se);
+                }
+            }
+            other => panic!("collectives: unknown compute op {other}"),
+        }
+        self.combines += 1;
+    }
+}
+
+// ---- schedules ----
+
+/// Build per-cluster command programs for one `(op, mode)` point.
+pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> Vec<Vec<Cmd>> {
+    let n = l.n;
+    let l1 = |c: usize, off: u64| cfg.cluster_base(c) + off;
+    let uni = |c: usize, off: u64| AddrSet::unicast(l1(c, off));
+    let irq = |c: usize| AddrSet::unicast(cfg.mailbox_addr(c));
+    let ce = l.chunk_elems() as u64;
+    let se = l.elems() as u64;
+    let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); n];
+
+    match (op, mode) {
+        // ---- broadcast ----
+        (CollOp::Broadcast, CollMode::Sw) => {
+            // binomial tree (recursive doubling): after round t, ranks
+            // [0, 2^(t+1)) hold the payload in `acc`
+            for (r, p) in progs.iter_mut().enumerate() {
+                if r == 0 {
+                    p.push(Cmd::Dma {
+                        src: l1(0, l.data),
+                        dst: uni(0, l.acc),
+                        bytes: l.bytes,
+                        tag: 0,
+                    });
+                    p.push(Cmd::WaitDma);
+                } else {
+                    p.push(Cmd::WaitIrq { count: 1 });
+                }
+                let mut t = 0;
+                while (1usize << t) < n {
+                    let d = r + (1 << t);
+                    if r < (1 << t) && d < n {
+                        p.push(Cmd::Dma {
+                            src: l1(r, l.acc),
+                            dst: uni(d, l.acc),
+                            bytes: l.bytes,
+                            tag: 1 + t as u64,
+                        });
+                        p.push(Cmd::WaitDma);
+                        p.push(Cmd::SendIrq { dst: irq(d) });
+                    }
+                    t += 1;
+                }
+            }
+        }
+        (CollOp::Broadcast, CollMode::Hw) => {
+            // one mask-form multicast covering every cluster (self
+            // included), then one multicast notify interrupt
+            progs[0] = vec![
+                Cmd::Dma {
+                    src: l1(0, l.data),
+                    dst: cfg.cluster_set(0, n, l.acc),
+                    bytes: l.bytes,
+                    tag: 0,
+                },
+                Cmd::WaitDma,
+                Cmd::SendIrq {
+                    dst: cfg.all_mailboxes(),
+                },
+                Cmd::WaitIrq { count: 1 }, // own copy of the notify
+            ];
+            for p in progs.iter_mut().skip(1) {
+                p.push(Cmd::WaitIrq { count: 1 });
+            }
+        }
+        // ---- all-gather ----
+        (CollOp::AllGather, CollMode::Sw) => {
+            ring_all_gather(cfg, l, &mut progs, 0);
+        }
+        (CollOp::AllGather, CollMode::Hw) if n == 2 => {
+            // degenerate pair: gather-to-root + full-buffer multicast
+            // would inject 3 chunks where the ring exchange injects 2,
+            // breaking the hw <= sw injection invariant — there is no
+            // fan-out for the fork to amortise, so use the exchange
+            ring_all_gather(cfg, l, &mut progs, 0);
+        }
+        (CollOp::AllGather, CollMode::Hw) => {
+            // gather-to-root over unicasts (converging), then ONE
+            // multicast of the concatenated buffer — never more than a
+            // single global multicast in flight (see the module docs on
+            // the documented concurrent-broadcast limitation)
+            for (r, p) in progs.iter_mut().enumerate() {
+                if r == 0 {
+                    p.push(Cmd::WaitIrq {
+                        count: (n - 1) as u32,
+                    });
+                    p.push(Cmd::Dma {
+                        src: l1(0, l.gather),
+                        dst: cfg.cluster_set(0, n, l.gather),
+                        bytes: l.bytes,
+                        tag: 100,
+                    });
+                    p.push(Cmd::WaitDma);
+                    p.push(Cmd::SendIrq {
+                        dst: cfg.all_mailboxes(),
+                    });
+                    p.push(Cmd::WaitIrq { count: 1 });
+                } else {
+                    p.push(Cmd::Dma {
+                        src: l1(r, l.gather + r as u64 * l.chunk),
+                        dst: uni(0, l.gather + r as u64 * l.chunk),
+                        bytes: l.chunk,
+                        tag: r as u64,
+                    });
+                    p.push(Cmd::WaitDma);
+                    p.push(Cmd::SendIrq { dst: irq(0) });
+                    p.push(Cmd::WaitIrq { count: 1 });
+                }
+            }
+        }
+        // ---- reduce-scatter ----
+        (CollOp::ReduceScatter, CollMode::Sw) => {
+            ring_reduce_scatter(cfg, l, &mut progs, false);
+        }
+        (CollOp::ReduceScatter, CollMode::Hw) => {
+            // direct all-to-all: rank r scatters its chunk j into
+            // rank j's contribution slot r — the first converging
+            // N-to-1 pattern per destination — then folds locally
+            for (r, p) in progs.iter_mut().enumerate() {
+                for j in 0..n {
+                    if j == r {
+                        continue;
+                    }
+                    p.push(Cmd::Dma {
+                        src: l1(r, l.data + j as u64 * l.chunk),
+                        dst: uni(j, l.slots + r as u64 * l.chunk),
+                        bytes: l.chunk,
+                        tag: j as u64,
+                    });
+                }
+                p.push(Cmd::WaitDma);
+                for j in 0..n {
+                    if j == r {
+                        continue;
+                    }
+                    p.push(Cmd::SendIrq { dst: irq(j) });
+                }
+                p.push(Cmd::WaitIrq {
+                    count: (n - 1) as u32,
+                });
+                p.push(Cmd::Compute {
+                    macs: (n as u64 - 1) * ce,
+                    op: OP_RS_DIRECT,
+                    arg: 0,
+                });
+            }
+        }
+        // ---- all-reduce ----
+        (CollOp::AllReduce, CollMode::Sw) => {
+            // ring reduce-scatter (final combine into the gather slot)
+            // followed by the ring all-gather over the reduced chunks
+            ring_reduce_scatter(cfg, l, &mut progs, true);
+            ring_all_gather(cfg, l, &mut progs, 1000);
+        }
+        (CollOp::AllReduce, CollMode::Hw) => {
+            // hierarchical reduce: members → group leaders → root
+            // (converging unicasts into per-sender contribution slots),
+            // then one multicast of the reduced vector down
+            let cpg = l.cpg;
+            let n_groups = l.n_groups;
+            for (r, p) in progs.iter_mut().enumerate() {
+                let g = r / cpg;
+                let leader = g * cpg;
+                if r == 0 {
+                    let expect = (cpg - 1) + (n_groups - 1);
+                    if expect > 0 {
+                        p.push(Cmd::WaitIrq {
+                            count: expect as u32,
+                        });
+                    }
+                    p.push(Cmd::Compute {
+                        macs: expect as u64 * se,
+                        op: OP_AR_FINAL,
+                        arg: 0,
+                    });
+                    p.push(Cmd::Dma {
+                        src: l1(0, l.gather),
+                        dst: cfg.cluster_set(0, n, l.gather),
+                        bytes: l.bytes,
+                        tag: 100,
+                    });
+                    p.push(Cmd::WaitDma);
+                    p.push(Cmd::SendIrq {
+                        dst: cfg.all_mailboxes(),
+                    });
+                    p.push(Cmd::WaitIrq { count: 1 });
+                } else if r == leader {
+                    if cpg > 1 {
+                        p.push(Cmd::WaitIrq {
+                            count: (cpg - 1) as u32,
+                        });
+                    }
+                    p.push(Cmd::Compute {
+                        macs: (cpg as u64 - 1) * se,
+                        op: OP_AR_PARTIAL,
+                        arg: 0,
+                    });
+                    p.push(Cmd::Dma {
+                        src: l1(r, l.acc),
+                        dst: uni(0, l.lslots + (g as u64 - 1) * l.bytes),
+                        bytes: l.bytes,
+                        tag: g as u64,
+                    });
+                    p.push(Cmd::WaitDma);
+                    p.push(Cmd::SendIrq { dst: irq(0) });
+                    p.push(Cmd::WaitIrq { count: 1 });
+                } else {
+                    p.push(Cmd::Dma {
+                        src: l1(r, l.data),
+                        dst: uni(leader, l.slots + (r - leader - 1) as u64 * l.bytes),
+                        bytes: l.bytes,
+                        tag: r as u64,
+                    });
+                    p.push(Cmd::WaitDma);
+                    p.push(Cmd::SendIrq { dst: irq(leader) });
+                    p.push(Cmd::WaitIrq { count: 1 });
+                }
+            }
+        }
+    }
+    progs
+}
+
+/// The shared ring all-gather schedule: round `t` forwards gather
+/// chunk `(r - t) mod n` to the successor's identical slot. Each round
+/// writes a distinct slot, so no staging is needed. Used by the `sw`
+/// all-gather, the all-reduce back half, and the degenerate 2-cluster
+/// `hw` all-gather (where a multicast has no fan-out to amortise).
+fn ring_all_gather(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>], tag_base: u64) {
+    let n = l.n;
+    for (r, p) in progs.iter_mut().enumerate() {
+        let succ = (r + 1) % n;
+        for t in 0..n - 1 {
+            let idx = (r + n - t) % n;
+            p.push(Cmd::Dma {
+                src: cfg.cluster_base(r) + l.gather + idx as u64 * l.chunk,
+                dst: AddrSet::unicast(cfg.cluster_base(succ) + l.gather + idx as u64 * l.chunk),
+                bytes: l.chunk,
+                tag: tag_base + t as u64,
+            });
+            p.push(Cmd::WaitDma);
+            p.push(Cmd::SendIrq {
+                dst: AddrSet::unicast(cfg.mailbox_addr(succ)),
+            });
+            p.push(Cmd::WaitIrq { count: 1 });
+        }
+    }
+}
+
+/// The shared ring reduce-scatter schedule: `n-1` rounds, each sending
+/// the running partial to the successor's round-distinct staging slot,
+/// then combining the received partial with the local contribution
+/// chunk. Rank `r` ends with the fully reduced chunk `r` (in `acc`, or
+/// in its gather slot when `to_gather` — the all-reduce front half).
+fn ring_reduce_scatter(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>], to_gather: bool) {
+    let n = l.n;
+    let ce = l.chunk_elems() as u64;
+    let flag = if to_gather { 1u64 << 32 } else { 0 };
+    for (r, p) in progs.iter_mut().enumerate() {
+        let succ = (r + 1) % n;
+        for t in 0..n - 1 {
+            // round t sends partial chunk (r - t - 1) mod n; the final
+            // combine (t = n-2) completes chunk r
+            let c_send = (r + 2 * n - t - 1) % n;
+            let src = if t == 0 {
+                cfg.cluster_base(r) + l.data + c_send as u64 * l.chunk
+            } else {
+                cfg.cluster_base(r) + l.work
+            };
+            p.push(Cmd::Dma {
+                src,
+                dst: AddrSet::unicast(cfg.cluster_base(succ) + l.recv + t as u64 * l.chunk),
+                bytes: l.chunk,
+                tag: t as u64,
+            });
+            p.push(Cmd::WaitDma);
+            p.push(Cmd::SendIrq {
+                dst: AddrSet::unicast(cfg.mailbox_addr(succ)),
+            });
+            p.push(Cmd::WaitIrq { count: 1 });
+            p.push(Cmd::Compute {
+                macs: ce,
+                op: OP_RS_COMBINE,
+                arg: t as u64 | flag,
+            });
+        }
+    }
+}
+
+// ---- running + verification ----
+
+/// One measured collective run.
+#[derive(Debug, Clone)]
+pub struct CollectiveResult {
+    pub op: CollOp,
+    pub mode: CollMode,
+    /// Wide-network shape label (`SocConfig::wide_shape`).
+    pub shape: String,
+    pub clusters: usize,
+    pub bytes: u64,
+    pub cycles: u64,
+    /// Aggregate stats over every wide-network crossbar.
+    pub wide: XbarStats,
+    /// W beats injected into the wide fabric by the cluster DMAs — the
+    /// source-port cost the multicast fork amortises (hop counts are
+    /// visible in `wide.w_beats_in` instead).
+    pub dma_w_beats: u64,
+    /// Reduction combines dispatched through the compute handler.
+    pub combines: u64,
+    pub numerics_ok: bool,
+}
+
+/// Deterministic contribution vector of one rank: small integers stored
+/// as f64 (|v| ≤ 512), so sums over ≤ 64 ranks are exact in f64 and the
+/// result is bit-identical to the scalar reference regardless of the
+/// combine order an algorithm uses.
+pub fn rank_values(rank: usize, elems: usize) -> Vec<f64> {
+    let mut rng = crate::util::prng::Pcg::new(0xC011_EC71_5EED ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..elems)
+        .map(|_| (rng.next_u64() % 1024) as i64 as f64 - 512.0)
+        .collect()
+}
+
+/// Seed the contribution buffers, run one `(op, mode)` point on the
+/// configured system (the wide-network shape comes from
+/// `cfg.wide_shape`), and validate the result buffers bit-exactly
+/// against the scalar reference reduction.
+pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -> CollectiveResult {
+    let mut cfg = cfg.clone();
+    match mode {
+        CollMode::Hw => {
+            cfg.wide_mcast = true;
+            cfg.narrow_mcast = true;
+        }
+        CollMode::Sw => {
+            cfg.wide_mcast = false;
+            cfg.narrow_mcast = false;
+        }
+    }
+    let l = CollLayout::new(&cfg, bytes);
+    let fp = l.footprint(op, mode);
+    assert!(
+        fp <= cfg.l1_bytes && fp <= MAILBOX_OFFSET,
+        "{} {}: L1 footprint {fp} exceeds SPM {} (reduce the collective size)",
+        op.name(),
+        mode.name(),
+        cfg.l1_bytes
+    );
+    let n = l.n;
+    let (se, ce) = (l.elems(), l.chunk_elems());
+    let mut soc = Soc::new(cfg.clone());
+
+    // ---- seed contributions ----
+    let vals: Vec<Vec<f64>> = (0..n).map(|r| rank_values(r, se)).collect();
+    match op {
+        CollOp::Broadcast => {
+            soc.mem.write_f64(cfg.cluster_base(0) + l.data, &vals[0]);
+        }
+        CollOp::AllGather => {
+            for (r, v) in vals.iter().enumerate() {
+                soc.mem.write_f64(
+                    cfg.cluster_base(r) + l.gather + r as u64 * l.chunk,
+                    &v[..ce],
+                );
+            }
+        }
+        CollOp::ReduceScatter | CollOp::AllReduce => {
+            for (r, v) in vals.iter().enumerate() {
+                soc.mem.write_f64(cfg.cluster_base(r) + l.data, v);
+            }
+        }
+    }
+
+    soc.load_programs(programs(&cfg, &l, op, mode));
+    let mut handler = CollectiveCompute::new(l.clone());
+    let cycles = soc
+        .run(
+            &mut handler,
+            Watchdog {
+                stall_cycles: 500_000,
+                max_cycles: 500_000_000,
+            },
+        )
+        .unwrap_or_else(|e| {
+            panic!(
+                "collective {} {} on {} ({n} clusters, {bytes} B): {e}",
+                op.name(),
+                mode.name(),
+                cfg.wide_shape.label()
+            )
+        });
+
+    // ---- scalar reference + bit-exact comparison ----
+    let reduced: Vec<f64> = (0..se)
+        .map(|i| (0..n).map(|r| vals[r][i]).sum())
+        .collect();
+    let mut mismatches = 0u64;
+    let mut first_bad: Option<(usize, usize, f64, f64)> = None;
+    let mut check = |cl: usize, got: &[f64], want: &[f64]| {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                mismatches += 1;
+                if first_bad.is_none() {
+                    first_bad = Some((cl, i, *g, *w));
+                }
+            }
+        }
+    };
+    for c in 0..n {
+        let base = cfg.cluster_base(c);
+        match op {
+            CollOp::Broadcast => {
+                check(c, &soc.mem.read_f64(base + l.acc, se), &vals[0]);
+            }
+            CollOp::AllGather => {
+                for (j, v) in vals.iter().enumerate() {
+                    check(
+                        c,
+                        &soc.mem.read_f64(base + l.gather + j as u64 * l.chunk, ce),
+                        &v[..ce],
+                    );
+                }
+            }
+            CollOp::ReduceScatter => {
+                check(
+                    c,
+                    &soc.mem.read_f64(base + l.acc, ce),
+                    &reduced[c * ce..(c + 1) * ce],
+                );
+            }
+            CollOp::AllReduce => {
+                check(c, &soc.mem.read_f64(base + l.gather, se), &reduced);
+            }
+        }
+    }
+    let numerics_ok = mismatches == 0;
+    if let Some((cl, i, got, want)) = first_bad {
+        eprintln!(
+            "collective {} {}: {mismatches} mismatches; first at cluster {cl} elem {i}: \
+             got {got} want {want}",
+            op.name(),
+            mode.name()
+        );
+    }
+
+    let dma_w_beats: u64 = soc.clusters.iter().map(|c| c.dma.stats.write_beats).sum();
+    CollectiveResult {
+        op,
+        mode,
+        shape: cfg.wide_shape.label(),
+        clusters: n,
+        bytes,
+        cycles,
+        wide: soc.wide.stats_sum(),
+        dma_w_beats,
+        combines: handler.combines,
+        numerics_ok,
+    }
+}
+
+/// The wide-network shapes the collectives experiment sweeps for a
+/// given config: the paper's group/top tree, a flat crossbar, and (when
+/// more than one group exists) a mesh with one tile per group.
+pub fn default_shapes(cfg: &SocConfig) -> Vec<WideShape> {
+    let mut shapes = vec![WideShape::Groups, WideShape::Flat];
+    if cfg.n_groups() >= 2 {
+        shapes.push(WideShape::Mesh(cfg.n_groups()));
+    }
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize) -> SocConfig {
+        SocConfig::tiny(n)
+    }
+
+    const SMALL: u64 = 2048; // 4 clusters => 512 B chunks
+
+    #[test]
+    fn layout_offsets_are_disjoint_and_bus_aligned() {
+        let c = cfg(4);
+        let l = CollLayout::new(&c, SMALL);
+        let offs = [l.data, l.acc, l.gather, l.work, l.recv, l.slots, l.lslots];
+        for w in offs.windows(2) {
+            assert!(w[0] < w[1], "layout regions must ascend: {offs:?}");
+        }
+        for o in offs {
+            assert_eq!(o % c.wide_bytes as u64, 0, "offset {o:#x} misaligned");
+        }
+        assert!(l.footprint(CollOp::AllReduce, CollMode::Hw) <= c.l1_bytes);
+    }
+
+    #[test]
+    fn broadcast_both_modes_bit_exact() {
+        for mode in [CollMode::Sw, CollMode::Hw] {
+            let r = run_collective(&cfg(4), CollOp::Broadcast, mode, SMALL);
+            assert!(r.numerics_ok, "broadcast {:?} numerics", mode);
+            assert!(r.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn all_gather_both_modes_bit_exact() {
+        for mode in [CollMode::Sw, CollMode::Hw] {
+            let r = run_collective(&cfg(4), CollOp::AllGather, mode, SMALL);
+            assert!(r.numerics_ok, "all-gather {:?} numerics", mode);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_both_modes_bit_exact() {
+        for mode in [CollMode::Sw, CollMode::Hw] {
+            let r = run_collective(&cfg(4), CollOp::ReduceScatter, mode, SMALL);
+            assert!(r.numerics_ok, "reduce-scatter {:?} numerics", mode);
+            assert!(r.combines > 0, "reduction must run through the handler");
+        }
+    }
+
+    #[test]
+    fn all_reduce_both_modes_bit_exact() {
+        for mode in [CollMode::Sw, CollMode::Hw] {
+            let r = run_collective(&cfg(8), CollOp::AllReduce, mode, 4096);
+            assert!(r.numerics_ok, "all-reduce {:?} numerics", mode);
+        }
+    }
+
+    #[test]
+    fn hw_broadcast_uses_one_mcast_and_fewer_injected_beats() {
+        let sw = run_collective(&cfg(8), CollOp::Broadcast, CollMode::Sw, 4096);
+        let hw = run_collective(&cfg(8), CollOp::Broadcast, CollMode::Hw, 4096);
+        assert!(hw.wide.aw_mcast >= 1, "hw broadcast must multicast");
+        assert_eq!(sw.wide.aw_mcast, 0, "sw baseline must not multicast");
+        assert!(
+            hw.dma_w_beats < sw.dma_w_beats,
+            "multicast must inject fewer W beats ({} vs {})",
+            hw.dma_w_beats,
+            sw.dma_w_beats
+        );
+        assert!(
+            hw.cycles < sw.cycles,
+            "hw broadcast ({}) must beat the software tree ({})",
+            hw.cycles,
+            sw.cycles
+        );
+    }
+
+    #[test]
+    fn two_cluster_degenerate_pair_holds_invariants() {
+        // n=2 has no fan-out to amortise: every hw schedule must still
+        // be bit-exact and inject no more W beats than the sw baseline
+        // (the hw all-gather degenerates to the ring exchange here)
+        for op in CollOp::ALL {
+            let sw = run_collective(&cfg(2), op, CollMode::Sw, 1024);
+            let hw = run_collective(&cfg(2), op, CollMode::Hw, 1024);
+            assert!(sw.numerics_ok && hw.numerics_ok, "{} n=2 numerics", op.name());
+            assert!(
+                hw.dma_w_beats <= sw.dma_w_beats,
+                "{} n=2: hw injects more W beats ({} > {})",
+                op.name(),
+                hw.dma_w_beats,
+                sw.dma_w_beats
+            );
+        }
+    }
+
+    #[test]
+    fn fork_accounting_holds_for_all_ops() {
+        for op in CollOp::ALL {
+            for mode in [CollMode::Sw, CollMode::Hw] {
+                let r = run_collective(&cfg(4), op, mode, SMALL);
+                assert_eq!(
+                    r.wide.w_beats_out,
+                    r.wide.w_beats_in + r.wide.w_fork_extra,
+                    "{} {}: W fork accounting broken",
+                    op.name(),
+                    mode.name()
+                );
+                assert_eq!(r.wide.decerr, 0, "{} {}: DECERR", op.name(), mode.name());
+            }
+        }
+    }
+}

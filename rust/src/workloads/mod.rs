@@ -1,4 +1,4 @@
-//! Paper §III-B workloads.
+//! Paper §III-B workloads, plus the extension suites.
 //!
 //! * [`microbench`] — fig. 3b: one cluster sends the same data to all
 //!   other clusters (multiple-unicast vs hierarchical software multicast
@@ -9,12 +9,19 @@
 //!   bound) used to place fig. 3c points.
 //! * [`topo_sweep`] — the 1-to-N broadcast run across topology shapes
 //!   (flat / tree / mesh) built by `axi::topology`.
+//! * [`collectives`] — broadcast / all-gather / reduce-scatter /
+//!   all-reduce over every wide-network shape, software ring or
+//!   binomial baselines vs multicast-accelerated schedules, with
+//!   bit-exact reduction validation (the fabric's first converging
+//!   N-to-1 traffic).
 
+pub mod collectives;
 pub mod matmul;
 pub mod microbench;
 pub mod roofline;
 pub mod topo_sweep;
 
+pub use collectives::{run_collective, CollMode, CollOp, CollectiveResult};
 pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
 pub use microbench::{run_microbench, McastMode, MicrobenchResult};
 pub use topo_sweep::{run_topo_broadcast, run_topo_script, TopoRunResult};
