@@ -1,16 +1,35 @@
-//! Fig. 2e live demo: two overlapping multicasts deadlock a crossbar
-//! without the commit protocol, and complete with it.
+//! Multicast deadlock live demos — two levels of the same disease, and
+//! the protocol that cures each.
+//!
+//! **Intra-crossbar** (fig. 2e): two overlapping multicasts deadlock a
+//! single crossbar without the commit protocol, and complete with it.
+//!
+//! **Inter-level** (`--interlevel`): on a 2-level tree, two concurrent
+//! all-endpoint broadcasts commit in opposite orders at different
+//! hierarchy levels — the root's W-order says `[A, B]` while a leaf
+//! says `[B, A]` — and the W transport wedges even though every
+//! individual crossbar runs the commit protocol. The fabric-wide
+//! two-phase reservation protocol (`--e2e`) orders the commits
+//! end-to-end and both broadcasts drain.
 //!
 //! ```sh
-//! cargo run --release --example deadlock_demo            # with commit
-//! cargo run --release --example deadlock_demo -- --naive # watchdog fires
+//! cargo run --release --example deadlock_demo                      # exit 0
+//! cargo run --release --example deadlock_demo -- --naive           # exit 2
+//! cargo run --release --example deadlock_demo -- --interlevel      # exit 2
+//! cargo run --release --example deadlock_demo -- --interlevel --e2e # exit 0
 //! ```
 
 use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
+use axi_mcast::axi::golden::SimSlave;
 use axi_mcast::axi::mcast::AddrSet;
-use axi_mcast::axi::types::{AwBeat, LinkId, WBeat};
+use axi_mcast::axi::topology::{build_tree, EndpointMap, FabricParams, TreeSpec};
+use axi_mcast::axi::types::{AwBeat, LinkId, LinkPool, WBeat};
 use axi_mcast::axi::xbar::{Xbar, XbarCfg};
 use axi_mcast::util::cli::Args;
+
+const BASE: u64 = 0x0100_0000;
+const STRIDE: u64 = 0x4_0000;
+const BEATS: u32 = 16;
 
 struct Master {
     idx: usize,
@@ -21,15 +40,55 @@ struct Master {
     got_b: bool,
 }
 
-fn main() -> Result<(), String> {
-    let args = Args::parse(std::env::args().skip(1))?;
-    let naive = args.flag("naive");
+impl Master {
+    fn new(idx: usize, link: LinkId, txn: u64) -> Master {
+        Master {
+            idx,
+            link,
+            to_send: BEATS,
+            txn,
+            started: false,
+            got_b: false,
+        }
+    }
 
+    /// Issue the AW once, stream W beats, collect the joined B.
+    fn step(&mut self, pool: &mut LinkPool, dest: AddrSet) {
+        if !self.started && pool[self.link].aw.can_push() {
+            self.started = true;
+            pool[self.link].aw.push(AwBeat {
+                id: 0,
+                dest,
+                beats: BEATS,
+                beat_bytes: 64,
+                is_mcast: true,
+                exclude: None,
+                src: self.idx,
+                txn: self.txn,
+                ticket: None,
+            });
+        }
+        if self.started && self.to_send > 0 && pool[self.link].w.can_push() {
+            self.to_send -= 1;
+            pool[self.link].w.push(WBeat {
+                last: self.to_send == 0,
+                src: self.idx,
+                txn: self.txn,
+            });
+        }
+        if pool[self.link].b.pop().is_some() {
+            self.got_b = true;
+        }
+    }
+}
+
+/// Fig. 2e: one crossbar, commit protocol on/off.
+fn run_single(naive: bool) -> Result<(), String> {
     let rules: Vec<AddrRule> = (0..2)
         .map(|i| {
             AddrRule::new(
-                0x0100_0000 + i as u64 * 0x4_0000,
-                0x0100_0000 + (i as u64 + 1) * 0x4_0000,
+                BASE + i as u64 * STRIDE,
+                BASE + (i as u64 + 1) * STRIDE,
                 i,
                 &format!("slave{i}"),
             )
@@ -49,39 +108,19 @@ fn main() -> Result<(), String> {
     xbar.mux[0].rr_mcast = 0;
     xbar.mux[1].rr_mcast = 1;
 
-    let both = AddrSet::new(0x0100_0000, 0x4_0000); // slaves {0,1}
+    let both = AddrSet::new(BASE, STRIDE); // slaves {0,1}
     let s_links = xbar.s_links.clone();
     let mut masters = [
-        Master { idx: 0, link: xbar.m_links[0], to_send: 16, txn: 1, started: false, got_b: false },
-        Master { idx: 1, link: xbar.m_links[1], to_send: 16, txn: 2, started: false, got_b: false },
+        Master::new(0, xbar.m_links[0], 1),
+        Master::new(1, xbar.m_links[1], 2),
     ];
-    let mut slaves: Vec<axi_mcast::axi::golden::SimSlave> =
-        (0..2).map(axi_mcast::axi::golden::SimSlave::new).collect();
+    let mut slaves: Vec<SimSlave> = (0..2).map(SimSlave::new).collect();
 
     let mut last_move = 0u64;
     let mut moved_prev = 0u64;
     for cy in 0..5_000u64 {
         for m in masters.iter_mut() {
-            if !m.started && pool[m.link].aw.can_push() {
-                m.started = true;
-                pool[m.link].aw.push(AwBeat {
-                    id: 0,
-                    dest: both,
-                    beats: 16,
-                    beat_bytes: 64,
-                    is_mcast: true,
-                    exclude: None,
-                    src: m.idx,
-                    txn: m.txn,
-                });
-            }
-            if m.started && m.to_send > 0 && pool[m.link].w.can_push() {
-                m.to_send -= 1;
-                pool[m.link].w.push(WBeat { last: m.to_send == 0, src: m.idx, txn: m.txn });
-            }
-            if pool[m.link].b.pop().is_some() {
-                m.got_b = true;
-            }
+            m.step(&mut pool, both);
         }
         xbar.step(&mut pool);
         for (i, s) in slaves.iter_mut().enumerate() {
@@ -113,4 +152,98 @@ fn main() -> Result<(), String> {
         }
     }
     Err("demo did not converge".into())
+}
+
+/// `--interlevel`: the cross-level W-order cycle on a 2-level tree —
+/// the per-crossbar commit protocol is ON everywhere and still
+/// deadlocks; `--e2e` adds the fabric-wide reservation protocol.
+fn run_interlevel(e2e: bool) -> Result<(), String> {
+    let mut pool = LinkPool::new();
+    let spec = TreeSpec {
+        name: "interlevel".to_string(),
+        endpoints: EndpointMap {
+            base: BASE,
+            stride: STRIDE,
+            count: 4,
+        },
+        arity: vec![2, 2],
+        params: FabricParams {
+            e2e_mcast_order: e2e,
+            ..FabricParams::default()
+        },
+        services: Vec::new(),
+        n_root_masters: 0,
+    };
+    let t = build_tree(&mut pool, 2, &spec, |_, _| {});
+    let mut topo = t.topo;
+    println!(
+        "two concurrent ALL-endpoint broadcasts from different leaves on a \
+         2-level tree,\ncommit protocol enabled on every crossbar, end-to-end \
+         reservation {}",
+        if e2e { "ENABLED" } else { "disabled (RTL-faithful)" }
+    );
+
+    let all = AddrSet::new(BASE, 3 * STRIDE); // every endpoint
+    // one broadcaster per leaf: endpoints 0 (leaf 0) and 2 (leaf 1)
+    let mut masters = [
+        Master::new(0, t.endpoint_m[0], 1),
+        Master::new(0, t.endpoint_m[2], 2),
+    ];
+    let mut slaves: Vec<SimSlave> = (0..4).map(SimSlave::new).collect();
+
+    let mut last_move = 0u64;
+    let mut moved_prev = 0u64;
+    for cy in 0..50_000u64 {
+        for m in masters.iter_mut() {
+            m.step(&mut pool, all);
+        }
+        topo.step(&mut pool);
+        for (i, s) in slaves.iter_mut().enumerate() {
+            s.step(cy, &mut pool[t.endpoint_s[i]]);
+        }
+        pool.tick_all();
+        let moved = pool.moved_total();
+        if moved != moved_prev {
+            moved_prev = moved;
+            last_move = cy;
+        }
+        if masters.iter().all(|m| m.got_b) {
+            println!("both global broadcasts completed at cycle {cy} — no deadlock");
+            let stats = topo.stats_sum();
+            println!(
+                "  resv tickets: {}, resv waits: {}, commit waits: {}",
+                stats.resv_tickets, stats.resv_waits, stats.commit_waits
+            );
+            if let Some(h) = &topo.resv {
+                let r = h.borrow();
+                println!(
+                    "  ledger: {} reserved, {} claims committed, max {} live tickets",
+                    r.stats.reserved, r.stats.committed_claims, r.stats.max_live
+                );
+            }
+            return Ok(());
+        }
+        if cy - last_move > 2_000 {
+            println!("DEADLOCK detected: no beat moved since cycle {last_move}");
+            println!("  master A (ep0) W beats remaining: {}", masters[0].to_send);
+            println!("  master B (ep2) W beats remaining: {}", masters[1].to_send);
+            println!(
+                "  the root committed one broadcast first, the remote leaf the other —\n  \
+                 the W-order queues disagree ACROSS levels, a cycle no single\n  \
+                 crossbar's commit protocol can see (re-run with --e2e for the\n  \
+                 fabric-wide reservation protocol)"
+            );
+            std::process::exit(2);
+        }
+    }
+    Err("demo did not converge".into())
+}
+
+fn main() -> Result<(), String> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    if args.flag("interlevel") {
+        run_interlevel(args.flag("e2e"))
+    } else {
+        run_single(args.flag("naive"))
+    }
 }

@@ -61,6 +61,7 @@ fn main() {
         exclude: None,
         src: 0,
         txn: 1,
+        ticket: None,
     });
     let mut beats_left = 8;
     let mut b_at = None;

@@ -97,6 +97,7 @@ fn bench_xbar_16x16(cycles: u64, force_naive: bool) -> Row {
                     exclude: None,
                     src: m,
                     txn,
+                    ticket: None,
                 });
                 txn += 1;
             }

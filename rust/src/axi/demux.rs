@@ -295,6 +295,7 @@ mod tests {
             exclude: None,
             src: 0,
             txn,
+            ticket: None,
         }
     }
 

@@ -192,6 +192,7 @@ mod tests {
             exclude: None,
             src: 0,
             txn,
+            ticket: None,
         }
     }
 

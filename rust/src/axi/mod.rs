@@ -14,6 +14,9 @@
 //!   arbitration, the lock/commit protocol (fig. 2e deadlock avoidance).
 //! * [`xbar`] — the N×M crossbar composing demuxes and muxes, the
 //!   grant/commit fabric, and AR/R read routing.
+//! * [`resv`] — the fabric-wide two-phase reservation ledger lifting
+//!   lock/commit to end-to-end multicast ordering across hierarchy
+//!   levels (`XbarCfg::e2e_mcast_order`).
 //! * [`monitor`] — protocol checkers used by tests.
 //! * [`golden`] — reference memory model for traffic equivalence tests.
 //! * [`topology`] — declarative builder instantiating arbitrary
@@ -26,12 +29,14 @@ pub mod golden;
 pub mod mcast;
 pub mod monitor;
 pub mod mux;
+pub mod resv;
 pub mod topology;
 pub mod types;
 pub mod xbar;
 
 pub use addr_map::{AddrMap, AddrRule, McastDecode};
 pub use mcast::AddrSet;
+pub use resv::{ResvHandle, ResvLedger, ResvNode, ResvSeq};
 pub use topology::{Topology, TopologyBuilder, TopoShape};
 pub use types::*;
 pub use xbar::{Xbar, XbarCfg, XbarStats};

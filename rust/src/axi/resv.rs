@@ -1,0 +1,400 @@
+//! Fabric-wide two-phase reservation protocol for **end-to-end
+//! multicast ordering** (`XbarCfg::e2e_mcast_order`).
+//!
+//! The per-crossbar lock/commit protocol (fig. 2e) breaks multicast
+//! wait-for cycles *inside one crossbar*: a master must hold grants on
+//! every addressed mux before any leg forks. It cannot order commits
+//! *across* crossbars, so two simultaneous all-endpoint broadcasts from
+//! different sources may commit in opposite orders at different
+//! hierarchy levels — the top crossbar enqueues `[A, B]` in its W-order
+//! queues while a group crossbar enqueues `[B, A]` — and the W
+//! transport wedges on the inter-level cycle (the RTL's documented
+//! limitation, reproduced by `examples/deadlock_demo.rs --interlevel`).
+//!
+//! The [`ResvLedger`] lifts the protocol to the whole fabric:
+//!
+//! 1. **Acquire.** The *entry* crossbar (the first to accept a
+//!    multicast AW) reserves a globally ordered ticket. The ledger
+//!    walks the fork tree with the *same* routing decode the datapath
+//!    uses ([`XbarCfg::decode_aw`]) and claims every crossbar node the
+//!    request will traverse — the model equivalent of the acquire
+//!    travelling down the fork tree leg-by-leg on a side-band channel.
+//! 2. **Commit.** A crossbar may only commit (enqueue into its mux
+//!    W-order queues and fork) a ticketed AW when that ticket is at the
+//!    **front** of the crossbar's claim queue, i.e. when every older
+//!    conflicting multicast has already passed this node. Ticket order
+//!    is one global sequence, so any two multicasts that share a
+//!    crossbar commit there in the same relative order — every W-order
+//!    queue in the fabric agrees, the waits-for relation only points
+//!    from younger to older tickets, and no cycle can form.
+//! 3. **Release.** A ticket's claims are retired node-by-node as its AW
+//!    commits at each crossbar; grants themselves are re-arbitrated
+//!    every cycle and only the node's claim-front ticket may hold
+//!    them, so a later-ticket holder *backs off* (releases its
+//!    tentatively held muxes) instead of wedging the queues.
+//!    [`ResvLedger::release`] additionally unwinds all remaining
+//!    claims of an aborted ticket.
+//!
+//! The ledger is shared by every crossbar of one network through a
+//! [`ResvHandle`] (`Rc<RefCell<_>>` — the simulator is single-threaded)
+//! wired up by `TopologyBuilder::build` for trees and meshes alike.
+//! Reservation timing is modelled as a zero-latency side band; the
+//! per-node `mcast_commit_lat` handshake cost still applies at every
+//! level the AW traverses, which is where the RTL's grant-settle
+//! latency lives.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+use super::mcast::AddrSet;
+use super::xbar::XbarCfg;
+
+/// Globally ordered reservation sequence number (the ticket value
+/// carried in `AwBeat::ticket`).
+pub type ResvSeq = u64;
+
+/// Handle to a crossbar node registered with a [`ResvLedger`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResvNode(pub usize);
+
+/// Shared ledger handle (one per network).
+pub type ResvHandle = Rc<RefCell<ResvLedger>>;
+
+/// Routing snapshot of one registered crossbar.
+#[derive(Debug)]
+struct NodeInfo {
+    /// Clone of the crossbar's configuration — the traversal oracle
+    /// must mirror `Xbar`'s routing exactly, so it reuses
+    /// [`XbarCfg::decode_aw`] on the same map/scope/default data.
+    cfg: XbarCfg,
+    /// Per slave port: the downstream registered node that port feeds
+    /// (`None` = external endpoint, the fork leg leaves the fabric).
+    down: Vec<Option<ResvNode>>,
+}
+
+/// Ledger-level observability counters.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ResvStats {
+    /// Tickets issued.
+    pub reserved: u64,
+    /// Per-node claims retired by commits.
+    pub committed_claims: u64,
+    /// Claims unwound by [`ResvLedger::release`].
+    pub released_claims: u64,
+    /// High-water mark of concurrently live tickets — the concurrency
+    /// the protocol actually unlocked.
+    pub max_live: u64,
+}
+
+/// The fabric-wide reservation ledger (see the module docs).
+#[derive(Debug, Default)]
+pub struct ResvLedger {
+    nodes: Vec<NodeInfo>,
+    /// Per-node claim queue. Reservations are issued in global order
+    /// and claim all their nodes atomically, so every queue is sorted
+    /// ascending in seq; the front is the next ticket allowed to
+    /// commit at that node.
+    queues: Vec<VecDeque<ResvSeq>>,
+    /// Outstanding (uncommitted) claims per live ticket.
+    live: HashMap<ResvSeq, Vec<usize>>,
+    next_seq: ResvSeq,
+    pub stats: ResvStats,
+}
+
+impl ResvLedger {
+    pub fn new() -> ResvLedger {
+        ResvLedger {
+            next_seq: 1,
+            ..ResvLedger::default()
+        }
+    }
+
+    /// Wrap into the shared handle the crossbars hold.
+    pub fn into_handle(self) -> ResvHandle {
+        Rc::new(RefCell::new(self))
+    }
+
+    /// Register a crossbar node (its routing snapshot). Ports start
+    /// unwired (= external).
+    pub fn register(&mut self, cfg: &XbarCfg) -> ResvNode {
+        let down = vec![None; cfg.n_slaves];
+        self.nodes.push(NodeInfo {
+            cfg: cfg.clone(),
+            down,
+        });
+        self.queues.push(VecDeque::new());
+        ResvNode(self.nodes.len() - 1)
+    }
+
+    /// Declare that `from`'s slave port `s_port` feeds crossbar `to`
+    /// (mirrors `TopologyBuilder::connect`).
+    pub fn wire(&mut self, from: ResvNode, s_port: usize, to: ResvNode) {
+        let slot = &mut self.nodes[from.0].down[s_port];
+        assert!(
+            slot.is_none(),
+            "resv: node {} slave port {s_port} wired twice",
+            from.0
+        );
+        *slot = Some(to);
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Tickets still live (reserved, not fully committed/released).
+    pub fn live_tickets(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Outstanding claims queued at one node.
+    pub fn queue_len(&self, node: ResvNode) -> usize {
+        self.queues[node.0].len()
+    }
+
+    /// Acquire: issue the next global ticket for a multicast entering
+    /// the fabric at `entry` with destination set `dest` (and the
+    /// incoming exclude scope, normally `None` at an entry port), and
+    /// claim every crossbar its fork tree will traverse.
+    pub fn reserve(
+        &mut self,
+        entry: ResvNode,
+        dest: &AddrSet,
+        exclude: Option<(u64, u64)>,
+    ) -> ResvSeq {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let mut claims = Vec::new();
+        self.walk(entry.0, dest, exclude, &mut claims);
+        debug_assert!(!claims.is_empty());
+        for &n in &claims {
+            debug_assert!(
+                self.queues[n].back().map(|&b| b < seq).unwrap_or(true),
+                "claim queues must stay sorted"
+            );
+            self.queues[n].push_back(seq);
+        }
+        self.live.insert(seq, claims);
+        self.stats.reserved += 1;
+        self.stats.max_live = self.stats.max_live.max(self.live.len() as u64);
+        seq
+    }
+
+    /// The traversal oracle: replay the datapath's hop-by-hop decode.
+    /// Every visited node is claimed — including hops where the leg
+    /// degenerates to a single target (the beat takes the unicast
+    /// datapath there, which gates ticketed requests the same way) and
+    /// hops where the decode comes up empty (the DECERR acceptance
+    /// retires the claim).
+    fn walk(
+        &self,
+        node: usize,
+        dest: &AddrSet,
+        exclude: Option<(u64, u64)>,
+        out: &mut Vec<usize>,
+    ) {
+        assert!(
+            !out.contains(&node),
+            "resv: multicast route revisits node {} ({}) — cyclic fabrics \
+             are not orderable",
+            node,
+            self.nodes[node].cfg.name
+        );
+        out.push(node);
+        let (targets, _resp) = self.nodes[node].cfg.decode_aw(dest, exclude);
+        for t in targets.iter() {
+            if let Some(next) = self.nodes[node].down[t.slave] {
+                self.walk(next.0, &t.dest, t.exclude, out);
+            }
+        }
+    }
+
+    /// May `seq` commit at `node` now? True iff it is the oldest
+    /// uncommitted claim there.
+    pub fn is_front(&self, node: ResvNode, seq: ResvSeq) -> bool {
+        self.queues[node.0].front() == Some(&seq)
+    }
+
+    /// Commit: `node` forked (or DECERR-accepted) the ticketed AW;
+    /// retire its claim there. Panics on out-of-order commits — the
+    /// crossbar gating must only commit the front ticket.
+    pub fn commit(&mut self, node: ResvNode, seq: ResvSeq) {
+        let q = &mut self.queues[node.0];
+        assert_eq!(
+            q.front().copied(),
+            Some(seq),
+            "resv: out-of-order commit of ticket {seq} at node {} ({})",
+            node.0,
+            self.nodes[node.0].cfg.name
+        );
+        q.pop_front();
+        self.stats.committed_claims += 1;
+        let done = {
+            let claims = self
+                .live
+                .get_mut(&seq)
+                .expect("resv: commit of unknown ticket");
+            claims.retain(|&n| n != node.0);
+            claims.is_empty()
+        };
+        if done {
+            self.live.remove(&seq);
+        }
+    }
+
+    /// Release: unwind every remaining claim of `seq` (an aborted
+    /// acquire backs off without wedging any queue). No-op for a
+    /// ticket already fully committed.
+    ///
+    /// NOTE: the current datapath never aborts a reservation — the
+    /// protocol's live back-off is the grant re-arbitration (a
+    /// non-front requester simply holds nothing), and every claim
+    /// retires through [`ResvLedger::commit`]. This is the teardown
+    /// hook for a future abort path (e.g. reset/flush of an in-flight
+    /// multicast); it is exercised only by this module's unit tests.
+    /// Caution for that future caller: re-reserving after a release
+    /// keeps issuing fresh (larger) sequence numbers, so the
+    /// sorted-queue invariant is preserved — never re-insert a
+    /// released seq.
+    pub fn release(&mut self, seq: ResvSeq) {
+        if let Some(claims) = self.live.remove(&seq) {
+            for n in claims {
+                if let Some(pos) = self.queues[n].iter().position(|&s| s == seq) {
+                    self.queues[n].remove(pos);
+                    self.stats.released_claims += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::addr_map::{AddrMap, AddrRule};
+
+    const BASE: u64 = 0x0100_0000;
+    const STRIDE: u64 = 0x4_0000;
+
+    fn ep_rule(i: usize, slave: usize) -> AddrRule {
+        AddrRule::new(
+            BASE + i as u64 * STRIDE,
+            BASE + (i as u64 + 1) * STRIDE,
+            slave,
+            &format!("ep{i}"),
+        )
+        .with_mcast()
+    }
+
+    /// Two leaves of two endpoints each under one root — the smallest
+    /// fabric with an inter-level route.
+    fn tree_ledger() -> (ResvLedger, [ResvNode; 3]) {
+        let mut led = ResvLedger::new();
+        let mut leaves = Vec::new();
+        for g in 0..2usize {
+            let rules = vec![ep_rule(2 * g, 0), ep_rule(2 * g + 1, 1)];
+            let mut cfg = XbarCfg::new(
+                &format!("leaf{g}"),
+                3,
+                3,
+                AddrMap::new(rules, 3).unwrap(),
+            );
+            cfg.default_slave = Some(2);
+            cfg.local_scope = Some((
+                BASE + 2 * g as u64 * STRIDE,
+                BASE + 2 * (g as u64 + 1) * STRIDE,
+            ));
+            leaves.push(led.register(&cfg));
+        }
+        let rules = (0..2)
+            .map(|g| {
+                AddrRule::new(
+                    BASE + 2 * g as u64 * STRIDE,
+                    BASE + 2 * (g + 1) as u64 * STRIDE,
+                    g as usize,
+                    &format!("child{g}"),
+                )
+                .with_mcast()
+            })
+            .collect();
+        let root = led.register(&XbarCfg::new("root", 2, 2, AddrMap::new(rules, 2).unwrap()));
+        led.wire(leaves[0], 2, root);
+        led.wire(leaves[1], 2, root);
+        led.wire(root, 0, leaves[0]);
+        led.wire(root, 1, leaves[1]);
+        (led, [leaves[0], leaves[1], root])
+    }
+
+    fn all_eps() -> AddrSet {
+        AddrSet::new(BASE, 3 * STRIDE)
+    }
+
+    #[test]
+    fn reserve_claims_every_traversed_node() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        let seq = led.reserve(l0, &all_eps(), None);
+        // entry leaf + root + the sibling leaf; the source leaf is not
+        // revisited (the exclude scope prunes the echo at the root)
+        for n in [l0, root, l1] {
+            assert_eq!(led.queue_len(n), 1);
+            assert!(led.is_front(n, seq));
+        }
+        assert_eq!(led.live_tickets(), 1);
+    }
+
+    #[test]
+    fn local_multicast_claims_only_its_leaf() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        // endpoints {0,1} both live under leaf 0
+        let seq = led.reserve(l0, &AddrSet::new(BASE, STRIDE), None);
+        assert!(led.is_front(l0, seq));
+        assert_eq!(led.queue_len(root), 0);
+        assert_eq!(led.queue_len(l1), 0);
+    }
+
+    #[test]
+    fn tickets_commit_in_global_order_per_node() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        let a = led.reserve(l0, &all_eps(), None);
+        let b = led.reserve(l1, &all_eps(), None);
+        assert!(a < b, "tickets are globally ordered");
+        // b is blocked everywhere a still holds the front
+        assert!(!led.is_front(l1, b), "b entered after a claimed leaf 1");
+        led.commit(l0, a);
+        led.commit(root, a);
+        assert!(!led.is_front(l1, b));
+        led.commit(l1, a);
+        assert_eq!(led.live_tickets(), 1);
+        assert!(led.is_front(l1, b));
+        led.commit(l1, b);
+        led.commit(root, b);
+        led.commit(l0, b);
+        assert_eq!(led.live_tickets(), 0);
+        assert_eq!(led.stats.reserved, 2);
+        assert_eq!(led.stats.committed_claims, 6);
+        assert_eq!(led.stats.max_live, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order commit")]
+    fn out_of_order_commit_panics() {
+        let (mut led, [l0, l1, _root]) = tree_ledger();
+        let _a = led.reserve(l0, &all_eps(), None);
+        let b = led.reserve(l1, &all_eps(), None);
+        led.commit(l1, b); // a holds the front at leaf 1
+    }
+
+    #[test]
+    fn release_unwinds_remaining_claims() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        let a = led.reserve(l0, &all_eps(), None);
+        let b = led.reserve(l1, &all_eps(), None);
+        led.commit(l0, a);
+        led.release(a); // back off: root + leaf-1 claims unwind
+        assert!(led.is_front(root, b));
+        assert!(led.is_front(l1, b));
+        assert_eq!(led.live_tickets(), 1);
+        assert_eq!(led.stats.released_claims, 2);
+    }
+}

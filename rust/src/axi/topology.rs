@@ -14,7 +14,7 @@
 //!   `arity = [4, 8]` is the paper's Occamy group/top pair
 //!   (`occamy::noc::build_network` is one instance of it);
 //!   deeper arities give 3+-level hierarchies (the scope-merge rule in
-//!   `Xbar::decode_aw` keeps pruning exact).
+//!   `XbarCfg::decode_aw` keeps pruning exact).
 //! * [`build_mesh`] — a fully-connected mesh of peer crossbar tiles
 //!   with direct per-region routes (no default port, no scopes): a
 //!   multicast decomposes into per-tile mask-form subsets at the source
@@ -26,6 +26,7 @@
 //! against the flat golden reference.
 
 use super::addr_map::{AddrMap, AddrRule};
+use super::resv::{ResvHandle, ResvLedger, ResvNode};
 use super::types::{AxiLink, LinkId, LinkPool};
 use super::xbar::{Xbar, XbarCfg, XbarStats};
 use crate::sim::sched::Scheduler;
@@ -50,6 +51,10 @@ pub struct TopologyBuilder<'p> {
     nodes: Vec<NodeSpec>,
     ext_m: Vec<(String, LinkId)>,
     ext_s: Vec<(String, LinkId)>,
+    /// Inter-node wiring `(from, from_slave_port, to)` — mirrored into
+    /// the reservation ledger so its traversal oracle walks the same
+    /// graph the beats do.
+    edges: Vec<(NodeId, usize, NodeId)>,
 }
 
 impl<'p> TopologyBuilder<'p> {
@@ -61,6 +66,7 @@ impl<'p> TopologyBuilder<'p> {
             nodes: Vec::new(),
             ext_m: Vec::new(),
             ext_s: Vec::new(),
+            edges: Vec::new(),
         }
     }
 
@@ -107,6 +113,7 @@ impl<'p> TopologyBuilder<'p> {
         let l = self.fresh_link();
         self.bind_s(from, s_port, l);
         self.bind_m(to, m_port, l);
+        self.edges.push((from, s_port, to));
         l
     }
 
@@ -130,9 +137,31 @@ impl<'p> TopologyBuilder<'p> {
 
     /// Instantiate the crossbars. Panics on any unwired port — a
     /// topology with dangling ports would deadlock silently.
+    ///
+    /// When any node requests `XbarCfg::e2e_mcast_order`, a shared
+    /// [`ResvLedger`] is built over the whole graph (every node
+    /// registered, every [`TopologyBuilder::connect`] edge mirrored)
+    /// and attached to every crossbar — the fabric-wide reservation
+    /// protocol needs the complete routing graph no matter where a
+    /// multicast enters, for trees and meshes alike.
     pub fn build(self) -> Topology {
         let name = self.name;
-        let xbars: Vec<Xbar> = self
+        // The reservation protocol orders commits at EVERY node a
+        // multicast traverses: a flag-off node would neither stamp
+        // tickets nor respect claim order, wedging its neighbours.
+        // Mixed flags are a misconfiguration, refused loudly.
+        let n_e2e = self
+            .nodes
+            .iter()
+            .filter(|n| n.cfg.e2e_mcast_order)
+            .count();
+        assert!(
+            n_e2e == 0 || n_e2e == self.nodes.len(),
+            "{name}: e2e_mcast_order must be uniform across the topology \
+             ({n_e2e} of {} nodes set it)",
+            self.nodes.len()
+        );
+        let mut xbars: Vec<Xbar> = self
             .nodes
             .into_iter()
             .enumerate()
@@ -158,11 +187,26 @@ impl<'p> TopologyBuilder<'p> {
                 Xbar::new(spec.cfg, m, s)
             })
             .collect();
+        let resv = if xbars.iter().any(|x| x.cfg.e2e_mcast_order) {
+            let mut ledger = ResvLedger::new();
+            let nodes: Vec<ResvNode> = xbars.iter().map(|x| ledger.register(&x.cfg)).collect();
+            for &(from, s_port, to) in &self.edges {
+                ledger.wire(nodes[from.0], s_port, nodes[to.0]);
+            }
+            let handle = ledger.into_handle();
+            for (x, &node) in xbars.iter_mut().zip(&nodes) {
+                x.attach_resv(handle.clone(), node);
+            }
+            Some(handle)
+        } else {
+            None
+        };
         Topology {
             name,
             xbars,
             ext_m: self.ext_m,
             ext_s: self.ext_s,
+            resv,
         }
     }
 }
@@ -173,6 +217,10 @@ pub struct Topology {
     pub xbars: Vec<Xbar>,
     ext_m: Vec<(String, LinkId)>,
     ext_s: Vec<(String, LinkId)>,
+    /// The shared reservation ledger (present iff any node was built
+    /// with `e2e_mcast_order`) — exposed for observability: live
+    /// tickets, per-node claim queues, ledger stats.
+    pub resv: Option<ResvHandle>,
 }
 
 impl Topology {
@@ -303,6 +351,11 @@ pub struct FabricParams {
     /// §Perf reference mode: build the crossbars with their worklist /
     /// dense-table fast paths disabled (see `XbarCfg::force_naive`).
     pub force_naive: bool,
+    /// Fabric-wide two-phase reservation protocol
+    /// (`XbarCfg::e2e_mcast_order`): [`TopologyBuilder::build`] wires a
+    /// shared [`ResvLedger`] across every node, unlocking concurrent
+    /// global multicasts. Off = the RTL-faithful per-crossbar protocol.
+    pub e2e_mcast_order: bool,
 }
 
 impl Default for FabricParams {
@@ -312,6 +365,7 @@ impl Default for FabricParams {
             commit_protocol: true,
             mcast_w_cooldown: 1,
             force_naive: false,
+            e2e_mcast_order: false,
         }
     }
 }
@@ -322,6 +376,7 @@ impl FabricParams {
         cfg.commit_protocol = self.commit_protocol;
         cfg.mcast_w_cooldown = self.mcast_w_cooldown;
         cfg.force_naive = self.force_naive;
+        cfg.e2e_mcast_order = self.e2e_mcast_order;
     }
 }
 
@@ -823,6 +878,52 @@ mod tests {
         assert_eq!(t.topo.xbars[0].cfg.n_masters, 5);
         assert_eq!(t.topo.xbars[1].cfg.n_masters, 5);
         assert_eq!(t.topo.ext_slave("llc"), t.service_s[0]);
+    }
+
+    #[test]
+    fn e2e_params_wire_a_shared_ledger_on_trees_and_meshes() {
+        for shape in [
+            TopoShape::Tree { arity: vec![2, 4] },
+            TopoShape::Mesh { tiles: 2 },
+            TopoShape::Flat,
+        ] {
+            let mut pool = LinkPool::new();
+            let params = FabricParams {
+                e2e_mcast_order: true,
+                ..FabricParams::default()
+            };
+            let t = build_shape(&mut pool, 2, eps(8), params, &shape);
+            let h = t.topo.resv.as_ref().expect("e2e params must build a ledger");
+            assert_eq!(h.borrow().n_nodes(), t.topo.xbars.len(), "{shape:?}");
+            assert!(t.topo.xbars.iter().all(|x| x.cfg.e2e_mcast_order));
+        }
+        // and the default stays the RTL-faithful per-crossbar protocol
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(8),
+            FabricParams::default(),
+            &TopoShape::Flat,
+        );
+        assert!(t.topo.resv.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "e2e_mcast_order must be uniform")]
+    fn mixed_e2e_flags_are_refused() {
+        let mut pool = LinkPool::new();
+        let mut b = TopologyBuilder::new("mixed", &mut pool, 2);
+        let rules = vec![AddrRule::new(0, 0x1000, 0, "r0").with_mcast()];
+        let mut c0 = XbarCfg::new("a", 1, 1, AddrMap::new(rules.clone(), 1).unwrap());
+        c0.e2e_mcast_order = true;
+        let c1 = XbarCfg::new("b", 1, 1, AddrMap::new(rules, 1).unwrap());
+        let n0 = b.node(c0);
+        let n1 = b.node(c1);
+        b.ext_master(n0, 0, "m0");
+        b.connect(n0, 0, n1, 0);
+        b.ext_slave(n1, 0, "s0");
+        b.build();
     }
 
     #[test]

@@ -92,6 +92,15 @@ pub struct AwBeat {
     pub src: usize,
     /// Global transaction tag.
     pub txn: Txn,
+    /// Fabric-wide reservation ticket (end-to-end multicast ordering,
+    /// `XbarCfg::e2e_mcast_order`): stamped by the entry crossbar when
+    /// the two-phase reservation protocol is active and carried on
+    /// every forwarded leg, so downstream crossbars gate their commit
+    /// on the fabric-wide claim order (see `axi::resv`). `None` on
+    /// plain unicast traffic and whenever the protocol is off — the
+    /// RTL equivalent is a small side-band tag in `aw_user` next to
+    /// the multicast mask.
+    pub ticket: Option<u64>,
 }
 
 impl AwBeat {
@@ -292,6 +301,7 @@ mod tests {
             exclude: None,
             src: 0,
             txn: 1,
+            ticket: None,
         });
         l.tick();
         assert_eq!(l.moved(), 0);

@@ -33,6 +33,24 @@
 //! route into log₂-many aligned mask-form rules; deliveries and beat
 //! counts are identical (see DESIGN.md §2).
 //!
+//! ## End-to-end multicast ordering (`XbarCfg::e2e_mcast_order`)
+//!
+//! The per-crossbar commit protocol above cannot order commits *across*
+//! crossbars: two concurrent global multicasts may enter the W-order
+//! queues of different hierarchy levels in opposite orders and wedge on
+//! the resulting inter-level cycle (the RTL's documented limitation).
+//! With `e2e_mcast_order` the lock/commit machinery becomes one leg of
+//! a fabric-wide two-phase reservation protocol ([`super::resv`]): the
+//! entry crossbar stamps a globally ordered ticket onto the AW and
+//! claims every node of the fork tree; grant arbitration admits only
+//! the node's claim-front ticket (every later requester backs off
+//! instead of holding muxes); and the commit in phase 6 additionally
+//! requires that same front condition — conflicting multicasts then
+//! commit in the same order at every crossbar they share, the waits-for
+//! relation only points from younger to older tickets, and concurrent
+//! global multicasts drain deadlock-free. Blocked cycles surface as
+//! [`XbarStats::resv_waits`] with exact `skip` replay.
+//!
 //! ## §Perf: allocation-free, O(active) hot paths
 //!
 //! * B/R owner lookup goes through a dense open-addressed
@@ -57,6 +75,7 @@ use super::addr_map::AddrMap;
 use super::demux::{Demux, PendingAw, Stall, TargetAw, TargetVec};
 use super::mcast::AddrSet;
 use super::mux::Mux;
+use super::resv::{ResvHandle, ResvNode, ResvSeq};
 use super::types::{
     AwBeat, AxiLink, LinkId, LinkPool, RBeat, Resp, SlaveVec, Txn, WBeat, FORK_INLINE,
 };
@@ -65,8 +84,10 @@ use crate::sim::Cycle;
 use crate::util::dense::TxnTable;
 use crate::util::inline_vec::InlineVec;
 
-/// Crossbar configuration.
-#[derive(Debug)]
+/// Crossbar configuration. `Clone` so the reservation ledger
+/// (`axi::resv`) can snapshot the routing data its traversal oracle
+/// replays.
+#[derive(Debug, Clone)]
 pub struct XbarCfg {
     pub name: String,
     pub n_masters: usize,
@@ -106,6 +127,17 @@ pub struct XbarCfg {
     /// behaviour. Simulated cycles and stats are bit-identical either
     /// way (`tests/perf_parity.rs`).
     pub force_naive: bool,
+    /// End-to-end multicast ordering: lift the lock/commit protocol
+    /// from a per-crossbar mechanism to the fabric-wide two-phase
+    /// reservation protocol (`axi::resv`), which orders conflicting
+    /// multicasts consistently across hierarchy levels and thereby
+    /// allows *concurrent global* multicasts the RTL-faithful fabric
+    /// must serialise. Off by default (the paper's reference
+    /// behaviour). The flag only takes effect once a ledger is
+    /// attached ([`Xbar::attach_resv`], done by
+    /// `TopologyBuilder::build` for every shape) and requires
+    /// `commit_protocol`.
+    pub e2e_mcast_order: bool,
 }
 
 impl XbarCfg {
@@ -124,7 +156,112 @@ impl XbarCfg {
             mcast_commit_lat: 8,
             mcast_w_cooldown: 1,
             force_naive: false,
+            e2e_mcast_order: false,
         }
+    }
+
+    /// Decode an AW's destination set into fork targets, honouring the
+    /// exclude scope and the default route. Lives on the config (pure
+    /// in the routing data) so the reservation ledger's traversal
+    /// oracle (`axi::resv`) replays *exactly* the datapath's decode.
+    pub fn decode_aw(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (TargetVec, Resp) {
+        // fast path: plain unicast
+        if dest.is_singleton() {
+            if let Some(s) = self.map.decode_unicast(dest.addr) {
+                let mut t = TargetVec::new();
+                t.push(TargetAw {
+                    slave: s,
+                    dest: *dest,
+                    exclude: None,
+                });
+                return (t, Resp::Okay);
+            }
+            if let Some(up) = self.default_slave {
+                let mut t = TargetVec::new();
+                t.push(TargetAw {
+                    slave: up,
+                    dest: *dest,
+                    exclude: None,
+                });
+                return (t, Resp::Okay);
+            }
+            return (TargetVec::new(), Resp::DecErr);
+        }
+
+        if !self.mcast_enabled {
+            // baseline XBAR: masked requests are illegal
+            return (TargetVec::new(), Resp::DecErr);
+        }
+
+        let d = self.map.decode(dest);
+        let mut targets = TargetVec::new();
+        let mut excl_in_rules = 0u64;
+        for (s, sub) in &d.targets {
+            if let Some((es, ee)) = exclude {
+                if sub.base() >= es && sub.top() < ee {
+                    // already served upstream of this hop
+                    excl_in_rules += sub.count();
+                    continue;
+                }
+            }
+            targets.push(TargetAw {
+                slave: *s,
+                dest: *sub,
+                exclude: None,
+            });
+        }
+        // addresses excluded but not matched by local rules
+        let n_excl = match exclude {
+            Some((es, ee)) => AddrSet::from_interval(es, ee)
+                .ok()
+                .and_then(|e| dest.intersect(&e))
+                .map(|i| i.count())
+                .unwrap_or(0),
+            None => 0,
+        };
+        let excl_unmatched = n_excl.saturating_sub(excl_in_rules);
+        let remainder = d.uncovered.saturating_sub(excl_unmatched);
+        let mut resp0 = Resp::Okay;
+        if remainder > 0 {
+            match self.default_slave {
+                Some(up) => {
+                    // Forward the original set up, extending the scope.
+                    // Nested scopes merge to the outer region: in a
+                    // well-formed hierarchy the incoming exclude (served
+                    // at a lower level) is contained in this crossbar's
+                    // local scope, and the union of "already served"
+                    // addresses is exactly the outer aligned region.
+                    // Disjoint scopes (a malformed topology) stay
+                    // unrepresentable.
+                    let scope = match (exclude, self.local_scope) {
+                        (None, s) => s,
+                        (e @ Some(_), None) => e,
+                        (Some((es, ee)), Some((ls, le))) => {
+                            if ls <= es && ee <= le {
+                                Some((ls, le))
+                            } else if es <= ls && le <= ee {
+                                Some((es, ee))
+                            } else {
+                                panic!(
+                                    "xbar {}: disjoint exclude scopes \
+                                     [{es:#x},{ee:#x}) vs local [{ls:#x},{le:#x}) \
+                                     are not representable (scopes must nest)",
+                                    self.name
+                                )
+                            }
+                        }
+                    };
+                    targets.push(TargetAw {
+                        slave: up,
+                        dest: *dest,
+                        exclude: scope,
+                    });
+                }
+                None => resp0 = Resp::DecErr,
+            }
+        }
+        targets.sort_by_key(|t| t.slave);
+        (targets, resp0)
     }
 }
 
@@ -148,6 +285,17 @@ pub struct XbarStats {
     /// entering, `fanout - 1` additional beats leave. Invariant checked
     /// by the integration suites: `w_beats_out == w_beats_in + w_fork_extra`.
     pub w_fork_extra: u64,
+    /// Fabric-wide reservation tickets issued at this crossbar (it was
+    /// the multicast's entry node). Only nonzero with
+    /// `XbarCfg::e2e_mcast_order`.
+    pub resv_tickets: u64,
+    /// Cycles a pending ticketed AW spent blocked on the fabric-wide
+    /// reservation order (its ticket not yet at the front of this
+    /// node's claim queue) — the new stall reason of the two-phase
+    /// protocol, replayed bit-identically by `Xbar::skip`.
+    pub resv_waits: u64,
+    /// Claims retired at this crossbar (ticketed AWs committed here).
+    pub resv_commits: u64,
 }
 
 impl XbarStats {
@@ -167,6 +315,9 @@ impl XbarStats {
         self.stall_id_conflict += o.stall_id_conflict;
         self.stall_mcast_order += o.stall_mcast_order;
         self.w_fork_extra += o.w_fork_extra;
+        self.resv_tickets += o.resv_tickets;
+        self.resv_waits += o.resv_waits;
+        self.resv_commits += o.resv_commits;
     }
 }
 
@@ -220,6 +371,10 @@ pub struct Xbar {
     /// DECERR read responses being generated: (master, id, txn, beats).
     /// VecDeque so the common front-completion removal is O(1).
     decerr_r: VecDeque<(usize, u16, Txn, u32)>,
+    /// Fabric-wide reservation ledger handle + this crossbar's node id
+    /// (end-to-end multicast ordering; `None` = per-crossbar protocol
+    /// only, the RTL-faithful default).
+    resv: Option<(ResvHandle, ResvNode)>,
     pub stats: XbarStats,
 
     // ---- worklists (§Perf) ----
@@ -268,6 +423,7 @@ impl Xbar {
             wr_owner: TxnTable::new(force_naive),
             rd_owner: TxnTable::new(force_naive),
             decerr_r: VecDeque::new(),
+            resv: None,
             stats: XbarStats::default(),
             mask_pending: 0,
             mask_w: 0,
@@ -342,106 +498,37 @@ impl Xbar {
         }
     }
 
-    /// Decode an AW's destination set into fork targets, honouring the
-    /// exclude scope and the default route.
-    fn decode_aw(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (TargetVec, Resp) {
-        // fast path: plain unicast
-        if dest.is_singleton() {
-            if let Some(s) = self.cfg.map.decode_unicast(dest.addr) {
-                let mut t = TargetVec::new();
-                t.push(TargetAw {
-                    slave: s,
-                    dest: *dest,
-                    exclude: None,
-                });
-                return (t, Resp::Okay);
-            }
-            if let Some(up) = self.cfg.default_slave {
-                let mut t = TargetVec::new();
-                t.push(TargetAw {
-                    slave: up,
-                    dest: *dest,
-                    exclude: None,
-                });
-                return (t, Resp::Okay);
-            }
-            return (TargetVec::new(), Resp::DecErr);
-        }
+    /// Attach the fabric-wide reservation ledger (end-to-end multicast
+    /// ordering). `node` is this crossbar's identity inside the shared
+    /// ledger; `TopologyBuilder::build` wires this for every node of a
+    /// tree or mesh when any node requests `e2e_mcast_order`.
+    pub fn attach_resv(&mut self, handle: ResvHandle, node: ResvNode) {
+        self.resv = Some((handle, node));
+    }
 
-        if !self.cfg.mcast_enabled {
-            // baseline XBAR: masked requests are illegal
-            return (TargetVec::new(), Resp::DecErr);
-        }
+    /// Is the end-to-end reservation protocol active on this crossbar?
+    #[inline]
+    fn e2e(&self) -> bool {
+        self.cfg.e2e_mcast_order && self.cfg.commit_protocol && self.resv.is_some()
+    }
 
-        let d = self.cfg.map.decode(dest);
-        let mut targets = TargetVec::new();
-        let mut excl_in_rules = 0u64;
-        for (s, sub) in &d.targets {
-            if let Some((es, ee)) = exclude {
-                if sub.base() >= es && sub.top() < ee {
-                    // already served upstream of this hop
-                    excl_in_rules += sub.count();
-                    continue;
-                }
-            }
-            targets.push(TargetAw {
-                slave: *s,
-                dest: *sub,
-                exclude: None,
-            });
+    /// Is this (possibly absent) ticket at the front of this node's
+    /// fabric-wide claim queue? Unticketed requests are never gated.
+    #[inline]
+    fn resv_front(&self, ticket: Option<ResvSeq>) -> bool {
+        match (&self.resv, ticket) {
+            (Some((h, node)), Some(seq)) => h.borrow().is_front(*node, seq),
+            _ => true,
         }
-        // addresses excluded but not matched by local rules
-        let n_excl = match exclude {
-            Some((es, ee)) => AddrSet::from_interval(es, ee)
-                .ok()
-                .and_then(|e| dest.intersect(&e))
-                .map(|i| i.count())
-                .unwrap_or(0),
-            None => 0,
-        };
-        let excl_unmatched = n_excl.saturating_sub(excl_in_rules);
-        let remainder = d.uncovered.saturating_sub(excl_unmatched);
-        let mut resp0 = Resp::Okay;
-        if remainder > 0 {
-            match self.cfg.default_slave {
-                Some(up) => {
-                    // Forward the original set up, extending the scope.
-                    // Nested scopes merge to the outer region: in a
-                    // well-formed hierarchy the incoming exclude (served
-                    // at a lower level) is contained in this crossbar's
-                    // local scope, and the union of "already served"
-                    // addresses is exactly the outer aligned region.
-                    // Disjoint scopes (a malformed topology) stay
-                    // unrepresentable.
-                    let scope = match (exclude, self.cfg.local_scope) {
-                        (None, s) => s,
-                        (e @ Some(_), None) => e,
-                        (Some((es, ee)), Some((ls, le))) => {
-                            if ls <= es && ee <= le {
-                                Some((ls, le))
-                            } else if es <= ls && le <= ee {
-                                Some((es, ee))
-                            } else {
-                                panic!(
-                                    "xbar {}: disjoint exclude scopes \
-                                     [{es:#x},{ee:#x}) vs local [{ls:#x},{le:#x}) \
-                                     are not representable (scopes must nest)",
-                                    self.cfg.name
-                                )
-                            }
-                        }
-                    };
-                    targets.push(TargetAw {
-                        slave: up,
-                        dest: *dest,
-                        exclude: scope,
-                    });
-                }
-                None => resp0 = Resp::DecErr,
-            }
+    }
+
+    /// Retire this node's claim of a committed ticket.
+    fn resv_commit(&mut self, ticket: Option<ResvSeq>) {
+        if let Some(seq) = ticket {
+            let (h, node) = self.resv.clone().expect("ticketed beat without a ledger");
+            h.borrow_mut().commit(node, seq);
+            self.stats.resv_commits += 1;
         }
-        targets.sort_by_key(|t| t.slave);
-        (targets, resp0)
     }
 
     /// One clock cycle. `pool` is the shared link pool.
@@ -621,7 +708,7 @@ impl Xbar {
             // cycle but decoded only once
             let hit = xb.dec_cache[m].as_ref().is_some_and(|c| c.txn == txn);
             if !hit {
-                let (targets, resp0) = xb.decode_aw(&dest, exclude);
+                let (targets, resp0) = xb.cfg.decode_aw(&dest, exclude);
                 xb.dec_cache[m] = Some(DecCache {
                     txn,
                     targets,
@@ -655,6 +742,23 @@ impl Xbar {
                 xb.stats.aw_unicast += 1;
             }
             let cache = xb.dec_cache[m].take().unwrap();
+            // Fabric-wide reservation acquire (e2e ordering): the entry
+            // crossbar — the first to see the multicast, before any leg
+            // carries a ticket — claims every node of the fork tree and
+            // stamps the globally ordered ticket onto the beat. Demoted
+            // single-target requests still reserve: the set can fan out
+            // again downstream. Unroutable requests stay unticketed
+            // (their DECERR acceptance never forks anywhere).
+            if xb.e2e()
+                && beat.ticket.is_none()
+                && mcast_req
+                && dest.count() > 1
+                && !cache.targets.is_empty()
+            {
+                let (h, node) = xb.resv.clone().unwrap();
+                beat.ticket = Some(h.borrow_mut().reserve(node, &dest, exclude));
+                xb.stats.resv_tickets += 1;
+            }
             if cache.resp0 == Resp::DecErr && cache.targets.is_empty() {
                 xb.stats.decerr += 1;
             }
@@ -712,6 +816,36 @@ impl Xbar {
             return;
         }
         self.grants_live = true;
+        if self.e2e() {
+            // Fabric-ordered arbitration (two-phase reservation): only
+            // the ticket at the front of this node's claim queue may
+            // hold muxes; every other requester *backs off* (releases
+            // its tentatively acquired legs on this re-arbitration)
+            // until its fabric-wide turn. Tickets are unique, so at
+            // most one pending per node is front — this is the lzc
+            // encoder degenerated to the global reservation order. A
+            // non-front multicast holding grants would block the
+            // unicast datapath (`Mux::mcast_active`) that the front
+            // ticket's single-target legs ride, recreating exactly the
+            // cross-path cycle end-to-end ordering exists to break.
+            // One shared scan for both the optimised and `force_naive`
+            // modes keeps the parity suite trivially bit-identical.
+            // Tickets are unique, so the front holder is found once
+            // (one ledger probe per pending master, not per (s, m)
+            // pair) and then handed every mux it requests.
+            let front_m = (0..self.cfg.n_masters).find(|&m| {
+                let ticket = self.pending[m].as_ref().and_then(|p| p.pend.beat.ticket);
+                ticket.is_some() && self.resv_front(ticket)
+            });
+            for s in 0..self.cfg.n_slaves {
+                let grant = front_m.filter(|&m| self.wants_mcast(m, s));
+                self.mux[s].grant = grant;
+                if grant.is_some() {
+                    self.mux[s].grant_wait_cycles += 1;
+                }
+            }
+            return;
+        }
         if self.cfg.commit_protocol && self.cfg.n_slaves <= 64 {
             // bitmask fast path: one unforwarded-target mask per master,
             // then per-slave priority encode over single bits (O(N²)
@@ -774,6 +908,9 @@ impl Xbar {
             exclude: target.exclude,
             src: m,
             txn: beat.txn,
+            // the reservation ticket rides every forked leg, so each
+            // downstream crossbar gates on the same fabric-wide order
+            ticket: beat.ticket,
         };
         link.aw.push(fwd);
         mux.push_w_order(m, beat.txn);
@@ -790,32 +927,51 @@ impl Xbar {
         let nm = self.cfg.n_masters;
         let snapshot = self.mask_pending;
         self.for_each(snapshot, nm, pool, |xb, m, pool| {
-            let Some(entry) = xb.pending[m].as_mut() else {
-                return;
+            let (ticket, aged) = match xb.pending[m].as_mut() {
+                Some(e) if e.pend.beat.is_mcast => {
+                    e.age += 1;
+                    (e.pend.beat.ticket, e.age > xb.cfg.mcast_commit_lat)
+                }
+                _ => return,
             };
-            if !entry.pend.beat.is_mcast {
-                return;
+            // e2e ordering: one reservation wait per cycle while this
+            // node's claim front belongs to an older ticket (the
+            // predicate `Xbar::skip` replays over bulk-advanced spans)
+            let front = xb.resv_front(ticket);
+            if ticket.is_some() && !front {
+                xb.stats.resv_waits += 1;
             }
-            entry.age += 1;
-            if entry.age <= xb.cfg.mcast_commit_lat {
+            if !aged {
                 xb.stats.commit_waits += 1;
                 return;
             }
             let entry = xb.pending[m].as_ref().unwrap();
             if entry.pend.targets.is_empty() {
+                if !front {
+                    // a ticketed leg that decodes to nothing here still
+                    // takes its fabric-wide turn before the DECERR
+                    // acceptance retires its claim
+                    xb.stats.commit_waits += 1;
+                    return;
+                }
                 // unroutable mcast: accept so W drains, B = DECERR
                 let entry = xb.pending[m].take().unwrap();
                 xb.note_pending(m, false);
                 xb.n_pending_mcast -= 1;
                 xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
                 xb.note_w(m);
+                xb.resv_commit(ticket);
                 return;
             }
             if xb.cfg.commit_protocol {
                 // all-or-nothing: every target granted to m and pushable
-                let all_ready = entry.pend.targets.iter().all(|t| {
-                    xb.mux[t.slave].grant == Some(m) && pool[xb.s_links[t.slave]].aw.can_push()
-                });
+                // — and, under e2e ordering, the fabric-wide claim front
+                // held (commit only fires once every transitive leg of
+                // the fork tree is this ticket's to take)
+                let all_ready = front
+                    && entry.pend.targets.iter().all(|t| {
+                        xb.mux[t.slave].grant == Some(m) && pool[xb.s_links[t.slave]].aw.can_push()
+                    });
                 if !all_ready {
                     xb.stats.commit_waits += 1;
                     return;
@@ -837,6 +993,7 @@ impl Xbar {
                 }
                 xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
                 xb.note_w(m);
+                xb.resv_commit(ticket);
             } else {
                 // NO deadlock avoidance: fork each leg as it is granted
                 let entry = xb.pending[m].as_mut().unwrap();
@@ -884,24 +1041,33 @@ impl Xbar {
         let nm = self.cfg.n_masters;
         let snapshot = self.mask_pending;
         self.for_each(snapshot, nm, pool, |xb, m, _pool| {
-            xb.scratch_want[m] = xb.pending[m].as_ref().and_then(|p| {
-                if p.pend.beat.is_mcast {
-                    None
-                } else {
-                    p.pend.targets.first().map(|t| t.slave)
-                }
-            });
+            let (want, ticket, unroutable) = match xb.pending[m].as_ref() {
+                Some(p) if !p.pend.beat.is_mcast => (
+                    p.pend.targets.first().map(|t| t.slave),
+                    p.pend.beat.ticket,
+                    p.pend.targets.is_empty(),
+                ),
+                _ => (None, None, false),
+            };
+            // e2e ordering: a ticketed leg that degenerated to a single
+            // target at this hop still rides the unicast datapath, but
+            // must wait for its fabric-wide turn like any other claim —
+            // otherwise two multicasts could enqueue in opposite orders
+            // at a pass-through crossbar and rebuild the W-order cycle.
+            let front = xb.resv_front(ticket);
+            if ticket.is_some() && !front {
+                xb.stats.resv_waits += 1;
+            }
+            xb.scratch_want[m] = if front { want } else { None };
             any |= xb.scratch_want[m].is_some();
-            // unroutable unicast: accept immediately (W drains, DECERR B)
-            let unroutable = xb.pending[m]
-                .as_ref()
-                .map(|p| !p.pend.beat.is_mcast && p.pend.targets.is_empty())
-                .unwrap_or(false);
-            if unroutable {
+            // unroutable unicast: accept immediately (W drains, DECERR
+            // B), once any fabric-wide claim turn has come up
+            if unroutable && front {
                 let entry = xb.pending[m].take().unwrap();
                 xb.note_pending(m, false);
                 xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
                 xb.note_w(m);
+                xb.resv_commit(ticket);
                 xb.scratch_want[m] = None;
             }
         });
@@ -928,6 +1094,7 @@ impl Xbar {
                     );
                     self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
                     self.note_w(m);
+                    self.resv_commit(entry.pend.beat.ticket);
                     self.scratch_want[m] = None;
                 }
             }
@@ -1059,26 +1226,45 @@ impl Xbar {
             let Some(e) = &self.pending[m] else {
                 continue;
             };
+            let front = self.resv_front(e.pend.beat.ticket);
             if !e.pend.beat.is_mcast {
-                // unicast pending forwards (or completes) on the next
-                // step — never skip over it
-                fold(now);
+                // a unicast pending forwards (or completes) on the next
+                // step — unless e2e ordering holds its ticket behind an
+                // older claim, where only another crossbar's commit
+                // (that crossbar's own event) or port activity unblocks
+                // it
+                if front {
+                    fold(now);
+                }
             } else if e.age < lat {
                 // pure commit-handshake aging; first actionable step is
                 // the one entered with age == lat
                 fold(now + (lat - e.age) as u64);
             } else if e.pend.targets.is_empty() {
                 // aged unroutable mcast is accepted on the next step
-                fold(now);
-            } else if self.cfg.commit_protocol {
-                // grants are stable between steps: commit fires iff
-                // every target mux is granted to m (links idle ⇒ all
-                // AW channels pushable)
-                if e.pend.targets.iter().all(|t| self.mux[t.slave].grant == Some(m)) {
+                // (once its fabric-wide turn, if ticketed, has come up)
+                if front {
                     fold(now);
                 }
-                // else: unblocked only by another master's commit (its
-                // own event) or port activity
+            } else if self.cfg.commit_protocol {
+                if self.e2e() {
+                    // front-only grants: the next step's grant phase
+                    // hands the claim-front ticket every mux it wants
+                    // (no competitor is eligible) and the commit fires
+                    // right after (links idle ⇒ AW channels pushable),
+                    // so `front` alone predicts the action; the muxes'
+                    // current grants may be stale by one commit.
+                    if front {
+                        fold(now);
+                    }
+                } else if e.pend.targets.iter().all(|t| self.mux[t.slave].grant == Some(m)) {
+                    // grants are stable between steps: commit fires iff
+                    // every target mux is granted to m (links idle ⇒
+                    // all AW channels pushable)
+                    fold(now);
+                }
+                // else: unblocked only by this node's own front moving
+                // (a commit here — its own event) or port activity
             } else {
                 // no-commit mode forwards any granted unforwarded leg
                 let can_fork = e
@@ -1110,8 +1296,23 @@ impl Xbar {
             *c = (*c as u64).saturating_sub(k) as u32;
         }
         let lat = self.cfg.mcast_commit_lat as u64;
+        let e2e = self.e2e();
+        let resv = self.resv.clone();
+        let mut resv_blocked = 0u64;
         let mut any_mcast = false;
         for p in self.pending.iter_mut().flatten() {
+            // e2e ordering: a ticketed pending (multicast or a leg that
+            // degenerated to the unicast datapath) blocked behind an
+            // older claim counts one reservation wait per skipped cycle
+            // — the ledger is frozen over an action-free span, so the
+            // per-cycle predicate is stable and replayable
+            if e2e {
+                if let (Some((h, node)), Some(seq)) = (&resv, p.pend.beat.ticket) {
+                    if !h.borrow().is_front(*node, seq) {
+                        resv_blocked += 1;
+                    }
+                }
+            }
             if !p.pend.beat.is_mcast {
                 continue;
             }
@@ -1128,6 +1329,7 @@ impl Xbar {
             };
             self.stats.commit_waits += waits;
         }
+        self.stats.resv_waits += resv_blocked * k;
         if any_mcast {
             // the grant phase re-arbitrates to the same stable grants
             // each skipped cycle, counting one wait per granted mux

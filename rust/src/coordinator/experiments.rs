@@ -349,18 +349,24 @@ pub fn assert_topo_row_invariants(r: &TopoSweepRow) {
     }
 }
 
-/// One collectives comparison point: software baseline vs
-/// multicast-accelerated strategy for one `(op, shape)` pair.
+/// One collectives comparison point: software baseline vs the two
+/// multicast strategies (single global multicast / concurrent global
+/// multicasts on the e2e reservation protocol) for one `(op, shape)`
+/// pair.
 #[derive(Debug, Clone)]
 pub struct CollRow {
     pub sw: CollectiveResult,
     pub hw: CollectiveResult,
+    /// `hw-concurrent`: concurrent global multicasts, legal only with
+    /// `SocConfig::e2e_mcast_order` (the run enables it).
+    pub conc: CollectiveResult,
     pub speedup: f64,
+    pub speedup_conc: f64,
 }
 
 /// The collectives experiment: every requested op on every requested
-/// wide-network shape, software baseline vs multicast-accelerated
-/// schedule, with injected-beat and fork accounting per row.
+/// wide-network shape, software baseline vs both multicast schedules,
+/// with injected-beat, fork and reservation accounting per row.
 pub fn collectives(
     cfg: &SocConfig,
     ops: &[CollOp],
@@ -374,10 +380,13 @@ pub fn collectives(
         for &op in ops {
             let sw = run_collective(&cfg, op, CollMode::Sw, bytes);
             let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
+            let conc = run_collective(&cfg, op, CollMode::HwConc, bytes);
             rows.push(CollRow {
                 speedup: sw.cycles as f64 / hw.cycles as f64,
+                speedup_conc: sw.cycles as f64 / conc.cycles as f64,
                 sw,
                 hw,
+                conc,
             });
         }
     }
@@ -387,11 +396,13 @@ pub fn collectives(
         "KiB",
         "sw cyc",
         "hw cyc",
-        "speedup",
+        "conc cyc",
+        "hw spd",
+        "conc spd",
         "sw inj W",
         "hw inj W",
-        "mcast AWs",
-        "forked AWs",
+        "conc inj W",
+        "resv waits",
         "numerics",
     ]);
     for r in &rows {
@@ -401,12 +412,14 @@ pub fn collectives(
             (r.hw.bytes / 1024).to_string(),
             r.sw.cycles.to_string(),
             r.hw.cycles.to_string(),
+            r.conc.cycles.to_string(),
             fnum(r.speedup, 2),
+            fnum(r.speedup_conc, 2),
             r.sw.dma_w_beats.to_string(),
             r.hw.dma_w_beats.to_string(),
-            r.hw.wide.aw_mcast.to_string(),
-            r.hw.wide.aw_forks.to_string(),
-            if r.sw.numerics_ok && r.hw.numerics_ok {
+            r.conc.dma_w_beats.to_string(),
+            r.conc.wide.resv_waits.to_string(),
+            if r.sw.numerics_ok && r.hw.numerics_ok && r.conc.numerics_ok {
                 "OK"
             } else {
                 "FAIL"
@@ -424,17 +437,27 @@ pub fn collectives(
                     .set("bytes", r.hw.bytes)
                     .set("cycles_sw", r.sw.cycles)
                     .set("cycles_hw", r.hw.cycles)
+                    .set("cycles_conc", r.conc.cycles)
                     .set("speedup", r.speedup)
+                    .set("speedup_conc", r.speedup_conc)
                     .set("dma_w_beats_sw", r.sw.dma_w_beats)
                     .set("dma_w_beats_hw", r.hw.dma_w_beats)
+                    .set("dma_w_beats_conc", r.conc.dma_w_beats)
                     .set("aw_mcast", r.hw.wide.aw_mcast)
+                    .set("aw_mcast_conc", r.conc.wide.aw_mcast)
                     .set("aw_forks", r.hw.wide.aw_forks)
                     .set("w_beats_in_hw", r.hw.wide.w_beats_in)
                     .set("w_beats_out_hw", r.hw.wide.w_beats_out)
                     .set("w_fork_extra_hw", r.hw.wide.w_fork_extra)
+                    .set("resv_tickets_conc", r.conc.wide.resv_tickets)
+                    .set("resv_waits_conc", r.conc.wide.resv_waits)
                     .set("combines_sw", r.sw.combines)
                     .set("combines_hw", r.hw.combines)
-                    .set("numerics_ok", r.sw.numerics_ok && r.hw.numerics_ok);
+                    .set("combines_conc", r.conc.combines)
+                    .set(
+                        "numerics_ok",
+                        r.sw.numerics_ok && r.hw.numerics_ok && r.conc.numerics_ok,
+                    );
                 o
             })
             .collect(),
@@ -454,17 +477,27 @@ pub fn collectives_summary(rows: &[CollRow]) -> Json {
         if !s.is_empty() {
             o.set(&format!("{}_speedup_geomean", op.name()), geomean(&s));
         }
+        let c: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.conc.op == op)
+            .map(|r| r.speedup_conc)
+            .collect();
+        if !c.is_empty() {
+            o.set(&format!("{}_conc_speedup_geomean", op.name()), geomean(&c));
+        }
     }
     o
 }
 
-/// Sanity-check a [`CollRow`]: bit-exact numerics on both strategies,
+/// Sanity-check a [`CollRow`]: bit-exact numerics on every strategy,
 /// W fork accounting on every crossbar, no decode errors, and the
-/// multicast invariant — the hw strategy never *injects* more W beats
-/// into the fabric than the unicast baseline (the fork pays per-hop
-/// amplification, visible in `w_fork_extra`, never per-source cost).
+/// multicast invariant — neither multicast strategy ever *injects*
+/// more W beats into the fabric than the unicast baseline (the fork
+/// pays per-hop amplification, visible in `w_fork_extra`, never
+/// per-source cost). The concurrent strategy must additionally have
+/// drained its reservation ledger (every ticket committed everywhere).
 pub fn assert_coll_row_invariants(r: &CollRow) {
-    for run in [&r.sw, &r.hw] {
+    for run in [&r.sw, &r.hw, &r.conc] {
         assert!(
             run.numerics_ok,
             "{} {} on {}: result buffers diverge from the scalar reference",
@@ -489,13 +522,26 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
             run.shape
         );
     }
+    for run in [&r.hw, &r.conc] {
+        assert!(
+            run.dma_w_beats <= r.sw.dma_w_beats,
+            "{} {} on {}: injects more W beats than the baseline ({} > {})",
+            run.op.name(),
+            run.mode.name(),
+            run.shape,
+            run.dma_w_beats,
+            r.sw.dma_w_beats
+        );
+    }
+    // every issued ticket commits at least at its entry node (a run
+    // that completed cannot leave claims wedged in the ledger)
     assert!(
-        r.hw.dma_w_beats <= r.sw.dma_w_beats,
-        "{} on {}: hw strategy injects more W beats than the baseline ({} > {})",
-        r.hw.op.name(),
-        r.hw.shape,
-        r.hw.dma_w_beats,
-        r.sw.dma_w_beats
+        r.conc.wide.resv_commits >= r.conc.wide.resv_tickets,
+        "{} on {}: reservation tickets not fully drained ({} commits < {} tickets)",
+        r.conc.op.name(),
+        r.conc.shape,
+        r.conc.wide.resv_commits,
+        r.conc.wide.resv_tickets
     );
 }
 

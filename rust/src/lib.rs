@@ -32,9 +32,12 @@
 //! * [`axi`] — the paper's §II-A contribution: AXI channel types, the
 //!   mask-form multi-address encoding, the extended address decoder,
 //!   the multicast-capable N×M crossbar (demux fork / mux commit /
-//!   B-join / deadlock avoidance), and the topology subsystem building
-//!   arbitrary crossbar graphs (flat / K-ary trees / meshes, with
-//!   service windows on the root or host tile).
+//!   B-join / deadlock avoidance), the fabric-wide two-phase
+//!   reservation ledger ([`axi::resv`] — end-to-end multicast ordering
+//!   across hierarchy levels, unlocking concurrent global multicasts),
+//!   and the topology subsystem building arbitrary crossbar graphs
+//!   (flat / K-ary trees / meshes, with service windows on the root or
+//!   host tile).
 //! * [`occamy`] — the paper's §II-B substrate: Snitch-like clusters
 //!   with L1 SPM + DMA, LLC, wide (512-bit) and narrow (64-bit)
 //!   networks in any [`occamy::WideShape`], multicast interrupts and
@@ -45,9 +48,10 @@
 //!   (fig. 3c/3d), the roofline model, the topology-shape broadcast
 //!   sweep, and the collective-communication suite
 //!   ([`workloads::collectives`]: broadcast / all-gather /
-//!   reduce-scatter / all-reduce, software baselines vs
-//!   multicast-accelerated schedules with bit-exact reduction
-//!   validation).
+//!   reduce-scatter / all-reduce; software baselines vs
+//!   single-multicast vs `hw-concurrent` schedules — N simultaneous
+//!   global multicasts on the reservation protocol — with bit-exact
+//!   reduction validation).
 //! * [`area`] — §III-A analytical gate-count/timing model (fig. 3a).
 //! * [`runtime`] — PJRT CPU client loading the AOT JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) for functional numerics

@@ -82,7 +82,10 @@ const CMDS: &[CmdSpec] = &[
             ("size", "vector size per collective (default 8KiB)"),
             ("clusters", "cluster count, power of two (default 32)"),
             ("shape", "all | groups | flat | mesh (wide-network topology, default all)"),
-            ("mode", "both | sw | hw (default both; both also prints speedups)"),
+            (
+                "mode",
+                "both | sw | hw | hw-concurrent (default both; both also prints speedups)",
+            ),
             ("out", "results directory"),
         ],
     },
@@ -213,7 +216,7 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
     // the library's footprint assert
     let layout = axi_mcast::workloads::collectives::CollLayout::new(&cfg, bytes);
     for &op in &ops {
-        let fp = [CollMode::Sw, CollMode::Hw]
+        let fp = CollMode::ALL
             .into_iter()
             .map(|m| layout.footprint(op, m))
             .max()
@@ -245,7 +248,8 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
             let (rows, table, json) = collectives(&cfg, &ops, &shapes, bytes);
             let summary = collectives_summary(&rows);
             r.table(
-                "Collective operations: software baseline vs hw-multicast schedule",
+                "Collective operations: software baseline vs hw-multicast vs \
+                 hw-concurrent (e2e reservation) schedules",
                 &table,
             );
             r.section("Speedup summary (geomean over shapes)", &summary.pretty());
@@ -254,7 +258,7 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
         }
         m => {
             let mode = CollMode::parse(m)
-                .ok_or_else(|| format!("unknown --mode '{m}' (both|sw|hw)"))?;
+                .ok_or_else(|| format!("unknown --mode '{m}' (both|sw|hw|hw-concurrent)"))?;
             let mut table = axi_mcast::util::table::Table::new(&[
                 "op", "shape", "KiB", "cycles", "inj W", "mcast AWs", "numerics",
             ]);

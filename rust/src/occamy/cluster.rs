@@ -284,6 +284,7 @@ impl Cluster {
                         exclude: None,
                         src: 0,
                         txn,
+                        ticket: None,
                     });
                     narrow_lsu.w.push(WBeat {
                         last: true,
@@ -309,6 +310,7 @@ impl Cluster {
                         exclude: None,
                         src: 0,
                         txn,
+                        ticket: None,
                     });
                     narrow_lsu.w.push(WBeat {
                         last: true,
@@ -512,6 +514,7 @@ mod tests {
             exclude: None,
             src: 0,
             txn: 99,
+            ticket: None,
         });
         links[3].w.push(WBeat {
             last: true,

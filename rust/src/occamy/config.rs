@@ -112,6 +112,14 @@ pub struct SocConfig {
     pub narrow_mcast: bool,
     /// Commit-based deadlock avoidance (leave on; off reproduces 2e).
     pub commit_protocol: bool,
+    /// End-to-end multicast ordering: the fabric-wide two-phase
+    /// reservation protocol (`axi::resv`) on *both* networks, which
+    /// orders conflicting multicasts consistently across hierarchy
+    /// levels and unlocks concurrent global multicasts (the
+    /// `hw-concurrent` collective schedules). Off = the RTL-faithful
+    /// fabric, where concurrent global broadcasts hit the documented
+    /// inter-level W-order deadlock and software must serialise them.
+    pub e2e_mcast_order: bool,
     /// Multicast W-fork cooldown cycles (see `XbarCfg::mcast_w_cooldown`;
     /// 1 = the RTL-calibrated registered fork, 0 = idealised ablation).
     pub mcast_w_cooldown: u32,
@@ -150,6 +158,7 @@ impl Default for SocConfig {
             wide_mcast: true,
             narrow_mcast: true,
             commit_protocol: true,
+            e2e_mcast_order: false,
             mcast_w_cooldown: 1,
             force_naive: false,
         }

@@ -261,6 +261,7 @@ impl DmaEngine {
                     exclude: None,
                     src: 0,
                     txn,
+                    ticket: None,
                 });
                 a.w_stream.push_back((txn, beats));
                 a.b_pending += 1;

@@ -50,6 +50,9 @@ pub struct Network {
     pub service_s: LinkId,
     /// Narrow only: the barrier unit's own master port into the top.
     pub ext_m: Option<LinkId>,
+    /// Fabric-wide reservation ledger (present iff
+    /// `SocConfig::e2e_mcast_order` — end-to-end multicast ordering).
+    pub resv: Option<crate::axi::resv::ResvHandle>,
 }
 
 impl Network {
@@ -119,6 +122,10 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         commit_protocol: cfg.commit_protocol,
         mcast_w_cooldown: cfg.mcast_w_cooldown,
         force_naive: cfg.force_naive,
+        // both networks get the reservation fabric: concurrent data
+        // multicasts need it on the wide network, their concurrent
+        // notify-interrupt multicasts on the narrow one
+        e2e_mcast_order: cfg.e2e_mcast_order,
     };
     // outstanding budget of the fabric's converging point (tree root /
     // every mesh tile — a tile is both leaf and root)
@@ -140,6 +147,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
             });
             return Network {
                 kind,
+                resv: built.topo.resv,
                 xbars: built.topo.xbars,
                 cluster_m: built.endpoint_m,
                 cluster_s: built.endpoint_s,
@@ -186,6 +194,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
     });
     Network {
         kind,
+        resv: built.topo.resv,
         xbars: built.topo.xbars,
         cluster_m: built.endpoint_m,
         cluster_s: built.endpoint_s,

@@ -121,6 +121,7 @@ impl BarrierUnit {
                     exclude: None,
                     src: 0,
                     txn,
+                    ticket: None,
                 });
                 master.w.push(WBeat {
                     last: true,
@@ -168,6 +169,7 @@ mod tests {
             exclude: None,
             src: 0,
             txn,
+            ticket: None,
         });
         link.w.push(WBeat {
             last: true,

@@ -19,15 +19,25 @@
 //!   leaders → root, the fabric's first *converging* N-to-1 pattern)
 //!   and multicasts the result down; reduce-scatter has no distribution
 //!   phase, so its `Hw` variant is the direct all-to-all scatter of
-//!   contribution chunks (converging traffic, still unicast).
+//!   contribution chunks (converging traffic, still unicast);
+//! * [`CollMode::HwConc`] — concurrent global multicasts on the
+//!   fabric-wide reservation protocol (`SocConfig::e2e_mcast_order`):
+//!   all-gather becomes N simultaneous chunk multicasts (one per rank,
+//!   no gather phase at all); broadcast scatters chunks and pipelines
+//!   the re-broadcast from *all* N sources at once; all-reduce runs the
+//!   direct reduce-scatter and re-assembles with N concurrent chunk
+//!   multicasts. These schedules deadlock on the RTL-faithful fabric.
 //!
-//! All-gather deliberately does **not** issue N concurrent global
-//! multicasts: two simultaneous all-cluster multicasts from different
-//! sources can form the documented inter-level W-order deadlock
-//! (DESIGN.md §1, `tests/occamy_system.rs::
+//! The [`CollMode::Hw`] all-gather deliberately does **not** issue N
+//! concurrent global multicasts: on the RTL-faithful fabric two
+//! simultaneous all-cluster multicasts from different sources can form
+//! the documented inter-level W-order deadlock (DESIGN.md §1,
+//! `tests/occamy_system.rs::
 //! global_broadcast_contention_deadlocks_documented_limitation`), so
-//! the schedule keeps at most one global multicast in flight — the
+//! that schedule keeps at most one global multicast in flight — the
 //! gather-to-root phase converges over plain unicasts instead.
+//! [`CollMode::HwConc`] is exactly the schedule family that limitation
+//! forbade; end-to-end multicast ordering makes it legal.
 //!
 //! **Correctness.** The cycle-level fabric moves metadata beats; bytes
 //! materialise in [`SocMem`] when a DMA job completes, and reduction
@@ -93,8 +103,13 @@ impl CollOp {
 pub enum CollMode {
     /// Unicast-only software schedule (baseline system, no multicast).
     Sw,
-    /// Multicast-accelerated distribution phases.
+    /// Multicast-accelerated distribution phases, at most one global
+    /// multicast in flight (legal on the RTL-faithful fabric).
     Hw,
+    /// Concurrent global multicasts from many sources at once — needs
+    /// the fabric-wide reservation protocol
+    /// (`SocConfig::e2e_mcast_order`), which this mode switches on.
+    HwConc,
 }
 
 impl CollMode {
@@ -102,6 +117,7 @@ impl CollMode {
         match self {
             CollMode::Sw => "sw",
             CollMode::Hw => "hw-mcast",
+            CollMode::HwConc => "hw-concurrent",
         }
     }
 
@@ -109,9 +125,12 @@ impl CollMode {
         match s {
             "sw" | "unicast" => Some(CollMode::Sw),
             "hw" | "hw-mcast" | "mcast" => Some(CollMode::Hw),
+            "hw-concurrent" | "hwconc" | "concurrent" | "conc" => Some(CollMode::HwConc),
             _ => None,
         }
     }
+
+    pub const ALL: [CollMode; 3] = [CollMode::Sw, CollMode::Hw, CollMode::HwConc];
 }
 
 /// Per-cluster L1 layout of one collective run. All offsets are
@@ -203,11 +222,14 @@ impl CollLayout {
             (CollOp::Broadcast, _) => self.gather,
             (CollOp::AllGather, _) => self.work,
             (CollOp::ReduceScatter, CollMode::Sw) => self.slots,
-            (CollOp::ReduceScatter, CollMode::Hw) => self.slots + self.bytes,
+            (CollOp::ReduceScatter, CollMode::Hw | CollMode::HwConc) => self.slots + self.bytes,
             (CollOp::AllReduce, CollMode::Sw) => self.slots,
             (CollOp::AllReduce, CollMode::Hw) => {
                 self.lslots + self.n_groups.saturating_sub(1) as u64 * self.bytes
             }
+            // direct reduce-scatter slots + the gather result region
+            // (gather lies below slots, so the slot end bounds both)
+            (CollOp::AllReduce, CollMode::HwConc) => self.slots + self.bytes,
         }
     }
 }
@@ -315,7 +337,6 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
     let l1 = |c: usize, off: u64| cfg.cluster_base(c) + off;
     let uni = |c: usize, off: u64| AddrSet::unicast(l1(c, off));
     let irq = |c: usize| AddrSet::unicast(cfg.mailbox_addr(c));
-    let ce = l.chunk_elems() as u64;
     let se = l.elems() as u64;
     let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); n];
 
@@ -354,24 +375,57 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
             }
         }
         (CollOp::Broadcast, CollMode::Hw) => {
-            // one mask-form multicast covering every cluster (self
-            // included), then one multicast notify interrupt
-            progs[0] = vec![
-                Cmd::Dma {
-                    src: l1(0, l.data),
-                    dst: cfg.cluster_set(0, n, l.acc),
-                    bytes: l.bytes,
-                    tag: 0,
-                },
-                Cmd::WaitDma,
-                Cmd::SendIrq {
-                    dst: cfg.all_mailboxes(),
-                },
-                Cmd::WaitIrq { count: 1 }, // own copy of the notify
-            ];
-            for p in progs.iter_mut().skip(1) {
+            hw_broadcast(cfg, l, &mut progs);
+        }
+        (CollOp::Broadcast, CollMode::HwConc) if n >= 4 => {
+            // scatter + concurrent all-gather (the van-de-Geijn
+            // large-message broadcast): rank 0 scatters chunk j into
+            // rank j's result slot, then EVERY rank re-broadcasts its
+            // chunk with a global multicast — n simultaneous
+            // all-cluster multicasts pipelining through the fabric,
+            // which only the end-to-end reservation protocol can order
+            for (r, p) in progs.iter_mut().enumerate() {
+                if r == 0 {
+                    for j in 1..n {
+                        p.push(Cmd::Dma {
+                            src: l1(0, l.data + j as u64 * l.chunk),
+                            dst: uni(j, l.acc + j as u64 * l.chunk),
+                            bytes: l.chunk,
+                            tag: j as u64,
+                        });
+                    }
+                    // own chunk lands by local copy
+                    p.push(Cmd::Dma {
+                        src: l1(0, l.data),
+                        dst: uni(0, l.acc),
+                        bytes: l.chunk,
+                        tag: 50,
+                    });
+                    p.push(Cmd::WaitDma);
+                    p.push(Cmd::SendIrq {
+                        dst: cfg.all_mailboxes(),
+                    });
+                }
                 p.push(Cmd::WaitIrq { count: 1 });
+                p.push(Cmd::Dma {
+                    src: l1(r, l.acc + r as u64 * l.chunk),
+                    dst: cfg.cluster_set(0, n, l.acc + r as u64 * l.chunk),
+                    bytes: l.chunk,
+                    tag: 100 + r as u64,
+                });
+                p.push(Cmd::WaitDma);
+                p.push(Cmd::SendIrq {
+                    dst: cfg.all_mailboxes(),
+                });
+                p.push(Cmd::WaitIrq {
+                    count: n as u32,
+                });
             }
+        }
+        (CollOp::Broadcast, CollMode::HwConc) => {
+            // n < 4: the scatter phase has nothing to amortise — the
+            // single-multicast schedule is already optimal
+            hw_broadcast(cfg, l, &mut progs);
         }
         // ---- all-gather ----
         (CollOp::AllGather, CollMode::Sw) => {
@@ -418,42 +472,35 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
                 }
             }
         }
+        (CollOp::AllGather, CollMode::HwConc) => {
+            // the schedule §6 explicitly could not express before: all
+            // n ranks multicast their own chunk into everyone's gather
+            // slot AT ONCE — n concurrent global multicasts, no gather
+            // phase, injected beats = exactly one buffer
+            for (r, p) in progs.iter_mut().enumerate() {
+                p.push(Cmd::Dma {
+                    src: l1(r, l.gather + r as u64 * l.chunk),
+                    dst: cfg.cluster_set(0, n, l.gather + r as u64 * l.chunk),
+                    bytes: l.chunk,
+                    tag: r as u64,
+                });
+                p.push(Cmd::WaitDma);
+                p.push(Cmd::SendIrq {
+                    dst: cfg.all_mailboxes(),
+                });
+                p.push(Cmd::WaitIrq {
+                    count: n as u32,
+                });
+            }
+        }
         // ---- reduce-scatter ----
         (CollOp::ReduceScatter, CollMode::Sw) => {
             ring_reduce_scatter(cfg, l, &mut progs, false);
         }
-        (CollOp::ReduceScatter, CollMode::Hw) => {
-            // direct all-to-all: rank r scatters its chunk j into
-            // rank j's contribution slot r — the first converging
-            // N-to-1 pattern per destination — then folds locally
-            for (r, p) in progs.iter_mut().enumerate() {
-                for j in 0..n {
-                    if j == r {
-                        continue;
-                    }
-                    p.push(Cmd::Dma {
-                        src: l1(r, l.data + j as u64 * l.chunk),
-                        dst: uni(j, l.slots + r as u64 * l.chunk),
-                        bytes: l.chunk,
-                        tag: j as u64,
-                    });
-                }
-                p.push(Cmd::WaitDma);
-                for j in 0..n {
-                    if j == r {
-                        continue;
-                    }
-                    p.push(Cmd::SendIrq { dst: irq(j) });
-                }
-                p.push(Cmd::WaitIrq {
-                    count: (n - 1) as u32,
-                });
-                p.push(Cmd::Compute {
-                    macs: (n as u64 - 1) * ce,
-                    op: OP_RS_DIRECT,
-                    arg: 0,
-                });
-            }
+        (CollOp::ReduceScatter, CollMode::Hw | CollMode::HwConc) => {
+            // no distribution phase to parallelise: the concurrent mode
+            // is the same direct all-to-all scatter + local fold
+            direct_reduce_scatter(cfg, l, &mut progs);
         }
         // ---- all-reduce ----
         (CollOp::AllReduce, CollMode::Sw) => {
@@ -527,8 +574,95 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
                 }
             }
         }
+        (CollOp::AllReduce, CollMode::HwConc) => {
+            // direct reduce-scatter (every rank ends with its reduced
+            // chunk in `acc`), then n concurrent chunk multicasts
+            // re-assemble the full vector in everyone's gather buffer —
+            // the reduce-scatter + all-gather decomposition with the
+            // all-gather collapsed into simultaneous global multicasts
+            direct_reduce_scatter(cfg, l, &mut progs);
+            for (r, p) in progs.iter_mut().enumerate() {
+                p.push(Cmd::Dma {
+                    src: l1(r, l.acc),
+                    dst: cfg.cluster_set(0, n, l.gather + r as u64 * l.chunk),
+                    bytes: l.chunk,
+                    tag: 100 + r as u64,
+                });
+                p.push(Cmd::WaitDma);
+                p.push(Cmd::SendIrq {
+                    dst: cfg.all_mailboxes(),
+                });
+                p.push(Cmd::WaitIrq {
+                    count: n as u32,
+                });
+            }
+        }
     }
     progs
+}
+
+/// The single-multicast hardware broadcast: one mask-form multicast
+/// covering every cluster (self included), then one multicast notify
+/// interrupt. Shared by [`CollMode::Hw`] and the degenerate small-n
+/// [`CollMode::HwConc`] case.
+fn hw_broadcast(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>]) {
+    let n = l.n;
+    progs[0] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(0) + l.data,
+            dst: cfg.cluster_set(0, n, l.acc),
+            bytes: l.bytes,
+            tag: 0,
+        },
+        Cmd::WaitDma,
+        Cmd::SendIrq {
+            dst: cfg.all_mailboxes(),
+        },
+        Cmd::WaitIrq { count: 1 }, // own copy of the notify
+    ];
+    for p in progs.iter_mut().skip(1) {
+        p.push(Cmd::WaitIrq { count: 1 });
+    }
+}
+
+/// Direct all-to-all reduce-scatter: rank r scatters its chunk j into
+/// rank j's contribution slot r — the first converging N-to-1 pattern
+/// per destination — then folds locally into `acc` (`OP_RS_DIRECT`).
+/// Shared by the hw reduce-scatter and the concurrent all-reduce front
+/// half.
+fn direct_reduce_scatter(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>]) {
+    let n = l.n;
+    let ce = l.chunk_elems() as u64;
+    for (r, p) in progs.iter_mut().enumerate() {
+        for j in 0..n {
+            if j == r {
+                continue;
+            }
+            p.push(Cmd::Dma {
+                src: cfg.cluster_base(r) + l.data + j as u64 * l.chunk,
+                dst: AddrSet::unicast(cfg.cluster_base(j) + l.slots + r as u64 * l.chunk),
+                bytes: l.chunk,
+                tag: j as u64,
+            });
+        }
+        p.push(Cmd::WaitDma);
+        for j in 0..n {
+            if j == r {
+                continue;
+            }
+            p.push(Cmd::SendIrq {
+                dst: AddrSet::unicast(cfg.mailbox_addr(j)),
+            });
+        }
+        p.push(Cmd::WaitIrq {
+            count: (n - 1) as u32,
+        });
+        p.push(Cmd::Compute {
+            macs: (n as u64 - 1) * ce,
+            op: OP_RS_DIRECT,
+            arg: 0,
+        });
+    }
 }
 
 /// The shared ring all-gather schedule: round `t` forwards gather
@@ -641,6 +775,13 @@ pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -
         CollMode::Hw => {
             cfg.wide_mcast = true;
             cfg.narrow_mcast = true;
+        }
+        CollMode::HwConc => {
+            // concurrent global multicasts are only deadlock-free on
+            // the fabric-wide reservation protocol
+            cfg.wide_mcast = true;
+            cfg.narrow_mcast = true;
+            cfg.e2e_mcast_order = true;
         }
         CollMode::Sw => {
             cfg.wide_mcast = false;
@@ -804,8 +945,8 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_both_modes_bit_exact() {
-        for mode in [CollMode::Sw, CollMode::Hw] {
+    fn broadcast_all_modes_bit_exact() {
+        for mode in CollMode::ALL {
             let r = run_collective(&cfg(4), CollOp::Broadcast, mode, SMALL);
             assert!(r.numerics_ok, "broadcast {:?} numerics", mode);
             assert!(r.cycles > 0);
@@ -813,16 +954,16 @@ mod tests {
     }
 
     #[test]
-    fn all_gather_both_modes_bit_exact() {
-        for mode in [CollMode::Sw, CollMode::Hw] {
+    fn all_gather_all_modes_bit_exact() {
+        for mode in CollMode::ALL {
             let r = run_collective(&cfg(4), CollOp::AllGather, mode, SMALL);
             assert!(r.numerics_ok, "all-gather {:?} numerics", mode);
         }
     }
 
     #[test]
-    fn reduce_scatter_both_modes_bit_exact() {
-        for mode in [CollMode::Sw, CollMode::Hw] {
+    fn reduce_scatter_all_modes_bit_exact() {
+        for mode in CollMode::ALL {
             let r = run_collective(&cfg(4), CollOp::ReduceScatter, mode, SMALL);
             assert!(r.numerics_ok, "reduce-scatter {:?} numerics", mode);
             assert!(r.combines > 0, "reduction must run through the handler");
@@ -830,11 +971,34 @@ mod tests {
     }
 
     #[test]
-    fn all_reduce_both_modes_bit_exact() {
-        for mode in [CollMode::Sw, CollMode::Hw] {
+    fn all_reduce_all_modes_bit_exact() {
+        for mode in CollMode::ALL {
             let r = run_collective(&cfg(8), CollOp::AllReduce, mode, 4096);
             assert!(r.numerics_ok, "all-reduce {:?} numerics", mode);
         }
+    }
+
+    #[test]
+    fn concurrent_all_gather_issues_n_global_mcasts() {
+        let r = run_collective(&cfg(4), CollOp::AllGather, CollMode::HwConc, SMALL);
+        assert!(r.numerics_ok);
+        // every rank multicasts its chunk — n concurrent global
+        // multicasts observed at the source crossbars
+        assert!(
+            r.wide.aw_mcast >= 4,
+            "conc all-gather must multicast from every rank ({} mcast AWs)",
+            r.wide.aw_mcast
+        );
+        // tickets were actually issued and drained on the wide network
+        assert!(r.wide.resv_tickets >= 4);
+        // injected beats: exactly one buffer (n chunks)
+        let hw = run_collective(&cfg(4), CollOp::AllGather, CollMode::Hw, SMALL);
+        assert!(
+            r.dma_w_beats <= hw.dma_w_beats,
+            "conc all-gather injects more than gather-to-root ({} > {})",
+            r.dma_w_beats,
+            hw.dma_w_beats
+        );
     }
 
     #[test]
@@ -861,25 +1025,34 @@ mod tests {
     fn two_cluster_degenerate_pair_holds_invariants() {
         // n=2 has no fan-out to amortise: every hw schedule must still
         // be bit-exact and inject no more W beats than the sw baseline
-        // (the hw all-gather degenerates to the ring exchange here)
+        // (the hw all-gather degenerates to the ring exchange and the
+        // concurrent broadcast to the single multicast here)
         for op in CollOp::ALL {
             let sw = run_collective(&cfg(2), op, CollMode::Sw, 1024);
-            let hw = run_collective(&cfg(2), op, CollMode::Hw, 1024);
-            assert!(sw.numerics_ok && hw.numerics_ok, "{} n=2 numerics", op.name());
-            assert!(
-                hw.dma_w_beats <= sw.dma_w_beats,
-                "{} n=2: hw injects more W beats ({} > {})",
-                op.name(),
-                hw.dma_w_beats,
-                sw.dma_w_beats
-            );
+            for mode in [CollMode::Hw, CollMode::HwConc] {
+                let hw = run_collective(&cfg(2), op, mode, 1024);
+                assert!(
+                    sw.numerics_ok && hw.numerics_ok,
+                    "{} {} n=2 numerics",
+                    op.name(),
+                    mode.name()
+                );
+                assert!(
+                    hw.dma_w_beats <= sw.dma_w_beats,
+                    "{} {} n=2: injects more W beats ({} > {})",
+                    op.name(),
+                    mode.name(),
+                    hw.dma_w_beats,
+                    sw.dma_w_beats
+                );
+            }
         }
     }
 
     #[test]
     fn fork_accounting_holds_for_all_ops() {
         for op in CollOp::ALL {
-            for mode in [CollMode::Sw, CollMode::Hw] {
+            for mode in CollMode::ALL {
                 let r = run_collective(&cfg(4), op, mode, SMALL);
                 assert_eq!(
                     r.wide.w_beats_out,

@@ -139,6 +139,7 @@ impl ScriptMaster {
                 exclude: None,
                 src: 0,
                 txn,
+                ticket: None,
             });
             self.sending = Some((txn, beats));
             self.inflight += 1;

@@ -1,8 +1,11 @@
 //! Integration suite for the collectives workload family: bit-exact
-//! data correctness for every op on every wide-network shape, in both
-//! strategies, plus the cost invariants (the multicast strategy never
-//! injects more W beats into the fabric than the unicast baseline, and
-//! the per-crossbar W fork accounting always balances).
+//! data correctness for every op on every wide-network shape, in all
+//! three strategies (sw / hw-mcast / hw-concurrent), plus the cost
+//! invariants (no multicast strategy injects more W beats into the
+//! fabric than the unicast baseline, the per-crossbar W fork
+//! accounting always balances, and the hw-concurrent schedules — N
+//! simultaneous global multicasts on the e2e reservation protocol —
+//! beat the one-multicast-in-flight schedule).
 
 use axi_mcast::coordinator::experiments::{assert_coll_row_invariants, collectives};
 use axi_mcast::occamy::{SocConfig, WideShape};
@@ -16,11 +19,12 @@ fn cfg8() -> SocConfig {
 
 const BYTES8: u64 = 4096; // 8 clusters => 512 B chunks
 
-/// Every op × shape × mode: result buffers bit-exact vs the scalar
-/// reference reduction, fork accounting balanced, no DECERR, and the
-/// injected-W-beat invariant per (op, shape).
+/// Every op × shape × mode (sw, hw-mcast and hw-concurrent): result
+/// buffers bit-exact vs the scalar reference reduction, fork
+/// accounting balanced, no DECERR, the injected-W-beat invariant per
+/// (op, shape), and the reservation ledger fully drained.
 #[test]
-fn all_ops_all_shapes_both_modes_bit_exact() {
+fn all_ops_all_shapes_all_modes_bit_exact() {
     let cfg = cfg8();
     let mut shapes = default_shapes(&cfg);
     assert!(
@@ -115,6 +119,69 @@ fn sixteen_cluster_scaling_smoke() {
         );
         assert!(hw.dma_w_beats <= sw.dma_w_beats);
     }
+}
+
+/// ISSUE acceptance: the `hw-concurrent` all-gather — N simultaneous
+/// global multicasts, one per rank, the schedule the RTL-faithful
+/// fabric deadlocks on — finishes in fewer simulated cycles than the
+/// one-multicast-in-flight `hw-mcast` schedule at ≥ 8 clusters while
+/// injecting no more W beats, on every wide-network shape.
+#[test]
+fn concurrent_all_gather_beats_single_mcast_schedule() {
+    for clusters in [8usize, 16] {
+        let cfg = SocConfig::tiny(clusters);
+        let bytes = 512 * clusters as u64;
+        for shape in default_shapes(&cfg) {
+            let mut cfg = cfg.clone();
+            cfg.wide_shape = shape.clone();
+            let hw = run_collective(&cfg, CollOp::AllGather, CollMode::Hw, bytes);
+            let conc = run_collective(&cfg, CollOp::AllGather, CollMode::HwConc, bytes);
+            assert!(hw.numerics_ok && conc.numerics_ok);
+            assert!(
+                conc.cycles < hw.cycles,
+                "all-gather on {} @{clusters}cl: hw-concurrent ({}) must beat \
+                 the one-multicast-in-flight schedule ({})",
+                shape.label(),
+                conc.cycles,
+                hw.cycles
+            );
+            assert!(
+                conc.dma_w_beats <= hw.dma_w_beats,
+                "all-gather on {} @{clusters}cl: hw-concurrent injects more W \
+                 beats ({} > {})",
+                shape.label(),
+                conc.dma_w_beats,
+                hw.dma_w_beats
+            );
+            assert!(
+                conc.wide.resv_tickets >= clusters as u64,
+                "every rank's multicast must take a reservation ticket"
+            );
+        }
+    }
+}
+
+/// The concurrent broadcast (scatter + simultaneous re-broadcast from
+/// all sources) stays bit-exact and within the baseline's injection
+/// budget at scale.
+#[test]
+fn concurrent_broadcast_pipelines_from_all_sources() {
+    let cfg = SocConfig::tiny(8);
+    let sw = run_collective(&cfg, CollOp::Broadcast, CollMode::Sw, BYTES8);
+    let conc = run_collective(&cfg, CollOp::Broadcast, CollMode::HwConc, BYTES8);
+    assert!(sw.numerics_ok && conc.numerics_ok);
+    // the re-broadcast phase multicasts from every rank
+    assert!(
+        conc.wide.aw_mcast > sw.wide.aw_mcast && conc.wide.resv_tickets >= 8,
+        "conc broadcast must issue concurrent multicasts from all ranks"
+    );
+    assert!(conc.dma_w_beats <= sw.dma_w_beats);
+    assert!(
+        conc.cycles < sw.cycles,
+        "conc broadcast ({}) must beat the software tree ({})",
+        conc.cycles,
+        sw.cycles
+    );
 }
 
 /// The wide-shape plumbing itself: the same multicast workload delivers

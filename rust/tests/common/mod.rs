@@ -153,6 +153,7 @@ impl TestMaster {
                 exclude: None,
                 src: self.idx,
                 txn,
+                ticket: None,
             });
             self.state = MState::SendW {
                 txn,

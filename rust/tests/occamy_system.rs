@@ -211,28 +211,43 @@ fn concurrent_global_broadcasts_serialised_by_barrier() {
         .expect("barrier-serialised broadcasts must complete");
 }
 
-#[test]
-fn global_broadcast_contention_deadlocks_documented_limitation() {
-    // DOCUMENTED LIMITATION (DESIGN.md §2 / EXPERIMENTS.md): two
-    // simultaneous all-cluster broadcasts from different groups can
-    // deadlock across hierarchy levels — the per-crossbar commit
-    // protocol breaks intra-crossbar wait cycles (fig. 2e) but not the
-    // inter-level W-order cycle. The paper's workloads (and ours) use a
-    // single distributor; the watchdog catches violations.
-    let cfg = SocConfig::default();
-    let mut soc = Soc::new(cfg.clone());
-    let mut progs = vec![Vec::new(); 32];
+/// The 8-source global-broadcast contention workload (one broadcaster
+/// per group, every one targeting all 32 clusters at a source-distinct
+/// offset), plus deterministic per-source payload seeding.
+fn contention_programs(cfg: &SocConfig, soc: &mut Soc) -> Vec<(usize, Cmd)> {
+    let mut dmas = Vec::new();
     for g in 0..8usize {
         let src = g * 4;
-        progs[src] = vec![
+        for (i, b) in soc.mem.l1[src][..2048].iter_mut().enumerate() {
+            *b = ((i * 7 + g * 13) % 251) as u8;
+        }
+        dmas.push((
+            src,
             Cmd::Dma {
                 src: cfg.cluster_base(src),
                 dst: cfg.cluster_set(0, 32, 0x10000 + g as u64 * 0x1000),
                 bytes: 2048,
                 tag: g as u64,
             },
-            Cmd::WaitDma,
-        ];
+        ));
+    }
+    dmas
+}
+
+#[test]
+fn global_broadcast_contention_deadlocks_documented_limitation() {
+    // RTL-FAITHFUL LIMITATION (DESIGN.md §1 / EXPERIMENTS.md): with
+    // `e2e_mcast_order` OFF (the default), two simultaneous all-cluster
+    // broadcasts from different groups deadlock across hierarchy levels
+    // — the per-crossbar commit protocol breaks intra-crossbar wait
+    // cycles (fig. 2e) but not the inter-level W-order cycle. The
+    // watchdog catches it; the companion test below shows the same
+    // workload completing on the fabric-wide reservation protocol.
+    let cfg = SocConfig::default();
+    let mut soc = Soc::new(cfg.clone());
+    let mut progs = vec![Vec::new(); 32];
+    for (src, dma) in contention_programs(&cfg, &mut soc) {
+        progs[src] = vec![dma, Cmd::WaitDma];
     }
     soc.load_programs(progs);
     let res = soc.run(
@@ -244,9 +259,69 @@ fn global_broadcast_contention_deadlocks_documented_limitation() {
     );
     assert!(
         res.is_err(),
-        "expected the documented inter-level deadlock; if this now \
-         completes, the fabric gained end-to-end multicast ordering — \
-         update DESIGN.md accordingly"
+        "expected the documented inter-level deadlock with e2e ordering \
+         off; if this now completes, the RTL-faithful reference mode \
+         has been broken — check XbarCfg::e2e_mcast_order defaults"
+    );
+}
+
+#[test]
+fn global_broadcast_contention_completes_with_e2e_order_bit_exact() {
+    // The same 8-source contention workload on the fabric-wide
+    // reservation protocol: all eight concurrent global broadcasts
+    // complete, and memory is bit-identical to the barrier-serialised
+    // golden schedule run on the RTL-faithful fabric.
+    let mut cfg = SocConfig::default();
+    cfg.e2e_mcast_order = true;
+    let mut soc = Soc::new(cfg.clone());
+    let mut progs = vec![Vec::new(); 32];
+    for (src, dma) in contention_programs(&cfg, &mut soc) {
+        progs[src] = vec![dma, Cmd::WaitDma];
+    }
+    soc.load_programs(progs);
+    soc.run_default(&mut NopCompute)
+        .expect("e2e reservation protocol must break the inter-level cycle");
+    let wide = soc.wide.stats_sum();
+    assert!(wide.resv_tickets >= 8, "every broadcast must reserve");
+    assert_eq!(
+        wide.w_beats_out,
+        wide.w_beats_in + wide.w_fork_extra,
+        "W fork accounting must hold under concurrent multicasts"
+    );
+    for net in [&soc.wide, &soc.narrow] {
+        if let Some(h) = &net.resv {
+            assert_eq!(
+                h.borrow().live_tickets(),
+                0,
+                "all reservation claims must drain"
+            );
+        }
+    }
+
+    // golden: one broadcaster per barrier round, RTL-faithful fabric
+    let golden_cfg = SocConfig::default();
+    let mut golden = Soc::new(golden_cfg.clone());
+    let mut progs: Vec<Vec<Cmd>> = vec![vec![Cmd::Barrier; 8]; 32];
+    for (src, dma) in contention_programs(&golden_cfg, &mut golden) {
+        let mut p = Vec::new();
+        let g = src / 4;
+        for round in 0..8usize {
+            if round == g {
+                p.push(dma.clone());
+                p.push(Cmd::WaitDma);
+            }
+            p.push(Cmd::Barrier);
+        }
+        progs[src] = p;
+    }
+    golden.load_programs(progs);
+    golden
+        .run_default(&mut NopCompute)
+        .expect("barrier-serialised golden must complete");
+    assert_eq!(
+        soc.mem.l1, golden.mem.l1,
+        "concurrent broadcasts must land bit-identically to the \
+         serialised golden"
     );
 }
 

@@ -377,6 +377,65 @@ fn llc_roundtrip_horizon_parity() {
 }
 
 #[test]
+fn e2e_reservation_counters_match_naive_reference() {
+    // Concurrent global multicasts on the fabric-wide reservation
+    // protocol: the new resv_* counters — including the `resv_waits`
+    // per-cycle stall accounting and its `skip(k)` replay — must be
+    // bit-identical between the optimised and force_naive modes.
+    let mut cfg = SocConfig::tiny(8);
+    cfg.e2e_mcast_order = true;
+    let mut progs = vec![Vec::new(); 8];
+    for (c, prog) in progs.iter_mut().enumerate() {
+        *prog = vec![
+            Cmd::Dma {
+                src: cfg.cluster_base(c),
+                dst: cfg.cluster_set(0, 8, 0x8000 + c as u64 * 0x800),
+                bytes: 1024,
+                tag: c as u64,
+            },
+            Cmd::WaitDma,
+        ];
+    }
+    let opt = run_soc(&cfg, progs.clone(), false);
+    let naive = run_soc(&cfg, progs, true);
+    compare_soc(&opt, &naive).unwrap();
+    assert!(
+        opt.wide.resv_tickets >= 8,
+        "every broadcast must take a ticket: {:?}",
+        opt.wide
+    );
+    assert!(
+        opt.wide.resv_waits > 0,
+        "eight concurrent global multicasts must contend on the ledger"
+    );
+    assert!(
+        opt.skipped > 0,
+        "the horizon must engage around the reservation handshakes"
+    );
+}
+
+#[test]
+fn e2e_reservation_parity_property() {
+    // random workloads (multicasts, delays, barriers) with the
+    // reservation protocol armed: still bit-identical vs force_naive
+    let mut cfg = SocConfig::tiny(8);
+    cfg.e2e_mcast_order = true;
+    check(
+        "e2e-resv-parity",
+        Config {
+            cases: 6,
+            ..Config::default()
+        },
+        |g| random_soc_programs(g, &cfg),
+        |progs| {
+            let opt = run_soc(&cfg, progs.clone(), false);
+            let naive = run_soc(&cfg, progs.clone(), true);
+            compare_soc(&opt, &naive)
+        },
+    );
+}
+
+#[test]
 fn dma_overlap_horizon_parity() {
     // DMA running while the sequencer delays: exercises the DMA
     // setup/local/wait classification and its bulk skip accounting
