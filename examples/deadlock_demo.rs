@@ -66,6 +66,7 @@ impl Master {
                 src: self.idx,
                 txn: self.txn,
                 ticket: None,
+                reduce: None,
             });
         }
         if self.started && self.to_send > 0 && pool[self.link].w.can_push() {

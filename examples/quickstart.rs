@@ -62,6 +62,7 @@ fn main() {
         src: 0,
         txn: 1,
         ticket: None,
+        reduce: None,
     });
     let mut beats_left = 8;
     let mut b_at = None;

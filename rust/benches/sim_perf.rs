@@ -98,6 +98,7 @@ fn bench_xbar_16x16(cycles: u64, force_naive: bool) -> Row {
                     src: m,
                     txn,
                     ticket: None,
+                    reduce: None,
                 });
                 txn += 1;
             }

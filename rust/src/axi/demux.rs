@@ -56,6 +56,11 @@ pub struct WRoute {
     pub slaves: SlaveVec,
     pub beats_left: u32,
     pub is_mcast: bool,
+    /// In-network reduction sink (`slaves` empty): the burst's beats
+    /// are absorbed into the crossbar's combine table instead of being
+    /// forwarded, and the B response arrives later by fan-out from the
+    /// combined upstream burst (never via `complete_unroutable`).
+    pub sink: bool,
 }
 
 /// B-join bookkeeping for one outstanding write transaction.
@@ -190,6 +195,7 @@ impl Demux {
             slaves: slaves.clone(),
             beats_left: beat.beats,
             is_mcast: beat.is_mcast,
+            sink: false,
         });
         self.joins.insert(
             beat.txn,
@@ -199,6 +205,43 @@ impl Demux {
                 resp: resp0,
                 is_mcast: beat.is_mcast,
                 slaves,
+            },
+        );
+    }
+
+    /// Record acceptance of an AW absorbed by the crossbar's combine
+    /// table (in-network reduction, `crate::axi::reduce`): the W burst
+    /// drains into the combiner through a sink route and exactly one B
+    /// — fanned out from the combined upstream burst — completes the
+    /// join. Ordering-wise the transaction is a plain unicast bound to
+    /// the group's exit slave, so the ID table and the
+    /// multicast/unicast mutual-exclusion stalls behave as if it had
+    /// been forwarded there.
+    pub fn accept_sink(&mut self, beat: &AwBeat, exit_slave: usize) {
+        debug_assert!(!beat.is_mcast, "reduction contributions are unicast");
+        self.outstanding_unicast += 1;
+        self.id_table
+            .entry(beat.id)
+            .and_modify(|b| b.count += 1)
+            .or_insert(IdBinding {
+                slave: exit_slave,
+                count: 1,
+            });
+        self.w_queue.push_back(WRoute {
+            txn: beat.txn,
+            slaves: SlaveVec::new(),
+            beats_left: beat.beats,
+            is_mcast: false,
+            sink: true,
+        });
+        self.joins.insert(
+            beat.txn,
+            Join {
+                id: beat.id,
+                remaining: 1,
+                resp: Resp::Okay,
+                is_mcast: false,
+                slaves: [exit_slave].into_iter().collect(),
             },
         );
     }
@@ -296,6 +339,7 @@ mod tests {
             src: 0,
             txn,
             ticket: None,
+            reduce: None,
         }
     }
 
@@ -377,6 +421,25 @@ mod tests {
         let b = d.complete_unroutable(7);
         assert_eq!(b.resp, Resp::DecErr);
         assert_eq!(d.outstanding_unicast, 0);
+    }
+
+    #[test]
+    fn sink_accept_joins_on_the_fanned_b() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept_sink(&aw(11, 4, false, 3), 2);
+        assert_eq!(d.outstanding_unicast, 1);
+        // ordering: the sink binds its ID to the exit slave
+        assert_eq!(d.admit(false, 4, &[2]), Stall::None);
+        assert_eq!(d.admit(false, 4, &[1]), Stall::IdConflict);
+        let route = d.w_queue.front().unwrap();
+        assert!(route.sink && route.slaves.is_empty());
+        assert_eq!(route.beats_left, 3);
+        // exactly one B (the fan-out from the combined burst) completes
+        let b = d.join_b(11, Resp::Okay, 4).expect("sink joins on one B");
+        assert_eq!(b.resp, Resp::Okay);
+        assert_eq!(b.id, 4);
+        assert_eq!(d.outstanding_unicast, 0);
+        assert!(d.id_table.is_empty());
     }
 
     #[test]

@@ -193,6 +193,7 @@ mod tests {
             src: 0,
             txn,
             ticket: None,
+            reduce: None,
         }
     }
 

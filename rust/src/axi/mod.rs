@@ -17,6 +17,12 @@
 //! * [`resv`] — the fabric-wide two-phase reservation ledger lifting
 //!   lock/commit to end-to-end multicast ordering across hierarchy
 //!   levels (`XbarCfg::e2e_mcast_order`).
+//! * [`reduce`] — in-network reduction: the dual of the multicast
+//!   fork. Converging write bursts tagged with a reduction group are
+//!   combined at every join point of the fabric
+//!   (`XbarCfg::fabric_reduce`), one burst forwarded upstream per
+//!   join; membership comes from the same decode oracle the
+//!   reservation ledger replays.
 //! * [`monitor`] — protocol checkers used by tests.
 //! * [`golden`] — reference memory model for traffic equivalence tests.
 //! * [`topology`] — declarative builder instantiating arbitrary
@@ -29,6 +35,7 @@ pub mod golden;
 pub mod mcast;
 pub mod monitor;
 pub mod mux;
+pub mod reduce;
 pub mod resv;
 pub mod topology;
 pub mod types;
@@ -36,6 +43,7 @@ pub mod xbar;
 
 pub use addr_map::{AddrMap, AddrRule, McastDecode};
 pub use mcast::AddrSet;
+pub use reduce::{RedNode, RedTag, ReduceHandle, ReduceLedger, ReduceOp};
 pub use resv::{ResvHandle, ResvLedger, ResvNode, ResvSeq};
 pub use topology::{Topology, TopologyBuilder, TopoShape};
 pub use types::*;

@@ -1,0 +1,430 @@
+//! **In-network reduction** — fabric-side combining of converging
+//! N-to-1 write traffic, the dual of the multicast fork
+//! (`XbarCfg::fabric_reduce`).
+//!
+//! The multicast extension forks one write burst into N at the points
+//! where destination paths *diverge*; this module merges N write bursts
+//! into one at the points where contributor paths *converge*. Member
+//! clusters issue ordinary unicast write bursts to the **same**
+//! destination address, tagged with a reduction group ([`RedTag`],
+//! carried in `aw_user` next to the multicast mask). Every crossbar
+//! that is a **join point** of the group's converging tree absorbs the
+//! arriving contributor bursts into a per-node *combine table* and
+//! forwards **one** combined burst upstream once all expected
+//! contributors at that node have arrived; the single B response coming
+//! back from upstream is fanned out to every absorbed contributor.
+//! Per join with `k` contributors of `b` beats, the fabric moves
+//! `(k-1)·b` fewer W beats upstream — reported as
+//! `XbarStats::red_beats_saved`, the exact mirror of the fork's
+//! `w_fork_extra`.
+//!
+//! ## Membership oracle
+//!
+//! How many contributions must a node wait for? The [`ReduceLedger`]
+//! answers with the same source of truth the datapath and the
+//! reservation protocol already share: [`XbarCfg::decode_aw`]. When a
+//! group is opened ([`ReduceLedger::open_group`]), the ledger walks the
+//! unicast route of every member's entry crossbar toward the
+//! destination — `decode_aw` replayed hop by hop, i.e. the multicast
+//! fork oracle of [`super::resv`] run *in reverse* over the converging
+//! tree — and records, per traversed node, the **expected inbound
+//! burst count**: one per member entering at that node plus one per
+//! distinct child crossbar feeding it (a child emits exactly one
+//! combined burst, no matter how many members it absorbed). Nodes with
+//! a single inbound contribution are pure pass-throughs: the tagged
+//! burst rides the normal unicast datapath unchanged, tag preserved
+//! for joins further up.
+//!
+//! ## Semantics split
+//!
+//! As everywhere in this simulator, the fabric moves *metadata* beats;
+//! the numeric combining ([`ReduceOp`] over integer-valued f64 lanes,
+//! `SocMem::reduce_f64` reusing the `add_f64` semantics) is applied
+//! functionally when each member's DMA job completes. Fabric-side
+//! combining is therefore purely a *timing/beat-count* optimisation:
+//! with `fabric_reduce` off the tagged bursts all travel to the
+//! destination individually and the memory outcome is bit-identical —
+//! the property the differential fuzz suite (`tests/fabric_fuzz.rs`)
+//! checks on every shape.
+//!
+//! ## Deadlock argument (DESIGN.md §7)
+//!
+//! Combining never *holds* anything another transaction can wait on: a
+//! contributor burst is absorbed off its master link without taking a
+//! mux grant or a W-order slot, and the combined burst enters the exit
+//! mux's W-order queue only at issue time, when its data source (the
+//! node itself) is unconditionally ready. The waits-for graph gains
+//! only edges from a combined burst to *older* W-order entries at its
+//! exit port — the same edges any unicast write has — so the PR 4
+//! acyclicity proof for the reservation protocol is unchanged.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::types::Addr;
+use super::xbar::XbarCfg;
+
+/// Element-wise combining operator of a reduction group. `Sum` is the
+/// collectives' workhorse (exact over the integer-valued f64 lanes the
+/// suite uses); `Max`/`Min` cover the argmax/clamp-style collectives.
+/// All three are commutative and associative, so the combine order the
+/// fabric happens to realise never changes the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+        }
+    }
+
+    /// Apply to one f64 lane.
+    pub fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+}
+
+/// Reduction-group tag carried on a contributor's AW beat — the model
+/// equivalent of a small side-band field in `aw_user` next to the
+/// multicast mask. `None` on all non-reduction traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RedTag {
+    /// Reduction-group id (fabric-unique per open group).
+    pub group: u32,
+    /// Combining operator (functional layer; the fabric itself only
+    /// counts and merges beats).
+    pub op: ReduceOp,
+}
+
+/// Handle to a crossbar node registered with a [`ReduceLedger`]. Node
+/// indices follow registration order, which
+/// `TopologyBuilder::build` keeps equal to the crossbar index — the
+/// same convention as `ResvNode`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RedNode(pub usize);
+
+/// Shared ledger handle (one per network; `Rc<RefCell<_>>` — the
+/// simulator is single-threaded).
+pub type ReduceHandle = Rc<RefCell<ReduceLedger>>;
+
+/// Routing snapshot of one registered crossbar (mirrors
+/// `resv::NodeInfo`: the membership oracle must replay the datapath's
+/// decode exactly, so it reuses [`XbarCfg::decode_aw`] on the same
+/// map/scope/default data).
+#[derive(Debug)]
+struct NodeInfo {
+    cfg: XbarCfg,
+    /// Per slave port: the downstream registered node that port feeds
+    /// (`None` = external endpoint).
+    down: Vec<Option<RedNode>>,
+}
+
+/// What one crossbar must do for one reduction group: wait for
+/// `expected` inbound contribution bursts per burst address, then
+/// forward one combined burst on `exit_slave`. Only nodes with
+/// `expected >= 2` get a plan — everything else passes tagged bursts
+/// through the normal unicast datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodePlan {
+    pub expected: u32,
+    pub exit_slave: usize,
+    pub op: ReduceOp,
+}
+
+/// Ledger-level observability counters.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct RedStats {
+    /// Groups opened.
+    pub groups: u64,
+    /// Join points planned across all groups (nodes with expected ≥ 2).
+    pub planned_joins: u64,
+}
+
+/// The membership oracle shared by every crossbar of one network (see
+/// the module docs). Wired by `TopologyBuilder::build` exactly like the
+/// reservation ledger: every node registered, every `connect()` edge
+/// mirrored.
+#[derive(Debug, Default)]
+pub struct ReduceLedger {
+    nodes: Vec<NodeInfo>,
+    /// Per `(node, group)`: the node's combining duty.
+    plans: HashMap<(usize, u32), NodePlan>,
+    /// Open groups (duplicate ids refused: plans would double-count).
+    open: HashMap<u32, ReduceOp>,
+    pub stats: RedStats,
+}
+
+impl ReduceLedger {
+    pub fn new() -> ReduceLedger {
+        ReduceLedger::default()
+    }
+
+    /// Wrap into the shared handle the crossbars hold.
+    pub fn into_handle(self) -> ReduceHandle {
+        Rc::new(RefCell::new(self))
+    }
+
+    /// Register a crossbar node (its routing snapshot). Ports start
+    /// unwired (= external).
+    pub fn register(&mut self, cfg: &XbarCfg) -> RedNode {
+        let down = vec![None; cfg.n_slaves];
+        self.nodes.push(NodeInfo {
+            cfg: cfg.clone(),
+            down,
+        });
+        RedNode(self.nodes.len() - 1)
+    }
+
+    /// Declare that `from`'s slave port `s_port` feeds crossbar `to`
+    /// (mirrors `TopologyBuilder::connect`).
+    pub fn wire(&mut self, from: RedNode, s_port: usize, to: RedNode) {
+        let slot = &mut self.nodes[from.0].down[s_port];
+        assert!(
+            slot.is_none(),
+            "reduce: node {} slave port {s_port} wired twice",
+            from.0
+        );
+        *slot = Some(to);
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Is `group` open?
+    pub fn is_open(&self, group: u32) -> bool {
+        self.open.contains_key(&group)
+    }
+
+    /// Open a reduction group: `entries` lists the entry crossbar of
+    /// every *remote* member (one entry per member — repeated nodes are
+    /// how co-located members are expressed), `dst` is the unicast
+    /// destination address all members write. Walks every member's
+    /// route with the datapath decode and plans a combine at each node
+    /// where ≥ 2 contributions converge.
+    pub fn open_group(&mut self, group: u32, op: ReduceOp, entries: &[RedNode], dst: Addr) {
+        assert!(
+            !self.open.contains_key(&group),
+            "reduce: group {group} opened twice"
+        );
+        assert!(
+            !entries.is_empty(),
+            "reduce: group {group} has no fabric members"
+        );
+        // per node: members entering here + distinct child nodes
+        // feeding it (a child forwards exactly one combined burst)
+        let mut direct: HashMap<usize, u32> = HashMap::new();
+        let mut preds: HashMap<usize, Vec<usize>> = HashMap::new();
+        let mut exit: HashMap<usize, usize> = HashMap::new();
+        for e in entries {
+            *direct.entry(e.0).or_insert(0) += 1;
+            let mut node = e.0;
+            let mut hops = 0usize;
+            loop {
+                let info = &self.nodes[node];
+                let (targets, resp) = info
+                    .cfg
+                    .decode_aw(&super::mcast::AddrSet::unicast(dst), None);
+                assert!(
+                    !resp.is_err() && targets.len() == 1,
+                    "reduce: group {group} dst {dst:#x} does not decode to a \
+                     single route at node {node} ({})",
+                    info.cfg.name
+                );
+                let s = targets[0].slave;
+                exit.insert(node, s);
+                match info.down[s] {
+                    Some(next) => {
+                        let p = preds.entry(next.0).or_default();
+                        if !p.contains(&node) {
+                            p.push(node);
+                        }
+                        node = next.0;
+                    }
+                    None => break,
+                }
+                hops += 1;
+                assert!(
+                    hops <= self.nodes.len(),
+                    "reduce: group {group} route loops — cyclic fabrics are \
+                     not combinable"
+                );
+            }
+        }
+        for (&node, &s) in &exit {
+            let inbound_children = preds.get(&node).map_or(0, |p| p.len() as u32);
+            let expected = direct.get(&node).copied().unwrap_or(0) + inbound_children;
+            if expected >= 2 {
+                self.plans.insert(
+                    (node, group),
+                    NodePlan {
+                        expected,
+                        exit_slave: s,
+                        op,
+                    },
+                );
+                self.stats.planned_joins += 1;
+            }
+        }
+        self.open.insert(group, op);
+        self.stats.groups += 1;
+    }
+
+    /// The node's combining duty for `group` (`None` = pass-through).
+    pub fn plan(&self, node: RedNode, group: u32) -> Option<NodePlan> {
+        self.plans.get(&(node.0, group)).copied()
+    }
+
+    /// Total join points planned for one group (test observability).
+    pub fn group_joins(&self, group: u32) -> usize {
+        self.plans.keys().filter(|(_, g)| *g == group).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::addr_map::{AddrMap, AddrRule};
+
+    const BASE: u64 = 0x0100_0000;
+    const STRIDE: u64 = 0x4_0000;
+
+    fn ep_rule(i: usize, slave: usize) -> AddrRule {
+        AddrRule::new(
+            BASE + i as u64 * STRIDE,
+            BASE + (i as u64 + 1) * STRIDE,
+            slave,
+            &format!("ep{i}"),
+        )
+        .with_mcast()
+    }
+
+    /// Two leaves of two endpoints each under one root (the same
+    /// smallest inter-level fabric the resv tests use).
+    fn tree_ledger() -> (ReduceLedger, [RedNode; 3]) {
+        let mut led = ReduceLedger::new();
+        let mut leaves = Vec::new();
+        for g in 0..2usize {
+            let rules = vec![ep_rule(2 * g, 0), ep_rule(2 * g + 1, 1)];
+            let mut cfg = XbarCfg::new(
+                &format!("leaf{g}"),
+                3,
+                3,
+                AddrMap::new(rules, 3).unwrap(),
+            );
+            cfg.default_slave = Some(2);
+            cfg.local_scope = Some((
+                BASE + 2 * g as u64 * STRIDE,
+                BASE + 2 * (g as u64 + 1) * STRIDE,
+            ));
+            leaves.push(led.register(&cfg));
+        }
+        let rules = (0..2)
+            .map(|g| {
+                AddrRule::new(
+                    BASE + 2 * g as u64 * STRIDE,
+                    BASE + 2 * (g + 1) as u64 * STRIDE,
+                    g as usize,
+                    &format!("child{g}"),
+                )
+                .with_mcast()
+            })
+            .collect();
+        let root = led.register(&XbarCfg::new("root", 2, 2, AddrMap::new(rules, 2).unwrap()));
+        led.wire(leaves[0], 2, root);
+        led.wire(leaves[1], 2, root);
+        led.wire(root, 0, leaves[0]);
+        led.wire(root, 1, leaves[1]);
+        (led, [leaves[0], leaves[1], root])
+    }
+
+    #[test]
+    fn op_apply_semantics() {
+        assert_eq!(ReduceOp::Sum.apply(2.0, 3.0), 5.0);
+        assert_eq!(ReduceOp::Max.apply(2.0, 3.0), 3.0);
+        assert_eq!(ReduceOp::Min.apply(2.0, -3.0), -3.0);
+    }
+
+    #[test]
+    fn cross_level_group_plans_joins_along_the_converging_tree() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        // members on endpoints 1 (leaf 0), 2 and 3 (leaf 1), reducing
+        // into endpoint 0 (leaf 0)
+        led.open_group(7, ReduceOp::Sum, &[l0, l1, l1], BASE);
+        // leaf 1: two direct members -> join, exits up (port 2)
+        assert_eq!(
+            led.plan(l1, 7),
+            Some(NodePlan {
+                expected: 2,
+                exit_slave: 2,
+                op: ReduceOp::Sum
+            })
+        );
+        // root: one combined burst from leaf 1 only -> pass-through
+        assert_eq!(led.plan(root, 7), None);
+        // leaf 0: one direct member + one burst from the root -> join,
+        // exits on endpoint 0's port
+        assert_eq!(
+            led.plan(l0, 7),
+            Some(NodePlan {
+                expected: 2,
+                exit_slave: 0,
+                op: ReduceOp::Sum
+            })
+        );
+        assert_eq!(led.group_joins(7), 2);
+    }
+
+    #[test]
+    fn single_member_group_is_all_pass_through() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        led.open_group(1, ReduceOp::Sum, &[l1], BASE);
+        for n in [l0, l1, root] {
+            assert_eq!(led.plan(n, 1), None);
+        }
+        assert_eq!(led.group_joins(1), 0);
+    }
+
+    #[test]
+    fn same_leaf_members_combine_once_at_the_shared_leaf() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        // both members and the destination under leaf 1: the route
+        // never leaves the leaf
+        led.open_group(3, ReduceOp::Max, &[l1, l1], BASE + 2 * STRIDE);
+        let p = led.plan(l1, 3).expect("leaf 1 must combine");
+        assert_eq!(p.expected, 2);
+        assert_eq!(p.exit_slave, 0); // endpoint 2's local port
+        assert_eq!(led.plan(root, 3), None);
+        assert_eq!(led.plan(l0, 3), None);
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let (mut led, [l0, l1, _root]) = tree_ledger();
+        led.open_group(1, ReduceOp::Sum, &[l0, l1], BASE);
+        led.open_group(2, ReduceOp::Sum, &[l1, l1], BASE);
+        assert!(led.is_open(1) && led.is_open(2));
+        assert_ne!(led.plan(l0, 1), led.plan(l0, 2));
+        assert_eq!(led.stats.groups, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "opened twice")]
+    fn duplicate_group_refused() {
+        let (mut led, [l0, _l1, _root]) = tree_ledger();
+        led.open_group(5, ReduceOp::Sum, &[l0], BASE);
+        led.open_group(5, ReduceOp::Sum, &[l0], BASE);
+    }
+}

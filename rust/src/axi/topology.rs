@@ -26,6 +26,7 @@
 //! against the flat golden reference.
 
 use super::addr_map::{AddrMap, AddrRule};
+use super::reduce::{RedNode, ReduceHandle, ReduceLedger};
 use super::resv::{ResvHandle, ResvLedger, ResvNode};
 use super::types::{AxiLink, LinkId, LinkPool};
 use super::xbar::{Xbar, XbarCfg, XbarStats};
@@ -161,6 +162,21 @@ impl<'p> TopologyBuilder<'p> {
              ({n_e2e} of {} nodes set it)",
             self.nodes.len()
         );
+        // Same argument for in-network reduction: a flag-off node would
+        // neither combine nor know the membership plan, so a group
+        // whose converging tree crosses it would over-deliver at the
+        // destination's join count. Mixed flags are refused loudly.
+        let n_red = self
+            .nodes
+            .iter()
+            .filter(|n| n.cfg.fabric_reduce)
+            .count();
+        assert!(
+            n_red == 0 || n_red == self.nodes.len(),
+            "{name}: fabric_reduce must be uniform across the topology \
+             ({n_red} of {} nodes set it)",
+            self.nodes.len()
+        );
         let mut xbars: Vec<Xbar> = self
             .nodes
             .into_iter()
@@ -201,12 +217,30 @@ impl<'p> TopologyBuilder<'p> {
         } else {
             None
         };
+        let reduce = if xbars.iter().any(|x| x.cfg.fabric_reduce) {
+            // the in-network-reduction membership oracle mirrors the
+            // reservation ledger's wiring: every node registered (node
+            // id == crossbar index), every connect() edge declared
+            let mut ledger = ReduceLedger::new();
+            let nodes: Vec<RedNode> = xbars.iter().map(|x| ledger.register(&x.cfg)).collect();
+            for &(from, s_port, to) in &self.edges {
+                ledger.wire(nodes[from.0], s_port, nodes[to.0]);
+            }
+            let handle = ledger.into_handle();
+            for (x, &node) in xbars.iter_mut().zip(&nodes) {
+                x.attach_reduce(handle.clone(), node);
+            }
+            Some(handle)
+        } else {
+            None
+        };
         Topology {
             name,
             xbars,
             ext_m: self.ext_m,
             ext_s: self.ext_s,
             resv,
+            reduce,
         }
     }
 }
@@ -221,6 +255,11 @@ pub struct Topology {
     /// with `e2e_mcast_order`) — exposed for observability: live
     /// tickets, per-node claim queues, ledger stats.
     pub resv: Option<ResvHandle>,
+    /// The in-network-reduction membership oracle (present iff any
+    /// node was built with `fabric_reduce`): reduction groups are
+    /// opened on it ([`ReduceLedger::open_group`]) before their
+    /// contributors start writing.
+    pub reduce: Option<ReduceHandle>,
 }
 
 impl Topology {
@@ -356,6 +395,12 @@ pub struct FabricParams {
     /// shared [`ResvLedger`] across every node, unlocking concurrent
     /// global multicasts. Off = the RTL-faithful per-crossbar protocol.
     pub e2e_mcast_order: bool,
+    /// In-network reduction (`XbarCfg::fabric_reduce`):
+    /// [`TopologyBuilder::build`] wires a shared [`ReduceLedger`]
+    /// membership oracle across every node, so converging tagged write
+    /// bursts are combined at the fabric's join points. Off = the
+    /// RTL-faithful fabric (reductions resolve at the endpoints).
+    pub fabric_reduce: bool,
 }
 
 impl Default for FabricParams {
@@ -364,8 +409,9 @@ impl Default for FabricParams {
             mcast_enabled: true,
             commit_protocol: true,
             mcast_w_cooldown: 1,
-            force_naive: false,
+            force_naive: crate::util::force_naive_env(),
             e2e_mcast_order: false,
+            fabric_reduce: false,
         }
     }
 }
@@ -377,6 +423,7 @@ impl FabricParams {
         cfg.mcast_w_cooldown = self.mcast_w_cooldown;
         cfg.force_naive = self.force_naive;
         cfg.e2e_mcast_order = self.e2e_mcast_order;
+        cfg.fabric_reduce = self.fabric_reduce;
     }
 }
 
@@ -406,6 +453,10 @@ pub struct TreeTopology {
     pub endpoint_m: Vec<LinkId>,
     /// Per endpoint: the link delivering requests to its slave port.
     pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: the crossbar node its ports attach to (the
+    /// endpoint's fabric entry — node ids double as `RedNode`s /
+    /// `ResvNode`s, registration order being build order).
+    pub endpoint_nodes: Vec<NodeId>,
     /// One per `TreeSpec::services` entry, in order.
     pub service_s: Vec<LinkId>,
     /// One per extra root master port.
@@ -459,6 +510,7 @@ pub fn build_tree(
     // --- leaf level: endpoint rules ---
     let mut endpoint_m = Vec::with_capacity(eps.count);
     let mut endpoint_s = Vec::with_capacity(eps.count);
+    let mut endpoint_nodes = Vec::with_capacity(eps.count);
     let a0 = spec.arity[0];
     let is_root_level = |l: usize| l == levels - 1;
     let mut level_nodes: Vec<NodeId> = Vec::new();
@@ -489,6 +541,7 @@ pub fn build_tree(
         for i in 0..a0 {
             endpoint_m.push(b.ext_master(node, i, &format!("ep{}-m", first + i)));
             endpoint_s.push(b.ext_slave(node, i, &format!("ep{}-s", first + i)));
+            endpoint_nodes.push(node);
         }
         level_nodes.push(node);
     }
@@ -557,6 +610,7 @@ pub fn build_tree(
         topo: b.build(),
         endpoint_m,
         endpoint_s,
+        endpoint_nodes,
         service_s,
         root_m,
         root,
@@ -583,6 +637,9 @@ pub struct MeshTopology {
     pub topo: Topology,
     pub endpoint_m: Vec<LinkId>,
     pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: the tile node it attaches to (see
+    /// `TreeTopology::endpoint_nodes`).
+    pub endpoint_nodes: Vec<NodeId>,
     /// One per [`MeshSpec::services`] entry, in order (all on tile 0).
     pub service_s: Vec<LinkId>,
 }
@@ -643,11 +700,13 @@ pub fn build_mesh(
     // endpoint ports
     let mut endpoint_m = Vec::with_capacity(eps.count);
     let mut endpoint_s = Vec::with_capacity(eps.count);
+    let mut endpoint_nodes = Vec::with_capacity(eps.count);
     for q in 0..t {
         for i in 0..e {
             let ep = q * e + i;
             endpoint_m.push(b.ext_master(nodes[q], i, &format!("ep{ep}-m")));
             endpoint_s.push(b.ext_slave(nodes[q], i, &format!("ep{ep}-s")));
+            endpoint_nodes.push(nodes[q]);
         }
     }
 
@@ -675,6 +734,7 @@ pub fn build_mesh(
         topo: b.build(),
         endpoint_m,
         endpoint_s,
+        endpoint_nodes,
         service_s,
     }
 }
@@ -708,6 +768,8 @@ pub struct BuiltTopo {
     pub topo: Topology,
     pub endpoint_m: Vec<LinkId>,
     pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: its fabric entry node.
+    pub endpoint_nodes: Vec<NodeId>,
 }
 
 /// Instantiate one of the canned shapes over `endpoints`.
@@ -738,6 +800,7 @@ pub fn build_shape(
                 topo: t.topo,
                 endpoint_m: t.endpoint_m,
                 endpoint_s: t.endpoint_s,
+                endpoint_nodes: t.endpoint_nodes,
             }
         }
         TopoShape::Mesh { tiles } => {
@@ -753,6 +816,7 @@ pub fn build_shape(
                 topo: m.topo,
                 endpoint_m: m.endpoint_m,
                 endpoint_s: m.endpoint_s,
+                endpoint_nodes: m.endpoint_nodes,
             }
         }
     }
@@ -907,6 +971,72 @@ mod tests {
             &TopoShape::Flat,
         );
         assert!(t.topo.resv.is_none());
+    }
+
+    #[test]
+    fn fabric_reduce_params_wire_a_shared_oracle_on_all_shapes() {
+        for shape in [
+            TopoShape::Tree { arity: vec![2, 4] },
+            TopoShape::Mesh { tiles: 2 },
+            TopoShape::Flat,
+        ] {
+            let mut pool = LinkPool::new();
+            let params = FabricParams {
+                fabric_reduce: true,
+                ..FabricParams::default()
+            };
+            let t = build_shape(&mut pool, 2, eps(8), params, &shape);
+            let h = t
+                .topo
+                .reduce
+                .as_ref()
+                .expect("fabric_reduce params must build the membership oracle");
+            assert_eq!(h.borrow().n_nodes(), t.topo.xbars.len(), "{shape:?}");
+            assert!(t.topo.xbars.iter().all(|x| x.cfg.fabric_reduce));
+            // entry nodes recorded for every endpoint, and walking a
+            // cross-fabric group plans at least one join
+            assert_eq!(t.endpoint_nodes.len(), 8);
+            let entries: Vec<crate::axi::reduce::RedNode> = (1..8)
+                .map(|i| crate::axi::reduce::RedNode(t.endpoint_nodes[i].0))
+                .collect();
+            h.borrow_mut().open_group(
+                1,
+                crate::axi::reduce::ReduceOp::Sum,
+                &entries,
+                eps(8).addr(0),
+            );
+            assert!(
+                h.borrow().group_joins(1) >= 1,
+                "{shape:?}: 7 converging members must meet somewhere"
+            );
+        }
+        // and the default stays the RTL-faithful endpoint-resolved path
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(8),
+            FabricParams::default(),
+            &TopoShape::Flat,
+        );
+        assert!(t.topo.reduce.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "fabric_reduce must be uniform")]
+    fn mixed_fabric_reduce_flags_are_refused() {
+        let mut pool = LinkPool::new();
+        let mut b = TopologyBuilder::new("mixed-red", &mut pool, 2);
+        let rules = vec![AddrRule::new(0, 0x1000, 0, "r0").with_mcast()];
+        let mut c0 = XbarCfg::new("a", 1, 1, AddrMap::new(rules.clone(), 1).unwrap());
+        c0.fabric_reduce = true;
+        let c1 = XbarCfg::new("b", 1, 1, AddrMap::new(rules, 1).unwrap());
+        let n0 = b.node(c0);
+        let n1 = b.node(c1);
+        b.ext_master(n0, 0, "m0");
+        b.connect(n0, 0, n1, 0);
+        b.ext_slave(n1, 0, "s0");
+        b.build();
     }
 
     #[test]

@@ -101,6 +101,13 @@ pub struct AwBeat {
     /// RTL equivalent is a small side-band tag in `aw_user` next to
     /// the multicast mask.
     pub ticket: Option<u64>,
+    /// In-network reduction group (`XbarCfg::fabric_reduce`): a tagged
+    /// burst converges toward its (unicast) destination and is
+    /// combined with its group peers at every fabric join point (see
+    /// [`crate::axi::reduce`]). Like the multicast mask and the
+    /// reservation ticket, the tag travels in `aw_user`; `None` on all
+    /// non-reduction traffic.
+    pub reduce: Option<crate::axi::reduce::RedTag>,
 }
 
 impl AwBeat {
@@ -302,6 +309,7 @@ mod tests {
             src: 0,
             txn: 1,
             ticket: None,
+            reduce: None,
         });
         l.tick();
         assert_eq!(l.moved(), 0);

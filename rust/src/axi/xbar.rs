@@ -75,9 +75,10 @@ use super::addr_map::AddrMap;
 use super::demux::{Demux, PendingAw, Stall, TargetAw, TargetVec};
 use super::mcast::AddrSet;
 use super::mux::Mux;
+use super::reduce::{NodePlan, RedNode, RedTag, ReduceHandle};
 use super::resv::{ResvHandle, ResvNode, ResvSeq};
 use super::types::{
-    AwBeat, AxiLink, LinkId, LinkPool, RBeat, Resp, SlaveVec, Txn, WBeat, FORK_INLINE,
+    AwBeat, AxiId, AxiLink, LinkId, LinkPool, RBeat, Resp, SlaveVec, Txn, WBeat, FORK_INLINE,
 };
 use crate::sim::sched::Component;
 use crate::sim::Cycle;
@@ -138,6 +139,19 @@ pub struct XbarCfg {
     /// `TopologyBuilder::build` for every shape) and requires
     /// `commit_protocol`.
     pub e2e_mcast_order: bool,
+    /// In-network reduction (`axi::reduce`) — the dual of the
+    /// multicast fork: converging write bursts tagged with a reduction
+    /// group are absorbed at every join point of the fabric and
+    /// forwarded upstream as ONE combined burst per join, saving
+    /// `(contributors - 1) x beats` W beats per hop
+    /// ([`XbarStats::red_beats_saved`]). Off by default (the
+    /// RTL-faithful fabric, where converging traffic resolves at the
+    /// endpoints); the flag only takes effect once a membership oracle
+    /// is attached ([`Xbar::attach_reduce`], done by
+    /// `TopologyBuilder::build` for every shape). With the flag off,
+    /// tagged bursts travel individually and behavior is bit-identical
+    /// to a fabric that never heard of reductions.
+    pub fabric_reduce: bool,
 }
 
 impl XbarCfg {
@@ -155,8 +169,9 @@ impl XbarCfg {
             max_outstanding: 16,
             mcast_commit_lat: 8,
             mcast_w_cooldown: 1,
-            force_naive: false,
+            force_naive: crate::util::force_naive_env(),
             e2e_mcast_order: false,
+            fabric_reduce: false,
         }
     }
 
@@ -296,6 +311,19 @@ pub struct XbarStats {
     pub resv_waits: u64,
     /// Claims retired at this crossbar (ticketed AWs committed here).
     pub resv_commits: u64,
+    /// In-network reduction (`XbarCfg::fabric_reduce`): combined
+    /// bursts this crossbar forwarded upstream — one per fully-arrived
+    /// combine-table entry, the converging dual of `aw_forks`.
+    pub red_joins: u64,
+    /// W beats the combining removed from this crossbar's upstream
+    /// traffic: per join of `k` contributor bursts of `b` beats,
+    /// `(k-1)*b`. The mirror of `w_fork_extra`; the balanced fork/join
+    /// accounting is `w_beats_out == w_beats_in + w_fork_extra -
+    /// red_beats_saved`. Combining acts only on beat arrivals and
+    /// channel pushes — no per-cycle wait counter exists, so
+    /// `Xbar::skip` has nothing to replay and event-horizon parity
+    /// holds by construction (`tests/perf_parity.rs`).
+    pub red_beats_saved: u64,
 }
 
 impl XbarStats {
@@ -318,6 +346,8 @@ impl XbarStats {
         self.resv_tickets += o.resv_tickets;
         self.resv_waits += o.resv_waits;
         self.resv_commits += o.resv_commits;
+        self.red_joins += o.red_joins;
+        self.red_beats_saved += o.red_beats_saved;
     }
 }
 
@@ -339,6 +369,52 @@ struct DecCache {
     txn: Txn,
     targets: TargetVec,
     resp0: Resp,
+}
+
+/// Virtual master index the combine table uses in the exit mux's
+/// W-order queue (in-network reduction): the combined burst is sourced
+/// by the crossbar itself, not by any external master port.
+const RED_MASTER: usize = usize::MAX;
+
+/// Upstream progress of one combine-table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RedState {
+    /// Waiting for contributor bursts (`arrived < expected`).
+    Collecting,
+    /// All contributors absorbed; the combined AW awaits channel space.
+    Ready,
+    /// Combined AW issued; `left` W beats still to stream.
+    Streaming { left: u32 },
+    /// Combined burst fully sent; waiting for the upstream B to fan
+    /// back to the absorbed contributors.
+    AwaitB,
+}
+
+/// One in-flight join of the per-node combine table (in-network
+/// reduction, `axi::reduce`): the contributions of one reduction group
+/// to one burst address converging at this crossbar. Kept in a plain
+/// `Vec` in creation order — iteration order is part of the simulated
+/// behavior, and a randomized-hash map would diverge between runs.
+#[derive(Debug)]
+struct CombineEntry {
+    group: u32,
+    /// Burst base address (all members write the same split).
+    addr: u64,
+    beats: u32,
+    beat_bytes: u32,
+    exit_slave: usize,
+    expected: u32,
+    /// Contributor bursts fully drained into this entry.
+    arrived: u32,
+    /// Absorbed contributors awaiting the fanned B: (master, id, txn).
+    waiters: Vec<(usize, AxiId, Txn)>,
+    state: RedState,
+    /// Transaction tag of the combined upstream burst — the first
+    /// contributor's (globally unique; its original burst was absorbed
+    /// here, so the tag is free to travel on).
+    up_txn: Txn,
+    id: AxiId,
+    tag: RedTag,
 }
 
 /// The crossbar.
@@ -375,6 +451,12 @@ pub struct Xbar {
     /// (end-to-end multicast ordering; `None` = per-crossbar protocol
     /// only, the RTL-faithful default).
     resv: Option<(ResvHandle, ResvNode)>,
+    /// In-network-reduction membership oracle + this crossbar's node id
+    /// (`None` = reductions resolve at the endpoints, the RTL-faithful
+    /// default).
+    red: Option<(ReduceHandle, RedNode)>,
+    /// Live joins of the per-node combine table (creation order).
+    red_entries: Vec<CombineEntry>,
     pub stats: XbarStats,
 
     // ---- worklists (§Perf) ----
@@ -424,6 +506,8 @@ impl Xbar {
             rd_owner: TxnTable::new(force_naive),
             decerr_r: VecDeque::new(),
             resv: None,
+            red: None,
+            red_entries: Vec::new(),
             stats: XbarStats::default(),
             mask_pending: 0,
             mask_w: 0,
@@ -506,6 +590,26 @@ impl Xbar {
         self.resv = Some((handle, node));
     }
 
+    /// Attach the in-network-reduction membership oracle. `node` is
+    /// this crossbar's identity inside the shared ledger;
+    /// `TopologyBuilder::build` wires this for every node when any
+    /// node requests `XbarCfg::fabric_reduce`.
+    pub fn attach_reduce(&mut self, handle: ReduceHandle, node: RedNode) {
+        self.red = Some((handle, node));
+    }
+
+    /// This node's combining duty for `group`, if in-network reduction
+    /// is armed and the node is a join point of the group's converging
+    /// tree (`None` ⇒ the tagged burst rides the plain unicast
+    /// datapath).
+    #[inline]
+    fn red_plan(&self, group: u32) -> Option<NodePlan> {
+        match &self.red {
+            Some((h, node)) if self.cfg.fabric_reduce => h.borrow().plan(*node, group),
+            _ => None,
+        }
+    }
+
     /// Is the end-to-end reservation protocol active on this crossbar?
     #[inline]
     fn e2e(&self) -> bool {
@@ -564,6 +668,7 @@ impl Xbar {
         self.phase_commit(pool);
         self.phase_unicast_aw(pool);
         self.phase_w(pool);
+        self.phase_reduce(pool);
         // cached for the scheduler's idle-skip (§Perf): an idle xbar is
         // only re-woken by visible beats on its ports (activity hints)
         self.maybe_busy = self.busy();
@@ -574,6 +679,25 @@ impl Xbar {
         let ns = self.cfg.n_slaves;
         self.for_each(in_b, ns, pool, |xb, s, pool| {
             if let Some(b) = pool[xb.s_links[s]].b.pop() {
+                // combined reduction burst: fan the single upstream B
+                // out to every absorbed contributor — the converging
+                // dual of the multicast B-join
+                if let Some(i) = xb
+                    .red_entries
+                    .iter()
+                    .position(|e| e.state == RedState::AwaitB && e.up_txn == b.txn)
+                {
+                    let e = xb.red_entries.remove(i);
+                    for (m, id, txn) in e.waiters {
+                        let joined = xb.demux[m]
+                            .join_b(txn, b.resp, id)
+                            .expect("sink join must complete on the fanned B");
+                        xb.stats.b_joined += 1;
+                        xb.demux[m].b_out.push_back(joined);
+                        xb.note_b_out(m);
+                    }
+                    return;
+                }
                 let m = xb
                     .wr_owner
                     .get(b.txn)
@@ -742,6 +866,30 @@ impl Xbar {
                 xb.stats.aw_unicast += 1;
             }
             let cache = xb.dec_cache[m].take().unwrap();
+            // In-network reduction: a tagged contribution arriving at
+            // one of its group's join points is absorbed into the
+            // combine table instead of being forwarded — its W beats
+            // drain through a sink route and ONE combined burst leaves
+            // upstream once every expected contributor arrived
+            // (`phase_reduce`). Non-join-point nodes fall through to
+            // the plain unicast datapath, tag preserved.
+            if let Some(tag) = beat.reduce {
+                if let Some(plan) = xb.red_plan(tag.group) {
+                    debug_assert!(
+                        beat.dest.is_singleton(),
+                        "reduction contributions are unicast"
+                    );
+                    debug_assert_eq!(
+                        cache.targets.first().map(|t| t.slave),
+                        Some(plan.exit_slave),
+                        "membership oracle and datapath decode disagree"
+                    );
+                    xb.demux[m].accept_sink(&beat, plan.exit_slave);
+                    xb.note_w(m);
+                    xb.red_contribution(m, &beat, plan, tag);
+                    return;
+                }
+            }
             // Fabric-wide reservation acquire (e2e ordering): the entry
             // crossbar — the first to see the multicast, before any leg
             // carries a ticket — claims every node of the fork tree and
@@ -911,6 +1059,9 @@ impl Xbar {
             // the reservation ticket rides every forked leg, so each
             // downstream crossbar gates on the same fabric-wide order
             ticket: beat.ticket,
+            // a pass-through reduction contribution keeps its tag so
+            // join points further up still combine it
+            reduce: beat.reduce,
         };
         link.aw.push(fwd);
         mux.push_w_order(m, beat.txn);
@@ -1126,15 +1277,26 @@ impl Xbar {
         let beats_left = route.beats_left;
         let is_mcast = route.is_mcast;
         if route.slaves.is_empty() {
-            // drain W of an unroutable transaction
+            // drain W of an unroutable transaction, or absorb a
+            // reduction contribution into the combine table (sink)
+            let sink = route.sink;
             if beats_left == 0 || pool[self.m_links[m]].w.pop().is_some() {
+                if sink && beats_left > 0 {
+                    // an absorbed beat enters the fabric but never
+                    // leaves it — the join accounting's "in" side
+                    self.stats.w_beats_in += 1;
+                }
                 let r = self.demux[m].w_queue.front_mut().unwrap();
                 r.beats_left = r.beats_left.saturating_sub(1);
                 if r.beats_left == 0 {
                     self.demux[m].w_queue.pop_front();
-                    let b = self.demux[m].complete_unroutable(txn);
-                    self.demux[m].b_out.push_back(b);
-                    self.note_b_out(m);
+                    if sink {
+                        self.red_w_drained(txn);
+                    } else {
+                        let b = self.demux[m].complete_unroutable(txn);
+                        self.demux[m].b_out.push_back(b);
+                        self.note_b_out(m);
+                    }
                 }
             }
             return;
@@ -1181,6 +1343,134 @@ impl Xbar {
         }
     }
 
+    /// Register one absorbed contribution with the combine table
+    /// (in-network reduction): the entry for `(group, burst address)`
+    /// is created lazily on the first arrival and completed when
+    /// `expected` contributor bursts have fully drained.
+    fn red_contribution(&mut self, m: usize, beat: &AwBeat, plan: NodePlan, tag: RedTag) {
+        let idx = self
+            .red_entries
+            .iter()
+            .position(|e| e.group == tag.group && e.addr == beat.dest.addr);
+        let idx = match idx {
+            Some(i) => i,
+            None => {
+                self.red_entries.push(CombineEntry {
+                    group: tag.group,
+                    addr: beat.dest.addr,
+                    beats: beat.beats,
+                    beat_bytes: beat.beat_bytes,
+                    exit_slave: plan.exit_slave,
+                    expected: plan.expected,
+                    arrived: 0,
+                    waiters: Vec::new(),
+                    state: RedState::Collecting,
+                    up_txn: beat.txn,
+                    id: beat.id,
+                    tag,
+                });
+                self.red_entries.len() - 1
+            }
+        };
+        let e = &mut self.red_entries[idx];
+        assert_eq!(
+            e.beats, beat.beats,
+            "{}: reduction group {} contributions disagree on the burst split",
+            self.cfg.name, tag.group
+        );
+        e.waiters.push((m, beat.id, beat.txn));
+        assert!(
+            e.waiters.len() as u32 <= e.expected,
+            "{}: reduction group {} received more contributions than the \
+             membership oracle planned",
+            self.cfg.name,
+            tag.group
+        );
+    }
+
+    /// A sink route finished draining: mark its contribution arrived;
+    /// the last arrival makes the entry ready to issue upstream.
+    fn red_w_drained(&mut self, txn: Txn) {
+        let e = self
+            .red_entries
+            .iter_mut()
+            .find(|e| e.waiters.iter().any(|&(_, _, t)| t == txn))
+            .expect("sink drain without a combine entry");
+        e.arrived += 1;
+        if e.arrived == e.expected {
+            e.state = RedState::Ready;
+        }
+    }
+
+    /// Phase 9 — in-network reduction: issue the combined burst of
+    /// every fully-arrived combine entry and stream its W beats toward
+    /// the destination. Combining never *holds* anything: the exit
+    /// mux's W-order queue is entered only at issue time, when the
+    /// burst's data source (this node) is unconditionally ready, so no
+    /// new waits-for edges beyond those of an ordinary unicast write
+    /// exist (DESIGN.md §7 deadlock argument).
+    // (indexing loop: the body splits borrows across self.mux /
+    // self.stats / pool, which `iter_mut` cannot express)
+    #[allow(clippy::needless_range_loop)]
+    fn phase_reduce(&mut self, pool: &mut LinkPool) {
+        if self.red_entries.is_empty() {
+            return;
+        }
+        for i in 0..self.red_entries.len() {
+            let e = &self.red_entries[i];
+            let (exit, up_txn) = (e.exit_slave, e.up_txn);
+            match e.state {
+                RedState::Ready => {
+                    if pool[self.s_links[exit]].aw.can_push() {
+                        let e = &self.red_entries[i];
+                        pool[self.s_links[exit]].aw.push(AwBeat {
+                            id: e.id,
+                            dest: AddrSet::unicast(e.addr),
+                            beats: e.beats,
+                            beat_bytes: e.beat_bytes,
+                            is_mcast: false,
+                            exclude: None,
+                            src: RED_MASTER,
+                            txn: up_txn,
+                            ticket: None,
+                            // the tag rides on: join points further up
+                            // combine this burst with other branches
+                            reduce: Some(e.tag),
+                        });
+                        self.mux[exit].push_w_order(RED_MASTER, up_txn);
+                        self.stats.red_joins += 1;
+                        self.stats.red_beats_saved +=
+                            (e.expected as u64 - 1) * e.beats as u64;
+                        let beats = e.beats;
+                        self.red_entries[i].state = RedState::Streaming { left: beats };
+                    }
+                }
+                RedState::Streaming { left } => {
+                    if self.mux[exit].w_front_is(RED_MASTER, up_txn)
+                        && pool[self.s_links[exit]].w.can_push()
+                    {
+                        let last = left == 1;
+                        pool[self.s_links[exit]].w.push(WBeat {
+                            last,
+                            src: RED_MASTER,
+                            txn: up_txn,
+                        });
+                        // the combined burst's beats are the join
+                        // accounting's "out" side
+                        self.stats.w_beats_out += 1;
+                        if last {
+                            self.mux[exit].pop_w_order(RED_MASTER, up_txn);
+                            self.red_entries[i].state = RedState::AwaitB;
+                        } else {
+                            self.red_entries[i].state = RedState::Streaming { left: left - 1 };
+                        }
+                    }
+                }
+                RedState::Collecting | RedState::AwaitB => {}
+            }
+        }
+    }
+
     /// Any write/read activity still in flight inside the xbar?
     pub fn busy(&self) -> bool {
         self.pending.iter().any(Option::is_some)
@@ -1188,6 +1478,7 @@ impl Xbar {
             || !self.wr_owner.is_empty()
             || !self.rd_owner.is_empty()
             || !self.decerr_r.is_empty()
+            || !self.red_entries.is_empty()
     }
 
     /// Event horizon (§Perf): the earliest cycle ≥ `now` at which
@@ -1205,6 +1496,16 @@ impl Xbar {
         let mut ev: Option<Cycle> = None;
         let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
         if !self.decerr_r.is_empty() {
+            fold(now);
+        }
+        // a ready or streaming combine entry acts on the next step
+        // (links idle ⇒ its exit channels are pushable); collecting /
+        // await-B entries move only on port activity
+        if self
+            .red_entries
+            .iter()
+            .any(|e| matches!(e.state, RedState::Ready | RedState::Streaming { .. }))
+        {
             fold(now);
         }
         let lat = self.cfg.mcast_commit_lat;

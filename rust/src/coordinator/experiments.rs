@@ -360,8 +360,13 @@ pub struct CollRow {
     /// `hw-concurrent`: concurrent global multicasts, legal only with
     /// `SocConfig::e2e_mcast_order` (the run enables it).
     pub conc: CollectiveResult,
+    /// `hw-reduce`: in-network reduction (`SocConfig::fabric_reduce`,
+    /// the run enables it) — converging phases combined inside the
+    /// fabric, no software combine round-trips.
+    pub red: CollectiveResult,
     pub speedup: f64,
     pub speedup_conc: f64,
+    pub speedup_red: f64,
 }
 
 /// The collectives experiment: every requested op on every requested
@@ -381,12 +386,15 @@ pub fn collectives(
             let sw = run_collective(&cfg, op, CollMode::Sw, bytes);
             let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
             let conc = run_collective(&cfg, op, CollMode::HwConc, bytes);
+            let red = run_collective(&cfg, op, CollMode::HwReduce, bytes);
             rows.push(CollRow {
                 speedup: sw.cycles as f64 / hw.cycles as f64,
                 speedup_conc: sw.cycles as f64 / conc.cycles as f64,
+                speedup_red: sw.cycles as f64 / red.cycles as f64,
                 sw,
                 hw,
                 conc,
+                red,
             });
         }
     }
@@ -397,11 +405,15 @@ pub fn collectives(
         "sw cyc",
         "hw cyc",
         "conc cyc",
+        "red cyc",
         "hw spd",
         "conc spd",
+        "red spd",
         "sw inj W",
         "hw inj W",
         "conc inj W",
+        "red inj W",
+        "red saved",
         "resv waits",
         "numerics",
     ]);
@@ -413,13 +425,18 @@ pub fn collectives(
             r.sw.cycles.to_string(),
             r.hw.cycles.to_string(),
             r.conc.cycles.to_string(),
+            r.red.cycles.to_string(),
             fnum(r.speedup, 2),
             fnum(r.speedup_conc, 2),
+            fnum(r.speedup_red, 2),
             r.sw.dma_w_beats.to_string(),
             r.hw.dma_w_beats.to_string(),
             r.conc.dma_w_beats.to_string(),
+            r.red.dma_w_beats.to_string(),
+            r.red.wide.red_beats_saved.to_string(),
             r.conc.wide.resv_waits.to_string(),
-            if r.sw.numerics_ok && r.hw.numerics_ok && r.conc.numerics_ok {
+            if r.sw.numerics_ok && r.hw.numerics_ok && r.conc.numerics_ok && r.red.numerics_ok
+            {
                 "OK"
             } else {
                 "FAIL"
@@ -451,12 +468,23 @@ pub fn collectives(
                     .set("w_fork_extra_hw", r.hw.wide.w_fork_extra)
                     .set("resv_tickets_conc", r.conc.wide.resv_tickets)
                     .set("resv_waits_conc", r.conc.wide.resv_waits)
+                    // schema v3: the hw-reduce (in-network reduction)
+                    // columns
+                    .set("cycles_red", r.red.cycles)
+                    .set("speedup_red", r.speedup_red)
+                    .set("dma_w_beats_red", r.red.dma_w_beats)
+                    .set("red_joins", r.red.wide.red_joins)
+                    .set("red_beats_saved", r.red.wide.red_beats_saved)
                     .set("combines_sw", r.sw.combines)
                     .set("combines_hw", r.hw.combines)
                     .set("combines_conc", r.conc.combines)
+                    .set("combines_red", r.red.combines)
                     .set(
                         "numerics_ok",
-                        r.sw.numerics_ok && r.hw.numerics_ok && r.conc.numerics_ok,
+                        r.sw.numerics_ok
+                            && r.hw.numerics_ok
+                            && r.conc.numerics_ok
+                            && r.red.numerics_ok,
                     );
                 o
             })
@@ -485,19 +513,32 @@ pub fn collectives_summary(rows: &[CollRow]) -> Json {
         if !c.is_empty() {
             o.set(&format!("{}_conc_speedup_geomean", op.name()), geomean(&c));
         }
+        let d: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.red.op == op)
+            .map(|r| r.speedup_red)
+            .collect();
+        if !d.is_empty() {
+            o.set(&format!("{}_red_speedup_geomean", op.name()), geomean(&d));
+        }
     }
     o
 }
 
 /// Sanity-check a [`CollRow`]: bit-exact numerics on every strategy,
-/// W fork accounting on every crossbar, no decode errors, and the
-/// multicast invariant — neither multicast strategy ever *injects*
-/// more W beats into the fabric than the unicast baseline (the fork
-/// pays per-hop amplification, visible in `w_fork_extra`, never
-/// per-source cost). The concurrent strategy must additionally have
-/// drained its reservation ledger (every ticket committed everywhere).
+/// W fork/join accounting on every crossbar, no decode errors, and the
+/// injection invariants — no hardware strategy ever *injects* more W
+/// beats into the fabric than the unicast baseline, and the in-network
+/// reduction mode injects no more than the concurrent one:
+/// `dma_w_beats_red <= dma_w_beats_conc <= dma_w_beats_sw` (the fork
+/// pays per-hop amplification in `w_fork_extra` and the join saves
+/// per-hop beats in `red_beats_saved`; neither is a per-source cost).
+/// The concurrent and reduce strategies must additionally have drained
+/// their reservation ledgers (every ticket committed everywhere), and
+/// a reduce run that saved beats must actually have emitted fewer
+/// beats than it absorbed.
 pub fn assert_coll_row_invariants(r: &CollRow) {
-    for run in [&r.sw, &r.hw, &r.conc] {
+    for run in [&r.sw, &r.hw, &r.conc, &r.red] {
         assert!(
             run.numerics_ok,
             "{} {} on {}: result buffers diverge from the scalar reference",
@@ -507,8 +548,8 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
         );
         assert_eq!(
             run.wide.w_beats_out,
-            run.wide.w_beats_in + run.wide.w_fork_extra,
-            "{} {} on {}: W fork accounting broken",
+            run.wide.w_beats_in + run.wide.w_fork_extra - run.wide.red_beats_saved,
+            "{} {} on {}: W fork/join accounting broken",
             run.op.name(),
             run.mode.name(),
             run.shape
@@ -522,7 +563,7 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
             run.shape
         );
     }
-    for run in [&r.hw, &r.conc] {
+    for run in [&r.hw, &r.conc, &r.red] {
         assert!(
             run.dma_w_beats <= r.sw.dma_w_beats,
             "{} {} on {}: injects more W beats than the baseline ({} > {})",
@@ -533,16 +574,37 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
             r.sw.dma_w_beats
         );
     }
+    assert!(
+        r.red.dma_w_beats <= r.conc.dma_w_beats,
+        "{} on {}: hw-reduce injects more W beats than hw-concurrent ({} > {})",
+        r.red.op.name(),
+        r.red.shape,
+        r.red.dma_w_beats,
+        r.conc.dma_w_beats
+    );
     // every issued ticket commits at least at its entry node (a run
     // that completed cannot leave claims wedged in the ledger)
-    assert!(
-        r.conc.wide.resv_commits >= r.conc.wide.resv_tickets,
-        "{} on {}: reservation tickets not fully drained ({} commits < {} tickets)",
-        r.conc.op.name(),
-        r.conc.shape,
-        r.conc.wide.resv_commits,
-        r.conc.wide.resv_tickets
-    );
+    for run in [&r.conc, &r.red] {
+        assert!(
+            run.wide.resv_commits >= run.wide.resv_tickets,
+            "{} {} on {}: reservation tickets not fully drained ({} commits < {} tickets)",
+            run.op.name(),
+            run.mode.name(),
+            run.shape,
+            run.wide.resv_commits,
+            run.wide.resv_tickets
+        );
+    }
+    // combining must strictly reduce upstream traffic relative to the
+    // same run's absorbed beats once any join fired without forks
+    if r.red.wide.red_beats_saved > r.red.wide.w_fork_extra {
+        assert!(
+            r.red.wide.w_beats_out < r.red.wide.w_beats_in,
+            "{} on {}: joins saved beats but the fabric emitted no fewer",
+            r.red.op.name(),
+            r.red.shape
+        );
+    }
 }
 
 /// Default fig. 3b sweep parameters (the paper's ranges).

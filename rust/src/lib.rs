@@ -35,9 +35,11 @@
 //!   B-join / deadlock avoidance), the fabric-wide two-phase
 //!   reservation ledger ([`axi::resv`] — end-to-end multicast ordering
 //!   across hierarchy levels, unlocking concurrent global multicasts),
-//!   and the topology subsystem building arbitrary crossbar graphs
-//!   (flat / K-ary trees / meshes, with service windows on the root or
-//!   host tile).
+//!   the in-network reduction subsystem ([`axi::reduce`] — fabric-side
+//!   combining of converging tagged write bursts, the dual of the
+//!   multicast fork), and the topology subsystem building arbitrary
+//!   crossbar graphs (flat / K-ary trees / meshes, with service
+//!   windows on the root or host tile).
 //! * [`occamy`] — the paper's §II-B substrate: Snitch-like clusters
 //!   with L1 SPM + DMA, LLC, wide (512-bit) and narrow (64-bit)
 //!   networks in any [`occamy::WideShape`], multicast interrupts and
@@ -49,14 +51,22 @@
 //!   sweep, and the collective-communication suite
 //!   ([`workloads::collectives`]: broadcast / all-gather /
 //!   reduce-scatter / all-reduce; software baselines vs
-//!   single-multicast vs `hw-concurrent` schedules — N simultaneous
-//!   global multicasts on the reservation protocol — with bit-exact
+//!   single-multicast vs `hw-concurrent` — N simultaneous global
+//!   multicasts on the reservation protocol — vs `hw-reduce` —
+//!   in-network reduction, zero software combines — with bit-exact
 //!   reduction validation).
 //! * [`area`] — §III-A analytical gate-count/timing model (fig. 3a).
 //! * [`runtime`] — PJRT CPU client loading the AOT JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) for functional numerics
 //!   (feature `pjrt`; a stub keeps the default build std-only).
 //! * [`coordinator`] — experiment orchestration, sweeps and reports.
+
+#[cfg(all(feature = "pjrt", feature = "pjrt-off-guard"))]
+compile_error!(
+    "`pjrt-off-guard` asserts the offline stub build: disable the `pjrt` \
+     feature (the guard exists so CI can build the non-default cfg \
+     combination explicitly)"
+);
 
 pub mod area;
 pub mod axi;

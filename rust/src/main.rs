@@ -84,7 +84,8 @@ const CMDS: &[CmdSpec] = &[
             ("shape", "all | groups | flat | mesh (wide-network topology, default all)"),
             (
                 "mode",
-                "both | sw | hw | hw-concurrent (default both; both also prints speedups)",
+                "both | sw | hw | hw-concurrent | hw-reduce (default both; both also \
+                 prints speedups)",
             ),
             ("out", "results directory"),
         ],
@@ -94,6 +95,9 @@ const CMDS: &[CmdSpec] = &[
         about: "regenerate every figure (fig3a, fig3b, fig3c, fig3d, toposweep, collectives)",
         options: &[
             ("exec", "tile executor for fig3c: rust | pjrt"),
+            ("shape", "forwarded to collectives (all | groups | flat | mesh)"),
+            ("mode", "forwarded to collectives (both | sw | hw | hw-concurrent | hw-reduce)"),
+            ("size", "forwarded to collectives (vector size per collective)"),
             ("out", "results directory (default results)"),
         ],
     },
@@ -249,7 +253,8 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
             let summary = collectives_summary(&rows);
             r.table(
                 "Collective operations: software baseline vs hw-multicast vs \
-                 hw-concurrent (e2e reservation) schedules",
+                 hw-concurrent (e2e reservation) vs hw-reduce (in-network \
+                 reduction) schedules",
                 &table,
             );
             r.section("Speedup summary (geomean over shapes)", &summary.pretty());
@@ -257,8 +262,9 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
             r.json("summary", summary);
         }
         m => {
-            let mode = CollMode::parse(m)
-                .ok_or_else(|| format!("unknown --mode '{m}' (both|sw|hw|hw-concurrent)"))?;
+            let mode = CollMode::parse(m).ok_or_else(|| {
+                format!("unknown --mode '{m}' (both|sw|hw|hw-concurrent|hw-reduce)")
+            })?;
             let mut table = axi_mcast::util::table::Table::new(&[
                 "op", "shape", "KiB", "cycles", "inj W", "mcast AWs", "numerics",
             ]);
@@ -392,9 +398,15 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             emit(&r)?;
 
             run_toposweep(args, out)?;
-            // collectives with default parameters (the `all` --clusters
-            // flag is fig3b's comma list, not a single count)
-            run_collectives(&Args::default(), out)?;
+            // Forward the collectives-relevant options so `all` can
+            // exercise the mesh / hw-concurrent / hw-reduce paths CI
+            // reports on. `--clusters` is deliberately NOT forwarded:
+            // on `all` it is fig3b's comma list, not a single count.
+            let fwd: Vec<String> = ["shape", "mode", "size"]
+                .iter()
+                .filter_map(|k| args.get(k).map(|v| format!("--{k}={v}")))
+                .collect();
+            run_collectives(&Args::parse(fwd)?, out)?;
 
             println!("{}", fig3d_schedule(&cfg));
         }

@@ -26,6 +26,26 @@ pub enum Cmd {
         bytes: u64,
         tag: u64,
     },
+    /// Enqueue a reduction contribution (non-blocking): DMA `bytes`
+    /// from `src` toward the unicast address `dst` shared by every
+    /// member of reduction group `group`; the fabric combines the
+    /// converging bursts at its join points
+    /// (`SocConfig::fabric_reduce`) and the functional effect at
+    /// completion is `dst op= src` (see `SocMem::reduce_f64`).
+    ///
+    /// A contribution's B response returns only once its whole group
+    /// completed, so a reduction is a collective synchronisation
+    /// point: members contributing to several groups must issue them
+    /// in one globally consistent group order (like barriers), or the
+    /// groups deadlock each other behind their serialised DMA queues.
+    DmaReduce {
+        src: u64,
+        dst: u64,
+        bytes: u64,
+        tag: u64,
+        group: u32,
+        op: crate::axi::reduce::ReduceOp,
+    },
     /// Block until all previously enqueued DMA jobs completed.
     WaitDma,
     /// Busy the FPUs for `macs` multiply-accumulates, then fire
@@ -245,6 +265,26 @@ impl Cluster {
                     dst,
                     bytes,
                     tag,
+                    red: None,
+                });
+                self.pending_dma += 1;
+                self.prog.pop_front();
+                self.progress += 1;
+            }
+            Cmd::DmaReduce {
+                src,
+                dst,
+                bytes,
+                tag,
+                group,
+                op,
+            } => {
+                self.dma.push(DmaJob {
+                    src,
+                    dst: AddrSet::unicast(dst),
+                    bytes,
+                    tag,
+                    red: Some(crate::axi::reduce::RedTag { group, op }),
                 });
                 self.pending_dma += 1;
                 self.prog.pop_front();
@@ -285,6 +325,7 @@ impl Cluster {
                         src: 0,
                         txn,
                         ticket: None,
+                        reduce: None,
                     });
                     narrow_lsu.w.push(WBeat {
                         last: true,
@@ -311,6 +352,7 @@ impl Cluster {
                         src: 0,
                         txn,
                         ticket: None,
+                        reduce: None,
                     });
                     narrow_lsu.w.push(WBeat {
                         last: true,
@@ -515,6 +557,7 @@ mod tests {
             src: 0,
             txn: 99,
             ticket: None,
+            reduce: None,
         });
         links[3].w.push(WBeat {
             last: true,

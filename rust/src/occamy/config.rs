@@ -120,6 +120,15 @@ pub struct SocConfig {
     /// fabric, where concurrent global broadcasts hit the documented
     /// inter-level W-order deadlock and software must serialise them.
     pub e2e_mcast_order: bool,
+    /// In-network reduction on the wide network (`axi::reduce`, the
+    /// dual of the multicast fork): converging write bursts tagged
+    /// with a reduction group are combined element-wise at every
+    /// fabric join point, one burst forwarded upstream per join. Off =
+    /// the RTL-faithful fabric, where N-to-1 collective traffic
+    /// resolves at the destination cluster (`ComputeHandler`
+    /// round-trips). The flag is purely a fabric-timing switch: tagged
+    /// traffic's memory outcome is bit-identical either way.
+    pub fabric_reduce: bool,
     /// Multicast W-fork cooldown cycles (see `XbarCfg::mcast_w_cooldown`;
     /// 1 = the RTL-calibrated registered fork, 0 = idealised ablation).
     pub mcast_w_cooldown: u32,
@@ -159,8 +168,9 @@ impl Default for SocConfig {
             narrow_mcast: true,
             commit_protocol: true,
             e2e_mcast_order: false,
+            fabric_reduce: false,
             mcast_w_cooldown: 1,
-            force_naive: false,
+            force_naive: crate::util::force_naive_env(),
         }
     }
 }

@@ -18,6 +18,7 @@ use std::collections::VecDeque;
 
 use super::config::SocConfig;
 use crate::axi::mcast::AddrSet;
+use crate::axi::reduce::RedTag;
 use crate::axi::types::{split_bursts, ArBeat, AwBeat, AxiLink, Txn, WBeat};
 use crate::sim::Cycle;
 
@@ -29,6 +30,12 @@ pub struct DmaJob {
     pub bytes: u64,
     /// Workload-visible tag (completion tracking).
     pub tag: u64,
+    /// In-network-reduction contribution (`axi::reduce`): the write
+    /// bursts carry this group tag toward a unicast destination, the
+    /// fabric combines them with the group's peers at its join points,
+    /// and the functional effect at completion is `dst op= src`
+    /// instead of a copy. `None` = plain DMA copy.
+    pub red: Option<RedTag>,
 }
 
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -105,6 +112,11 @@ impl DmaEngine {
             "DMA job bytes ({}) must be a positive multiple of the bus width ({})",
             job.bytes,
             self.beat_bytes
+        );
+        assert!(
+            job.red.is_none() || job.dst.is_singleton(),
+            "a reduction contribution converges on ONE destination \
+             (multicast + reduce on the same job is meaningless)"
         );
         self.queue.push_back(job);
     }
@@ -262,6 +274,10 @@ impl DmaEngine {
                     src: 0,
                     txn,
                     ticket: None,
+                    // every burst of a reduction contribution carries
+                    // the group tag (same burst split on all members,
+                    // so per-burst addresses align at the join points)
+                    reduce: a.job.red,
                 });
                 a.w_stream.push_back((txn, beats));
                 a.b_pending += 1;
@@ -457,6 +473,7 @@ mod tests {
             dst: AddrSet::unicast(CLUSTER_BASE + CLUSTER_STRIDE),
             bytes: 8 * 1024,
             tag: 1,
+            red: None,
         });
         let slave = run_against_slave(&mut dma, 5_000);
         slave.assert_clean();
@@ -475,6 +492,7 @@ mod tests {
             dst: AddrSet::unicast(CLUSTER_BASE + 0x1000),
             bytes: 4 * 1024,
             tag: 2,
+            red: None,
         });
         let slave = run_against_slave(&mut dma, 5_000);
         assert_eq!(dma.completed.len(), 1);
@@ -494,6 +512,7 @@ mod tests {
             dst: mc,
             bytes: 16 * 1024,
             tag: 3,
+            red: None,
         });
         let slave = run_against_slave(&mut dma, 10_000);
         slave.assert_clean();
@@ -513,6 +532,7 @@ mod tests {
             dst: AddrSet::unicast(CLUSTER_BASE + 0x8000),
             bytes: 4096,
             tag: 4,
+            red: None,
         });
         let mut link = AxiLink::new(2);
         let mut txn = 1;
@@ -539,6 +559,7 @@ mod tests {
                 dst: AddrSet::unicast(CLUSTER_BASE + CLUSTER_STRIDE + i * 0x1000),
                 bytes: 1024,
                 tag: i,
+                red: None,
             });
         }
         let slave = run_against_slave(&mut dma, 10_000);

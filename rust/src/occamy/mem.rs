@@ -108,6 +108,27 @@ impl SocMem {
         self.write_f64(dst, &d);
     }
 
+    /// The functional effect of one in-network-reduction contribution
+    /// (`axi::reduce`): element-wise `dst[i] = op(dst[i], src[i])`
+    /// over `n` f64 lanes. `Sum` reuses [`SocMem::add_f64`]; all ops
+    /// are commutative, so the order member contributions complete in
+    /// never changes the result on the integer-valued lanes the
+    /// collectives use.
+    pub fn reduce_f64(&mut self, op: crate::axi::reduce::ReduceOp, dst: u64, src: u64, n: usize) {
+        use crate::axi::reduce::ReduceOp;
+        match op {
+            ReduceOp::Sum => self.add_f64(dst, src, n),
+            ReduceOp::Max | ReduceOp::Min => {
+                let s = self.read_f64(src, n);
+                let mut d = self.read_f64(dst, n);
+                for (dv, sv) in d.iter_mut().zip(&s) {
+                    *dv = op.apply(*dv, *sv);
+                }
+                self.write_f64(dst, &d);
+            }
+        }
+    }
+
     /// Typed helpers for the matmul workload (row-major f64).
     pub fn write_f64(&mut self, addr: u64, vals: &[f64]) {
         let mut buf = Vec::with_capacity(vals.len() * 8);
@@ -177,6 +198,22 @@ mod tests {
         let vals = [1.5f64, -2.25, 1e-300];
         m.write_f64(CLUSTER_BASE + 128, &vals);
         assert_eq!(m.read_f64(CLUSTER_BASE + 128, 3), vals);
+    }
+
+    #[test]
+    fn reduce_f64_applies_all_ops() {
+        use crate::axi::reduce::ReduceOp;
+        let mut m = mem();
+        m.write_f64(CLUSTER_BASE, &[1.0, 5.0, -2.0]);
+        m.write_f64(LLC_BASE, &[4.0, 2.0, -3.0]);
+        m.reduce_f64(ReduceOp::Sum, CLUSTER_BASE, LLC_BASE, 3);
+        assert_eq!(m.read_f64(CLUSTER_BASE, 3), vec![5.0, 7.0, -5.0]);
+        m.write_f64(CLUSTER_BASE, &[1.0, 5.0, -2.0]);
+        m.reduce_f64(ReduceOp::Max, CLUSTER_BASE, LLC_BASE, 3);
+        assert_eq!(m.read_f64(CLUSTER_BASE, 3), vec![4.0, 5.0, -2.0]);
+        m.write_f64(CLUSTER_BASE, &[1.0, 5.0, -2.0]);
+        m.reduce_f64(ReduceOp::Min, CLUSTER_BASE, LLC_BASE, 3);
+        assert_eq!(m.read_f64(CLUSTER_BASE, 3), vec![1.0, 2.0, -3.0]);
     }
 
     #[test]

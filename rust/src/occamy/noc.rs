@@ -21,7 +21,7 @@ use super::config::{
 };
 use crate::axi::topology::{
     build_mesh, build_tree, step_xbars_scheduled, sum_xbar_stats, EndpointMap, FabricParams,
-    MeshSpec, TreeSpec,
+    MeshSpec, NodeId, TreeSpec,
 };
 use crate::axi::types::{LinkId, LinkPool};
 use crate::axi::xbar::{Xbar, XbarStats};
@@ -53,6 +53,13 @@ pub struct Network {
     /// Fabric-wide reservation ledger (present iff
     /// `SocConfig::e2e_mcast_order` — end-to-end multicast ordering).
     pub resv: Option<crate::axi::resv::ResvHandle>,
+    /// In-network-reduction membership oracle (wide network only,
+    /// present iff `SocConfig::fabric_reduce`): reduction groups are
+    /// opened here — see `Soc::open_reduce_group`.
+    pub reduce: Option<crate::axi::reduce::ReduceHandle>,
+    /// Per cluster: the crossbar node its ports attach to (node ids
+    /// double as `RedNode`s, registration order being build order).
+    pub cluster_nodes: Vec<NodeId>,
 }
 
 impl Network {
@@ -126,6 +133,9 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         // multicasts need it on the wide network, their concurrent
         // notify-interrupt multicasts on the narrow one
         e2e_mcast_order: cfg.e2e_mcast_order,
+        // reduction traffic is data traffic: only the wide network
+        // combines (mailbox interrupts carry no reducible payload)
+        fabric_reduce: cfg.fabric_reduce && kind == NetKind::Wide,
     };
     // outstanding budget of the fabric's converging point (tree root /
     // every mesh tile — a tile is both leaf and root)
@@ -148,6 +158,8 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
             return Network {
                 kind,
                 resv: built.topo.resv,
+                reduce: built.topo.reduce,
+                cluster_nodes: built.endpoint_nodes,
                 xbars: built.topo.xbars,
                 cluster_m: built.endpoint_m,
                 cluster_s: built.endpoint_s,
@@ -195,6 +207,8 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
     Network {
         kind,
         resv: built.topo.resv,
+        reduce: built.topo.reduce,
+        cluster_nodes: built.endpoint_nodes,
         xbars: built.topo.xbars,
         cluster_m: built.endpoint_m,
         cluster_s: built.endpoint_s,
@@ -260,6 +274,24 @@ mod tests {
             assert!(nn.ext_m.is_some());
             assert_eq!(nn.xbars.len(), 3);
         }
+    }
+
+    #[test]
+    fn fabric_reduce_arms_the_wide_network_only() {
+        let mut cfg = SocConfig::tiny(8);
+        cfg.fabric_reduce = true;
+        let mut pool = LinkPool::new();
+        let wide = build_network(&cfg, &mut pool, NetKind::Wide);
+        let narrow = build_network(&cfg, &mut pool, NetKind::Narrow);
+        assert!(wide.reduce.is_some(), "wide network must get the oracle");
+        assert!(narrow.reduce.is_none(), "narrow network never combines");
+        assert_eq!(wide.cluster_nodes.len(), 8);
+        // groups shape: clusters 0-3 enter leaf 0, 4-7 leaf 1
+        assert_eq!(wide.cluster_nodes[0], wide.cluster_nodes[3]);
+        assert_ne!(wide.cluster_nodes[0], wide.cluster_nodes[4]);
+        // default stays the RTL-faithful fabric
+        let wide_off = build_network(&SocConfig::tiny(8), &mut pool, NetKind::Wide);
+        assert!(wide_off.reduce.is_none());
     }
 
     #[test]

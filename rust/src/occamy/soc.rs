@@ -93,6 +93,39 @@ impl Soc {
         }
     }
 
+    /// Open an in-network reduction group on the wide fabric's
+    /// membership oracle (`SocConfig::fabric_reduce`): `members` are
+    /// the contributing clusters, `dst` the unicast address they all
+    /// write (`Cmd::DmaReduce` with the same `group`). Members whose
+    /// own window contains `dst` contribute through their local copy
+    /// path and are filtered out of the fabric plan. A no-op when
+    /// `fabric_reduce` is off — the tagged bursts then travel to the
+    /// destination individually, with a bit-identical memory outcome
+    /// (the differential the fuzz suite checks).
+    pub fn open_reduce_group(
+        &mut self,
+        group: u32,
+        op: crate::axi::reduce::ReduceOp,
+        members: &[usize],
+        dst: u64,
+    ) {
+        let Some(handle) = self.wide.reduce.as_ref() else {
+            return;
+        };
+        let dst_cluster = dst
+            .checked_sub(super::config::CLUSTER_BASE)
+            .map(|rel| rel / super::config::CLUSTER_STRIDE);
+        let entries: Vec<crate::axi::reduce::RedNode> = members
+            .iter()
+            .filter(|&&m| Some(m as u64) != dst_cluster)
+            .map(|&m| crate::axi::reduce::RedNode(self.wide.cluster_nodes[m].0))
+            .collect();
+        if entries.is_empty() {
+            return; // purely local reduction: nothing for the fabric
+        }
+        handle.borrow_mut().open_group(group, op, &entries, dst);
+    }
+
     /// One clock cycle; compute events are dispatched through `handler`.
     pub fn step(&mut self, handler: &mut dyn ComputeHandler) {
         let cy = self.cycles;
@@ -129,13 +162,26 @@ impl Soc {
             }
             self.sched.mark_all_dirty(&ports);
         }
-        // DMA completions → functional copies
+        // DMA completions → functional copies / reduction combines
         for i in 0..self.clusters.len() {
-            // tags were recorded inside step; the functional copy for a
-            // completed job is applied here (single borrow of mem)
+            // tags were recorded inside step; the functional effect of
+            // a completed job is applied here (single borrow of mem)
             while let Some(job) = self.clusters[i].pending_copies.pop() {
-                let dsts = job.dst.enumerate();
-                self.mem.dma_copy(job.src, &dsts, job.bytes);
+                match job.red {
+                    Some(tag) => {
+                        // reduction contribution: dst op= src. All ops
+                        // commute, so the completion order of member
+                        // jobs never changes the result — which is why
+                        // fabric-side combining (a pure timing/beat
+                        // optimisation) can stay out of this path.
+                        self.mem
+                            .reduce_f64(tag.op, job.dst.addr, job.src, (job.bytes / 8) as usize);
+                    }
+                    None => {
+                        let dsts = job.dst.enumerate();
+                        self.mem.dma_copy(job.src, &dsts, job.bytes);
+                    }
+                }
             }
         }
 
@@ -431,6 +477,67 @@ mod tests {
             assert_eq!(soc.mem.l1[7][0x4000..0x4040], [0x3C; 64], "{shape:?}: LLC read");
             assert!(soc.wide.stats_sum().aw_mcast >= 1);
         }
+    }
+
+    #[test]
+    fn fabric_reduce_combines_converging_writes_bit_identically() {
+        use crate::axi::reduce::ReduceOp;
+        let dst = {
+            let cfg = SocConfig::tiny(8);
+            cfg.cluster_base(0) + 0x8000
+        };
+        let run = |fabric_reduce: bool| -> Soc {
+            let mut cfg = SocConfig::tiny(8);
+            cfg.fabric_reduce = fabric_reduce;
+            let mut soc = Soc::new(cfg.clone());
+            for c in 1..8usize {
+                let vals: Vec<f64> = (0..32).map(|i| (c * 100 + i) as f64).collect();
+                soc.mem.write_f64(cfg.cluster_base(c), &vals);
+            }
+            soc.open_reduce_group(1, ReduceOp::Sum, &[1, 2, 3, 4, 5, 6, 7], dst);
+            let mut progs = vec![Vec::new(); 8];
+            for (c, p) in progs.iter_mut().enumerate().skip(1) {
+                *p = vec![
+                    Cmd::DmaReduce {
+                        src: cfg.cluster_base(c),
+                        dst,
+                        bytes: 256,
+                        tag: c as u64,
+                        group: 1,
+                        op: ReduceOp::Sum,
+                    },
+                    Cmd::WaitDma,
+                ];
+            }
+            soc.load_programs(progs);
+            soc.run_default(&mut NopCompute).unwrap();
+            soc
+        };
+        let on = run(true);
+        let off = run(false);
+        // functional outcome identical with the fabric combining on or
+        // off — combining is purely a beat/timing optimisation
+        assert_eq!(on.mem.l1, off.mem.l1, "fabric_reduce changed memory");
+        let want: Vec<f64> = (0..32)
+            .map(|i| (1..8).map(|c| (c * 100 + i) as f64).sum())
+            .collect();
+        assert_eq!(on.mem.read_f64(dst, 32), want, "reduced values wrong");
+        // the fabric really combined: joins happened, upstream beats
+        // were saved, and (with no multicasts in flight) the crossbars
+        // emitted strictly fewer W beats than they absorbed
+        let s_on = on.wide.stats_sum();
+        let s_off = off.wide.stats_sum();
+        assert!(s_on.red_joins >= 2, "joins: {:?}", s_on);
+        assert!(s_on.red_beats_saved > 0);
+        assert!(s_on.w_beats_out < s_on.w_beats_in);
+        assert_eq!(
+            s_on.w_beats_out,
+            s_on.w_beats_in + s_on.w_fork_extra - s_on.red_beats_saved,
+            "join accounting broken: {s_on:?}"
+        );
+        assert_eq!(s_off.red_joins, 0);
+        assert_eq!(s_off.red_beats_saved, 0);
+        assert_eq!(s_off.w_beats_out, s_off.w_beats_in + s_off.w_fork_extra);
     }
 
     #[test]

@@ -122,6 +122,7 @@ impl BarrierUnit {
                     src: 0,
                     txn,
                     ticket: None,
+                    reduce: None,
                 });
                 master.w.push(WBeat {
                     last: true,
@@ -170,6 +171,7 @@ mod tests {
             src: 0,
             txn,
             ticket: None,
+            reduce: None,
         });
         link.w.push(WBeat {
             last: true,

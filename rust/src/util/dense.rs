@@ -296,6 +296,104 @@ mod tests {
         }
     }
 
+    /// Brute-force keys whose home slot (at the initial capacity of
+    /// 16, shift 60) is exactly `slot` — lets the tests build probe
+    /// runs at chosen positions, including across the table's wrap
+    /// boundary.
+    fn keys_with_home(slot: usize, n: usize) -> Vec<u64> {
+        let m = DenseTxnMap::new();
+        let mut out = Vec::new();
+        let mut k = 1u64;
+        while out.len() < n {
+            if m.home(k) == slot {
+                out.push(k);
+            }
+            k += 1;
+        }
+        out
+    }
+
+    #[test]
+    fn backward_shift_deletion_across_the_wrap_boundary() {
+        // A probe run that starts in the table's last slot and wraps to
+        // slot 0: removing the resident AT the boundary must slide the
+        // wrapped resident back across it, keeping the run contiguous
+        // (the `find` invariant that an empty slot proves absence).
+        let cap = 16usize;
+        let tail = keys_with_home(cap - 1, 3); // home = 15 → occupy 15, 0, 1
+        let mut m = DenseTxnMap::new();
+        for (i, &k) in tail.iter().enumerate() {
+            m.insert(k, 100 + i);
+        }
+        // stay below the grow threshold (50% of 16 = 8 entries)
+        assert_eq!(m.len(), 3);
+        // remove the head of the run (slot 15): both wrapped residents
+        // must remain findable after the backward shift
+        assert_eq!(m.remove(tail[0]), Some(100));
+        assert_eq!(m.get(tail[1]), Some(101), "resident wrapped at slot 0 lost");
+        assert_eq!(m.get(tail[2]), Some(102), "resident wrapped at slot 1 lost");
+        // remove the middle of the (now shifted) run, then reinsert —
+        // the run must still resolve every key
+        assert_eq!(m.remove(tail[1]), Some(101));
+        assert_eq!(m.get(tail[2]), Some(102));
+        m.insert(tail[1], 7);
+        assert_eq!(m.get(tail[1]), Some(7));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn wrap_boundary_does_not_steal_home_zero_residents() {
+        // A resident whose home IS slot 0 must not be slid backward
+        // into the tail of the table when a wrapped run before it gets
+        // a hole: displacement(j, k) for a home-0 key at slot 0 is 0,
+        // which never reaches the hole distance.
+        let tail = keys_with_home(15, 2); // run occupying 15, 0
+        let zero = keys_with_home(0, 1); // home 0 → displaced to slot 1
+        let mut m = DenseTxnMap::new();
+        m.insert(tail[0], 1);
+        m.insert(tail[1], 2);
+        m.insert(zero[0], 3);
+        // removing slot 15's resident: tail[1] (home 15, at slot 0)
+        // slides back to 15; zero[0] (home 0, at slot 1) must slide to
+        // its own home (slot 0), NOT past it
+        assert_eq!(m.remove(tail[0]), Some(1));
+        assert_eq!(m.get(tail[1]), Some(2));
+        assert_eq!(m.get(zero[0]), Some(3));
+        assert_eq!(m.remove(zero[0]), Some(3));
+        assert_eq!(m.get(tail[1]), Some(2));
+    }
+
+    #[test]
+    fn collision_cluster_churn_keeps_runs_contiguous() {
+        // Many keys hashing to the same home slot form one long probe
+        // run; deleting from the middle repeatedly must never break a
+        // later key's reachability (tombstone-free tables get this
+        // wrong if the shift condition is off by one).
+        let cluster = keys_with_home(5, 6);
+        let mut m = DenseTxnMap::new();
+        for (i, &k) in cluster.iter().enumerate() {
+            m.insert(k, i);
+        }
+        // delete middle-out, verifying every survivor after each removal
+        let mut deleted = std::collections::BTreeSet::new();
+        for del in [2usize, 4, 0, 5] {
+            assert_eq!(m.remove(cluster[del]), Some(del), "remove #{del}");
+            deleted.insert(del);
+            for (i, &k) in cluster.iter().enumerate() {
+                let want = if deleted.contains(&i) { None } else { Some(i) };
+                assert_eq!(m.get(k), want, "cluster key #{i} after removing #{del}");
+            }
+        }
+        assert_eq!(m.len(), 2);
+        // reinsert into the holes and verify the full cluster again
+        for (i, &k) in cluster.iter().enumerate() {
+            m.insert(k, 10 + i);
+        }
+        for (i, &k) in cluster.iter().enumerate() {
+            assert_eq!(m.get(k), Some(10 + i), "cluster key #{i}");
+        }
+    }
+
     #[test]
     #[should_panic(expected = "reserved")]
     fn zero_key_rejected() {

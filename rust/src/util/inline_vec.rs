@@ -258,6 +258,44 @@ mod tests {
     }
 
     #[test]
+    fn spill_then_shrink_back_round_trip() {
+        // Outgrow the inline capacity, then shrink back below it: the
+        // spill is sticky by design (elements stay on the heap — no
+        // copy-back), but every operation must keep behaving exactly
+        // like a Vec through the whole round trip.
+        let mut v: InlineVec<u32, 4> = InlineVec::new();
+        for i in 0..9 {
+            v.push(i);
+        }
+        assert!(v.spilled());
+        // shrink back under the inline capacity
+        for want in (2..9).rev() {
+            assert_eq!(v.pop(), Some(want));
+        }
+        assert_eq!(v.len(), 2);
+        assert!(v.spilled(), "spill is sticky after shrinking back");
+        assert_eq!(v.as_slice(), &[0, 1]);
+        // grow again past the boundary from the shrunk state
+        v.extend(10..16);
+        assert_eq!(v.len(), 8);
+        assert_eq!(v.as_slice(), &[0, 1, 10, 11, 12, 13, 14, 15]);
+        // drain to empty and rebuild inline-sized content
+        v.clear();
+        assert!(v.is_empty());
+        assert_eq!(v.pop(), None);
+        v.push(42);
+        assert_eq!(v.as_slice(), &[42]);
+        // equality/clone semantics are slice semantics regardless of
+        // whether the storage spilled: a never-spilled twin compares ==
+        let w: InlineVec<u32, 4> = [42u32].into_iter().collect();
+        assert!(!w.spilled() && v.spilled());
+        assert_eq!(v, w);
+        let c = v.clone();
+        assert!(!c.spilled(), "clone rebuilds compactly from the slice");
+        assert_eq!(c, v);
+    }
+
+    #[test]
     fn drops_inline_elements_exactly_once() {
         let rc = Rc::new(());
         {

@@ -13,3 +13,19 @@ pub mod prng;
 pub mod proptest_mini;
 pub mod stats;
 pub mod table;
+
+/// CI selector for the §Perf reference path: `FORCE_NAIVE=1` (or
+/// `true`) in the environment makes every default-constructed
+/// `XbarCfg`/`SocConfig` start with `force_naive = true`, so the whole
+/// test suite exercises the scan-everything reference mode — the
+/// naive half of the CI build matrix. Code that sets `force_naive`
+/// explicitly (the parity suites comparing both modes) is unaffected.
+/// Read once; the simulator is single-threaded per process.
+pub fn force_naive_env() -> bool {
+    static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("FORCE_NAIVE")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false)
+    })
+}

@@ -27,6 +27,17 @@
 //!   the re-broadcast from *all* N sources at once; all-reduce runs the
 //!   direct reduce-scatter and re-assembles with N concurrent chunk
 //!   multicasts. These schedules deadlock on the RTL-faithful fabric.
+//! * [`CollMode::HwReduce`] — in-network reduction
+//!   (`SocConfig::fabric_reduce`, the dual of the multicast fork):
+//!   reduce-scatter and all-reduce issue **tagged member bursts** that
+//!   the fabric combines element-wise at its join points
+//!   (`Cmd::DmaReduce` → `axi::reduce`), so the converging N-to-1
+//!   phase needs **no `OP_*_COMBINE` software round-trips at all** —
+//!   every rank's reduced chunk materialises in its `acc` buffer
+//!   directly, and the all-reduce re-assembles with PR 4's concurrent
+//!   chunk multicasts down. Broadcast and all-gather have no reduction
+//!   phase, so they reuse the `hw-concurrent` schedules (the mode
+//!   still arms the reservation protocol for them).
 //!
 //! The [`CollMode::Hw`] all-gather deliberately does **not** issue N
 //! concurrent global multicasts: on the RTL-faithful fabric two
@@ -56,6 +67,7 @@
 //! `Hw` strategy never injects more W beats than the `Sw` baseline.
 
 use crate::axi::mcast::AddrSet;
+use crate::axi::reduce::ReduceOp;
 use crate::axi::xbar::XbarStats;
 use crate::occamy::config::MAILBOX_OFFSET;
 use crate::occamy::{Cmd, ComputeHandler, Soc, SocConfig, SocMem, WideShape};
@@ -110,6 +122,11 @@ pub enum CollMode {
     /// the fabric-wide reservation protocol
     /// (`SocConfig::e2e_mcast_order`), which this mode switches on.
     HwConc,
+    /// In-network reduction: the converging phases run as tagged
+    /// member bursts combined inside the fabric
+    /// (`SocConfig::fabric_reduce`, switched on by this mode together
+    /// with the reservation protocol), no software combine round-trips.
+    HwReduce,
 }
 
 impl CollMode {
@@ -118,6 +135,7 @@ impl CollMode {
             CollMode::Sw => "sw",
             CollMode::Hw => "hw-mcast",
             CollMode::HwConc => "hw-concurrent",
+            CollMode::HwReduce => "hw-reduce",
         }
     }
 
@@ -126,11 +144,17 @@ impl CollMode {
             "sw" | "unicast" => Some(CollMode::Sw),
             "hw" | "hw-mcast" | "mcast" => Some(CollMode::Hw),
             "hw-concurrent" | "hwconc" | "concurrent" | "conc" => Some(CollMode::HwConc),
+            "hw-reduce" | "hwred" | "reduce" | "red" => Some(CollMode::HwReduce),
             _ => None,
         }
     }
 
-    pub const ALL: [CollMode; 3] = [CollMode::Sw, CollMode::Hw, CollMode::HwConc];
+    pub const ALL: [CollMode; 4] = [
+        CollMode::Sw,
+        CollMode::Hw,
+        CollMode::HwConc,
+        CollMode::HwReduce,
+    ];
 }
 
 /// Per-cluster L1 layout of one collective run. All offsets are
@@ -223,6 +247,9 @@ impl CollLayout {
             (CollOp::AllGather, _) => self.work,
             (CollOp::ReduceScatter, CollMode::Sw) => self.slots,
             (CollOp::ReduceScatter, CollMode::Hw | CollMode::HwConc) => self.slots + self.bytes,
+            // in-fabric combining needs no contribution slots: only
+            // data + the acc result region (gather is their end bound)
+            (CollOp::ReduceScatter, CollMode::HwReduce) => self.gather,
             (CollOp::AllReduce, CollMode::Sw) => self.slots,
             (CollOp::AllReduce, CollMode::Hw) => {
                 self.lslots + self.n_groups.saturating_sub(1) as u64 * self.bytes
@@ -230,6 +257,8 @@ impl CollLayout {
             // direct reduce-scatter slots + the gather result region
             // (gather lies below slots, so the slot end bounds both)
             (CollOp::AllReduce, CollMode::HwConc) => self.slots + self.bytes,
+            // data + acc + gather, no slots (work is their end bound)
+            (CollOp::AllReduce, CollMode::HwReduce) => self.work,
         }
     }
 }
@@ -377,7 +406,7 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
         (CollOp::Broadcast, CollMode::Hw) => {
             hw_broadcast(cfg, l, &mut progs);
         }
-        (CollOp::Broadcast, CollMode::HwConc) if n >= 4 => {
+        (CollOp::Broadcast, CollMode::HwConc | CollMode::HwReduce) if n >= 4 => {
             // scatter + concurrent all-gather (the van-de-Geijn
             // large-message broadcast): rank 0 scatters chunk j into
             // rank j's result slot, then EVERY rank re-broadcasts its
@@ -422,7 +451,7 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
                 });
             }
         }
-        (CollOp::Broadcast, CollMode::HwConc) => {
+        (CollOp::Broadcast, CollMode::HwConc | CollMode::HwReduce) => {
             // n < 4: the scatter phase has nothing to amortise — the
             // single-multicast schedule is already optimal
             hw_broadcast(cfg, l, &mut progs);
@@ -472,7 +501,7 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
                 }
             }
         }
-        (CollOp::AllGather, CollMode::HwConc) => {
+        (CollOp::AllGather, CollMode::HwConc | CollMode::HwReduce) => {
             // the schedule §6 explicitly could not express before: all
             // n ranks multicast their own chunk into everyone's gather
             // slot AT ONCE — n concurrent global multicasts, no gather
@@ -501,6 +530,11 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
             // no distribution phase to parallelise: the concurrent mode
             // is the same direct all-to-all scatter + local fold
             direct_reduce_scatter(cfg, l, &mut progs);
+        }
+        (CollOp::ReduceScatter, CollMode::HwReduce) => {
+            // tagged member bursts combined inside the fabric — the
+            // reduced chunks land in `acc` with zero software combines
+            fabric_reduce_scatter(cfg, l, &mut progs);
         }
         // ---- all-reduce ----
         (CollOp::AllReduce, CollMode::Sw) => {
@@ -572,6 +606,27 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
                     p.push(Cmd::SendIrq { dst: irq(leader) });
                     p.push(Cmd::WaitIrq { count: 1 });
                 }
+            }
+        }
+        (CollOp::AllReduce, CollMode::HwReduce) => {
+            // in-fabric reduce-scatter (every rank's reduced chunk
+            // lands in `acc` — no software combines), then PR 4's n
+            // concurrent chunk multicasts re-assemble the full vector
+            fabric_reduce_scatter(cfg, l, &mut progs);
+            for (r, p) in progs.iter_mut().enumerate() {
+                p.push(Cmd::Dma {
+                    src: l1(r, l.acc),
+                    dst: cfg.cluster_set(0, n, l.gather + r as u64 * l.chunk),
+                    bytes: l.chunk,
+                    tag: 100 + r as u64,
+                });
+                p.push(Cmd::WaitDma);
+                p.push(Cmd::SendIrq {
+                    dst: cfg.all_mailboxes(),
+                });
+                p.push(Cmd::WaitIrq {
+                    count: n as u32,
+                });
             }
         }
         (CollOp::AllReduce, CollMode::HwConc) => {
@@ -661,6 +716,41 @@ fn direct_reduce_scatter(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>]
             macs: (n as u64 - 1) * ce,
             op: OP_RS_DIRECT,
             arg: 0,
+        });
+    }
+}
+
+/// The in-fabric reduce-scatter (`CollMode::HwReduce`): rank r issues
+/// one tagged contribution per chunk j — `Cmd::DmaReduce` into rank
+/// j's `acc`, reduction group j — and the fabric combines the
+/// converging bursts at its join points (`axi::reduce`). Rank j's own
+/// contribution is a local accumulate (no fabric traffic), so the
+/// injected-beat count equals the direct all-to-all scatter's; the
+/// saving is upstream, visible as `XbarStats::red_beats_saved`. The
+/// `acc` buffers start zeroed (fresh SoC memory) and every combine is
+/// a commutative exact integer sum, so no ordering is needed beyond
+/// the closing notify round. Zero `OP_*` compute round-trips. Shared
+/// by the hw-reduce reduce-scatter and the all-reduce front half;
+/// `run_collective` opens group j on the membership oracle.
+fn fabric_reduce_scatter(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>]) {
+    let n = l.n;
+    for (r, p) in progs.iter_mut().enumerate() {
+        for j in 0..n {
+            p.push(Cmd::DmaReduce {
+                src: cfg.cluster_base(r) + l.data + j as u64 * l.chunk,
+                dst: cfg.cluster_base(j) + l.acc,
+                bytes: l.chunk,
+                tag: j as u64,
+                group: j as u32,
+                op: ReduceOp::Sum,
+            });
+        }
+        p.push(Cmd::WaitDma);
+        p.push(Cmd::SendIrq {
+            dst: cfg.all_mailboxes(),
+        });
+        p.push(Cmd::WaitIrq {
+            count: n as u32,
         });
     }
 }
@@ -783,6 +873,15 @@ pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -
             cfg.narrow_mcast = true;
             cfg.e2e_mcast_order = true;
         }
+        CollMode::HwReduce => {
+            // in-network combining on the wide fabric + the
+            // reservation protocol for the concurrent multicast-down
+            // phases and the concurrent notify interrupts
+            cfg.wide_mcast = true;
+            cfg.narrow_mcast = true;
+            cfg.e2e_mcast_order = true;
+            cfg.fabric_reduce = true;
+        }
         CollMode::Sw => {
             cfg.wide_mcast = false;
             cfg.narrow_mcast = false;
@@ -800,6 +899,23 @@ pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -
     let n = l.n;
     let (se, ce) = (l.elems(), l.chunk_elems());
     let mut soc = Soc::new(cfg.clone());
+
+    // in-fabric reduction groups: one per chunk, all ranks members,
+    // converging on rank j's acc buffer (the membership oracle filters
+    // rank j's own — local — contribution out of the fabric plan)
+    if mode == CollMode::HwReduce
+        && matches!(op, CollOp::ReduceScatter | CollOp::AllReduce)
+    {
+        let members: Vec<usize> = (0..n).collect();
+        for j in 0..n {
+            soc.open_reduce_group(
+                j as u32,
+                ReduceOp::Sum,
+                &members,
+                cfg.cluster_base(j) + l.acc,
+            );
+        }
+    }
 
     // ---- seed contributions ----
     let vals: Vec<Vec<f64>> = (0..n).map(|r| rank_values(r, se)).collect();
@@ -966,8 +1082,40 @@ mod tests {
         for mode in CollMode::ALL {
             let r = run_collective(&cfg(4), CollOp::ReduceScatter, mode, SMALL);
             assert!(r.numerics_ok, "reduce-scatter {:?} numerics", mode);
-            assert!(r.combines > 0, "reduction must run through the handler");
+            if mode == CollMode::HwReduce {
+                // the whole point: combining moved into the fabric
+                assert_eq!(r.combines, 0, "hw-reduce must not round-trip");
+                assert!(r.wide.red_joins > 0, "fabric must combine");
+            } else {
+                assert!(r.combines > 0, "reduction must run through the handler");
+            }
         }
+    }
+
+    #[test]
+    fn hw_reduce_combines_in_fabric_and_saves_upstream_beats() {
+        for op in [CollOp::ReduceScatter, CollOp::AllReduce] {
+            let conc = run_collective(&cfg(8), op, CollMode::HwConc, 4096);
+            let red = run_collective(&cfg(8), op, CollMode::HwReduce, 4096);
+            assert!(red.numerics_ok, "{} hw-reduce numerics", op.name());
+            assert_eq!(red.combines, 0, "{}: software combines survived", op.name());
+            assert!(red.wide.red_joins > 0, "{}: no fabric joins", op.name());
+            assert!(red.wide.red_beats_saved > 0);
+            // injection parity with the direct scatter; the saving is
+            // upstream, inside the fabric
+            assert!(
+                red.dma_w_beats <= conc.dma_w_beats,
+                "{}: hw-reduce injects more than hw-concurrent ({} > {})",
+                op.name(),
+                red.dma_w_beats,
+                conc.dma_w_beats
+            );
+        }
+        // broadcast has no converging phase: hw-reduce falls back to
+        // the concurrent schedule and must not open any join
+        let b = run_collective(&cfg(8), CollOp::Broadcast, CollMode::HwReduce, 4096);
+        assert!(b.numerics_ok);
+        assert_eq!(b.wide.red_joins, 0);
     }
 
     #[test]
@@ -1056,8 +1204,8 @@ mod tests {
                 let r = run_collective(&cfg(4), op, mode, SMALL);
                 assert_eq!(
                     r.wide.w_beats_out,
-                    r.wide.w_beats_in + r.wide.w_fork_extra,
-                    "{} {}: W fork accounting broken",
+                    r.wide.w_beats_in + r.wide.w_fork_extra - r.wide.red_beats_saved,
+                    "{} {}: W fork/join accounting broken",
                     op.name(),
                     mode.name()
                 );

@@ -140,6 +140,7 @@ impl ScriptMaster {
                 src: 0,
                 txn,
                 ticket: None,
+                reduce: None,
             });
             self.sending = Some((txn, beats));
             self.inflight += 1;
@@ -186,6 +187,7 @@ pub fn run_topo_script_timed(
         mut topo,
         endpoint_m,
         endpoint_s,
+        ..
     } = build_shape(&mut pool, 2, topo_endpoints(n_endpoints), params, shape);
     let src = endpoint_m[0];
     let mut master = ScriptMaster::new(script);

@@ -1,11 +1,14 @@
 //! Integration suite for the collectives workload family: bit-exact
 //! data correctness for every op on every wide-network shape, in all
-//! three strategies (sw / hw-mcast / hw-concurrent), plus the cost
-//! invariants (no multicast strategy injects more W beats into the
-//! fabric than the unicast baseline, the per-crossbar W fork
-//! accounting always balances, and the hw-concurrent schedules — N
-//! simultaneous global multicasts on the e2e reservation protocol —
-//! beat the one-multicast-in-flight schedule).
+//! four strategies (sw / hw-mcast / hw-concurrent / hw-reduce), plus
+//! the cost invariants (no hardware strategy injects more W beats into
+//! the fabric than the unicast baseline and
+//! `dma_w_beats_red <= dma_w_beats_conc <= dma_w_beats_sw` per row,
+//! the per-crossbar W fork/join accounting always balances, the
+//! hw-concurrent schedules — N simultaneous global multicasts on the
+//! e2e reservation protocol — beat the one-multicast-in-flight
+//! schedule, and the hw-reduce schedules combine converging traffic
+//! inside the fabric with zero software combines).
 
 use axi_mcast::coordinator::experiments::{assert_coll_row_invariants, collectives};
 use axi_mcast::occamy::{SocConfig, WideShape};
@@ -182,6 +185,59 @@ fn concurrent_broadcast_pipelines_from_all_sources() {
         conc.cycles,
         sw.cycles
     );
+}
+
+/// ISSUE acceptance: the `hw-reduce` reduce-scatter and all-reduce —
+/// tagged member bursts combined inside the fabric — stay bit-exact on
+/// all four shapes (groups / flat / mesh / deep tree), dispatch ZERO
+/// software combines, really join in-network, and shrink the fabric's
+/// upstream W traffic relative to the endpoint-resolved direct
+/// scatter. (The `red <= conc <= sw` injection chain is asserted per
+/// row by `assert_coll_row_invariants` in
+/// `all_ops_all_shapes_all_modes_bit_exact`.)
+#[test]
+fn hw_reduce_joins_in_network_on_every_shape() {
+    let cfg = cfg8();
+    let mut shapes = default_shapes(&cfg);
+    shapes.push(WideShape::Tree(vec![2, 2, 2]));
+    for shape in shapes {
+        let mut cfg = cfg.clone();
+        cfg.wide_shape = shape.clone();
+        for op in [CollOp::ReduceScatter, CollOp::AllReduce] {
+            let conc = run_collective(&cfg, op, CollMode::HwConc, BYTES8);
+            let red = run_collective(&cfg, op, CollMode::HwReduce, BYTES8);
+            assert!(red.numerics_ok, "{} on {}", op.name(), shape.label());
+            assert_eq!(
+                red.combines,
+                0,
+                "{} on {}: hw-reduce must not round-trip through the handler",
+                op.name(),
+                shape.label()
+            );
+            assert!(
+                red.wide.red_joins > 0 && red.wide.red_beats_saved > 0,
+                "{} on {}: converging members never combined ({:?})",
+                op.name(),
+                shape.label(),
+                red.wide
+            );
+            assert!(
+                red.dma_w_beats <= conc.dma_w_beats,
+                "{} on {}: hw-reduce injects more than the direct scatter",
+                op.name(),
+                shape.label()
+            );
+            // upstream saving: hop-for-hop the combining fabric moves
+            // fewer W beats than the endpoint-resolved scatter phase
+            assert_eq!(
+                red.wide.w_beats_out,
+                red.wide.w_beats_in + red.wide.w_fork_extra - red.wide.red_beats_saved,
+                "{} on {}: join accounting",
+                op.name(),
+                shape.label()
+            );
+        }
+    }
 }
 
 /// The wide-shape plumbing itself: the same multicast workload delivers

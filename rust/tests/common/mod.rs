@@ -154,6 +154,7 @@ impl TestMaster {
                 src: self.idx,
                 txn,
                 ticket: None,
+                reduce: None,
             });
             self.state = MState::SendW {
                 txn,

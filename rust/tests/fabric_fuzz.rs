@@ -1,0 +1,443 @@
+//! Differential fuzz across the whole crossbar fabric.
+//!
+//! One random per-cluster workload — unicast writes, mask-form
+//! multicasts, remote/LLC reads and in-network reduction groups
+//! interleaved — is run end-to-end on every wide-network shape
+//! (groups / flat / 3-level tree / mesh) in every fabric configuration
+//! (optimised vs `force_naive`, end-to-end multicast ordering on/off,
+//! fabric-side combining on/off) and checked **bit-exactly** against a
+//! scalar golden memory model built directly from the generated job
+//! list. The generator keeps every destination slot disjoint per
+//! source (copies) or per group (commutative reductions), so the final
+//! memory image is schedule-independent and the golden is exact.
+//!
+//! On top of memory equality the suite checks:
+//!
+//! * opt vs `force_naive` **cycle parity** per configuration (the
+//!   §Perf contract, now covering the combine phase),
+//! * the fork/join beat accounting on every run
+//!   (`w_beats_out == w_beats_in + w_fork_extra − red_beats_saved`),
+//! * the reduction invariant on reduce-only traffic:
+//!   `red_beats_saved > 0 ⇒ w_beats_out < w_beats_in`,
+//! * `fabric_reduce` and `e2e_mcast_order` never change memory — they
+//!   are timing/beat optimisations only.
+//!
+//! Seeds are fixed (CI runs this with a short budget on every push);
+//! concurrent *global* multicasts are generated only for the
+//! `e2e`-armed configurations — on the RTL-faithful fabric they can
+//! hit the documented inter-level W-order deadlock, which is a feature
+//! of the model, not a fuzz bug (DESIGN.md §1).
+
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::reduce::ReduceOp;
+use axi_mcast::axi::xbar::XbarStats;
+use axi_mcast::occamy::config::{CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE};
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig, SocMem, WideShape};
+use axi_mcast::util::prng::Pcg;
+
+const N: usize = 8;
+/// Per-cluster L1 region map (l1_bytes = 128 KiB = 0x2_0000):
+/// sources are seeded once and never written; every write destination
+/// is a per-source or per-group slot, so the outcome is order-free.
+const SRC_OFF: u64 = 0x0000; // 16 KiB of seeded source data
+const UNI_OFF: u64 = 0x8000; // unicast dst slots, 1 KiB per source
+const MC_OFF: u64 = 0xC000; // multicast dst slots, 1 KiB per source
+const RED_OFF: u64 = 0x1_0000; // reduction dst slots, 1 KiB per group
+const RD_OFF: u64 = 0x1_8000; // read-back dst slots, 1 KiB per source
+const SLOT: u64 = 0x400;
+
+fn l1(c: usize, off: u64) -> u64 {
+    CLUSTER_BASE + c as u64 * CLUSTER_STRIDE + off
+}
+
+/// One generated job, in a form both the simulator programs and the
+/// scalar golden can be built from.
+#[derive(Debug, Clone)]
+enum Job {
+    /// Copy `bytes` from `src` (absolute, inside a seeded region) to
+    /// every address of `dst`.
+    Copy { src: u64, dst: AddrSet, bytes: u64 },
+    /// Reduction contribution: `dst op= src` over `bytes / 8` lanes.
+    Reduce {
+        src: u64,
+        dst: u64,
+        bytes: u64,
+        group: u32,
+        op: ReduceOp,
+    },
+    /// Pure read (remote L1 / LLC → own RD slot): a copy whose source
+    /// side exercises AR/R through the fabric.
+    Read { src: u64, dst: u64, bytes: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct Workload {
+    /// Per cluster, in issue order.
+    jobs: Vec<Vec<Job>>,
+    /// (group, op, members, dst) — opened on the membership oracle.
+    groups: Vec<(u32, ReduceOp, Vec<usize>, u64)>,
+}
+
+/// Deterministic f64 seed value for lane `i` of cluster `c`'s source
+/// region (integer-valued, so reductions are exact in any order).
+fn seed_val(c: usize, i: usize) -> f64 {
+    (((c * 1_000 + i) % 997) as i64 - 498) as f64
+}
+
+fn seed_mem(mem: &mut SocMem) {
+    for c in 0..N {
+        let vals: Vec<f64> = (0..(0x4000 / 8)).map(|i| seed_val(c, i)).collect();
+        mem.write_f64(l1(c, SRC_OFF), &vals);
+    }
+    // LLC source window: reuse a distinct pattern
+    let vals: Vec<f64> = (0..(0x1000 / 8)).map(|i| seed_val(N, i)).collect();
+    mem.write_f64(LLC_BASE, &vals);
+}
+
+/// Generate one workload. `global_mcasts` additionally sprinkles
+/// all-cluster multicasts (only legal under e2e ordering);
+/// `with_reduce` includes reduction groups.
+fn gen_workload(seed: u64, global_mcasts: bool, with_reduce: bool) -> Workload {
+    let mut rng = Pcg::new(seed);
+    let mut jobs: Vec<Vec<Job>> = vec![Vec::new(); N];
+    let mut groups = Vec::new();
+
+    if with_reduce {
+        let n_groups = 2 + rng.below(2) as usize; // 2..=3
+        for g in 0..n_groups {
+            let dst_cluster = rng.below(N as u64) as usize;
+            let op = match rng.below(3) {
+                0 => ReduceOp::Sum,
+                1 => ReduceOp::Max,
+                _ => ReduceOp::Min,
+            };
+            // at least 2 fabric members besides the destination
+            let mut members = Vec::new();
+            for c in 0..N {
+                if c != dst_cluster && (members.len() < 2 || rng.below(2) == 0) {
+                    members.push(c);
+                }
+            }
+            let bytes = 64 * (1 + rng.below(8)); // 64..512 B
+            let dst = l1(dst_cluster, RED_OFF + g as u64 * SLOT);
+            for &m in &members {
+                jobs[m].push(Job::Reduce {
+                    src: l1(m, SRC_OFF + (g as u64) * 0x800),
+                    dst,
+                    bytes,
+                    group: g as u32,
+                    op,
+                });
+            }
+            groups.push((g as u32, op, members, dst));
+        }
+    }
+
+    for c in 0..N {
+        let n_jobs = 1 + rng.below(4);
+        for _ in 0..n_jobs {
+            let bytes = 64 * (1 + rng.below(8));
+            let src_off = SRC_OFF + rng.below(24) * 0x200;
+            match rng.below(10) {
+                0..=3 => {
+                    // unicast write into the target's per-source slot
+                    let t = rng.below(N as u64) as usize;
+                    jobs[c].push(Job::Copy {
+                        src: l1(c, src_off),
+                        dst: AddrSet::unicast(l1(t, UNI_OFF + c as u64 * SLOT)),
+                        bytes,
+                    });
+                }
+                4..=6 => {
+                    // multicast: an aligned pair containing c is legal
+                    // on every fabric; global sets only under e2e
+                    let (first, count) = if global_mcasts && rng.below(3) == 0 {
+                        (0, N)
+                    } else {
+                        (c & !1, 2)
+                    };
+                    let mask = (count as u64 - 1) * CLUSTER_STRIDE;
+                    jobs[c].push(Job::Copy {
+                        src: l1(c, src_off),
+                        dst: AddrSet::new(
+                            l1(first, MC_OFF + c as u64 * SLOT),
+                            mask,
+                        ),
+                        bytes,
+                    });
+                }
+                7..=8 => {
+                    // remote L1 read into the own RD slot
+                    let t = rng.below(N as u64) as usize;
+                    jobs[c].push(Job::Read {
+                        src: l1(t, src_off),
+                        dst: l1(c, RD_OFF + c as u64 * SLOT),
+                        bytes,
+                    });
+                }
+                _ => {
+                    // LLC read
+                    jobs[c].push(Job::Read {
+                        src: LLC_BASE + rng.below(8) * 0x200,
+                        dst: l1(c, RD_OFF + c as u64 * SLOT),
+                        bytes: bytes.min(0x400),
+                    });
+                }
+            }
+        }
+    }
+    Workload { jobs, groups }
+}
+
+/// Lower a workload to per-cluster command programs.
+fn programs(w: &Workload) -> Vec<Vec<Cmd>> {
+    w.jobs
+        .iter()
+        .map(|jobs| {
+            let mut p = Vec::new();
+            for (t, j) in jobs.iter().enumerate() {
+                match j {
+                    Job::Copy { src, dst, bytes } => p.push(Cmd::Dma {
+                        src: *src,
+                        dst: *dst,
+                        bytes: *bytes,
+                        tag: t as u64,
+                    }),
+                    Job::Reduce {
+                        src,
+                        dst,
+                        bytes,
+                        group,
+                        op,
+                    } => p.push(Cmd::DmaReduce {
+                        src: *src,
+                        dst: *dst,
+                        bytes: *bytes,
+                        tag: t as u64,
+                        group: *group,
+                        op: *op,
+                    }),
+                    Job::Read { src, dst, bytes } => p.push(Cmd::Dma {
+                        src: *src,
+                        dst: AddrSet::unicast(*dst),
+                        bytes: *bytes,
+                        tag: t as u64,
+                    }),
+                }
+            }
+            if !p.is_empty() {
+                p.push(Cmd::WaitDma);
+            }
+            p
+        })
+        .collect()
+}
+
+/// The scalar golden: seed an identical memory image, then apply every
+/// job functionally — per cluster in issue order (matches per-cluster
+/// DMA serialisation); cross-cluster order is irrelevant because all
+/// destination slots are disjoint per source and reductions commute.
+fn golden(cfg: &SocConfig, w: &Workload) -> Vec<Vec<u8>> {
+    let mut mem = SocMem::new(cfg);
+    seed_mem(&mut mem);
+    for jobs in &w.jobs {
+        for j in jobs {
+            match j {
+                Job::Copy { src, dst, bytes } => {
+                    let dsts = dst.enumerate();
+                    mem.dma_copy(*src, &dsts, *bytes);
+                }
+                Job::Reduce {
+                    src,
+                    dst,
+                    bytes,
+                    op,
+                    ..
+                } => mem.reduce_f64(*op, *dst, *src, (*bytes / 8) as usize),
+                Job::Read { src, dst, bytes } => {
+                    mem.dma_copy(*src, &[*dst], *bytes);
+                }
+            }
+        }
+    }
+    mem.l1
+}
+
+struct RunOut {
+    cycles: u64,
+    wide: XbarStats,
+    l1: Vec<Vec<u8>>,
+}
+
+fn run(shape: &WideShape, w: &Workload, force_naive: bool, e2e: bool, red: bool) -> RunOut {
+    let mut cfg = SocConfig::tiny(N);
+    cfg.wide_shape = shape.clone();
+    cfg.force_naive = force_naive;
+    cfg.e2e_mcast_order = e2e;
+    cfg.fabric_reduce = red;
+    let mut soc = Soc::new(cfg.clone());
+    seed_mem(&mut soc.mem);
+    for (g, op, members, dst) in &w.groups {
+        soc.open_reduce_group(*g, *op, members, *dst);
+    }
+    soc.load_programs(programs(w));
+    soc.run_default(&mut NopCompute).unwrap_or_else(|e| {
+        panic!(
+            "fuzz run on {} (naive={force_naive} e2e={e2e} red={red}): {e}",
+            shape.label()
+        )
+    });
+    RunOut {
+        cycles: soc.cycles,
+        wide: soc.wide.stats_sum(),
+        l1: soc.mem.l1.clone(),
+    }
+}
+
+fn shapes() -> Vec<WideShape> {
+    vec![
+        WideShape::Groups,
+        WideShape::Flat,
+        WideShape::Tree(vec![2, 2, 2]),
+        WideShape::Mesh(2),
+    ]
+}
+
+fn assert_accounting(s: &XbarStats, ctx: &str) {
+    assert_eq!(
+        s.w_beats_out,
+        s.w_beats_in + s.w_fork_extra - s.red_beats_saved,
+        "{ctx}: W fork/join accounting broken: {s:?}"
+    );
+    assert_eq!(s.decerr, 0, "{ctx}: unexpected DECERR");
+}
+
+/// The main differential matrix: every shape × {opt, naive} ×
+/// {e2e off, on} × {reduce off, on}, one fixed-seed workload each,
+/// memory checked against the scalar golden in every cell and cycle
+/// parity checked between the opt/naive halves of each cell.
+/// (~128 full SoC runs — release-only, like the fig3c paper points,
+/// so the debug `cargo test -q` tier stays fast.)
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn differential_matrix_against_scalar_golden() {
+    for seed in [0xFAB1u64, 0xFAB2] {
+        // e2e-off runs get only pair multicasts (safe everywhere); the
+        // golden covers both since memory is mcast-set independent...
+        // but the *job lists* differ, so each flavor has its own golden.
+        let base = gen_workload(seed, false, true);
+        let rich = gen_workload(seed ^ 0x9E37, true, true);
+        let cfg = SocConfig::tiny(N);
+        let base_golden = golden(&cfg, &base);
+        let rich_golden = golden(&cfg, &rich);
+        for shape in shapes() {
+            for red in [false, true] {
+                // RTL-faithful ordering: pair multicasts only
+                let opt = run(&shape, &base, false, false, red);
+                let naive = run(&shape, &base, true, false, red);
+                let ctx = format!("seed {seed:#x} {} e2e=off red={red}", shape.label());
+                assert_eq!(opt.l1, base_golden, "{ctx}: memory diverged from golden");
+                assert_eq!(naive.l1, base_golden, "{ctx}: naive memory diverged");
+                assert_eq!(opt.cycles, naive.cycles, "{ctx}: cycle parity broken");
+                assert_eq!(opt.wide, naive.wide, "{ctx}: stats parity broken");
+                assert_accounting(&opt.wide, &ctx);
+
+                // reservation fabric armed: global multicasts join in
+                let opt = run(&shape, &rich, false, true, red);
+                let naive = run(&shape, &rich, true, true, red);
+                let ctx = format!("seed {seed:#x} {} e2e=on red={red}", shape.label());
+                assert_eq!(opt.l1, rich_golden, "{ctx}: memory diverged from golden");
+                assert_eq!(naive.l1, rich_golden, "{ctx}: naive memory diverged");
+                assert_eq!(opt.cycles, naive.cycles, "{ctx}: cycle parity broken");
+                assert_eq!(opt.wide, naive.wide, "{ctx}: stats parity broken");
+                assert_accounting(&opt.wide, &ctx);
+            }
+        }
+    }
+}
+
+/// `fabric_reduce` is a pure timing/beat optimisation: with the flag
+/// off the tagged bursts travel individually, with it on they combine
+/// at the join points — the memory image must be identical, and the
+/// combining runs must actually have combined.
+#[test]
+fn fabric_reduce_changes_beats_not_memory() {
+    let w = gen_workload(0xD0D0, false, true);
+    for shape in shapes() {
+        let off = run(&shape, &w, false, false, false);
+        let on = run(&shape, &w, false, false, true);
+        assert_eq!(
+            on.l1,
+            off.l1,
+            "{}: fabric_reduce changed memory",
+            shape.label()
+        );
+        assert_eq!(off.wide.red_joins, 0);
+        assert_eq!(off.wide.red_beats_saved, 0);
+        assert!(
+            on.wide.red_joins > 0,
+            "{}: converging groups never combined",
+            shape.label()
+        );
+        // joins absorb beats: the combining fabric moves strictly
+        // fewer W beats hop-for-hop than the endpoint-resolved one
+        assert!(
+            on.wide.w_beats_out < off.wide.w_beats_out,
+            "{}: combining saved nothing ({} vs {})",
+            shape.label(),
+            on.wide.w_beats_out,
+            off.wide.w_beats_out
+        );
+    }
+}
+
+/// The ISSUE invariant on reduce-only traffic (no multicast forks to
+/// mask the saving): `red_beats_saved > 0 ⇒ w_beats_out < w_beats_in`.
+#[test]
+fn reduce_only_traffic_shrinks_upstream() {
+    for seed in [0x5EED1u64, 0x5EED2, 0x5EED3] {
+        let mut rng = Pcg::new(seed);
+        let dst_cluster = rng.below(N as u64) as usize;
+        let members: Vec<usize> = (0..N).filter(|&c| c != dst_cluster).collect();
+        let bytes = 64 * (2 + rng.below(6));
+        let dst = l1(dst_cluster, RED_OFF);
+        let w = Workload {
+            jobs: (0..N)
+                .map(|c| {
+                    if members.contains(&c) {
+                        vec![Job::Reduce {
+                            src: l1(c, SRC_OFF),
+                            dst,
+                            bytes,
+                            group: 0,
+                            op: ReduceOp::Sum,
+                        }]
+                    } else {
+                        Vec::new()
+                    }
+                })
+                .collect(),
+            groups: vec![(0, ReduceOp::Sum, members.clone(), dst)],
+        };
+        let cfg = SocConfig::tiny(N);
+        let gold = golden(&cfg, &w);
+        for shape in shapes() {
+            let out = run(&shape, &w, false, false, true);
+            assert_eq!(out.l1, gold, "seed {seed:#x} {}: memory", shape.label());
+            assert!(
+                out.wide.red_beats_saved > 0,
+                "seed {seed:#x} {}: 7 converging members must combine somewhere",
+                shape.label()
+            );
+            assert!(
+                out.wide.w_beats_out < out.wide.w_beats_in,
+                "seed {seed:#x} {}: saved {} beats but out ({}) >= in ({})",
+                shape.label(),
+                out.wide.red_beats_saved,
+                out.wide.w_beats_out,
+                out.wide.w_beats_in
+            );
+            assert_accounting(&out.wide, &format!("seed {seed:#x} {}", shape.label()));
+        }
+    }
+}

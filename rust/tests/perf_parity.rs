@@ -230,11 +230,25 @@ struct SocOutcome {
 }
 
 fn run_soc(cfg: &SocConfig, progs: Vec<Vec<Cmd>>, force_naive: bool) -> SocOutcome {
+    run_soc_with(cfg, progs, force_naive, &[])
+}
+
+/// Like [`run_soc`], additionally opening in-network reduction groups
+/// (`(group, members, dst)`, all `Sum`) before the programs load.
+fn run_soc_with(
+    cfg: &SocConfig,
+    progs: Vec<Vec<Cmd>>,
+    force_naive: bool,
+    groups: &[(u32, Vec<usize>, u64)],
+) -> SocOutcome {
     let cfg = SocConfig {
         force_naive,
         ..cfg.clone()
     };
     let mut soc = Soc::new(cfg);
+    for (g, members, dst) in groups {
+        soc.open_reduce_group(*g, axi_mcast::axi::reduce::ReduceOp::Sum, members, *dst);
+    }
     soc.load_programs(progs);
     let cycles = soc.run_default(&mut NopCompute).expect("soc parity run");
     SocOutcome {
@@ -431,6 +445,121 @@ fn e2e_reservation_parity_property() {
             let opt = run_soc(&cfg, progs.clone(), false);
             let naive = run_soc(&cfg, progs.clone(), true);
             compare_soc(&opt, &naive)
+        },
+    );
+}
+
+#[test]
+fn fabric_reduce_counters_match_naive_reference() {
+    // In-network reduction: the new red_joins / red_beats_saved
+    // counters — and every other statistic around the combine phase —
+    // must be bit-identical between the optimised and force_naive
+    // modes (the combine acts only on beat arrivals and channel
+    // pushes, so `skip(k)` has nothing to replay; this pins that).
+    let mut cfg = SocConfig::tiny(8);
+    cfg.fabric_reduce = true;
+    let dst = cfg.cluster_base(0) + 0x8000;
+    let members: Vec<usize> = (1..8).collect();
+    let groups = vec![(1u32, members.clone(), dst)];
+    let mut progs = vec![Vec::new(); 8];
+    for (c, prog) in progs.iter_mut().enumerate().skip(1) {
+        *prog = vec![
+            Cmd::DmaReduce {
+                src: cfg.cluster_base(c),
+                dst,
+                bytes: 512,
+                tag: c as u64,
+                group: 1,
+                op: axi_mcast::axi::reduce::ReduceOp::Sum,
+            },
+            Cmd::WaitDma,
+        ];
+    }
+    let opt = run_soc_with(&cfg, progs.clone(), false, &groups);
+    let naive = run_soc_with(&cfg, progs, true, &groups);
+    compare_soc(&opt, &naive).unwrap();
+    assert!(
+        opt.wide.red_joins >= 2,
+        "7 converging members on the group tree must join twice: {:?}",
+        opt.wide
+    );
+    assert!(opt.wide.red_beats_saved > 0);
+    assert!(
+        opt.wide.w_beats_out < opt.wide.w_beats_in,
+        "combining must shrink upstream traffic: {:?}",
+        opt.wide
+    );
+    assert!(
+        opt.skipped > 0,
+        "the horizon must engage around the combine handshakes"
+    );
+    assert_eq!(naive.skipped, 0);
+}
+
+#[test]
+fn fabric_reduce_parity_property() {
+    // random reduction groups + background copy/compute/delay traffic
+    // with the combining fabric armed: still bit-identical vs naive
+    let mut cfg = SocConfig::tiny(8);
+    cfg.fabric_reduce = true;
+    check(
+        "fabric-reduce-parity",
+        Config {
+            cases: 6,
+            ..Config::default()
+        },
+        |g| {
+            let mut progs = random_soc_programs(g, &cfg);
+            // overlay 1-2 reduction groups on top of the random base
+            let n_groups = 1 + g.u64_below(2) as usize;
+            let mut groups = Vec::new();
+            for gi in 0..n_groups {
+                let dst_cluster = g.u64_below(8) as usize;
+                let members: Vec<usize> =
+                    (0..8).filter(|&c| c != dst_cluster).collect();
+                let dst = cfg.cluster_base(dst_cluster) + 0x10000 + gi as u64 * 0x1000;
+                let bytes = 64 * (1 + g.u64_below(8));
+                for &m in &members {
+                    progs[m].push(Cmd::DmaReduce {
+                        src: cfg.cluster_base(m),
+                        dst,
+                        bytes,
+                        tag: 90 + gi as u64,
+                        group: gi as u32,
+                        op: axi_mcast::axi::reduce::ReduceOp::Sum,
+                    });
+                    progs[m].push(Cmd::WaitDma);
+                }
+                groups.push((gi as u32, members, dst));
+            }
+            (progs, groups)
+        },
+        |(progs, groups)| {
+            let opt = run_soc_with(&cfg, progs.clone(), false, groups);
+            let naive = run_soc_with(&cfg, progs.clone(), true, groups);
+            compare_soc(&opt, &naive)
+        },
+    );
+}
+
+#[test]
+fn fabric_reduce_off_is_bit_identical_without_reduce_traffic() {
+    // the acceptance guard: with no tagged traffic, arming
+    // fabric_reduce must leave every observable bit unchanged
+    let cfg_off = SocConfig::tiny(8);
+    let mut cfg_on = SocConfig::tiny(8);
+    cfg_on.fabric_reduce = true;
+    check(
+        "fabric-reduce-off-identical",
+        Config {
+            cases: 4,
+            ..Config::default()
+        },
+        |g| random_soc_programs(g, &cfg_off),
+        |progs| {
+            let off = run_soc(&cfg_off, progs.clone(), false);
+            let on = run_soc(&cfg_on, progs.clone(), false);
+            compare_soc(&off, &on)
         },
     );
 }
