@@ -6,10 +6,13 @@
 //! Every scenario runs in the optimised configuration and in ablation
 //! modes (`naive` = worklists/dense-table/horizon off, the bit-identical
 //! reference checked by `tests/perf_parity.rs`; `no-horizon` = optimised
-//! crossbars but per-cycle stepping), so each §Perf layer's contribution
-//! stays visible. Results are written to `BENCH_sim_perf.json` at the
-//! repo root (schema in EXPERIMENTS.md §Perf); a pre-existing file is
-//! folded in as the `baseline` so the perf trajectory is recorded
+//! crossbars but per-cycle stepping; `parallel` = optimised engine on 4
+//! worker threads), so each §Perf layer's contribution stays visible.
+//! Two dedicated scenarios sweep 1/2/4/8 worker threads over the
+//! largest fabric shapes (mesh broadcast, mesh all-reduce) to chart
+//! parallel scaling. Results are written to `BENCH_sim_perf.json` at
+//! the repo root (schema in EXPERIMENTS.md §Perf); a pre-existing file
+//! is folded in as the `baseline` so the perf trajectory is recorded
 //! PR over PR.
 //!
 //! ```sh
@@ -23,12 +26,15 @@ use std::time::Instant;
 use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
 use axi_mcast::axi::golden::SimSlave;
 use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::topology::{FabricParams, TopoShape};
 use axi_mcast::axi::types::{AwBeat, WBeat};
 use axi_mcast::axi::xbar::{Xbar, XbarCfg};
-use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig, WideShape};
 use axi_mcast::sim::engine::{Engine, StepResult, Watchdog};
 use axi_mcast::util::cli::Args;
 use axi_mcast::util::json::Json;
+use axi_mcast::workloads::collectives::{run_collective, CollMode, CollOp};
+use axi_mcast::workloads::topo_sweep::{broadcast_script, run_topo_script_with};
 
 fn cluster_map(n: usize) -> AddrMap {
     let rules: Vec<AddrRule> = (0..n)
@@ -170,9 +176,12 @@ fn mcast_load_program(cfg: &SocConfig) -> Vec<Vec<Cmd>> {
 /// Whole 32-cluster SoC under the hw-multicast microbenchmark load.
 /// `Soc::new` (SocMem allocation!) happens outside the timed region:
 /// only `run` is measured; cycles/s and cycles/run report separately.
-fn bench_soc_load(iters: u32, force_naive: bool) -> Row {
+/// `threads > 1` exercises the parallel stepping engine (bit-identical
+/// results, wall-clock only).
+fn bench_soc_load(iters: u32, force_naive: bool, threads: usize) -> Row {
     let cfg = SocConfig {
         force_naive,
+        threads,
         ..SocConfig::default()
     };
     let mut total_cycles = 0u64;
@@ -184,7 +193,11 @@ fn bench_soc_load(iters: u32, force_naive: bool) -> Row {
         total_cycles += soc.run_default(&mut NopCompute).unwrap();
         wall += t0.elapsed().as_secs_f64();
     }
-    let variant = if force_naive { "naive" } else { "opt" };
+    let variant = match (force_naive, threads) {
+        (true, _) => "naive",
+        (false, 1) => "opt",
+        _ => "parallel",
+    };
     let mut row = Row::new("SoC 32-cluster hw-mcast load", variant, total_cycles, wall);
     row.cycles_per_run = Some(total_cycles / iters as u64);
     row
@@ -237,15 +250,17 @@ fn run_per_cycle(soc: &mut Soc) -> u64 {
 
 /// Latency-dominated barrier staggering: the event-horizon showcase.
 /// `no-horizon` uses the same optimised crossbars but steps every
-/// cycle, isolating layer (b) from layer (a). All variants run through
-/// the Engine (identical harness cost, and a deadlock regression fails
-/// via the watchdog instead of hanging CI).
+/// cycle, isolating layer (b) from layer (a); `parallel` is the
+/// optimised engine on 4 worker threads (horizons compose). All
+/// variants run through the Engine (identical harness cost, and a
+/// deadlock regression fails via the watchdog instead of hanging CI).
 fn bench_soc_stagger(iters: u32, variant: &'static str) -> Row {
     let cfg = SocConfig {
         force_naive: variant == "naive",
+        threads: if variant == "parallel" { 4 } else { 1 },
         ..SocConfig::default()
     };
-    let horizon = variant == "opt";
+    let horizon = variant == "opt" || variant == "parallel";
     let mut total_cycles = 0u64;
     let mut wall = 0.0f64;
     for _ in 0..iters {
@@ -261,6 +276,48 @@ fn bench_soc_stagger(iters: u32, variant: &'static str) -> Row {
     }
     let mut row = Row::new("SoC 32-cluster barrier stagger", variant, total_cycles, wall);
     row.cycles_per_run = Some(total_cycles / iters as u64);
+    row
+}
+
+/// Thread-scaling sweep over the largest fabric shape: a 4-tile mesh
+/// (32 endpoints, 5 crossbars) under a full hardware-multicast
+/// broadcast script. Simulated cycles are bit-identical across thread
+/// counts (asserted by `tests/parallel_parity.rs`); only wall-clock
+/// moves. Fabric build time is excluded (`TopoTiming::run_s`).
+fn bench_topo_scaling(threads: usize, variant: &'static str) -> Row {
+    let shape = TopoShape::Mesh { tiles: 4 };
+    let script = broadcast_script(32, 16, 16, true);
+    let params = FabricParams {
+        mcast_enabled: true,
+        threads,
+        ..FabricParams::default()
+    };
+    let (res, timing) = run_topo_script_with(&shape, 32, script, params).unwrap();
+    let mut row = Row::new(
+        "topo mesh32 broadcast scaling",
+        variant,
+        res.cycles,
+        timing.run_s,
+    );
+    row.cycles_per_run = Some(res.cycles);
+    row
+}
+
+/// Thread-scaling sweep over the heaviest collective: hw-multicast
+/// all-reduce on the mesh wide-network shape (one crossbar per group,
+/// the most components to spread across workers). `Soc::new` happens
+/// inside `run_collective`, so the wall time includes construction —
+/// identical at every thread count, so ratios stay meaningful.
+fn bench_coll_scaling(threads: usize, variant: &'static str) -> Row {
+    let mut cfg = SocConfig::default();
+    cfg.threads = threads;
+    cfg.wide_shape = WideShape::Mesh(cfg.n_groups());
+    let t0 = Instant::now();
+    let res = run_collective(&cfg, CollOp::AllReduce, CollMode::Hw, 16 * 1024);
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(res.numerics_ok, "all-reduce numerics failed in bench");
+    let mut row = Row::new("coll mesh allreduce scaling", variant, res.cycles, wall);
+    row.cycles_per_run = Some(res.cycles);
     row
 }
 
@@ -284,16 +341,21 @@ fn rows_to_json(rows: &[Row]) -> Json {
     )
 }
 
-fn opt_over_naive(rows: &[Row], scenario: &str) -> Option<f64> {
+/// Throughput ratio `num` / `den` between two variants of a scenario.
+fn variant_ratio(rows: &[Row], scenario: &str, num: &str, den: &str) -> Option<f64> {
     let get = |v: &str| {
         rows.iter()
             .find(|r| r.scenario == scenario && r.variant == v)
             .map(|r| r.mcycle_per_s)
     };
-    match (get("opt"), get("naive")) {
+    match (get(num), get(den)) {
         (Some(o), Some(n)) if n > 0.0 => Some(o / n),
         _ => None,
     }
+}
+
+fn opt_over_naive(rows: &[Row], scenario: &str) -> Option<f64> {
+    variant_ratio(rows, scenario, "opt", "naive")
 }
 
 fn main() {
@@ -309,10 +371,20 @@ fn main() {
     for naive in [false, true] {
         rows.push(bench_xbar_16x16(cycles, naive));
         rows.push(bench_soc_idle(cycles, naive));
-        rows.push(bench_soc_load(iters, naive));
+        rows.push(bench_soc_load(iters, naive, 1));
     }
-    for variant in ["opt", "no-horizon", "naive"] {
+    rows.push(bench_soc_load(iters, false, 4));
+    for variant in ["opt", "no-horizon", "naive", "parallel"] {
         rows.push(bench_soc_stagger(iters.clamp(1, 8), variant));
+    }
+    for (variant, t) in [
+        ("threads=1", 1usize),
+        ("threads=2", 2),
+        ("threads=4", 4),
+        ("threads=8", 8),
+    ] {
+        rows.push(bench_topo_scaling(t, variant));
+        rows.push(bench_coll_scaling(t, variant));
     }
     rows.sort_by(|a, b| (a.scenario, a.variant).cmp(&(b.scenario, b.variant)));
 
@@ -340,6 +412,27 @@ fn main() {
             speedups.set(s, (x * 100.0).round() / 100.0);
         }
     }
+    let mut par_speedups = Json::obj();
+    for (s, base) in [
+        ("SoC 32-cluster hw-mcast load", "opt"),
+        ("SoC 32-cluster barrier stagger", "opt"),
+    ] {
+        if let Some(x) = variant_ratio(&rows, s, "parallel", base) {
+            println!("speedup par/opt    {s:<32} : {x:.2}x");
+            par_speedups.set(s, (x * 100.0).round() / 100.0);
+        }
+    }
+    let mut scaling = Json::obj();
+    for s in ["topo mesh32 broadcast scaling", "coll mesh allreduce scaling"] {
+        let mut curve = Json::obj();
+        for v in ["threads=2", "threads=4", "threads=8"] {
+            if let Some(x) = variant_ratio(&rows, s, v, "threads=1") {
+                println!("scaling {v}/1  {s:<32} : {x:.2}x");
+                curve.set(v, (x * 100.0).round() / 100.0);
+            }
+        }
+        scaling.set(s, curve);
+    }
 
     if !write_json {
         return;
@@ -358,7 +451,7 @@ fn main() {
         .unwrap_or(Json::Null);
     let mut out = Json::obj();
     out.set("bench", "sim_perf")
-        .set("schema", 1u64)
+        .set("schema", 2u64)
         .set("config", {
             let mut c = Json::obj();
             c.set("cycles", cycles).set("iters", iters as u64);
@@ -366,6 +459,8 @@ fn main() {
         })
         .set("scenarios", rows_to_json(&rows))
         .set("speedup_opt_over_naive", speedups)
+        .set("speedup_parallel_over_opt", par_speedups)
+        .set("thread_scaling", scaling)
         .set("baseline", baseline);
     match std::fs::write(&json_path, out.pretty() + "\n") {
         Ok(()) => println!("\nwrote {json_path}"),

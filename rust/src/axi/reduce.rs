@@ -58,9 +58,8 @@
 //! exit port — the same edges any unicast write has — so the PR 4
 //! acyclicity proof for the reservation protocol is unchanged.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use super::types::Addr;
 use super::xbar::XbarCfg;
@@ -115,9 +114,11 @@ pub struct RedTag {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RedNode(pub usize);
 
-/// Shared ledger handle (one per network; `Rc<RefCell<_>>` — the
-/// simulator is single-threaded).
-pub type ReduceHandle = Rc<RefCell<ReduceLedger>>;
+/// Shared ledger handle (one per network; `Arc<Mutex<_>>` —
+/// uncontended in the sequential engine, and read-only during stepping:
+/// groups are opened before a run, so the parallel engine's workers
+/// only ever take the lock for lookups).
+pub type ReduceHandle = Arc<Mutex<ReduceLedger>>;
 
 /// Routing snapshot of one registered crossbar (mirrors
 /// `resv::NodeInfo`: the membership oracle must replay the datapath's
@@ -173,7 +174,7 @@ impl ReduceLedger {
 
     /// Wrap into the shared handle the crossbars hold.
     pub fn into_handle(self) -> ReduceHandle {
-        Rc::new(RefCell::new(self))
+        Arc::new(Mutex::new(self))
     }
 
     /// Register a crossbar node (its routing snapshot). Ports start

@@ -36,16 +36,18 @@
 //!    claims of an aborted ticket.
 //!
 //! The ledger is shared by every crossbar of one network through a
-//! [`ResvHandle`] (`Rc<RefCell<_>>` — the simulator is single-threaded)
-//! wired up by `TopologyBuilder::build` for trees and meshes alike.
+//! [`ResvHandle`] (`Arc<Mutex<_>>` — uncontended in the sequential
+//! engine; the parallel engine keeps every crossbar of a resv-armed
+//! network in one partition, so `reserve`'s sequence assignment stays
+//! in the sequential issue order) wired up by `TopologyBuilder::build`
+//! for trees and meshes alike.
 //! Reservation timing is modelled as a zero-latency side band; the
 //! per-node `mcast_commit_lat` handshake cost still applies at every
 //! level the AW traverses, which is where the RTL's grant-settle
 //! latency lives.
 
-use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use super::mcast::AddrSet;
 use super::xbar::XbarCfg;
@@ -59,7 +61,7 @@ pub type ResvSeq = u64;
 pub struct ResvNode(pub usize);
 
 /// Shared ledger handle (one per network).
-pub type ResvHandle = Rc<RefCell<ResvLedger>>;
+pub type ResvHandle = Arc<Mutex<ResvLedger>>;
 
 /// Routing snapshot of one registered crossbar.
 #[derive(Debug)]
@@ -112,7 +114,7 @@ impl ResvLedger {
 
     /// Wrap into the shared handle the crossbars hold.
     pub fn into_handle(self) -> ResvHandle {
-        Rc::new(RefCell::new(self))
+        Arc::new(Mutex::new(self))
     }
 
     /// Register a crossbar node (its routing snapshot). Ports start

@@ -401,6 +401,13 @@ pub struct FabricParams {
     /// bursts are combined at the fabric's join points. Off = the
     /// RTL-faithful fabric (reductions resolve at the endpoints).
     pub fabric_reduce: bool,
+    /// Worker threads for harnesses that step the fabric themselves
+    /// (`workloads::topo_sweep`): 1 = the sequential golden schedule,
+    /// 0 = one per core, N > 1 = exactly N. Purely a wall-clock knob —
+    /// results stay bit-identical (see [`crate::sim::parallel`]). Not
+    /// an [`XbarCfg`] field: the fabric is oblivious to how it is
+    /// stepped. Defaults from `OCCAMY_THREADS`.
+    pub threads: usize,
 }
 
 impl Default for FabricParams {
@@ -412,6 +419,7 @@ impl Default for FabricParams {
             force_naive: crate::util::force_naive_env(),
             e2e_mcast_order: false,
             fabric_reduce: false,
+            threads: crate::util::threads_env().unwrap_or(1),
         }
     }
 }
@@ -958,7 +966,7 @@ mod tests {
             };
             let t = build_shape(&mut pool, 2, eps(8), params, &shape);
             let h = t.topo.resv.as_ref().expect("e2e params must build a ledger");
-            assert_eq!(h.borrow().n_nodes(), t.topo.xbars.len(), "{shape:?}");
+            assert_eq!(h.lock().unwrap().n_nodes(), t.topo.xbars.len(), "{shape:?}");
             assert!(t.topo.xbars.iter().all(|x| x.cfg.e2e_mcast_order));
         }
         // and the default stays the RTL-faithful per-crossbar protocol
@@ -991,7 +999,7 @@ mod tests {
                 .reduce
                 .as_ref()
                 .expect("fabric_reduce params must build the membership oracle");
-            assert_eq!(h.borrow().n_nodes(), t.topo.xbars.len(), "{shape:?}");
+            assert_eq!(h.lock().unwrap().n_nodes(), t.topo.xbars.len(), "{shape:?}");
             assert!(t.topo.xbars.iter().all(|x| x.cfg.fabric_reduce));
             // entry nodes recorded for every endpoint, and walking a
             // cross-fabric group plans at least one join
@@ -999,14 +1007,14 @@ mod tests {
             let entries: Vec<crate::axi::reduce::RedNode> = (1..8)
                 .map(|i| crate::axi::reduce::RedNode(t.endpoint_nodes[i].0))
                 .collect();
-            h.borrow_mut().open_group(
+            h.lock().unwrap().open_group(
                 1,
                 crate::axi::reduce::ReduceOp::Sum,
                 &entries,
                 eps(8).addr(0),
             );
             assert!(
-                h.borrow().group_joins(1) >= 1,
+                h.lock().unwrap().group_joins(1) >= 1,
                 "{shape:?}: 7 converging members must meet somewhere"
             );
         }

@@ -209,6 +209,60 @@ impl AxiLink {
             && self.ar.is_empty()
             && self.r.is_empty()
     }
+
+    // ---- cut-link support (sim::parallel) ----
+    //
+    // A link whose two endpoint components land in different thread
+    // partitions is split into a *master half* (what the AXI master
+    // endpoint touches: AW/W/AR producer ends + B/R consumer ends) and
+    // a *slave half* (the complement). Each half is a plain `AxiLink`
+    // living at the same pool slot of its shard's pool, so components
+    // keep indexing by the global `LinkId` transparently.
+
+    /// Split into `(master half, slave half)`.
+    pub fn split_cut(self) -> (AxiLink, AxiLink) {
+        let (aw_p, aw_c) = self.aw.split_cut();
+        let (w_p, w_c) = self.w.split_cut();
+        let (b_p, b_c) = self.b.split_cut();
+        let (ar_p, ar_c) = self.ar.split_cut();
+        let (r_p, r_c) = self.r.split_cut();
+        let master = AxiLink {
+            aw: aw_p,
+            w: w_p,
+            b: b_c,
+            ar: ar_p,
+            r: r_c,
+        };
+        let slave = AxiLink {
+            aw: aw_c,
+            w: w_c,
+            b: b_p,
+            ar: ar_c,
+            r: r_p,
+        };
+        (master, slave)
+    }
+
+    /// Clock edge across a split link — bit-equivalent to
+    /// [`AxiLink::tick`] on the joined link.
+    pub fn tick_cut(master: &mut AxiLink, slave: &mut AxiLink) {
+        Chan::tick_cut(&mut master.aw, &mut slave.aw);
+        Chan::tick_cut(&mut master.w, &mut slave.w);
+        Chan::tick_cut(&mut slave.b, &mut master.b);
+        Chan::tick_cut(&mut master.ar, &mut slave.ar);
+        Chan::tick_cut(&mut slave.r, &mut master.r);
+    }
+
+    /// Reassemble a split link (inverse of [`AxiLink::split_cut`]).
+    pub fn join_cut(master: AxiLink, slave: AxiLink) -> AxiLink {
+        AxiLink {
+            aw: Chan::join_cut(master.aw, slave.aw),
+            w: Chan::join_cut(master.w, slave.w),
+            b: Chan::join_cut(slave.b, master.b),
+            ar: Chan::join_cut(master.ar, slave.ar),
+            r: Chan::join_cut(slave.r, master.r),
+        }
+    }
 }
 
 impl crate::sim::link::Link for AxiLink {
@@ -223,6 +277,23 @@ impl crate::sim::link::Link for AxiLink {
     }
     fn moved(&self) -> u64 {
         AxiLink::moved(self)
+    }
+}
+
+impl crate::sim::parallel::CutLink for AxiLink {
+    fn split_cut(self) -> (AxiLink, AxiLink) {
+        AxiLink::split_cut(self)
+    }
+    fn tick_cut(master: &mut AxiLink, slave: &mut AxiLink) {
+        AxiLink::tick_cut(master, slave)
+    }
+    fn join_cut(master: AxiLink, slave: AxiLink) -> AxiLink {
+        AxiLink::join_cut(master, slave)
+    }
+    fn dummy() -> AxiLink {
+        // placeholder for pool slots owned by other shards; depth is
+        // irrelevant — no component ever touches a dummy
+        AxiLink::new(1)
     }
 }
 
@@ -294,6 +365,42 @@ mod tests {
     fn burst_split_single_beat() {
         let bursts = split_bursts(0x100, 8, 8, 256);
         assert_eq!(bursts, vec![(0x100, 1)]);
+    }
+
+    #[test]
+    fn split_link_routes_request_and_response_channels() {
+        // master half owns the producer ends of AW/W/AR and the
+        // consumer ends of B/R; responses flow the other way.
+        let (mut m, mut s) = AxiLink::new(2).split_cut();
+        m.aw.push(AwBeat {
+            id: 0,
+            dest: AddrSet::unicast(0x1000),
+            beats: 1,
+            beat_bytes: 64,
+            is_mcast: false,
+            exclude: None,
+            src: 0,
+            txn: 7,
+            ticket: None,
+            reduce: None,
+        });
+        s.b.push(BBeat {
+            id: 0,
+            resp: Resp::Okay,
+            txn: 7,
+        });
+        AxiLink::tick_cut(&mut m, &mut s);
+        assert_eq!(s.aw.front().map(|a| a.txn), Some(7), "AW reaches slave");
+        assert_eq!(m.b.front().map(|b| b.txn), Some(7), "B reaches master");
+        assert!(s.aw.pop().is_some());
+        assert!(m.b.pop().is_some());
+        // moved() is counted on the popping half only — the global sum
+        // over both halves equals the whole-link count
+        assert_eq!(m.moved() + s.moved(), 2);
+        AxiLink::tick_cut(&mut m, &mut s);
+        let joined = AxiLink::join_cut(m, s);
+        assert_eq!(joined.moved(), 2);
+        assert!(joined.is_idle());
     }
 
     #[test]

@@ -605,7 +605,7 @@ impl Xbar {
     #[inline]
     fn red_plan(&self, group: u32) -> Option<NodePlan> {
         match &self.red {
-            Some((h, node)) if self.cfg.fabric_reduce => h.borrow().plan(*node, group),
+            Some((h, node)) if self.cfg.fabric_reduce => h.lock().unwrap().plan(*node, group),
             _ => None,
         }
     }
@@ -621,7 +621,7 @@ impl Xbar {
     #[inline]
     fn resv_front(&self, ticket: Option<ResvSeq>) -> bool {
         match (&self.resv, ticket) {
-            (Some((h, node)), Some(seq)) => h.borrow().is_front(*node, seq),
+            (Some((h, node)), Some(seq)) => h.lock().unwrap().is_front(*node, seq),
             _ => true,
         }
     }
@@ -630,7 +630,7 @@ impl Xbar {
     fn resv_commit(&mut self, ticket: Option<ResvSeq>) {
         if let Some(seq) = ticket {
             let (h, node) = self.resv.clone().expect("ticketed beat without a ledger");
-            h.borrow_mut().commit(node, seq);
+            h.lock().unwrap().commit(node, seq);
             self.stats.resv_commits += 1;
         }
     }
@@ -904,7 +904,7 @@ impl Xbar {
                 && !cache.targets.is_empty()
             {
                 let (h, node) = xb.resv.clone().unwrap();
-                beat.ticket = Some(h.borrow_mut().reserve(node, &dest, exclude));
+                beat.ticket = Some(h.lock().unwrap().reserve(node, &dest, exclude));
                 xb.stats.resv_tickets += 1;
             }
             if cache.resp0 == Resp::DecErr && cache.targets.is_empty() {
@@ -1609,7 +1609,7 @@ impl Xbar {
             // per-cycle predicate is stable and replayable
             if e2e {
                 if let (Some((h, node)), Some(seq)) = (&resv, p.pend.beat.ticket) {
-                    if !h.borrow().is_front(*node, seq) {
+                    if !h.lock().unwrap().is_front(*node, seq) {
                         resv_blocked += 1;
                     }
                 }

@@ -10,7 +10,7 @@ use crate::workloads::collectives::{run_collective, CollMode, CollOp, Collective
 use crate::workloads::matmul::{run_matmul, MatmulMode, MatmulResult, TileExec};
 use crate::workloads::microbench::{run_microbench, McastMode};
 use crate::workloads::roofline::Roofline;
-use crate::workloads::topo_sweep::{default_shapes, run_topo_broadcast, TopoRunResult};
+use crate::workloads::topo_sweep::{default_shapes, run_topo_broadcast_threads, TopoRunResult};
 
 /// fig. 3a — area and timing of the N-to-N crossbar.
 pub fn fig3a() -> (Table, Json) {
@@ -265,17 +265,20 @@ pub struct TopoSweepRow {
 
 /// Topology-shape sweep: the 1-to-N broadcast on every canned shape
 /// (flat, 2-level tree, 3-level tree, mesh), hardware multicast vs the
-/// unicast train, with beat-level fork accounting.
+/// unicast train, with beat-level fork accounting. `threads` picks the
+/// stepping schedule (1 = sequential golden, 0 = one per core) —
+/// results are bit-identical either way.
 pub fn topo_sweep(
     n_endpoints: usize,
     bursts: usize,
     beats: u32,
+    threads: usize,
 ) -> (Vec<TopoSweepRow>, Table, Json) {
     let mut rows = Vec::new();
     for shape in default_shapes(n_endpoints) {
-        let uni = run_topo_broadcast(&shape, n_endpoints, bursts, beats, false)
+        let uni = run_topo_broadcast_threads(&shape, n_endpoints, bursts, beats, false, threads)
             .unwrap_or_else(|e| panic!("{}: unicast run: {e}", shape.label()));
-        let hw = run_topo_broadcast(&shape, n_endpoints, bursts, beats, true)
+        let hw = run_topo_broadcast_threads(&shape, n_endpoints, bursts, beats, true, threads)
             .unwrap_or_else(|e| panic!("{}: mcast run: {e}", shape.label()));
         rows.push(TopoSweepRow {
             speedup: uni.cycles as f64 / hw.cycles as f64,
@@ -636,7 +639,7 @@ mod tests {
 
     #[test]
     fn topo_sweep_covers_shapes_and_mcast_wins() {
-        let (rows, table, json) = topo_sweep(16, 2, 8);
+        let (rows, table, json) = topo_sweep(16, 2, 8, 1);
         // flat + 2-level tree + 3-level tree + mesh
         assert_eq!(rows.len(), 4);
         for r in &rows {

@@ -26,6 +26,13 @@ use axi_mcast::workloads::collectives::{self as coll, run_collective, CollMode, 
 use axi_mcast::workloads::matmul::{RustTileExec, TileExec};
 use axi_mcast::workloads::microbench::{run_microbench, McastMode};
 
+/// Global knob on every simulating command: worker threads for the
+/// parallel stepping engine. Results are bit-identical to sequential.
+const THREADS_OPT: (&str, &str) = (
+    "threads",
+    "worker threads: 1 = sequential (default), 0 = one per core, N = exactly N",
+);
+
 const CMDS: &[CmdSpec] = &[
     CmdSpec {
         name: "fig3a",
@@ -39,6 +46,7 @@ const CMDS: &[CmdSpec] = &[
             ("sizes", "comma list of transfer sizes (default 1k..32k)"),
             ("clusters", "comma list of cluster counts (default 2..32)"),
             ("out", "results directory"),
+            THREADS_OPT,
         ],
     },
     CmdSpec {
@@ -48,6 +56,7 @@ const CMDS: &[CmdSpec] = &[
             ("exec", "tile executor: rust | pjrt (default rust)"),
             ("artifacts", "artifact dir for pjrt (default ./artifacts)"),
             ("out", "results directory"),
+            THREADS_OPT,
         ],
     },
     CmdSpec {
@@ -62,6 +71,7 @@ const CMDS: &[CmdSpec] = &[
             ("mode", "unicast | sw-hier | hw (default hw)"),
             ("clusters", "destination set size (default 32)"),
             ("size", "transfer size (default 32KiB)"),
+            THREADS_OPT,
         ],
     },
     CmdSpec {
@@ -72,6 +82,7 @@ const CMDS: &[CmdSpec] = &[
             ("bursts", "broadcast rounds (default 4)"),
             ("beats", "beats per burst (default 16)"),
             ("out", "results directory"),
+            THREADS_OPT,
         ],
     },
     CmdSpec {
@@ -88,6 +99,7 @@ const CMDS: &[CmdSpec] = &[
                  prints speedups)",
             ),
             ("out", "results directory"),
+            THREADS_OPT,
         ],
     },
     CmdSpec {
@@ -99,6 +111,7 @@ const CMDS: &[CmdSpec] = &[
             ("mode", "forwarded to collectives (both | sw | hw | hw-concurrent | hw-reduce)"),
             ("size", "forwarded to collectives (vector size per collective)"),
             ("out", "results directory (default results)"),
+            THREADS_OPT,
         ],
     },
 ];
@@ -180,7 +193,8 @@ fn run_toposweep(args: &Args, out: Option<&str>) -> Result<(), String> {
     if beats == 0 {
         return Err("--beats must be >= 1".to_string());
     }
-    let (_rows, table, json) = topo_sweep(endpoints, bursts, beats);
+    let threads = args.usize_or("threads", SocConfig::default().threads)?;
+    let (_rows, table, json) = topo_sweep(endpoints, bursts, beats, threads);
     let mut r = Report::new("toposweep").to_dir(out);
     r.table(
         "1-to-N broadcast across topology shapes (hw mcast vs unicast train)",
@@ -198,11 +212,12 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
              got {clusters}"
         ));
     }
-    let cfg = SocConfig {
+    let mut cfg = SocConfig {
         n_clusters: clusters,
         clusters_per_group: clusters.min(4),
         ..SocConfig::default()
     };
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
     let bytes = args.u64_or("size", 8 * 1024)?;
     let step = cfg.wide_bytes as u64 * clusters as u64;
     if bytes == 0 || bytes % step != 0 {
@@ -291,7 +306,10 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<(), String> {
-    let cfg = SocConfig::default();
+    let mut cfg = SocConfig::default();
+    // global: every simulating command honours --threads (the default
+    // picks up OCCAMY_THREADS; results are bit-identical regardless)
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
     let out = args.get("out");
     match cmd {
         "fig3a" => {
@@ -402,7 +420,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
             // exercise the mesh / hw-concurrent / hw-reduce paths CI
             // reports on. `--clusters` is deliberately NOT forwarded:
             // on `all` it is fig3b's comma list, not a single count.
-            let fwd: Vec<String> = ["shape", "mode", "size"]
+            let fwd: Vec<String> = ["shape", "mode", "size", "threads"]
                 .iter()
                 .filter_map(|k| args.get(k).map(|v| format!("--{k}={v}")))
                 .collect();

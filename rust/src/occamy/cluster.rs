@@ -104,6 +104,13 @@ pub struct Cluster {
     narrow_bytes: u32,
     /// Compute event fired when the in-flight Compute retires.
     pending_event: Option<ComputeEvent>,
+    /// Private transaction-tag sequence. Each issuing component owns a
+    /// disjoint, nonzero tag range (cluster `i` starts at
+    /// `(i+1) << 40`), so tag assignment never depends on the order
+    /// components step within a cycle — the property the parallel
+    /// engine's bit-identical determinism rests on. Tags are opaque
+    /// hash keys (`util::dense::TxnTable`), never dense indices.
+    txn_seq: Txn,
 }
 
 impl Cluster {
@@ -127,6 +134,7 @@ impl Cluster {
             compute_busy_cycles: 0,
             narrow_bytes: cfg.narrow_bytes,
             pending_event: None,
+            txn_seq: ((idx as Txn + 1) << 40) + 1,
         }
     }
 
@@ -170,7 +178,6 @@ impl Cluster {
     }
 
     /// One cycle. Returns a compute event when a Compute retires.
-    #[allow(clippy::too_many_arguments)]
     pub fn step(
         &mut self,
         cy: Cycle,
@@ -179,12 +186,11 @@ impl Cluster {
         wide_l1: &mut AxiLink,
         narrow_lsu: &mut AxiLink,
         narrow_mbox: &mut AxiLink,
-        next_txn: &mut Txn,
     ) -> Option<ComputeEvent> {
         // background engines
         self.l1_port.step(cy, wide_l1);
         self.step_mailbox(narrow_mbox);
-        self.dma.step(cy, wide_dma, next_txn);
+        self.dma.step(cy, wide_dma, &mut self.txn_seq);
         for j in self.dma.completed.drain(..) {
             self.pending_dma -= 1;
             self.dma_done_tags.push(j.tag);
@@ -313,8 +319,8 @@ impl Cluster {
             Cmd::Barrier => {
                 // 1-beat narrow write to the barrier peripheral
                 if narrow_lsu.aw.can_push() && narrow_lsu.w.can_push() {
-                    let txn = *next_txn;
-                    *next_txn += 1;
+                    let txn = self.txn_seq;
+                    self.txn_seq += 1;
                     narrow_lsu.aw.push(AwBeat {
                         id: self.idx as u16,
                         dest: AddrSet::unicast(BARRIER_BASE),
@@ -340,8 +346,8 @@ impl Cluster {
             }
             Cmd::SendIrq { dst } => {
                 if narrow_lsu.aw.can_push() && narrow_lsu.w.can_push() {
-                    let txn = *next_txn;
-                    *next_txn += 1;
+                    let txn = self.txn_seq;
+                    self.txn_seq += 1;
                     narrow_lsu.aw.push(AwBeat {
                         id: self.idx as u16,
                         dest: dst,
@@ -493,14 +499,12 @@ mod tests {
         links: &mut [AxiLink],
         cycles: u64,
     ) -> Vec<ComputeEvent> {
-        let mut txn = 1;
         let mut evs = Vec::new();
         for cy in 0..cycles {
             let (a, rest) = links.split_at_mut(1);
             let (b, rest2) = rest.split_at_mut(1);
             let (c, d) = rest2.split_at_mut(1);
-            if let Some(ev) = cl.step(cy, cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0], &mut txn)
-            {
+            if let Some(ev) = cl.step(cy, cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0]) {
                 evs.push(ev);
             }
             for l in links.iter_mut() {
@@ -534,13 +538,12 @@ mod tests {
     fn wait_irq_blocks_until_mailbox_write() {
         let (mut cl, cfg, mut links) = setup();
         cl.load(vec![Cmd::WaitIrq { count: 1 }]);
-        let mut txn = 50;
         // run a few cycles: must not complete
         for cy in 0..5 {
             let (a, rest) = links.split_at_mut(1);
             let (b, rest2) = rest.split_at_mut(1);
             let (c, d) = rest2.split_at_mut(1);
-            cl.step(cy, &cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0], &mut txn);
+            cl.step(cy, &cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0]);
             for l in links.iter_mut() {
                 l.tick();
             }
@@ -569,7 +572,7 @@ mod tests {
             let (a, rest) = links.split_at_mut(1);
             let (b, rest2) = rest.split_at_mut(1);
             let (c, d) = rest2.split_at_mut(1);
-            cl.step(cy, &cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0], &mut txn);
+            cl.step(cy, &cfg, &mut a[0], &mut b[0], &mut c[0], &mut d[0]);
             for l in links.iter_mut() {
                 l.tick();
             }

@@ -138,6 +138,14 @@ pub struct SocConfig {
     /// statistics are bit-identical either way — proven by
     /// `tests/perf_parity.rs`; only wall-clock throughput differs.
     pub force_naive: bool,
+    /// Worker threads for the parallel stepping engine
+    /// (`sim::parallel`): `1` = the sequential golden engine (the
+    /// default — `Soc::run` then never spawns a thread), `0` = one
+    /// worker per available core, `N > 1` = exactly `N` workers.
+    /// Purely a wall-clock knob: cycle counts, statistics, and memory
+    /// are bit-identical across all values
+    /// (`tests/parallel_parity.rs`). Defaults from `OCCAMY_THREADS`.
+    pub threads: usize,
 }
 
 impl Default for SocConfig {
@@ -171,6 +179,7 @@ impl Default for SocConfig {
             fabric_reduce: false,
             mcast_w_cooldown: 1,
             force_naive: crate::util::force_naive_env(),
+            threads: crate::util::threads_env().unwrap_or(1),
         }
     }
 }
@@ -243,6 +252,12 @@ impl SocConfig {
     /// accumulates (1 MAC = 2 FLOPs, one FMA per FPU per cycle).
     pub fn compute_cycles(&self, macs: u64) -> u64 {
         (macs as f64 / self.fpu_per_cluster as f64).ceil() as u64
+    }
+
+    /// Effective worker count for [`Self::threads`] (`0` = one per
+    /// available core, floor 1).
+    pub fn resolved_threads(&self) -> usize {
+        crate::util::resolve_threads(self.threads)
     }
 }
 

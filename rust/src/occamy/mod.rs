@@ -27,6 +27,7 @@ pub mod config;
 pub mod dma;
 pub mod mem;
 pub mod noc;
+pub mod parallel;
 pub mod soc;
 pub mod sync;
 

@@ -136,6 +136,9 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         // reduction traffic is data traffic: only the wide network
         // combines (mailbox interrupts carry no reducible payload)
         fabric_reduce: cfg.fabric_reduce && kind == NetKind::Wide,
+        // the SoC owns its own parallel coordinator (occamy::parallel);
+        // carried here only so the knob round-trips through the params
+        threads: cfg.threads,
     };
     // outstanding budget of the fabric's converging point (tree root /
     // every mesh tile — a tile is both leaf and root)

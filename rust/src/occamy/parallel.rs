@@ -1,0 +1,513 @@
+//! Parallel stepping engine for the SoC: conservative lookahead-1
+//! multi-threaded cycle loop over the [`sim::parallel`] substrate.
+//!
+//! `Soc::run` dispatches here when `SocConfig::threads` resolves above
+//! one. The component graph is cut into per-thread shards **once** at
+//! launch (static partition, clusters pinned in contiguous index
+//! blocks, everything else placed greedily by link affinity); each
+//! cycle the shards step concurrently against their shard pools, then
+//! the coordinator merges: functional DMA copies in cluster order, the
+//! dirty-link union into the master scheduler, one clock edge per
+//! touched link (cut links tick across their two halves), compute
+//! events in cluster order. The event horizon composes as the minimum
+//! over every shard's component horizons.
+//!
+//! Correctness rests on the sim kernel's order-independence invariant
+//! (registered ready + staged visibility + per-source transaction tags
+//! — see `sim` module docs and DESIGN.md §8); the one stateful
+//! cross-component order dependency, the reservation ledger's
+//! first-come seq assignment, is preserved by keeping each
+//! reservation-armed network a single partition atom. The sequential
+//! engine stays golden: cycle counts, crossbar/reservation/reduction
+//! statistics, memory, and DMA completions are bit-identical across
+//! any thread count (`tests/parallel_parity.rs`).
+//!
+//! [`sim::parallel`]: crate::sim::parallel
+
+use std::sync::Arc;
+
+use super::cluster::{Cluster, ComputeEvent};
+use super::config::SocConfig;
+use super::noc::Network;
+use super::soc::{ComputeHandler, Soc};
+use super::sync::BarrierUnit;
+use crate::axi::golden::SimSlave;
+use crate::axi::types::{LinkId, LinkPool};
+use crate::axi::xbar::Xbar;
+use crate::sim::engine::{Engine, SimError, StepResult, Watchdog};
+use crate::sim::parallel::{
+    link_homes, merge_pools, partition, split_pool, tick_link, Atom, LinkHome, StepFn, WorkerPool,
+};
+use crate::sim::sched::{fold_min, Scheduler};
+use crate::sim::Cycle;
+
+/// Which network a crossbar atom came from (recompose bookkeeping).
+#[derive(Clone, Copy)]
+enum Net {
+    Wide,
+    Narrow,
+}
+
+/// One component atom living on a shard, in global rank order.
+enum ShardComp {
+    Cluster {
+        cl: Cluster,
+        ports: [LinkId; 4],
+    },
+    Llc {
+        llc: SimSlave,
+        link: LinkId,
+    },
+    Barrier {
+        unit: BarrierUnit,
+        slave: LinkId,
+        master: LinkId,
+    },
+    /// One crossbar — or a whole network when its shared reservation
+    /// ledger makes the in-cycle `reserve` order observable.
+    Xbars {
+        net: Net,
+        first: usize,
+        xbars: Vec<Xbar>,
+    },
+}
+
+/// Per-worker slice of the SoC: components in rank order, a full-size
+/// pool (owned links and cut halves at their global slots, dummies
+/// elsewhere), and a shard scheduler re-synced from the master each
+/// cycle so gating decisions match the sequential engine exactly.
+struct SocShard {
+    cfg: SocConfig,
+    comps: Vec<ShardComp>,
+    pool: LinkPool,
+    sched: Scheduler,
+    events: Vec<ComputeEvent>,
+}
+
+/// One worker cycle: replicate `Soc::step`'s per-component gating and
+/// stepping verbatim for the components this shard owns. Functional
+/// memory effects (DMA copies, compute events) are deferred to the
+/// coordinator's merge phase, exactly where the sequential engine
+/// applies them.
+fn step_shard(sh: &mut SocShard, cy: Cycle) {
+    let SocShard {
+        cfg,
+        comps,
+        pool,
+        sched,
+        events,
+    } = sh;
+    for comp in comps.iter_mut() {
+        match comp {
+            ShardComp::Cluster { cl, ports } => {
+                if !sched.should_step(cl.quiescent(), ports) {
+                    continue;
+                }
+                let [wml, wsl, nml, nsl] = pool.get_disjoint_mut(*ports);
+                if let Some(ev) = cl.step(cy, cfg, wml, wsl, nml, nsl) {
+                    events.push(ev);
+                }
+                sched.mark_all_dirty(ports);
+            }
+            ShardComp::Llc { llc, link } => {
+                if !llc.idle() || sched.is_active(*link) {
+                    llc.step_on(cy, pool, *link);
+                    sched.mark_dirty(*link);
+                }
+            }
+            ShardComp::Barrier {
+                unit,
+                slave,
+                master,
+            } => {
+                if unit.busy()
+                    || unit.pending_input()
+                    || sched.is_active(*slave)
+                    || sched.is_active(*master)
+                {
+                    let [sl, ml] = pool.get_disjoint_mut([*slave, *master]);
+                    unit.step(cy, sl, ml);
+                    sched.mark_dirty(*slave);
+                    sched.mark_dirty(*master);
+                }
+            }
+            ShardComp::Xbars { xbars, .. } => {
+                for x in xbars.iter_mut() {
+                    sched.step_component(cy, x, pool);
+                }
+            }
+        }
+    }
+}
+
+/// Atoms of one network's crossbars: per-crossbar normally, the whole
+/// network as one atom when the shared reservation ledger is armed
+/// (its first-come ticket order must match the sequential step order).
+fn network_atoms(net: &Network) -> Vec<Atom> {
+    let xbar_ports = |x: &Xbar| -> Vec<(LinkId, bool)> {
+        // the crossbar consumes requests on its m_links (slave side)
+        // and drives requests into its s_links (master side)
+        x.m_links
+            .iter()
+            .map(|&id| (id, false))
+            .chain(x.s_links.iter().map(|&id| (id, true)))
+            .collect()
+    };
+    if net.resv.is_some() {
+        let ports = net.xbars.iter().flat_map(|x| xbar_ports(x)).collect();
+        vec![Atom { ports, pin: None }]
+    } else {
+        net.xbars
+            .iter()
+            .map(|x| Atom {
+                ports: xbar_ports(x),
+                pin: None,
+            })
+            .collect()
+    }
+}
+
+fn all_done(shards: &[SocShard]) -> bool {
+    shards.iter().all(|sh| {
+        sh.comps.iter().all(|c| match c {
+            ShardComp::Cluster { cl, .. } => cl.done(),
+            ShardComp::Xbars { xbars, .. } => xbars.iter().all(|x| !x.maybe_busy),
+            ShardComp::Barrier { unit, .. } => !unit.busy(),
+            ShardComp::Llc { llc, .. } => llc.idle(),
+        })
+    })
+}
+
+/// Event-horizon fast-forward composed over the shards — the exact
+/// counterpart of `Soc::try_skip` (same entry condition on the master
+/// scheduler, minimum over the same component horizons, same bulk
+/// advances), so skipped spans stay bit-identical.
+fn try_skip(shards: &mut [SocShard], master: &Scheduler, force_naive: bool, now: Cycle) -> u64 {
+    if force_naive || !master.links_idle() {
+        return 0;
+    }
+    let mut ev: Option<Cycle> = None;
+    for sh in shards.iter() {
+        for c in &sh.comps {
+            let e = match c {
+                ShardComp::Cluster { cl, .. } => cl.next_event(now),
+                ShardComp::Xbars { xbars, .. } => xbars.iter().filter_map(|x| x.next_event(now)).min(),
+                ShardComp::Llc { llc, .. } => llc.next_event(now),
+                ShardComp::Barrier { unit, .. } => unit.next_event(now),
+            };
+            if let Some(e) = e {
+                fold_min(&mut ev, e);
+            }
+        }
+    }
+    let Some(target) = ev else {
+        return 0;
+    };
+    if target <= now {
+        return 0;
+    }
+    let k = target - now;
+    for sh in shards.iter_mut() {
+        for c in sh.comps.iter_mut() {
+            match c {
+                ShardComp::Cluster { cl, .. } => {
+                    if !cl.quiescent() {
+                        cl.skip(k);
+                    }
+                }
+                ShardComp::Xbars { xbars, .. } => {
+                    for x in xbars.iter_mut() {
+                        x.skip(k);
+                    }
+                }
+                // LLC and barrier schedule in absolute cycles
+                ShardComp::Llc { .. } | ShardComp::Barrier { .. } => {}
+            }
+        }
+    }
+    k
+}
+
+fn progress(shards: &[SocShard]) -> u64 {
+    // each real link (or half) lives in exactly one shard pool and
+    // dummies move nothing, so the shard sums partition the sequential
+    // engine's `pool.moved_total()` exactly
+    shards
+        .iter()
+        .map(|sh| {
+            let links = sh.pool.moved_total();
+            let cl: u64 = sh
+                .comps
+                .iter()
+                .map(|c| match c {
+                    ShardComp::Cluster { cl, .. } => cl.progress,
+                    _ => 0,
+                })
+                .sum();
+            links + cl
+        })
+        .sum()
+}
+
+impl Soc {
+    /// Multi-threaded counterpart of [`Soc::run_sequential`]: decompose
+    /// into shards, run the coordinator loop, recompose — leaving the
+    /// `Soc` in exactly the state the sequential engine would have
+    /// produced (also on watchdog errors).
+    pub(super) fn run_parallel(
+        &mut self,
+        handler: &mut dyn ComputeHandler,
+        watchdog: Watchdog,
+        threads: usize,
+    ) -> Result<Cycle, SimError> {
+        // ---- partition ----
+        let n_cl = self.clusters.len();
+        let mut atoms: Vec<Atom> = Vec::new();
+        let n_shards = {
+            let wide_atoms = network_atoms(&self.wide);
+            let narrow_atoms = network_atoms(&self.narrow);
+            let n_atoms = n_cl + 2 + wide_atoms.len() + narrow_atoms.len();
+            let n_shards = threads.min(n_atoms);
+            if n_shards <= 1 {
+                return self.run_sequential(handler, watchdog);
+            }
+            // rank order: clusters, llc, barrier, wide xbars, narrow
+            // xbars — the sequential step order, preserved per shard
+            for i in 0..n_cl {
+                atoms.push(Atom {
+                    ports: vec![
+                        (self.wide.cluster_m[i], true),
+                        (self.wide.cluster_s[i], false),
+                        (self.narrow.cluster_m[i], true),
+                        (self.narrow.cluster_s[i], false),
+                    ],
+                    pin: Some(i * n_shards / n_cl),
+                });
+            }
+            atoms.push(Atom {
+                ports: vec![(self.wide.service_s, false)],
+                pin: None,
+            });
+            atoms.push(Atom {
+                ports: vec![
+                    (self.narrow.service_s, false),
+                    (self.narrow.ext_m.unwrap(), true),
+                ],
+                pin: None,
+            });
+            atoms.extend(wide_atoms);
+            atoms.extend(narrow_atoms);
+            n_shards
+        };
+        let assign = partition(&atoms, n_shards);
+        let homes: Vec<LinkHome> = link_homes(&atoms, &assign, self.pool.len());
+
+        // ---- decompose ----
+        let cfg = self.cfg.clone();
+        let pool = std::mem::replace(&mut self.pool, LinkPool::new());
+        let mut master_sched = std::mem::replace(&mut self.sched, Scheduler::new(0));
+        let mut shards: Vec<SocShard> = split_pool(pool, &homes, n_shards)
+            .into_iter()
+            .map(|pool| SocShard {
+                cfg: cfg.clone(),
+                comps: Vec::new(),
+                pool,
+                sched: Scheduler::new_shard(homes.len()),
+                events: Vec::new(),
+            })
+            .collect();
+        let n_wide = self.wide.xbars.len();
+        let n_narrow = self.narrow.xbars.len();
+        {
+            // move components into their shards in atom (= rank) order
+            let mut ai = 0;
+            let mut place = |sh: usize, c: ShardComp, shards: &mut Vec<SocShard>| {
+                shards[sh].comps.push(c);
+            };
+            for (i, cl) in std::mem::take(&mut self.clusters).into_iter().enumerate() {
+                let ports = [
+                    self.wide.cluster_m[i],
+                    self.wide.cluster_s[i],
+                    self.narrow.cluster_m[i],
+                    self.narrow.cluster_s[i],
+                ];
+                place(assign[ai], ShardComp::Cluster { cl, ports }, &mut shards);
+                ai += 1;
+            }
+            let llc = std::mem::replace(&mut self.llc, SimSlave::new(usize::MAX));
+            place(
+                assign[ai],
+                ShardComp::Llc {
+                    llc,
+                    link: self.wide.service_s,
+                },
+                &mut shards,
+            );
+            ai += 1;
+            let unit = std::mem::replace(&mut self.barrier, BarrierUnit::new(&cfg));
+            place(
+                assign[ai],
+                ShardComp::Barrier {
+                    unit,
+                    slave: self.narrow.service_s,
+                    master: self.narrow.ext_m.unwrap(),
+                },
+                &mut shards,
+            );
+            ai += 1;
+            for (net, xbars, armed) in [
+                (Net::Wide, std::mem::take(&mut self.wide.xbars), self.wide.resv.is_some()),
+                (
+                    Net::Narrow,
+                    std::mem::take(&mut self.narrow.xbars),
+                    self.narrow.resv.is_some(),
+                ),
+            ] {
+                if armed {
+                    place(
+                        assign[ai],
+                        ShardComp::Xbars {
+                            net,
+                            first: 0,
+                            xbars,
+                        },
+                        &mut shards,
+                    );
+                    ai += 1;
+                } else {
+                    for (j, x) in xbars.into_iter().enumerate() {
+                        place(
+                            assign[ai],
+                            ShardComp::Xbars {
+                                net,
+                                first: j,
+                                xbars: vec![x],
+                            },
+                            &mut shards,
+                        );
+                        ai += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(ai, atoms.len());
+        }
+
+        // ---- coordinator loop ----
+        let step: StepFn<SocShard> = Arc::new(|s: &mut SocShard, cy: u64| step_shard(s, cy));
+        let mut wpool = WorkerPool::new(n_shards, step);
+        let mut eng = Engine::new(watchdog);
+        eng.now = self.cycles;
+        let mut cached_progress = 0u64;
+        let mut last_sample = self.cycles;
+        let mut shards_slot = Some(shards);
+        let res = eng.run(|cy| {
+            debug_assert_eq!(cy, self.cycles, "engine and SoC clocks desynced");
+            let mut shards = shards_slot.take().unwrap();
+            master_sched.begin_cycle();
+            for sh in &mut shards {
+                sh.sched.copy_active_from(&master_sched);
+            }
+            shards = wpool.step_all(shards, cy);
+            // functional DMA copies — shard-major = cluster index order
+            // (clusters are pinned in contiguous ascending blocks)
+            for sh in &mut shards {
+                for comp in &mut sh.comps {
+                    if let ShardComp::Cluster { cl, .. } = comp {
+                        while let Some(job) = cl.pending_copies.pop() {
+                            match job.red {
+                                Some(tag) => {
+                                    self.mem.reduce_f64(
+                                        tag.op,
+                                        job.dst.addr,
+                                        job.src,
+                                        (job.bytes / 8) as usize,
+                                    );
+                                }
+                                None => {
+                                    let dsts = job.dst.enumerate();
+                                    self.mem.dma_copy(job.src, &dsts, job.bytes);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // merge: dirty union in shard order, then one clock edge
+            // per touched link across the shard pools
+            for sh in &mut shards {
+                sh.sched.drain_touched_into(&mut master_sched);
+            }
+            {
+                let mut pools: Vec<&mut LinkPool> =
+                    shards.iter_mut().map(|s| &mut s.pool).collect();
+                master_sched.end_cycle_with(|id| tick_link(&mut pools, &homes, id));
+            }
+            self.cycles += 1;
+            for sh in &mut shards {
+                for ev in sh.events.drain(..) {
+                    handler.exec(ev.cluster, ev.op, ev.arg, &mut self.mem);
+                }
+            }
+            if all_done(&shards) {
+                shards_slot = Some(shards);
+                return StepResult::Done;
+            }
+            let skipped = try_skip(&mut shards, &master_sched, cfg.force_naive, self.cycles);
+            if skipped > 0 {
+                self.cycles += skipped;
+                self.skipped_cycles += skipped;
+            }
+            if skipped > 0 || self.cycles >= last_sample + 64 {
+                cached_progress = progress(&shards);
+                last_sample = self.cycles;
+            }
+            shards_slot = Some(shards);
+            if skipped > 0 {
+                StepResult::SkipTo {
+                    progress: cached_progress,
+                    next: self.cycles,
+                }
+            } else {
+                StepResult::Running {
+                    progress: cached_progress,
+                }
+            }
+        });
+        drop(wpool);
+
+        // ---- recompose (also on error paths: the Soc must stay
+        // inspectable — stats, memory, link counters) ----
+        let mut shards = shards_slot.take().unwrap();
+        let mut clusters: Vec<Option<Cluster>> = (0..n_cl).map(|_| None).collect();
+        let mut wide_xbars: Vec<Option<Xbar>> = (0..n_wide).map(|_| None).collect();
+        let mut narrow_xbars: Vec<Option<Xbar>> = (0..n_narrow).map(|_| None).collect();
+        for sh in &mut shards {
+            for comp in sh.comps.drain(..) {
+                match comp {
+                    ShardComp::Cluster { cl, .. } => {
+                        let i = cl.idx;
+                        clusters[i] = Some(cl);
+                    }
+                    ShardComp::Llc { llc, .. } => self.llc = llc,
+                    ShardComp::Barrier { unit, .. } => self.barrier = unit,
+                    ShardComp::Xbars { net, first, xbars } => {
+                        let slots = match net {
+                            Net::Wide => &mut wide_xbars,
+                            Net::Narrow => &mut narrow_xbars,
+                        };
+                        for (j, x) in xbars.into_iter().enumerate() {
+                            slots[first + j] = Some(x);
+                        }
+                    }
+                }
+            }
+        }
+        self.clusters = clusters.into_iter().map(Option::unwrap).collect();
+        self.wide.xbars = wide_xbars.into_iter().map(Option::unwrap).collect();
+        self.narrow.xbars = narrow_xbars.into_iter().map(Option::unwrap).collect();
+        let pools: Vec<LinkPool> = shards.into_iter().map(|sh| sh.pool).collect();
+        self.pool = merge_pools(pools, &homes);
+        self.sched = master_sched;
+        res
+    }
+}

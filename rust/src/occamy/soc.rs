@@ -41,10 +41,11 @@ pub struct Soc {
     pub llc: SimSlave,
     pub barrier: BarrierUnit,
     pub mem: SocMem,
-    pub next_txn: u64,
     pub cycles: Cycle,
-    /// Link activity/dirty tracking (idle-skips, §Perf).
-    sched: Scheduler,
+    /// Link activity/dirty tracking (idle-skips, §Perf). The parallel
+    /// engine (`super::parallel`) borrows this as the *master*
+    /// scheduler merging every shard's dirty marks.
+    pub(super) sched: Scheduler,
     /// Reused per-cycle compute-event buffer (§Perf: the step loop
     /// allocates nothing).
     event_buf: Vec<ComputeEvent>,
@@ -76,7 +77,6 @@ impl Soc {
             llc,
             barrier,
             mem,
-            next_txn: 1,
             cycles: 0,
             sched,
             event_buf: Vec::new(),
@@ -123,7 +123,7 @@ impl Soc {
         if entries.is_empty() {
             return; // purely local reduction: nothing for the fabric
         }
-        handle.borrow_mut().open_group(group, op, &entries, dst);
+        handle.lock().unwrap().open_group(group, op, &entries, dst);
     }
 
     /// One clock cycle; compute events are dispatched through `handler`.
@@ -149,15 +149,7 @@ impl Soc {
             }
             // links are pairwise distinct by construction
             let [wml, wsl, nml, nsl] = self.pool.get_disjoint_mut(ports);
-            if let Some(ev) = self.clusters[i].step(
-                cy,
-                &self.cfg,
-                wml,
-                wsl,
-                nml,
-                nsl,
-                &mut self.next_txn,
-            ) {
+            if let Some(ev) = self.clusters[i].step(cy, &self.cfg, wml, wsl, nml, nsl) {
                 self.event_buf.push(ev);
             }
             self.sched.mark_all_dirty(&ports);
@@ -202,7 +194,7 @@ impl Soc {
                 || self.sched.is_active(bm)
             {
                 let [sl, ml] = self.pool.get_disjoint_mut([bs, bm]);
-                self.barrier.step(cy, sl, ml, &mut self.next_txn);
+                self.barrier.step(cy, sl, ml);
                 self.sched.mark_dirty(bs);
                 self.sched.mark_dirty(bm);
             }
@@ -300,8 +292,26 @@ impl Soc {
 
     /// Run to completion of all cluster programs, fast-forwarding over
     /// pure timer waits (§Perf event horizon; disabled by
-    /// `SocConfig::force_naive`).
+    /// `SocConfig::force_naive`). With `SocConfig::threads` resolving
+    /// above 1 the parallel stepping engine (`sim::parallel`) carries
+    /// the cycle loop — cycle counts, statistics, and memory stay
+    /// bit-identical to the sequential path
+    /// (`tests/parallel_parity.rs`).
     pub fn run(
+        &mut self,
+        handler: &mut dyn ComputeHandler,
+        watchdog: Watchdog,
+    ) -> Result<Cycle, SimError> {
+        let threads = self.cfg.resolved_threads();
+        if threads > 1 {
+            return self.run_parallel(handler, watchdog, threads);
+        }
+        self.run_sequential(handler, watchdog)
+    }
+
+    /// The sequential golden engine, regardless of `SocConfig::threads`
+    /// (the reference the parallel parity suite compares against).
+    pub fn run_sequential(
         &mut self,
         handler: &mut dyn ComputeHandler,
         watchdog: Watchdog,

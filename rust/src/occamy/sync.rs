@@ -30,6 +30,10 @@ pub struct BarrierUnit {
     use_mcast: bool,
     all_mailboxes: AddrSet,
     mailbox_addrs: Vec<u64>,
+    /// Private transaction-tag sequence (see `Cluster::txn_seq`): the
+    /// unit owns the nonzero range below `1 << 40`, disjoint from every
+    /// cluster's, so tag assignment is order-independent.
+    txn_seq: Txn,
 }
 
 impl BarrierUnit {
@@ -46,18 +50,13 @@ impl BarrierUnit {
             use_mcast: cfg.narrow_mcast,
             all_mailboxes: cfg.all_mailboxes(),
             mailbox_addrs: (0..cfg.n_clusters).map(|i| cfg.mailbox_addr(i)).collect(),
+            txn_seq: 1,
         }
     }
 
     /// One cycle: `slave` is the link clusters write to; `master` is the
     /// unit's own port into the narrow top crossbar for release IRQs.
-    pub fn step(
-        &mut self,
-        _cy: Cycle,
-        slave: &mut AxiLink,
-        master: &mut AxiLink,
-        next_txn: &mut Txn,
-    ) {
+    pub fn step(&mut self, _cy: Cycle, slave: &mut AxiLink, master: &mut AxiLink) {
         // collect arrivals
         if let Some(aw) = slave.aw.pop() {
             self.mbox_w.push_back((aw.txn, aw.beats));
@@ -110,8 +109,8 @@ impl BarrierUnit {
         if let Some(dst) = self.release_q.front().copied() {
             if master.aw.can_push() && master.w.can_push() {
                 self.release_q.pop_front();
-                let txn = *next_txn;
-                *next_txn += 1;
+                let txn = self.txn_seq;
+                self.txn_seq += 1;
                 master.aw.push(AwBeat {
                     id: 0,
                     dest: dst,
@@ -186,14 +185,13 @@ mod tests {
         let mut b = BarrierUnit::new(&cfg);
         let mut slave = AxiLink::new(8);
         let mut master = AxiLink::new(8);
-        let mut txn = 100;
         for i in 0..4 {
             arrive(&mut slave, i);
         }
         for cy in 0..40 {
             slave.tick();
             master.tick();
-            b.step(cy, &mut slave, &mut master, &mut txn);
+            b.step(cy, &mut slave, &mut master);
         }
         assert_eq!(b.releases, 1);
         // exactly one multicast AW went out
@@ -207,14 +205,13 @@ mod tests {
         let mut b = BarrierUnit::new(&cfg);
         let mut slave = AxiLink::new(8);
         let mut master = AxiLink::new(8);
-        let mut txn = 100;
         for i in 0..4 {
             arrive(&mut slave, i);
         }
         for cy in 0..200 {
             slave.tick();
             master.tick();
-            b.step(cy, &mut slave, &mut master, &mut txn);
+            b.step(cy, &mut slave, &mut master);
             // sink Bs so b_pending drains
             while let Some(aw) = master.aw.pop() {
                 master.b.push(crate::axi::types::BBeat {
@@ -236,14 +233,13 @@ mod tests {
         let mut b = BarrierUnit::new(&cfg);
         let mut slave = AxiLink::new(8);
         let mut master = AxiLink::new(8);
-        let mut txn = 10;
         for round in 0..3u64 {
             arrive(&mut slave, round * 2);
             arrive(&mut slave, round * 2 + 1);
             for cy in 0..50 {
                 slave.tick();
                 master.tick();
-                b.step(cy, &mut slave, &mut master, &mut txn);
+                b.step(cy, &mut slave, &mut master);
                 while let Some(aw) = master.aw.pop() {
                     master.b.push(crate::axi::types::BBeat {
                         id: 0,

@@ -5,9 +5,19 @@
 //!   [`Chan::tick`] (one-cycle latency, like a register slice).
 //! * Capacity bounds the total occupancy (queued + staged), modelling
 //!   FIFO depth / backpressure: `can_push` is the producer-visible
-//!   `ready`.
+//!   `ready`, **registered**: it reflects the space as of the last
+//!   clock edge minus this cycle's own pushes. A same-cycle pop by the
+//!   consumer frees space only after the next tick — exactly the ready
+//!   a registered AXI slice presents, and the property that makes the
+//!   producer and consumer ends steppable on different threads within
+//!   a cycle (DESIGN.md §8).
 //! * `stale_space` exposes the occupancy as of the last tick — the
-//!   "registered ready" some RTL fork/join logic sees (one cycle stale).
+//!   registered ready the RTL fork/join logic sees (one cycle stale).
+//! * [`Chan::split_cut`]/[`Chan::tick_cut`]/[`Chan::join_cut`] split a
+//!   channel into an independent producer half (staged + registered
+//!   space) and consumer half (visible queue) for links crossing a
+//!   thread-partition boundary; `tick_cut` is the clock edge across
+//!   the two halves and is bit-equivalent to `tick` on a whole channel.
 
 use std::collections::VecDeque;
 
@@ -50,8 +60,15 @@ impl<T> Chan<T> {
     }
 
     /// Producer-side ready: is there space to push this cycle?
+    ///
+    /// Registered: space as of the last tick minus items already staged
+    /// this cycle. Same-cycle pops free space only at the next tick, so
+    /// the answer never depends on whether the consumer stepped first —
+    /// total occupancy stays bounded because the visible queue only
+    /// shrinks between ticks (`q.len() + staged.len() ≤ q_at_tick +
+    /// space_at_tick = cap`).
     pub fn can_push(&self) -> bool {
-        self.len() < self.cap
+        self.staged.len() < self.space_at_tick
     }
 
     /// Space as seen at the last clock edge (registered-ready modelling;
@@ -103,6 +120,67 @@ impl<T> Chan<T> {
         self.staged.clear();
         self.space_at_tick = self.cap;
     }
+
+    // ---- cut-link support (sim::parallel) ----
+    //
+    // A channel crossing a thread-partition boundary is split into two
+    // halves living in different shards: the producer half carries the
+    // write-back state (staged items, the registered space snapshot,
+    // the `pushed` counter), the consumer half the read-front state
+    // (visible queue, `popped` counter). Because `can_push` is
+    // registered and `pop`/`front` touch only the visible queue, each
+    // half is completely self-contained within a cycle; `tick_cut` is
+    // the clock edge across both.
+
+    /// Split into `(producer half, consumer half)`.
+    pub fn split_cut(self) -> (Chan<T>, Chan<T>) {
+        let producer = Chan {
+            q: VecDeque::new(),
+            staged: self.staged,
+            cap: self.cap,
+            space_at_tick: self.space_at_tick,
+            pushed: self.pushed,
+            popped: 0,
+        };
+        let consumer = Chan {
+            q: self.q,
+            staged: VecDeque::new(),
+            cap: self.cap,
+            space_at_tick: self.space_at_tick,
+            pushed: 0,
+            popped: self.popped,
+        };
+        (producer, consumer)
+    }
+
+    /// Clock edge across a split channel: staged items of the producer
+    /// half become visible in the consumer half, and both halves get
+    /// the fresh registered-space snapshot. Bit-equivalent to
+    /// [`Chan::tick`] on the joined channel.
+    pub fn tick_cut(producer: &mut Chan<T>, consumer: &mut Chan<T>) {
+        debug_assert_eq!(producer.cap, consumer.cap);
+        if !producer.staged.is_empty() {
+            consumer.q.append(&mut producer.staged);
+        }
+        let space = producer.cap - consumer.q.len();
+        producer.space_at_tick = space;
+        consumer.space_at_tick = space;
+    }
+
+    /// Reassemble a split channel (inverse of [`Chan::split_cut`]).
+    pub fn join_cut(producer: Chan<T>, consumer: Chan<T>) -> Chan<T> {
+        debug_assert_eq!(producer.cap, consumer.cap);
+        debug_assert!(consumer.staged.is_empty());
+        debug_assert!(producer.q.is_empty());
+        Chan {
+            q: consumer.q,
+            staged: producer.staged,
+            cap: producer.cap,
+            space_at_tick: producer.space_at_tick,
+            pushed: producer.pushed,
+            popped: consumer.popped,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,7 +207,31 @@ mod tests {
         c.tick();
         assert!(!c.can_push(), "queued items still occupy space");
         c.pop();
+        assert!(
+            !c.can_push(),
+            "registered ready: a pop frees space only at the next tick"
+        );
+        c.tick();
         assert!(c.can_push());
+    }
+
+    #[test]
+    fn ready_is_registered_against_same_cycle_pops() {
+        let mut c: Chan<u32> = Chan::new(2);
+        c.push(1);
+        c.push(2);
+        c.tick();
+        // consumer drains the whole queue mid-cycle …
+        assert_eq!(c.pop(), Some(1));
+        assert_eq!(c.pop(), Some(2));
+        // … but the producer's ready still reflects the clock edge
+        assert!(!c.can_push());
+        c.tick();
+        assert!(c.can_push());
+        c.push(3);
+        assert!(c.can_push(), "one staged item against two spaces");
+        c.push(4);
+        assert!(!c.can_push());
     }
 
     #[test]
@@ -173,6 +275,44 @@ mod tests {
         assert_eq!(c.stale_space(), 1, "pop not visible until tick");
         c.tick();
         assert_eq!(c.stale_space(), 2);
+    }
+
+    #[test]
+    fn split_cut_matches_whole_channel_bit_for_bit() {
+        // drive a whole channel and a split pair with the same
+        // producer/consumer scripts; every observable must agree.
+        let mut whole: Chan<u32> = Chan::new(2);
+        let (mut prod, mut cons) = Chan::<u32>::new(2).split_cut();
+        let mut got_whole = Vec::new();
+        let mut got_split = Vec::new();
+        for cy in 0..32u32 {
+            // consumer pops every third cycle (induces backpressure)
+            if cy % 3 != 0 {
+                if let Some(v) = whole.pop() {
+                    got_whole.push(v);
+                }
+                if let Some(v) = cons.pop() {
+                    got_split.push(v);
+                }
+            }
+            assert_eq!(whole.can_push(), prod.can_push(), "cycle {cy}");
+            if whole.can_push() {
+                whole.push(cy);
+            }
+            if prod.can_push() {
+                prod.push(cy);
+            }
+            whole.tick();
+            Chan::tick_cut(&mut prod, &mut cons);
+            assert_eq!(whole.visible(), cons.visible(), "cycle {cy}");
+            assert_eq!(whole.stale_space(), prod.stale_space(), "cycle {cy}");
+        }
+        assert_eq!(got_whole, got_split);
+        assert!(!got_whole.is_empty());
+        let joined = Chan::join_cut(prod, cons);
+        assert_eq!(joined.pushed, whole.pushed);
+        assert_eq!(joined.popped, whole.popped);
+        assert_eq!(joined.visible(), whole.visible());
     }
 
     #[test]

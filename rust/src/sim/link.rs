@@ -41,6 +41,14 @@ impl LinkId {
     pub fn index(self) -> usize {
         self.0 as usize
     }
+
+    /// Rebuild a handle from a pool position (crate-internal: the
+    /// scheduler shards and the parallel engine exchange link ids as
+    /// raw indices across threads).
+    #[inline]
+    pub(crate) fn from_index(i: usize) -> LinkId {
+        LinkId(u32::try_from(i).expect("link index overflow"))
+    }
 }
 
 impl std::fmt::Display for LinkId {
@@ -88,9 +96,26 @@ impl<L> Pool<L> {
         LinkId(i as u32)
     }
 
-    /// All handles, in allocation order.
-    pub fn ids(&self) -> Vec<LinkId> {
-        (0..self.links.len() as u32).map(LinkId).collect()
+    /// All handles, in allocation order. Allocation-free: ids are the
+    /// positions `0..len`, so the iterator is just a counter (callers
+    /// that used to receive a fresh `Vec` per call collect explicitly).
+    pub fn ids(&self) -> impl Iterator<Item = LinkId> {
+        let n = self.links.len() as u32;
+        (0..n).map(LinkId)
+    }
+
+    /// Tear the pool apart into its links, in allocation order (the
+    /// parallel engine distributes them across shard pools and rebuilds
+    /// with [`Pool::from_links`]).
+    pub fn into_links(self) -> Vec<L> {
+        self.links
+    }
+
+    /// Rebuild a pool from links previously obtained via
+    /// [`Pool::into_links`]; ids are the vector positions.
+    pub fn from_links(links: Vec<L>) -> Pool<L> {
+        u32::try_from(links.len()).expect("link pool overflow");
+        Pool { links }
     }
 
     /// Disjoint mutable access to several links at once (panics if any
@@ -177,7 +202,21 @@ mod tests {
         p[a].visible = true;
         assert!(p[a].any_visible());
         assert!(!p[b].any_visible());
-        assert_eq!(p.ids(), vec![a, b]);
+        assert_eq!(p.ids().collect::<Vec<_>>(), vec![a, b]);
+    }
+
+    #[test]
+    fn into_and_from_links_round_trips() {
+        let mut p: Pool<FakeLink> = Pool::new();
+        let a = p.alloc(FakeLink::default());
+        let b = p.alloc(FakeLink::default());
+        p[b].ticks = 7;
+        let links = p.into_links();
+        assert_eq!(links.len(), 2);
+        let p2 = Pool::from_links(links);
+        assert_eq!(p2[a].ticks, 0);
+        assert_eq!(p2[b].ticks, 7);
+        assert_eq!(p2.id_at(1), b);
     }
 
     #[test]

@@ -1,18 +1,20 @@
 //! Cycle-level simulation kernel.
 //!
 //! The simulator is *clock-stepped*: every component implements a `step`
-//! that runs once per cycle in a fixed deterministic order, exchanging
-//! beats through staged channels ([`chan::Chan`]). A push performed in
-//! cycle *k* becomes visible to the consumer in cycle *k+1*, modelling a
-//! registered (spill-register) hop exactly like the `axi_multicut`-style
-//! pipelining in the RTL this reproduces. Because visibility is staged,
-//! simulation results are independent of intra-cycle component order for
-//! everything except same-cycle ready evaluation, which is made
-//! deterministic by the fixed step order.
+//! that runs once per cycle, exchanging beats through staged channels
+//! ([`chan::Chan`]). A push performed in cycle *k* becomes visible to
+//! the consumer in cycle *k+1*, modelling a registered (spill-register)
+//! hop exactly like the `axi_multicut`-style pipelining in the RTL this
+//! reproduces. Both visibility *and* ready ([`chan::Chan::can_push`])
+//! are registered against the last clock edge, so simulation results
+//! are fully independent of intra-cycle component order — the invariant
+//! the [`parallel`] engine exploits to step disjoint component
+//! partitions concurrently, bit-identically to sequential stepping.
 
 pub mod chan;
 pub mod engine;
 pub mod link;
+pub mod parallel;
 pub mod sched;
 pub mod trace;
 

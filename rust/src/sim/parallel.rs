@@ -1,0 +1,529 @@
+//! Conservative lookahead-1 parallel stepping substrate (§Perf).
+//!
+//! The sequential engine steps every component once per cycle against
+//! staged links, so a push in cycle *k* is visible in cycle *k+1* and —
+//! with registered ready semantics ([`Chan::can_push`]) and
+//! order-independent shared state (per-source transaction tags,
+//! atomically-partitioned ledgers) — the within-cycle component order
+//! cannot influence any outcome. That is exactly a lookahead of one
+//! cycle: every component's cycle-*k* step depends only on state sealed
+//! at the cycle-*k* clock edge, so disjoint component subsets may step
+//! **concurrently** and merge at a barrier, bit-identically to the
+//! sequential schedule (`tests/parallel_parity.rs`).
+//!
+//! This module is the graph-agnostic machinery:
+//!
+//! * [`Atom`]/[`partition`]: deterministic greedy partitioning of
+//!   component atoms across shards by link affinity (minimise cut
+//!   links), honouring pre-pinned atoms;
+//! * [`LinkHome`]/[`split_pool`]/[`merge_pools`]/[`tick_link`]: the
+//!   link distribution. Every shard carries a **full-size** pool so
+//!   `LinkId`s stay valid; a link whose endpoints land on one shard
+//!   lives there whole, a link crossing shards is split into its two
+//!   directional halves ([`CutLink::split_cut`]) with the clock edge
+//!   bridging them at the merge barrier ([`CutLink::tick_cut`]);
+//! * [`WorkerPool`]: persistent worker threads driven by ownership
+//!   ping-pong — each cycle the coordinator sends every shard to its
+//!   worker and collects it back, so between cycles the coordinator
+//!   owns all state (merge, horizon checks, functional side effects)
+//!   with no locks on the hot path.
+//!
+//! Drivers (the SoC's `run_parallel`, the topology harness) own the
+//! cycle loop; see DESIGN.md §8 for the correctness argument.
+//!
+//! [`Chan::can_push`]: super::chan::Chan::can_push
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::link::{Link, LinkId, Pool};
+
+/// A link that can be split into a master half (request-producer /
+/// response-consumer) and a slave half for cross-shard placement.
+/// The halves partition the link's queues and counters: any state
+/// query summed or OR-ed over both halves equals the whole link's.
+pub trait CutLink: Link + Send + Sized + 'static {
+    /// Split into `(master half, slave half)`.
+    fn split_cut(self) -> (Self, Self);
+    /// Clock edge across a split pair (staged→visible both ways).
+    fn tick_cut(master: &mut Self, slave: &mut Self);
+    /// Reassemble; inverse of [`CutLink::split_cut`].
+    fn join_cut(master: Self, slave: Self) -> Self;
+    /// Filler for pool slots owned by other shards (never touched).
+    fn dummy() -> Self;
+}
+
+/// Where a link lives across the shard pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkHome {
+    /// Both endpoints on one shard: the whole link lives there.
+    Owned(usize),
+    /// Endpoints on two shards: master half on `m`, slave half on `s`.
+    Cut { m: usize, s: usize },
+}
+
+/// One indivisible unit of the component graph for partitioning: a
+/// component (or component group whose internal step order must be
+/// preserved, e.g. a reservation-armed crossbar network) plus its
+/// ports, each flagged with the side the atom plays on that link.
+pub struct Atom {
+    /// `(link, atom_is_master_side)` — the master side of a link sends
+    /// requests into it (AW/W/AR) and consumes responses (B/R).
+    pub ports: Vec<(LinkId, bool)>,
+    /// Fixed shard assignment (load anchors, e.g. clusters spread in
+    /// contiguous index blocks). `None` = placed greedily.
+    pub pin: Option<usize>,
+}
+
+/// Deterministic greedy partition: pinned atoms first, then the rest
+/// in index order, each placed on the shard sharing the most links
+/// with it (ties: lighter shard, then lower shard id). Returns the
+/// shard index per atom.
+pub fn partition(atoms: &[Atom], n_shards: usize) -> Vec<usize> {
+    assert!(n_shards >= 1);
+    let mut assign = vec![usize::MAX; atoms.len()];
+    let mut load = vec![0usize; n_shards];
+    let mut shard_links: Vec<std::collections::HashSet<u32>> =
+        (0..n_shards).map(|_| std::collections::HashSet::new()).collect();
+    let mut place = |i: usize,
+                     sh: usize,
+                     assign: &mut Vec<usize>,
+                     load: &mut Vec<usize>,
+                     shard_links: &mut Vec<std::collections::HashSet<u32>>| {
+        assign[i] = sh;
+        load[sh] += 1;
+        for &(id, _) in &atoms[i].ports {
+            shard_links[sh].insert(id.index() as u32);
+        }
+    };
+    for (i, a) in atoms.iter().enumerate() {
+        if let Some(p) = a.pin {
+            assert!(p < n_shards, "pin {p} out of range");
+            place(i, p, &mut assign, &mut load, &mut shard_links);
+        }
+    }
+    for (i, a) in atoms.iter().enumerate() {
+        if assign[i] != usize::MAX {
+            continue;
+        }
+        let mut best = 0usize;
+        let mut best_key = (0i64, i64::MIN);
+        for sh in 0..n_shards {
+            let aff = a
+                .ports
+                .iter()
+                .filter(|(id, _)| shard_links[sh].contains(&(id.index() as u32)))
+                .count() as i64;
+            let key = (aff, -(load[sh] as i64));
+            if key > best_key {
+                best_key = key;
+                best = sh;
+            }
+        }
+        place(i, best, &mut assign, &mut load, &mut shard_links);
+    }
+    assign
+}
+
+/// Derive each link's [`LinkHome`] from the atom assignment. A link
+/// may have at most one master-side and one slave-side atom; a link
+/// only one of whose sides is stepped at all (e.g. the injection port
+/// of an endpoint no scripted master drives) is owned whole by the
+/// side that is present, and a link nobody steps parks on shard 0.
+pub fn link_homes(atoms: &[Atom], assign: &[usize], n_links: usize) -> Vec<LinkHome> {
+    let mut master = vec![usize::MAX; n_links];
+    let mut slave = vec![usize::MAX; n_links];
+    for (ai, a) in atoms.iter().enumerate() {
+        for &(id, is_m) in &a.ports {
+            let side = if is_m { &mut master } else { &mut slave };
+            let slot = &mut side[id.index()];
+            assert_eq!(*slot, usize::MAX, "link {id:?}: duplicate side registration");
+            *slot = ai;
+        }
+    }
+    (0..n_links)
+        .map(|i| match (master[i], slave[i]) {
+            (usize::MAX, usize::MAX) => LinkHome::Owned(0),
+            (usize::MAX, sa) => LinkHome::Owned(assign[sa]),
+            (ma, usize::MAX) => LinkHome::Owned(assign[ma]),
+            (ma, sa) => {
+                let (m, s) = (assign[ma], assign[sa]);
+                if m == s {
+                    LinkHome::Owned(m)
+                } else {
+                    LinkHome::Cut { m, s }
+                }
+            }
+        })
+        .collect()
+}
+
+/// Distribute a pool across `n_shards` full-size shard pools: owned
+/// links move whole, cut links are split, all other slots get dummies.
+pub fn split_pool<L: CutLink>(pool: Pool<L>, homes: &[LinkHome], n_shards: usize) -> Vec<Pool<L>> {
+    let links = pool.into_links();
+    assert_eq!(links.len(), homes.len());
+    let n = links.len();
+    let mut shard_links: Vec<Vec<L>> = (0..n_shards)
+        .map(|_| (0..n).map(|_| L::dummy()).collect())
+        .collect();
+    for (i, l) in links.into_iter().enumerate() {
+        match homes[i] {
+            LinkHome::Owned(sh) => shard_links[sh][i] = l,
+            LinkHome::Cut { m, s } => {
+                debug_assert_ne!(m, s);
+                let (mh, sh) = l.split_cut();
+                shard_links[m][i] = mh;
+                shard_links[s][i] = sh;
+            }
+        }
+    }
+    shard_links.into_iter().map(Pool::from_links).collect()
+}
+
+/// Reassemble the original pool from the shard pools (inverse of
+/// [`split_pool`]; dummies are dropped).
+pub fn merge_pools<L: CutLink>(pools: Vec<Pool<L>>, homes: &[LinkHome]) -> Pool<L> {
+    let mut vecs: Vec<Vec<L>> = pools.into_iter().map(Pool::into_links).collect();
+    let mut out = Vec::with_capacity(homes.len());
+    for (i, home) in homes.iter().enumerate() {
+        let take = |vecs: &mut Vec<Vec<L>>, sh: usize| std::mem::replace(&mut vecs[sh][i], L::dummy());
+        match *home {
+            LinkHome::Owned(sh) => out.push(take(&mut vecs, sh)),
+            LinkHome::Cut { m, s } => {
+                let mh = take(&mut vecs, m);
+                let sh = take(&mut vecs, s);
+                out.push(L::join_cut(mh, sh));
+            }
+        }
+    }
+    Pool::from_links(out)
+}
+
+/// Clock edge for one link across the shard pools; returns whether the
+/// link has visible beats afterwards. Plugs into
+/// [`Scheduler::end_cycle_with`] on the master scheduler.
+///
+/// [`Scheduler::end_cycle_with`]: super::sched::Scheduler::end_cycle_with
+pub fn tick_link<L: CutLink>(pools: &mut [&mut Pool<L>], homes: &[LinkHome], id: LinkId) -> bool {
+    match homes[id.index()] {
+        LinkHome::Owned(sh) => {
+            let l = &mut pools[sh][id];
+            l.tick();
+            l.any_visible()
+        }
+        LinkHome::Cut { m, s } => {
+            let (mp, sp) = two_of(pools, m, s);
+            let (mh, sh) = (&mut mp[id], &mut sp[id]);
+            L::tick_cut(mh, sh);
+            mh.any_visible() || sh.any_visible()
+        }
+    }
+}
+
+/// Disjoint mutable access to two slots of a slice of borrows.
+fn two_of<'a, T: ?Sized>(v: &'a mut [&mut T], i: usize, j: usize) -> (&'a mut T, &'a mut T) {
+    assert_ne!(i, j);
+    if i < j {
+        let (a, b) = v.split_at_mut(j);
+        (&mut *a[i], &mut *b[0])
+    } else {
+        let (a, b) = v.split_at_mut(i);
+        (&mut *b[0], &mut *a[j])
+    }
+}
+
+/// The per-shard step function a [`WorkerPool`] runs each cycle.
+pub type StepFn<S> = Arc<dyn Fn(&mut S, u64) + Send + Sync>;
+
+/// Persistent worker threads, one per shard, driven by ownership
+/// ping-pong: [`WorkerPool::step_all`] sends each shard to its worker
+/// and collects it back in slot order, so results are deterministic
+/// and the coordinator owns every shard between cycles.
+pub struct WorkerPool<S: Send + 'static> {
+    workers: Vec<Worker<S>>,
+}
+
+struct Worker<S> {
+    job_tx: Option<mpsc::Sender<(S, u64)>>,
+    done_rx: mpsc::Receiver<S>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<S: Send + 'static> WorkerPool<S> {
+    pub fn new(n: usize, step: StepFn<S>) -> WorkerPool<S> {
+        let workers = (0..n)
+            .map(|_| {
+                let (job_tx, job_rx) = mpsc::channel::<(S, u64)>();
+                let (done_tx, done_rx) = mpsc::channel::<S>();
+                let step = Arc::clone(&step);
+                let handle = std::thread::spawn(move || {
+                    while let Ok((mut s, cy)) = job_rx.recv() {
+                        step(&mut s, cy);
+                        if done_tx.send(s).is_err() {
+                            break;
+                        }
+                    }
+                });
+                Worker {
+                    job_tx: Some(job_tx),
+                    done_rx,
+                    handle: Some(handle),
+                }
+            })
+            .collect();
+        WorkerPool { workers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Step every shard concurrently for cycle `cy`; blocks until all
+    /// workers finish and returns the shards in their original order.
+    pub fn step_all(&mut self, shards: Vec<S>, cy: u64) -> Vec<S> {
+        assert_eq!(shards.len(), self.workers.len());
+        for (w, s) in self.workers.iter().zip(shards) {
+            w.job_tx
+                .as_ref()
+                .expect("worker pool shut down")
+                .send((s, cy))
+                .expect("worker thread died");
+        }
+        self.workers
+            .iter()
+            .map(|w| w.done_rx.recv().expect("worker thread died"))
+            .collect()
+    }
+}
+
+impl<S: Send + 'static> Drop for WorkerPool<S> {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            w.job_tx.take(); // hang up: workers exit their recv loop
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal cut-capable link: one forward (master→slave) and one
+    /// reverse pipe, each a staged counter draining into a visible one.
+    #[derive(Default, Debug, PartialEq, Eq)]
+    struct FakeCut {
+        fwd_staged: u32,
+        fwd_q: u32,
+        rev_staged: u32,
+        rev_q: u32,
+        popped: u64,
+    }
+
+    impl Link for FakeCut {
+        fn tick(&mut self) {
+            self.fwd_q += self.fwd_staged;
+            self.fwd_staged = 0;
+            self.rev_q += self.rev_staged;
+            self.rev_staged = 0;
+        }
+        fn any_visible(&self) -> bool {
+            self.fwd_q > 0 || self.rev_q > 0
+        }
+        fn is_idle(&self) -> bool {
+            self.fwd_staged == 0 && self.fwd_q == 0 && self.rev_staged == 0 && self.rev_q == 0
+        }
+        fn moved(&self) -> u64 {
+            self.popped
+        }
+    }
+
+    impl CutLink for FakeCut {
+        fn split_cut(self) -> (FakeCut, FakeCut) {
+            let master = FakeCut {
+                fwd_staged: self.fwd_staged,
+                rev_q: self.rev_q,
+                ..Default::default()
+            };
+            let slave = FakeCut {
+                fwd_q: self.fwd_q,
+                rev_staged: self.rev_staged,
+                popped: self.popped,
+                ..Default::default()
+            };
+            (master, slave)
+        }
+        fn tick_cut(master: &mut FakeCut, slave: &mut FakeCut) {
+            slave.fwd_q += master.fwd_staged;
+            master.fwd_staged = 0;
+            master.rev_q += slave.rev_staged;
+            slave.rev_staged = 0;
+        }
+        fn join_cut(master: FakeCut, slave: FakeCut) -> FakeCut {
+            FakeCut {
+                fwd_staged: master.fwd_staged,
+                fwd_q: slave.fwd_q,
+                rev_staged: slave.rev_staged,
+                rev_q: master.rev_q,
+                popped: master.popped + slave.popped,
+            }
+        }
+        fn dummy() -> FakeCut {
+            FakeCut::default()
+        }
+    }
+
+    fn atom(links: &[(u32, bool)], pin: Option<usize>) -> Atom {
+        Atom {
+            ports: links.iter().map(|&(i, m)| (LinkId::from_index(i as usize), m)).collect(),
+            pin,
+        }
+    }
+
+    #[test]
+    fn partition_honours_pins_and_affinity() {
+        // atoms 0/1 pinned apart; atom 2 shares both its links with
+        // atom 1 → must follow it to shard 1
+        let atoms = vec![
+            atom(&[(0, true)], Some(0)),
+            atom(&[(1, false), (2, false)], Some(1)),
+            atom(&[(1, true), (2, true)], None),
+        ];
+        let assign = partition(&atoms, 2);
+        assert_eq!(assign, vec![0, 1, 1]);
+        // deterministic across calls
+        assert_eq!(assign, partition(&atoms, 2));
+    }
+
+    #[test]
+    fn partition_balances_when_no_affinity() {
+        let atoms: Vec<Atom> = (0..4).map(|i| atom(&[(i, true)], None)).collect();
+        let assign = partition(&atoms, 2);
+        // no shared links: ties break toward the lighter shard
+        assert_eq!(assign.iter().filter(|&&s| s == 0).count(), 2);
+        assert_eq!(assign.iter().filter(|&&s| s == 1).count(), 2);
+    }
+
+    #[test]
+    fn link_homes_distinguish_owned_and_cut() {
+        let atoms = vec![
+            atom(&[(0, true), (1, true)], Some(0)),
+            atom(&[(0, false)], Some(0)),
+            atom(&[(1, false), (2, false)], Some(1)),
+        ];
+        let assign = partition(&atoms, 2);
+        // 4 links, the last stepped by nobody (parks whole on shard 0);
+        // link 2 is consumed on shard 1 but has no master-side atom —
+        // it lives whole with its only user
+        let homes = link_homes(&atoms, &assign, 4);
+        assert_eq!(homes[0], LinkHome::Owned(0));
+        assert_eq!(homes[1], LinkHome::Cut { m: 0, s: 1 });
+        assert_eq!(homes[2], LinkHome::Owned(1));
+        assert_eq!(homes[3], LinkHome::Owned(0));
+    }
+
+    #[test]
+    fn split_tick_merge_matches_whole_pool() {
+        // reference: two whole links stepped sequentially
+        let mut whole: Pool<FakeCut> = Pool::new();
+        let a = whole.alloc(FakeCut::default());
+        let b = whole.alloc(FakeCut::default());
+        // shadow: link a owned by shard 0, link b cut between 0 and 1
+        let homes = vec![LinkHome::Owned(0), LinkHome::Cut { m: 0, s: 1 }];
+        let mut split: Pool<FakeCut> = Pool::new();
+        split.alloc(FakeCut::default());
+        split.alloc(FakeCut::default());
+        let mut pools = split_pool(split, &homes, 2);
+
+        for cy in 0..6u32 {
+            // producers stage on both sides; consumers drain visibles
+            for (i, id) in [a, b].into_iter().enumerate() {
+                // whole
+                let l = &mut whole[id];
+                l.fwd_staged += cy + i as u32;
+                l.rev_staged += 1;
+                l.popped += (l.fwd_q + l.rev_q) as u64;
+                l.fwd_q = 0;
+                l.rev_q = 0;
+                // split halves: producer state lives master-side for
+                // fwd, slave-side for rev; consumers on the opposite
+                match homes[i] {
+                    LinkHome::Owned(sh) => {
+                        let l = &mut pools[sh][id];
+                        l.fwd_staged += cy + i as u32;
+                        l.rev_staged += 1;
+                        l.popped += (l.fwd_q + l.rev_q) as u64;
+                        l.fwd_q = 0;
+                        l.rev_q = 0;
+                    }
+                    LinkHome::Cut { m, s } => {
+                        pools[m][id].fwd_staged += cy + i as u32;
+                        pools[s][id].rev_staged += 1;
+                        let sl = &mut pools[s][id];
+                        sl.popped += sl.fwd_q as u64;
+                        sl.fwd_q = 0;
+                        let ml = &mut pools[m][id];
+                        ml.popped += ml.rev_q as u64;
+                        ml.rev_q = 0;
+                    }
+                }
+            }
+            // clock edges
+            whole[a].tick();
+            whole[b].tick();
+            let mut refs: Vec<&mut Pool<FakeCut>> = pools.iter_mut().collect();
+            let va = tick_link(&mut refs, &homes, a);
+            let vb = tick_link(&mut refs, &homes, b);
+            assert_eq!(va, whole[a].any_visible(), "cycle {cy} link a");
+            assert_eq!(vb, whole[b].any_visible(), "cycle {cy} link b");
+        }
+        let moved_split: u64 = pools.iter().map(|p| p.moved_total()).sum();
+        assert_eq!(moved_split, whole.moved_total());
+        let merged = merge_pools(pools, &homes);
+        assert_eq!(merged[a], whole[a]);
+        assert_eq!(merged[b], whole[b]);
+    }
+
+    #[test]
+    fn worker_pool_preserves_slot_order() {
+        let step: StepFn<Vec<u64>> = Arc::new(|s: &mut Vec<u64>, cy: u64| {
+            let tag = s[0];
+            s.push(tag * 1000 + cy);
+        });
+        let mut wp = WorkerPool::new(3, step);
+        assert_eq!(wp.len(), 3);
+        let mut shards: Vec<Vec<u64>> = (0..3u64).map(|i| vec![i]).collect();
+        for cy in 0..5u64 {
+            shards = wp.step_all(shards, cy);
+        }
+        for (i, s) in shards.iter().enumerate() {
+            let i = i as u64;
+            assert_eq!(s[0], i, "slot order lost");
+            assert_eq!(s[1..], (0..5).map(|cy| i * 1000 + cy).collect::<Vec<_>>()[..]);
+        }
+    }
+
+    #[test]
+    fn two_of_returns_disjoint_slots() {
+        let mut x = 1u32;
+        let mut y = 2u32;
+        let mut v: Vec<&mut u32> = vec![&mut x, &mut y];
+        {
+            let (a, b) = two_of(&mut v, 1, 0);
+            assert_eq!((*a, *b), (2, 1));
+            *a += 10;
+            *b += 20;
+        }
+        assert_eq!((x, y), (21, 12));
+    }
+}

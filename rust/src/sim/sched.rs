@@ -185,6 +185,22 @@ impl Scheduler {
     /// previously-active), not O(all links).
     pub fn end_cycle<L: Link>(&mut self, pool: &mut Pool<L>) {
         debug_assert_eq!(self.active.len(), pool.len(), "scheduler out of sync");
+        self.end_cycle_with(|id| {
+            let l = &mut pool[id];
+            l.tick();
+            l.any_visible()
+        });
+    }
+
+    /// [`Scheduler::end_cycle`] with the clock edge abstracted: `tick`
+    /// receives each link due an edge (touched or active) exactly once
+    /// and returns whether the link has visible beats afterwards. The
+    /// parallel engine uses this to tick links living in shard pools —
+    /// a cut link's edge is [`tick_cut`] across its two halves, with
+    /// the visibility OR of both.
+    ///
+    /// [`tick_cut`]: crate::sim::Chan::tick_cut
+    pub fn end_cycle_with(&mut self, mut tick: impl FnMut(LinkId) -> bool) {
         self.scratch.clear();
         // dirtied links that were not active (the active pass below
         // handles the overlap — each link ticks exactly once)
@@ -193,26 +209,57 @@ impl Scheduler {
             if self.active[iu] {
                 continue;
             }
-            let id = pool.id_at(iu);
-            let l = &mut pool[id];
-            l.tick();
-            if l.any_visible() {
+            if tick(LinkId::from_index(iu)) {
                 self.active[iu] = true;
                 self.scratch.push(i);
             }
         }
         for &i in &self.active_idx {
             let iu = i as usize;
-            let id = pool.id_at(iu);
-            let l = &mut pool[id];
-            l.tick();
-            let vis = l.any_visible();
+            let vis = tick(LinkId::from_index(iu));
             self.active[iu] = vis;
             if vis {
                 self.scratch.push(i);
             }
         }
         std::mem::swap(&mut self.active_idx, &mut self.scratch);
+    }
+
+    // ---- shard support (sim::parallel) ----
+    //
+    // Each worker shard carries a full-size `Scheduler` clone whose
+    // `active` snapshot is re-synced from the master scheduler at the
+    // start of every cycle and whose dirty set drains back into the
+    // master at the merge barrier — so the per-component gating
+    // (`should_step`/`step_component`) runs identical decisions on
+    // every thread, and the master's `end_cycle` sees exactly the
+    // union of all shards' marks, in deterministic shard order.
+
+    /// Fresh shard scheduler: same size, nothing active or dirty (the
+    /// activity snapshot arrives via [`Scheduler::copy_active_from`]).
+    pub fn new_shard(n_links: usize) -> Scheduler {
+        Scheduler {
+            active: vec![false; n_links],
+            dirty: vec![false; n_links],
+            touched: Vec::new(),
+            active_idx: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Overwrite the activity snapshot from the master scheduler.
+    pub fn copy_active_from(&mut self, src: &Scheduler) {
+        debug_assert_eq!(self.active.len(), src.active.len());
+        self.active.copy_from_slice(&src.active);
+    }
+
+    /// Drain this shard's dirty set into `dst` (the master), clearing
+    /// the local flags.
+    pub fn drain_touched_into(&mut self, dst: &mut Scheduler) {
+        for i in self.touched.drain(..) {
+            self.dirty[i as usize] = false;
+            dst.mark_dirty(LinkId::from_index(i as usize));
+        }
     }
 }
 

@@ -20,7 +20,7 @@ pub mod table;
 /// test suite exercises the scan-everything reference mode — the
 /// naive half of the CI build matrix. Code that sets `force_naive`
 /// explicitly (the parity suites comparing both modes) is unaffected.
-/// Read once; the simulator is single-threaded per process.
+/// Read once per process (before any simulation thread starts).
 pub fn force_naive_env() -> bool {
     static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *FORCE.get_or_init(|| {
@@ -28,4 +28,26 @@ pub fn force_naive_env() -> bool {
             .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
             .unwrap_or(false)
     })
+}
+
+/// CI/override selector for the parallel stepping engine:
+/// `OCCAMY_THREADS=N` in the environment makes every
+/// default-constructed `SocConfig` start with `threads = N` (`0` =
+/// one worker per available core). Absent or unparsable = `None`,
+/// leaving the sequential default. The CLI `--threads` flag and
+/// explicit `SocConfig::threads` assignments take precedence the way
+/// any other config field does — this only seeds the default.
+pub fn threads_env() -> Option<usize> {
+    static THREADS: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| std::env::var("OCCAMY_THREADS").ok()?.trim().parse().ok())
+}
+
+/// Resolve a `threads` config value to an effective worker count:
+/// `0` = one per available core (floor 1 when the count is unknown).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        threads
+    }
 }

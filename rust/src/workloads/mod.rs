@@ -24,4 +24,7 @@ pub mod topo_sweep;
 pub use collectives::{run_collective, CollMode, CollOp, CollectiveResult};
 pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
 pub use microbench::{run_microbench, McastMode, MicrobenchResult};
-pub use topo_sweep::{run_topo_broadcast, run_topo_script, TopoRunResult};
+pub use topo_sweep::{
+    run_topo_broadcast, run_topo_broadcast_threads, run_topo_script, run_topo_script_with,
+    TopoRunResult,
+};

@@ -12,10 +12,13 @@
 
 use crate::axi::golden::SimSlave;
 use crate::axi::mcast::AddrSet;
-use crate::axi::topology::{build_shape, BuiltTopo, EndpointMap, FabricParams, TopoShape};
-use crate::axi::types::{AwBeat, LinkPool, WBeat};
-use crate::axi::xbar::XbarStats;
+use crate::axi::topology::{build_shape, BuiltTopo, EndpointMap, FabricParams, TopoShape, Topology};
+use crate::axi::types::{AwBeat, LinkId, LinkPool, WBeat};
+use crate::axi::xbar::{Xbar, XbarStats};
 use crate::sim::engine::{Engine, SimError, StepResult, Watchdog};
+use crate::sim::parallel::{
+    link_homes, merge_pools, partition, split_pool, tick_link, Atom, StepFn, WorkerPool,
+};
 use crate::sim::sched::Scheduler;
 
 /// Endpoint window layout used by the sweep (Occamy-like cluster map).
@@ -177,12 +180,26 @@ pub fn run_topo_script_timed(
     script: Vec<(AddrSet, u32)>,
     mcast: bool,
 ) -> Result<(TopoRunResult, TopoTiming), SimError> {
-    let t_build = std::time::Instant::now();
-    let mut pool = LinkPool::new();
     let params = FabricParams {
         mcast_enabled: mcast,
         ..FabricParams::default()
     };
+    run_topo_script_with(shape, n_endpoints, script, params)
+}
+
+/// [`run_topo_script_timed`] with explicit [`FabricParams`] — the knob
+/// surface for the perf bench and the `--threads` CLI plumbing.
+/// `params.threads > 1` runs the partitioned multi-threaded schedule
+/// ([`crate::sim::parallel`]), bit-identical to the sequential one.
+pub fn run_topo_script_with(
+    shape: &TopoShape,
+    n_endpoints: usize,
+    script: Vec<(AddrSet, u32)>,
+    params: FabricParams,
+) -> Result<(TopoRunResult, TopoTiming), SimError> {
+    let t_build = std::time::Instant::now();
+    let threads = crate::util::resolve_threads(params.threads);
+    let mut pool = LinkPool::new();
     let BuiltTopo {
         mut topo,
         endpoint_m,
@@ -192,7 +209,6 @@ pub fn run_topo_script_timed(
     let src = endpoint_m[0];
     let mut master = ScriptMaster::new(script);
     let mut slaves: Vec<SimSlave> = (0..n_endpoints).map(SimSlave::new).collect();
-    let mut sched = Scheduler::new(pool.len());
     let build_s = t_build.elapsed().as_secs_f64();
     let t_run = std::time::Instant::now();
 
@@ -200,34 +216,48 @@ pub fn run_topo_script_timed(
         stall_cycles: 100_000,
         max_cycles: 50_000_000,
     });
-    let cycles = eng.run(|cy| {
-        sched.begin_cycle();
-        // (no post-done drain needed: done() requires inflight == 0,
-        // which means every B was already popped from the src link)
-        if !master.done() {
-            master.step(&mut pool[src]);
-            sched.mark_dirty(src);
-        }
-        topo.step_scheduled(cy, &mut pool, &mut sched);
-        for (i, s) in slaves.iter_mut().enumerate() {
-            let link = endpoint_s[i];
-            if !s.idle() || sched.is_active(link) {
-                s.step_on(cy, &mut pool, link);
-                sched.mark_dirty(link);
+    let cycles = if threads > 1 {
+        run_topo_parallel(
+            &mut eng,
+            &mut topo,
+            &mut pool,
+            &mut master,
+            src,
+            &mut slaves,
+            &endpoint_s,
+            threads,
+        )?
+    } else {
+        let mut sched = Scheduler::new(pool.len());
+        eng.run(|cy| {
+            sched.begin_cycle();
+            // (no post-done drain needed: done() requires inflight == 0,
+            // which means every B was already popped from the src link)
+            if !master.done() {
+                master.step(&mut pool[src]);
+                sched.mark_dirty(src);
             }
-        }
-        sched.end_cycle(&mut pool);
-        let all_done = master.done()
-            && !topo.busy()
-            && slaves.iter().all(|s| s.idle());
-        if all_done {
-            StepResult::Done
-        } else {
-            StepResult::Running {
-                progress: pool.moved_total(),
+            topo.step_scheduled(cy, &mut pool, &mut sched);
+            for (i, s) in slaves.iter_mut().enumerate() {
+                let link = endpoint_s[i];
+                if !s.idle() || sched.is_active(link) {
+                    s.step_on(cy, &mut pool, link);
+                    sched.mark_dirty(link);
+                }
             }
-        }
-    })?;
+            sched.end_cycle(&mut pool);
+            let all_done = master.done()
+                && !topo.busy()
+                && slaves.iter().all(|s| s.idle());
+            if all_done {
+                StepResult::Done
+            } else {
+                StepResult::Running {
+                    progress: pool.moved_total(),
+                }
+            }
+        })?
+    };
 
     let run_s = t_run.elapsed().as_secs_f64();
 
@@ -252,6 +282,223 @@ pub fn run_topo_script_timed(
     ))
 }
 
+// ------------------------------------------------------ parallel schedule
+
+/// One component of a [`TopoShard`], stepped with exactly the gating
+/// the sequential loop applies.
+enum TopoComp {
+    Master { m: ScriptMaster, src: LinkId },
+    /// A run of crossbars stepped in `Topology::xbars` order; `first`
+    /// is the original index of `xbars[0]`. The whole fabric is one
+    /// run when a shared reservation ledger is armed (its first-come
+    /// seq assignment is the only in-cycle cross-crossbar order
+    /// dependency); otherwise one run per crossbar.
+    Xbars { first: usize, xbars: Vec<Xbar> },
+    Slave { idx: usize, s: SimSlave, link: LinkId },
+}
+
+/// One worker thread's slice of the scripted harness: its components,
+/// a full-size shard pool (owned links whole, cut links as one half)
+/// and a shard scheduler re-synced from the master every cycle.
+struct TopoShard {
+    comps: Vec<TopoComp>,
+    pool: LinkPool,
+    sched: Scheduler,
+}
+
+fn step_topo_shard(sh: &mut TopoShard, cy: u64) {
+    let TopoShard { comps, pool, sched } = sh;
+    for c in comps.iter_mut() {
+        match c {
+            TopoComp::Master { m, src } => {
+                if !m.done() {
+                    m.step(&mut pool[*src]);
+                    sched.mark_dirty(*src);
+                }
+            }
+            TopoComp::Xbars { xbars, .. } => {
+                for x in xbars.iter_mut() {
+                    sched.step_component(cy, x, pool);
+                }
+            }
+            TopoComp::Slave { s, link, .. } => {
+                if !s.idle() || sched.is_active(*link) {
+                    s.step_on(cy, pool, *link);
+                    sched.mark_dirty(*link);
+                }
+            }
+        }
+    }
+}
+
+/// The multi-threaded run loop behind [`run_topo_script_with`]:
+/// partition {master, crossbars, endpoint slaves} across `threads`
+/// shards by link affinity, step shards concurrently, merge at the
+/// clock edge — bit-identical to the sequential loop (the registered
+/// ready/visibility invariant, see `sim::parallel`). On return (also
+/// on watchdog errors) every component and the pool are recomposed so
+/// the caller reads stats and deliveries exactly as in the sequential
+/// path.
+#[allow(clippy::too_many_arguments)]
+fn run_topo_parallel(
+    eng: &mut Engine,
+    topo: &mut Topology,
+    pool: &mut LinkPool,
+    master: &mut ScriptMaster,
+    src: LinkId,
+    slaves: &mut Vec<SimSlave>,
+    endpoint_s: &[LinkId],
+    threads: usize,
+) -> Result<u64, SimError> {
+    // ---- atoms: master, crossbar runs, slaves — in that order
+    let armed = topo.resv.is_some();
+    let n_xb = topo.xbars.len();
+    let xbar_ports = |x: &Xbar| -> Vec<(LinkId, bool)> {
+        // the crossbar consumes requests on m_links (slave side) and
+        // produces them into s_links (master side)
+        x.m_links
+            .iter()
+            .map(|&l| (l, false))
+            .chain(x.s_links.iter().map(|&l| (l, true)))
+            .collect()
+    };
+    let mut atoms = vec![Atom {
+        ports: vec![(src, true)],
+        pin: None,
+    }];
+    if armed {
+        atoms.push(Atom {
+            ports: topo.xbars.iter().flat_map(|x| xbar_ports(x)).collect(),
+            pin: None,
+        });
+    } else {
+        for x in &topo.xbars {
+            atoms.push(Atom {
+                ports: xbar_ports(x),
+                pin: None,
+            });
+        }
+    }
+    for &link in endpoint_s {
+        atoms.push(Atom {
+            ports: vec![(link, false)],
+            pin: None,
+        });
+    }
+    let n_shards = threads.min(atoms.len());
+    let assign = partition(&atoms, n_shards);
+    let homes = link_homes(&atoms, &assign, pool.len());
+
+    // ---- decompose into shards (comps in atom order)
+    let mut comps: Vec<TopoComp> = Vec::with_capacity(atoms.len());
+    comps.push(TopoComp::Master {
+        m: std::mem::replace(master, ScriptMaster::new(Vec::new())),
+        src,
+    });
+    if armed {
+        comps.push(TopoComp::Xbars {
+            first: 0,
+            xbars: std::mem::take(&mut topo.xbars),
+        });
+    } else {
+        for (j, x) in std::mem::take(&mut topo.xbars).into_iter().enumerate() {
+            comps.push(TopoComp::Xbars {
+                first: j,
+                xbars: vec![x],
+            });
+        }
+    }
+    for (i, s) in slaves.drain(..).enumerate() {
+        comps.push(TopoComp::Slave {
+            idx: i,
+            s,
+            link: endpoint_s[i],
+        });
+    }
+    debug_assert_eq!(comps.len(), atoms.len());
+    let shard_pools = split_pool(
+        std::mem::replace(pool, LinkPool::new()),
+        &homes,
+        n_shards,
+    );
+    let mut shards: Vec<TopoShard> = shard_pools
+        .into_iter()
+        .map(|p| TopoShard {
+            comps: Vec::new(),
+            pool: p,
+            sched: Scheduler::new_shard(homes.len()),
+        })
+        .collect();
+    for (c, &sh) in comps.into_iter().zip(&assign) {
+        shards[sh].comps.push(c);
+    }
+
+    // ---- coordinator loop
+    let mut master_sched = Scheduler::new(homes.len());
+    let step: StepFn<TopoShard> = std::sync::Arc::new(|s: &mut TopoShard, cy: u64| {
+        step_topo_shard(s, cy);
+    });
+    let mut wpool = WorkerPool::new(n_shards, step);
+    let mut shards_slot = Some(shards);
+    let res = eng.run(|cy| {
+        let mut shards = shards_slot.take().expect("shards in flight");
+        master_sched.begin_cycle();
+        for sh in &mut shards {
+            sh.sched.copy_active_from(&master_sched);
+        }
+        shards = wpool.step_all(shards, cy);
+        for sh in &mut shards {
+            sh.sched.drain_touched_into(&mut master_sched);
+        }
+        {
+            let mut pools: Vec<&mut LinkPool> =
+                shards.iter_mut().map(|s| &mut s.pool).collect();
+            master_sched.end_cycle_with(|id| tick_link(&mut pools, &homes, id));
+        }
+        let done = shards.iter().all(|sh| {
+            sh.comps.iter().all(|c| match c {
+                TopoComp::Master { m, .. } => m.done(),
+                TopoComp::Xbars { xbars, .. } => !xbars.iter().any(|x| x.busy()),
+                TopoComp::Slave { s, .. } => s.idle(),
+            })
+        });
+        let progress: u64 = shards.iter().map(|sh| sh.pool.moved_total()).sum();
+        shards_slot = Some(shards);
+        if done {
+            StepResult::Done
+        } else {
+            StepResult::Running { progress }
+        }
+    });
+
+    // ---- recompose (also on watchdog error: coherent caller state)
+    let shards = shards_slot.take().expect("shards settled");
+    let mut xbar_slots: Vec<Option<Xbar>> = (0..n_xb).map(|_| None).collect();
+    let mut slave_slots: Vec<Option<SimSlave>> = (0..endpoint_s.len()).map(|_| None).collect();
+    let mut shard_pools = Vec::with_capacity(shards.len());
+    for sh in shards {
+        for c in sh.comps {
+            match c {
+                TopoComp::Master { m, .. } => *master = m,
+                TopoComp::Xbars { first, xbars } => {
+                    for (j, x) in xbars.into_iter().enumerate() {
+                        xbar_slots[first + j] = Some(x);
+                    }
+                }
+                TopoComp::Slave { idx, s, .. } => slave_slots[idx] = Some(s),
+            }
+        }
+        shard_pools.push(sh.pool);
+    }
+    topo.xbars = xbar_slots
+        .into_iter()
+        .map(|x| x.expect("crossbar restored"))
+        .collect();
+    slaves.extend(slave_slots.into_iter().map(|s| s.expect("slave restored")));
+    *pool = merge_pools(shard_pools, &homes);
+    res
+}
+
 /// One broadcast point (see [`broadcast_script`]).
 pub fn run_topo_broadcast(
     shape: &TopoShape,
@@ -260,8 +507,33 @@ pub fn run_topo_broadcast(
     beats: u32,
     mcast: bool,
 ) -> Result<TopoRunResult, SimError> {
+    run_topo_broadcast_threads(
+        shape,
+        n_endpoints,
+        bursts,
+        beats,
+        mcast,
+        FabricParams::default().threads,
+    )
+}
+
+/// [`run_topo_broadcast`] with an explicit thread count (the CLI's
+/// `--threads` reaches the sweep through here).
+pub fn run_topo_broadcast_threads(
+    shape: &TopoShape,
+    n_endpoints: usize,
+    bursts: usize,
+    beats: u32,
+    mcast: bool,
+    threads: usize,
+) -> Result<TopoRunResult, SimError> {
     let script = broadcast_script(n_endpoints, bursts, beats, mcast);
-    let res = run_topo_script(shape, n_endpoints, script, mcast)?;
+    let params = FabricParams {
+        mcast_enabled: mcast,
+        threads,
+        ..FabricParams::default()
+    };
+    let (res, _) = run_topo_script_with(shape, n_endpoints, script, params)?;
     // every endpoint must have received every round exactly once
     for (i, d) in res.deliveries.iter().enumerate() {
         assert_eq!(
@@ -334,6 +606,38 @@ mod tests {
                     r.shape
                 );
                 assert_eq!(r.stats.decerr, 0, "{}: unexpected DECERR", r.shape);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_run_matches_sequential() {
+        for shape in [
+            TopoShape::Flat,
+            TopoShape::Tree { arity: vec![4, 4] },
+            TopoShape::Mesh { tiles: 4 },
+        ] {
+            for mcast in [false, true] {
+                let seq = run_topo_broadcast_threads(&shape, 16, 2, 8, mcast, 1).unwrap();
+                for threads in [2usize, 4] {
+                    let par =
+                        run_topo_broadcast_threads(&shape, 16, 2, 8, mcast, threads).unwrap();
+                    assert_eq!(
+                        par.cycles, seq.cycles,
+                        "{}/mcast={mcast}/threads={threads}: cycles diverge",
+                        seq.shape
+                    );
+                    assert_eq!(
+                        par.stats, seq.stats,
+                        "{}/mcast={mcast}/threads={threads}: stats diverge",
+                        seq.shape
+                    );
+                    assert_eq!(
+                        par.deliveries, seq.deliveries,
+                        "{}/mcast={mcast}/threads={threads}: deliveries diverge",
+                        seq.shape
+                    );
+                }
             }
         }
     }

@@ -134,7 +134,7 @@ fn run_concurrent(shape: &WideShape, xfers: &[Xfer]) -> Outcome {
     for net in [&soc.wide, &soc.narrow] {
         if let Some(h) = &net.resv {
             assert_eq!(
-                h.borrow().live_tickets(),
+                h.lock().unwrap().live_tickets(),
                 0,
                 "{}: undrained reservation claims",
                 shape.label()

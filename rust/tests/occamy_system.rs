@@ -291,7 +291,7 @@ fn global_broadcast_contention_completes_with_e2e_order_bit_exact() {
     for net in [&soc.wide, &soc.narrow] {
         if let Some(h) = &net.resv {
             assert_eq!(
-                h.borrow().live_tickets(),
+                h.lock().unwrap().live_tickets(),
                 0,
                 "all reservation claims must drain"
             );

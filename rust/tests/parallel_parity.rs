@@ -1,0 +1,432 @@
+//! Parallel-engine parity suite: the multi-threaded stepping mode
+//! (`SocConfig::threads` / `FabricParams::threads`, see `sim::parallel`
+//! and DESIGN.md §8) must be **bit-identical** to the sequential golden
+//! engine in simulated cycles, crossbar statistics (including the
+//! reservation and reduction counters), functional memory, DMA
+//! completion streams and endpoint deliveries — across thread counts,
+//! with and without the `force_naive` reference mode, and with the
+//! end-to-end reservation protocol and in-network reduction armed or
+//! not. Only wall-clock throughput may differ.
+
+mod common;
+
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::reduce::ReduceOp;
+use axi_mcast::axi::topology::{FabricParams, TopoShape};
+use axi_mcast::axi::xbar::XbarStats;
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use axi_mcast::util::proptest_mini::{check, Config, Gen};
+use axi_mcast::workloads::topo_sweep::{run_topo_script_with, TOPO_DST_OFF};
+use common::{cluster_addr, CLUSTER_STRIDE};
+
+// ----------------------------------------------------------------- soc
+
+/// Random per-cluster programs: delays, computes, unicast/multicast
+/// DMAs and globally-consistent barrier rounds (the `perf_parity`
+/// generator shape).
+fn random_soc_programs(g: &mut Gen, cfg: &SocConfig) -> Vec<Vec<Cmd>> {
+    let n = cfg.n_clusters;
+    let barriers = g.u64_below(3) as usize;
+    (0..n)
+        .map(|c| {
+            let mut prog = Vec::new();
+            for round in 0..=barriers {
+                let work = g.u64_below(3);
+                for w in 0..work {
+                    match g.u64_below(4) {
+                        0 => prog.push(Cmd::Delay {
+                            cycles: 1 + g.u64_below(200),
+                        }),
+                        1 => prog.push(Cmd::Compute {
+                            macs: 1 + g.u64_below(512),
+                            op: 0,
+                            arg: 0,
+                        }),
+                        _ => {
+                            let bytes = 64 * (1 + g.u64_below(16));
+                            let dst = if g.bool(0.4) {
+                                let count = (1usize << (1 + g.u64_below(2))).min(n);
+                                let first = (c / count) * count;
+                                cfg.cluster_set(first, count, 0x8000)
+                            } else {
+                                let t = g.u64_below(n as u64) as usize;
+                                AddrSet::unicast(cfg.cluster_base(t) + 0xC000)
+                            };
+                            let src = if g.bool(0.5) {
+                                cfg.cluster_base(c)
+                            } else {
+                                axi_mcast::occamy::config::LLC_BASE + 0x100 * c as u64
+                            };
+                            prog.push(Cmd::Dma {
+                                src,
+                                dst,
+                                bytes,
+                                tag: round as u64 * 10 + w,
+                            });
+                            prog.push(Cmd::WaitDma);
+                        }
+                    }
+                }
+                if round < barriers {
+                    prog.push(Cmd::Barrier);
+                }
+            }
+            prog
+        })
+        .collect()
+}
+
+/// Every observable the parallel engine must reproduce bit-for-bit.
+/// (`skipped_cycles` is deliberately absent: horizon engagement is a
+/// wall-clock-side observable, compared nowhere in the repo.)
+#[derive(Debug, PartialEq)]
+struct SocOutcome {
+    cycles: u64,
+    wide: XbarStats,
+    narrow: XbarStats,
+    releases: u64,
+    progress: Vec<u64>,
+    compute_busy: Vec<u64>,
+    done_at: Vec<Option<u64>>,
+    dma_stats: Vec<axi_mcast::occamy::dma::DmaStats>,
+    dma_tags: Vec<Vec<u64>>,
+    l1: Vec<Vec<u8>>,
+}
+
+fn run_soc(
+    cfg: &SocConfig,
+    progs: &[Vec<Cmd>],
+    force_naive: bool,
+    threads: usize,
+    groups: &[(u32, Vec<usize>, u64)],
+) -> SocOutcome {
+    let cfg = SocConfig {
+        force_naive,
+        threads,
+        ..cfg.clone()
+    };
+    let mut soc = Soc::new(cfg);
+    for (g, members, dst) in groups {
+        soc.open_reduce_group(*g, ReduceOp::Sum, members, *dst);
+    }
+    soc.load_programs(progs.to_vec());
+    let cycles = soc
+        .run_default(&mut NopCompute)
+        .unwrap_or_else(|e| panic!("parity run (threads={}): {e:?}", soc.cfg.threads));
+    SocOutcome {
+        cycles,
+        wide: soc.wide.stats_sum(),
+        narrow: soc.narrow.stats_sum(),
+        releases: soc.barrier.releases,
+        progress: soc.clusters.iter().map(|c| c.progress).collect(),
+        compute_busy: soc.clusters.iter().map(|c| c.compute_busy_cycles).collect(),
+        done_at: soc.clusters.iter().map(|c| c.done_at).collect(),
+        dma_stats: soc.clusters.iter().map(|c| c.dma.stats.clone()).collect(),
+        dma_tags: soc.clusters.iter().map(|c| c.dma_done_tags.clone()).collect(),
+        l1: soc.mem.l1.clone(),
+    }
+}
+
+fn compare(what: &str, par: &SocOutcome, golden: &SocOutcome) -> Result<(), String> {
+    if par.cycles != golden.cycles {
+        return Err(format!(
+            "{what}: cycle divergence: parallel {} vs sequential {}",
+            par.cycles, golden.cycles
+        ));
+    }
+    if par.wide != golden.wide || par.narrow != golden.narrow {
+        return Err(format!(
+            "{what}: xbar stats divergence:\npar    wide {:?} narrow {:?}\ngolden wide {:?} narrow {:?}",
+            par.wide, par.narrow, golden.wide, golden.narrow
+        ));
+    }
+    if par != golden {
+        return Err(format!("{what}: observable state diverged (memory/DMA/barrier)"));
+    }
+    Ok(())
+}
+
+#[test]
+fn soc_parallel_matches_sequential_property() {
+    let cfg = SocConfig::tiny(8);
+    check(
+        "soc-parallel-parity",
+        Config {
+            cases: 6,
+            ..Config::default()
+        },
+        |g| random_soc_programs(g, &cfg),
+        |progs| {
+            let golden = run_soc(&cfg, progs, false, 1, &[]);
+            for threads in [2usize, 4] {
+                let par = run_soc(&cfg, progs, false, threads, &[]);
+                compare(&format!("opt/threads={threads}"), &par, &golden)?;
+            }
+            // the naive reference engine must parallelise identically
+            let golden_naive = run_soc(&cfg, progs, true, 1, &[]);
+            compare("naive/golden", &golden_naive, &golden)?;
+            let par_naive = run_soc(&cfg, progs, true, 4, &[]);
+            compare("naive/threads=4", &par_naive, &golden_naive)
+        },
+    );
+}
+
+#[test]
+fn soc_parallel_e2e_reservation_parity() {
+    // concurrent global multicasts on the fabric-wide reservation
+    // protocol: the shared ledger's first-come ordering must survive
+    // partitioning (reservation-armed networks step as one atom)
+    let mut cfg = SocConfig::tiny(8);
+    cfg.e2e_mcast_order = true;
+    let mut progs = vec![Vec::new(); 8];
+    for (c, prog) in progs.iter_mut().enumerate() {
+        *prog = vec![
+            Cmd::Dma {
+                src: cfg.cluster_base(c),
+                dst: cfg.cluster_set(0, 8, 0x8000 + c as u64 * 0x800),
+                bytes: 1024,
+                tag: c as u64,
+            },
+            Cmd::WaitDma,
+            Cmd::Barrier,
+        ];
+    }
+    let golden = run_soc(&cfg, &progs, false, 1, &[]);
+    assert!(
+        golden.wide.resv_tickets >= 8,
+        "every broadcast must take a ticket: {:?}",
+        golden.wide
+    );
+    for threads in [2usize, 4, 8] {
+        let par = run_soc(&cfg, &progs, false, threads, &[]);
+        compare(&format!("e2e/threads={threads}"), &par, &golden).unwrap();
+    }
+    let par_naive = run_soc(&cfg, &progs, true, 4, &[]);
+    let golden_naive = run_soc(&cfg, &progs, true, 1, &[]);
+    compare("e2e/naive/threads=4", &par_naive, &golden_naive).unwrap();
+}
+
+#[test]
+fn soc_parallel_e2e_random_property() {
+    let mut cfg = SocConfig::tiny(8);
+    cfg.e2e_mcast_order = true;
+    check(
+        "soc-parallel-e2e-parity",
+        Config {
+            cases: 4,
+            ..Config::default()
+        },
+        |g| random_soc_programs(g, &cfg),
+        |progs| {
+            let golden = run_soc(&cfg, progs, false, 1, &[]);
+            for threads in [2usize, 4] {
+                let par = run_soc(&cfg, progs, false, threads, &[]);
+                compare(&format!("e2e-rand/threads={threads}"), &par, &golden)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn soc_parallel_fabric_reduce_parity() {
+    // in-network reduction: converging tagged writes combine at join
+    // points; the red_* counters and the f64 sums in functional memory
+    // must be bit-identical under partitioning
+    let mut cfg = SocConfig::tiny(8);
+    cfg.fabric_reduce = true;
+    let dst = cfg.cluster_base(0) + 0x8000;
+    let members: Vec<usize> = (1..8).collect();
+    let groups = vec![(1u32, members, dst)];
+    let mut progs = vec![Vec::new(); 8];
+    for (c, prog) in progs.iter_mut().enumerate().skip(1) {
+        *prog = vec![
+            Cmd::DmaReduce {
+                src: cfg.cluster_base(c),
+                dst,
+                bytes: 512,
+                tag: c as u64,
+                group: 1,
+                op: ReduceOp::Sum,
+            },
+            Cmd::WaitDma,
+        ];
+    }
+    let golden = run_soc(&cfg, &progs, false, 1, &groups);
+    assert!(
+        golden.wide.red_joins >= 2,
+        "the combining path must engage: {:?}",
+        golden.wide
+    );
+    for threads in [2usize, 4] {
+        let par = run_soc(&cfg, &progs, false, threads, &groups);
+        compare(&format!("reduce/threads={threads}"), &par, &golden).unwrap();
+    }
+    let par_naive = run_soc(&cfg, &progs, true, 4, &groups);
+    let golden_naive = run_soc(&cfg, &progs, true, 1, &groups);
+    compare("reduce/naive/threads=4", &par_naive, &golden_naive).unwrap();
+}
+
+#[test]
+fn soc_parallel_horizon_stagger_parity() {
+    // the event-horizon showcase: the composed horizon (min over all
+    // shards' next events) must fast-forward to exactly the cycles the
+    // sequential engine lands on, at 8 threads too
+    let cfg = SocConfig::tiny(8);
+    let progs: Vec<Vec<Cmd>> = (0..8)
+        .map(|i| {
+            vec![
+                Cmd::Delay {
+                    cycles: 100 + (i as u64) * 500,
+                },
+                Cmd::Barrier,
+                Cmd::Compute {
+                    macs: 4096,
+                    op: 1,
+                    arg: 0,
+                },
+            ]
+        })
+        .collect();
+    let golden = run_soc(&cfg, &progs, false, 1, &[]);
+    assert!(golden.cycles > 3_600, "stagger run suspiciously short");
+    for threads in [2usize, 4, 8] {
+        let par = run_soc(&cfg, &progs, false, threads, &[]);
+        compare(&format!("stagger/threads={threads}"), &par, &golden).unwrap();
+    }
+}
+
+#[test]
+fn soc_threads_zero_resolves_and_matches() {
+    // --threads 0 = one worker per core; still bit-identical
+    let cfg = SocConfig::tiny(4);
+    let progs: Vec<Vec<Cmd>> = (0..4)
+        .map(|c| {
+            vec![
+                Cmd::Dma {
+                    src: cfg.cluster_base(c),
+                    dst: cfg.cluster_set(0, 4, 0x4000),
+                    bytes: 2048,
+                    tag: 7,
+                },
+                Cmd::WaitDma,
+            ]
+        })
+        .collect();
+    let golden = run_soc(&cfg, &progs, false, 1, &[]);
+    let par = run_soc(&cfg, &progs, false, 0, &[]);
+    compare("threads=0", &par, &golden).unwrap();
+}
+
+// ---------------------------------------------------------------- topo
+
+/// Random single-source write scripts over the sweep's endpoint
+/// layout (which shares the cluster base/stride of `common`): unicast
+/// and aligned mask-form multicast bursts.
+fn random_topo_script(g: &mut Gen, n: usize) -> Vec<(AddrSet, u32)> {
+    let len = 1 + g.len(10);
+    (0..len)
+        .map(|i| {
+            let beats = 1 + g.u64_below(8) as u32;
+            let off = TOPO_DST_OFF + 0x40 * i as u64;
+            if g.bool(0.5) {
+                let t = g.u64_below(n as u64) as usize;
+                (AddrSet::unicast(cluster_addr(t, off)), beats)
+            } else {
+                let max_log = u64::from((n as u64).trailing_zeros());
+                let log = 1 + g.u64_below(max_log);
+                let count = 1usize << log;
+                let first = (g.u64_below(n as u64) as usize / count) * count;
+                let mask = (count as u64 - 1) * CLUSTER_STRIDE;
+                (AddrSet::new(cluster_addr(first, off), mask), beats)
+            }
+        })
+        .collect()
+}
+
+fn run_topo(
+    shape: &TopoShape,
+    n: usize,
+    script: &[(AddrSet, u32)],
+    e2e: bool,
+    threads: usize,
+) -> (u64, XbarStats, Vec<Vec<(u64, u32)>>) {
+    let params = FabricParams {
+        mcast_enabled: true,
+        e2e_mcast_order: e2e,
+        threads,
+        ..FabricParams::default()
+    };
+    let (res, _) = run_topo_script_with(shape, n, script.to_vec(), params)
+        .unwrap_or_else(|e| panic!("{}/threads={threads}: {e:?}", shape.label()));
+    (res.cycles, res.stats, res.deliveries)
+}
+
+#[test]
+fn topo_parallel_random_scripts_property() {
+    const N_EP: usize = 16;
+    let shapes = [
+        TopoShape::Flat,
+        TopoShape::Tree { arity: vec![4, 4] },
+        TopoShape::Tree {
+            arity: vec![2, 2, 4],
+        },
+        TopoShape::Mesh { tiles: 4 },
+    ];
+    check(
+        "topo-parallel-parity",
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        |g| random_topo_script(g, N_EP),
+        |script| {
+            for shape in &shapes {
+                let golden = run_topo(shape, N_EP, script, false, 1);
+                for threads in [2usize, 4] {
+                    let par = run_topo(shape, N_EP, script, false, threads);
+                    if par != golden {
+                        return Err(format!(
+                            "{}/threads={threads}: diverged (cycles {} vs {})",
+                            shape.label(),
+                            par.0,
+                            golden.0
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn topo_parallel_e2e_armed_fabric_parity() {
+    // with the reservation ledger armed the whole fabric steps as one
+    // atom — the parallel win shrinks to master/slave overlap, but the
+    // result must stay bit-identical
+    const N_EP: usize = 16;
+    let script: Vec<(AddrSet, u32)> = (0..6)
+        .map(|i| {
+            (
+                AddrSet::new(
+                    cluster_addr(0, TOPO_DST_OFF + 0x40 * i),
+                    (N_EP as u64 - 1) * CLUSTER_STRIDE,
+                ),
+                8,
+            )
+        })
+        .collect();
+    for shape in [TopoShape::Flat, TopoShape::Tree { arity: vec![4, 4] }] {
+        let golden = run_topo(&shape, N_EP, &script, true, 1);
+        for threads in [2usize, 4] {
+            let par = run_topo(&shape, N_EP, &script, true, threads);
+            assert_eq!(
+                par,
+                golden,
+                "{}/e2e/threads={threads}: diverged",
+                shape.label()
+            );
+        }
+    }
+}
