@@ -12,11 +12,20 @@
 //! two-phase reservation protocol (`--e2e`) orders the commits
 //! end-to-end and both broadcasts drain.
 //!
+//! **Endpoint fault** (`--faults`): a cluster's L1 port accepts the
+//! handshake and then hangs mid-multicast. Without deadlines the
+//! whole SoC wedges and the watchdog prints its post-mortem
+//! (DESIGN.md §9); with `--timeouts` the per-channel deadlines evict
+//! the hung fork leg, the faulted jobs retire SLVERR, and everything
+//! else drains.
+//!
 //! ```sh
-//! cargo run --release --example deadlock_demo                      # exit 0
-//! cargo run --release --example deadlock_demo -- --naive           # exit 2
-//! cargo run --release --example deadlock_demo -- --interlevel      # exit 2
+//! cargo run --release --example deadlock_demo                       # exit 0
+//! cargo run --release --example deadlock_demo -- --naive            # exit 2
+//! cargo run --release --example deadlock_demo -- --interlevel       # exit 2
 //! cargo run --release --example deadlock_demo -- --interlevel --e2e # exit 0
+//! cargo run --release --example deadlock_demo -- --faults           # exit 2
+//! cargo run --release --example deadlock_demo -- --faults --timeouts # exit 0
 //! ```
 
 use axi_mcast::axi::addr_map::{AddrMap, AddrRule};
@@ -216,7 +225,7 @@ fn run_interlevel(e2e: bool) -> Result<(), String> {
                 stats.resv_tickets, stats.resv_waits, stats.commit_waits
             );
             if let Some(h) = &topo.resv {
-                let r = h.borrow();
+                let r = h.lock().unwrap();
                 println!(
                     "  ledger: {} reserved, {} claims committed, max {} live tickets",
                     r.stats.reserved, r.stats.committed_claims, r.stats.max_live
@@ -240,9 +249,92 @@ fn run_interlevel(e2e: bool) -> Result<(), String> {
     Err("demo did not converge".into())
 }
 
+/// `--faults`: a hung endpoint under a live multicast at SoC level —
+/// the third level of the disease, where no ordering protocol helps
+/// because the endpoint itself is broken. `--timeouts` arms the
+/// per-channel deadlines that unwind it.
+fn run_faulted(timeouts: bool) -> Result<(), String> {
+    use axi_mcast::axi::golden::FaultPlan;
+    use axi_mcast::occamy::config::FaultSite;
+    use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+    use axi_mcast::sim::engine::{SimError, Watchdog};
+
+    let mut cfg = SocConfig::tiny(4);
+    cfg.wide_mcast = true;
+    cfg.faults = vec![(FaultSite::ClusterL1(1), FaultPlan::GrantThenHang)];
+    if timeouts {
+        cfg.req_timeout = Some(2_000);
+        cfg.cpl_timeout = Some(1_000);
+    }
+    println!(
+        "cluster 1's L1 port grants the handshake and hangs; cluster 0 \
+         multicasts to all 4 clusters,\ncluster 2 writes cluster 1 directly — \
+         per-channel deadlines {}",
+        if timeouts { "ARMED" } else { "disarmed" }
+    );
+
+    let mut soc = Soc::new(cfg.clone());
+    let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); 4];
+    progs[0] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: AddrSet::new(cfg.cluster_base(0) + 0x8000, 3 * STRIDE),
+            bytes: 1024,
+            tag: 1,
+        },
+        Cmd::WaitDma,
+    ];
+    progs[2] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(2),
+            dst: AddrSet::unicast(cfg.cluster_base(1) + 0xC000),
+            bytes: 512,
+            tag: 2,
+        },
+        Cmd::WaitDma,
+    ];
+    soc.load_programs(progs);
+    match soc.run(
+        &mut NopCompute,
+        Watchdog {
+            stall_cycles: 10_000,
+            max_cycles: 10_000_000,
+        },
+    ) {
+        Ok(cy) => {
+            let s = soc.wide.stats_sum();
+            println!("fabric recovered at cycle {cy}:");
+            println!(
+                "  request timeouts: {}, completion timeouts: {}, W beats dropped: {}",
+                s.req_timeouts, s.cpl_timeouts, s.w_dropped
+            );
+            for (i, c) in soc.clusters.iter().enumerate() {
+                if !c.dma_error_tags.is_empty() {
+                    println!("  cluster {i} jobs retired with errors: {:?}", c.dma_error_tags);
+                }
+            }
+            println!("  every healthy leg delivered; the faulted jobs saw SLVERR, not a wedge");
+            Ok(())
+        }
+        Err(SimError::Deadlock {
+            cycle,
+            report: Some(report),
+            ..
+        }) => {
+            println!("DEADLOCK detected at cycle {cycle} — the watchdog post-mortem:");
+            print!("{report}");
+            println!("  (re-run with --timeouts to watch the deadlines unwind it)");
+            std::process::exit(2);
+        }
+        Err(e) => Err(format!("unexpected simulator error: {e}")),
+    }
+}
+
 fn main() -> Result<(), String> {
     let args = Args::parse(std::env::args().skip(1))?;
-    if args.flag("interlevel") {
+    if args.flag("faults") {
+        run_faulted(args.flag("timeouts"))
+    } else if args.flag("interlevel") {
         run_interlevel(args.flag("e2e"))
     } else {
         run_single(args.flag("naive"))

@@ -61,6 +61,24 @@ pub struct WRoute {
     /// forwarded, and the B response arrives later by fan-out from the
     /// combined upstream burst (never via `complete_unroutable`).
     pub sink: bool,
+    /// One or more destinations were evicted by a completion timeout.
+    /// If the slave set drained to empty this way, the remaining W
+    /// beats are *dropped* (the SLVERR B was already synthesized via
+    /// the join) instead of completing through `complete_unroutable`.
+    pub evicted: bool,
+}
+
+/// Outcome of [`Demux::evict_route_slave`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Evict {
+    /// The leg was removed; other destinations remain on the route.
+    Partial,
+    /// The leg was removed and the route now has zero destinations —
+    /// its remaining W beats must be drained and dropped.
+    Emptied,
+    /// No live W route carried this slave (the burst already fully
+    /// forwarded past the demux); only join/zombie state applies.
+    NoRoute,
 }
 
 /// B-join bookkeeping for one outstanding write transaction.
@@ -196,6 +214,7 @@ impl Demux {
             beats_left: beat.beats,
             is_mcast: beat.is_mcast,
             sink: false,
+            evicted: false,
         });
         self.joins.insert(
             beat.txn,
@@ -233,6 +252,7 @@ impl Demux {
             beats_left: beat.beats,
             is_mcast: false,
             sink: true,
+            evicted: false,
         });
         self.joins.insert(
             beat.txn,
@@ -302,6 +322,29 @@ impl Demux {
             id: j.id,
             resp: Resp::DecErr,
             txn,
+        }
+    }
+
+    /// Completion-timeout unwinding: stop routing the in-flight W burst
+    /// of `txn` to `slave`. The caller is responsible for folding the
+    /// synthesized SLVERR into the join (via [`Demux::join_b`]), for
+    /// removing the mux-side W-order entry, and for zombie-marking the
+    /// transaction so a late real B from the slave is dropped.
+    ///
+    /// Cold path — only runs when a timeout fires.
+    pub fn evict_route_slave(&mut self, txn: Txn, slave: usize) -> Evict {
+        let Some(r) = self.w_queue.iter_mut().find(|r| r.txn == txn) else {
+            return Evict::NoRoute;
+        };
+        if r.sink || !r.slaves.iter().any(|&s| s == slave) {
+            return Evict::NoRoute;
+        }
+        r.slaves = r.slaves.iter().copied().filter(|&s| s != slave).collect();
+        r.evicted = true;
+        if r.slaves.is_empty() {
+            Evict::Emptied
+        } else {
+            Evict::Partial
         }
     }
 
@@ -440,6 +483,37 @@ mod tests {
         assert_eq!(b.id, 4);
         assert_eq!(d.outstanding_unicast, 0);
         assert!(d.id_table.is_empty());
+    }
+
+    #[test]
+    fn evict_route_slave_unwinds_fork_leg() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(9, 3, true, 4), &tgts(&[0, 1, 2]), Resp::Okay);
+        assert_eq!(d.evict_route_slave(9, 1), Evict::Partial);
+        let r = d.w_queue.front().unwrap();
+        assert_eq!(r.slaves.as_slice(), &[0, 2]);
+        assert!(r.evicted);
+        // the timed-out leg still participates in the join with SLVERR
+        assert!(d.join_b(9, Resp::SlvErr, 3).is_none());
+        assert!(d.join_b(9, Resp::Okay, 3).is_none());
+        let b = d.join_b(9, Resp::Okay, 3).unwrap();
+        assert_eq!(b.resp, Resp::SlvErr);
+        // a slave that never carried the route reports NoRoute
+        assert_eq!(d.evict_route_slave(9, 5), Evict::NoRoute);
+    }
+
+    #[test]
+    fn evict_to_empty_drops_remaining_beats() {
+        let mut d = Demux::new(0, 2, 16);
+        d.accept(&aw(4, 1, false, 2), &tgts(&[3]), Resp::Okay);
+        assert_eq!(d.evict_route_slave(4, 3), Evict::Emptied);
+        let r = d.w_queue.front().unwrap();
+        assert!(r.slaves.is_empty() && r.evicted && !r.sink);
+        // the join is completed by the synthesized SLVERR, not by
+        // complete_unroutable (which the evicted flag must bypass)
+        let b = d.join_b(4, Resp::SlvErr, 1).unwrap();
+        assert_eq!(b.resp, Resp::SlvErr);
+        assert_eq!(d.outstanding_unicast, 0);
     }
 
     #[test]

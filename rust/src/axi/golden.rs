@@ -22,6 +22,37 @@ pub struct WriteRec {
     pub done_at: Cycle,
 }
 
+/// Endpoint fault model for the robustness layer (`XbarCfg::req_timeout`
+/// / `cpl_timeout` recovery): each plan turns a [`SimSlave`] into a
+/// specific kind of misbehaving subordinate. The timeouts must be set
+/// well above the slave's worst-case healthy service time (burst length
+/// × `w_every`, `r_lat`, `b_lat`) — like any hardware watchdog, a
+/// deadline shorter than legitimate latency poisons healthy traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPlan {
+    /// Well-behaved (the default — bit-identical to the pre-fault model).
+    #[default]
+    None,
+    /// Die after consuming the WLAST of the `bursts`-th write burst:
+    /// the first `bursts - 1` bursts complete normally, the
+    /// `bursts`-th burst's B is swallowed, and from that point the
+    /// slave consumes and emits nothing (`bursts == 0` ⇒ dead from
+    /// reset). Exercises the completion-timeout SLVERR path and — via
+    /// the backed-up AW/W channels — the request-timeout DECERR path
+    /// for everything queued behind.
+    StallAfter { bursts: u32 },
+    /// Swallow the `nth` (0-based) B response; everything else normal.
+    /// The dropped burst's WLAST was consumed, so its scoreboard leg is
+    /// unconditionally eligible for the completion deadline.
+    DropB { nth: u32 },
+    /// Swallow the `nth` (0-based) R burst entirely (job accepted,
+    /// never streamed); everything else normal.
+    DropR { nth: u32 },
+    /// Accept AW/AR handshakes but never consume a W beat and never
+    /// respond — the pathological "granted then hung" endpoint.
+    GrantThenHang,
+}
+
 /// Configurable golden slave.
 #[derive(Debug)]
 pub struct SimSlave {
@@ -36,12 +67,18 @@ pub struct SimSlave {
     pub w_every: u32,
     /// Idle cycles between consecutive R burst jobs (bank/arb gap).
     pub r_gap: u32,
+    /// Fault injection plan (default: well-behaved).
+    pub fault: FaultPlan,
 
     order: OrderChecker,
     /// In-progress bursts (front = active): (txn, base, beats_left, total).
     w_queue: VecDeque<(Txn, u64, u32, u32)>,
     b_sched: VecDeque<(Cycle, BBeat)>,
     r_jobs: VecDeque<(Cycle, u16, Txn, u32)>,
+    /// B responses released (or swallowed) so far — `DropB` index base.
+    b_served: u32,
+    /// R bursts streamed (or swallowed) so far — `DropR` index base.
+    r_served: u32,
     pub writes: Vec<WriteRec>,
     pub reads: Vec<(Txn, u64, u32)>,
 }
@@ -55,17 +92,31 @@ impl SimSlave {
             wresp: Resp::Okay,
             w_every: 1,
             r_gap: 0,
+            fault: FaultPlan::None,
             order: OrderChecker::new(),
             w_queue: VecDeque::new(),
             b_sched: VecDeque::new(),
             r_jobs: VecDeque::new(),
+            b_served: 0,
+            r_served: 0,
             writes: Vec::new(),
             reads: Vec::new(),
         }
     }
 
+    /// Is the slave permanently wedged by its fault plan? (Residue
+    /// behind a dead slave never drains and is excluded from `idle`.)
+    fn dead(&self) -> bool {
+        matches!(self.fault, FaultPlan::StallAfter { bursts }
+            if self.writes.len() as u32 >= bursts)
+    }
+
     /// One cycle on this slave's link (the xbar's slave-side port).
     pub fn step(&mut self, cy: Cycle, link: &mut AxiLink) {
+        if self.dead() {
+            return;
+        }
+        let hang = self.fault == FaultPlan::GrantThenHang;
         // AW: accept one request per cycle
         if let Some(aw) = link.aw.pop() {
             // leaf slaves normally see singleton dests; a multi-address
@@ -75,8 +126,8 @@ impl SimSlave {
             self.w_queue
                 .push_back((aw.txn, aw.dest.base(), aw.beats, aw.beats));
         }
-        // W: consume at the configured rate
-        if self.w_every <= 1 || cy % self.w_every as u64 == 0 {
+        // W: consume at the configured rate (a hung slave never does)
+        if !hang && (self.w_every <= 1 || cy % self.w_every as u64 == 0) {
             if let Some(w) = link.w.pop() {
                 self.order.feed_w(w.txn, w.last);
                 let (txn, base, left, total) =
@@ -105,18 +156,36 @@ impl SimSlave {
                 }
             }
         }
-        // B: release when latency elapsed
+        // B: release when latency elapsed (`DropB` swallows its victim)
         if let Some(&(ready, b)) = self.b_sched.front() {
             if cy >= ready && link.b.can_push() {
                 self.b_sched.pop_front();
-                link.b.push(b);
+                let drop = matches!(self.fault, FaultPlan::DropB { nth } if self.b_served == nth);
+                self.b_served += 1;
+                if !drop {
+                    link.b.push(b);
+                }
             }
         }
-        // AR: accept
+        // AR: accept (a hung slave takes the handshake, then nothing)
         if let Some(ar) = link.ar.pop() {
             self.reads.push((ar.txn, ar.addr, ar.beats));
-            self.r_jobs
-                .push_back((cy + self.r_lat as u64, ar.id, ar.txn, ar.beats));
+            if !hang {
+                self.r_jobs
+                    .push_back((cy + self.r_lat as u64, ar.id, ar.txn, ar.beats));
+            }
+        }
+        // `DropR` swallows its victim burst whole at stream start
+        if let Some(&(ready, _, _, _)) = self.r_jobs.front() {
+            if cy >= ready
+                && matches!(self.fault, FaultPlan::DropR { nth } if self.r_served == nth)
+            {
+                self.r_jobs.pop_front();
+                self.r_served += 1;
+                if let Some(next) = self.r_jobs.front_mut() {
+                    next.0 = next.0.max(cy + 1 + self.r_gap as u64);
+                }
+            }
         }
         // R: stream one beat per cycle from the front job
         if let Some(&mut (ready, id, txn, ref mut beats)) = self.r_jobs.front_mut() {
@@ -131,6 +200,7 @@ impl SimSlave {
                 });
                 if last {
                     self.r_jobs.pop_front();
+                    self.r_served += 1;
                     // bank-conflict/arbitration gap before the next burst
                     if let Some(next) = self.r_jobs.front_mut() {
                         next.0 = next.0.max(cy + 1 + self.r_gap as u64);
@@ -150,6 +220,12 @@ impl SimSlave {
     }
 
     pub fn idle(&self) -> bool {
+        // residue wedged behind a dead/hung endpoint never drains — it
+        // must not hold the run open (the xbar timeouts complete the
+        // master side; the watchdog would otherwise fire on the slave)
+        if self.dead() || self.fault == FaultPlan::GrantThenHang {
+            return true;
+        }
         self.w_queue.is_empty() && self.b_sched.is_empty() && self.r_jobs.is_empty()
     }
 
@@ -159,6 +235,10 @@ impl SimSlave {
     /// per-cycle state to advance). In-progress W bursts wait on beats
     /// (port activity) and contribute nothing.
     pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        // a dead/hung slave never acts again on its own
+        if self.dead() || self.fault == FaultPlan::GrantThenHang {
+            return None;
+        }
         let mut ev: Option<Cycle> = None;
         let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
         if let Some(&(ready, _)) = self.b_sched.front() {
@@ -257,6 +337,99 @@ mod tests {
         assert_eq!(beats, 4);
         assert_eq!(lasts, 1);
         assert!(s.idle());
+    }
+
+    #[test]
+    fn stall_after_kills_the_slave_at_the_nth_wlast() {
+        let mut s = SimSlave::new(0);
+        s.fault = FaultPlan::StallAfter { bursts: 1 };
+        s.b_lat = 1;
+        let mut link = AxiLink::new(4);
+        link.aw.push(aw(1, 1));
+        link.w.push(WBeat {
+            last: true,
+            src: 0,
+            txn: 1,
+        });
+        for cy in 0..20 {
+            link.tick();
+            s.step(cy, &mut link);
+        }
+        // the WLAST was consumed but its B is swallowed; the dead
+        // slave's residue does not hold the run open
+        assert_eq!(s.writes.len(), 1);
+        assert_eq!(link.b.visible(), 0);
+        assert!(s.idle());
+        assert_eq!(s.next_event(0), None);
+        s.assert_clean();
+    }
+
+    #[test]
+    fn drop_b_swallows_only_its_victim() {
+        let mut s = SimSlave::new(0);
+        s.fault = FaultPlan::DropB { nth: 0 };
+        s.b_lat = 1;
+        let mut link = AxiLink::new(8);
+        let mut got = Vec::new();
+        for cy in 0..40 {
+            link.tick();
+            if cy == 0 {
+                link.aw.push(aw(1, 1));
+                link.w.push(WBeat {
+                    last: true,
+                    src: 0,
+                    txn: 1,
+                });
+            }
+            if cy == 10 {
+                link.aw.push(aw(2, 1));
+                link.w.push(WBeat {
+                    last: true,
+                    src: 0,
+                    txn: 2,
+                });
+            }
+            s.step(cy, &mut link);
+            while let Some(b) = link.b.pop() {
+                got.push(b.txn);
+            }
+        }
+        // burst 1's B was dropped; burst 2 completes normally
+        assert_eq!(got, vec![2]);
+        assert!(s.idle());
+        s.assert_clean();
+    }
+
+    #[test]
+    fn grant_then_hang_accepts_handshakes_only() {
+        let mut s = SimSlave::new(0);
+        s.fault = FaultPlan::GrantThenHang;
+        let mut link = AxiLink::new(4);
+        link.aw.push(aw(7, 2));
+        link.ar.push(ArBeat {
+            id: 0,
+            addr: 0x1000,
+            beats: 2,
+            beat_bytes: 64,
+            src: 0,
+            txn: 8,
+        });
+        link.w.push(WBeat {
+            last: false,
+            src: 0,
+            txn: 7,
+        });
+        for cy in 0..20 {
+            link.tick();
+            s.step(cy, &mut link);
+        }
+        // handshakes taken, W beat never consumed, no responses
+        assert_eq!(s.reads.len(), 1);
+        assert_eq!(link.w.visible(), 1);
+        assert_eq!(link.b.visible(), 0);
+        assert_eq!(link.r.visible(), 0);
+        assert!(s.idle());
+        assert_eq!(s.next_event(0), None);
     }
 
     #[test]

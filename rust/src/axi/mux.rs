@@ -19,6 +19,35 @@ use std::collections::VecDeque;
 
 use super::types::Txn;
 
+/// Arbitration policy for the per-slave unicast AW / AR pickers (and the
+/// static tier of the multicast priority encoder).
+///
+/// `RoundRobin` is the historical default and is bit-identical to the
+/// pre-QoS fabric. `Priority { aging }` implements static per-master
+/// priority with an aging boost: the effective priority of master `m`
+/// is `prio[m] + waited[m] / aging`, where `waited[m]` counts arbitration
+/// rounds in which `m` was ready but another master was granted. A
+/// master with static priority `p` therefore waits at most
+/// `aging * (p_max - p)` rounds before competing at the top tier, after
+/// which the lowest-index tie-break admits it within `n_masters` further
+/// grants — the starvation bound documented in DESIGN.md §9.
+///
+/// `aging == 0` disables the boost entirely (pure static priority, which
+/// *can* starve low-priority masters — only for hard-QoS experiments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArbPolicy {
+    /// Fair round-robin (default; bit-identical to the historical fabric).
+    #[default]
+    RoundRobin,
+    /// Static per-master priority with an aging boost every `aging`
+    /// lost arbitration rounds.
+    Priority {
+        /// Rounds a ready-but-skipped master waits per +1 effective
+        /// priority. 0 disables aging (pure static priority).
+        aging: u32,
+    },
+}
+
 /// W-order queue entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WExpect {
@@ -44,6 +73,14 @@ pub struct Mux {
     pub w_expect: VecDeque<WExpect>,
     /// Stats: cycles the mcast path held a grant without commit.
     pub grant_wait_cycles: u64,
+    /// Aging counters for `ArbPolicy::Priority` — rounds each master was
+    /// ready at the AW arbiter but lost. Untouched under `RoundRobin`
+    /// (bit parity), and never incremented across `skip()` windows:
+    /// a ready-but-skipped candidate implies `next_event == now`, so the
+    /// event horizon never jumps while these could tick.
+    pub aw_wait: Vec<u32>,
+    /// Aging counters for the AR arbiter (same rules as `aw_wait`).
+    pub ar_wait: Vec<u32>,
 }
 
 impl Mux {
@@ -56,6 +93,8 @@ impl Mux {
             rr_mcast: 0,
             w_expect: VecDeque::new(),
             grant_wait_cycles: 0,
+            aw_wait: Vec::new(),
+            ar_wait: Vec::new(),
         }
     }
 
@@ -156,6 +195,115 @@ impl Mux {
         }
         None
     }
+
+    /// Policy-dispatching AW pick: round-robin or priority+aging.
+    #[inline]
+    pub fn pick_aw_scan(
+        &mut self,
+        n_masters: usize,
+        policy: ArbPolicy,
+        prio: &[u32],
+        ready: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        match policy {
+            ArbPolicy::RoundRobin => self.rr_pick_aw_scan(n_masters, ready),
+            ArbPolicy::Priority { aging } => {
+                prio_pick(&mut self.aw_wait, n_masters, aging, prio, ready)
+            }
+        }
+    }
+
+    /// Policy-dispatching AR pick: round-robin or priority+aging.
+    #[inline]
+    pub fn pick_ar_scan(
+        &mut self,
+        n_masters: usize,
+        policy: ArbPolicy,
+        prio: &[u32],
+        ready: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        match policy {
+            ArbPolicy::RoundRobin => self.rr_pick_ar_scan(n_masters, ready),
+            ArbPolicy::Priority { aging } => {
+                prio_pick(&mut self.ar_wait, n_masters, aging, prio, ready)
+            }
+        }
+    }
+
+    /// Multicast grant under static priority: highest `prio` wins, ties
+    /// broken by lowest index. This stays *consistent across muxes*
+    /// (the property the lock/commit protocol needs for deadlock
+    /// freedom) because the ordering key is global, unlike per-mux
+    /// aging — which is deliberately NOT applied to the mcast path.
+    pub fn arbitrate_mcast_prio(&mut self, requesters: &[usize], prio: &[u32]) {
+        self.grant = requesters
+            .iter()
+            .copied()
+            .min_by_key(|&m| (std::cmp::Reverse(prio.get(m).copied().unwrap_or(0)), m));
+        if self.grant.is_some() {
+            self.grant_wait_cycles += 1;
+        }
+    }
+
+    /// Remove a W-order entry *anywhere* in the queue — used when a
+    /// request timeout retires a forwarded burst whose W data will never
+    /// fully arrive at this slave. Unlike `pop_w_order` this does not
+    /// assume the entry is at the front. Returns true if found.
+    pub fn evict_w_order(&mut self, master: usize, txn: Txn) -> bool {
+        if let Some(pos) = self
+            .w_expect
+            .iter()
+            .position(|e| e.master == master && e.txn == txn)
+        {
+            self.w_expect.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Priority + aging pick over `ready` masters: effective priority is
+/// `prio[m] + wait[m] / aging`, argmax wins, ties to the lowest index.
+/// Ready losers age by one round; the winner's credit resets.
+#[inline]
+fn prio_pick(
+    wait: &mut Vec<u32>,
+    n_masters: usize,
+    aging: u32,
+    prio: &[u32],
+    mut ready: impl FnMut(usize) -> bool,
+) -> Option<usize> {
+    debug_assert!(n_masters <= 128, "priority arbitration supports <= 128 masters");
+    if wait.len() < n_masters {
+        wait.resize(n_masters, 0);
+    }
+    let mut mask: u128 = 0;
+    let mut best: Option<(u64, usize)> = None;
+    for m in 0..n_masters {
+        if !ready(m) {
+            continue;
+        }
+        mask |= 1 << m;
+        let boost = if aging == 0 { 0 } else { u64::from(wait[m] / aging) };
+        let eff = u64::from(prio.get(m).copied().unwrap_or(0)) + boost;
+        // strictly-greater keeps the tie-break at the lowest index
+        if best.is_none_or(|(b, _)| eff > b) {
+            best = Some((eff, m));
+        }
+    }
+    let (_, win) = best?;
+    for m in 0..n_masters {
+        if mask & (1 << m) == 0 {
+            continue;
+        }
+        if m == win {
+            wait[m] = 0;
+        } else {
+            wait[m] = wait[m].saturating_add(1);
+        }
+    }
+    Some(win)
 }
 
 /// Round-robin selection starting from `ptr`.
@@ -221,6 +369,62 @@ mod tests {
             picks.push(m.rr_pick_aw(&all, 4).unwrap());
         }
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prio_pick_prefers_static_priority() {
+        let mut m = Mux::new(0);
+        let prio = [0u32, 5, 1];
+        // aging disabled: the high-priority master wins every round
+        let p = ArbPolicy::Priority { aging: 0 };
+        for _ in 0..4 {
+            assert_eq!(m.pick_aw_scan(3, p, &prio, |_| true), Some(1));
+        }
+        // ties break to the lowest index
+        assert_eq!(m.pick_aw_scan(3, p, &[2, 0, 2], |_| true), Some(0));
+    }
+
+    #[test]
+    fn aging_bounds_starvation() {
+        let mut m = Mux::new(0);
+        let prio = [0u32, 3];
+        let aging = 2u32;
+        // the DESIGN.md §9 bound: a ready master waits at most
+        // aging * (Δprio + n_masters) rounds before winning
+        let bound = aging * (3 + 2);
+        let mut won = None;
+        for round in 0..=bound {
+            if m.pick_aw_scan(2, ArbPolicy::Priority { aging }, &prio, |_| true) == Some(0) {
+                won = Some(round);
+                break;
+            }
+        }
+        assert!(won.is_some(), "low-priority master starved past the bound");
+    }
+
+    #[test]
+    fn mcast_prio_grant_is_consistent_across_muxes() {
+        let mut a = Mux::new(0);
+        let mut b = Mux::new(1);
+        let prio = [0u32, 7, 2];
+        a.arbitrate_mcast_prio(&[0, 1, 2], &prio);
+        b.arbitrate_mcast_prio(&[1, 2], &prio);
+        // the ordering key is global, so overlapping requester sets
+        // agree wherever the winner requests
+        assert_eq!(a.grant, Some(1));
+        assert_eq!(b.grant, Some(1));
+    }
+
+    #[test]
+    fn evict_w_order_removes_mid_queue_entry() {
+        let mut m = Mux::new(0);
+        m.push_w_order(0, 100);
+        m.push_w_order(1, 101);
+        m.push_w_order(2, 102);
+        assert!(m.evict_w_order(1, 101));
+        assert!(!m.evict_w_order(1, 101));
+        m.pop_w_order(0, 100);
+        assert!(m.w_front_is(2, 102));
     }
 
     #[test]

@@ -269,6 +269,44 @@ impl ResvLedger {
             }
         }
     }
+
+    /// Release the claims of `seq` at `node` and every node its fork
+    /// tree would traverse *below* `node` (re-walking the routing
+    /// oracle with the leg's destination set as seen at `node`).
+    ///
+    /// This is the request-timeout unwind (`XbarCfg::req_timeout`): the
+    /// timed-out crossbar retires its leg with DECERR, so its own claim
+    /// and the claims of the never-to-arrive downstream legs must
+    /// unwind — but sibling legs forked at an upstream node are still
+    /// in flight, so a global [`ResvLedger::release`] would corrupt
+    /// *their* queues. None of the subtree's claims can have committed
+    /// (the AW never forked at `node`), so every one is still queued.
+    pub fn release_subtree(
+        &mut self,
+        node: ResvNode,
+        seq: ResvSeq,
+        dest: &AddrSet,
+        exclude: Option<(u64, u64)>,
+    ) {
+        let mut sub = Vec::new();
+        self.walk(node.0, dest, exclude, &mut sub);
+        for n in sub {
+            if let Some(pos) = self.queues[n].iter().position(|&s| s == seq) {
+                self.queues[n].remove(pos);
+                self.stats.released_claims += 1;
+            }
+            let done = match self.live.get_mut(&seq) {
+                Some(claims) => {
+                    claims.retain(|&c| c != n);
+                    claims.is_empty()
+                }
+                None => false,
+            };
+            if done {
+                self.live.remove(&seq);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -385,6 +423,25 @@ mod tests {
         let _a = led.reserve(l0, &all_eps(), None);
         let b = led.reserve(l1, &all_eps(), None);
         led.commit(l1, b); // a holds the front at leaf 1
+    }
+
+    #[test]
+    fn release_subtree_unwinds_only_the_timed_out_leg() {
+        let (mut led, [l0, l1, root]) = tree_ledger();
+        let a = led.reserve(l0, &all_eps(), None);
+        let b = led.reserve(l1, &all_eps(), None);
+        led.commit(l0, a);
+        led.commit(root, a);
+        // a's leg into leaf 1 times out; only that claim unwinds
+        led.release_subtree(l1, a, &AddrSet::new(BASE + 2 * STRIDE, STRIDE), None);
+        assert_eq!(led.stats.released_claims, 1);
+        assert_eq!(led.live_tickets(), 1);
+        // b now owns every front and proceeds normally
+        assert!(led.is_front(l1, b));
+        led.commit(l1, b);
+        led.commit(root, b);
+        led.commit(l0, b);
+        assert_eq!(led.live_tickets(), 0);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! against the flat golden reference.
 
 use super::addr_map::{AddrMap, AddrRule};
+use super::mux::ArbPolicy;
 use super::reduce::{RedNode, ReduceHandle, ReduceLedger};
 use super::resv::{ResvHandle, ResvLedger, ResvNode};
 use super::types::{AxiLink, LinkId, LinkPool};
@@ -408,6 +409,32 @@ pub struct FabricParams {
     /// an [`XbarCfg`] field: the fabric is oblivious to how it is
     /// stepped. Defaults from `OCCAMY_THREADS`.
     pub threads: usize,
+    /// Per-master outstanding cap applied to every node (`None` keeps
+    /// the `XbarCfg` default). The fabric's converging point — tree
+    /// root / every mesh tile — takes [`FabricParams::root_outstanding`]
+    /// instead when that is set.
+    pub max_outstanding: Option<u32>,
+    /// Per-master same-set multicast cap, same scoping rules.
+    pub max_mcast_outstanding: Option<u32>,
+    /// Outstanding cap override for the converging point (tree root /
+    /// every mesh tile, which is both leaf and root).
+    pub root_outstanding: Option<u32>,
+    /// Multicast cap override for the converging point.
+    pub root_mcast_outstanding: Option<u32>,
+    /// Request deadline (`XbarCfg::req_timeout`), every node.
+    pub req_timeout: Option<u32>,
+    /// Completion deadline (`XbarCfg::cpl_timeout`), every node.
+    pub cpl_timeout: Option<u32>,
+    /// Arbitration policy (`XbarCfg::arb_policy`), every node.
+    pub arb_policy: ArbPolicy,
+    /// Static QoS priority per *endpoint* (missing entries = 0). The
+    /// builders map it onto each node's master ports: an endpoint-
+    /// facing port carries its endpoint's priority; an aggregated port
+    /// (tree child / mesh peer) carries the max priority of the
+    /// endpoints behind it; a tree down-in port carries the max of the
+    /// endpoints *outside* the node's span (descending traffic keeps
+    /// its tier). Empty = all zero (pure round-robin tiebreak).
+    pub endpoint_prio: Vec<u32>,
 }
 
 impl Default for FabricParams {
@@ -420,6 +447,14 @@ impl Default for FabricParams {
             e2e_mcast_order: false,
             fabric_reduce: false,
             threads: crate::util::threads_env().unwrap_or(1),
+            max_outstanding: None,
+            max_mcast_outstanding: None,
+            root_outstanding: None,
+            root_mcast_outstanding: None,
+            req_timeout: None,
+            cpl_timeout: None,
+            arb_policy: ArbPolicy::RoundRobin,
+            endpoint_prio: Vec::new(),
         }
     }
 }
@@ -432,6 +467,43 @@ impl FabricParams {
         cfg.force_naive = self.force_naive;
         cfg.e2e_mcast_order = self.e2e_mcast_order;
         cfg.fabric_reduce = self.fabric_reduce;
+        if let Some(v) = self.max_outstanding {
+            cfg.max_outstanding = v;
+        }
+        if let Some(v) = self.max_mcast_outstanding {
+            cfg.max_mcast_outstanding = v;
+        }
+        cfg.req_timeout = self.req_timeout;
+        cfg.cpl_timeout = self.cpl_timeout;
+        cfg.arb_policy = self.arb_policy;
+    }
+
+    /// Converging-point overrides (tree root / mesh tile).
+    fn apply_root(&self, cfg: &mut XbarCfg) {
+        if let Some(v) = self.root_outstanding {
+            cfg.max_outstanding = v;
+        }
+        if let Some(v) = self.root_mcast_outstanding {
+            cfg.max_mcast_outstanding = v;
+        }
+    }
+
+    fn prio_of(&self, ep: usize) -> u32 {
+        self.endpoint_prio.get(ep).copied().unwrap_or(0)
+    }
+
+    /// Max priority over endpoints `[first, first + count)`.
+    fn prio_max(&self, first: usize, count: usize) -> u32 {
+        (first..first + count).map(|e| self.prio_of(e)).max().unwrap_or(0)
+    }
+
+    /// Max priority over every endpoint *outside* `[first, first + count)`.
+    fn prio_max_outside(&self, first: usize, count: usize, total: usize) -> u32 {
+        (0..total)
+            .filter(|e| *e < first || *e >= first + count)
+            .map(|e| self.prio_of(e))
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -540,6 +612,18 @@ pub fn build_tree(
             .unwrap_or_else(|e| panic!("{}: leaf {g} map: {e}", spec.name));
         let mut cfg = XbarCfg::new(&format!("{}-l0n{}", spec.name, g), n_masters, n_slaves, map);
         spec.params.apply(&mut cfg);
+        if root {
+            spec.params.apply_root(&mut cfg);
+        }
+        if !spec.params.endpoint_prio.is_empty() {
+            // endpoint-facing ports carry their endpoint's priority;
+            // the down-in port carries the rest of the fabric's max
+            let mut prio: Vec<u32> = (0..a0).map(|i| spec.params.prio_of(first + i)).collect();
+            if !root {
+                prio.push(spec.params.prio_max_outside(first, a0, eps.count));
+            }
+            cfg.master_prio = prio;
+        }
         if !root {
             cfg.default_slave = Some(a0);
             cfg.local_scope = Some(eps.region(first, a0));
@@ -582,6 +666,19 @@ pub fn build_tree(
             let mut cfg =
                 XbarCfg::new(&format!("{}-l{}n{}", spec.name, l, k), n_masters, n_slaves, map);
             spec.params.apply(&mut cfg);
+            if root {
+                spec.params.apply_root(&mut cfg);
+            }
+            if !spec.params.endpoint_prio.is_empty() {
+                // child port j aggregates its subtree's endpoints
+                let mut prio: Vec<u32> = (0..al)
+                    .map(|j| spec.params.prio_max(first_ep + j * child_span, child_span))
+                    .collect();
+                if !root {
+                    prio.push(spec.params.prio_max_outside(first_ep, span[l], eps.count));
+                }
+                cfg.master_prio = prio;
+            }
             if !root {
                 cfg.default_slave = Some(al);
                 cfg.local_scope = Some(eps.region(first_ep, span[l]));
@@ -701,6 +798,17 @@ pub fn build_mesh(
             .unwrap_or_else(|err| panic!("{}: tile {q} map: {err}", spec.name));
         let mut cfg = XbarCfg::new(&format!("{}-t{}", spec.name, q), n_masters, n_slaves, map);
         spec.params.apply(&mut cfg);
+        // every mesh tile is both leaf and converging point
+        spec.params.apply_root(&mut cfg);
+        if !spec.params.endpoint_prio.is_empty() {
+            // locals carry their own priority, peer ports the max of
+            // the sending tile's endpoints
+            let mut prio: Vec<u32> = (0..e).map(|i| spec.params.prio_of(first + i)).collect();
+            for p in (0..t).filter(|&p| p != q) {
+                prio.push(spec.params.prio_max(p * e, e));
+            }
+            cfg.master_prio = prio;
+        }
         tune(&mut cfg, q);
         nodes.push(b.node(cfg));
     }
@@ -950,6 +1058,65 @@ mod tests {
         assert_eq!(t.topo.xbars[0].cfg.n_masters, 5);
         assert_eq!(t.topo.xbars[1].cfg.n_masters, 5);
         assert_eq!(t.topo.ext_slave("llc"), t.service_s[0]);
+    }
+
+    #[test]
+    fn fabric_params_caps_timeouts_and_prio_reach_every_node() {
+        let params = FabricParams {
+            max_outstanding: Some(5),
+            max_mcast_outstanding: Some(3),
+            root_outstanding: Some(9),
+            root_mcast_outstanding: Some(7),
+            req_timeout: Some(100),
+            cpl_timeout: Some(400),
+            arb_policy: ArbPolicy::Priority { aging: 4 },
+            endpoint_prio: vec![0, 1, 2, 3, 0, 0, 0, 5],
+            ..FabricParams::default()
+        };
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(8),
+            params.clone(),
+            &TopoShape::Tree { arity: vec![4, 2] },
+        );
+        let leaf = &t.topo.xbars[0].cfg;
+        assert_eq!(leaf.max_outstanding, 5);
+        assert_eq!(leaf.max_mcast_outstanding, 3);
+        assert_eq!(leaf.req_timeout, Some(100));
+        assert_eq!(leaf.cpl_timeout, Some(400));
+        assert_eq!(leaf.arb_policy, ArbPolicy::Priority { aging: 4 });
+        // 4 locals + down-in carrying the outside max (endpoint 7's 5)
+        assert_eq!(leaf.master_prio, vec![0, 1, 2, 3, 5]);
+        let root = &t.topo.xbars.last().unwrap().cfg;
+        assert_eq!(root.max_outstanding, 9);
+        assert_eq!(root.max_mcast_outstanding, 7);
+        // each child port aggregates its subtree's max
+        assert_eq!(root.master_prio, vec![3, 5]);
+
+        // a mesh tile is both leaf and root: root caps, peer-port prios
+        let m = build_shape(&mut pool, 2, eps(8), params, &TopoShape::Mesh { tiles: 2 });
+        let t0 = &m.topo.xbars[0].cfg;
+        assert_eq!(t0.max_outstanding, 9);
+        assert_eq!(t0.max_mcast_outstanding, 7);
+        assert_eq!(t0.master_prio, vec![0, 1, 2, 3, 5]);
+
+        // defaults leave the XbarCfg caps untouched (parity guarantee)
+        let mut pool = LinkPool::new();
+        let d = build_shape(&mut pool, 2, eps(8), FabricParams::default(), &TopoShape::Flat);
+        let base = XbarCfg::new(
+            "ref",
+            1,
+            1,
+            AddrMap::new(vec![AddrRule::new(0, 0x1000, 0, "r0")], 1).unwrap(),
+        );
+        assert_eq!(d.topo.xbars[0].cfg.max_outstanding, base.max_outstanding);
+        assert_eq!(
+            d.topo.xbars[0].cfg.max_mcast_outstanding,
+            base.max_mcast_outstanding
+        );
+        assert!(d.topo.xbars[0].cfg.master_prio.is_empty());
     }
 
     #[test]

@@ -69,12 +69,12 @@
 //!   an ablation layer by `benches/sim_perf.rs`. Crossbars wider than
 //!   64 ports use the naive scans automatically.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 use super::addr_map::AddrMap;
 use super::demux::{Demux, PendingAw, Stall, TargetAw, TargetVec};
 use super::mcast::AddrSet;
-use super::mux::Mux;
+use super::mux::{ArbPolicy, Mux};
 use super::reduce::{NodePlan, RedNode, RedTag, ReduceHandle};
 use super::resv::{ResvHandle, ResvNode, ResvSeq};
 use super::types::{
@@ -152,6 +152,38 @@ pub struct XbarCfg {
     /// tagged bursts travel individually and behavior is bit-identical
     /// to a fabric that never heard of reductions.
     pub fabric_reduce: bool,
+    /// Request timeout (robustness layer, DESIGN.md §9): a decoded AW
+    /// that cannot forward a single leg within this many cycles — or a
+    /// front AR that cannot be granted — retires with **DECERR**
+    /// instead of waiting forever. A retired multicast releases its
+    /// fabric-wide reservation ticket (nothing was committed for a
+    /// never-forwarded entry), so the claim queues keep advancing.
+    /// `None` (default) disables the deadline; behavior is then
+    /// bit-identical to the pre-robustness fabric.
+    pub req_timeout: Option<u32>,
+    /// Completion timeout (robustness layer, DESIGN.md §9): a *shared
+    /// per-node* no-response counter arms whenever forwarded legs are
+    /// outstanding and resets on every B/R beat any slave returns.
+    /// When it reaches this deadline the oldest *eligible* leg — a
+    /// read, a write whose WLAST was delivered, or a write whose slave
+    /// stopped consuming its input — is synthesized as **SLVERR**: the
+    /// fork leg still participates in the B-join, a timed-out read gets
+    /// its exact remaining beats as an error burst, and a hung
+    /// reduction contributor is evicted from the combine table so the
+    /// combined burst still issues with an error-poisoned fan-back.
+    /// `None` (default) disables the deadline (bit-identical when off).
+    pub cpl_timeout: Option<u32>,
+    /// QoS arbitration policy for the unicast AW/AR pickers and the
+    /// static tier of the multicast priority encoder
+    /// (`ArbPolicy::RoundRobin` is the historical, bit-identical
+    /// default). Aging applies only to the unicast pickers — the
+    /// multicast encoder needs a *globally consistent* order for
+    /// deadlock freedom, so it uses the static priorities alone.
+    pub arb_policy: ArbPolicy,
+    /// Static per-master priorities for `ArbPolicy::Priority` (indexed
+    /// by master port; missing entries default to 0). Ignored under
+    /// `RoundRobin`.
+    pub master_prio: Vec<u32>,
 }
 
 impl XbarCfg {
@@ -172,7 +204,17 @@ impl XbarCfg {
             force_naive: crate::util::force_naive_env(),
             e2e_mcast_order: false,
             fabric_reduce: false,
+            req_timeout: None,
+            cpl_timeout: None,
+            arb_policy: ArbPolicy::RoundRobin,
+            master_prio: Vec::new(),
         }
+    }
+
+    /// Is any robustness deadline armed?
+    #[inline]
+    pub fn timeouts_armed(&self) -> bool {
+        self.req_timeout.is_some() || self.cpl_timeout.is_some()
     }
 
     /// Decode an AW's destination set into fork targets, honouring the
@@ -324,6 +366,31 @@ pub struct XbarStats {
     /// `Xbar::skip` has nothing to replay and event-horizon parity
     /// holds by construction (`tests/perf_parity.rs`).
     pub red_beats_saved: u64,
+    /// Requests retired with DECERR by the request deadline
+    /// (`XbarCfg::req_timeout`): never-forwarded AWs plus starved front
+    /// ARs. Event counter — fires are events, so `Xbar::skip` has
+    /// nothing to replay (the *deadline counters* are what skip
+    /// advances).
+    pub req_timeouts: u64,
+    /// Forwarded legs synthesized as SLVERR by the completion deadline
+    /// (`XbarCfg::cpl_timeout`), including evicted reduction joins.
+    pub cpl_timeouts: u64,
+    /// Reduction contributors evicted from combine-table entries by the
+    /// completion deadline (the combined burst then issues with an
+    /// error-poisoned B fan-back).
+    pub red_evictions: u64,
+    /// W beats dropped by timeout unwinding: beats of fully-evicted
+    /// routes plus unsent beats of a cancelled combined burst. Extends
+    /// the fork/join accounting to `w_beats_out == w_beats_in +
+    /// w_fork_extra - red_beats_saved - w_dropped` under faults.
+    pub w_dropped: u64,
+    /// Late B/R beats from already-timed-out legs, dropped via the
+    /// zombie set instead of corrupting a completed join.
+    pub late_drops: u64,
+    /// Forwards granted by the `ArbPolicy::Priority` arbiters (unicast
+    /// AW/AR picks and multicast commits). Event counter — no skip
+    /// replay needed.
+    pub prio_grants: u64,
 }
 
 impl XbarStats {
@@ -348,6 +415,12 @@ impl XbarStats {
         self.resv_commits += o.resv_commits;
         self.red_joins += o.red_joins;
         self.red_beats_saved += o.red_beats_saved;
+        self.req_timeouts += o.req_timeouts;
+        self.cpl_timeouts += o.cpl_timeouts;
+        self.red_evictions += o.red_evictions;
+        self.w_dropped += o.w_dropped;
+        self.late_drops += o.late_drops;
+        self.prio_grants += o.prio_grants;
     }
 }
 
@@ -359,6 +432,11 @@ struct PendingEntry {
     forwarded: InlineVec<bool, FORK_INLINE>,
     /// Cycles spent pending (commit handshake modelling).
     age: u32,
+    /// Cycles spent with *no* leg forwarded — the request-deadline
+    /// counter (`XbarCfg::req_timeout`). Separate from `age` so the
+    /// commit-handshake replay in `Xbar::skip` stays bit-identical
+    /// with timeouts off.
+    wait: u32,
 }
 
 /// Memoised decode of one master's front AW (§Perf): a stalled request
@@ -415,6 +493,33 @@ struct CombineEntry {
     up_txn: Txn,
     id: AxiId,
     tag: RedTag,
+    /// Completion-deadline counter: cycles spent collecting while at
+    /// least one *expected* contributor has not even arrived (reset by
+    /// every new contribution). Only ticks with `XbarCfg::cpl_timeout`.
+    wait: u32,
+    /// Contributors were evicted by the completion deadline: the
+    /// fanned-back B is error-poisoned (joined with SLVERR).
+    poisoned: bool,
+}
+
+/// One forwarded leg awaiting its completion (B or last R) — the
+/// completion-timeout scoreboard, kept in forward order. Only
+/// maintained when `XbarCfg::cpl_timeout` is armed.
+#[derive(Debug, Clone, Copy)]
+struct CplLeg {
+    slave: usize,
+    /// Source master port (`RED_MASTER` for a combined reduction burst).
+    master: usize,
+    txn: Txn,
+    id: AxiId,
+    read: bool,
+    /// Reads: R beats not yet delivered to the master (the synthesized
+    /// SLVERR burst must carry *exactly* this many — DMA engines drain
+    /// by beat count).
+    beats_left: u32,
+    /// Writes: the WLAST beat reached the slave's W channel, so the
+    /// slave owes a B — the leg is then always eligible to fire.
+    wlast_sent: bool,
 }
 
 /// The crossbar.
@@ -444,9 +549,11 @@ pub struct Xbar {
     pub maybe_busy: bool,
     wr_owner: TxnTable,
     rd_owner: TxnTable,
-    /// DECERR read responses being generated: (master, id, txn, beats).
-    /// VecDeque so the common front-completion removal is O(1).
-    decerr_r: VecDeque<(usize, u16, Txn, u32)>,
+    /// Error read responses being generated: (master, id, txn, beats,
+    /// resp) — DECERR for unroutable/timed-out requests, SLVERR for
+    /// completion-timeout synthesis. VecDeque so the common
+    /// front-completion removal is O(1).
+    err_r: VecDeque<(usize, u16, Txn, u32, Resp)>,
     /// Fabric-wide reservation ledger handle + this crossbar's node id
     /// (end-to-end multicast ordering; `None` = per-crossbar protocol
     /// only, the RTL-faithful default).
@@ -457,6 +564,20 @@ pub struct Xbar {
     red: Option<(ReduceHandle, RedNode)>,
     /// Live joins of the per-node combine table (creation order).
     red_entries: Vec<CombineEntry>,
+    /// Completion-timeout scoreboard: forwarded legs in forward order
+    /// (empty unless `XbarCfg::cpl_timeout` is armed).
+    cpl_legs: VecDeque<CplLeg>,
+    /// The shared per-node no-response counter: cycles since the last
+    /// B/R beat any slave returned, ticking only while legs are
+    /// outstanding. Bulk-advanced by `Xbar::skip`.
+    cpl_age: u32,
+    /// (slave, txn) legs whose completion was synthesized — a late real
+    /// beat from the (typically hung) slave is dropped, not joined.
+    zombie: HashSet<(usize, Txn)>,
+    /// Per-master request-deadline tracker for the front AR:
+    /// (txn, cycles waited). Visible ARs keep links busy, so skips
+    /// never span a ticking tracker and no replay is needed.
+    ar_front_wait: Vec<Option<(Txn, u32)>>,
     pub stats: XbarStats,
 
     // ---- worklists (§Perf) ----
@@ -479,6 +600,17 @@ impl Xbar {
     pub fn new(cfg: XbarCfg, m_links: Vec<LinkId>, s_links: Vec<LinkId>) -> Xbar {
         assert_eq!(m_links.len(), cfg.n_masters);
         assert_eq!(s_links.len(), cfg.n_slaves);
+        // a zero cap can admit nothing — the fabric would wedge on the
+        // first write, which the config layer must reject loudly
+        // (SocConfig::validate) rather than silently hang
+        assert!(
+            cfg.max_outstanding > 0 && cfg.max_mcast_outstanding > 0,
+            "{}: outstanding-request caps must be nonzero \
+             (max_outstanding={}, max_mcast_outstanding={})",
+            cfg.name,
+            cfg.max_outstanding,
+            cfg.max_mcast_outstanding
+        );
         let demux = (0..cfg.n_masters)
             .map(|i| Demux::new(i, cfg.max_mcast_outstanding, cfg.max_outstanding))
             .collect();
@@ -490,6 +622,7 @@ impl Xbar {
         let ports: Vec<LinkId> = m_links.iter().chain(s_links.iter()).copied().collect();
         let use_masks = !cfg.force_naive && cfg.n_masters <= 64 && cfg.n_slaves <= 64;
         let force_naive = cfg.force_naive;
+        let ar_front_wait = vec![None; cfg.n_masters];
         Xbar {
             cfg,
             demux,
@@ -504,10 +637,14 @@ impl Xbar {
             maybe_busy: false,
             wr_owner: TxnTable::new(force_naive),
             rd_owner: TxnTable::new(force_naive),
-            decerr_r: VecDeque::new(),
+            err_r: VecDeque::new(),
             resv: None,
             red: None,
             red_entries: Vec::new(),
+            cpl_legs: VecDeque::new(),
+            cpl_age: 0,
+            zombie: HashSet::new(),
+            ar_front_wait,
             stats: XbarStats::default(),
             mask_pending: 0,
             mask_w: 0,
@@ -610,6 +747,31 @@ impl Xbar {
         }
     }
 
+    /// Static QoS priority of master `m` (missing entries are 0).
+    #[inline]
+    fn master_prio_of(&self, m: usize) -> u32 {
+        self.cfg.master_prio.get(m).copied().unwrap_or(0)
+    }
+
+    /// Enrol a just-forwarded write leg on the completion-timeout
+    /// scoreboard (no-op when `cpl_timeout` is unarmed). Legs are kept
+    /// in forward order so the shared counter always fires the oldest
+    /// eligible one.
+    #[inline]
+    fn cpl_track_write(&mut self, slave: usize, master: usize, txn: Txn, id: AxiId) {
+        if self.cfg.cpl_timeout.is_some() {
+            self.cpl_legs.push_back(CplLeg {
+                slave,
+                master,
+                txn,
+                id,
+                read: false,
+                beats_left: 0,
+                wlast_sent: false,
+            });
+        }
+    }
+
     /// Is the end-to-end reservation protocol active on this crossbar?
     #[inline]
     fn e2e(&self) -> bool {
@@ -662,6 +824,9 @@ impl Xbar {
         }
         self.phase_b(pool, in_b);
         self.phase_r(pool, in_r);
+        if self.cfg.timeouts_armed() {
+            self.phase_timeouts(pool);
+        }
         self.phase_ar(pool, in_ar);
         self.phase_aw_accept(pool, in_aw);
         self.phase_grant();
@@ -679,6 +844,24 @@ impl Xbar {
         let ns = self.cfg.n_slaves;
         self.for_each(in_b, ns, pool, |xb, s, pool| {
             if let Some(b) = pool[xb.s_links[s]].b.pop() {
+                // completion-timeout scoreboard: any response is
+                // progress (shared counter resets), and the leg retires
+                if xb.cfg.cpl_timeout.is_some() {
+                    xb.cpl_age = 0;
+                    if let Some(i) = xb
+                        .cpl_legs
+                        .iter()
+                        .position(|l| l.slave == s && l.txn == b.txn && !l.read)
+                    {
+                        xb.cpl_legs.remove(i);
+                    }
+                }
+                // a late B for an already-synthesized leg: drop it —
+                // the join completed with SLVERR when the leg fired
+                if xb.zombie.remove(&(s, b.txn)) {
+                    xb.stats.late_drops += 1;
+                    return;
+                }
                 // combined reduction burst: fan the single upstream B
                 // out to every absorbed contributor — the converging
                 // dual of the multicast B-join
@@ -688,9 +871,15 @@ impl Xbar {
                     .position(|e| e.state == RedState::AwaitB && e.up_txn == b.txn)
                 {
                     let e = xb.red_entries.remove(i);
+                    // evicted contributors poison the fan-back
+                    let resp = if e.poisoned {
+                        b.resp.join(Resp::SlvErr)
+                    } else {
+                        b.resp
+                    };
                     for (m, id, txn) in e.waiters {
                         let joined = xb.demux[m]
-                            .join_b(txn, b.resp, id)
+                            .join_b(txn, resp, id)
                             .expect("sink join must complete on the fanned B");
                         xb.stats.b_joined += 1;
                         xb.demux[m].b_out.push_back(joined);
@@ -732,6 +921,19 @@ impl Xbar {
             let Some(r) = pool[link].r.front().copied() else {
                 return;
             };
+            // late beats of an already-synthesized read leg: drain and
+            // drop — the master received its SLVERR burst long ago
+            if xb.zombie.contains(&(s, r.txn)) {
+                pool[link].r.pop();
+                xb.stats.late_drops += 1;
+                if xb.cfg.cpl_timeout.is_some() {
+                    xb.cpl_age = 0;
+                }
+                if r.last {
+                    xb.zombie.remove(&(s, r.txn));
+                }
+                return;
+            }
             let m = xb
                 .rd_owner
                 .get(r.txn)
@@ -743,28 +945,307 @@ impl Xbar {
                 }
                 pool[xb.m_links[m]].r.push(r);
                 xb.stats.r_beats += 1;
+                // completion-timeout scoreboard: delivered beats are
+                // progress; the leg retires on its last beat
+                if xb.cfg.cpl_timeout.is_some() {
+                    xb.cpl_age = 0;
+                    if let Some(i) = xb
+                        .cpl_legs
+                        .iter()
+                        .position(|l| l.slave == s && l.txn == r.txn && l.read)
+                    {
+                        if r.last {
+                            xb.cpl_legs.remove(i);
+                        } else {
+                            xb.cpl_legs[i].beats_left -= 1;
+                        }
+                    }
+                }
             }
         });
-        // synthesize DECERR read data for unroutable ARs
+        // synthesize error read data: DECERR for unroutable/timed-out
+        // ARs, SLVERR for completion-timeout remainders
         let mut i = 0;
-        while i < self.decerr_r.len() {
-            let (m, id, txn, ref mut beats) = self.decerr_r[i];
+        while i < self.err_r.len() {
+            let (m, id, txn, ref mut beats, resp) = self.err_r[i];
             if pool[self.m_links[m]].r.can_push() {
                 *beats -= 1;
                 let last = *beats == 0;
-                pool[self.m_links[m]].r.push(RBeat {
-                    id,
-                    last,
-                    resp: Resp::DecErr,
-                    txn,
-                });
+                pool[self.m_links[m]].r.push(RBeat { id, last, resp, txn });
                 if last {
-                    let _ = self.decerr_r.remove(i);
+                    let _ = self.err_r.remove(i);
                     continue;
                 }
             }
             i += 1;
         }
+    }
+
+    /// Phase 2.5 — request/completion deadlines (`XbarCfg::req_timeout`
+    /// / `cpl_timeout`). Gated on [`XbarCfg::timeouts_armed`] so the
+    /// default configuration never executes a single instruction of it.
+    ///
+    /// Mirrors the production-crossbar scheme: *request* deadlines are
+    /// per-request (a request that cannot win arbitration or clear
+    /// backpressure within `req_timeout` retires with DECERR), while
+    /// the *completion* deadline is one shared per-node counter — any
+    /// B/R beat from any slave is progress and resets it; when it
+    /// expires, the oldest leg that provably owes a response is
+    /// synthesized as SLVERR. A write leg whose WLAST has not reached
+    /// the slave only counts as owing once the slave's input channels
+    /// are backed up — otherwise the leg is still in flight through the
+    /// fabric and firing it would poison a healthy slave.
+    fn phase_timeouts(&mut self, pool: &mut LinkPool) {
+        let nm = self.cfg.n_masters;
+        if let Some(reqt) = self.cfg.req_timeout {
+            // (a) pending AWs: tick while any leg has yet to fork. At
+            // the deadline a fully-unforwarded entry retires whole
+            // (DECERR); a partially-forwarded no-commit fork instead
+            // evicts its stuck legs so the forwarded ones can accept —
+            // without this, a fork wedged on a dead slave's backed-up
+            // AW channel would never resolve (commit-protocol forks are
+            // atomic, so partial entries only exist in no-commit mode,
+            // where tickets never occur)
+            for m in 0..nm {
+                let fire = match self.pending[m].as_mut() {
+                    Some(e) if !e.forwarded.iter().all(|&f| f) => {
+                        e.wait += 1;
+                        if e.wait < reqt {
+                            0
+                        } else if e.forwarded.iter().all(|&f| !f) {
+                            1
+                        } else {
+                            2
+                        }
+                    }
+                    _ => 0,
+                };
+                match fire {
+                    1 => self.retire_pending_decerr(m),
+                    2 => self.evict_unforwarded_legs(m),
+                    _ => {}
+                }
+            }
+            // (b) front ARs: a read stuck at the head of its master
+            // port (slave AR backpressure, or starvation under pure
+            // static priority) retires as a DECERR R burst
+            for m in 0..nm {
+                let front = pool[self.m_links[m]].ar.front().map(|ar| ar.txn);
+                self.ar_front_wait[m] = match (front, self.ar_front_wait[m]) {
+                    (None, _) => None,
+                    (Some(txn), Some((prev, w))) if prev == txn => {
+                        if w + 1 >= reqt {
+                            let ar = pool[self.m_links[m]].ar.pop().unwrap();
+                            self.stats.req_timeouts += 1;
+                            self.stats.decerr += 1;
+                            self.err_r
+                                .push_back((m, ar.id, ar.txn, ar.beats, Resp::DecErr));
+                            None
+                        } else {
+                            Some((txn, w + 1))
+                        }
+                    }
+                    (Some(txn), _) => Some((txn, 1)),
+                };
+            }
+        }
+        let Some(cplt) = self.cfg.cpl_timeout else {
+            return;
+        };
+        // (c) collecting reduction groups: tick while at least one
+        // expected contributor has not even arrived; at the deadline
+        // the missing contributors are evicted — the group closes over
+        // the ones present and the fanned-back B is error-poisoned
+        for e in self.red_entries.iter_mut() {
+            if e.state == RedState::Collecting
+                && !e.waiters.is_empty()
+                && (e.waiters.len() as u32) < e.expected
+            {
+                e.wait += 1;
+                if e.wait >= cplt {
+                    self.stats.red_evictions += (e.expected - e.waiters.len() as u32) as u64;
+                    self.stats.cpl_timeouts += 1;
+                    e.expected = e.waiters.len() as u32;
+                    e.poisoned = true;
+                    e.wait = 0;
+                    if e.arrived == e.expected {
+                        e.state = RedState::Ready;
+                    }
+                }
+            }
+        }
+        // (d) granted legs: the shared completion counter
+        if self.cpl_legs.is_empty() {
+            self.cpl_age = 0;
+            return;
+        }
+        self.cpl_age += 1;
+        if self.cpl_age < cplt {
+            return;
+        }
+        self.cpl_age = 0;
+        let idx = self.cpl_legs.iter().position(|l| {
+            l.read || l.wlast_sent || {
+                let link = &pool[self.s_links[l.slave]];
+                link.w.visible() > 0 || link.aw.visible() > 0
+            }
+        });
+        // no leg provably owes a response yet (everything still in
+        // flight through the fabric): re-arm and keep waiting
+        if let Some(i) = idx {
+            let leg = self.cpl_legs.remove(i).unwrap();
+            self.fire_cpl(leg);
+        }
+    }
+
+    /// Completion-timeout synthesis for one scoreboard leg (cold path).
+    /// The slave is presumed dead: the master's side of the transaction
+    /// completes with SLVERR, the leg's residual fabric state (mux
+    /// W-order entry, demux W route, reduction entry) unwinds, and the
+    /// transaction is zombie-marked so a late real response from the
+    /// slave is dropped instead of corrupting a completed join.
+    fn fire_cpl(&mut self, leg: CplLeg) {
+        self.stats.cpl_timeouts += 1;
+        let CplLeg {
+            slave: s,
+            master: m,
+            txn,
+            id,
+            read,
+            beats_left,
+            wlast_sent,
+        } = leg;
+        self.zombie.insert((s, txn));
+        if read {
+            // the synthesized burst carries exactly the undelivered
+            // remainder — DMA engines drain by beat count
+            self.rd_owner.remove(txn);
+            self.err_r.push_back((m, id, txn, beats_left, Resp::SlvErr));
+            return;
+        }
+        if m == RED_MASTER {
+            // the *combined* reduction burst timed out at its exit:
+            // fan the synthesized SLVERR back to every contributor
+            if let Some(i) = self.red_entries.iter().position(|e| {
+                e.up_txn == txn
+                    && matches!(e.state, RedState::Streaming { .. } | RedState::AwaitB)
+            }) {
+                let e = self.red_entries.remove(i);
+                if let RedState::Streaming { left } = e.state {
+                    self.mux[s].evict_w_order(RED_MASTER, txn);
+                    self.stats.w_dropped += left as u64;
+                }
+                for (wm, wid, wtxn) in e.waiters {
+                    let joined = self.demux[wm]
+                        .join_b(wtxn, Resp::SlvErr, wid)
+                        .expect("sink join must complete on the synthesized B");
+                    self.stats.b_joined += 1;
+                    self.demux[wm].b_out.push_back(joined);
+                    self.note_b_out(wm);
+                }
+            }
+            return;
+        }
+        // a forwarded write leg: fold SLVERR into its fork join — the
+        // timed-out leg still participates, so healthy sibling legs
+        // complete the multicast normally
+        if !wlast_sent {
+            self.mux[s].evict_w_order(m, txn);
+        }
+        self.demux[m].evict_route_slave(txn, s);
+        if self.demux[m].joins.contains_key(&txn) {
+            if let Some(joined) = self.demux[m].join_b(txn, Resp::SlvErr, id) {
+                self.wr_owner.remove(txn);
+                self.stats.b_joined += 1;
+                self.demux[m].b_out.push_back(joined);
+                self.note_b_out(m);
+            }
+        } else {
+            // no-commit mode forks leg-by-leg, so the join does not
+            // exist until the whole fork is accepted: unwind the leg
+            // inside the still-pending entry instead
+            self.evict_pending_leg(m, s, txn);
+        }
+    }
+
+    /// Request-timeout retire (cold path): the pending AW at master `m`
+    /// could not fork a single leg within `req_timeout`. Accept it with
+    /// an empty target set — its W beats then drain through the
+    /// unroutable path and the master receives a DECERR B — and release
+    /// the reservation claims of its never-forwarded subtree so the
+    /// fabric-wide claim queues advance. Stale mux grants need no
+    /// manual clearing: both grant modes re-arbitrate every cycle.
+    fn retire_pending_decerr(&mut self, m: usize) {
+        let entry = self.pending[m].take().unwrap();
+        self.note_pending(m, false);
+        if entry.pend.beat.is_mcast {
+            self.n_pending_mcast -= 1;
+        }
+        if let Some(seq) = entry.pend.beat.ticket {
+            let (h, node) = self.resv.clone().expect("ticketed beat without a ledger");
+            h.lock().unwrap().release_subtree(
+                node,
+                seq,
+                &entry.pend.beat.dest,
+                entry.pend.beat.exclude,
+            );
+        }
+        self.stats.req_timeouts += 1;
+        self.stats.decerr += 1;
+        self.demux[m].accept(&entry.pend.beat, &[], Resp::DecErr);
+        self.note_w(m);
+    }
+
+    /// No-commit-mode leg eviction: remove slave `s` from master `m`'s
+    /// still-pending fork and poison the eventual join resp. If the
+    /// eviction empties the fork, the entry retires through
+    /// `phase_commit`'s empty-target path next cycle.
+    fn evict_pending_leg(&mut self, m: usize, s: usize, txn: Txn) {
+        let Some(entry) = self.pending[m].as_mut() else {
+            return;
+        };
+        if entry.pend.beat.txn != txn {
+            return;
+        }
+        let keep: Vec<usize> = (0..entry.pend.targets.len())
+            .filter(|&i| entry.pend.targets[i].slave != s)
+            .collect();
+        entry.pend.targets = keep
+            .iter()
+            .map(|&i| entry.pend.targets[i].clone())
+            .collect();
+        entry.forwarded = keep.iter().map(|&i| entry.forwarded[i]).collect();
+        entry.pend.resp0 = entry.pend.resp0.join(Resp::SlvErr);
+        if entry.pend.targets.is_empty() {
+            self.wr_owner.remove(txn);
+        }
+    }
+
+    /// Request-deadline eviction for a partially-forwarded no-commit
+    /// fork: the legs that never made it into their slave AW queues
+    /// (typically wedged behind a dead slave's backed-up channel) are
+    /// dropped from the fork with DECERR folded into the eventual join,
+    /// so the forwarded legs can accept through `phase_commit`'s
+    /// all-forwarded path. Partial forks only exist in no-commit mode,
+    /// which never carries reservation tickets, so there is no subtree
+    /// claim to release here.
+    fn evict_unforwarded_legs(&mut self, m: usize) {
+        let Some(entry) = self.pending[m].as_mut() else {
+            return;
+        };
+        debug_assert!(entry.pend.beat.ticket.is_none());
+        let keep: Vec<usize> = (0..entry.pend.targets.len())
+            .filter(|&i| entry.forwarded[i])
+            .collect();
+        entry.pend.targets = keep
+            .iter()
+            .map(|&i| entry.pend.targets[i].clone())
+            .collect();
+        entry.forwarded = vec![true; keep.len()];
+        entry.pend.resp0 = entry.pend.resp0.join(Resp::DecErr);
+        entry.wait = 0;
+        self.stats.req_timeouts += 1;
+        self.stats.decerr += 1;
     }
 
     /// Phase 3 — AR arbitration and forwarding (reads are unicast).
@@ -788,26 +1269,44 @@ impl Xbar {
                     // unroutable read → DECERR R burst
                     let ar = pool[xb.m_links[m]].ar.pop().unwrap();
                     xb.stats.decerr += 1;
-                    xb.decerr_r.push_back((m, ar.id, ar.txn, ar.beats));
+                    xb.err_r.push_back((m, ar.id, ar.txn, ar.beats, Resp::DecErr));
                     None
                 }
                 None => None,
             };
         });
         if any {
+            let policy = self.cfg.arb_policy;
             for s in 0..self.cfg.n_slaves {
                 if !pool[self.s_links[s]].ar.can_push() {
                     continue;
                 }
                 let want = &self.scratch_want;
-                if let Some(m) =
-                    self.mux[s].rr_pick_ar_scan(self.cfg.n_masters, |m| want[m] == Some(s))
-                {
+                if let Some(m) = self.mux[s].pick_ar_scan(
+                    self.cfg.n_masters,
+                    policy,
+                    &self.cfg.master_prio,
+                    |m| want[m] == Some(s),
+                ) {
                     let mut ar = pool[self.m_links[m]].ar.pop().unwrap();
                     ar.src = m;
                     self.rd_owner.insert(ar.txn, m);
+                    if self.cfg.cpl_timeout.is_some() {
+                        self.cpl_legs.push_back(CplLeg {
+                            slave: s,
+                            master: m,
+                            txn: ar.txn,
+                            id: ar.id,
+                            read: true,
+                            beats_left: ar.beats,
+                            wlast_sent: false,
+                        });
+                    }
                     pool[self.s_links[s]].ar.push(ar);
                     self.stats.ar_forwarded += 1;
+                    if matches!(policy, ArbPolicy::Priority { .. }) {
+                        self.stats.prio_grants += 1;
+                    }
                     self.scratch_want[m] = None;
                 }
             }
@@ -919,6 +1418,7 @@ impl Xbar {
                 },
                 forwarded: InlineVec::from_elem(false, n_targets),
                 age: 0,
+                wait: 0,
             });
             xb.note_pending(m, true);
             if is_mcast {
@@ -1011,8 +1511,19 @@ impl Xbar {
                     }
                 }
             }
+            let prio = matches!(self.cfg.arb_policy, ArbPolicy::Priority { .. });
             for s in 0..self.cfg.n_slaves {
-                let grant = (0..nm).find(|&m| masks[m] >> s & 1 == 1);
+                // static priority reorders the encoder but stays
+                // consistent across muxes (a global key), preserving
+                // the commit protocol's deadlock freedom; plain lzc
+                // otherwise (bit-identical default)
+                let grant = if prio {
+                    (0..nm)
+                        .filter(|&m| masks[m] >> s & 1 == 1)
+                        .min_by_key(|&m| (std::cmp::Reverse(self.master_prio_of(m)), m))
+                } else {
+                    (0..nm).find(|&m| masks[m] >> s & 1 == 1)
+                };
                 self.mux[s].grant = grant;
                 if grant.is_some() {
                     self.mux[s].grant_wait_cycles += 1;
@@ -1022,8 +1533,15 @@ impl Xbar {
         }
         for s in 0..self.cfg.n_slaves {
             if self.cfg.commit_protocol {
-                // lzc: lowest-index requesting master, allocation-free
-                let grant = (0..self.cfg.n_masters).find(|&m| self.wants_mcast(m, s));
+                // lzc: lowest-index requesting master (static priority
+                // first under `ArbPolicy::Priority`), allocation-free
+                let grant = if matches!(self.cfg.arb_policy, ArbPolicy::Priority { .. }) {
+                    (0..self.cfg.n_masters)
+                        .filter(|&m| self.wants_mcast(m, s))
+                        .min_by_key(|&m| (std::cmp::Reverse(self.master_prio_of(m)), m))
+                } else {
+                    (0..self.cfg.n_masters).find(|&m| self.wants_mcast(m, s))
+                };
                 self.mux[s].grant = grant;
                 if grant.is_some() {
                     self.mux[s].grant_wait_cycles += 1;
@@ -1140,7 +1658,11 @@ impl Xbar {
                         t,
                         m,
                     );
+                    xb.cpl_track_write(t.slave, m, entry.pend.beat.txn, entry.pend.beat.id);
                     xb.mux[t.slave].grant = None;
+                }
+                if matches!(xb.cfg.arb_policy, ArbPolicy::Priority { .. }) {
+                    xb.stats.prio_grants += 1;
                 }
                 xb.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
                 xb.note_w(m);
@@ -1166,6 +1688,17 @@ impl Xbar {
                             &t,
                             m,
                         );
+                        if xb.cfg.cpl_timeout.is_some() {
+                            xb.cpl_legs.push_back(CplLeg {
+                                slave: t.slave,
+                                master: m,
+                                txn: entry.pend.beat.txn,
+                                id: entry.pend.beat.id,
+                                read: false,
+                                beats_left: 0,
+                                wlast_sent: false,
+                            });
+                        }
                         entry.forwarded[i] = true;
                         xb.mux[t.slave].grant = None;
                     }
@@ -1223,14 +1756,18 @@ impl Xbar {
             }
         });
         if any {
+            let policy = self.cfg.arb_policy;
             for s in 0..self.cfg.n_slaves {
                 if self.mux[s].mcast_active() || !pool[self.s_links[s]].aw.can_push() {
                     continue;
                 }
                 let want = &self.scratch_want;
-                if let Some(m) =
-                    self.mux[s].rr_pick_aw_scan(self.cfg.n_masters, |m| want[m] == Some(s))
-                {
+                if let Some(m) = self.mux[s].pick_aw_scan(
+                    self.cfg.n_masters,
+                    policy,
+                    &self.cfg.master_prio,
+                    |m| want[m] == Some(s),
+                ) {
                     let entry = self.pending[m].take().unwrap();
                     self.note_pending(m, false);
                     let t = entry.pend.targets[0].clone();
@@ -1243,6 +1780,10 @@ impl Xbar {
                         &t,
                         m,
                     );
+                    self.cpl_track_write(s, m, entry.pend.beat.txn, entry.pend.beat.id);
+                    if matches!(policy, ArbPolicy::Priority { .. }) {
+                        self.stats.prio_grants += 1;
+                    }
                     self.demux[m].accept(&entry.pend.beat, &entry.pend.targets, entry.pend.resp0);
                     self.note_w(m);
                     self.resv_commit(entry.pend.beat.ticket);
@@ -1277,14 +1818,25 @@ impl Xbar {
         let beats_left = route.beats_left;
         let is_mcast = route.is_mcast;
         if route.slaves.is_empty() {
-            // drain W of an unroutable transaction, or absorb a
-            // reduction contribution into the combine table (sink)
+            // drain W of an unroutable transaction, absorb a reduction
+            // contribution into the combine table (sink), or drop the
+            // remaining beats of a fully-evicted route (its SLVERR B
+            // was already synthesized when the legs timed out)
             let sink = route.sink;
+            let evicted = route.evicted;
             if beats_left == 0 || pool[self.m_links[m]].w.pop().is_some() {
                 if sink && beats_left > 0 {
                     // an absorbed beat enters the fabric but never
                     // leaves it — the join accounting's "in" side
                     self.stats.w_beats_in += 1;
+                }
+                if evicted && beats_left > 0 {
+                    // the beat entered the crossbar but every leg is
+                    // gone — count both sides so the fork/join balance
+                    // (`w_beats_out == w_beats_in + w_fork_extra −
+                    // red_beats_saved − w_dropped`) stays exact
+                    self.stats.w_beats_in += 1;
+                    self.stats.w_dropped += 1;
                 }
                 let r = self.demux[m].w_queue.front_mut().unwrap();
                 r.beats_left = r.beats_left.saturating_sub(1);
@@ -1292,7 +1844,7 @@ impl Xbar {
                     self.demux[m].w_queue.pop_front();
                     if sink {
                         self.red_w_drained(txn);
-                    } else {
+                    } else if !evicted {
                         let b = self.demux[m].complete_unroutable(txn);
                         self.demux[m].b_out.push_back(b);
                         self.note_b_out(m);
@@ -1329,6 +1881,17 @@ impl Xbar {
             self.stats.w_beats_out += 1;
             if last {
                 self.mux[s].pop_w_order(m, txn);
+                // the slave now owes a B: its scoreboard leg becomes
+                // unconditionally eligible for the completion deadline
+                if self.cfg.cpl_timeout.is_some() {
+                    if let Some(l) = self
+                        .cpl_legs
+                        .iter_mut()
+                        .find(|l| l.slave == s && l.txn == txn && !l.read)
+                    {
+                        l.wlast_sent = true;
+                    }
+                }
             }
         }
         let r = self.demux[m].w_queue.front_mut().unwrap();
@@ -1348,10 +1911,17 @@ impl Xbar {
     /// is created lazily on the first arrival and completed when
     /// `expected` contributor bursts have fully drained.
     fn red_contribution(&mut self, m: usize, beat: &AwBeat, plan: NodePlan, tag: RedTag) {
-        let idx = self
-            .red_entries
-            .iter()
-            .position(|e| e.group == tag.group && e.addr == beat.dest.addr);
+        // only a live, un-poisoned collecting entry may absorb more
+        // contributions: a late arrival racing a timeout eviction (or a
+        // new round reusing the address) opens a fresh entry instead,
+        // which the eviction deadline will close out on its own if the
+        // rest of its round never shows up
+        let idx = self.red_entries.iter().position(|e| {
+            e.group == tag.group
+                && e.addr == beat.dest.addr
+                && e.state == RedState::Collecting
+                && !e.poisoned
+        });
         let idx = match idx {
             Some(i) => i,
             None => {
@@ -1368,11 +1938,15 @@ impl Xbar {
                     up_txn: beat.txn,
                     id: beat.id,
                     tag,
+                    wait: 0,
+                    poisoned: false,
                 });
                 self.red_entries.len() - 1
             }
         };
         let e = &mut self.red_entries[idx];
+        // a new contribution is progress — the eviction deadline restarts
+        e.wait = 0;
         assert_eq!(
             e.beats, beat.beats,
             "{}: reduction group {} contributions disagree on the burst split",
@@ -1441,7 +2015,18 @@ impl Xbar {
                         self.stats.red_joins += 1;
                         self.stats.red_beats_saved +=
                             (e.expected as u64 - 1) * e.beats as u64;
-                        let beats = e.beats;
+                        let (beats, id) = (e.beats, e.id);
+                        if self.cfg.cpl_timeout.is_some() {
+                            self.cpl_legs.push_back(CplLeg {
+                                slave: exit,
+                                master: RED_MASTER,
+                                txn: up_txn,
+                                id,
+                                read: false,
+                                beats_left: 0,
+                                wlast_sent: false,
+                            });
+                        }
                         self.red_entries[i].state = RedState::Streaming { left: beats };
                     }
                 }
@@ -1460,6 +2045,15 @@ impl Xbar {
                         self.stats.w_beats_out += 1;
                         if last {
                             self.mux[exit].pop_w_order(RED_MASTER, up_txn);
+                            if self.cfg.cpl_timeout.is_some() {
+                                if let Some(l) = self
+                                    .cpl_legs
+                                    .iter_mut()
+                                    .find(|l| l.slave == exit && l.txn == up_txn && !l.read)
+                                {
+                                    l.wlast_sent = true;
+                                }
+                            }
                             self.red_entries[i].state = RedState::AwaitB;
                         } else {
                             self.red_entries[i].state = RedState::Streaming { left: left - 1 };
@@ -1471,13 +2065,30 @@ impl Xbar {
         }
     }
 
+    /// Watchdog post-mortem: combine-table joins still open.
+    pub fn open_reductions(&self) -> usize {
+        self.red_entries.len()
+    }
+
+    /// Watchdog post-mortem: completion-scoreboard legs still awaiting
+    /// a B/R (non-empty only with `cpl_timeout` armed).
+    pub fn open_cpl_legs(&self) -> usize {
+        self.cpl_legs.len()
+    }
+
+    /// Watchdog post-mortem: timed-out transactions whose late beats
+    /// are still being dropped.
+    pub fn zombie_count(&self) -> usize {
+        self.zombie.len()
+    }
+
     /// Any write/read activity still in flight inside the xbar?
     pub fn busy(&self) -> bool {
         self.pending.iter().any(Option::is_some)
             || self.demux.iter().any(|d| d.busy() || !d.b_out.is_empty())
             || !self.wr_owner.is_empty()
             || !self.rd_owner.is_empty()
-            || !self.decerr_r.is_empty()
+            || !self.err_r.is_empty()
             || !self.red_entries.is_empty()
     }
 
@@ -1495,8 +2106,26 @@ impl Xbar {
         }
         let mut ev: Option<Cycle> = None;
         let mut fold = |e: Cycle| crate::sim::sched::fold_min(&mut ev, e);
-        if !self.decerr_r.is_empty() {
+        if !self.err_r.is_empty() {
             fold(now);
+        }
+        // timeout deadlines: the step that ticks a counter past its
+        // threshold is an action — predict it exactly (the shared
+        // completion counter and each ticking reduction entry; the
+        // request deadline folds inside the pending loop below, and the
+        // AR tracker needs no fold — links idle ⇒ no visible front AR)
+        if let Some(cplt) = self.cfg.cpl_timeout {
+            if !self.cpl_legs.is_empty() {
+                fold(now + cplt.saturating_sub(self.cpl_age + 1) as u64);
+            }
+            for e in self.red_entries.iter() {
+                if e.state == RedState::Collecting
+                    && !e.waiters.is_empty()
+                    && (e.waiters.len() as u32) < e.expected
+                {
+                    fold(now + cplt.saturating_sub(e.wait + 1) as u64);
+                }
+            }
         }
         // a ready or streaming combine entry acts on the next step
         // (links idle ⇒ its exit channels are pushable); collecting /
@@ -1527,6 +2156,15 @@ impl Xbar {
             let Some(e) = &self.pending[m] else {
                 continue;
             };
+            // request deadline: a not-fully-forwarded pending fires
+            // (whole-entry DECERR, or stuck-leg eviction for a partial
+            // no-commit fork) on the step that ticks `wait` to the
+            // threshold
+            if let Some(reqt) = self.cfg.req_timeout {
+                if !e.forwarded.iter().all(|&f| f) {
+                    fold(now + reqt.saturating_sub(e.wait + 1) as u64);
+                }
+            }
             let front = self.resv_front(e.pend.beat.ticket);
             if !e.pend.beat.is_mcast {
                 // a unicast pending forwards (or completes) on the next
@@ -1614,6 +2252,12 @@ impl Xbar {
                     }
                 }
             }
+            // request-deadline replay: a not-fully-forwarded pending
+            // ticks `wait` every skipped cycle (the span ends before
+            // the deadline — `next_event` folds it in)
+            if self.cfg.req_timeout.is_some() && !p.forwarded.iter().all(|&f| f) {
+                p.wait = (p.wait as u64 + k).min(u32::MAX as u64) as u32;
+            }
             if !p.pend.beat.is_mcast {
                 continue;
             }
@@ -1637,6 +2281,21 @@ impl Xbar {
             for s in 0..self.cfg.n_slaves {
                 if self.mux[s].grant.is_some() {
                     self.mux[s].grant_wait_cycles += k;
+                }
+            }
+        }
+        // completion-deadline replay (the span ends before either
+        // deadline fires — `next_event` folds both in)
+        if self.cfg.cpl_timeout.is_some() {
+            if !self.cpl_legs.is_empty() {
+                self.cpl_age = (self.cpl_age as u64 + k).min(u32::MAX as u64) as u32;
+            }
+            for e in self.red_entries.iter_mut() {
+                if e.state == RedState::Collecting
+                    && !e.waiters.is_empty()
+                    && (e.waiters.len() as u32) < e.expected
+                {
+                    e.wait = (e.wait as u64 + k).min(u32::MAX as u64) as u32;
                 }
             }
         }

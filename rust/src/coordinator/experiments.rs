@@ -6,7 +6,11 @@ use crate::occamy::{SocConfig, WideShape};
 use crate::util::json::Json;
 use crate::util::stats::{amdahl_parallel_fraction, geomean};
 use crate::util::table::{fnum, Table};
+use crate::axi::mux::ArbPolicy;
 use crate::workloads::collectives::{run_collective, CollMode, CollOp, CollectiveResult};
+use crate::workloads::faults::{
+    run_fault_scenario, run_qos_load, FaultKind, FaultRunResult, QosResult,
+};
 use crate::workloads::matmul::{run_matmul, MatmulMode, MatmulResult, TileExec};
 use crate::workloads::microbench::{run_microbench, McastMode};
 use crate::workloads::roofline::Roofline;
@@ -610,6 +614,129 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
     }
 }
 
+/// The fault-injection experiment: the healthy baseline plus every
+/// [`FaultKind`] run on the same mixed-traffic scenario (concurrent
+/// global multicast + in-network reductions + unicast, one victim
+/// endpoint), with the per-channel deadlines armed. Each row reports
+/// how the fabric unwound the fault: which deadline fired, how many
+/// jobs saw errors, what the unwinding dropped, and that every ledger
+/// drained.
+pub fn faults_experiment(
+    cfg: &SocConfig,
+    kinds: &[FaultKind],
+    victim: usize,
+    bytes: u64,
+) -> (Vec<FaultRunResult>, Table, Json) {
+    let mut rows = vec![run_fault_scenario(cfg, None, victim, bytes)];
+    for &k in kinds {
+        rows.push(run_fault_scenario(cfg, Some(k), victim, bytes));
+    }
+    let mut table = Table::new(&[
+        "scenario",
+        "cycles",
+        "err jobs",
+        "err resps",
+        "req TO",
+        "cpl TO",
+        "red evict",
+        "W dropped",
+        "ledgers",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.kind.map(|k| k.name()).unwrap_or("healthy").to_string(),
+            r.cycles.to_string(),
+            r.errored_jobs().to_string(),
+            r.err_resps.to_string(),
+            r.wide.req_timeouts.to_string(),
+            r.wide.cpl_timeouts.to_string(),
+            r.wide.red_evictions.to_string(),
+            r.wide.w_dropped.to_string(),
+            if r.ledgers_drained() { "drained" } else { "WEDGED" }.to_string(),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("scenario", r.kind.map(|k| k.name()).unwrap_or("healthy"))
+                    .set("victim", r.victim)
+                    .set("clusters", r.clusters)
+                    .set("bytes", r.bytes)
+                    .set("cycles", r.cycles)
+                    .set("errored_jobs", r.errored_jobs())
+                    .set("err_resps", r.err_resps)
+                    .set("req_timeouts", r.wide.req_timeouts)
+                    .set("cpl_timeouts", r.wide.cpl_timeouts)
+                    .set("red_evictions", r.wide.red_evictions)
+                    .set("w_dropped", r.wide.w_dropped)
+                    .set("decerr", r.wide.decerr)
+                    .set("ledgers_drained", r.ledgers_drained());
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
+/// The QoS experiment: the many-to-one serving-load pattern under
+/// round-robin and two priority/aging settings. Smaller `aging` defers
+/// to the hot cluster longer before forcing a background grant.
+pub fn qos_experiment(
+    cfg: &SocConfig,
+    hot: usize,
+    jobs: usize,
+    bytes: u64,
+) -> (Vec<QosResult>, Table, Json) {
+    let policies = [
+        ArbPolicy::RoundRobin,
+        ArbPolicy::Priority { aging: 64 },
+        ArbPolicy::Priority { aging: 16 },
+    ];
+    let rows: Vec<QosResult> = policies
+        .iter()
+        .map(|&p| run_qos_load(cfg, p, hot, jobs, bytes))
+        .collect();
+    let mut table = Table::new(&[
+        "policy",
+        "cycles",
+        "hot done",
+        "rest mean",
+        "rest max",
+        "prio grants",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.policy_name(),
+            r.cycles.to_string(),
+            r.hot_done().to_string(),
+            fnum(r.rest_mean(), 0),
+            r.rest_max().to_string(),
+            r.wide.prio_grants.to_string(),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("policy", r.policy_name())
+                    .set("hot", r.hot)
+                    .set("clusters", r.clusters)
+                    .set("jobs", r.jobs)
+                    .set("bytes", r.bytes)
+                    .set("cycles", r.cycles)
+                    .set("hot_done", r.hot_done())
+                    .set("rest_mean", r.rest_mean())
+                    .set("rest_max", r.rest_max())
+                    .set("prio_grants", r.wide.prio_grants)
+                    .set("done_at", Json::Arr(r.done_at.iter().map(|&d| d.into()).collect()));
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
 /// Default fig. 3b sweep parameters (the paper's ranges).
 pub fn fig3b_default_sizes() -> Vec<u64> {
     vec![1, 2, 4, 8, 16, 32].into_iter().map(|k| k * 1024).collect()
@@ -671,6 +798,28 @@ mod tests {
             .get("broadcast_speedup_geomean")
             .and_then(|v| v.as_f64())
             .is_some());
+    }
+
+    #[test]
+    fn faults_experiment_rows_hold_invariants() {
+        let cfg = SocConfig::tiny(4);
+        let (rows, table, json) = faults_experiment(&cfg, &FaultKind::ALL, 2, 512);
+        assert_eq!(rows.len(), 5); // healthy + 4 fault kinds
+        for r in &rows {
+            crate::workloads::faults::assert_fault_run_invariants(r);
+        }
+        assert!(table.render().contains("cpl TO"));
+        assert_eq!(json.as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn qos_experiment_prefers_the_hot_cluster() {
+        let cfg = SocConfig::tiny(8);
+        let (rows, table, _json) = qos_experiment(&cfg, 3, 3, 1024);
+        assert_eq!(rows.len(), 3); // round-robin + two aging settings
+        crate::workloads::faults::assert_qos_invariants(&rows[0], &rows[1]);
+        crate::workloads::faults::assert_qos_invariants(&rows[0], &rows[2]);
+        assert!(table.render().contains("prio grants"));
     }
 
     #[test]

@@ -9,20 +9,23 @@
 //! occamy-sim microbench --mode hw --clusters 32 --size 32KiB
 //! occamy-sim toposweep [--endpoints 16]  # topology-shape sweep
 //! occamy-sim collectives [--op all] [--shape all] [--mode both]
+//! occamy-sim faults [--kind all] [--victim 1]   # fault-injection recovery
+//! occamy-sim qos [--hot 4] [--jobs 4]           # arbitration under serving load
 //! occamy-sim all [--out results]
 //! ```
 
 use std::process::ExitCode;
 
 use axi_mcast::coordinator::experiments::{
-    collectives, collectives_summary, fig3a, fig3b, fig3b_default_clusters, fig3b_default_sizes,
-    fig3b_summary, fig3c, fig3d_schedule, topo_sweep,
+    collectives, collectives_summary, faults_experiment, fig3a, fig3b, fig3b_default_clusters,
+    fig3b_default_sizes, fig3b_summary, fig3c, fig3d_schedule, qos_experiment, topo_sweep,
 };
 use axi_mcast::coordinator::Report;
 use axi_mcast::occamy::{SocConfig, WideShape};
 use axi_mcast::runtime::{ArtifactDir, PjrtTileExec, Runtime};
 use axi_mcast::util::cli::{render_cmd_help, render_help, Args, CmdSpec};
 use axi_mcast::workloads::collectives::{self as coll, run_collective, CollMode, CollOp};
+use axi_mcast::workloads::faults::FaultKind;
 use axi_mcast::workloads::matmul::{RustTileExec, TileExec};
 use axi_mcast::workloads::microbench::{run_microbench, McastMode};
 
@@ -98,6 +101,30 @@ const CMDS: &[CmdSpec] = &[
                 "both | sw | hw | hw-concurrent | hw-reduce (default both; both also \
                  prints speedups)",
             ),
+            ("out", "results directory"),
+            THREADS_OPT,
+        ],
+    },
+    CmdSpec {
+        name: "faults",
+        about: "fault-injection recovery: timeout unwinding under a faulted endpoint",
+        options: &[
+            ("kind", "all | stall | grant-hang | drop-b | drop-r (default all)"),
+            ("clusters", "cluster count, power of two >= 4 (default 8)"),
+            ("victim", "faulted cluster index (default 1)"),
+            ("size", "bytes per DMA job (default 512)"),
+            ("out", "results directory"),
+            THREADS_OPT,
+        ],
+    },
+    CmdSpec {
+        name: "qos",
+        about: "QoS arbitration under many-to-one serving load (round-robin vs priority)",
+        options: &[
+            ("clusters", "cluster count, power of two >= 4 (default 8)"),
+            ("hot", "elevated-priority sender cluster (default clusters/2)"),
+            ("jobs", "unicast jobs per sender (default 4)"),
+            ("size", "bytes per job (default 2048)"),
             ("out", "results directory"),
             THREADS_OPT,
         ],
@@ -305,11 +332,112 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
     emit(&r)
 }
 
+/// Shared cluster-count validation and config for the robustness
+/// commands (`faults`, `qos`): small SoCs stepped under the same
+/// grouping rule as `collectives`.
+fn robustness_cfg(args: &Args, default_clusters: usize) -> Result<SocConfig, String> {
+    let clusters = args.usize_or("clusters", default_clusters)?;
+    if !clusters.is_power_of_two() || clusters < 4 {
+        return Err(format!(
+            "--clusters must be a power of two >= 4 (multicast sets are mask-form), got {clusters}"
+        ));
+    }
+    let mut cfg = SocConfig {
+        n_clusters: clusters,
+        clusters_per_group: clusters.min(4),
+        ..SocConfig::default()
+    };
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    Ok(cfg)
+}
+
+fn run_faults(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let cfg = robustness_cfg(args, 8)?;
+    let victim = args.usize_or("victim", 1)?;
+    if victim >= cfg.n_clusters {
+        return Err(format!(
+            "--victim {victim} out of range ({} clusters)",
+            cfg.n_clusters
+        ));
+    }
+    let bytes = args.u64_or("size", 512)?;
+    if bytes == 0 || bytes % cfg.wide_bytes as u64 != 0 {
+        return Err(format!(
+            "--size must be a positive multiple of the bus width ({} B), got {bytes}",
+            cfg.wide_bytes
+        ));
+    }
+    // each cluster lands one multicast chunk per rank in a 16 KiB zone
+    if bytes * cfg.n_clusters as u64 > 0x4000 {
+        return Err(format!(
+            "--size {bytes} x {} clusters overflows the 16 KiB landing zone",
+            cfg.n_clusters
+        ));
+    }
+    let kinds: Vec<FaultKind> = match args.get_or("kind", "all") {
+        "all" => FaultKind::ALL.to_vec(),
+        s => vec![FaultKind::parse(s)
+            .ok_or_else(|| format!("unknown --kind '{s}' (all|stall|grant-hang|drop-b|drop-r)"))?],
+    };
+    let (_rows, table, json) = faults_experiment(&cfg, &kinds, victim, bytes);
+    let mut r = Report::new("faults").to_dir(out);
+    r.table(
+        "Fault-injection recovery: per-channel deadlines unwind a faulted endpoint \
+         (healthy baseline first; every run must drain its ledgers)",
+        &table,
+    );
+    r.json("rows", json);
+    emit(&r)
+}
+
+fn run_qos(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let cfg = robustness_cfg(args, 8)?;
+    let hot = args.usize_or("hot", cfg.n_clusters / 2)?;
+    if hot < 1 || hot >= cfg.n_clusters {
+        return Err(format!(
+            "--hot must be a sender cluster (1..{}), got {hot}",
+            cfg.n_clusters
+        ));
+    }
+    let jobs = args.usize_or("jobs", 4)?;
+    if jobs == 0 {
+        return Err("--jobs must be >= 1".to_string());
+    }
+    let bytes = args.u64_or("size", 2048)?;
+    if bytes == 0 || bytes % cfg.wide_bytes as u64 != 0 {
+        return Err(format!(
+            "--size must be a positive multiple of the bus width ({} B), got {bytes}",
+            cfg.wide_bytes
+        ));
+    }
+    // every sender's jobs land in a private slice of cluster 0's L1
+    let footprint = 0x8000 + (cfg.n_clusters - 1) as u64 * jobs as u64 * bytes;
+    if footprint > cfg.l1_bytes {
+        return Err(format!(
+            "--jobs {jobs} x --size {bytes} x {} senders needs {footprint} B of the served \
+             cluster's L1 ({} available)",
+            cfg.n_clusters - 1,
+            cfg.l1_bytes
+        ));
+    }
+    let (_rows, table, json) = qos_experiment(&cfg, hot, jobs, bytes);
+    let mut r = Report::new("qos").to_dir(out);
+    r.table(
+        "QoS arbitration under many-to-one serving load (cluster 0 served; \
+         the hot cluster carries elevated priority under the priority policies)",
+        &table,
+    );
+    r.json("rows", json);
+    emit(&r)
+}
+
 fn run(cmd: &str, args: &Args) -> Result<(), String> {
-    let mut cfg = SocConfig::default();
     // global: every simulating command honours --threads (the default
     // picks up OCCAMY_THREADS; results are bit-identical regardless)
-    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    let cfg = SocConfig {
+        threads: args.usize_or("threads", SocConfig::default().threads)?,
+        ..SocConfig::default()
+    };
     let out = args.get("out");
     match cmd {
         "fig3a" => {
@@ -387,6 +515,12 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         }
         "collectives" => {
             run_collectives(args, out)?;
+        }
+        "faults" => {
+            run_faults(args, out)?;
+        }
+        "qos" => {
+            run_qos(args, out)?;
         }
         "all" => {
             let out = Some(args.get_or("out", "results"));

@@ -97,6 +97,10 @@ pub struct Cluster {
     pub done_at: Option<Cycle>,
     /// DMA tags completed (workload assertions).
     pub dma_done_tags: Vec<u64>,
+    /// Completed DMA tags that carried an error response (SLVERR /
+    /// DECERR — synthesised by the fabric's timeout layer for faulted
+    /// endpoints). The job finished, its data is suspect.
+    pub dma_error_tags: Vec<u64>,
     /// Completed DMA jobs awaiting their functional copy (drained by
     /// the SoC, which owns the memory).
     pub pending_copies: Vec<DmaJob>,
@@ -130,6 +134,7 @@ impl Cluster {
             progress: 0,
             done_at: None,
             dma_done_tags: Vec::new(),
+            dma_error_tags: Vec::new(),
             pending_copies: Vec::new(),
             compute_busy_cycles: 0,
             narrow_bytes: cfg.narrow_bytes,
@@ -197,6 +202,7 @@ impl Cluster {
             self.pending_copies.push(j);
             self.progress += 1;
         }
+        self.dma_error_tags.extend(self.dma.error_tags.drain(..));
         // LSU B collection
         while let Some(_b) = narrow_lsu.b.pop() {
             if self.state == ClState::WaitingB {

@@ -1,7 +1,9 @@
 //! SoC configuration (the paper's reference system as defaults) and the
 //! global address map constants.
 
+use crate::axi::golden::FaultPlan;
 use crate::axi::mcast::AddrSet;
+use crate::axi::mux::ArbPolicy;
 
 /// Base address of cluster 0's window.
 pub const CLUSTER_BASE: u64 = 0x0100_0000;
@@ -50,6 +52,16 @@ impl WideShape {
     }
 }
 
+/// Where a [`FaultPlan`] is installed in the SoC (see
+/// [`SocConfig::faults`]): the endpoint memory model it poisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The wide network's LLC slave.
+    Llc,
+    /// Cluster `i`'s L1 slave port on the wide network.
+    ClusterL1(usize),
+}
+
 /// Full system configuration. `Default` reproduces the paper's
 /// reference system: 32 clusters in 8 groups of 4, 128 KiB L1 per
 /// cluster, 4 MiB LLC, 512-bit wide / 64-bit narrow networks, 1 GHz.
@@ -91,6 +103,46 @@ pub struct SocConfig {
     /// Wide-network topology (the collectives suite sweeps this; the
     /// narrow network always keeps the paper's group/top tree).
     pub wide_shape: WideShape,
+
+    // ---- robustness / QoS (PR 7) ----
+    /// Per-master outstanding-transaction cap of every fabric crossbar
+    /// (leaf levels; the converging root gets
+    /// [`SocConfig::fabric_root_outstanding`]). Unified knob for all
+    /// [`WideShape`]s — [`SocConfig::validate`] rejects `0`.
+    pub fabric_max_outstanding: u32,
+    /// Per-master *same-set multicast* outstanding cap at leaf levels
+    /// (the paper's configurable maximum; root gets
+    /// `dma_mcast_outstanding.max(2) * 2`). Must be `>= 1`.
+    pub fabric_max_mcast_outstanding: u32,
+    /// Outstanding cap at the fabric's converging point — the tree
+    /// root, or every mesh tile (a tile is both leaf and root). Must
+    /// be `>= 1`.
+    pub fabric_root_outstanding: u32,
+    /// Request deadline in cycles: an AW/AR that cannot win a single
+    /// grant within this many cycles of backpressure retires with
+    /// DECERR instead of wedging the fabric (`XbarCfg::req_timeout`).
+    /// `None` (default) = no deadline — bit-identical to the
+    /// pre-robustness fabric.
+    pub req_timeout: Option<u32>,
+    /// Completion deadline in cycles, watched by one shared per-node
+    /// counter: a granted transaction whose B/R never arrives is
+    /// synthesised SLVERR and unwound through the multicast fork/join,
+    /// reservation, and reduction paths (`XbarCfg::cpl_timeout`). Set
+    /// it well above the worst-case *healthy* service time. `None`
+    /// (default) = disarmed.
+    pub cpl_timeout: Option<u32>,
+    /// Fabric arbitration policy (`XbarCfg::arb_policy`): round-robin
+    /// (default, bit-identical) or static priority with aging.
+    pub fabric_arb: ArbPolicy,
+    /// Static QoS priority per *cluster* (higher wins); shorter than
+    /// `n_clusters` pads with 0. Mapped onto crossbar master ports by
+    /// the topology builders — an aggregated upper-level port carries
+    /// the max priority of the endpoints beneath it. Only meaningful
+    /// with `fabric_arb = ArbPolicy::Priority`.
+    pub qos_prio: Vec<u32>,
+    /// Fault injection: install a [`FaultPlan`] at each listed site
+    /// (wide network endpoints). Empty (default) = healthy SoC.
+    pub faults: Vec<(FaultSite, FaultPlan)>,
 
     // ---- DMA parameters ----
     /// Cycles to set up / launch one DMA job (descriptor fetch, cfg).
@@ -167,6 +219,14 @@ impl Default for SocConfig {
             irq_handler_cycles: 120,
             max_burst_beats: 64,
             wide_shape: WideShape::Groups,
+            fabric_max_outstanding: 16,
+            fabric_max_mcast_outstanding: 4,
+            fabric_root_outstanding: 64,
+            req_timeout: None,
+            cpl_timeout: None,
+            fabric_arb: ArbPolicy::RoundRobin,
+            qos_prio: Vec::new(),
+            faults: Vec::new(),
             dma_setup: 8,
             dma_read_outstanding: 4,
             dma_write_outstanding: 4,
@@ -259,6 +319,49 @@ impl SocConfig {
     pub fn resolved_threads(&self) -> usize {
         crate::util::resolve_threads(self.threads)
     }
+
+    /// Reject configurations the fabric cannot honour: zero
+    /// outstanding caps (a cap of 0 can never grant anything — the
+    /// whole SoC would wedge on its first transaction), zero
+    /// timeouts (a deadline of 0 would retire every request the
+    /// cycle it arrives), and fault sites naming clusters that do
+    /// not exist. [`crate::occamy::Soc::try_new`] calls this; the
+    /// panicking `Soc::new` routes through it too.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fabric_max_outstanding == 0 {
+            return Err("fabric_max_outstanding must be >= 1 (a zero cap never grants)".into());
+        }
+        if self.fabric_max_mcast_outstanding == 0 {
+            return Err("fabric_max_mcast_outstanding must be >= 1".into());
+        }
+        if self.fabric_root_outstanding == 0 {
+            return Err("fabric_root_outstanding must be >= 1".into());
+        }
+        if self.req_timeout == Some(0) {
+            return Err("req_timeout of 0 would DECERR every request on arrival; use None to disarm".into());
+        }
+        if self.cpl_timeout == Some(0) {
+            return Err("cpl_timeout of 0 would SLVERR every grant on issue; use None to disarm".into());
+        }
+        if self.qos_prio.len() > self.n_clusters {
+            return Err(format!(
+                "qos_prio has {} entries for {} clusters",
+                self.qos_prio.len(),
+                self.n_clusters
+            ));
+        }
+        for (site, _) in &self.faults {
+            if let FaultSite::ClusterL1(i) = site {
+                if *i >= self.n_clusters {
+                    return Err(format!(
+                        "fault site ClusterL1({i}) out of range: {} clusters",
+                        self.n_clusters
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -308,6 +411,46 @@ mod tests {
     #[should_panic]
     fn misaligned_cluster_set_panics() {
         SocConfig::default().cluster_set(2, 4, 0);
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_rejects_zero_caps() {
+        assert!(SocConfig::default().validate().is_ok());
+        let mut c = SocConfig::tiny(8);
+        c.fabric_max_outstanding = 0;
+        assert!(c.validate().is_err());
+        let mut c = SocConfig::tiny(8);
+        c.fabric_max_mcast_outstanding = 0;
+        assert!(c.validate().is_err());
+        let mut c = SocConfig::tiny(8);
+        c.fabric_root_outstanding = 0;
+        assert!(c.validate().is_err());
+        let mut c = SocConfig::tiny(8);
+        c.req_timeout = Some(0);
+        assert!(c.validate().is_err());
+        let mut c = SocConfig::tiny(8);
+        c.cpl_timeout = Some(0);
+        assert!(c.validate().is_err());
+        let mut c = SocConfig::tiny(8);
+        c.req_timeout = Some(200);
+        c.cpl_timeout = Some(500);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_checks_fault_sites_and_prio_len() {
+        let mut c = SocConfig::tiny(8);
+        c.faults.push((FaultSite::ClusterL1(8), FaultPlan::GrantThenHang));
+        assert!(c.validate().is_err());
+        let mut c = SocConfig::tiny(8);
+        c.faults.push((FaultSite::ClusterL1(7), FaultPlan::GrantThenHang));
+        c.faults.push((FaultSite::Llc, FaultPlan::StallAfter { bursts: 1 }));
+        assert!(c.validate().is_ok());
+        let mut c = SocConfig::tiny(8);
+        c.qos_prio = vec![1; 9];
+        assert!(c.validate().is_err());
+        c.qos_prio = vec![1; 8];
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub struct DmaStats {
     pub busy_cycles: u64,
     pub stall_rx_empty: u64,
     pub stall_tx_backpressure: u64,
+    /// Error responses (SLVERR/DECERR) observed on B or R — with
+    /// fabric timeouts armed, these are the synthesised completions of
+    /// faulted transactions (`XbarCfg::req_timeout` / `cpl_timeout`).
+    pub err_resps: u64,
 }
 
 #[derive(Debug)]
@@ -69,6 +73,8 @@ struct Active {
     b_pending: u32,
     // local-to-local copy timer
     local_left: u64,
+    // any B/R of this job carried SLVERR/DECERR (fault recovery)
+    saw_err: bool,
 }
 
 /// The engine. One per cluster, attached to the cluster's wide master
@@ -85,6 +91,11 @@ pub struct DmaEngine {
     pub queue: VecDeque<DmaJob>,
     active: Option<Active>,
     pub completed: Vec<DmaJob>,
+    /// Tags of completed jobs that saw at least one error response —
+    /// the workload-visible face of fault recovery: the job *finishes*
+    /// (timeouts synthesised its missing completions) but its data is
+    /// not trustworthy.
+    pub error_tags: Vec<u64>,
     pub stats: DmaStats,
 }
 
@@ -102,6 +113,7 @@ impl DmaEngine {
             queue: VecDeque::new(),
             active: None,
             completed: Vec::new(),
+            error_tags: Vec::new(),
             stats: DmaStats::default(),
         }
     }
@@ -168,6 +180,7 @@ impl DmaEngine {
             w_stream: VecDeque::new(),
             b_pending: 0,
             local_left,
+            saw_err: false,
             job,
         });
     }
@@ -195,13 +208,21 @@ impl DmaEngine {
                     a.rx_bytes += beat;
                     a.rx_total += beat;
                     self.stats.read_beats += 1;
+                    if r.resp.is_err() {
+                        a.saw_err = true;
+                        self.stats.err_resps += 1;
+                    }
                     if r.last {
                         a.rd_inflight -= 1;
                     }
                 }
             }
-            while let Some(_b) = link.b.pop() {
+            while let Some(b) = link.b.pop() {
                 a.b_pending -= 1;
+                if b.resp.is_err() {
+                    a.saw_err = true;
+                    self.stats.err_resps += 1;
+                }
             }
         }
 
@@ -218,6 +239,9 @@ impl DmaEngine {
             }
             if a.local_left == 0 {
                 let done = self.active.take().unwrap();
+                if done.saw_err {
+                    self.error_tags.push(done.job.tag);
+                }
                 self.completed.push(done.job);
             }
             return;
@@ -317,6 +341,9 @@ impl DmaEngine {
         };
         if reads_done && rx_done && writes_done {
             let done = self.active.take().unwrap();
+            if done.saw_err {
+                self.error_tags.push(done.job.tag);
+            }
             self.completed.push(done.job);
         }
     }

@@ -139,11 +139,20 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         // the SoC owns its own parallel coordinator (occamy::parallel);
         // carried here only so the knob round-trips through the params
         threads: cfg.threads,
+        // unified per-master outstanding caps (satellite of PR 7): every
+        // shape takes the same SocConfig knobs; the converging point —
+        // tree root / every mesh tile — gets the larger root budget
+        max_outstanding: Some(cfg.fabric_max_outstanding),
+        max_mcast_outstanding: Some(cfg.fabric_max_mcast_outstanding),
+        root_outstanding: Some(cfg.fabric_root_outstanding),
+        root_mcast_outstanding: Some(cfg.dma_mcast_outstanding.max(2) * 2),
+        // robustness / QoS layer: per-channel deadlines and the
+        // arbitration policy reach every node of both networks
+        req_timeout: cfg.req_timeout,
+        cpl_timeout: cfg.cpl_timeout,
+        arb_policy: cfg.fabric_arb,
+        endpoint_prio: cfg.qos_prio.clone(),
     };
-    // outstanding budget of the fabric's converging point (tree root /
-    // every mesh tile — a tile is both leaf and root)
-    let root_outstanding = 64;
-    let root_mcast_outstanding = cfg.dma_mcast_outstanding.max(2) * 2;
 
     if kind == NetKind::Wide {
         if let WideShape::Mesh(tiles) = cfg.wide_shape {
@@ -154,10 +163,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
                 params,
                 services: vec![service],
             };
-            let built = build_mesh(pool, cfg.link_depth, &spec, |xcfg, _tile| {
-                xcfg.max_outstanding = root_outstanding;
-                xcfg.max_mcast_outstanding = root_mcast_outstanding;
-            });
+            let built = build_mesh(pool, cfg.link_depth, &spec, |_, _| {});
             return Network {
                 kind,
                 resv: built.topo.resv,
@@ -199,14 +205,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         services: vec![service],
         n_root_masters,
     };
-    let top_level = spec.arity.len() - 1;
-    let built = build_tree(pool, cfg.link_depth, &spec, |xcfg, level| {
-        if level == top_level {
-            // larger top xbar gets more outstanding room
-            xcfg.max_outstanding = root_outstanding;
-            xcfg.max_mcast_outstanding = root_mcast_outstanding;
-        }
-    });
+    let built = build_tree(pool, cfg.link_depth, &spec, |_, _| {});
     Network {
         kind,
         resv: built.topo.resv,
@@ -295,6 +294,34 @@ mod tests {
         // default stays the RTL-faithful fabric
         let wide_off = build_network(&SocConfig::tiny(8), &mut pool, NetKind::Wide);
         assert!(wide_off.reduce.is_none());
+    }
+
+    #[test]
+    fn fabric_caps_and_deadlines_flow_from_soc_config() {
+        let mut cfg = SocConfig::tiny(8);
+        cfg.fabric_max_outstanding = 6;
+        cfg.fabric_max_mcast_outstanding = 3;
+        cfg.fabric_root_outstanding = 40;
+        cfg.req_timeout = Some(128);
+        cfg.cpl_timeout = Some(512);
+        let mut pool = LinkPool::new();
+        let net = build_network(&cfg, &mut pool, NetKind::Wide);
+        for (i, x) in net.xbars.iter().enumerate() {
+            let top = i == net.xbars.len() - 1;
+            assert_eq!(x.cfg.max_outstanding, if top { 40 } else { 6 });
+            // root mcast budget keeps the dma-derived formula
+            assert_eq!(x.cfg.max_mcast_outstanding, if top { 4 } else { 3 });
+            assert_eq!(x.cfg.req_timeout, Some(128));
+            assert_eq!(x.cfg.cpl_timeout, Some(512));
+        }
+        // defaults reproduce the historical fabric budgets exactly
+        let net = build_network(&SocConfig::tiny(8), &mut pool, NetKind::Wide);
+        assert_eq!(net.xbars[0].cfg.max_outstanding, 16);
+        assert_eq!(net.xbars[0].cfg.max_mcast_outstanding, 4);
+        assert_eq!(net.top().cfg.max_outstanding, 64);
+        assert_eq!(net.top().cfg.max_mcast_outstanding, 4);
+        assert!(net.top().cfg.req_timeout.is_none());
+        assert!(net.top().cfg.master_prio.is_empty());
     }
 
     #[test]

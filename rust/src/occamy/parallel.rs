@@ -508,6 +508,8 @@ impl Soc {
         let pools: Vec<LinkPool> = shards.into_iter().map(|sh| sh.pool).collect();
         self.pool = merge_pools(pools, &homes);
         self.sched = master_sched;
-        res
+        // the Soc is whole again: a watchdog error can carry the full
+        // post-mortem, identical to the sequential engine's
+        res.map_err(|e| self.attach_report(e))
     }
 }

@@ -7,13 +7,14 @@
 //! links each component touches.
 
 use super::cluster::{Cluster, Cmd, ComputeEvent};
-use super::config::SocConfig;
+use super::config::{FaultSite, SocConfig};
 use super::mem::SocMem;
 use super::noc::{build_network, NetKind, Network};
 use super::sync::BarrierUnit;
 use crate::axi::golden::SimSlave;
+use crate::axi::resv::ResvNode;
 use crate::axi::types::LinkPool;
-use crate::sim::engine::{Engine, SimError, StepResult, Watchdog};
+use crate::sim::engine::{DeadlockReport, Engine, SimError, StepResult, Watchdog};
 use crate::sim::sched::Scheduler;
 use crate::sim::Cycle;
 
@@ -57,18 +58,36 @@ pub struct Soc {
 
 impl Soc {
     pub fn new(cfg: SocConfig) -> Soc {
+        Soc::try_new(cfg).expect("invalid SocConfig")
+    }
+
+    /// Fallible construction: [`SocConfig::validate`] rejects
+    /// configurations the fabric cannot honour (zero outstanding caps,
+    /// zero deadlines, fault sites on clusters that do not exist)
+    /// instead of building a system that wedges on its first
+    /// transaction.
+    pub fn try_new(cfg: SocConfig) -> Result<Soc, String> {
+        cfg.validate()?;
         let mut pool = LinkPool::new();
         let wide = build_network(&cfg, &mut pool, NetKind::Wide);
         let narrow = build_network(&cfg, &mut pool, NetKind::Narrow);
-        let clusters = (0..cfg.n_clusters).map(|i| Cluster::new(i, &cfg)).collect();
+        let mut clusters: Vec<Cluster> =
+            (0..cfg.n_clusters).map(|i| Cluster::new(i, &cfg)).collect();
         let mut llc = SimSlave::new(usize::MAX);
         llc.b_lat = cfg.llc_lat;
         llc.r_lat = cfg.llc_lat;
         llc.r_gap = cfg.llc_burst_gap;
+        // fault injection: install each plan at its endpoint model
+        for (site, plan) in &cfg.faults {
+            match site {
+                FaultSite::Llc => llc.fault = *plan,
+                FaultSite::ClusterL1(i) => clusters[*i].l1_port.fault = *plan,
+            }
+        }
         let barrier = BarrierUnit::new(&cfg);
         let mem = SocMem::new(&cfg);
         let sched = Scheduler::new(pool.len());
-        Soc {
+        Ok(Soc {
             cfg,
             pool,
             wide,
@@ -81,7 +100,7 @@ impl Soc {
             sched,
             event_buf: Vec::new(),
             skipped_cycles: 0,
-        }
+        })
     }
 
     /// Load per-cluster programs (one `Vec<Cmd>` per cluster; empty for
@@ -273,6 +292,70 @@ impl Soc {
         k
     }
 
+    /// Post-mortem for the deadlock watchdog: every component still
+    /// holding an obligation when progress stopped, plus the fabric
+    /// ledgers' undrained state — enough to tell a genuine protocol
+    /// wedge from a faulted endpoint that timeouts would have freed.
+    pub fn deadlock_report(&self) -> DeadlockReport {
+        let mut r = DeadlockReport::default();
+        for (i, c) in self.clusters.iter().enumerate() {
+            if !c.done() {
+                r.busy
+                    .push((format!("cluster{i}"), format!("progress={}", c.progress)));
+            }
+        }
+        for (net, name) in [(&self.wide, "wide"), (&self.narrow, "narrow")] {
+            for x in &net.xbars {
+                if x.busy() {
+                    r.busy.push((
+                        format!("{name}:{}", x.cfg.name),
+                        format!(
+                            "cpl_legs={} reductions={} zombies={}",
+                            x.open_cpl_legs(),
+                            x.open_reductions(),
+                            x.zombie_count()
+                        ),
+                    ));
+                }
+                r.open_reductions += x.open_reductions();
+                r.open_cpl_legs += x.open_cpl_legs();
+            }
+            if let Some(h) = &net.resv {
+                let l = h.lock().unwrap();
+                r.resv_live_tickets += l.live_tickets();
+                r.resv_queued_claims += (0..l.n_nodes())
+                    .map(|n| l.queue_len(ResvNode(n)))
+                    .sum::<usize>();
+            }
+        }
+        if !self.llc.idle() {
+            r.busy.push(("llc".into(), "in flight".into()));
+        }
+        if self.barrier.busy() {
+            r.busy.push(("barrier".into(), "in flight".into()));
+        }
+        r
+    }
+
+    /// Attach the post-mortem to a fresh watchdog error (no-op for
+    /// other errors or an already-filled report).
+    pub(super) fn attach_report(&self, e: SimError) -> SimError {
+        match e {
+            SimError::Deadlock {
+                cycle,
+                stalled,
+                progress,
+                report: None,
+            } => SimError::Deadlock {
+                cycle,
+                stalled,
+                progress,
+                report: Some(Box::new(self.deadlock_report())),
+            },
+            other => other,
+        }
+    }
+
     /// Observable progress (for the deadlock watchdog).
     pub fn progress(&self) -> u64 {
         let links = self.pool.moved_total();
@@ -347,7 +430,7 @@ impl Soc {
                 }
             }
         });
-        res
+        res.map_err(|e| self.attach_report(e))
     }
 
     /// Convenience: run with default watchdog.

@@ -40,13 +40,56 @@ impl Default for Watchdog {
     }
 }
 
+/// Post-mortem snapshot attached to a [`SimError::Deadlock`] by the
+/// *stepped system* (the generic engine only owns the clock, so it
+/// reports `None`; `occamy::Soc` fills this in before surfacing the
+/// error). Everything here is an undrained obligation — the usual
+/// wedge culprits, listed so a deadlock is diagnosable from the error
+/// alone.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DeadlockReport {
+    /// Every component still busy at the stall: `(name, detail)` —
+    /// e.g. its progress counter, or its undrained queue depths.
+    pub busy: Vec<(String, String)>,
+    /// Reservation tickets still live in the fabric ledger(s).
+    pub resv_live_tickets: usize,
+    /// Undrained per-node reservation claim-queue entries.
+    pub resv_queued_claims: usize,
+    /// Combine-table joins still open across all crossbars.
+    pub open_reductions: usize,
+    /// Completion-scoreboard legs still awaiting a B/R (only populated
+    /// with `cpl_timeout` armed).
+    pub open_cpl_legs: usize,
+}
+
+impl std::fmt::Display for DeadlockReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "  resv: {} live tickets, {} queued claims; reductions open: {}; \
+             completion legs open: {}",
+            self.resv_live_tickets,
+            self.resv_queued_claims,
+            self.open_reductions,
+            self.open_cpl_legs
+        )?;
+        for (name, detail) in &self.busy {
+            writeln!(f, "  busy: {name} ({detail})")?;
+        }
+        Ok(())
+    }
+}
+
 /// Error raised when the watchdog fires.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SimError {
     Deadlock {
         cycle: Cycle,
         stalled: u64,
         progress: u64,
+        /// Filled in by the stepped system (see [`DeadlockReport`]);
+        /// `None` straight out of the engine.
+        report: Option<Box<DeadlockReport>>,
     },
     CycleLimit { max: u64 },
 }
@@ -58,11 +101,18 @@ impl std::fmt::Display for SimError {
                 cycle,
                 stalled,
                 progress,
-            } => write!(
-                f,
-                "deadlock: no progress for {stalled} cycles at cycle {cycle} \
-                 (progress counter {progress})"
-            ),
+                report,
+            } => {
+                write!(
+                    f,
+                    "deadlock: no progress for {stalled} cycles at cycle {cycle} \
+                     (progress counter {progress})"
+                )?;
+                if let Some(r) = report {
+                    write!(f, "\n{r}")?;
+                }
+                Ok(())
+            }
             SimError::CycleLimit { max } => write!(f, "cycle limit exceeded ({max} cycles)"),
         }
     }
@@ -139,6 +189,7 @@ impl Engine {
                 cycle: self.now,
                 stalled: *stall_ticks,
                 progress,
+                report: None,
             });
         }
         Ok(())
@@ -246,6 +297,27 @@ mod tests {
             }
             other => panic!("wrong error: {other}"),
         }
+    }
+
+    #[test]
+    fn deadlock_report_renders_in_display() {
+        let err = SimError::Deadlock {
+            cycle: 10,
+            stalled: 5,
+            progress: 0,
+            report: Some(Box::new(DeadlockReport {
+                busy: vec![("cluster0".into(), "progress=3".into())],
+                resv_live_tickets: 2,
+                resv_queued_claims: 4,
+                open_reductions: 1,
+                open_cpl_legs: 6,
+            })),
+        };
+        let s = err.to_string();
+        assert!(s.contains("no progress for 5 cycles"));
+        assert!(s.contains("2 live tickets"));
+        assert!(s.contains("4 queued claims"));
+        assert!(s.contains("busy: cluster0 (progress=3)"));
     }
 
     #[test]

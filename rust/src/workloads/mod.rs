@@ -14,14 +14,20 @@
 //!   binomial baselines vs multicast-accelerated schedules, with
 //!   bit-exact reduction validation (the fabric's first converging
 //!   N-to-1 traffic).
+//! * [`faults`] — robustness suites: fault-injected slaves (stall /
+//!   grant-then-hang / dropped completion beats) recovered through the
+//!   per-channel timeout engine, and the QoS serving-load scenario that
+//!   measures priority-vs-round-robin arbitration under contention.
 
 pub mod collectives;
+pub mod faults;
 pub mod matmul;
 pub mod microbench;
 pub mod roofline;
 pub mod topo_sweep;
 
 pub use collectives::{run_collective, CollMode, CollOp, CollectiveResult};
+pub use faults::{run_fault_scenario, run_qos_load, FaultKind, FaultRunResult, QosResult};
 pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
 pub use microbench::{run_microbench, McastMode, MicrobenchResult};
 pub use topo_sweep::{

@@ -1,6 +1,9 @@
 //! Shared integration-test harness: scripted AXI masters, golden
 //! slaves, and a run loop with the deadlock watchdog.
 
+// Compiled once per test binary; no single binary uses every helper.
+#![allow(dead_code)]
+
 use std::collections::{HashMap, VecDeque};
 
 use axi_mcast::axi::golden::SimSlave;

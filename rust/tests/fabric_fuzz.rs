@@ -391,6 +391,143 @@ fn fabric_reduce_changes_beats_not_memory() {
     }
 }
 
+/// Per-channel deadlines armed on a healthy fabric must be
+/// bit-identical to the unarmed fabric: the timeout machinery only
+/// *observes* until a deadline actually fires, so cycles, memory and
+/// every statistic (including the zeroed timeout counters) match.
+#[test]
+fn armed_but_unfired_timeouts_are_bit_identical() {
+    let w = gen_workload(0xA7ED, true, true);
+    for shape in [WideShape::Groups, WideShape::Flat] {
+        let plain = run(&shape, &w, false, true, true);
+        let armed = {
+            let mut cfg = SocConfig::tiny(N);
+            cfg.wide_shape = shape.clone();
+            cfg.e2e_mcast_order = true;
+            cfg.fabric_reduce = true;
+            cfg.req_timeout = Some(5_000);
+            cfg.cpl_timeout = Some(2_000);
+            run_cfg(cfg, &w)
+        };
+        let ctx = format!("{} armed-vs-off", shape.label());
+        assert_eq!(armed.out.cycles, plain.cycles, "{ctx}: cycle divergence");
+        assert_eq!(armed.out.l1, plain.l1, "{ctx}: memory divergence");
+        assert_eq!(armed.out.wide, plain.wide, "{ctx}: stats divergence");
+        assert_eq!(armed.out.wide.req_timeouts, 0, "{ctx}");
+        assert_eq!(armed.out.wide.cpl_timeouts, 0, "{ctx}");
+    }
+}
+
+struct FaultedOut {
+    out: RunOut,
+    open_cpl_legs: usize,
+    open_reductions: usize,
+    resv_live: usize,
+}
+
+/// Run a prepared config (fault plans and deadlines already set) over a
+/// workload, asserting completion and returning the drained-state
+/// snapshot alongside the usual outputs.
+fn run_cfg(cfg: SocConfig, w: &Workload) -> FaultedOut {
+    let mut soc = Soc::new(cfg.clone());
+    seed_mem(&mut soc.mem);
+    for (g, op, members, dst) in &w.groups {
+        soc.open_reduce_group(*g, *op, members, *dst);
+    }
+    soc.load_programs(programs(w));
+    soc.run_default(&mut NopCompute)
+        .unwrap_or_else(|e| panic!("faulted fuzz run must recover, got: {e}"));
+    let report = soc.deadlock_report();
+    FaultedOut {
+        out: RunOut {
+            cycles: soc.cycles,
+            wide: soc.wide.stats_sum(),
+            l1: soc.mem.l1.clone(),
+        },
+        open_cpl_legs: report.open_cpl_legs,
+        open_reductions: report.open_reductions,
+        resv_live: report.resv_live_tickets,
+    }
+}
+
+/// Fault-injecting differential cells: every `FaultKind` on a random
+/// victim's L1 port under the full feature stack (global multicasts +
+/// e2e ordering + in-network reduction) with deadlines armed. Each
+/// cell must (1) run to completion without the watchdog, (2) drain
+/// every fabric ledger, (3) satisfy the extended fork/join accounting
+/// `w_beats_out == w_beats_in + w_fork_extra − red_beats_saved −
+/// w_dropped`, and (4) hold opt-vs-naive *and* sequential-vs-threaded
+/// bit parity — the timeout engine replays exactly under the event
+/// horizon and the parallel stepper.
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn faulted_cells_recover_with_engine_parity() {
+    use axi_mcast::workloads::faults::FaultKind;
+    use axi_mcast::occamy::config::FaultSite;
+
+    for (i, kind) in FaultKind::ALL.iter().enumerate() {
+        let seed = 0xFA17 + i as u64;
+        let mut w = gen_workload(seed, true, true);
+        let mut rng = Pcg::new(seed ^ 0xBAD);
+        let victim = rng.below(N as u64) as usize;
+        // pin victim-touching traffic so every kind deterministically
+        // bites: a global multicast (first B at the victim — Stall,
+        // GrantHang, DropB) and a read of the victim's L1 (first R
+        // burst — DropR), issued by a healthy neighbour
+        let nb = (victim + 1) % N;
+        w.jobs[nb].push(Job::Copy {
+            src: l1(nb, SRC_OFF),
+            dst: AddrSet::new(
+                l1(0, MC_OFF + nb as u64 * SLOT),
+                (N as u64 - 1) * CLUSTER_STRIDE,
+            ),
+            bytes: 64,
+        });
+        w.jobs[nb].push(Job::Read {
+            src: l1(victim, SRC_OFF),
+            dst: l1(nb, RD_OFF + nb as u64 * SLOT),
+            bytes: 64,
+        });
+        let mk_cfg = |naive: bool, threads: usize| {
+            let mut cfg = SocConfig::tiny(N);
+            cfg.e2e_mcast_order = true;
+            cfg.fabric_reduce = true;
+            cfg.req_timeout = Some(5_000);
+            cfg.cpl_timeout = Some(2_000);
+            cfg.faults = vec![(FaultSite::ClusterL1(victim), kind.plan())];
+            cfg.force_naive = naive;
+            cfg.threads = threads;
+            cfg
+        };
+        let ctx = format!("kind {} victim {victim}", kind.name());
+        let opt = run_cfg(mk_cfg(false, 1), &w);
+        let naive = run_cfg(mk_cfg(true, 1), &w);
+        let par = run_cfg(mk_cfg(false, 2), &w);
+
+        for (r, eng) in [(&opt, "opt"), (&naive, "naive"), (&par, "par")] {
+            assert_eq!(r.open_cpl_legs, 0, "{ctx} {eng}: undrained cpl legs");
+            assert_eq!(r.open_reductions, 0, "{ctx} {eng}: undrained reductions");
+            assert_eq!(r.resv_live, 0, "{ctx} {eng}: leaked resv tickets");
+            let s = &r.out.wide;
+            assert_eq!(
+                s.w_beats_out,
+                s.w_beats_in + s.w_fork_extra - s.red_beats_saved - s.w_dropped,
+                "{ctx} {eng}: faulted fork/join accounting broken: {s:?}"
+            );
+            assert!(
+                s.req_timeouts + s.cpl_timeouts > 0,
+                "{ctx} {eng}: the injected fault must trip at least one deadline"
+            );
+        }
+        assert_eq!(opt.out.cycles, naive.out.cycles, "{ctx}: opt/naive cycle parity");
+        assert_eq!(opt.out.wide, naive.out.wide, "{ctx}: opt/naive stats parity");
+        assert_eq!(opt.out.l1, naive.out.l1, "{ctx}: opt/naive memory parity");
+        assert_eq!(opt.out.cycles, par.out.cycles, "{ctx}: thread cycle parity");
+        assert_eq!(opt.out.wide, par.out.wide, "{ctx}: thread stats parity");
+        assert_eq!(opt.out.l1, par.out.l1, "{ctx}: thread memory parity");
+    }
+}
+
 /// The ISSUE invariant on reduce-only traffic (no multicast forks to
 /// mask the saving): `red_beats_saved > 0 ⇒ w_beats_out < w_beats_in`.
 #[test]

@@ -1,0 +1,336 @@
+//! Integration tests: the fault-tolerance layer (DESIGN.md §9).
+//!
+//! Deterministic single-xbar unwind paths — a multicast fork leg that
+//! times out mid-stream, a request stuck behind a dead slave's
+//! backed-up channels, a partially-forwarded no-commit fork, a read
+//! whose R burst never arrives — plus SoC-level recovery: a reduction
+//! contributor that never shows up, a dying LLC, the full
+//! mixed-traffic acceptance scenario, and the watchdog post-mortem
+//! when the deadlines are left unarmed.
+
+mod common;
+
+use axi_mcast::axi::golden::FaultPlan;
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::reduce::ReduceOp;
+use axi_mcast::axi::types::Resp;
+use axi_mcast::axi::xbar::{Xbar, XbarCfg};
+use axi_mcast::occamy::config::{FaultSite, LLC_BASE};
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use axi_mcast::sim::engine::{SimError, Watchdog};
+use axi_mcast::workloads::faults::{
+    assert_fault_run_invariants, run_fault_scenario, FaultKind, TAG_RED_V,
+};
+use common::*;
+
+/// A single-xbar fixture with both deadlines armed.
+fn timed_fixture(
+    n_m: usize,
+    n_s: usize,
+    reqt: u32,
+    cplt: u32,
+    commit: bool,
+    scripts: Vec<Vec<Xfer>>,
+) -> Fixture {
+    let mut cfg = XbarCfg::new("t", n_m, n_s, cluster_map(n_s, false));
+    cfg.req_timeout = Some(reqt);
+    cfg.cpl_timeout = Some(cplt);
+    cfg.commit_protocol = commit;
+    let (xbar, pool) = Xbar::with_pool(cfg, 2);
+    Fixture::new(xbar, pool, scripts)
+}
+
+#[test]
+fn hung_fork_leg_times_out_and_join_merges_slverr() {
+    // 1 master multicasts an 8-beat burst to 4 slaves; slave 2 accepts
+    // the AW handshake and then hangs. Its W FIFO backs up, stalling
+    // the fork for everyone — the completion deadline must evict the
+    // hung leg so the healthy legs finish, and the B join must carry
+    // the SLVERR of the synthesised leg response.
+    let mut f = timed_fixture(
+        1,
+        4,
+        10_000,
+        60,
+        true,
+        vec![vec![Xfer::write(clusters_set(4, 0x100), 8, 0)]],
+    );
+    f.slaves[2].fault = FaultPlan::GrantThenHang;
+    f.run(10_000).expect("timeout engine must complete the run");
+    assert_eq!(f.masters[0].completed_b.len(), 1);
+    assert_eq!(f.masters[0].completed_b[0].1, Resp::SlvErr);
+    for i in [0usize, 1, 3] {
+        assert_eq!(f.slaves[i].writes.len(), 1, "healthy slave {i}");
+        assert_eq!(f.slaves[i].writes[0].beats, 8);
+    }
+    assert!(f.slaves[2].writes.is_empty(), "hung slave completed a burst");
+    assert_eq!(f.xbar.stats.cpl_timeouts, 1);
+    assert_eq!(f.xbar.stats.req_timeouts, 0);
+    // the beats the evicted leg never streamed are accounted as dropped
+    assert!(f.xbar.stats.w_dropped > 0);
+    assert_eq!(
+        f.xbar.stats.w_beats_out,
+        f.xbar.stats.w_beats_in + f.xbar.stats.w_fork_extra - f.xbar.stats.w_dropped
+    );
+}
+
+#[test]
+fn request_stuck_behind_dead_slave_retires_decerr() {
+    // Slave 0 is dead from reset: two unicasts fill its AW FIFO
+    // (depth 2) and then a multicast including it can never commit.
+    // The request deadline must retire the whole multicast DECERR (no
+    // leg ever forked) and the completion deadline must SLVERR the two
+    // forwarded-but-unacknowledged unicasts.
+    let script = vec![
+        Xfer::write(AddrSet::unicast(cluster_addr(0, 0)), 1, 0),
+        Xfer::write(AddrSet::unicast(cluster_addr(0, 0x40)), 1, 1),
+        Xfer::write(clusters_set(4, 0x100), 2, 2),
+    ];
+    let mut f = timed_fixture(1, 4, 200, 40, true, vec![script]);
+    f.slaves[0].fault = FaultPlan::StallAfter { bursts: 0 };
+    f.run(10_000).expect("timeout engine must complete the run");
+    assert_eq!(f.masters[0].completed_b.len(), 3);
+    let resp_of = |i: usize| {
+        let txn = f.masters[0].issued[i].0;
+        f.masters[0]
+            .completed_b
+            .iter()
+            .find(|(t, _)| *t == txn)
+            .expect("missing B")
+            .1
+    };
+    assert_eq!(resp_of(0), Resp::SlvErr, "forwarded unicast 0");
+    assert_eq!(resp_of(1), Resp::SlvErr, "forwarded unicast 1");
+    assert_eq!(resp_of(2), Resp::DecErr, "never-forked multicast");
+    assert_eq!(f.xbar.stats.req_timeouts, 1);
+    assert_eq!(f.xbar.stats.cpl_timeouts, 2);
+    // the multicast never touched the healthy slaves
+    for i in 1..4 {
+        assert!(f.slaves[i].writes.is_empty(), "slave {i}");
+    }
+}
+
+#[test]
+fn partial_no_commit_fork_evicts_stuck_legs() {
+    // commit_protocol = false: the fork proceeds leg by leg, so a dead
+    // slave leaves the entry *partially* forwarded — a state the
+    // all-or-nothing commit can never reach. The request deadline must
+    // evict the unforwarded leg (poisoning the join), let the
+    // forwarded legs accept, and keep the fabric live.
+    let script = vec![
+        Xfer::write(AddrSet::unicast(cluster_addr(2, 0)), 1, 0),
+        Xfer::write(AddrSet::unicast(cluster_addr(2, 0x40)), 1, 1),
+        Xfer::write(clusters_set(4, 0x100), 4, 2),
+    ];
+    let mut f = timed_fixture(1, 4, 200, 40, false, vec![script]);
+    f.slaves[2].fault = FaultPlan::StallAfter { bursts: 0 };
+    f.run(10_000).expect("partial-fork eviction must complete the run");
+    assert_eq!(f.masters[0].completed_b.len(), 3);
+    let mcast_txn = f.masters[0].issued[2].0;
+    let mcast_b = f.masters[0]
+        .completed_b
+        .iter()
+        .find(|(t, _)| *t == mcast_txn)
+        .unwrap()
+        .1;
+    // DECERR folded into the join demotes to SLVERR (any error mix)
+    assert_eq!(mcast_b, Resp::SlvErr);
+    assert!(f.xbar.stats.req_timeouts >= 1, "no request deadline fired");
+    // the forwarded legs delivered the burst despite the dead sibling
+    for i in [0usize, 1, 3] {
+        assert_eq!(
+            f.slaves[i]
+                .writes
+                .iter()
+                .filter(|w| w.txn == mcast_txn)
+                .count(),
+            1,
+            "slave {i} must receive the multicast burst"
+        );
+    }
+    assert!(f.slaves[2].writes.is_empty());
+}
+
+#[test]
+fn read_from_dead_slave_synthesises_full_slverr_burst() {
+    let mut f = timed_fixture(
+        1,
+        2,
+        10_000,
+        50,
+        true,
+        vec![vec![Xfer::read(cluster_addr(1, 0), 4, 0)]],
+    );
+    f.slaves[1].fault = FaultPlan::StallAfter { bursts: 0 };
+    f.run(10_000).expect("read timeout must complete the run");
+    // exactly the requested beat count, all SLVERR, RLAST terminated
+    assert_eq!(f.masters[0].completed_r.len(), 1);
+    let (_, resp, beats) = f.masters[0].completed_r[0];
+    assert_eq!(resp, Resp::SlvErr);
+    assert_eq!(beats, 4);
+    assert_eq!(f.xbar.stats.cpl_timeouts, 1);
+}
+
+#[test]
+fn missing_reduction_contributor_is_evicted_and_group_completes() {
+    // All four clusters are members of the reduce group, but cluster 3
+    // never issues its contribution. The collecting-state deadline
+    // must evict it so the combined burst still issues, with the
+    // poisoned B fanned back to the contributors that did show up.
+    let mut cfg = SocConfig::tiny(4);
+    cfg.wide_mcast = true;
+    cfg.e2e_mcast_order = true;
+    cfg.fabric_reduce = true;
+    cfg.req_timeout = Some(5_000);
+    cfg.cpl_timeout = Some(1_000);
+    let mut soc = Soc::new(cfg.clone());
+    soc.open_reduce_group(0, ReduceOp::Sum, &[0, 1, 2, 3], cfg.cluster_base(0) + 0x8000);
+    let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); 4];
+    for (r, p) in progs.iter_mut().enumerate().take(3) {
+        p.push(Cmd::DmaReduce {
+            src: cfg.cluster_base(r),
+            dst: cfg.cluster_base(0) + 0x8000,
+            bytes: 512,
+            tag: TAG_RED_V + r as u64,
+            group: 0,
+            op: ReduceOp::Sum,
+        });
+        p.push(Cmd::WaitDma);
+    }
+    soc.load_programs(progs);
+    soc.run(
+        &mut NopCompute,
+        Watchdog {
+            stall_cycles: 50_000,
+            max_cycles: 10_000_000,
+        },
+    )
+    .expect("evicted contributor must not wedge the group");
+    let stats = soc.wide.stats_sum();
+    assert!(stats.red_evictions >= 1, "missing contributor not evicted");
+    assert!(stats.cpl_timeouts >= 1);
+    // the fabric contributors that did arrive see the poisoned B
+    for r in 1..3 {
+        assert!(
+            soc.clusters[r].dma_error_tags.contains(&(TAG_RED_V + r as u64)),
+            "cluster {r} must observe the poisoned reduction B"
+        );
+    }
+    // nothing is left open
+    let report = soc.deadlock_report();
+    assert_eq!(report.open_reductions, 0);
+    assert_eq!(report.open_cpl_legs, 0);
+    assert_eq!(report.resv_live_tickets, 0);
+}
+
+#[test]
+fn llc_dying_mid_run_errors_only_the_late_jobs() {
+    // The LLC dies after serving one write burst (its B is swallowed):
+    // every LLC job errors — the first via its swallowed B, the queued
+    // write via the request path, the read via the synthesised R burst
+    // — while a cluster-to-cluster job stays clean.
+    let cfg = {
+        let mut c = SocConfig::tiny(4);
+        c.req_timeout = Some(5_000);
+        c.cpl_timeout = Some(1_000);
+        c.faults = vec![(FaultSite::Llc, FaultPlan::StallAfter { bursts: 1 })];
+        c
+    };
+    let mut soc = Soc::new(cfg.clone());
+    let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); 4];
+    progs[0] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: AddrSet::unicast(LLC_BASE),
+            bytes: 512,
+            tag: 1,
+        },
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: AddrSet::unicast(LLC_BASE + 0x1000),
+            bytes: 512,
+            tag: 2,
+        },
+        Cmd::Dma {
+            src: LLC_BASE,
+            dst: AddrSet::unicast(cfg.cluster_base(0) + 0x4000),
+            bytes: 512,
+            tag: 3,
+        },
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: AddrSet::unicast(cfg.cluster_base(1) + 0x4000),
+            bytes: 512,
+            tag: 4,
+        },
+        Cmd::WaitDma,
+    ];
+    soc.load_programs(progs);
+    soc.run(
+        &mut NopCompute,
+        Watchdog {
+            stall_cycles: 50_000,
+            max_cycles: 10_000_000,
+        },
+    )
+    .expect("LLC fault must not wedge the run");
+    let mut tags = soc.clusters[0].dma_error_tags.clone();
+    tags.sort_unstable();
+    assert_eq!(tags, vec![1, 2, 3], "exactly the LLC jobs must error");
+    assert!(soc.wide.stats_sum().cpl_timeouts >= 1);
+}
+
+#[test]
+fn acceptance_mixed_traffic_recovers_across_two_groups() {
+    // The headline acceptance scenario at 8 clusters / 2 groups: a
+    // stalled endpoint under concurrent global multicast, two
+    // in-network reductions and unicast cross-traffic. Errors must hit
+    // exactly the victim-touching transactions (including the SLVERR
+    // fan-back through the cross-group combine chain) and every fabric
+    // ledger must drain.
+    let r = run_fault_scenario(&SocConfig::tiny(8), Some(FaultKind::Stall), 5, 512);
+    assert_fault_run_invariants(&r);
+    assert_eq!(r.error_tags, r.expected_tags);
+    assert!(r.wide.cpl_timeouts > 0);
+}
+
+#[test]
+fn unarmed_timeouts_wedge_with_diagnosable_report() {
+    // Same fault, deadlines off: the watchdog must fire and the
+    // post-mortem must name the undrained state.
+    let mut cfg = SocConfig::tiny(4);
+    cfg.faults = vec![(FaultSite::ClusterL1(1), FaultPlan::GrantThenHang)];
+    let mut soc = Soc::new(cfg.clone());
+    let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); 4];
+    progs[0] = vec![
+        Cmd::Dma {
+            src: cfg.cluster_base(0),
+            dst: AddrSet::unicast(cfg.cluster_base(1) + 0x4000),
+            bytes: 512,
+            tag: 1,
+        },
+        Cmd::WaitDma,
+    ];
+    soc.load_programs(progs);
+    let err = soc
+        .run(
+            &mut NopCompute,
+            Watchdog {
+                stall_cycles: 2_000,
+                max_cycles: 10_000_000,
+            },
+        )
+        .expect_err("a hung endpoint without deadlines must deadlock");
+    match err {
+        SimError::Deadlock { report, .. } => {
+            let report = report.expect("Soc must attach a post-mortem");
+            assert!(
+                !report.busy.is_empty(),
+                "report must name the wedged components"
+            );
+            let text = format!("{report}");
+            assert!(text.contains("busy:"), "unexpected report shape: {text}");
+        }
+        other => panic!("expected a deadlock, got {other}"),
+    }
+}
