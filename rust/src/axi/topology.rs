@@ -31,6 +31,7 @@ use super::reduce::{RedNode, ReduceHandle, ReduceLedger};
 use super::resv::{ResvHandle, ResvLedger, ResvNode};
 use super::types::{AxiLink, LinkId, LinkPool};
 use super::xbar::{Xbar, XbarCfg, XbarStats};
+use crate::sim::link::D2dParams;
 use crate::sim::sched::Scheduler;
 use crate::sim::Cycle;
 
@@ -57,6 +58,9 @@ pub struct TopologyBuilder<'p> {
     /// the reservation ledger so its traversal oracle walks the same
     /// graph the beats do.
     edges: Vec<(NodeId, usize, NodeId)>,
+    /// Links allocated by [`TopologyBuilder::connect_d2d`] — the
+    /// die-to-die hops of a chiplet package.
+    d2d_links: Vec<LinkId>,
 }
 
 impl<'p> TopologyBuilder<'p> {
@@ -69,6 +73,7 @@ impl<'p> TopologyBuilder<'p> {
             ext_m: Vec::new(),
             ext_s: Vec::new(),
             edges: Vec::new(),
+            d2d_links: Vec::new(),
         }
     }
 
@@ -116,6 +121,33 @@ impl<'p> TopologyBuilder<'p> {
         self.bind_s(from, s_port, l);
         self.bind_m(to, m_port, l);
         self.edges.push((from, s_port, to));
+        l
+    }
+
+    /// Wire `from`'s slave port into `to`'s master port with a
+    /// die-to-die link ([`AxiLink::d2d`]): the channels carry the
+    /// SerDes pipeline latency and the data channels serialize at the
+    /// width-conversion rate. The edge is recorded exactly like
+    /// [`TopologyBuilder::connect`], so the reservation and reduction
+    /// ledgers' traversal oracles walk through D2D gateways
+    /// transparently — one package-global ticket order and cross-die
+    /// membership plans fall out of the shared graph.
+    pub fn connect_d2d(
+        &mut self,
+        from: NodeId,
+        s_port: usize,
+        to: NodeId,
+        m_port: usize,
+        params: &D2dParams,
+    ) -> LinkId {
+        params
+            .check()
+            .unwrap_or_else(|e| panic!("{}: connect_d2d: {e}", self.name));
+        let l = self.pool.alloc(AxiLink::d2d(params));
+        self.bind_s(from, s_port, l);
+        self.bind_m(to, m_port, l);
+        self.edges.push((from, s_port, to));
+        self.d2d_links.push(l);
         l
     }
 
@@ -242,6 +274,7 @@ impl<'p> TopologyBuilder<'p> {
             ext_s: self.ext_s,
             resv,
             reduce,
+            d2d_links: self.d2d_links,
         }
     }
 }
@@ -261,6 +294,11 @@ pub struct Topology {
     /// opened on it ([`ReduceLedger::open_group`]) before their
     /// contributors start writing.
     pub reduce: Option<ReduceHandle>,
+    /// The die-to-die links of the graph, in
+    /// [`TopologyBuilder::connect_d2d`] order (empty on single-die
+    /// fabrics) — exposed for gateway-traffic accounting and for the
+    /// parallel engine's per-die sharding.
+    pub d2d_links: Vec<LinkId>,
 }
 
 impl Topology {
@@ -852,6 +890,261 @@ pub fn build_mesh(
         endpoint_s,
         endpoint_nodes,
         service_s,
+    }
+}
+
+/// A multi-chiplet package: `chiplets` identical die-local K-ary trees
+/// whose roots double as D2D **gateway nodes**, joined pairwise by
+/// die-to-die links ([`TopologyBuilder::connect_d2d`]) into a fully
+/// connected die-level mesh — a fabric of fabrics. Every die owns a
+/// contiguous aligned block of `endpoints.count / chiplets` endpoints;
+/// `arity` is the per-die tree (bottom-up, product = endpoints per
+/// die). Service windows and extra root masters live on die 0's
+/// gateway; the other gateways route service traffic through their D2D
+/// hop toward die 0, exactly like mesh tiles.
+///
+/// The whole package is ONE [`TopologyBuilder`] graph: `build` wires
+/// the reservation and reduction ledgers over all dies and all D2D
+/// edges, so the package has a single global ticket order and
+/// reduction-membership oracles that walk through the gateways.
+#[derive(Debug, Clone)]
+pub struct ChipletSpec {
+    pub name: String,
+    /// Package-wide endpoint array (all dies).
+    pub endpoints: EndpointMap,
+    /// Number of dies (>= 2; use [`build_tree`] for a single die).
+    pub chiplets: usize,
+    /// Per-die tree arity, bottom-up; product = endpoints per die.
+    pub arity: Vec<usize>,
+    /// Timing of every inter-die hop.
+    pub d2d: D2dParams,
+    pub params: FabricParams,
+    /// Service windows `(start, end, name)` hosted on die 0's gateway.
+    pub services: Vec<(u64, u64, String)>,
+    /// Extra master ports on die 0's gateway (named `top{i}-m`).
+    pub n_root_masters: usize,
+}
+
+/// A built chiplet package plus its handles.
+pub struct ChipletTopology {
+    pub topo: Topology,
+    pub endpoint_m: Vec<LinkId>,
+    pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: its fabric entry node.
+    pub endpoint_nodes: Vec<NodeId>,
+    /// One per [`ChipletSpec::services`] entry (all on die 0's gateway).
+    pub service_s: Vec<LinkId>,
+    /// One per extra root master port (die 0's gateway).
+    pub root_m: Vec<LinkId>,
+    /// Per die: its gateway (die-root) node.
+    pub die_roots: Vec<NodeId>,
+    /// Per crossbar node: the die that owns it. Node order is
+    /// die-major (all of die 0's nodes, then die 1's, …), so each die
+    /// is a contiguous index range — the parallel engine shards the
+    /// package by die with only D2D links as cuts.
+    pub node_die: Vec<usize>,
+}
+
+/// Build a multi-chiplet package; `tune(cfg, level)` may adjust each
+/// node's crossbar knobs (level 0 = leaves, `arity.len() - 1` = the
+/// die gateways), uniformly across dies.
+pub fn build_chiplets(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    spec: &ChipletSpec,
+    mut tune: impl FnMut(&mut XbarCfg, usize),
+) -> ChipletTopology {
+    let eps = &spec.endpoints;
+    let c = spec.chiplets;
+    assert!(c >= 2, "{}: a package needs at least 2 chiplets", spec.name);
+    assert!(!spec.arity.is_empty(), "{}: empty arity", spec.name);
+    assert!(
+        eps.stride.is_power_of_two(),
+        "{}: endpoint stride must be a power of two",
+        spec.name
+    );
+    assert_eq!(
+        eps.count % c,
+        0,
+        "{}: chiplets must divide the endpoint count",
+        spec.name
+    );
+    let per_die = eps.count / c;
+    let levels = spec.arity.len();
+    let mut n_nodes = Vec::with_capacity(levels); // per die
+    let mut span = Vec::with_capacity(levels); // endpoints per node
+    let mut cover = 1usize;
+    for (l, &a) in spec.arity.iter().enumerate() {
+        assert!(a >= 1, "{}: arity[{l}] must be >= 1", spec.name);
+        cover *= a;
+        assert_eq!(
+            per_die % cover,
+            0,
+            "{}: arity prefix {cover} must divide {per_die} endpoints per die",
+            spec.name
+        );
+        span.push(cover);
+        n_nodes.push(per_die / cover);
+    }
+    assert_eq!(
+        n_nodes[levels - 1],
+        1,
+        "{}: arity product must equal the per-die endpoint count (one gateway per die)",
+        spec.name
+    );
+
+    let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
+    let gw_arity = spec.arity[levels - 1];
+    // gateway D2D port layout: children 0..gw_arity, then the C-1 peers
+    let out_port = |d: usize, p: usize| gw_arity + if p < d { p } else { p - 1 };
+
+    let mut endpoint_m = Vec::with_capacity(eps.count);
+    let mut endpoint_s = Vec::with_capacity(eps.count);
+    let mut endpoint_nodes = Vec::with_capacity(eps.count);
+    let mut die_roots = Vec::with_capacity(c);
+    let mut node_die = Vec::new();
+
+    for d in 0..c {
+        let die_first = d * per_die;
+        let gateway_level = |l: usize| l == levels - 1;
+        let mut level_nodes: Vec<NodeId> = Vec::new();
+        for l in 0..levels {
+            let al = spec.arity[l];
+            let gw = gateway_level(l);
+            let child_span = if l == 0 { 1 } else { span[l - 1] };
+            let mut next_nodes = Vec::with_capacity(n_nodes[l]);
+            for k in 0..n_nodes[l] {
+                let first = die_first + k * span[l];
+                // child rules: endpoints at the leaves, subtree
+                // regions above — identical to build_tree
+                let mut rules: Vec<AddrRule> = (0..al)
+                    .map(|j| {
+                        if l == 0 {
+                            eps.rule(first + j, j)
+                        } else {
+                            let (s, e) = eps.region(first + j * child_span, child_span);
+                            AddrRule::new(s, e, j, &format!("child{j}")).with_mcast()
+                        }
+                    })
+                    .collect();
+                let (n_masters, n_slaves);
+                if gw {
+                    // the die root is a gateway: peer-die regions ride
+                    // on the D2D ports (mesh-tile style), services on
+                    // die 0's dedicated ports or through the hop to it
+                    for p in (0..c).filter(|&p| p != d) {
+                        let (s, e) = eps.region(p * per_die, per_die);
+                        rules.push(
+                            AddrRule::new(s, e, out_port(d, p), &format!("die{p}")).with_mcast(),
+                        );
+                    }
+                    for (si, (s, e, name)) in spec.services.iter().enumerate() {
+                        let slave = if d == 0 {
+                            gw_arity + c - 1 + si
+                        } else {
+                            out_port(d, 0)
+                        };
+                        rules.push(AddrRule::new(*s, *e, slave, name));
+                    }
+                    n_slaves = gw_arity + c - 1 + if d == 0 { spec.services.len() } else { 0 };
+                    n_masters = gw_arity + c - 1 + if d == 0 { spec.n_root_masters } else { 0 };
+                } else {
+                    n_slaves = al + 1;
+                    n_masters = al + 1;
+                }
+                let map = AddrMap::new(rules, n_slaves).unwrap_or_else(|e| {
+                    panic!("{}: die {d} level {l} node {k} map: {e}", spec.name)
+                });
+                let mut cfg = XbarCfg::new(
+                    &format!("{}-d{}l{}n{}", spec.name, d, l, k),
+                    n_masters,
+                    n_slaves,
+                    map,
+                );
+                spec.params.apply(&mut cfg);
+                if gw {
+                    spec.params.apply_root(&mut cfg);
+                }
+                if !spec.params.endpoint_prio.is_empty() {
+                    // child ports aggregate their subtree; gateway peer
+                    // ports carry the sending die's max; the down-in
+                    // port of inner nodes carries the package-wide rest
+                    let mut prio: Vec<u32> = (0..al)
+                        .map(|j| spec.params.prio_max(first + j * child_span, child_span))
+                        .collect();
+                    if gw {
+                        for p in (0..c).filter(|&p| p != d) {
+                            prio.push(spec.params.prio_max(p * per_die, per_die));
+                        }
+                    } else {
+                        prio.push(spec.params.prio_max_outside(first, span[l], eps.count));
+                    }
+                    cfg.master_prio = prio;
+                }
+                if !gw {
+                    cfg.default_slave = Some(al);
+                    cfg.local_scope = Some(eps.region(first, span[l]));
+                }
+                tune(&mut cfg, l);
+                let node = b.node(cfg);
+                node_die.push(d);
+                if l == 0 {
+                    for i in 0..al {
+                        let ep = first + i;
+                        endpoint_m.push(b.ext_master(node, i, &format!("ep{ep}-m")));
+                        endpoint_s.push(b.ext_slave(node, i, &format!("ep{ep}-s")));
+                        endpoint_nodes.push(node);
+                    }
+                }
+                if l > 0 {
+                    // wire the children exactly like build_tree: the
+                    // child's up-out slave port is its own arity
+                    let child_a = spec.arity[l - 1];
+                    for j in 0..al {
+                        let child = level_nodes[k * al + j];
+                        b.connect(child, child_a, node, j);
+                        b.connect(node, j, child, child_a);
+                    }
+                }
+                next_nodes.push(node);
+            }
+            level_nodes = next_nodes;
+        }
+        die_roots.push(*level_nodes.last().expect("die has a gateway"));
+    }
+
+    // pairwise D2D wiring between the gateways: q's out-port for p
+    // feeds p's in-port for q, both directions, one D2D link each
+    let in_port = |p: usize, q: usize| gw_arity + if q < p { q } else { q - 1 };
+    for q in 0..c {
+        for p in 0..c {
+            if p == q {
+                continue;
+            }
+            b.connect_d2d(die_roots[q], out_port(q, p), die_roots[p], in_port(p, q), &spec.d2d);
+        }
+    }
+
+    // services + extra masters on die 0's gateway
+    let service_s: Vec<LinkId> = spec
+        .services
+        .iter()
+        .enumerate()
+        .map(|(si, (_, _, name))| b.ext_slave(die_roots[0], gw_arity + c - 1 + si, name))
+        .collect();
+    let root_m: Vec<LinkId> = (0..spec.n_root_masters)
+        .map(|i| b.ext_master(die_roots[0], gw_arity + c - 1 + i, &format!("top{i}-m")))
+        .collect();
+
+    ChipletTopology {
+        topo: b.build(),
+        endpoint_m,
+        endpoint_s,
+        endpoint_nodes,
+        service_s,
+        root_m,
+        die_roots,
+        node_die,
     }
 }
 

@@ -177,6 +177,27 @@ impl AxiLink {
         }
     }
 
+    /// A die-to-die link: every channel gains the SerDes pipeline
+    /// latency, and the data channels (W master→slave, R slave→master)
+    /// additionally serialize at one beat per `width_ratio` cycles —
+    /// the on-die wide beat occupies the narrow physical lanes for
+    /// that long. Address/response channels keep full rate (they are
+    /// narrow sideband signals on the PHY). Channel depths grow to
+    /// cover the bandwidth-delay product so a rate-1 D2D hop can still
+    /// stream, and `(width_ratio, latency) = (1, 1)` is bit-identical
+    /// to [`AxiLink::new`].
+    pub fn d2d(params: &crate::sim::link::D2dParams) -> AxiLink {
+        let lat = params.latency;
+        let depth = params.depth.max(lat as usize);
+        AxiLink {
+            aw: Chan::with_d2d(depth, lat, 1),
+            w: Chan::with_d2d(depth, lat, params.width_ratio),
+            b: Chan::with_d2d(depth, lat, 1),
+            ar: Chan::with_d2d(depth, lat, 1),
+            r: Chan::with_d2d(depth.max(4), lat, params.width_ratio),
+        }
+    }
+
     /// Advance all channel clock edges.
     pub fn tick(&mut self) {
         self.aw.tick();
@@ -191,8 +212,12 @@ impl AxiLink {
         self.aw.popped + self.w.popped + self.b.popped + self.ar.popped + self.r.popped
     }
 
-    /// Any beat currently visible to a consumer? (computed right after
-    /// `tick` while the struct is cache-hot — drives the idle-skips).
+    /// Any beat currently visible to a consumer — or in-flight D2D
+    /// state (delay-pipe beats, serializer cooldowns) that needs
+    /// further clock edges to progress? (computed right after `tick`
+    /// while the struct is cache-hot — drives the idle-skips; D2D
+    /// in-flight state must keep the link in the active set or beats
+    /// inside the PHY pipeline would never mature).
     #[inline]
     pub fn any_visible(&self) -> bool {
         self.aw.visible() > 0
@@ -200,14 +225,15 @@ impl AxiLink {
             || self.b.visible() > 0
             || self.ar.visible() > 0
             || self.r.visible() > 0
+            || self.aw.needs_tick()
+            || self.w.needs_tick()
+            || self.b.needs_tick()
+            || self.ar.needs_tick()
+            || self.r.needs_tick()
     }
 
     pub fn is_idle(&self) -> bool {
-        self.aw.is_empty()
-            && self.w.is_empty()
-            && self.b.is_empty()
-            && self.ar.is_empty()
-            && self.r.is_empty()
+        self.aw.idle() && self.w.idle() && self.b.idle() && self.ar.idle() && self.r.idle()
     }
 
     // ---- cut-link support (sim::parallel) ----

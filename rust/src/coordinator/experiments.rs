@@ -614,6 +614,134 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
     }
 }
 
+/// One chiplet-sweep point: the four collective strategies on an
+/// N-die package (`chiplets == 1` is the single-die reference fabric;
+/// every N > 1 splits the same clusters across N dies joined by D2D
+/// links, so rows are directly comparable).
+#[derive(Debug, Clone)]
+pub struct ChipletRow {
+    pub chiplets: usize,
+    pub d2d_width_ratio: u32,
+    pub d2d_latency: u32,
+    pub row: CollRow,
+}
+
+/// The chiplet sweep: every requested collective at every requested
+/// die count on one package configuration (cluster count, D2D timing
+/// and wide shape come from `cfg`). Reports the same strategy
+/// comparison as [`collectives`] plus the D2D parameters, so the cost
+/// of crossing the package gap — and how much the gateway fork/join
+/// hardware hides of it — reads directly off the rows.
+pub fn chiplet_sweep(
+    cfg: &SocConfig,
+    ops: &[CollOp],
+    chiplet_counts: &[usize],
+    bytes: u64,
+) -> (Vec<ChipletRow>, Table, Json) {
+    let mut rows = Vec::new();
+    for &c in chiplet_counts {
+        let mut cfg = cfg.clone();
+        cfg.package.chiplets = c;
+        cfg.validate()
+            .unwrap_or_else(|e| panic!("chiplet sweep ({c} dies): {e}"));
+        for &op in ops {
+            let sw = run_collective(&cfg, op, CollMode::Sw, bytes);
+            let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
+            let conc = run_collective(&cfg, op, CollMode::HwConc, bytes);
+            let red = run_collective(&cfg, op, CollMode::HwReduce, bytes);
+            rows.push(ChipletRow {
+                chiplets: c,
+                d2d_width_ratio: cfg.package.d2d_width_ratio,
+                d2d_latency: cfg.package.d2d_latency,
+                row: CollRow {
+                    speedup: sw.cycles as f64 / hw.cycles as f64,
+                    speedup_conc: sw.cycles as f64 / conc.cycles as f64,
+                    speedup_red: sw.cycles as f64 / red.cycles as f64,
+                    sw,
+                    hw,
+                    conc,
+                    red,
+                },
+            });
+        }
+    }
+    let mut table = Table::new(&[
+        "op",
+        "dies",
+        "d2d",
+        "sw cyc",
+        "hw cyc",
+        "conc cyc",
+        "red cyc",
+        "hw spd",
+        "conc spd",
+        "red spd",
+        "red saved",
+        "numerics",
+    ]);
+    for r in &rows {
+        let cr = &r.row;
+        table.row(&[
+            cr.hw.op.name().to_string(),
+            r.chiplets.to_string(),
+            format!("{}:1/{}cy", r.d2d_width_ratio, r.d2d_latency),
+            cr.sw.cycles.to_string(),
+            cr.hw.cycles.to_string(),
+            cr.conc.cycles.to_string(),
+            cr.red.cycles.to_string(),
+            fnum(cr.speedup, 2),
+            fnum(cr.speedup_conc, 2),
+            fnum(cr.speedup_red, 2),
+            cr.red.wide.red_beats_saved.to_string(),
+            if cr.sw.numerics_ok && cr.hw.numerics_ok && cr.conc.numerics_ok && cr.red.numerics_ok
+            {
+                "OK"
+            } else {
+                "FAIL"
+            }
+            .to_string(),
+        ]);
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let cr = &r.row;
+                let mut o = Json::obj();
+                o.set("op", cr.hw.op.name())
+                    .set("chiplets", r.chiplets)
+                    .set("d2d_width_ratio", r.d2d_width_ratio as u64)
+                    .set("d2d_latency", r.d2d_latency as u64)
+                    .set("clusters", cr.hw.clusters)
+                    .set("bytes", cr.hw.bytes)
+                    .set("cycles_sw", cr.sw.cycles)
+                    .set("cycles_hw", cr.hw.cycles)
+                    .set("cycles_conc", cr.conc.cycles)
+                    .set("cycles_red", cr.red.cycles)
+                    .set("speedup", cr.speedup)
+                    .set("speedup_conc", cr.speedup_conc)
+                    .set("speedup_red", cr.speedup_red)
+                    .set("dma_w_beats_sw", cr.sw.dma_w_beats)
+                    .set("dma_w_beats_hw", cr.hw.dma_w_beats)
+                    .set("dma_w_beats_conc", cr.conc.dma_w_beats)
+                    .set("dma_w_beats_red", cr.red.dma_w_beats)
+                    .set("aw_mcast_conc", cr.conc.wide.aw_mcast)
+                    .set("resv_tickets_conc", cr.conc.wide.resv_tickets)
+                    .set("red_joins", cr.red.wide.red_joins)
+                    .set("red_beats_saved", cr.red.wide.red_beats_saved)
+                    .set(
+                        "numerics_ok",
+                        cr.sw.numerics_ok
+                            && cr.hw.numerics_ok
+                            && cr.conc.numerics_ok
+                            && cr.red.numerics_ok,
+                    );
+                o
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
 /// The fault-injection experiment: the healthy baseline plus every
 /// [`FaultKind`] run on the same mixed-traffic scenario (concurrent
 /// global multicast + in-network reductions + unicast, one victim
@@ -798,6 +926,26 @@ mod tests {
             .get("broadcast_speedup_geomean")
             .and_then(|v| v.as_f64())
             .is_some());
+    }
+
+    #[test]
+    fn chiplet_sweep_spans_die_counts_and_holds_invariants() {
+        let cfg = SocConfig::tiny(8);
+        let ops = [CollOp::Broadcast, CollOp::AllReduce];
+        let (rows, table, json) = chiplet_sweep(&cfg, &ops, &[1, 2], 2048);
+        assert_eq!(rows.len(), 4); // 2 ops x {single die, 2-die package}
+        for r in &rows {
+            assert_coll_row_invariants(&r.row);
+        }
+        // the single-die rows must be exactly the plain collectives run
+        // (chiplets == 1 builds today's fabric, bit-identical)
+        let single = run_collective(&cfg, CollOp::Broadcast, CollMode::Hw, 2048);
+        assert_eq!(rows[0].row.hw.cycles, single.cycles);
+        assert_eq!(rows[0].row.hw.dma_w_beats, single.dma_w_beats);
+        assert!(table.render().contains("dies"));
+        assert_eq!(json.as_arr().unwrap().len(), 4);
+        let o = json.as_arr().unwrap()[2].as_obj().unwrap();
+        assert_eq!(o["chiplets"].as_f64().unwrap() as usize, 2);
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod experiments;
 pub mod report;
 
 pub use experiments::{
-    collectives, fig3a, fig3b, fig3c, topo_sweep, CollRow, Fig3bRow, Fig3cRow, TopoSweepRow,
+    chiplet_sweep, collectives, fig3a, fig3b, fig3c, topo_sweep, ChipletRow, CollRow, Fig3bRow,
+    Fig3cRow, TopoSweepRow,
 };
 pub use report::Report;

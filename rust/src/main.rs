@@ -9,6 +9,7 @@
 //! occamy-sim microbench --mode hw --clusters 32 --size 32KiB
 //! occamy-sim toposweep [--endpoints 16]  # topology-shape sweep
 //! occamy-sim collectives [--op all] [--shape all] [--mode both]
+//! occamy-sim chiplets [--chiplets 1,2,4] [--clusters 16]  # multi-die package sweep
 //! occamy-sim faults [--kind all] [--victim 1]   # fault-injection recovery
 //! occamy-sim qos [--hot 4] [--jobs 4]           # arbitration under serving load
 //! occamy-sim all [--out results]
@@ -17,8 +18,9 @@
 use std::process::ExitCode;
 
 use axi_mcast::coordinator::experiments::{
-    collectives, collectives_summary, faults_experiment, fig3a, fig3b, fig3b_default_clusters,
-    fig3b_default_sizes, fig3b_summary, fig3c, fig3d_schedule, qos_experiment, topo_sweep,
+    chiplet_sweep, collectives, collectives_summary, faults_experiment, fig3a, fig3b,
+    fig3b_default_clusters, fig3b_default_sizes, fig3b_summary, fig3c, fig3d_schedule,
+    qos_experiment, topo_sweep,
 };
 use axi_mcast::coordinator::Report;
 use axi_mcast::occamy::{SocConfig, WideShape};
@@ -101,6 +103,20 @@ const CMDS: &[CmdSpec] = &[
                 "both | sw | hw | hw-concurrent | hw-reduce (default both; both also \
                  prints speedups)",
             ),
+            ("out", "results directory"),
+            THREADS_OPT,
+        ],
+    },
+    CmdSpec {
+        name: "chiplets",
+        about: "multi-chiplet package sweep: collectives across die counts over D2D links",
+        options: &[
+            ("chiplets", "comma list of die counts (default 1,2,4; 1 = single-die reference)"),
+            ("clusters", "total clusters, power of two (default 16)"),
+            ("op", "all | broadcast | allgather | reducescatter | allreduce (default all)"),
+            ("size", "vector size per collective (default 4KiB)"),
+            ("d2d-width", "D2D beat-serialization ratio, cycles per data beat (default 4)"),
+            ("d2d-latency", "D2D hop latency in cycles (default 8)"),
             ("out", "results directory"),
             THREADS_OPT,
         ],
@@ -332,6 +348,59 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
     emit(&r)
 }
 
+fn run_chiplets(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let clusters = args.usize_or("clusters", 16)?;
+    if !clusters.is_power_of_two() || clusters < 4 {
+        return Err(format!(
+            "--clusters must be a power of two >= 4 (collectives address mask-form sets), \
+             got {clusters}"
+        ));
+    }
+    let mut cfg = SocConfig {
+        n_clusters: clusters,
+        clusters_per_group: clusters.min(4),
+        ..SocConfig::default()
+    };
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    cfg.package.d2d_width_ratio =
+        args.u64_or("d2d-width", cfg.package.d2d_width_ratio as u64)? as u32;
+    cfg.package.d2d_latency = args.u64_or("d2d-latency", cfg.package.d2d_latency as u64)? as u32;
+    let counts: Vec<usize> = args
+        .u64_list_or("chiplets", &[1, 2, 4])?
+        .into_iter()
+        .map(|c| c as usize)
+        .collect();
+    // reject invalid die counts up front instead of panicking mid-sweep
+    for &c in &counts {
+        let mut probe = cfg.clone();
+        probe.package.chiplets = c;
+        probe.validate().map_err(|e| format!("--chiplets {c}: {e}"))?;
+    }
+    let bytes = args.u64_or("size", 4 * 1024)?;
+    let step = cfg.wide_bytes as u64 * clusters as u64;
+    if bytes == 0 || bytes % step != 0 {
+        return Err(format!(
+            "--size must be a positive multiple of bus width x clusters ({step} B), got {bytes}"
+        ));
+    }
+    let ops: Vec<CollOp> = match args.get_or("op", "all") {
+        "all" => CollOp::ALL.to_vec(),
+        s => vec![CollOp::parse(s).ok_or_else(|| {
+            format!("unknown --op '{s}' (broadcast|allgather|reducescatter|allreduce|all)")
+        })?],
+    };
+    let (_rows, table, json) = chiplet_sweep(&cfg, &ops, &counts, bytes);
+    let mut r = Report::new("chiplets").to_dir(out);
+    r.table(
+        "Multi-chiplet package: collectives across die counts (dies joined by \
+         width-converting, latency-bearing D2D links; chiplets=1 is the single-die \
+         reference fabric)",
+        &table,
+    );
+    r.json("rows", json);
+    emit(&r)
+}
+
 /// Shared cluster-count validation and config for the robustness
 /// commands (`faults`, `qos`): small SoCs stepped under the same
 /// grouping rule as `collectives`.
@@ -515,6 +584,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         }
         "collectives" => {
             run_collectives(args, out)?;
+        }
+        "chiplets" => {
+            run_chiplets(args, out)?;
         }
         "faults" => {
             run_faults(args, out)?;

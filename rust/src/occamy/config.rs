@@ -52,6 +52,57 @@ impl WideShape {
     }
 }
 
+/// Multi-chiplet package shape: how many dies the SoC's clusters are
+/// distributed over and the timing of the die-to-die links joining
+/// them (see `axi::topology::build_chiplets`). The default single-die
+/// package is bit-identical to the pre-chiplet fabric — both networks
+/// build exactly the topology they always did, and no D2D link exists.
+///
+/// With `chiplets > 1` the package keeps ONE global address map (the
+/// cluster/LLC/barrier windows are unchanged), so workloads and the
+/// memory substrate are oblivious to the die split; only the fabric
+/// path — and therefore cycle counts — changes. LLC and barrier live
+/// on die 0; every other die reaches them through its gateway's D2D
+/// hop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackageConfig {
+    /// Number of dies. 1 (default) = single-die SoC. Must divide
+    /// `n_clusters`; each die hosts the contiguous cluster block
+    /// `[d * n/chiplets, (d+1) * n/chiplets)`.
+    pub chiplets: usize,
+    /// D2D beat-serialization ratio: an on-die wide beat occupies the
+    /// narrow die-to-die lanes for this many cycles (data channels
+    /// only; 4:1 models a 128-bit SerDes under a 512-bit on-die bus).
+    pub d2d_width_ratio: u32,
+    /// D2D hop latency in cycles (every channel crossing the gap).
+    pub d2d_latency: u32,
+    /// FIFO depth of the gateway-facing D2D channels (grows to the
+    /// latency automatically — see `AxiLink::d2d`).
+    pub d2d_depth: usize,
+}
+
+impl Default for PackageConfig {
+    fn default() -> PackageConfig {
+        PackageConfig {
+            chiplets: 1,
+            d2d_width_ratio: 4,
+            d2d_latency: 8,
+            d2d_depth: 4,
+        }
+    }
+}
+
+impl PackageConfig {
+    /// The link-class parameters for this package's D2D hops.
+    pub fn d2d(&self) -> crate::sim::link::D2dParams {
+        crate::sim::link::D2dParams {
+            width_ratio: self.d2d_width_ratio,
+            latency: self.d2d_latency,
+            depth: self.d2d_depth,
+        }
+    }
+}
+
 /// Where a [`FaultPlan`] is installed in the SoC (see
 /// [`SocConfig::faults`]): the endpoint memory model it poisons.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -103,6 +154,11 @@ pub struct SocConfig {
     /// Wide-network topology (the collectives suite sweeps this; the
     /// narrow network always keeps the paper's group/top tree).
     pub wide_shape: WideShape,
+    /// Multi-chiplet package shape (`chiplets: 1` default = single
+    /// die, bit-identical to the pre-chiplet fabric). With more dies,
+    /// both networks become per-die trees whose roots are D2D
+    /// gateways; [`WideShape::Mesh`] is rejected (a die is a tree).
+    pub package: PackageConfig,
 
     // ---- robustness / QoS (PR 7) ----
     /// Per-master outstanding-transaction cap of every fabric crossbar
@@ -219,6 +275,7 @@ impl Default for SocConfig {
             irq_handler_cycles: 120,
             max_burst_beats: 64,
             wide_shape: WideShape::Groups,
+            package: PackageConfig::default(),
             fabric_max_outstanding: 16,
             fabric_max_mcast_outstanding: 4,
             fabric_root_outstanding: 64,
@@ -280,6 +337,17 @@ impl SocConfig {
     /// Mailbox address of cluster `i`.
     pub fn mailbox_addr(&self, i: usize) -> u64 {
         self.cluster_base(i) + MAILBOX_OFFSET
+    }
+
+    /// Clusters per die (`n_clusters` when the package is single-die).
+    pub fn clusters_per_die(&self) -> usize {
+        assert_eq!(self.n_clusters % self.package.chiplets, 0);
+        self.n_clusters / self.package.chiplets
+    }
+
+    /// The die hosting cluster `i`.
+    pub fn die_of(&self, cluster: usize) -> usize {
+        cluster / self.clusters_per_die()
     }
 
     /// Mask-form set addressing offset `off` in every cluster of
@@ -358,6 +426,55 @@ impl SocConfig {
                         self.n_clusters
                     ));
                 }
+            }
+        }
+        let p = &self.package;
+        if p.chiplets == 0 {
+            return Err("package.chiplets must be >= 1".into());
+        }
+        if p.chiplets > 1 {
+            if self.n_clusters % p.chiplets != 0 {
+                return Err(format!(
+                    "package.chiplets {} must divide {} clusters",
+                    p.chiplets, self.n_clusters
+                ));
+            }
+            let per_die = self.n_clusters / p.chiplets;
+            p.d2d().check().map_err(|e| format!("package: {e}"))?;
+            match &self.wide_shape {
+                WideShape::Mesh(_) => {
+                    return Err(
+                        "a chiplet package builds per-die trees; WideShape::Mesh is not \
+                         supported with package.chiplets > 1"
+                            .into(),
+                    );
+                }
+                WideShape::Groups => {
+                    if per_die % self.clusters_per_group != 0 {
+                        return Err(format!(
+                            "clusters_per_group {} must divide the {per_die} clusters per die",
+                            self.clusters_per_group
+                        ));
+                    }
+                }
+                WideShape::Tree(arity) => {
+                    let prod: usize = arity.iter().product();
+                    if prod != per_die {
+                        return Err(format!(
+                            "wide_shape tree arity product {prod} must equal the {per_die} \
+                             clusters per die (chiplets split the tree per die)"
+                        ));
+                    }
+                }
+                WideShape::Flat => {}
+            }
+            // the narrow network keeps the group/top tree per die
+            if per_die % self.clusters_per_group != 0 {
+                return Err(format!(
+                    "clusters_per_group {} must divide the {per_die} clusters per die \
+                     (narrow network)",
+                    self.clusters_per_group
+                ));
             }
         }
         Ok(())
@@ -451,6 +568,53 @@ mod tests {
         assert!(c.validate().is_err());
         c.qos_prio = vec![1; 8];
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_checks_package_shape() {
+        // the single-die default is always fine
+        assert_eq!(SocConfig::default().package.chiplets, 1);
+        assert!(SocConfig::default().validate().is_ok());
+        // a 4-die 16-cluster package with 2 clusters per group
+        let mut c = SocConfig::tiny(16);
+        c.clusters_per_group = 2;
+        c.package.chiplets = 4;
+        assert!(c.validate().is_ok());
+        assert_eq!(c.clusters_per_die(), 4);
+        assert_eq!(c.die_of(0), 0);
+        assert_eq!(c.die_of(7), 1);
+        // chiplets must divide the cluster count
+        let mut c = SocConfig::tiny(16);
+        c.package.chiplets = 3;
+        assert!(c.validate().is_err());
+        // a die is a tree: meshes are refused
+        let mut c = SocConfig::tiny(16);
+        c.package.chiplets = 2;
+        c.wide_shape = WideShape::Mesh(4);
+        assert!(c.validate().is_err());
+        // explicit tree arity must match the per-die split
+        let mut c = SocConfig::tiny(16);
+        c.clusters_per_group = 2;
+        c.package.chiplets = 2;
+        c.wide_shape = WideShape::Tree(vec![4, 4]); // 16 ≠ 8 per die
+        assert!(c.validate().is_err());
+        c.wide_shape = WideShape::Tree(vec![2, 4]);
+        assert!(c.validate().is_ok());
+        // groups must fit inside a die
+        let mut c = SocConfig::tiny(16);
+        c.clusters_per_group = 4;
+        c.package.chiplets = 8; // 2 clusters per die < group of 4
+        assert!(c.validate().is_err());
+        // degenerate D2D params are refused
+        let mut c = SocConfig::tiny(16);
+        c.clusters_per_group = 2;
+        c.package.chiplets = 2;
+        c.package.d2d_latency = 0;
+        assert!(c.validate().is_err());
+        // chiplets 0 is meaningless
+        let mut c = SocConfig::tiny(16);
+        c.package.chiplets = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -20,8 +20,8 @@ use super::config::{
     SocConfig, WideShape, BARRIER_BASE, BARRIER_SIZE, CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE,
 };
 use crate::axi::topology::{
-    build_mesh, build_tree, step_xbars_scheduled, sum_xbar_stats, EndpointMap, FabricParams,
-    MeshSpec, NodeId, TreeSpec,
+    build_chiplets, build_mesh, build_tree, step_xbars_scheduled, sum_xbar_stats, ChipletSpec,
+    EndpointMap, FabricParams, MeshSpec, NodeId, TreeSpec,
 };
 use crate::axi::types::{LinkId, LinkPool};
 use crate::axi::xbar::{Xbar, XbarStats};
@@ -60,6 +60,14 @@ pub struct Network {
     /// Per cluster: the crossbar node its ports attach to (node ids
     /// double as `RedNode`s, registration order being build order).
     pub cluster_nodes: Vec<NodeId>,
+    /// Per crossbar: the die that owns it (all zeros on a single-die
+    /// build). Node order is die-major, so each die is a contiguous
+    /// index range — the parallel engine shards the package by die.
+    pub node_die: Vec<usize>,
+    /// Per die: its gateway node (empty on a single-die build).
+    pub die_roots: Vec<NodeId>,
+    /// Every inter-die link of this network (empty on a single die).
+    pub d2d_links: Vec<LinkId>,
 }
 
 impl Network {
@@ -154,6 +162,60 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         endpoint_prio: cfg.qos_prio.clone(),
     };
 
+    if cfg.package.chiplets > 1 {
+        // fabric of fabrics: one die-local tree per chiplet, gateways
+        // joined pairwise by D2D links. The narrow network keeps its
+        // per-die group tree (the barrier master needs a root port);
+        // the wide network folds its shape into a per-die tree.
+        let per_die = cfg.clusters_per_die();
+        let arity = match (kind, &cfg.wide_shape) {
+            (NetKind::Narrow, _) | (NetKind::Wide, WideShape::Groups) => {
+                vec![cfg.clusters_per_group, per_die / cfg.clusters_per_group]
+            }
+            (NetKind::Wide, WideShape::Flat) => vec![per_die],
+            (NetKind::Wide, WideShape::Tree(a)) => {
+                assert_eq!(
+                    a.iter().product::<usize>(),
+                    per_die,
+                    "wide_shape tree arity must cover one die's clusters"
+                );
+                a.clone()
+            }
+            (NetKind::Wide, WideShape::Mesh(_)) => {
+                panic!("package.chiplets > 1 builds per-die trees; WideShape::Mesh unsupported")
+            }
+        };
+        let n_root_masters = match kind {
+            NetKind::Narrow => 1,
+            NetKind::Wide => 0,
+        };
+        let spec = ChipletSpec {
+            name: format!("{kind:?}"),
+            endpoints,
+            chiplets: cfg.package.chiplets,
+            arity,
+            d2d: cfg.package.d2d(),
+            params,
+            services: vec![service],
+            n_root_masters,
+        };
+        let built = build_chiplets(pool, cfg.link_depth, &spec, |_, _| {});
+        return Network {
+            kind,
+            resv: built.topo.resv,
+            reduce: built.topo.reduce,
+            cluster_nodes: built.endpoint_nodes,
+            d2d_links: built.topo.d2d_links,
+            xbars: built.topo.xbars,
+            cluster_m: built.endpoint_m,
+            cluster_s: built.endpoint_s,
+            service_s: built.service_s[0],
+            ext_m: built.root_m.first().copied(),
+            node_die: built.node_die,
+            die_roots: built.die_roots,
+        };
+    }
+
     if kind == NetKind::Wide {
         if let WideShape::Mesh(tiles) = cfg.wide_shape {
             let spec = MeshSpec {
@@ -164,6 +226,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
                 services: vec![service],
             };
             let built = build_mesh(pool, cfg.link_depth, &spec, |_, _| {});
+            let n_xbars = built.topo.xbars.len();
             return Network {
                 kind,
                 resv: built.topo.resv,
@@ -174,6 +237,9 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
                 cluster_s: built.endpoint_s,
                 service_s: built.service_s[0],
                 ext_m: None,
+                node_die: vec![0; n_xbars],
+                die_roots: Vec::new(),
+                d2d_links: Vec::new(),
             };
         }
     }
@@ -206,6 +272,7 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         n_root_masters,
     };
     let built = build_tree(pool, cfg.link_depth, &spec, |_, _| {});
+    let n_xbars = built.topo.xbars.len();
     Network {
         kind,
         resv: built.topo.resv,
@@ -216,6 +283,9 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
         cluster_s: built.endpoint_s,
         service_s: built.service_s[0],
         ext_m: built.root_m.first().copied(),
+        node_die: vec![0; n_xbars],
+        die_roots: Vec::new(),
+        d2d_links: Vec::new(),
     }
 }
 
@@ -322,6 +392,56 @@ mod tests {
         assert_eq!(net.top().cfg.max_mcast_outstanding, 4);
         assert!(net.top().cfg.req_timeout.is_none());
         assert!(net.top().cfg.master_prio.is_empty());
+    }
+
+    #[test]
+    fn chiplet_package_builds_both_networks() {
+        let mut cfg = SocConfig::tiny(16);
+        cfg.package.chiplets = 4;
+        cfg.validate().unwrap();
+        let mut pool = LinkPool::new();
+        let wide = build_network(&cfg, &mut pool, NetKind::Wide);
+        // 4 dies × (1 group node + 1 gateway), die-major order
+        assert_eq!(wide.xbars.len(), 8);
+        assert_eq!(wide.node_die, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(wide.die_roots.len(), 4);
+        // fully connected die mesh: one D2D link per ordered pair
+        assert_eq!(wide.d2d_links.len(), 12);
+        assert_eq!(wide.cluster_m.len(), 16);
+        assert!(wide.ext_m.is_none());
+        // die 0's gateway hosts the LLC window; peers route through it
+        let gw0 = &wide.xbars[wide.die_roots[0].0];
+        assert_eq!(gw0.cfg.n_slaves, 1 + 3 + 1);
+        let gw1 = &wide.xbars[wide.die_roots[1].0];
+        assert_eq!(gw1.cfg.n_slaves, 1 + 3);
+        assert!(gw1.cfg.default_slave.is_none());
+        // the narrow network keeps its barrier master, on die 0
+        let narrow = build_network(&cfg, &mut pool, NetKind::Narrow);
+        assert!(narrow.ext_m.is_some());
+        assert_eq!(narrow.d2d_links.len(), 12);
+        // single-die default builds carry the degenerate labels
+        let single = build_network(&SocConfig::tiny(16), &mut pool, NetKind::Wide);
+        assert!(single.d2d_links.is_empty());
+        assert!(single.node_die.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn chiplet_ledgers_span_the_package() {
+        let mut cfg = SocConfig::tiny(8);
+        cfg.package.chiplets = 2;
+        cfg.e2e_mcast_order = true;
+        cfg.fabric_reduce = true;
+        cfg.validate().unwrap();
+        let mut pool = LinkPool::new();
+        let wide = build_network(&cfg, &mut pool, NetKind::Wide);
+        // one package-global ledger pair: cross-die ticket order and
+        // reduction membership walk through the gateways
+        assert!(wide.resv.is_some());
+        assert!(wide.reduce.is_some());
+        // clusters on different dies attach to different entry nodes
+        assert_ne!(wide.cluster_nodes[0], wide.cluster_nodes[4]);
+        assert_eq!(wide.node_die[wide.cluster_nodes[0].0], 0);
+        assert_eq!(wide.node_die[wide.cluster_nodes[4].0], 1);
     }
 
     #[test]

@@ -140,10 +140,33 @@ fn step_shard(sh: &mut SocShard, cy: Cycle) {
     }
 }
 
-/// Atoms of one network's crossbars: per-crossbar normally, the whole
-/// network as one atom when the shared reservation ledger is armed
-/// (its first-come ticket order must match the sequential step order).
-fn network_atoms(net: &Network) -> Vec<Atom> {
+/// Contiguous crossbar ranges `(first, len)` forming one network's
+/// partition atoms: the whole network when the shared reservation
+/// ledger is armed (its first-come ticket order must match the
+/// sequential step order), one range per die on a chiplet package
+/// (node order is die-major, so a die is contiguous and its D2D hops
+/// become the only cut links — the natural shard of the issue's
+/// fabric of fabrics), one per crossbar otherwise.
+fn network_groups(net: &Network) -> Vec<(usize, usize)> {
+    let n = net.xbars.len();
+    if net.resv.is_some() {
+        return vec![(0, n)];
+    }
+    if net.die_roots.len() > 1 {
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        for (i, &d) in net.node_die.iter().enumerate() {
+            match groups.last_mut() {
+                Some(g) if net.node_die[g.0] == d => g.1 += 1,
+                _ => groups.push((i, 1)),
+            }
+        }
+        return groups;
+    }
+    (0..n).map(|j| (j, 1)).collect()
+}
+
+/// Atoms of one network's crossbars, one per [`network_groups`] range.
+fn network_atoms(net: &Network, groups: &[(usize, usize)]) -> Vec<Atom> {
     let xbar_ports = |x: &Xbar| -> Vec<(LinkId, bool)> {
         // the crossbar consumes requests on its m_links (slave side)
         // and drives requests into its s_links (master side)
@@ -153,18 +176,16 @@ fn network_atoms(net: &Network) -> Vec<Atom> {
             .chain(x.s_links.iter().map(|&id| (id, true)))
             .collect()
     };
-    if net.resv.is_some() {
-        let ports = net.xbars.iter().flat_map(|x| xbar_ports(x)).collect();
-        vec![Atom { ports, pin: None }]
-    } else {
-        net.xbars
-            .iter()
-            .map(|x| Atom {
-                ports: xbar_ports(x),
-                pin: None,
-            })
-            .collect()
-    }
+    groups
+        .iter()
+        .map(|&(first, len)| Atom {
+            ports: net.xbars[first..first + len]
+                .iter()
+                .flat_map(|x| xbar_ports(x))
+                .collect(),
+            pin: None,
+        })
+        .collect()
 }
 
 fn all_done(shards: &[SocShard]) -> bool {
@@ -262,10 +283,12 @@ impl Soc {
     ) -> Result<Cycle, SimError> {
         // ---- partition ----
         let n_cl = self.clusters.len();
+        let wide_groups = network_groups(&self.wide);
+        let narrow_groups = network_groups(&self.narrow);
         let mut atoms: Vec<Atom> = Vec::new();
         let n_shards = {
-            let wide_atoms = network_atoms(&self.wide);
-            let narrow_atoms = network_atoms(&self.narrow);
+            let wide_atoms = network_atoms(&self.wide, &wide_groups);
+            let narrow_atoms = network_atoms(&self.narrow, &narrow_groups);
             let n_atoms = n_cl + 2 + wide_atoms.len() + narrow_atoms.len();
             let n_shards = threads.min(n_atoms);
             if n_shards <= 1 {
@@ -355,39 +378,32 @@ impl Soc {
                 &mut shards,
             );
             ai += 1;
-            for (net, xbars, armed) in [
-                (Net::Wide, std::mem::take(&mut self.wide.xbars), self.wide.resv.is_some()),
+            for (net, xbars, groups) in [
+                (Net::Wide, std::mem::take(&mut self.wide.xbars), &wide_groups),
                 (
                     Net::Narrow,
                     std::mem::take(&mut self.narrow.xbars),
-                    self.narrow.resv.is_some(),
+                    &narrow_groups,
                 ),
             ] {
-                if armed {
+                // split the crossbars into the same contiguous ranges
+                // the atoms were built from (whole net / die / single)
+                let mut it = xbars.into_iter();
+                for &(first, len) in groups.iter() {
+                    let group: Vec<Xbar> = it.by_ref().take(len).collect();
+                    debug_assert_eq!(group.len(), len);
                     place(
                         assign[ai],
                         ShardComp::Xbars {
                             net,
-                            first: 0,
-                            xbars,
+                            first,
+                            xbars: group,
                         },
                         &mut shards,
                     );
                     ai += 1;
-                } else {
-                    for (j, x) in xbars.into_iter().enumerate() {
-                        place(
-                            assign[ai],
-                            ShardComp::Xbars {
-                                net,
-                                first: j,
-                                xbars: vec![x],
-                            },
-                            &mut shards,
-                        );
-                        ai += 1;
-                    }
                 }
+                debug_assert!(it.next().is_none());
             }
             debug_assert_eq!(ai, atoms.len());
         }

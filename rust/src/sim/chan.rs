@@ -18,6 +18,13 @@
 //!   space) and consumer half (visible queue) for links crossing a
 //!   thread-partition boundary; `tick_cut` is the clock edge across
 //!   the two halves and is bit-equivalent to `tick` on a whole channel.
+//! * [`Chan::with_d2d`] models a die-to-die hop: `latency > 1` inserts
+//!   a delay pipe between the staging register and the visible queue
+//!   (a beat pushed at cycle `t` becomes visible at `t + latency`),
+//!   and `rate > 1` serializes the narrow physical lanes — after a
+//!   push, `can_push` stays false for `rate - 1` further cycles. Both
+//!   default to 1, in which case every path below is bit-identical to
+//!   the plain registered channel.
 
 use std::collections::VecDeque;
 
@@ -25,8 +32,18 @@ use std::collections::VecDeque;
 pub struct Chan<T> {
     q: VecDeque<T>,
     staged: VecDeque<T>,
+    /// In-flight delay-pipe beats `(remaining ticks, item)`; only
+    /// non-empty when `latency > 1`. FIFO: entries age uniformly, so
+    /// the matured prefix is always the front.
+    pipe: VecDeque<(u32, T)>,
     cap: usize,
     space_at_tick: usize,
+    /// Delivery latency in cycles (>= 1; 1 = plain registered slice).
+    latency: u32,
+    /// Beat-serialization ratio (>= 1; 1 = full-width, no throttle).
+    rate: u32,
+    /// Cycles until the serializer frees the lanes for the next push.
+    cooldown: u32,
     /// Total items ever pushed (throughput accounting).
     pub pushed: u64,
     /// Total items ever popped.
@@ -35,12 +52,25 @@ pub struct Chan<T> {
 
 impl<T> Chan<T> {
     pub fn new(cap: usize) -> Chan<T> {
+        Chan::with_d2d(cap, 1, 1)
+    }
+
+    /// A channel with D2D timing: `latency`-cycle delivery and one
+    /// accepted push per `rate` cycles. `(1, 1)` is exactly
+    /// [`Chan::new`].
+    pub fn with_d2d(cap: usize, latency: u32, rate: u32) -> Chan<T> {
         assert!(cap >= 1);
+        assert!(latency >= 1, "channel latency must be >= 1");
+        assert!(rate >= 1, "serialization rate must be >= 1");
         Chan {
             q: VecDeque::new(),
             staged: VecDeque::new(),
+            pipe: VecDeque::new(),
             cap,
             space_at_tick: cap,
+            latency,
+            rate,
+            cooldown: 0,
             pushed: 0,
             popped: 0,
         }
@@ -50,13 +80,34 @@ impl<T> Chan<T> {
         self.cap
     }
 
-    /// Occupancy (queued + staged).
+    /// Occupancy (queued + in-flight + staged).
     pub fn len(&self) -> usize {
-        self.q.len() + self.staged.len()
+        self.q.len() + self.pipe.len() + self.staged.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Beats inside the delay pipe (pushed, not yet visible; always 0
+    /// for `latency == 1` channels).
+    pub fn in_flight(&self) -> usize {
+        self.pipe.len()
+    }
+
+    /// Does the channel need clock edges to make progress on its own —
+    /// in-flight delay-pipe beats maturing, or an armed serialization
+    /// cooldown counting down? Links fold this into `any_visible` so
+    /// the scheduler keeps ticking them, and into `is_idle` so
+    /// `skip(k)` never fast-forwards across D2D in-flight state.
+    pub fn needs_tick(&self) -> bool {
+        !self.pipe.is_empty() || self.cooldown > 0
+    }
+
+    /// Idle for skip purposes: nothing queued, staged, in flight, and
+    /// no cooldown still draining.
+    pub fn idle(&self) -> bool {
+        self.is_empty() && self.cooldown == 0
     }
 
     /// Producer-side ready: is there space to push this cycle?
@@ -68,7 +119,7 @@ impl<T> Chan<T> {
     /// shrinks between ticks (`q.len() + staged.len() ≤ q_at_tick +
     /// space_at_tick = cap`).
     pub fn can_push(&self) -> bool {
-        self.staged.len() < self.space_at_tick
+        self.cooldown == 0 && self.staged.len() < self.space_at_tick
     }
 
     /// Space as seen at the last clock edge (registered-ready modelling;
@@ -83,6 +134,9 @@ impl<T> Chan<T> {
         assert!(self.can_push(), "Chan overflow: push without ready");
         self.staged.push_back(item);
         self.pushed += 1;
+        if self.rate > 1 {
+            self.cooldown = self.rate;
+        }
     }
 
     /// Consumer-side peek of the oldest *visible* item.
@@ -104,20 +158,42 @@ impl<T> Chan<T> {
         self.q.len()
     }
 
-    /// Clock edge: staged items become visible, ready snapshot updates.
+    /// Clock edge: staged items become visible (or enter the delay
+    /// pipe), matured in-flight beats become visible, the serializer
+    /// cooldown counts down, and the ready snapshot updates.
     #[inline]
     pub fn tick(&mut self) {
-        // fast path: the overwhelmingly common idle-channel case
-        if !self.staged.is_empty() {
-            self.q.append(&mut self.staged);
+        if self.latency == 1 {
+            // fast path: the overwhelmingly common on-die channel
+            if !self.staged.is_empty() {
+                self.q.append(&mut self.staged);
+            }
+        } else {
+            // age in-flight beats; the matured FIFO prefix delivers
+            for e in self.pipe.iter_mut() {
+                e.0 -= 1;
+            }
+            while self.pipe.front().is_some_and(|e| e.0 == 0) {
+                self.q.push_back(self.pipe.pop_front().unwrap().1);
+            }
+            // this cycle's pushes enter the pipe un-aged: a beat
+            // pushed at cycle t becomes visible at t + latency
+            while let Some(it) = self.staged.pop_front() {
+                self.pipe.push_back((self.latency - 1, it));
+            }
         }
-        self.space_at_tick = self.cap - self.q.len();
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        }
+        self.space_at_tick = self.cap - self.q.len() - self.pipe.len();
     }
 
     /// Drop all contents (used by test harnesses between phases).
     pub fn clear(&mut self) {
         self.q.clear();
         self.staged.clear();
+        self.pipe.clear();
+        self.cooldown = 0;
         self.space_at_tick = self.cap;
     }
 
@@ -132,21 +208,33 @@ impl<T> Chan<T> {
     // half is completely self-contained within a cycle; `tick_cut` is
     // the clock edge across both.
 
-    /// Split into `(producer half, consumer half)`.
+    /// Split into `(producer half, consumer half)`. The delay pipe and
+    /// serializer cooldown live on the producer half — `can_push`
+    /// (registered space minus in-flight beats, cooldown) is entirely
+    /// producer-side state, and `tick_cut` delivers matured beats into
+    /// the consumer's visible queue at the shared clock edge.
     pub fn split_cut(self) -> (Chan<T>, Chan<T>) {
         let producer = Chan {
             q: VecDeque::new(),
             staged: self.staged,
+            pipe: self.pipe,
             cap: self.cap,
             space_at_tick: self.space_at_tick,
+            latency: self.latency,
+            rate: self.rate,
+            cooldown: self.cooldown,
             pushed: self.pushed,
             popped: 0,
         };
         let consumer = Chan {
             q: self.q,
             staged: VecDeque::new(),
+            pipe: VecDeque::new(),
             cap: self.cap,
             space_at_tick: self.space_at_tick,
+            latency: self.latency,
+            rate: self.rate,
+            cooldown: 0,
             pushed: 0,
             popped: self.popped,
         };
@@ -154,15 +242,32 @@ impl<T> Chan<T> {
     }
 
     /// Clock edge across a split channel: staged items of the producer
-    /// half become visible in the consumer half, and both halves get
-    /// the fresh registered-space snapshot. Bit-equivalent to
-    /// [`Chan::tick`] on the joined channel.
+    /// half become visible in the consumer half (via the producer-side
+    /// delay pipe when `latency > 1`), and both halves get the fresh
+    /// registered-space snapshot. Bit-equivalent to [`Chan::tick`] on
+    /// the joined channel.
     pub fn tick_cut(producer: &mut Chan<T>, consumer: &mut Chan<T>) {
         debug_assert_eq!(producer.cap, consumer.cap);
-        if !producer.staged.is_empty() {
-            consumer.q.append(&mut producer.staged);
+        debug_assert_eq!(producer.latency, consumer.latency);
+        if producer.latency == 1 {
+            if !producer.staged.is_empty() {
+                consumer.q.append(&mut producer.staged);
+            }
+        } else {
+            for e in producer.pipe.iter_mut() {
+                e.0 -= 1;
+            }
+            while producer.pipe.front().is_some_and(|e| e.0 == 0) {
+                consumer.q.push_back(producer.pipe.pop_front().unwrap().1);
+            }
+            while let Some(it) = producer.staged.pop_front() {
+                producer.pipe.push_back((producer.latency - 1, it));
+            }
         }
-        let space = producer.cap - consumer.q.len();
+        if producer.cooldown > 0 {
+            producer.cooldown -= 1;
+        }
+        let space = producer.cap - consumer.q.len() - producer.pipe.len();
         producer.space_at_tick = space;
         consumer.space_at_tick = space;
     }
@@ -172,11 +277,16 @@ impl<T> Chan<T> {
         debug_assert_eq!(producer.cap, consumer.cap);
         debug_assert!(consumer.staged.is_empty());
         debug_assert!(producer.q.is_empty());
+        debug_assert!(consumer.pipe.is_empty());
         Chan {
             q: consumer.q,
             staged: producer.staged,
+            pipe: producer.pipe,
             cap: producer.cap,
             space_at_tick: producer.space_at_tick,
+            latency: producer.latency,
+            rate: producer.rate,
+            cooldown: producer.cooldown,
             pushed: producer.pushed,
             popped: consumer.popped,
         }
@@ -313,6 +423,119 @@ mod tests {
         assert_eq!(joined.pushed, whole.pushed);
         assert_eq!(joined.popped, whole.popped);
         assert_eq!(joined.visible(), whole.visible());
+    }
+
+    #[test]
+    fn d2d_latency_delays_visibility_exactly() {
+        // latency L: a beat pushed at cycle t is visible at t + L
+        for lat in [1u32, 2, 3, 8] {
+            let mut c: Chan<u32> = Chan::with_d2d(16, lat, 1);
+            c.push(42);
+            for k in 1..lat {
+                c.tick();
+                assert_eq!(c.front(), None, "lat={lat}: visible after {k} ticks");
+                assert_eq!(c.in_flight(), usize::from(lat > 1));
+            }
+            c.tick();
+            assert_eq!(c.front(), Some(&42), "lat={lat}: not visible after {lat} ticks");
+            assert_eq!(c.in_flight(), 0);
+        }
+    }
+
+    #[test]
+    fn d2d_rate_serializes_pushes() {
+        // rate R admits exactly one beat per R cycles: the narrow
+        // physical lanes busy out for R-1 cycles after each push
+        let mut c: Chan<u32> = Chan::with_d2d(16, 1, 4);
+        let mut pushed = Vec::new();
+        for cy in 0..16u32 {
+            if c.can_push() {
+                c.push(cy);
+                pushed.push(cy);
+            }
+            c.tick();
+        }
+        assert_eq!(pushed, vec![0, 4, 8, 12]);
+        // rate 1 never arms the cooldown — bit-identical to Chan::new
+        let mut f: Chan<u32> = Chan::with_d2d(4, 1, 1);
+        f.push(1);
+        assert!(f.can_push());
+    }
+
+    #[test]
+    fn d2d_pipe_occupancy_backpressures() {
+        // in-flight beats count against capacity: a depth-2 channel
+        // with latency 3 admits two beats then stalls until delivery
+        let mut c: Chan<u32> = Chan::with_d2d(2, 3, 1);
+        c.push(1);
+        c.tick();
+        assert!(c.can_push());
+        c.push(2);
+        c.tick();
+        assert!(!c.can_push(), "pipe occupancy must hold back the producer");
+        c.tick(); // beat 1 matures
+        assert_eq!(c.pop(), Some(1));
+        assert!(!c.can_push(), "registered: pop frees space only next tick");
+        c.tick(); // beat 2 matures, space snapshot sees the pop
+        assert_eq!(c.pop(), Some(2));
+        assert!(c.can_push());
+    }
+
+    #[test]
+    fn d2d_split_cut_matches_whole_channel_bit_for_bit() {
+        // same scripted parity as the plain-channel test, with a
+        // latency-3 rate-2 D2D channel cut across a thread boundary
+        let mut whole: Chan<u32> = Chan::with_d2d(4, 3, 2);
+        let (mut prod, mut cons) = Chan::<u32>::with_d2d(4, 3, 2).split_cut();
+        let mut got_whole = Vec::new();
+        let mut got_split = Vec::new();
+        for cy in 0..64u32 {
+            if cy % 3 != 0 {
+                if let Some(v) = whole.pop() {
+                    got_whole.push(v);
+                }
+                if let Some(v) = cons.pop() {
+                    got_split.push(v);
+                }
+            }
+            assert_eq!(whole.can_push(), prod.can_push(), "cycle {cy}");
+            assert_eq!(whole.needs_tick(), prod.needs_tick(), "cycle {cy}");
+            if whole.can_push() {
+                whole.push(cy);
+            }
+            if prod.can_push() {
+                prod.push(cy);
+            }
+            whole.tick();
+            Chan::tick_cut(&mut prod, &mut cons);
+            assert_eq!(whole.visible(), cons.visible(), "cycle {cy}");
+            assert_eq!(whole.in_flight(), prod.in_flight(), "cycle {cy}");
+            assert_eq!(whole.stale_space(), prod.stale_space(), "cycle {cy}");
+        }
+        assert_eq!(got_whole, got_split);
+        assert!(!got_whole.is_empty());
+        let joined = Chan::join_cut(prod, cons);
+        assert_eq!(joined.pushed, whole.pushed);
+        assert_eq!(joined.popped, whole.popped);
+        assert_eq!(joined.in_flight(), whole.in_flight());
+        assert_eq!(joined.visible(), whole.visible());
+    }
+
+    #[test]
+    fn d2d_idle_and_needs_tick_track_inflight_state() {
+        let mut c: Chan<u32> = Chan::with_d2d(4, 2, 3);
+        assert!(c.idle() && !c.needs_tick());
+        c.push(9);
+        assert!(!c.idle());
+        c.tick();
+        assert!(c.needs_tick(), "in-flight beat must keep the link active");
+        assert!(!c.idle(), "skip(k) must not fast-forward over the pipe");
+        c.tick();
+        assert_eq!(c.pop(), Some(9));
+        // the serializer cooldown alone still pins the channel non-idle
+        assert!(c.needs_tick() && !c.idle());
+        c.tick();
+        assert!(c.idle() && !c.needs_tick());
     }
 
     #[test]

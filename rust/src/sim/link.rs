@@ -28,6 +28,55 @@ pub trait Link {
     fn moved(&self) -> u64;
 }
 
+/// Timing parameters of a die-to-die (D2D) link — the narrow,
+/// latency-asymmetric SerDes hop joining two chiplets of a package.
+///
+/// A D2D link is an ordinary link whose channels are built with
+/// [`crate::sim::chan::Chan::with_d2d`]: every channel gains
+/// `latency` cycles of delivery delay (the PHY pipeline), and the
+/// *data* channels additionally serialize at one beat per
+/// `width_ratio` cycles (an on-die wide beat occupies the narrow
+/// physical lanes for `width_ratio` cycles). Address/response
+/// channels keep full rate — they are narrow already.
+///
+/// `D2dParams::default()` models a conservative organic-substrate
+/// SerDes: 4:1 width conversion, 8-cycle hop latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct D2dParams {
+    /// Beat-serialization ratio for data channels (>= 1): cycles of
+    /// lane occupancy per on-die beat. 1 = full-width (no throttle).
+    pub width_ratio: u32,
+    /// Pipeline latency in cycles of every channel crossing the gap
+    /// (>= 1; 1 collapses to a plain registered hop).
+    pub latency: u32,
+    /// FIFO depth of the gateway-facing channels (the
+    /// bandwidth-delay buffer on each side of the SerDes).
+    pub depth: usize,
+}
+
+impl Default for D2dParams {
+    fn default() -> D2dParams {
+        D2dParams {
+            width_ratio: 4,
+            latency: 8,
+            depth: 4,
+        }
+    }
+}
+
+impl D2dParams {
+    /// Validate for topology construction.
+    pub fn check(&self) -> Result<(), String> {
+        if self.width_ratio < 1 || self.latency < 1 || self.depth < 1 {
+            return Err(format!(
+                "D2dParams out of range (width_ratio {}, latency {}, depth {} — all must be >= 1)",
+                self.width_ratio, self.latency, self.depth
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Typed handle into a [`Pool`]. Replaces the raw `usize` indices the
 /// pre-topology code threaded around: a `LinkId` can only be obtained
 /// by allocating a link, so mixing up port numbers and link indices is

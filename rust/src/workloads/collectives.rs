@@ -65,6 +65,26 @@
 //! the multicast fork amortises — plus the aggregate wide-network
 //! [`XbarStats`]. The invariant asserted by the experiment rows: the
 //! `Hw` strategy never injects more W beats than the `Sw` baseline.
+//!
+//! **Chiplet packages.** On a multi-chiplet package
+//! (`SocConfig::package.chiplets > 1`) the schedules become
+//! hierarchy-aware along die boundaries:
+//!
+//! * the leader grouping of the `Hw` all-reduce follows the **die**
+//!   instead of the 4-cluster group ([`CollLayout`] picks
+//!   `clusters_per_die`), so the converging phase runs members → die
+//!   leaders (intra-die unicasts) → root, and only one partial vector
+//!   per die crosses a D2D hop;
+//! * the `Hw` all-gather gathers to the die leader first and forwards
+//!   one contiguous per-die block over the D2D hop
+//!   ([`hier_all_gather`]), then re-distributes with a single
+//!   multicast that the gateways fork once per peer die;
+//! * `HwConc`/`HwReduce` need no software change: the gateways are
+//!   fork points for the concurrent chunk multicasts (one copy per
+//!   D2D hop regardless of the die's population) and join points for
+//!   the tagged reduction bursts (each die's contributions combine
+//!   *before* the narrow D2D crossing) — intra-die hw-reduce feeding
+//!   inter-die chunked multicast, entirely in fabric hardware.
 
 use crate::axi::mcast::AddrSet;
 use crate::axi::reduce::ReduceOp;
@@ -175,7 +195,10 @@ impl CollMode {
 #[derive(Debug, Clone)]
 pub struct CollLayout {
     pub n: usize,
+    /// Leader span of the hierarchical schedules: clusters per group,
+    /// or clusters per die on a chiplet package.
     pub cpg: usize,
+    /// `n / cpg` — groups, or dies on a chiplet package.
     pub n_groups: usize,
     pub bytes: u64,
     pub chunk: u64,
@@ -203,8 +226,15 @@ impl CollLayout {
             cfg.wide_bytes as u64 * n as u64
         );
         let chunk = bytes / n as u64;
-        let cpg = cfg.clusters_per_group;
-        let n_groups = cfg.n_groups();
+        // hierarchical leader grouping: on a chiplet package the
+        // converging phases follow die boundaries (one leader per die,
+        // one partial vector per D2D hop), otherwise the 4-cluster
+        // group of the paper's tree
+        let (cpg, n_groups) = if cfg.package.chiplets > 1 {
+            (cfg.clusters_per_die(), cfg.package.chiplets)
+        } else {
+            (cfg.clusters_per_group, cfg.n_groups())
+        };
         let data = 0;
         let acc = data + bytes;
         let gather = acc + bytes;
@@ -467,6 +497,12 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
             // fan-out for the fork to amortise, so use the exchange
             ring_all_gather(cfg, l, &mut progs, 0);
         }
+        (CollOp::AllGather, CollMode::Hw) if cfg.package.chiplets > 1 && l.cpg > 1 => {
+            // chiplet package: gather inside each die first, cross the
+            // narrow D2D hop once per die as one contiguous block,
+            // multicast down (forked per die at the gateways)
+            hier_all_gather(cfg, l, &mut progs);
+        }
         (CollOp::AllGather, CollMode::Hw) => {
             // gather-to-root over unicasts (converging), then ONE
             // multicast of the concatenated buffer — never more than a
@@ -677,6 +713,71 @@ fn hw_broadcast(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>]) {
     ];
     for p in progs.iter_mut().skip(1) {
         p.push(Cmd::WaitIrq { count: 1 });
+    }
+}
+
+/// The hierarchy-aware `Hw` all-gather of a chiplet package: every
+/// rank unicasts its chunk to its **die leader** (intra-die converging
+/// traffic that never touches a D2D hop), each non-root leader then
+/// forwards its die's concatenated block — one contiguous transfer —
+/// across the narrow D2D hop to the root, and the root re-distributes
+/// the full buffer with a single multicast that each gateway forks
+/// exactly once per peer die. D2D payload cost: one block per die up,
+/// one buffer per die down, independent of the die's population.
+fn hier_all_gather(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>]) {
+    let n = l.n;
+    let cpg = l.cpg; // clusters per die here
+    let dies = l.n_groups;
+    for (r, p) in progs.iter_mut().enumerate() {
+        let d = r / cpg;
+        let leader = d * cpg;
+        if r == 0 {
+            p.push(Cmd::WaitIrq {
+                count: ((cpg - 1) + (dies - 1)) as u32,
+            });
+            p.push(Cmd::Dma {
+                src: cfg.cluster_base(0) + l.gather,
+                dst: cfg.cluster_set(0, n, l.gather),
+                bytes: l.bytes,
+                tag: 100,
+            });
+            p.push(Cmd::WaitDma);
+            p.push(Cmd::SendIrq {
+                dst: cfg.all_mailboxes(),
+            });
+            p.push(Cmd::WaitIrq { count: 1 });
+        } else if r == leader {
+            p.push(Cmd::WaitIrq {
+                count: (cpg - 1) as u32,
+            });
+            p.push(Cmd::Dma {
+                src: cfg.cluster_base(r) + l.gather + (d * cpg) as u64 * l.chunk,
+                dst: AddrSet::unicast(
+                    cfg.cluster_base(0) + l.gather + (d * cpg) as u64 * l.chunk,
+                ),
+                bytes: cpg as u64 * l.chunk,
+                tag: 200 + d as u64,
+            });
+            p.push(Cmd::WaitDma);
+            p.push(Cmd::SendIrq {
+                dst: AddrSet::unicast(cfg.mailbox_addr(0)),
+            });
+            p.push(Cmd::WaitIrq { count: 1 });
+        } else {
+            p.push(Cmd::Dma {
+                src: cfg.cluster_base(r) + l.gather + r as u64 * l.chunk,
+                dst: AddrSet::unicast(
+                    cfg.cluster_base(leader) + l.gather + r as u64 * l.chunk,
+                ),
+                bytes: l.chunk,
+                tag: r as u64,
+            });
+            p.push(Cmd::WaitDma);
+            p.push(Cmd::SendIrq {
+                dst: AddrSet::unicast(cfg.mailbox_addr(leader)),
+            });
+            p.push(Cmd::WaitIrq { count: 1 });
+        }
     }
 }
 

@@ -1,0 +1,502 @@
+//! Package-level differential suite for the multi-chiplet fabric of
+//! fabrics (DESIGN.md §10): N dies of the single-die fabric joined by
+//! width-converting, latency-bearing D2D links must deliver exactly
+//! the bytes the single-die golden delivers — final functional memory
+//! and per-cluster DMA completion streams bit-identical on race-free
+//! random workloads — while the package runs stay bit-identical to
+//! themselves across {1,2,4,8} threads, the optimised and naive
+//! engines, and with the cross-die reservation and reduction ledgers
+//! armed. All four collectives stay bit-exact against the scalar
+//! reference in all four strategies on a package, with the
+//! `dma_w_beats_red <= dma_w_beats_conc <= dma_w_beats_sw` injection
+//! chain and the package-wide W fork/join accounting holding, and a
+//! `chiplets: 1` config with non-default D2D parameters armed is
+//! bit-identical to the plain single-die fabric.
+
+use axi_mcast::axi::mcast::AddrSet;
+use axi_mcast::axi::reduce::ReduceOp;
+use axi_mcast::axi::xbar::XbarStats;
+use axi_mcast::occamy::{Cmd, NopCompute, Soc, SocConfig};
+use axi_mcast::util::proptest_mini::{check, Config, Gen};
+use axi_mcast::workloads::collectives::{run_collective, CollMode, CollOp};
+
+/// `tiny(clusters)` partitioned into `chiplets` dies. The leader span
+/// (`clusters_per_group`) is clamped to one die so the per-die trees
+/// stay well-formed at every count used here.
+fn package_cfg(clusters: usize, chiplets: usize) -> SocConfig {
+    let mut cfg = SocConfig::tiny(clusters);
+    cfg.clusters_per_group = cfg.clusters_per_group.min(clusters / chiplets);
+    cfg.package.chiplets = chiplets;
+    cfg.validate()
+        .unwrap_or_else(|e| panic!("{chiplets}-die package of {clusters}: {e}"));
+    cfg
+}
+
+// ------------------------------------------------------------ outcome
+
+/// Everything the package engines must reproduce bit-for-bit when only
+/// the thread count / engine flavour changes (the `parallel_parity`
+/// observable set).
+#[derive(Debug, PartialEq)]
+struct SocOutcome {
+    cycles: u64,
+    wide: XbarStats,
+    narrow: XbarStats,
+    releases: u64,
+    progress: Vec<u64>,
+    done_at: Vec<Option<u64>>,
+    dma_tags: Vec<Vec<u64>>,
+    l1: Vec<Vec<u8>>,
+}
+
+fn run_soc(
+    cfg: &SocConfig,
+    progs: &[Vec<Cmd>],
+    force_naive: bool,
+    threads: usize,
+    groups: &[(u32, Vec<usize>, u64)],
+) -> SocOutcome {
+    let cfg = SocConfig {
+        force_naive,
+        threads,
+        ..cfg.clone()
+    };
+    let mut soc = Soc::new(cfg);
+    for (g, members, dst) in groups {
+        soc.open_reduce_group(*g, ReduceOp::Sum, members, *dst);
+    }
+    soc.load_programs(progs.to_vec());
+    let cycles = soc
+        .run_default(&mut NopCompute)
+        .unwrap_or_else(|e| panic!("package run (threads={}): {e:?}", soc.cfg.threads));
+    SocOutcome {
+        cycles,
+        wide: soc.wide.stats_sum(),
+        narrow: soc.narrow.stats_sum(),
+        releases: soc.barrier.releases,
+        progress: soc.clusters.iter().map(|c| c.progress).collect(),
+        done_at: soc.clusters.iter().map(|c| c.done_at).collect(),
+        dma_tags: soc.clusters.iter().map(|c| c.dma_done_tags.clone()).collect(),
+        l1: soc.mem.l1.clone(),
+    }
+}
+
+/// Package-wide beat conservation on both networks: every W beat
+/// leaving a crossbar entered one, was forked there, or was absorbed
+/// by an in-network join — across die boundaries too, because the D2D
+/// links neither create nor drop beats.
+fn assert_beat_conservation(what: &str, out: &SocOutcome) {
+    for (net, s) in [("wide", &out.wide), ("narrow", &out.narrow)] {
+        assert_eq!(
+            s.w_beats_out,
+            s.w_beats_in + s.w_fork_extra - s.red_beats_saved,
+            "{what}: {net} package-wide fork/join accounting broke: {s:?}"
+        );
+        assert!(
+            s.resv_commits >= s.resv_tickets,
+            "{what}: {net} reservation ledger not drained: {s:?}"
+        );
+        assert_eq!(s.decerr, 0, "{what}: {net} decode errors: {s:?}");
+    }
+}
+
+// --------------------------------------- package vs single-die golden
+
+/// Race-free random programs: every destination slot is keyed by the
+/// *source* cluster, so the final memory image is independent of
+/// arrival order — and therefore of the topology the beats crossed.
+/// (The shared-slot races of the `parallel_parity` generator are fine
+/// there because both runs use the same fabric; here the golden is a
+/// different — single-die — fabric, so only order-free workloads can
+/// demand bit-identical memory.)
+fn race_free_programs(g: &mut Gen, cfg: &SocConfig) -> Vec<Vec<Cmd>> {
+    let n = cfg.n_clusters;
+    let barriers = g.u64_below(3) as usize;
+    (0..n)
+        .map(|c| {
+            let mut prog = Vec::new();
+            for round in 0..=barriers {
+                let work = g.u64_below(3);
+                for w in 0..work {
+                    match g.u64_below(4) {
+                        0 => prog.push(Cmd::Delay {
+                            cycles: 1 + g.u64_below(200),
+                        }),
+                        1 => prog.push(Cmd::Compute {
+                            macs: 1 + g.u64_below(512),
+                            op: 0,
+                            arg: 0,
+                        }),
+                        _ => {
+                            let bytes = 64 * (1 + g.u64_below(8));
+                            let dst = if g.bool(0.4) {
+                                // aligned multicast into this source's slot;
+                                // global sets are legal because every run of
+                                // this property arms the e2e reservation
+                                // protocol (concurrent global multicasts
+                                // deadlock the bare fabric — DESIGN.md §1)
+                                let (first, count) = if g.bool(0.3) {
+                                    (0, n)
+                                } else {
+                                    let count = (1usize << (1 + g.u64_below(2))).min(n);
+                                    ((c / count) * count, count)
+                                };
+                                cfg.cluster_set(first, count, 0x8000 + c as u64 * 0x400)
+                            } else {
+                                let t = g.u64_below(n as u64) as usize;
+                                AddrSet::unicast(
+                                    cfg.cluster_base(t) + 0xC000 + c as u64 * 0x200,
+                                )
+                            };
+                            prog.push(Cmd::Dma {
+                                src: cfg.cluster_base(c),
+                                dst,
+                                bytes,
+                                tag: round as u64 * 10 + w,
+                            });
+                            prog.push(Cmd::WaitDma);
+                        }
+                    }
+                }
+                if round < barriers {
+                    prog.push(Cmd::Barrier);
+                }
+            }
+            prog
+        })
+        .collect()
+}
+
+#[test]
+fn package_delivers_what_the_single_die_delivers() {
+    // e2e armed everywhere: it makes the generator's concurrent global
+    // multicasts legal on every fabric, and it routes the property
+    // straight through the package-global reservation ledger
+    let mut golden_cfg = SocConfig::tiny(8);
+    golden_cfg.e2e_mcast_order = true;
+    check(
+        "chiplet-vs-single-die",
+        Config {
+            cases: 4,
+            ..Config::default()
+        },
+        |g| race_free_programs(g, &golden_cfg),
+        |progs| {
+            let golden = run_soc(&golden_cfg, progs, false, 1, &[]);
+            for chiplets in [2usize, 4] {
+                let mut cfg = package_cfg(8, chiplets);
+                cfg.e2e_mcast_order = true;
+                let pkg = run_soc(&cfg, progs, false, 1, &[]);
+                assert_beat_conservation(&format!("{chiplets} dies"), &pkg);
+                // cycles legitimately differ (D2D latency + serialization);
+                // delivered bytes and completion streams may not
+                if pkg.l1 != golden.l1 {
+                    return Err(format!(
+                        "{chiplets} dies: final memory diverged from single-die golden"
+                    ));
+                }
+                if pkg.dma_tags != golden.dma_tags || pkg.releases != golden.releases {
+                    return Err(format!(
+                        "{chiplets} dies: DMA completion / barrier streams diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------- thread x engine x ledger bit-identity
+
+/// A fixed deterministic cross-die workload in three barrier-separated
+/// phases: aligned-pair multicasts (legal on every fabric), global
+/// broadcasts (concurrent from every rank only when the e2e
+/// reservation protocol makes that deadlock-free, a lone rank-0
+/// broadcast otherwise), and cross-die unicasts — every beat class
+/// crosses a gateway.
+fn cross_die_progs(cfg: &SocConfig, concurrent_global: bool) -> Vec<Vec<Cmd>> {
+    let n = cfg.n_clusters;
+    (0..n)
+        .map(|c| {
+            let peer = (c + cfg.clusters_per_die()) % n;
+            let mut prog = vec![
+                Cmd::Dma {
+                    src: cfg.cluster_base(c),
+                    dst: cfg.cluster_set(c & !1, 2, 0x8000 + c as u64 * 0x400),
+                    bytes: 512,
+                    tag: c as u64,
+                },
+                Cmd::WaitDma,
+                Cmd::Barrier,
+            ];
+            if concurrent_global || c == 0 {
+                prog.push(Cmd::Dma {
+                    src: cfg.cluster_base(c),
+                    dst: cfg.cluster_set(0, n, 0xA000 + c as u64 * 0x200),
+                    bytes: 256,
+                    tag: 50 + c as u64,
+                });
+                prog.push(Cmd::WaitDma);
+            }
+            prog.extend([
+                Cmd::Barrier,
+                Cmd::Dma {
+                    src: cfg.cluster_base(c),
+                    dst: AddrSet::unicast(cfg.cluster_base(peer) + 0xC000 + c as u64 * 0x200),
+                    bytes: 256,
+                    tag: 100 + c as u64,
+                },
+                Cmd::WaitDma,
+                Cmd::Barrier,
+            ]);
+            prog
+        })
+        .collect()
+}
+
+/// {1,2,4,8} threads x {opt, force_naive} x {plain, e2e reservation,
+/// fabric reduce}: on a 2-die package every combination is bit-identical
+/// to the sequential optimised run — the lookahead-1 engine shards by
+/// die, and the cross-die ledgers impose one package-global order that
+/// partitioning must not perturb.
+#[test]
+fn package_bit_identical_across_threads_engines_and_ledgers() {
+    let base = package_cfg(8, 2);
+
+    let mut e2e = base.clone();
+    e2e.e2e_mcast_order = true;
+
+    let mut red = base.clone();
+    red.fabric_reduce = true;
+    let red_dst = red.cluster_base(0) + 0xE000;
+    let red_members: Vec<usize> = (1..8).collect();
+    let red_groups = vec![(1u32, red_members, red_dst)];
+    let red_progs: Vec<Vec<Cmd>> = (0..8)
+        .map(|c| {
+            if c == 0 {
+                Vec::new()
+            } else {
+                vec![
+                    Cmd::DmaReduce {
+                        src: red.cluster_base(c),
+                        dst: red_dst,
+                        bytes: 512,
+                        tag: c as u64,
+                        group: 1,
+                        op: ReduceOp::Sum,
+                    },
+                    Cmd::WaitDma,
+                ]
+            }
+        })
+        .collect();
+
+    let variants: [(&str, &SocConfig, Vec<Vec<Cmd>>, &[(u32, Vec<usize>, u64)]); 3] = [
+        ("plain", &base, cross_die_progs(&base, false), &[]),
+        ("e2e", &e2e, cross_die_progs(&e2e, true), &[]),
+        ("reduce", &red, red_progs, &red_groups),
+    ];
+    for (name, cfg, progs, groups) in &variants {
+        let golden = run_soc(cfg, progs, false, 1, groups);
+        assert_beat_conservation(name, &golden);
+        if *name == "e2e" {
+            assert!(
+                golden.wide.resv_tickets >= 8,
+                "{name}: every cross-die broadcast must take a ticket: {:?}",
+                golden.wide
+            );
+        }
+        if *name == "reduce" {
+            assert!(
+                golden.wide.red_joins >= 1 && golden.wide.red_beats_saved > 0,
+                "{name}: the cross-die combining path must engage: {:?}",
+                golden.wide
+            );
+        }
+        for force_naive in [false, true] {
+            for threads in [1usize, 2, 4, 8] {
+                let out = run_soc(cfg, progs, force_naive, threads, groups);
+                assert_eq!(
+                    out, golden,
+                    "{name}: naive={force_naive} threads={threads} diverged from \
+                     the sequential optimised golden"
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------- collectives on the package
+
+fn assert_collective_modes(cfg: &SocConfig, op: CollOp, bytes: u64) {
+    let what = format!("{} on {} dies", op.name(), cfg.package.chiplets);
+    let sw = run_collective(cfg, op, CollMode::Sw, bytes);
+    let hw = run_collective(cfg, op, CollMode::Hw, bytes);
+    let conc = run_collective(cfg, op, CollMode::HwConc, bytes);
+    let red = run_collective(cfg, op, CollMode::HwReduce, bytes);
+    for r in [&sw, &hw, &conc, &red] {
+        assert!(r.numerics_ok, "{what} ({}): scalar reference broke", r.mode.name());
+        assert_eq!(
+            r.wide.w_beats_out,
+            r.wide.w_beats_in + r.wide.w_fork_extra - r.wide.red_beats_saved,
+            "{what} ({}): package-wide fork/join accounting",
+            r.mode.name()
+        );
+        assert!(
+            r.wide.resv_commits >= r.wide.resv_tickets,
+            "{what} ({}): reservation ledger not drained",
+            r.mode.name()
+        );
+    }
+    assert!(
+        red.dma_w_beats <= conc.dma_w_beats && conc.dma_w_beats <= sw.dma_w_beats,
+        "{what}: injected-beat chain red ({}) <= conc ({}) <= sw ({}) broke",
+        red.dma_w_beats,
+        conc.dma_w_beats,
+        sw.dma_w_beats
+    );
+    assert_eq!(sw.wide.aw_mcast, 0, "{what}: sw baseline multicasted");
+}
+
+/// ISSUE acceptance: a 2-die package runs all four collectives
+/// bit-exact against the scalar reference in all four strategies, with
+/// the injection chain and package-wide accounting holding.
+#[test]
+fn two_die_package_collectives_bit_exact_all_modes() {
+    let cfg = package_cfg(8, 2);
+    for op in CollOp::ALL {
+        assert_collective_modes(&cfg, op, 2048);
+    }
+}
+
+/// Same at 4 and 8 dies (16 clusters). Release-tier: the D2D
+/// serialization makes these runs long for the debug profile.
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn wide_package_collectives_bit_exact_all_modes() {
+    for chiplets in [4usize, 8] {
+        let cfg = package_cfg(16, chiplets);
+        for op in CollOp::ALL {
+            assert_collective_modes(&cfg, op, 4096);
+        }
+    }
+}
+
+/// The hierarchical all-gather schedule (intra-die gather to the die
+/// leaders, one contiguous block per die over the D2D links, a single
+/// multicast forked per-die at the gateways) engages on packages and
+/// injects no more W beats than the flat ring.
+#[test]
+fn hierarchical_all_gather_engages_on_packages() {
+    let cfg = package_cfg(8, 2);
+    let sw = run_collective(&cfg, CollOp::AllGather, CollMode::Sw, 2048);
+    let hw = run_collective(&cfg, CollOp::AllGather, CollMode::Hw, 2048);
+    assert!(sw.numerics_ok && hw.numerics_ok);
+    assert!(
+        hw.wide.aw_mcast >= 1,
+        "the gather-down phase must be one multicast: {:?}",
+        hw.wide
+    );
+    assert!(
+        hw.dma_w_beats < sw.dma_w_beats,
+        "hierarchical all-gather ({}) must inject fewer beats than the \
+         unicast ring ({})",
+        hw.dma_w_beats,
+        sw.dma_w_beats
+    );
+}
+
+// ---------------------------------------- event horizon over D2D links
+
+/// Latency replay under `skip(k)`: with long pure-wait gaps between
+/// cross-die transfers the optimised engine fast-forwards over the
+/// idle spans, and must land on exactly the per-cycle cycle counts and
+/// statistics. The scheduler refuses to skip while any D2D pipe beat
+/// or serializer cooldown is live (`AxiLink::is_idle` folds the D2D
+/// state in), so the armed link state never needs replay — this pins
+/// that contract end-to-end on a 2-die package.
+#[test]
+fn event_horizon_replays_d2d_latency_exactly() {
+    let base = package_cfg(8, 2);
+    let progs: Vec<Vec<Cmd>> = (0..8usize)
+        .map(|c| {
+            let peer = (c + 4) % 8;
+            vec![
+                Cmd::Delay {
+                    cycles: 300 + 97 * c as u64,
+                },
+                Cmd::Dma {
+                    src: base.cluster_base(c),
+                    dst: AddrSet::unicast(base.cluster_base(peer) + 0xC000 + c as u64 * 0x200),
+                    bytes: 512,
+                    tag: c as u64,
+                },
+                Cmd::WaitDma,
+                Cmd::Delay {
+                    cycles: 5_000 + 500 * c as u64,
+                },
+                Cmd::Dma {
+                    src: base.cluster_base(c),
+                    dst: base.cluster_set(c & !1, 2, 0x8000 + c as u64 * 0x400),
+                    bytes: 256,
+                    tag: 10 + c as u64,
+                },
+                Cmd::WaitDma,
+            ]
+        })
+        .collect();
+    let run = |force_naive: bool| {
+        let cfg = SocConfig {
+            force_naive,
+            ..base.clone()
+        };
+        let mut soc = Soc::new(cfg);
+        soc.load_programs(progs.clone());
+        let cycles = soc
+            .run_default(&mut NopCompute)
+            .unwrap_or_else(|e| panic!("horizon run (naive={force_naive}): {e:?}"));
+        (
+            cycles,
+            soc.skipped_cycles,
+            soc.wide.stats_sum(),
+            soc.narrow.stats_sum(),
+            soc.mem.l1.clone(),
+        )
+    };
+    let opt = run(false);
+    let naive = run(true);
+    assert!(
+        opt.1 > 0,
+        "the event horizon must engage across the staggered delay gaps"
+    );
+    assert_eq!(naive.1, 0, "force_naive must step every cycle");
+    assert_eq!(opt.0, naive.0, "skipped vs per-cycle cycle divergence");
+    assert_eq!(opt.2, naive.2, "skipped vs per-cycle wide stats divergence");
+    assert_eq!(opt.3, naive.3, "skipped vs per-cycle narrow stats divergence");
+    assert_eq!(opt.4, naive.4, "skipped vs per-cycle memory divergence");
+}
+
+// ------------------------------------------- chiplets: 1 bit-identity
+
+/// Armed-but-unused guard: `chiplets: 1` with non-default D2D
+/// parameters is the plain single-die fabric, bit for bit, across the
+/// engines and thread counts.
+#[test]
+fn single_chiplet_is_bit_identical_to_default() {
+    let plain = SocConfig::tiny(8);
+    let mut armed = plain.clone();
+    armed.package.chiplets = 1;
+    armed.package.d2d_width_ratio = 8;
+    armed.package.d2d_latency = 16;
+    armed.validate().unwrap();
+    let progs = cross_die_progs(&plain, false);
+    let golden = run_soc(&plain, &progs, false, 1, &[]);
+    for (force_naive, threads) in [(false, 1usize), (false, 4), (true, 1), (true, 4)] {
+        let out = run_soc(&armed, &progs, force_naive, threads, &[]);
+        assert_eq!(
+            out, golden,
+            "chiplets=1 (naive={force_naive}, threads={threads}) must be \
+             bit-identical to the single-die fabric"
+        );
+    }
+}

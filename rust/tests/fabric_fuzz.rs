@@ -27,6 +27,14 @@
 //! `e2e`-armed configurations — on the RTL-faithful fabric they can
 //! hit the documented inter-level W-order deadlock, which is a feature
 //! of the model, not a fuzz bug (DESIGN.md §1).
+//!
+//! The chiplet cells rerun the same differential on multi-die packages
+//! (DESIGN.md §10): {2,4} dies joined by D2D links of asymmetric width
+//! ratio and latency, with the same scalar golden (the package must
+//! deliver exactly the single-die bytes), opt/naive *and*
+//! sequential/threaded cycle+stats parity per cell, and every cross-die
+//! ledger drained. A `chiplets: 1` armed-but-unused guard cell pins the
+//! flag-off path bit-identical to the plain fabric.
 
 use axi_mcast::axi::mcast::AddrSet;
 use axi_mcast::axi::reduce::ReduceOp;
@@ -526,6 +534,99 @@ fn faulted_cells_recover_with_engine_parity() {
         assert_eq!(opt.out.wide, par.out.wide, "{ctx}: thread stats parity");
         assert_eq!(opt.out.l1, par.out.l1, "{ctx}: thread memory parity");
     }
+}
+
+/// Package config for the chiplet cells: `tiny(8)` split into
+/// `chiplets` dies joined by D2D links of the given width ratio and
+/// latency. The leader span is clamped to one die so the per-die trees
+/// stay well-formed at every count.
+fn pkg_cfg(chiplets: usize, width: u32, latency: u32) -> SocConfig {
+    let mut cfg = SocConfig::tiny(N);
+    cfg.clusters_per_group = cfg.clusters_per_group.min(N / chiplets);
+    cfg.package.chiplets = chiplets;
+    cfg.package.d2d_width_ratio = width;
+    cfg.package.d2d_latency = latency;
+    cfg.validate()
+        .unwrap_or_else(|e| panic!("{chiplets}-die fuzz cfg: {e}"));
+    cfg
+}
+
+/// Chiplet differential cells: random unicast + multicast + reduction
+/// interleavings on {2,4}-die packages with asymmetric D2D link
+/// parameters, memory bit-exact against the *single-die* scalar golden
+/// (the fabric of fabrics must deliver exactly the same bytes), with
+/// opt/naive and sequential/threaded cycle+stats parity per cell and
+/// the cross-die ledgers drained. The e2e-armed flavour sends global
+/// multicasts (and their reservation tickets) through the D2D
+/// gateways; the e2e-off flavour keeps multicast pairs die-local and
+/// crosses the gateways with unicasts, reads and reductions.
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn chiplet_cells_against_scalar_golden() {
+    let ref_cfg = SocConfig::tiny(N);
+    for (chiplets, width, latency) in [(2usize, 4u32, 8u32), (2, 8, 2), (4, 2, 12)] {
+        let seed = 0xC41F ^ ((chiplets as u64) << 8) ^ ((width as u64) << 4) ^ latency as u64;
+        let base = gen_workload(seed, false, true);
+        let base_golden = golden(&ref_cfg, &base);
+        let rich = gen_workload(seed ^ 0x9E37, true, true);
+        let rich_golden = golden(&ref_cfg, &rich);
+        for (w, gold, e2e) in [(&base, &base_golden, false), (&rich, &rich_golden, true)] {
+            for red in [false, true] {
+                let ctx =
+                    format!("{chiplets} dies d2d {width}:1/{latency}cy e2e={e2e} red={red}");
+                let mk = |naive: bool, threads: usize| {
+                    let mut cfg = pkg_cfg(chiplets, width, latency);
+                    cfg.e2e_mcast_order = e2e;
+                    cfg.fabric_reduce = red;
+                    cfg.force_naive = naive;
+                    cfg.threads = threads;
+                    cfg
+                };
+                let opt = run_cfg(mk(false, 1), w);
+                let naive = run_cfg(mk(true, 1), w);
+                let par = run_cfg(mk(false, 4), w);
+                for (r, eng) in [(&opt, "opt"), (&naive, "naive"), (&par, "par")] {
+                    assert_eq!(
+                        r.out.l1, *gold,
+                        "{ctx} {eng}: memory diverged from the single-die scalar golden"
+                    );
+                    assert_eq!(r.open_cpl_legs, 0, "{ctx} {eng}: undrained cpl legs");
+                    assert_eq!(r.open_reductions, 0, "{ctx} {eng}: undrained reductions");
+                    assert_eq!(r.resv_live, 0, "{ctx} {eng}: leaked resv tickets");
+                    assert_accounting(&r.out.wide, &format!("{ctx} {eng}"));
+                }
+                assert_eq!(opt.out.cycles, naive.out.cycles, "{ctx}: opt/naive cycle parity");
+                assert_eq!(opt.out.wide, naive.out.wide, "{ctx}: opt/naive stats parity");
+                assert_eq!(opt.out.cycles, par.out.cycles, "{ctx}: thread cycle parity");
+                assert_eq!(opt.out.wide, par.out.wide, "{ctx}: thread stats parity");
+            }
+        }
+    }
+}
+
+/// `chiplets: 1` armed-but-unused guard cell: a package config with
+/// non-default D2D parameters but a single die is the plain single-die
+/// fabric, bit for bit — cycles, statistics and memory.
+#[test]
+fn single_chiplet_package_is_bit_identical() {
+    let w = gen_workload(0x1D1E, true, true);
+    let mk = |armed: bool| {
+        let mut cfg = SocConfig::tiny(N);
+        cfg.e2e_mcast_order = true;
+        cfg.fabric_reduce = true;
+        if armed {
+            cfg.package.chiplets = 1;
+            cfg.package.d2d_width_ratio = 8;
+            cfg.package.d2d_latency = 16;
+            cfg.validate().unwrap();
+        }
+        cfg
+    };
+    let plain = run_cfg(mk(false), &w);
+    let armed = run_cfg(mk(true), &w);
+    assert_eq!(armed.out.cycles, plain.out.cycles, "chiplets=1: cycle divergence");
+    assert_eq!(armed.out.wide, plain.out.wide, "chiplets=1: stats divergence");
+    assert_eq!(armed.out.l1, plain.out.l1, "chiplets=1: memory divergence");
 }
 
 /// The ISSUE invariant on reduce-only traffic (no multicast forks to

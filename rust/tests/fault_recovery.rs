@@ -295,6 +295,31 @@ fn acceptance_mixed_traffic_recovers_across_two_groups() {
 }
 
 #[test]
+fn fault_scenario_is_bit_identical_across_threads() {
+    // The `faults`/`qos` benches and CLI commands forward the global
+    // `--threads` option into `SocConfig::threads` exactly like the
+    // toposweep and collectives harnesses — sound only because a
+    // timeout-recovering run is bit-identical under the parallel
+    // engine. Pinned here so the forwarding can't silently regress the
+    // published BENCH_faults.json numbers.
+    let base = SocConfig::tiny(8);
+    let golden = run_fault_scenario(&base, Some(FaultKind::Stall), 5, 512);
+    assert_fault_run_invariants(&golden);
+    for threads in [2usize, 4] {
+        let mut cfg = base.clone();
+        cfg.threads = threads;
+        let r = run_fault_scenario(&cfg, Some(FaultKind::Stall), 5, 512);
+        assert_eq!(r.cycles, golden.cycles, "threads={threads}: cycle divergence");
+        assert_eq!(r.wide, golden.wide, "threads={threads}: stats divergence");
+        assert_eq!(
+            r.error_tags, golden.error_tags,
+            "threads={threads}: error tags diverged"
+        );
+        assert_eq!(r.err_resps, golden.err_resps, "threads={threads}: error responses");
+    }
+}
+
+#[test]
 fn unarmed_timeouts_wedge_with_diagnosable_report() {
     // Same fault, deadlines off: the watchdog must fire and the
     // post-mortem must name the undrained state.
