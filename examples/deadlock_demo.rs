@@ -72,6 +72,7 @@ impl Master {
                 beat_bytes: 64,
                 is_mcast: true,
                 exclude: None,
+                window: None,
                 src: self.idx,
                 txn: self.txn,
                 ticket: None,

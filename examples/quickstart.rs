@@ -59,6 +59,7 @@ fn main() {
         beat_bytes: 64,
         is_mcast: true,
         exclude: None,
+        window: None,
         src: 0,
         txn: 1,
         ticket: None,

@@ -101,6 +101,7 @@ fn bench_xbar_16x16(cycles: u64, force_naive: bool) -> Row {
                     beat_bytes: 64,
                     is_mcast: true,
                     exclude: None,
+                    window: None,
                     src: m,
                     txn,
                     ticket: None,

@@ -1,0 +1,608 @@
+//! Analytic cost model driving `CollMode::Auto` (DESIGN.md §11).
+//!
+//! Given a collective pattern, a transfer size, and the wide-fabric
+//! shape, the model scores every schedule family the workload layer
+//! knows how to emit — software unicast trees/rings, one global
+//! multicast, concurrent per-rank chunk multicasts, and in-network
+//! fabric reduction — crossed with a small chunk-split ladder, and
+//! returns the cheapest plan. Costs are cycle *estimates* built from
+//! first principles: injected beats, hop distance, the hottest-link
+//! all-to-all cut of the shape, multicast fork cooldown, commit
+//! serialization against `max_mcast_outstanding`, and D2D beat
+//! serialization for multi-die packages. The absolute numbers are
+//! deliberately coarse; what the tuner needs is the *ordering*, and
+//! the `tunesweep` experiment measures the residual regret against
+//! ground truth per cell (EXPERIMENTS.md).
+//!
+//! Bias policy: the software baseline is scored optimistically (no
+//! contention cut, a 0.9 trim) while the fabric schedules carry every
+//! pessimistic term, so `Auto` only leaves `Sw` when a hardware
+//! schedule wins by a margin. A small per-reservation tax breaks
+//! schedule ties toward the mode with less machinery (e.g. plain
+//! `Mcast` over `ConcMcast` for the identical direct reduce-scatter
+//! schedule, and `ConcMcast` over `FabricReduce` when no reduction
+//! happens).
+//!
+//! The model deliberately mirrors the workload layer's fallbacks
+//! (concurrent broadcast below 4 ranks degenerates to one global
+//! multicast; the 2-rank all-gather is a ring exchange) so that the
+//! predicted schedule and the emitted schedule never diverge.
+
+/// Extra cost used to break ties between modes whose emitted
+/// schedules are identical — the simpler mode must win.
+const TIE_EPS: f64 = 1.0;
+
+/// Optimism factor applied to the software baseline (see module docs).
+const SW_TRIM: f64 = 0.9;
+
+/// Wide-fabric shape as the cost model sees it: just enough structure
+/// to compute hop depth and the hottest-link all-to-all cut. Built
+/// from `occamy::WideShape` by the workload layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShapeKind {
+    /// Single crossbar over all ranks.
+    Flat,
+    /// Two-level hierarchy, `per_group` ranks under each group xbar.
+    Groups { per_group: usize },
+    /// Bottom-up arity tree (product of arities = ranks).
+    Tree { arity: Vec<usize> },
+    /// Fully-connected mesh of `tiles` peer crossbars.
+    Mesh { tiles: usize },
+    /// Span-ordered (dateline) ring of `nodes` crossbars — wrap links
+    /// idle, so the worst path walks the whole span.
+    Ring { nodes: usize },
+    /// `cols`×`rows` torus, Y-first inter-row routing, datelined.
+    Torus { cols: usize, rows: usize },
+    /// Ring of `groups` mesh groups of `tiles` crossbars each, joined
+    /// through per-group gateway tiles.
+    RingMesh { groups: usize, tiles: usize },
+}
+
+impl ShapeKind {
+    /// Network diameter in crossbar hops (pipe-fill latency term).
+    pub fn depth(&self) -> f64 {
+        match self {
+            ShapeKind::Flat => 1.0,
+            ShapeKind::Groups { .. } => 3.0,
+            ShapeKind::Tree { arity } => (2 * arity.len()).saturating_sub(1) as f64,
+            ShapeKind::Mesh { .. } => 2.0,
+            ShapeKind::Ring { nodes } => nodes.saturating_sub(1) as f64,
+            ShapeKind::Torus { cols, rows } => (cols + rows - 1) as f64,
+            ShapeKind::RingMesh { groups, .. } => (2 * (groups - 1) + 2) as f64,
+        }
+    }
+
+    /// Hottest directed-link load of a *unicast* all-to-all over `n`
+    /// ranks, counted in pair-paths (flat = the destination ingress,
+    /// `n - 1`). Multicast phases don't pay this — forks replicate a
+    /// stream instead of sending per-pair, which is the whole point of
+    /// the fabric — but the direct reduce-scatter schedule does.
+    pub fn a2a_cut(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        let dest = nf - 1.0;
+        match self {
+            ShapeKind::Flat => dest,
+            ShapeKind::Groups { per_group } => {
+                let m = (*per_group).min(n) as f64;
+                dest.max(m * (nf - m))
+            }
+            ShapeKind::Tree { arity } => {
+                // cut above a subtree of s ranks carries s*(n-s) pairs
+                let mut s = 1usize;
+                let mut worst = dest;
+                for a in arity {
+                    s *= a;
+                    if s < n {
+                        worst = worst.max((s as f64) * (nf - s as f64));
+                    }
+                }
+                worst
+            }
+            ShapeKind::Mesh { tiles } => {
+                // dedicated tile-pair links each carry m*m pairs
+                let m = (n / (*tiles).max(1)) as f64;
+                dest.max(m * m)
+            }
+            ShapeKind::Ring { nodes } => {
+                // dateline routing: the middle span link carries every
+                // left-half -> right-half pair (no wrap relief)
+                let m = (n / (*nodes).max(1)) as f64;
+                let mut worst = dest;
+                for j in 1..*nodes {
+                    worst = worst.max((j as f64 * m) * ((nodes - j) as f64 * m));
+                }
+                worst
+            }
+            ShapeKind::Torus { cols, rows } => {
+                // Y-first: a column's Y cut carries (j nodes of that
+                // column) x (every dest row beyond it); then X within
+                // the dest row
+                let m = (n / (cols * rows).max(1)) as f64;
+                let mut worst = dest;
+                for j in 1..*rows {
+                    worst = worst.max((j as f64 * m) * ((rows - j) as f64 * *cols as f64 * m));
+                }
+                for x in 1..*cols {
+                    worst = worst.max((x as f64 * *rows as f64 * m) * ((cols - x) as f64 * m));
+                }
+                worst
+            }
+            ShapeKind::RingMesh { groups, tiles } => {
+                let e = (n / (groups * tiles).max(1)) as f64;
+                let grp = (*tiles as f64) * e;
+                let mut worst = dest.max(e * e).max(grp * (nf - grp));
+                for j in 1..*groups {
+                    worst = worst.max((j as f64 * grp) * ((groups - j) as f64 * grp));
+                }
+                worst
+            }
+        }
+    }
+}
+
+/// Collective pattern, mirroring `workloads::CollOp`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollPattern {
+    Broadcast,
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+}
+
+impl CollPattern {
+    pub const ALL: [CollPattern; 4] = [
+        CollPattern::Broadcast,
+        CollPattern::AllGather,
+        CollPattern::ReduceScatter,
+        CollPattern::AllReduce,
+    ];
+}
+
+/// Schedule family, mirroring the concrete `workloads::CollMode`s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Software unicast baseline (binomial tree / rings).
+    Unicast,
+    /// One global multicast (plus a root gather where needed).
+    Mcast,
+    /// Concurrent per-rank chunk multicasts (van de Geijn).
+    ConcMcast,
+    /// In-network reduction joins plus concurrent multicasts.
+    FabricReduce,
+}
+
+impl SchedMode {
+    pub const ALL: [SchedMode; 4] = [
+        SchedMode::Unicast,
+        SchedMode::Mcast,
+        SchedMode::ConcMcast,
+        SchedMode::FabricReduce,
+    ];
+
+    /// Same labels as the workload layer's `CollMode::name`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::Unicast => "sw",
+            SchedMode::Mcast => "hw-mcast",
+            SchedMode::ConcMcast => "hw-concurrent",
+            SchedMode::FabricReduce => "hw-reduce",
+        }
+    }
+}
+
+/// D2D package terms for a multi-die SoC.
+#[derive(Clone, Copy, Debug)]
+pub struct D2dCost {
+    pub dies: usize,
+    /// Cycles of narrow-lane occupancy per wide beat crossing a die gap.
+    pub width_ratio: u32,
+    /// Per-crossing latency in cycles.
+    pub latency: u32,
+}
+
+/// One scored (mode, chunk-split) candidate.
+#[derive(Clone, Debug)]
+pub struct PlanChoice {
+    pub mode: SchedMode,
+    /// Sub-chunks each concurrent multicast is split into (1 = the
+    /// classic one-chunk-per-rank schedule).
+    pub chunks: usize,
+    /// Estimated cycles.
+    pub cost: f64,
+}
+
+/// The tuner's output: the winning candidate plus the full scoreboard
+/// (sorted ascending by cost) for reporting.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub best: PlanChoice,
+    pub scored: Vec<PlanChoice>,
+}
+
+/// Analytic fabric model. Build one per (config, shape); score with
+/// [`CostModel::plan`].
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub n_ranks: usize,
+    /// Wide-bus beat width in bytes.
+    pub beat_bytes: u64,
+    pub shape: ShapeKind,
+    /// Concurrent multicast commit slots (`XbarCfg::max_mcast_outstanding`).
+    pub max_mcast_outstanding: u32,
+    /// Multicast commit handshake latency (`XbarCfg::mcast_commit_lat`).
+    pub mcast_commit_lat: u32,
+    /// W-fork cooldown cycles (`XbarCfg::mcast_w_cooldown`).
+    pub mcast_w_cooldown: u32,
+    /// Per-hop pipeline latency estimate (cycles).
+    pub hop_lat: f64,
+    /// Cost of one mailbox-IRQ synchronization round (cycles).
+    pub sync_lat: f64,
+    /// Per-reservation-ticket bookkeeping tax (cycles); breaks ties
+    /// toward modes with less ledger machinery.
+    pub resv_tax: f64,
+    pub d2d: Option<D2dCost>,
+}
+
+impl CostModel {
+    /// Model with the simulator's default timing estimates; override
+    /// the public fields for non-default fabrics.
+    pub fn new(n_ranks: usize, beat_bytes: u64, shape: ShapeKind) -> CostModel {
+        assert!(n_ranks >= 2 && beat_bytes > 0);
+        CostModel {
+            n_ranks,
+            beat_bytes,
+            shape,
+            max_mcast_outstanding: 4,
+            mcast_commit_lat: 8,
+            mcast_w_cooldown: 1,
+            hop_lat: 4.0,
+            sync_lat: 150.0,
+            resv_tax: 2.0,
+            d2d: None,
+        }
+    }
+
+    /// Score every (mode, chunk-split) candidate for `pattern` over
+    /// `bytes` total payload and return the sorted scoreboard.
+    pub fn plan(&self, pattern: CollPattern, bytes: u64) -> Plan {
+        let chunk = bytes / self.n_ranks as u64;
+        let mut scored = Vec::new();
+        for mode in SchedMode::ALL {
+            for k in self.chunk_candidates(pattern, mode, chunk) {
+                scored.push(PlanChoice {
+                    mode,
+                    chunks: k,
+                    cost: self.cost(pattern, mode, bytes, k),
+                });
+            }
+        }
+        scored.sort_by(|a, b| a.cost.total_cmp(&b.cost));
+        Plan {
+            best: scored[0].clone(),
+            scored,
+        }
+    }
+
+    /// Sub-chunk ladder for schedules that emit concurrent multicasts;
+    /// everything else runs unsplit. Splits must keep every sub-chunk
+    /// beat-aligned.
+    fn chunk_candidates(&self, pattern: CollPattern, mode: SchedMode, chunk: u64) -> Vec<usize> {
+        let has_conc_phase = matches!(mode, SchedMode::ConcMcast | SchedMode::FabricReduce)
+            && pattern != CollPattern::ReduceScatter
+            && !(pattern == CollPattern::Broadcast && self.n_ranks < 4);
+        if !has_conc_phase {
+            return vec![1];
+        }
+        [1usize, 2, 4]
+            .into_iter()
+            .filter(|&k| chunk % (k as u64 * self.beat_bytes) == 0)
+            .collect()
+    }
+
+    /// Estimated cycles for one (pattern, mode, split) candidate.
+    pub fn cost(&self, pattern: CollPattern, mode: SchedMode, bytes: u64, k: usize) -> f64 {
+        let n = self.n_ranks as f64;
+        let chunk = bytes / self.n_ranks as u64;
+        match (pattern, mode) {
+            (CollPattern::Broadcast, SchedMode::Unicast) => {
+                let rounds = n.log2().ceil();
+                let round = self.bb(bytes) * self.wr() + self.base() + self.sync_lat;
+                SW_TRIM * rounds * round
+            }
+            (CollPattern::Broadcast, SchedMode::Mcast) => self.mcast_xfer(bytes) + self.sync_lat,
+            (CollPattern::Broadcast, SchedMode::ConcMcast) => {
+                if self.n_ranks < 4 {
+                    // schedule degenerates to one global multicast
+                    self.mcast_xfer(bytes) + self.sync_lat + TIE_EPS
+                } else {
+                    self.root_fan(chunk) + self.conc_phase(bytes, k)
+                }
+            }
+            (CollPattern::Broadcast, SchedMode::FabricReduce) => {
+                // identical schedule to ConcMcast, plus armed ledgers
+                self.cost(pattern, SchedMode::ConcMcast, bytes, k) + 2.0 * TIE_EPS
+            }
+            (CollPattern::AllGather, SchedMode::Unicast) => {
+                let round = self.bb(chunk) * self.wr() + self.neighbor_lat() + self.sync_lat;
+                SW_TRIM * (n - 1.0) * round
+            }
+            (CollPattern::AllGather, SchedMode::Mcast) => {
+                if self.n_ranks == 2 {
+                    self.bb(chunk) * self.wr() + self.neighbor_lat() + self.sync_lat
+                } else {
+                    self.root_fan(chunk) + self.mcast_xfer(bytes) + self.sync_lat
+                }
+            }
+            (CollPattern::AllGather, SchedMode::ConcMcast) => self.conc_phase(bytes, k),
+            (CollPattern::AllGather, SchedMode::FabricReduce) => {
+                self.conc_phase(bytes, k) + 2.0 * TIE_EPS
+            }
+            (CollPattern::ReduceScatter, SchedMode::Unicast) => {
+                // each ring round moves a slice and combines it locally
+                let xfer = self.bb(chunk) * (self.wr() + 1.0);
+                SW_TRIM * (n - 1.0) * (xfer + self.neighbor_lat() + self.sync_lat)
+            }
+            (CollPattern::ReduceScatter, SchedMode::Mcast) => self.direct_rs(chunk),
+            (CollPattern::ReduceScatter, SchedMode::ConcMcast) => self.direct_rs(chunk) + TIE_EPS,
+            (CollPattern::ReduceScatter, SchedMode::FabricReduce) => self.fabric_rs(chunk),
+            (CollPattern::AllReduce, SchedMode::Unicast) => {
+                self.cost(CollPattern::ReduceScatter, SchedMode::Unicast, bytes, 1)
+                    + self.cost(CollPattern::AllGather, SchedMode::Unicast, bytes, 1)
+            }
+            (CollPattern::AllReduce, SchedMode::Mcast) => {
+                // hierarchical leaders: full vectors up, combine,
+                // leader exchange, one multicast down
+                2.0 * self.bb(bytes) * self.wr()
+                    + self.bb(bytes)
+                    + self.mcast_xfer(bytes)
+                    + 3.0 * self.sync_lat
+            }
+            (CollPattern::AllReduce, SchedMode::ConcMcast) => {
+                self.direct_rs(chunk) + self.conc_phase(bytes, k)
+            }
+            (CollPattern::AllReduce, SchedMode::FabricReduce) => {
+                self.fabric_rs(chunk) + self.conc_phase(bytes, k)
+            }
+        }
+    }
+
+    // ---- primitive terms -------------------------------------------------
+
+    /// Beats for `bytes` on the wide bus.
+    fn bb(&self, bytes: u64) -> f64 {
+        bytes.div_ceil(self.beat_bytes) as f64
+    }
+
+    /// D2D serialization factor on data beats (1 on a single die).
+    fn wr(&self) -> f64 {
+        self.d2d.map_or(1.0, |d| d.width_ratio as f64)
+    }
+
+    /// Cycles each forked beat occupies the fork engine.
+    fn cool(&self) -> f64 {
+        (1 + self.mcast_w_cooldown) as f64
+    }
+
+    /// Pipe-fill latency across the diameter (plus D2D crossings).
+    fn base(&self) -> f64 {
+        let dies = self.d2d.map_or(1, |d| d.dies);
+        let lat = self.d2d.map_or(0, |d| d.latency as usize);
+        self.shape.depth() * self.hop_lat + ((dies - 1) * lat) as f64
+    }
+
+    /// Latency of a nearest-neighbor hop (software ring rounds).
+    fn neighbor_lat(&self) -> f64 {
+        2.0 * self.hop_lat + self.d2d.map_or(0.0, |d| d.latency as f64)
+    }
+
+    /// Commit-handshake serialization for `mcasts` concurrent
+    /// multicasts against the outstanding-commit cap.
+    fn commit(&self, mcasts: usize) -> f64 {
+        ((mcasts as u64).div_ceil(self.max_mcast_outstanding.max(1) as u64)
+            * self.mcast_commit_lat as u64) as f64
+    }
+
+    /// One global multicast of `bytes`: commit handshake, then a beat
+    /// stream bound by the fork cooldown (or D2D serialization,
+    /// whichever is slower), plus pipe fill.
+    fn mcast_xfer(&self, bytes: u64) -> f64 {
+        self.commit(1) + self.bb(bytes) * self.cool().max(self.wr()) + self.base()
+    }
+
+    /// Root-centred fan (scatter from, or gather to, rank 0) of n-1
+    /// slices: bound by the root link, or the root die's D2D links.
+    fn root_fan(&self, chunk: u64) -> f64 {
+        let n = self.n_ranks as f64;
+        let moved = self.bb(chunk) * (n - 1.0);
+        let d2d = self.d2d.map_or(0.0, |d| {
+            let off_die = n - (self.n_ranks / d.dies) as f64;
+            off_die * self.bb(chunk) * d.width_ratio as f64
+        });
+        moved.max(d2d) + self.base() + self.sync_lat
+    }
+
+    /// The concurrent-multicast phase: every rank multicasts its slice
+    /// (split into `k` sub-chunks) to all ranks. Each link carries at
+    /// most one copy of every stream, so the bound is total beats at
+    /// the fork/D2D rate — not the unicast all-to-all cut. Splitting
+    /// overlaps fork pipe-fill with injection but costs extra commits.
+    fn conc_phase(&self, bytes: u64, k: usize) -> f64 {
+        let commits = self.commit(self.n_ranks * k);
+        let depth_fill = (self.shape.depth() - 1.0).max(0.0) * self.hop_lat;
+        let overlap_gain = (1.0 - 1.0 / k as f64) * depth_fill * 0.5;
+        let stream = self.bb(bytes) * self.cool().max(self.wr());
+        commits + stream + self.base() + self.sync_lat - overlap_gain
+    }
+
+    /// Direct reduce-scatter: unicast all-to-all of slices (pays the
+    /// shape's hottest-link cut) plus a software combine of n-1
+    /// incoming slices at every destination.
+    fn direct_rs(&self, chunk: u64) -> f64 {
+        let n = self.n_ranks as f64;
+        let cut = self.shape.a2a_cut(self.n_ranks).max(self.d2d_a2a_cut());
+        cut * self.bb(chunk) + (n - 1.0) * self.bb(chunk) + self.base() + self.sync_lat
+    }
+
+    /// In-network reduce-scatter: sources still inject n-1 slices each,
+    /// but joins collapse the stream en route, so no software combine
+    /// and no destination pile-up — just the reservation-ledger tax.
+    fn fabric_rs(&self, chunk: u64) -> f64 {
+        let n = self.n_ranks as f64;
+        let inject = (n - 1.0) * self.bb(chunk) * self.wr();
+        inject + self.base() + self.sync_lat + n * self.resv_tax
+    }
+
+    /// Unicast all-to-all pair-paths over the hottest D2D link,
+    /// scaled by the serialization ratio.
+    fn d2d_a2a_cut(&self) -> f64 {
+        self.d2d.map_or(0.0, |d| {
+            let q = (self.n_ranks / d.dies) as f64;
+            q * (self.n_ranks as f64 - q) * d.width_ratio as f64
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes8() -> Vec<ShapeKind> {
+        vec![
+            ShapeKind::Flat,
+            ShapeKind::Groups { per_group: 4 },
+            ShapeKind::Tree { arity: vec![2, 2, 2] },
+            ShapeKind::Mesh { tiles: 2 },
+            ShapeKind::Ring { nodes: 2 },
+        ]
+    }
+
+    fn shapes16() -> Vec<ShapeKind> {
+        vec![
+            ShapeKind::Flat,
+            ShapeKind::Groups { per_group: 4 },
+            ShapeKind::Mesh { tiles: 4 },
+            ShapeKind::Ring { nodes: 4 },
+            ShapeKind::Torus { cols: 2, rows: 2 },
+            ShapeKind::RingMesh { groups: 2, tiles: 2 },
+        ]
+    }
+
+    #[test]
+    fn single_mcast_wins_broadcast_on_every_shape() {
+        for shape in shapes8() {
+            let m = CostModel::new(8, 64, shape.clone());
+            let plan = m.plan(CollPattern::Broadcast, 4096);
+            assert_eq!(plan.best.mode, SchedMode::Mcast, "{shape:?}: {:?}", plan.scored);
+        }
+        for shape in shapes16() {
+            let m = CostModel::new(16, 64, shape.clone());
+            let plan = m.plan(CollPattern::Broadcast, 8192);
+            assert_eq!(plan.best.mode, SchedMode::Mcast, "{shape:?}");
+        }
+    }
+
+    #[test]
+    fn concurrent_mcasts_win_all_gather_on_every_shape() {
+        for shape in shapes8() {
+            let m = CostModel::new(8, 64, shape.clone());
+            let plan = m.plan(CollPattern::AllGather, 4096);
+            assert_eq!(plan.best.mode, SchedMode::ConcMcast, "{shape:?}");
+        }
+        for shape in shapes16() {
+            let m = CostModel::new(16, 64, shape.clone());
+            let plan = m.plan(CollPattern::AllGather, 8192);
+            assert_eq!(plan.best.mode, SchedMode::ConcMcast, "{shape:?}");
+        }
+    }
+
+    #[test]
+    fn fabric_reduce_wins_reduce_scatter_and_all_reduce() {
+        for shape in shapes16() {
+            let m = CostModel::new(16, 64, shape.clone());
+            for pat in [CollPattern::ReduceScatter, CollPattern::AllReduce] {
+                let plan = m.plan(pat, 8192);
+                assert_eq!(plan.best.mode, SchedMode::FabricReduce, "{shape:?} {pat:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn identical_rs_schedules_tie_toward_plain_mcast() {
+        let m = CostModel::new(8, 64, ShapeKind::Flat);
+        let hw = m.cost(CollPattern::ReduceScatter, SchedMode::Mcast, 4096, 1);
+        let conc = m.cost(CollPattern::ReduceScatter, SchedMode::ConcMcast, 4096, 1);
+        assert!(hw < conc, "tie must break toward the simpler mode");
+    }
+
+    #[test]
+    fn chunk_ladder_is_scored_but_single_chunk_wins_by_default() {
+        let m = CostModel::new(8, 64, ShapeKind::Ring { nodes: 2 });
+        let plan = m.plan(CollPattern::AllGather, 32 * 1024);
+        let deep = |c: &PlanChoice| c.mode == SchedMode::ConcMcast && c.chunks == 4;
+        assert!(plan.scored.iter().any(deep));
+        assert_eq!(plan.best.chunks, 1, "{:?}", plan.best);
+        // chunk candidates stay beat-aligned: 8 ranks x 64B chunk has
+        // only the k=1 split
+        let tiny = CostModel::new(8, 64, ShapeKind::Flat).plan(CollPattern::AllGather, 512);
+        assert!(tiny.scored.iter().all(|c| c.chunks == 1));
+    }
+
+    #[test]
+    fn ring_cut_dominates_flat_and_scales_with_span() {
+        let flat = ShapeKind::Flat.a2a_cut(16);
+        let ring = ShapeKind::Ring { nodes: 4 }.a2a_cut(16);
+        assert!(ring > flat, "ring middle cut {ring} vs flat {flat}");
+        assert_eq!(ShapeKind::Ring { nodes: 4 }.a2a_cut(16), 64.0);
+        assert_eq!(ShapeKind::Torus { cols: 2, rows: 2 }.a2a_cut(16), 32.0);
+        assert_eq!(ShapeKind::RingMesh { groups: 2, tiles: 2 }.a2a_cut(16), 64.0);
+        for s in shapes16() {
+            assert!(s.a2a_cut(16) >= 15.0, "{s:?} cut below dest ingress");
+        }
+    }
+
+    #[test]
+    fn scoreboard_is_sorted_and_covers_all_modes() {
+        let m = CostModel::new(16, 64, ShapeKind::Torus { cols: 2, rows: 2 });
+        for pat in CollPattern::ALL {
+            let plan = m.plan(pat, 16 * 1024);
+            assert!(plan.scored.windows(2).all(|w| w[0].cost <= w[1].cost));
+            for mode in SchedMode::ALL {
+                assert!(plan.scored.iter().any(|c| c.mode == mode), "{pat:?} {mode:?}");
+            }
+            for c in &plan.scored {
+                assert!(c.cost.is_finite() && c.cost > 0.0, "{pat:?} {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_rank_fallbacks_mirror_the_emitted_schedules() {
+        let m = CostModel::new(2, 64, ShapeKind::Flat);
+        let mc = m.cost(CollPattern::Broadcast, SchedMode::Mcast, 1024, 1);
+        let conc = m.cost(CollPattern::Broadcast, SchedMode::ConcMcast, 1024, 1);
+        assert!((conc - mc - TIE_EPS).abs() < 1e-9, "n<4 falls back to one mcast");
+        // the 2-rank all-gather degenerates to a neighbor exchange on
+        // both paths; the optimism trim keeps Auto on the software side
+        let ag = m.plan(CollPattern::AllGather, 1024);
+        assert_eq!(ag.best.mode, SchedMode::Unicast);
+    }
+
+    #[test]
+    fn d2d_serialization_raises_every_fabric_schedule() {
+        let on_die = CostModel::new(8, 64, ShapeKind::Flat);
+        let mut pkg = CostModel::new(8, 64, ShapeKind::Flat);
+        pkg.d2d = Some(D2dCost {
+            dies: 2,
+            width_ratio: 4,
+            latency: 8,
+        });
+        for pat in CollPattern::ALL {
+            for mode in [SchedMode::Mcast, SchedMode::ConcMcast, SchedMode::FabricReduce] {
+                assert!(
+                    pkg.cost(pat, mode, 4096, 1) > on_die.cost(pat, mode, 4096, 1),
+                    "{pat:?} {mode:?}"
+                );
+            }
+        }
+    }
+}

@@ -34,6 +34,10 @@ pub struct TargetAw {
     /// (see `xbar` docs — the model's equivalent of the RTL's up-rule
     /// decomposition).
     pub exclude: Option<(u64, u64)>,
+    /// Ring-routing include window (see [`crate::axi::types::AwBeat`]):
+    /// only the members of `dest` inside this interval ride this leg.
+    /// `None` everywhere outside ring fabrics.
+    pub window: Option<(u64, u64)>,
 }
 
 /// Fork-target list of one decoded AW, allocation-free up to
@@ -363,6 +367,7 @@ pub fn targets_from_decode(d: &McastDecode) -> Vec<TargetAw> {
             slave: *s,
             dest: *sub,
             exclude: None,
+            window: None,
         })
         .collect()
 }
@@ -379,6 +384,7 @@ mod tests {
             beat_bytes: 64,
             is_mcast,
             exclude: None,
+            window: None,
             src: 0,
             txn,
             ticket: None,
@@ -393,6 +399,7 @@ mod tests {
                 slave: s,
                 dest: AddrSet::unicast(0x1000),
                 exclude: None,
+                window: None,
             })
             .collect()
     }

@@ -270,6 +270,7 @@ mod tests {
             beat_bytes: 64,
             is_mcast: false,
             exclude: None,
+            window: None,
             src: 0,
             txn,
             ticket: None,

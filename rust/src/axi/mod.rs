@@ -26,10 +26,13 @@
 //! * [`monitor`] — protocol checkers used by tests.
 //! * [`golden`] — reference memory model for traffic equivalence tests.
 //! * [`topology`] — declarative builder instantiating arbitrary
-//!   hierarchical multi-crossbar graphs (flat, trees, meshes) over a
-//!   shared [`types::LinkPool`].
+//!   hierarchical multi-crossbar graphs (flat, trees, meshes, rings,
+//!   tori, rings-of-meshes) over a shared [`types::LinkPool`].
+//! * [`costmodel`] — analytic cycle estimator scoring collective
+//!   schedule candidates per fabric shape; drives `CollMode::Auto`.
 
 pub mod addr_map;
+pub mod costmodel;
 pub mod demux;
 pub mod golden;
 pub mod mcast;
@@ -42,6 +45,7 @@ pub mod types;
 pub mod xbar;
 
 pub use addr_map::{AddrMap, AddrRule, McastDecode};
+pub use costmodel::{CollPattern, CostModel, Plan, PlanChoice, SchedMode, ShapeKind};
 pub use mcast::AddrSet;
 pub use reduce::{RedNode, RedTag, ReduceHandle, ReduceLedger, ReduceOp};
 pub use resv::{ResvHandle, ResvLedger, ResvNode, ResvSeq};

@@ -237,7 +237,7 @@ impl ReduceLedger {
                 let info = &self.nodes[node];
                 let (targets, resp) = info
                     .cfg
-                    .decode_aw(&super::mcast::AddrSet::unicast(dst), None);
+                    .decode_aw(&super::mcast::AddrSet::unicast(dst), None, None);
                 assert!(
                     !resp.is_err() && targets.len() == 1,
                     "reduce: group {group} dst {dst:#x} does not decode to a \

@@ -164,11 +164,12 @@ impl ResvLedger {
         entry: ResvNode,
         dest: &AddrSet,
         exclude: Option<(u64, u64)>,
+        window: Option<(u64, u64)>,
     ) -> ResvSeq {
         let seq = self.next_seq;
         self.next_seq += 1;
         let mut claims = Vec::new();
-        self.walk(entry.0, dest, exclude, &mut claims);
+        self.walk(entry.0, dest, exclude, window, &mut claims);
         debug_assert!(!claims.is_empty());
         for &n in &claims {
             debug_assert!(
@@ -194,6 +195,7 @@ impl ResvLedger {
         node: usize,
         dest: &AddrSet,
         exclude: Option<(u64, u64)>,
+        window: Option<(u64, u64)>,
         out: &mut Vec<usize>,
     ) {
         assert!(
@@ -204,10 +206,10 @@ impl ResvLedger {
             self.nodes[node].cfg.name
         );
         out.push(node);
-        let (targets, _resp) = self.nodes[node].cfg.decode_aw(dest, exclude);
+        let (targets, _resp) = self.nodes[node].cfg.decode_aw(dest, exclude, window);
         for t in targets.iter() {
             if let Some(next) = self.nodes[node].down[t.slave] {
-                self.walk(next.0, &t.dest, t.exclude, out);
+                self.walk(next.0, &t.dest, t.exclude, t.window, out);
             }
         }
     }
@@ -287,9 +289,10 @@ impl ResvLedger {
         seq: ResvSeq,
         dest: &AddrSet,
         exclude: Option<(u64, u64)>,
+        window: Option<(u64, u64)>,
     ) {
         let mut sub = Vec::new();
-        self.walk(node.0, dest, exclude, &mut sub);
+        self.walk(node.0, dest, exclude, window, &mut sub);
         for n in sub {
             if let Some(pos) = self.queues[n].iter().position(|&s| s == seq) {
                 self.queues[n].remove(pos);
@@ -373,7 +376,7 @@ mod tests {
     #[test]
     fn reserve_claims_every_traversed_node() {
         let (mut led, [l0, l1, root]) = tree_ledger();
-        let seq = led.reserve(l0, &all_eps(), None);
+        let seq = led.reserve(l0, &all_eps(), None, None);
         // entry leaf + root + the sibling leaf; the source leaf is not
         // revisited (the exclude scope prunes the echo at the root)
         for n in [l0, root, l1] {
@@ -387,7 +390,7 @@ mod tests {
     fn local_multicast_claims_only_its_leaf() {
         let (mut led, [l0, l1, root]) = tree_ledger();
         // endpoints {0,1} both live under leaf 0
-        let seq = led.reserve(l0, &AddrSet::new(BASE, STRIDE), None);
+        let seq = led.reserve(l0, &AddrSet::new(BASE, STRIDE), None, None);
         assert!(led.is_front(l0, seq));
         assert_eq!(led.queue_len(root), 0);
         assert_eq!(led.queue_len(l1), 0);
@@ -396,8 +399,8 @@ mod tests {
     #[test]
     fn tickets_commit_in_global_order_per_node() {
         let (mut led, [l0, l1, root]) = tree_ledger();
-        let a = led.reserve(l0, &all_eps(), None);
-        let b = led.reserve(l1, &all_eps(), None);
+        let a = led.reserve(l0, &all_eps(), None, None);
+        let b = led.reserve(l1, &all_eps(), None, None);
         assert!(a < b, "tickets are globally ordered");
         // b is blocked everywhere a still holds the front
         assert!(!led.is_front(l1, b), "b entered after a claimed leaf 1");
@@ -420,20 +423,20 @@ mod tests {
     #[should_panic(expected = "out-of-order commit")]
     fn out_of_order_commit_panics() {
         let (mut led, [l0, l1, _root]) = tree_ledger();
-        let _a = led.reserve(l0, &all_eps(), None);
-        let b = led.reserve(l1, &all_eps(), None);
+        let _a = led.reserve(l0, &all_eps(), None, None);
+        let b = led.reserve(l1, &all_eps(), None, None);
         led.commit(l1, b); // a holds the front at leaf 1
     }
 
     #[test]
     fn release_subtree_unwinds_only_the_timed_out_leg() {
         let (mut led, [l0, l1, root]) = tree_ledger();
-        let a = led.reserve(l0, &all_eps(), None);
-        let b = led.reserve(l1, &all_eps(), None);
+        let a = led.reserve(l0, &all_eps(), None, None);
+        let b = led.reserve(l1, &all_eps(), None, None);
         led.commit(l0, a);
         led.commit(root, a);
         // a's leg into leaf 1 times out; only that claim unwinds
-        led.release_subtree(l1, a, &AddrSet::new(BASE + 2 * STRIDE, STRIDE), None);
+        led.release_subtree(l1, a, &AddrSet::new(BASE + 2 * STRIDE, STRIDE), None, None);
         assert_eq!(led.stats.released_claims, 1);
         assert_eq!(led.live_tickets(), 1);
         // b now owns every front and proceeds normally
@@ -447,8 +450,8 @@ mod tests {
     #[test]
     fn release_unwinds_remaining_claims() {
         let (mut led, [l0, l1, root]) = tree_ledger();
-        let a = led.reserve(l0, &all_eps(), None);
-        let b = led.reserve(l1, &all_eps(), None);
+        let a = led.reserve(l0, &all_eps(), None, None);
+        let b = led.reserve(l1, &all_eps(), None, None);
         led.commit(l0, a);
         led.release(a); // back off: root + leaf-1 claims unwind
         assert!(led.is_front(root, b));

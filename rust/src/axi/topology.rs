@@ -19,6 +19,18 @@
 //!   with direct per-region routes (no default port, no scopes): a
 //!   multicast decomposes into per-tile mask-form subsets at the source
 //!   tile, one hop to every peer.
+//! * [`build_ring`] — a bidirectional ring of equal nodes routed
+//!   span-ordered (dateline-style, see `xbar::RingLevel`): a multicast
+//!   forks into at most one descending and one ascending leg, each
+//!   carrying an include *window* that shrinks hop by hop.
+//! * [`build_torus2d`] — a 2-D torus, row-major with the X dimension
+//!   innermost: Y legs distribute whole rows, X legs distribute within
+//!   a row, dimension-ordered so every node is visited at most once.
+//! * [`build_ring_mesh`] — rings of fully-connected mesh groups: each
+//!   group is a [`build_mesh`]-style tile cluster whose tile 0 is the
+//!   **gateway** carrying the group's ring ports; in-group traffic
+//!   takes direct peer routes, everything else funnels through the
+//!   gateway onto the ring.
 //!
 //! All shapes deliver a given multicast request to exactly the decoded
 //! endpoint set, exactly once — the parity suites in
@@ -30,7 +42,7 @@ use super::mux::ArbPolicy;
 use super::reduce::{RedNode, ReduceHandle, ReduceLedger};
 use super::resv::{ResvHandle, ResvLedger, ResvNode};
 use super::types::{AxiLink, LinkId, LinkPool};
-use super::xbar::{Xbar, XbarCfg, XbarStats};
+use super::xbar::{RingLevel, Xbar, XbarCfg, XbarStats};
 use crate::sim::link::D2dParams;
 use crate::sim::sched::Scheduler;
 use crate::sim::Cycle;
@@ -1148,6 +1160,516 @@ pub fn build_chiplets(
     }
 }
 
+/// A bidirectional ring of `nodes` equal crossbars, each owning a
+/// contiguous aligned block of endpoints. Routing is span-ordered
+/// (dateline at node 0, see `xbar::RingLevel`): a request for a lower
+/// address leaves on the descending port, higher on the ascending one,
+/// and the physical wrap links are wired but idle — which keeps the
+/// W transport's waits-for chains monotone (no wormhole deadlock
+/// without virtual channels) and the reservation ledger's no-revisit
+/// walk trivially valid. A multicast forks into at most one leg per
+/// direction, each carrying an include window that shrinks hop by hop.
+#[derive(Debug, Clone)]
+pub struct RingSpec {
+    pub name: String,
+    pub endpoints: EndpointMap,
+    /// Ring stops (>= 2); must divide `endpoints.count`.
+    pub nodes: usize,
+    pub params: FabricParams,
+    /// Service windows `(start, end, name)` hosted on node 0 — every
+    /// other node sends them down its descending port (`default_slave`)
+    /// toward the dateline, hop by hop.
+    pub services: Vec<(u64, u64, String)>,
+}
+
+pub struct RingTopology {
+    pub topo: Topology,
+    pub endpoint_m: Vec<LinkId>,
+    pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: the ring node it attaches to.
+    pub endpoint_nodes: Vec<NodeId>,
+    /// One per [`RingSpec::services`] entry, in order (all on node 0).
+    pub service_s: Vec<LinkId>,
+}
+
+/// Build a bidirectional ring; `tune(cfg, node)` may adjust each node's
+/// crossbar knobs (mirrors [`build_mesh`]'s per-tile hook).
+pub fn build_ring(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    spec: &RingSpec,
+    mut tune: impl FnMut(&mut XbarCfg, usize),
+) -> RingTopology {
+    let eps = &spec.endpoints;
+    let n = spec.nodes;
+    assert!(n >= 2, "{}: a ring needs at least 2 nodes", spec.name);
+    assert_eq!(
+        eps.count % n,
+        0,
+        "{}: nodes must divide the endpoint count",
+        spec.name
+    );
+    let e = eps.count / n;
+    let span = eps.region(0, eps.count);
+    let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
+
+    // ports per node: masters = e locals + down-in + up-in;
+    // slaves = e locals + down-out + up-out [+ services on node 0]
+    let (down, up) = (e, e + 1);
+    let mut nodes = Vec::with_capacity(n);
+    for q in 0..n {
+        let first = q * e;
+        let mut rules: Vec<AddrRule> = (0..e).map(|i| eps.rule(first + i, i)).collect();
+        if q == 0 {
+            for (si, (s, end, name)) in spec.services.iter().enumerate() {
+                rules.push(AddrRule::new(*s, *end, e + 2 + si, name));
+            }
+        }
+        let n_slaves = e + 2 + if q == 0 { spec.services.len() } else { 0 };
+        let n_masters = e + 2;
+        let map = AddrMap::new(rules, n_slaves)
+            .unwrap_or_else(|err| panic!("{}: node {q} map: {err}", spec.name));
+        let mut cfg = XbarCfg::new(&format!("{}-n{}", spec.name, q), n_masters, n_slaves, map);
+        spec.params.apply(&mut cfg);
+        // every ring stop is both leaf and converging point
+        spec.params.apply_root(&mut cfg);
+        cfg.ring = vec![RingLevel {
+            down_port: down,
+            up_port: up,
+            span,
+            local: eps.region(first, e),
+        }];
+        if q > 0 {
+            // off-span traffic (service windows) heads for the
+            // dateline, span-ordered like everything else
+            cfg.default_slave = Some(down);
+        }
+        if !spec.params.endpoint_prio.is_empty() {
+            // locals carry their own priority; ring-in ports can carry
+            // traffic from anywhere else on the ring
+            let mut prio: Vec<u32> = (0..e).map(|i| spec.params.prio_of(first + i)).collect();
+            prio.push(spec.params.prio_max_outside(first, e, eps.count));
+            prio.push(spec.params.prio_max_outside(first, e, eps.count));
+            cfg.master_prio = prio;
+        }
+        tune(&mut cfg, q);
+        nodes.push(b.node(cfg));
+    }
+
+    // endpoint ports
+    let mut endpoint_m = Vec::with_capacity(eps.count);
+    let mut endpoint_s = Vec::with_capacity(eps.count);
+    let mut endpoint_nodes = Vec::with_capacity(eps.count);
+    for q in 0..n {
+        for i in 0..e {
+            let ep = q * e + i;
+            endpoint_m.push(b.ext_master(nodes[q], i, &format!("ep{ep}-m")));
+            endpoint_s.push(b.ext_slave(nodes[q], i, &format!("ep{ep}-s")));
+            endpoint_nodes.push(nodes[q]);
+        }
+    }
+
+    // neighbour wiring, wrap links included: q's up-out feeds q+1's
+    // down-in (master port `down`), q's down-out feeds q-1's up-in
+    for q in 0..n {
+        b.connect(nodes[q], up, nodes[(q + 1) % n], down);
+        b.connect(nodes[q], down, nodes[(q + n - 1) % n], up);
+    }
+
+    let service_s: Vec<LinkId> = spec
+        .services
+        .iter()
+        .enumerate()
+        .map(|(si, (_, _, name))| b.ext_slave(nodes[0], e + 2 + si, name))
+        .collect();
+
+    RingTopology {
+        topo: b.build(),
+        endpoint_m,
+        endpoint_s,
+        endpoint_nodes,
+        service_s,
+    }
+}
+
+/// A `cols`×`rows` 2-D torus, row-major (node `(x, y)` is index
+/// `y*cols + x` and owns the endpoint block at that index). Each node
+/// carries two ring dimensions, X innermost (span = its row) and Y
+/// outermost (span = everything): requests route dimension-ordered
+/// Y-then-X, multicasts distribute rows on the Y legs and fan out
+/// within each row on the X legs, so every node is visited at most
+/// once. Both dimensions are span-ordered like [`build_ring`] — the
+/// wrap links exist but idle.
+#[derive(Debug, Clone)]
+pub struct Torus2dSpec {
+    pub name: String,
+    pub endpoints: EndpointMap,
+    /// Ring size of the X dimension (>= 2).
+    pub cols: usize,
+    /// Ring size of the Y dimension (>= 2).
+    pub rows: usize,
+    pub params: FabricParams,
+    /// Service windows `(start, end, name)` hosted on node (0, 0) —
+    /// other nodes send them toward it dimension-ordered (Y first).
+    pub services: Vec<(u64, u64, String)>,
+}
+
+pub struct TorusTopology {
+    pub topo: Topology,
+    pub endpoint_m: Vec<LinkId>,
+    pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: the torus node it attaches to.
+    pub endpoint_nodes: Vec<NodeId>,
+    /// One per [`Torus2dSpec::services`] entry (all on node (0, 0)).
+    pub service_s: Vec<LinkId>,
+}
+
+/// Build a 2-D torus; `tune(cfg, idx)` may adjust each node's crossbar
+/// knobs (`idx` row-major).
+pub fn build_torus2d(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    spec: &Torus2dSpec,
+    mut tune: impl FnMut(&mut XbarCfg, usize),
+) -> TorusTopology {
+    let eps = &spec.endpoints;
+    let (cols, rows) = (spec.cols, spec.rows);
+    assert!(
+        cols >= 2 && rows >= 2,
+        "{}: a torus needs >= 2 nodes per dimension (use build_ring)",
+        spec.name
+    );
+    let t = cols * rows;
+    assert_eq!(
+        eps.count % t,
+        0,
+        "{}: cols*rows must divide the endpoint count",
+        spec.name
+    );
+    let e = eps.count / t;
+    let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
+
+    // ports per node: e locals, then X down/up, then Y down/up — the
+    // same indices on both sides (m-port x_down receives from the
+    // descending X neighbour's ascending port, and so on)
+    let (x_down, x_up, y_down, y_up) = (e, e + 1, e + 2, e + 3);
+    let mut nodes = Vec::with_capacity(t);
+    for idx in 0..t {
+        let (x, y) = (idx % cols, idx / cols);
+        let first = idx * e;
+        let mut rules: Vec<AddrRule> = (0..e).map(|i| eps.rule(first + i, i)).collect();
+        if idx == 0 {
+            for (si, (s, end, name)) in spec.services.iter().enumerate() {
+                rules.push(AddrRule::new(*s, *end, e + 4 + si, name));
+            }
+        }
+        let n_slaves = e + 4 + if idx == 0 { spec.services.len() } else { 0 };
+        let n_masters = e + 4;
+        let map = AddrMap::new(rules, n_slaves)
+            .unwrap_or_else(|err| panic!("{}: node {idx} map: {err}", spec.name));
+        let mut cfg = XbarCfg::new(
+            &format!("{}-x{}y{}", spec.name, x, y),
+            n_masters,
+            n_slaves,
+            map,
+        );
+        spec.params.apply(&mut cfg);
+        spec.params.apply_root(&mut cfg);
+        // X innermost (span = the row), Y outermost (span = all)
+        cfg.ring = vec![
+            RingLevel {
+                down_port: x_down,
+                up_port: x_up,
+                span: eps.region(y * cols * e, cols * e),
+                local: eps.region(first, e),
+            },
+            RingLevel {
+                down_port: y_down,
+                up_port: y_up,
+                span: eps.region(0, eps.count),
+                local: eps.region(y * cols * e, cols * e),
+            },
+        ];
+        if idx != 0 {
+            // off-span traffic (service windows) descends toward node
+            // (0, 0), Y dimension first
+            cfg.default_slave = Some(if y > 0 { y_down } else { x_down });
+        }
+        if !spec.params.endpoint_prio.is_empty() {
+            let mut prio: Vec<u32> = (0..e).map(|i| spec.params.prio_of(first + i)).collect();
+            for _ in 0..4 {
+                prio.push(spec.params.prio_max_outside(first, e, eps.count));
+            }
+            cfg.master_prio = prio;
+        }
+        tune(&mut cfg, idx);
+        nodes.push(b.node(cfg));
+    }
+
+    // endpoint ports
+    let mut endpoint_m = Vec::with_capacity(eps.count);
+    let mut endpoint_s = Vec::with_capacity(eps.count);
+    let mut endpoint_nodes = Vec::with_capacity(eps.count);
+    for idx in 0..t {
+        for i in 0..e {
+            let ep = idx * e + i;
+            endpoint_m.push(b.ext_master(nodes[idx], i, &format!("ep{ep}-m")));
+            endpoint_s.push(b.ext_slave(nodes[idx], i, &format!("ep{ep}-s")));
+            endpoint_nodes.push(nodes[idx]);
+        }
+    }
+
+    // torus wiring, wrap links included, both dimensions
+    for idx in 0..t {
+        let (x, y) = (idx % cols, idx / cols);
+        let right = y * cols + (x + 1) % cols;
+        let left = y * cols + (x + cols - 1) % cols;
+        let above = ((y + 1) % rows) * cols + x;
+        let below = ((y + rows - 1) % rows) * cols + x;
+        b.connect(nodes[idx], x_up, nodes[right], x_down);
+        b.connect(nodes[idx], x_down, nodes[left], x_up);
+        b.connect(nodes[idx], y_up, nodes[above], y_down);
+        b.connect(nodes[idx], y_down, nodes[below], y_up);
+    }
+
+    let service_s: Vec<LinkId> = spec
+        .services
+        .iter()
+        .enumerate()
+        .map(|(si, (_, _, name))| b.ext_slave(nodes[0], e + 4 + si, name))
+        .collect();
+
+    TorusTopology {
+        topo: b.build(),
+        endpoint_m,
+        endpoint_s,
+        endpoint_nodes,
+        service_s,
+    }
+}
+
+/// Rings of fully-connected mesh groups: `groups` tile clusters on a
+/// ring, each a [`build_mesh`]-style clique of `tiles` crossbars. Tile
+/// 0 of every group is the **gateway**: it alone carries the group's
+/// two ring ports (span-ordered like [`build_ring`]). In-group traffic
+/// between the non-gateway tiles takes their direct peer links;
+/// everything destined for the gateway's endpoints, another group, or
+/// a service window funnels up each tile's single gateway link — the
+/// non-gateway tiles deliberately have *no* direct route to the
+/// gateway's endpoint block, so a multicast reaches the gateway on
+/// exactly one leg (its default route, excluding the region the peer
+/// rules already served) and the reservation walk visits it once.
+#[derive(Debug, Clone)]
+pub struct RingMeshSpec {
+    pub name: String,
+    pub endpoints: EndpointMap,
+    /// Ring stops (>= 2); with `tiles`, must divide `endpoints.count`.
+    pub groups: usize,
+    /// Tiles per group (>= 2), tile 0 being the gateway.
+    pub tiles: usize,
+    pub params: FabricParams,
+    /// Service windows `(start, end, name)` hosted on group 0's
+    /// gateway; other gateways descend the ring toward it.
+    pub services: Vec<(u64, u64, String)>,
+}
+
+pub struct RingMeshTopology {
+    pub topo: Topology,
+    pub endpoint_m: Vec<LinkId>,
+    pub endpoint_s: Vec<LinkId>,
+    /// Per endpoint: the tile node it attaches to.
+    pub endpoint_nodes: Vec<NodeId>,
+    /// One per [`RingMeshSpec::services`] entry (group 0's gateway).
+    pub service_s: Vec<LinkId>,
+    /// Per group: its gateway node.
+    pub gateways: Vec<NodeId>,
+}
+
+/// Build rings of mesh groups; `tune(cfg, node)` may adjust each node's
+/// crossbar knobs (`node` in group-major, gateway-first order).
+pub fn build_ring_mesh(
+    pool: &mut LinkPool,
+    link_depth: usize,
+    spec: &RingMeshSpec,
+    mut tune: impl FnMut(&mut XbarCfg, usize),
+) -> RingMeshTopology {
+    let eps = &spec.endpoints;
+    let (g_n, t_n) = (spec.groups, spec.tiles);
+    assert!(g_n >= 2, "{}: a ring-mesh needs at least 2 groups", spec.name);
+    assert!(
+        t_n >= 2,
+        "{}: a ring-mesh needs at least 2 tiles per group (use build_ring)",
+        spec.name
+    );
+    assert_eq!(
+        eps.count % (g_n * t_n),
+        0,
+        "{}: groups*tiles must divide the endpoint count",
+        spec.name
+    );
+    let e = eps.count / (g_n * t_n);
+    let span = eps.region(0, eps.count);
+    let mut b = TopologyBuilder::new(&spec.name, pool, link_depth);
+
+    // gateway ports: e locals, t_n-1 tile links, ring down/up
+    let (gw_down, gw_up) = (e + t_n - 1, e + t_n);
+    // non-gateway ports: e locals, t_n-2 peer links, the gateway link
+    let to_gw = e + t_n - 2;
+    // peer-port index on tile `t` (1-based in its group) for peer `p`
+    let peer_port = |t: usize, p: usize| e + if p < t { p - 1 } else { p - 2 };
+
+    let mut nodes = Vec::with_capacity(g_n * t_n);
+    for g in 0..g_n {
+        let grp_first = g * t_n * e;
+        for t in 0..t_n {
+            let first = grp_first + t * e;
+            let mut rules: Vec<AddrRule> = (0..e).map(|i| eps.rule(first + i, i)).collect();
+            let (n_masters, n_slaves);
+            let mut cfg;
+            if t == 0 {
+                // gateway: direct routes into its group's tiles, ring
+                // ports for the rest of the fabric
+                for p in 1..t_n {
+                    let (s, end) = eps.region(grp_first + p * e, e);
+                    rules.push(
+                        AddrRule::new(s, end, e + p - 1, &format!("tile{p}")).with_mcast(),
+                    );
+                }
+                if g == 0 {
+                    for (si, (s, end, name)) in spec.services.iter().enumerate() {
+                        rules.push(AddrRule::new(*s, *end, gw_up + 1 + si, name));
+                    }
+                }
+                n_slaves = e + t_n + 1 + if g == 0 { spec.services.len() } else { 0 };
+                n_masters = e + t_n + 1;
+                let map = AddrMap::new(rules, n_slaves)
+                    .unwrap_or_else(|err| panic!("{}: gw {g} map: {err}", spec.name));
+                cfg = XbarCfg::new(&format!("{}-g{}gw", spec.name, g), n_masters, n_slaves, map);
+                spec.params.apply(&mut cfg);
+                // the gateway is the group's converging point
+                spec.params.apply_root(&mut cfg);
+                cfg.ring = vec![RingLevel {
+                    down_port: gw_down,
+                    up_port: gw_up,
+                    span,
+                    // the whole group: in-group members are served by
+                    // the local and tile rules, never by a ring leg
+                    local: eps.region(grp_first, t_n * e),
+                }];
+                if g > 0 {
+                    // service windows descend the ring toward group 0
+                    cfg.default_slave = Some(gw_down);
+                }
+                if !spec.params.endpoint_prio.is_empty() {
+                    let mut prio: Vec<u32> =
+                        (0..e).map(|i| spec.params.prio_of(first + i)).collect();
+                    for p in 1..t_n {
+                        prio.push(spec.params.prio_max(grp_first + p * e, e));
+                    }
+                    let rest = spec.params.prio_max_outside(grp_first, t_n * e, eps.count);
+                    prio.push(rest);
+                    prio.push(rest);
+                    cfg.master_prio = prio;
+                }
+            } else {
+                // non-gateway tile: peers are the *other* non-gateway
+                // tiles; the gateway's block and everything beyond ride
+                // the single gateway link via the default route
+                for p in (1..t_n).filter(|&p| p != t) {
+                    let (s, end) = eps.region(grp_first + p * e, e);
+                    rules.push(
+                        AddrRule::new(s, end, peer_port(t, p), &format!("tile{p}")).with_mcast(),
+                    );
+                }
+                n_slaves = e + t_n - 1;
+                n_masters = e + t_n - 1;
+                let map = AddrMap::new(rules, n_slaves)
+                    .unwrap_or_else(|err| panic!("{}: g{g} tile {t} map: {err}", spec.name));
+                cfg = XbarCfg::new(
+                    &format!("{}-g{}t{}", spec.name, g, t),
+                    n_masters,
+                    n_slaves,
+                    map,
+                );
+                spec.params.apply(&mut cfg);
+                cfg.default_slave = Some(to_gw);
+                // the non-gateway tiles' joint region: the default leg
+                // tells the gateway this much is already served (the
+                // interval is not mask-form alignable, which is fine —
+                // the gateway's windowed decode prunes by interval)
+                cfg.local_scope = Some(eps.region(grp_first + e, (t_n - 1) * e));
+                if !spec.params.endpoint_prio.is_empty() {
+                    let mut prio: Vec<u32> =
+                        (0..e).map(|i| spec.params.prio_of(first + i)).collect();
+                    for p in (1..t_n).filter(|&p| p != t) {
+                        prio.push(spec.params.prio_max(grp_first + p * e, e));
+                    }
+                    prio.push(spec.params.prio_max_outside(
+                        grp_first + e,
+                        (t_n - 1) * e,
+                        eps.count,
+                    ));
+                    cfg.master_prio = prio;
+                }
+            }
+            tune(&mut cfg, g * t_n + t);
+            nodes.push(b.node(cfg));
+        }
+    }
+
+    // endpoint ports
+    let mut endpoint_m = Vec::with_capacity(eps.count);
+    let mut endpoint_s = Vec::with_capacity(eps.count);
+    let mut endpoint_nodes = Vec::with_capacity(eps.count);
+    for q in 0..g_n * t_n {
+        for i in 0..e {
+            let ep = q * e + i;
+            endpoint_m.push(b.ext_master(nodes[q], i, &format!("ep{ep}-m")));
+            endpoint_s.push(b.ext_slave(nodes[q], i, &format!("ep{ep}-s")));
+            endpoint_nodes.push(nodes[q]);
+        }
+    }
+
+    let gateways: Vec<NodeId> = (0..g_n).map(|g| nodes[g * t_n]).collect();
+
+    // in-group wiring: gateway <-> every tile, tiles pairwise
+    for g in 0..g_n {
+        let gw = gateways[g];
+        for t in 1..t_n {
+            let tile = nodes[g * t_n + t];
+            b.connect(gw, e + t - 1, tile, to_gw);
+            b.connect(tile, to_gw, gw, e + t - 1);
+            for p in t + 1..t_n {
+                let peer = nodes[g * t_n + p];
+                b.connect(tile, peer_port(t, p), peer, peer_port(p, t));
+                b.connect(peer, peer_port(p, t), tile, peer_port(t, p));
+            }
+        }
+    }
+
+    // gateway ring, wrap links included (idle under span-ordering)
+    for g in 0..g_n {
+        b.connect(gateways[g], gw_up, gateways[(g + 1) % g_n], gw_down);
+        b.connect(gateways[g], gw_down, gateways[(g + g_n - 1) % g_n], gw_up);
+    }
+
+    let service_s: Vec<LinkId> = spec
+        .services
+        .iter()
+        .enumerate()
+        .map(|(si, (_, _, name))| b.ext_slave(gateways[0], gw_up + 1 + si, name))
+        .collect();
+
+    RingMeshTopology {
+        topo: b.build(),
+        endpoint_m,
+        endpoint_s,
+        endpoint_nodes,
+        service_s,
+        gateways,
+    }
+}
+
 /// Canned shapes for sweeps and parity tests.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TopoShape {
@@ -1157,6 +1679,12 @@ pub enum TopoShape {
     Tree { arity: Vec<usize> },
     /// Fully-connected mesh of peer tiles.
     Mesh { tiles: usize },
+    /// Bidirectional span-ordered ring of equal nodes.
+    Ring { nodes: usize },
+    /// 2-D torus, row-major, X dimension innermost.
+    Torus { cols: usize, rows: usize },
+    /// Ring of fully-connected mesh groups joined by gateway tiles.
+    RingMesh { groups: usize, tiles: usize },
 }
 
 impl TopoShape {
@@ -1168,6 +1696,9 @@ impl TopoShape {
                 format!("tree{}", parts.join("x"))
             }
             TopoShape::Mesh { tiles } => format!("mesh{tiles}"),
+            TopoShape::Ring { nodes } => format!("ring{nodes}"),
+            TopoShape::Torus { cols, rows } => format!("torus{cols}x{rows}"),
+            TopoShape::RingMesh { groups, tiles } => format!("ringmesh{groups}x{tiles}"),
         }
     }
 }
@@ -1226,6 +1757,56 @@ pub fn build_shape(
                 endpoint_m: m.endpoint_m,
                 endpoint_s: m.endpoint_s,
                 endpoint_nodes: m.endpoint_nodes,
+            }
+        }
+        TopoShape::Ring { nodes } => {
+            let spec = RingSpec {
+                name: shape.label(),
+                endpoints,
+                nodes: *nodes,
+                params,
+                services: Vec::new(),
+            };
+            let r = build_ring(pool, link_depth, &spec, |_, _| {});
+            BuiltTopo {
+                topo: r.topo,
+                endpoint_m: r.endpoint_m,
+                endpoint_s: r.endpoint_s,
+                endpoint_nodes: r.endpoint_nodes,
+            }
+        }
+        TopoShape::Torus { cols, rows } => {
+            let spec = Torus2dSpec {
+                name: shape.label(),
+                endpoints,
+                cols: *cols,
+                rows: *rows,
+                params,
+                services: Vec::new(),
+            };
+            let t = build_torus2d(pool, link_depth, &spec, |_, _| {});
+            BuiltTopo {
+                topo: t.topo,
+                endpoint_m: t.endpoint_m,
+                endpoint_s: t.endpoint_s,
+                endpoint_nodes: t.endpoint_nodes,
+            }
+        }
+        TopoShape::RingMesh { groups, tiles } => {
+            let spec = RingMeshSpec {
+                name: shape.label(),
+                endpoints,
+                groups: *groups,
+                tiles: *tiles,
+                params,
+                services: Vec::new(),
+            };
+            let r = build_ring_mesh(pool, link_depth, &spec, |_, _| {});
+            BuiltTopo {
+                topo: r.topo,
+                endpoint_m: r.endpoint_m,
+                endpoint_s: r.endpoint_s,
+                endpoint_nodes: r.endpoint_nodes,
             }
         }
     }
@@ -1354,6 +1935,139 @@ mod tests {
     }
 
     #[test]
+    fn ring_routes_span_ordered() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(8),
+            FabricParams::default(),
+            &TopoShape::Ring { nodes: 4 },
+        );
+        assert_eq!(t.topo.xbars.len(), 4);
+        let e = eps(8);
+        for (q, x) in t.topo.xbars.iter().enumerate() {
+            // 2 locals + down + up on both sides
+            assert_eq!(x.cfg.n_masters, 4);
+            assert_eq!(x.cfg.n_slaves, 4);
+            assert_eq!(x.cfg.ring.len(), 1);
+            let lvl = &x.cfg.ring[0];
+            assert_eq!(lvl.span, e.region(0, 8));
+            assert_eq!(lvl.local, e.region(q * 2, 2));
+            // dateline: only node 0 hosts off-span traffic
+            assert_eq!(x.cfg.default_slave, if q == 0 { None } else { Some(2) });
+        }
+        // span-ordered, never across the wrap: node 1 reaches node 3's
+        // endpoints ascending even though the wrap would be shorter
+        let n1 = &t.topo.xbars[1].cfg;
+        assert_eq!(n1.route_unicast(e.addr(0)), Some(2)); // down
+        assert_eq!(n1.route_unicast(e.addr(7)), Some(3)); // up
+        assert_eq!(n1.route_unicast(e.addr(2)), Some(0)); // local
+        // 8 endpoint pairs + 2 links per neighbour hop (4 hops)
+        assert_eq!(pool.len(), 16 + 8);
+    }
+
+    #[test]
+    fn torus_carries_two_ring_dimensions() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(16),
+            FabricParams::default(),
+            &TopoShape::Torus { cols: 2, rows: 2 },
+        );
+        assert_eq!(t.topo.xbars.len(), 4);
+        let e = eps(16);
+        for (idx, x) in t.topo.xbars.iter().enumerate() {
+            let (col, row) = (idx % 2, idx / 2);
+            // 4 locals + 4 ring ports
+            assert_eq!(x.cfg.n_masters, 8);
+            assert_eq!(x.cfg.ring.len(), 2);
+            // X innermost spans the row, Y outermost spans everything
+            assert_eq!(x.cfg.ring[0].span, e.region(row * 8, 8));
+            assert_eq!(x.cfg.ring[0].local, e.region(idx * 4, 4));
+            assert_eq!(x.cfg.ring[1].span, e.region(0, 16));
+            assert_eq!(x.cfg.ring[1].local, e.region(row * 8, 8));
+            // services descend dimension-ordered toward node (0, 0)
+            let want = match (col, row) {
+                (0, 0) => None,
+                (_, 0) => Some(4),     // x-down
+                (_, _) => Some(6),     // y-down
+            };
+            assert_eq!(x.cfg.default_slave, want);
+        }
+        // node 3 = (1, 1): other row via Y, own row via X, local direct
+        let n3 = &t.topo.xbars[3].cfg;
+        assert_eq!(n3.route_unicast(e.addr(0)), Some(6)); // y-down
+        assert_eq!(n3.route_unicast(e.addr(8)), Some(4)); // x-down
+        assert_eq!(n3.route_unicast(e.addr(13)), Some(1)); // local
+        // 16 endpoint pairs + 4 links out of each of the 4 nodes
+        assert_eq!(pool.len(), 32 + 16);
+    }
+
+    #[test]
+    fn ring_mesh_gateways_carry_the_ring() {
+        let mut pool = LinkPool::new();
+        let t = build_shape(
+            &mut pool,
+            2,
+            eps(8),
+            FabricParams::default(),
+            &TopoShape::RingMesh { groups: 2, tiles: 2 },
+        );
+        let e = eps(8);
+        // group-major, gateway first: [gw0, g0t1, gw1, g1t1]
+        assert_eq!(t.topo.xbars.len(), 4);
+        for g in 0..2 {
+            let gw = &t.topo.xbars[g * 2].cfg;
+            // 2 locals + 1 tile link + 2 ring ports
+            assert_eq!(gw.n_masters, 5);
+            assert_eq!(gw.ring.len(), 1);
+            assert_eq!(gw.ring[0].span, e.region(0, 8));
+            assert_eq!(gw.ring[0].local, e.region(g * 4, 4));
+            assert_eq!(gw.default_slave, if g == 0 { None } else { Some(3) });
+            let tile = &t.topo.xbars[g * 2 + 1].cfg;
+            // 2 locals + the gateway link (tiles = 2 -> no peers)
+            assert_eq!(tile.n_masters, 3);
+            assert!(tile.ring.is_empty());
+            assert_eq!(tile.default_slave, Some(2));
+            // the joint non-gateway region rides the default leg's
+            // exclude so the gateway won't serve it again
+            assert_eq!(tile.local_scope, Some(e.region(g * 4 + 2, 2)));
+        }
+        // tile -> other group goes through the gateway's default route
+        let t1 = &t.topo.xbars[1].cfg;
+        assert_eq!(t1.route_unicast(e.addr(6)), Some(2));
+        // gateway 0 sends ascending, gateway 1 descending (span order)
+        assert_eq!(t.topo.xbars[0].cfg.route_unicast(e.addr(6)), Some(4));
+        assert_eq!(t.topo.xbars[2].cfg.route_unicast(e.addr(1)), Some(3));
+        // 8 endpoint pairs + 2 gw<->tile links per group + 4 ring links
+        assert_eq!(pool.len(), 16 + 4 + 4);
+    }
+
+    #[test]
+    fn ring_services_live_on_node0() {
+        let mut pool = LinkPool::new();
+        let spec = RingSpec {
+            name: "svc-ring".into(),
+            endpoints: eps(8),
+            nodes: 4,
+            params: FabricParams::default(),
+            services: vec![(0x8000_0000, 0x8010_0000, "llc".into())],
+        };
+        let t = build_ring(&mut pool, 2, &spec, |_, _| {});
+        assert_eq!(t.service_s.len(), 1);
+        // node 0 hosts the window on a dedicated slave port; the others
+        // descend their down port toward it
+        assert_eq!(t.topo.xbars[0].cfg.n_slaves, 2 + 2 + 1);
+        assert_eq!(t.topo.xbars[1].cfg.n_slaves, 2 + 2);
+        assert_eq!(t.topo.xbars[0].cfg.route_unicast(0x8000_0000), Some(4));
+        assert_eq!(t.topo.xbars[3].cfg.route_unicast(0x8000_0000), Some(2));
+        assert_eq!(t.topo.ext_slave("llc"), t.service_s[0]);
+    }
+
+    #[test]
     fn fabric_params_caps_timeouts_and_prio_reach_every_node() {
         let params = FabricParams {
             max_outstanding: Some(5),
@@ -1418,6 +2132,9 @@ mod tests {
             TopoShape::Tree { arity: vec![2, 4] },
             TopoShape::Mesh { tiles: 2 },
             TopoShape::Flat,
+            TopoShape::Ring { nodes: 4 },
+            TopoShape::Torus { cols: 2, rows: 2 },
+            TopoShape::RingMesh { groups: 2, tiles: 2 },
         ] {
             let mut pool = LinkPool::new();
             let params = FabricParams {
@@ -1447,6 +2164,9 @@ mod tests {
             TopoShape::Tree { arity: vec![2, 4] },
             TopoShape::Mesh { tiles: 2 },
             TopoShape::Flat,
+            TopoShape::Ring { nodes: 4 },
+            TopoShape::Torus { cols: 2, rows: 2 },
+            TopoShape::RingMesh { groups: 2, tiles: 2 },
         ] {
             let mut pool = LinkPool::new();
             let params = FabricParams {

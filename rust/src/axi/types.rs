@@ -88,6 +88,16 @@ pub struct AwBeat {
     /// served at an upstream hop and to be pruned downstream (see
     /// `xbar` module docs).
     pub exclude: Option<(Addr, Addr)>,
+    /// Ring-routing include window: when set, only the members of
+    /// `dest` inside this aligned interval are still to be served by
+    /// this leg — the complement travels (or was served) on other
+    /// legs. Orthogonal to `exclude` (which prunes a *subset already
+    /// served upstream*): windows only ever shrink by interval
+    /// intersection as a beat walks a ring, so they stay a single
+    /// interval where accumulated excludes would go disjoint. `None`
+    /// on every non-ring fabric — the classic decode path is taken
+    /// verbatim (see `XbarCfg::ring`).
+    pub window: Option<(Addr, Addr)>,
     /// Issuing master port on the current crossbar.
     pub src: usize,
     /// Global transaction tag.
@@ -405,6 +415,7 @@ mod tests {
             beat_bytes: 64,
             is_mcast: false,
             exclude: None,
+            window: None,
             src: 0,
             txn: 7,
             ticket: None,
@@ -439,6 +450,7 @@ mod tests {
             beat_bytes: 64,
             is_mcast: false,
             exclude: None,
+            window: None,
             src: 0,
             txn: 1,
             ticket: None,

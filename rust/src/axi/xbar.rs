@@ -85,6 +85,43 @@ use crate::sim::Cycle;
 use crate::util::dense::TxnTable;
 use crate::util::inline_vec::InlineVec;
 
+/// One ring dimension of a ring-routed crossbar node (see
+/// [`XbarCfg::ring`]). The dimension's nodes own equal consecutive
+/// address slots of `span`; this node's slot is `local`. Routing is
+/// **span-ordered** (dateline-style deterministic): a destination
+/// below `local` leaves on `down_port`, above on `up_port`, and no
+/// beat ever crosses the wrap link. This keeps every waits-for chain
+/// in the W transport monotone in ring position — a cyclic
+/// wormhole-style request deadlock needs wrap-through traffic, which
+/// the model has no virtual channels to break — and makes the
+/// reservation ledger's no-revisit traversal oracle hold trivially.
+/// The builders still wire the physical wrap links; they idle under
+/// the default routing (the event-horizon scheduler skips them).
+#[derive(Debug, Clone)]
+pub struct RingLevel {
+    /// Slave port toward descending addresses.
+    pub down_port: usize,
+    /// Slave port toward ascending addresses.
+    pub up_port: usize,
+    /// Address interval covered by the whole dimension.
+    pub span: (u64, u64),
+    /// This node's slot within `span` (served locally, or handed to
+    /// inner dimensions on a torus).
+    pub local: (u64, u64),
+}
+
+impl RingLevel {
+    /// Span-ordered port toward `addr` — the unicast rule of the
+    /// dimension (same direction rule the multicast legs use).
+    pub fn port_toward(&self, addr: u64) -> usize {
+        if addr < self.local.0 {
+            self.down_port
+        } else {
+            self.up_port
+        }
+    }
+}
+
 /// Crossbar configuration. `Clone` so the reservation ledger
 /// (`axi::resv`) can snapshot the routing data its traversal oracle
 /// replays.
@@ -184,6 +221,12 @@ pub struct XbarCfg {
     /// by master port; missing entries default to 0). Ignored under
     /// `RoundRobin`.
     pub master_prio: Vec<u32>,
+    /// Ring dimensions of this node, innermost-first (a 2D torus lists
+    /// its X ring — span = the node's row — before its Y ring — span =
+    /// the full endpoint space). Empty (the default) on every non-ring
+    /// fabric: [`XbarCfg::decode_aw`] then runs the classic scope-based
+    /// path verbatim, keeping flat/tree/mesh decode bit-identical.
+    pub ring: Vec<RingLevel>,
 }
 
 impl XbarCfg {
@@ -208,6 +251,7 @@ impl XbarCfg {
             cpl_timeout: None,
             arb_policy: ArbPolicy::RoundRobin,
             master_prio: Vec::new(),
+            ring: Vec::new(),
         }
     }
 
@@ -217,28 +261,45 @@ impl XbarCfg {
         self.req_timeout.is_some() || self.cpl_timeout.is_some()
     }
 
+    /// Route one unicast address: the address map first, then the ring
+    /// dimensions innermost-first (span-ordered, never across the wrap
+    /// link — see [`RingLevel`]), then the default route. With `ring`
+    /// empty this is exactly the historical map-then-default rule.
+    pub fn route_unicast(&self, addr: u64) -> Option<usize> {
+        if let Some(s) = self.map.decode_unicast(addr) {
+            return Some(s);
+        }
+        for lvl in &self.ring {
+            if addr >= lvl.span.0
+                && addr < lvl.span.1
+                && !(addr >= lvl.local.0 && addr < lvl.local.1)
+            {
+                return Some(lvl.port_toward(addr));
+            }
+        }
+        self.default_slave
+    }
+
     /// Decode an AW's destination set into fork targets, honouring the
-    /// exclude scope and the default route. Lives on the config (pure
-    /// in the routing data) so the reservation ledger's traversal
-    /// oracle (`axi::resv`) replays *exactly* the datapath's decode.
-    pub fn decode_aw(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (TargetVec, Resp) {
+    /// exclude scope, the include window, the ring dimensions and the
+    /// default route. Lives on the config (pure in the routing data) so
+    /// the reservation ledger's traversal oracle (`axi::resv`) replays
+    /// *exactly* the datapath's decode.
+    pub fn decode_aw(
+        &self,
+        dest: &AddrSet,
+        exclude: Option<(u64, u64)>,
+        window: Option<(u64, u64)>,
+    ) -> (TargetVec, Resp) {
         // fast path: plain unicast
         if dest.is_singleton() {
-            if let Some(s) = self.map.decode_unicast(dest.addr) {
+            if let Some(s) = self.route_unicast(dest.addr) {
                 let mut t = TargetVec::new();
                 t.push(TargetAw {
                     slave: s,
                     dest: *dest,
                     exclude: None,
-                });
-                return (t, Resp::Okay);
-            }
-            if let Some(up) = self.default_slave {
-                let mut t = TargetVec::new();
-                t.push(TargetAw {
-                    slave: up,
-                    dest: *dest,
-                    exclude: None,
+                    window: None,
                 });
                 return (t, Resp::Okay);
             }
@@ -250,6 +311,17 @@ impl XbarCfg {
             return (TargetVec::new(), Resp::DecErr);
         }
 
+        // non-ring fabrics with no window take the historical scoped
+        // path verbatim — flat/tree/mesh decode stays bit-identical
+        if self.ring.is_empty() && window.is_none() {
+            return self.decode_aw_scoped(dest, exclude);
+        }
+        self.decode_aw_windowed(dest, exclude, window)
+    }
+
+    /// The historical scope-based multicast decode (trees, meshes,
+    /// flat): mask-form subset arithmetic with one aligned exclude.
+    fn decode_aw_scoped(&self, dest: &AddrSet, exclude: Option<(u64, u64)>) -> (TargetVec, Resp) {
         let d = self.map.decode(dest);
         let mut targets = TargetVec::new();
         let mut excl_in_rules = 0u64;
@@ -265,6 +337,7 @@ impl XbarCfg {
                 slave: *s,
                 dest: *sub,
                 exclude: None,
+                window: None,
             });
         }
         // addresses excluded but not matched by local rules
@@ -312,10 +385,101 @@ impl XbarCfg {
                         slave: up,
                         dest: *dest,
                         exclude: scope,
+                        window: None,
                     });
                 }
                 None => resp0 = Resp::DecErr,
             }
+        }
+        targets.sort_by_key(|t| t.slave);
+        (targets, resp0)
+    }
+
+    /// The ring/window multicast decode: map-matched subsets inside the
+    /// window are served here (or through peer rules); every other live
+    /// member rides a ring leg whose window is the leg's directional
+    /// range clipped to the incoming window. Windows only shrink by
+    /// interval intersection, so they stay single intervals where
+    /// accumulated excludes would go disjoint; the incoming exclude is
+    /// passed through unchanged on ring legs (a tile-served aligned
+    /// region stays prunable anywhere on the ring). Accounting is by
+    /// member enumeration — window clipping makes the scoped path's
+    /// mask-form arithmetic inapplicable.
+    fn decode_aw_windowed(
+        &self,
+        dest: &AddrSet,
+        exclude: Option<(u64, u64)>,
+        window: Option<(u64, u64)>,
+    ) -> (TargetVec, Resp) {
+        let in_win = |a: u64| window.map_or(true, |(ws, we)| a >= ws && a < we);
+        let excl = |a: u64| exclude.is_some_and(|(es, ee)| a >= es && a < ee);
+        let d = self.map.decode(dest);
+        let mut targets = TargetVec::new();
+        for (s, sub) in &d.targets {
+            // ring windows are node-region aligned, so a decoded subset
+            // is wholly in or wholly out
+            debug_assert_eq!(
+                in_win(sub.base()),
+                in_win(sub.top()),
+                "xbar {}: window straddles a decoded subset",
+                self.name
+            );
+            if !in_win(sub.base()) {
+                continue;
+            }
+            if let Some((es, ee)) = exclude {
+                if sub.base() >= es && sub.top() < ee {
+                    // already served upstream of this hop
+                    continue;
+                }
+            }
+            targets.push(TargetAw {
+                slave: *s,
+                dest: *sub,
+                exclude: None,
+                window: None,
+            });
+        }
+        let members = dest.enumerate();
+        for lvl in &self.ring {
+            for (port, rs, re) in [
+                (lvl.down_port, lvl.span.0, lvl.local.0),
+                (lvl.up_port, lvl.local.1, lvl.span.1),
+            ] {
+                let ws = window.map_or(rs, |(w, _)| w.max(rs));
+                let we = window.map_or(re, |(_, w)| w.min(re));
+                if ws >= we {
+                    continue;
+                }
+                if members.iter().any(|&a| a >= ws && a < we && !excl(a)) {
+                    targets.push(TargetAw {
+                        slave: port,
+                        dest: *dest,
+                        exclude,
+                        window: Some((ws, we)),
+                    });
+                }
+            }
+        }
+        // every live member must sit in a kept subset or a leg window;
+        // anything else decode-errors at the source, exactly like the
+        // flat crossbar's uncovered count
+        let mut resp0 = Resp::Okay;
+        'members: for &a in &members {
+            if !in_win(a) || excl(a) {
+                continue;
+            }
+            for t in targets.iter() {
+                let hit = match t.window {
+                    Some((ws, we)) => a >= ws && a < we,
+                    None => t.dest.contains(a),
+                };
+                if hit {
+                    continue 'members;
+                }
+            }
+            resp0 = Resp::DecErr;
+            break;
         }
         targets.sort_by_key(|t| t.slave);
         (targets, resp0)
@@ -1188,6 +1352,7 @@ impl Xbar {
                 seq,
                 &entry.pend.beat.dest,
                 entry.pend.beat.exclude,
+                entry.pend.beat.window,
             );
         }
         self.stats.req_timeouts += 1;
@@ -1254,12 +1419,10 @@ impl Xbar {
         let mut any = false;
         let nm = self.cfg.n_masters;
         self.for_each(in_ar, nm, pool, |xb, m, pool| {
-            let dec = pool[xb.m_links[m]].ar.front().map(|ar| {
-                xb.cfg
-                    .map
-                    .decode_unicast(ar.addr)
-                    .or(xb.cfg.default_slave)
-            });
+            let dec = pool[xb.m_links[m]]
+                .ar
+                .front()
+                .map(|ar| xb.cfg.route_unicast(ar.addr));
             xb.scratch_want[m] = match dec {
                 Some(Some(s)) => {
                     any = true;
@@ -1325,13 +1488,19 @@ impl Xbar {
             let Some(front) = pool[xb.m_links[m]].aw.front() else {
                 return;
             };
-            let (dest, exclude, txn, id, mcast_req) =
-                (front.dest, front.exclude, front.txn, front.id, front.is_mcast);
+            let (dest, exclude, window, txn, id, mcast_req) = (
+                front.dest,
+                front.exclude,
+                front.window,
+                front.txn,
+                front.id,
+                front.is_mcast,
+            );
             // memoised decode: a stalled front AW is re-examined every
             // cycle but decoded only once
             let hit = xb.dec_cache[m].as_ref().is_some_and(|c| c.txn == txn);
             if !hit {
-                let (targets, resp0) = xb.cfg.decode_aw(&dest, exclude);
+                let (targets, resp0) = xb.cfg.decode_aw(&dest, exclude, window);
                 xb.dec_cache[m] = Some(DecCache {
                     txn,
                     targets,
@@ -1403,7 +1572,7 @@ impl Xbar {
                 && !cache.targets.is_empty()
             {
                 let (h, node) = xb.resv.clone().unwrap();
-                beat.ticket = Some(h.lock().unwrap().reserve(node, &dest, exclude));
+                beat.ticket = Some(h.lock().unwrap().reserve(node, &dest, exclude, window));
                 xb.stats.resv_tickets += 1;
             }
             if cache.resp0 == Resp::DecErr && cache.targets.is_empty() {
@@ -1570,8 +1739,11 @@ impl Xbar {
             dest: target.dest,
             beats: beat.beats,
             beat_bytes: beat.beat_bytes,
-            is_mcast: target.dest.count() > 1 || target.exclude.is_some(),
+            is_mcast: target.dest.count() > 1
+                || target.exclude.is_some()
+                || target.window.is_some(),
             exclude: target.exclude,
+            window: target.window,
             src: m,
             txn: beat.txn,
             // the reservation ticket rides every forked leg, so each
@@ -2004,6 +2176,7 @@ impl Xbar {
                             beat_bytes: e.beat_bytes,
                             is_mcast: false,
                             exclude: None,
+                            window: None,
                             src: RED_MASTER,
                             txn: up_txn,
                             ticket: None,

@@ -7,7 +7,9 @@ use crate::util::json::Json;
 use crate::util::stats::{amdahl_parallel_fraction, geomean};
 use crate::util::table::{fnum, Table};
 use crate::axi::mux::ArbPolicy;
-use crate::workloads::collectives::{run_collective, CollMode, CollOp, CollectiveResult};
+use crate::workloads::collectives::{
+    run_collective, CollLayout, CollMode, CollOp, CollectiveResult,
+};
 use crate::workloads::faults::{
     run_fault_scenario, run_qos_load, FaultKind, FaultRunResult, QosResult,
 };
@@ -268,8 +270,9 @@ pub struct TopoSweepRow {
 }
 
 /// Topology-shape sweep: the 1-to-N broadcast on every canned shape
-/// (flat, 2-level tree, 3-level tree, mesh), hardware multicast vs the
-/// unicast train, with beat-level fork accounting. `threads` picks the
+/// (flat, 2-level tree, 3-level tree, mesh, ring, torus and ring of
+/// mesh groups), hardware multicast vs the unicast train, with
+/// beat-level fork accounting. `threads` picks the
 /// stepping schedule (1 = sequential golden, 0 = one per core) —
 /// results are bit-identical either way.
 pub fn topo_sweep(
@@ -371,9 +374,49 @@ pub struct CollRow {
     /// the run enables it) — converging phases combined inside the
     /// fabric, no software combine round-trips.
     pub red: CollectiveResult,
+    /// `auto`: the cost-model pick (`CollMode::Auto`) re-run as its own
+    /// measurement; `auto.plan` records the resolved schedule.
+    pub auto: CollectiveResult,
     pub speedup: f64,
     pub speedup_conc: f64,
     pub speedup_red: f64,
+    /// Relative regret of the cost-model pick against the measured-best
+    /// concrete mode: `(cycles_auto - best) / best`, `0.0` when the
+    /// model picked a measured-best schedule.
+    pub regret: f64,
+}
+
+/// Build one [`CollRow`] from the four concrete-mode runs plus the
+/// auto run (shared by [`collectives`], [`chiplet_sweep`] and
+/// [`tunesweep`]).
+fn coll_row(
+    sw: CollectiveResult,
+    hw: CollectiveResult,
+    conc: CollectiveResult,
+    red: CollectiveResult,
+    auto: CollectiveResult,
+) -> CollRow {
+    let best = sw.cycles.min(hw.cycles).min(conc.cycles).min(red.cycles);
+    CollRow {
+        speedup: sw.cycles as f64 / hw.cycles as f64,
+        speedup_conc: sw.cycles as f64 / conc.cycles as f64,
+        speedup_red: sw.cycles as f64 / red.cycles as f64,
+        regret: (auto.cycles as f64 - best as f64) / best as f64,
+        sw,
+        hw,
+        conc,
+        red,
+        auto,
+    }
+}
+
+/// The schedule the auto run resolved to, e.g. `hw-concurrent/2`.
+fn auto_pick(r: &CollRow) -> String {
+    r.auto
+        .plan
+        .as_ref()
+        .map(|p| p.describe())
+        .unwrap_or_else(|| r.auto.mode.name().to_string())
 }
 
 /// The collectives experiment: every requested op on every requested
@@ -394,15 +437,8 @@ pub fn collectives(
             let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
             let conc = run_collective(&cfg, op, CollMode::HwConc, bytes);
             let red = run_collective(&cfg, op, CollMode::HwReduce, bytes);
-            rows.push(CollRow {
-                speedup: sw.cycles as f64 / hw.cycles as f64,
-                speedup_conc: sw.cycles as f64 / conc.cycles as f64,
-                speedup_red: sw.cycles as f64 / red.cycles as f64,
-                sw,
-                hw,
-                conc,
-                red,
-            });
+            let auto = run_collective(&cfg, op, CollMode::Auto, bytes);
+            rows.push(coll_row(sw, hw, conc, red, auto));
         }
     }
     let mut table = Table::new(&[
@@ -413,6 +449,9 @@ pub fn collectives(
         "hw cyc",
         "conc cyc",
         "red cyc",
+        "auto cyc",
+        "auto pick",
+        "regret",
         "hw spd",
         "conc spd",
         "red spd",
@@ -433,6 +472,9 @@ pub fn collectives(
             r.hw.cycles.to_string(),
             r.conc.cycles.to_string(),
             r.red.cycles.to_string(),
+            r.auto.cycles.to_string(),
+            auto_pick(r),
+            fnum(r.regret, 3),
             fnum(r.speedup, 2),
             fnum(r.speedup_conc, 2),
             fnum(r.speedup_red, 2),
@@ -442,7 +484,11 @@ pub fn collectives(
             r.red.dma_w_beats.to_string(),
             r.red.wide.red_beats_saved.to_string(),
             r.conc.wide.resv_waits.to_string(),
-            if r.sw.numerics_ok && r.hw.numerics_ok && r.conc.numerics_ok && r.red.numerics_ok
+            if r.sw.numerics_ok
+                && r.hw.numerics_ok
+                && r.conc.numerics_ok
+                && r.red.numerics_ok
+                && r.auto.numerics_ok
             {
                 "OK"
             } else {
@@ -486,12 +532,17 @@ pub fn collectives(
                     .set("combines_hw", r.hw.combines)
                     .set("combines_conc", r.conc.combines)
                     .set("combines_red", r.red.combines)
+                    // schema v4: the cost-model auto-tuner columns
+                    .set("mode_auto", auto_pick(r))
+                    .set("cycles_auto", r.auto.cycles)
+                    .set("regret", r.regret)
                     .set(
                         "numerics_ok",
                         r.sw.numerics_ok
                             && r.hw.numerics_ok
                             && r.conc.numerics_ok
-                            && r.red.numerics_ok,
+                            && r.red.numerics_ok
+                            && r.auto.numerics_ok,
                     );
                 o
             })
@@ -532,6 +583,116 @@ pub fn collectives_summary(rows: &[CollRow]) -> Json {
     o
 }
 
+/// The auto-tuner sweep: every `(shape, op, size)` cell runs all four
+/// concrete modes *and* the cost-model pick, and scores the model by
+/// regret against the measured-best mode. The JSON carries the
+/// per-cell scoreboard plus the headline fractions — how often the
+/// model picked a measured-best schedule (`zero_regret_fraction`) and
+/// whether it ever lost to the software baseline (`never_worse_than_sw`,
+/// the hard floor [`assert_coll_row_invariants`] also enforces).
+///
+/// Cells whose worst-case L1 footprint (over all modes — the sweep
+/// needs every mode measured) does not fit the per-cluster SPM are
+/// skipped, not failed; the JSON reports them in `n_skipped` so large
+/// sizes never silently narrow the sweep.
+pub fn tunesweep(
+    cfg: &SocConfig,
+    ops: &[CollOp],
+    shapes: &[WideShape],
+    sizes: &[u64],
+) -> (Vec<CollRow>, Table, Json) {
+    let spm = cfg.l1_bytes.min(crate::occamy::config::MAILBOX_OFFSET);
+    let mut rows = Vec::new();
+    let mut skipped = 0usize;
+    for shape in shapes {
+        let mut cfg = cfg.clone();
+        cfg.wide_shape = shape.clone();
+        for &op in ops {
+            for &bytes in sizes {
+                if CollLayout::new(&cfg, bytes).footprint(op, CollMode::Auto) > spm {
+                    skipped += 1;
+                    continue;
+                }
+                let sw = run_collective(&cfg, op, CollMode::Sw, bytes);
+                let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
+                let conc = run_collective(&cfg, op, CollMode::HwConc, bytes);
+                let red = run_collective(&cfg, op, CollMode::HwReduce, bytes);
+                let auto = run_collective(&cfg, op, CollMode::Auto, bytes);
+                rows.push(coll_row(sw, hw, conc, red, auto));
+            }
+        }
+    }
+    let mut table = Table::new(&[
+        "op",
+        "shape",
+        "KiB",
+        "best mode",
+        "best cyc",
+        "auto pick",
+        "auto cyc",
+        "regret",
+        "hit",
+    ]);
+    for r in &rows {
+        let (best_mode, best) = measured_best(r);
+        table.row(&[
+            r.hw.op.name().to_string(),
+            r.hw.shape.clone(),
+            (r.hw.bytes / 1024).to_string(),
+            best_mode.to_string(),
+            best.to_string(),
+            auto_pick(r),
+            r.auto.cycles.to_string(),
+            fnum(r.regret, 3),
+            if r.auto.cycles <= best { "HIT" } else { "miss" }.to_string(),
+        ]);
+    }
+    let hits = rows.iter().filter(|r| r.regret <= 0.0).count();
+    let cells = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let (best_mode, best) = measured_best(r);
+                let mut o = Json::obj();
+                o.set("op", r.hw.op.name())
+                    .set("shape", r.hw.shape.as_str())
+                    .set("clusters", r.hw.clusters)
+                    .set("bytes", r.hw.bytes)
+                    .set("cycles_sw", r.sw.cycles)
+                    .set("cycles_hw", r.hw.cycles)
+                    .set("cycles_conc", r.conc.cycles)
+                    .set("cycles_red", r.red.cycles)
+                    .set("mode_best", best_mode)
+                    .set("cycles_best", best)
+                    .set("mode_auto", auto_pick(r))
+                    .set("cycles_auto", r.auto.cycles)
+                    .set("regret", r.regret)
+                    .set("numerics_ok", r.auto.numerics_ok);
+                o
+            })
+            .collect(),
+    );
+    let mut json = Json::obj();
+    json.set("schema", 4u64)
+        .set("cells", cells)
+        .set("n_cells", rows.len())
+        .set("n_skipped", skipped)
+        .set("zero_regret_fraction", hits as f64 / rows.len().max(1) as f64)
+        .set(
+            "never_worse_than_sw",
+            rows.iter().all(|r| r.auto.cycles <= r.sw.cycles),
+        );
+    (rows, table, json)
+}
+
+/// The measured-best concrete mode of a row: `(mode name, cycles)`.
+fn measured_best(r: &CollRow) -> (&'static str, u64) {
+    [&r.sw, &r.hw, &r.conc, &r.red]
+        .into_iter()
+        .map(|run| (run.mode.name(), run.cycles))
+        .min_by_key(|&(_, c)| c)
+        .unwrap()
+}
+
 /// Sanity-check a [`CollRow`]: bit-exact numerics on every strategy,
 /// W fork/join accounting on every crossbar, no decode errors, and the
 /// injection invariants — no hardware strategy ever *injects* more W
@@ -543,9 +704,10 @@ pub fn collectives_summary(rows: &[CollRow]) -> Json {
 /// The concurrent and reduce strategies must additionally have drained
 /// their reservation ledgers (every ticket committed everywhere), and
 /// a reduce run that saved beats must actually have emitted fewer
-/// beats than it absorbed.
+/// beats than it absorbed. The auto run must never lose to the
+/// software baseline — the cost model's floor guarantee.
 pub fn assert_coll_row_invariants(r: &CollRow) {
-    for run in [&r.sw, &r.hw, &r.conc, &r.red] {
+    for run in [&r.sw, &r.hw, &r.conc, &r.red, &r.auto] {
         assert!(
             run.numerics_ok,
             "{} {} on {}: result buffers diverge from the scalar reference",
@@ -570,7 +732,7 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
             run.shape
         );
     }
-    for run in [&r.hw, &r.conc, &r.red] {
+    for run in [&r.hw, &r.conc, &r.red, &r.auto] {
         assert!(
             run.dma_w_beats <= r.sw.dma_w_beats,
             "{} {} on {}: injects more W beats than the baseline ({} > {})",
@@ -581,6 +743,15 @@ pub fn assert_coll_row_invariants(r: &CollRow) {
             r.sw.dma_w_beats
         );
     }
+    assert!(
+        r.auto.cycles <= r.sw.cycles,
+        "{} on {}: the auto pick ({}) is slower than the software baseline ({} > {})",
+        r.auto.op.name(),
+        r.auto.shape,
+        auto_pick(r),
+        r.auto.cycles,
+        r.sw.cycles
+    );
     assert!(
         r.red.dma_w_beats <= r.conc.dma_w_beats,
         "{} on {}: hw-reduce injects more W beats than hw-concurrent ({} > {})",
@@ -649,19 +820,12 @@ pub fn chiplet_sweep(
             let hw = run_collective(&cfg, op, CollMode::Hw, bytes);
             let conc = run_collective(&cfg, op, CollMode::HwConc, bytes);
             let red = run_collective(&cfg, op, CollMode::HwReduce, bytes);
+            let auto = run_collective(&cfg, op, CollMode::Auto, bytes);
             rows.push(ChipletRow {
                 chiplets: c,
                 d2d_width_ratio: cfg.package.d2d_width_ratio,
                 d2d_latency: cfg.package.d2d_latency,
-                row: CollRow {
-                    speedup: sw.cycles as f64 / hw.cycles as f64,
-                    speedup_conc: sw.cycles as f64 / conc.cycles as f64,
-                    speedup_red: sw.cycles as f64 / red.cycles as f64,
-                    sw,
-                    hw,
-                    conc,
-                    red,
-                },
+                row: coll_row(sw, hw, conc, red, auto),
             });
         }
     }
@@ -673,6 +837,8 @@ pub fn chiplet_sweep(
         "hw cyc",
         "conc cyc",
         "red cyc",
+        "auto cyc",
+        "auto pick",
         "hw spd",
         "conc spd",
         "red spd",
@@ -689,11 +855,17 @@ pub fn chiplet_sweep(
             cr.hw.cycles.to_string(),
             cr.conc.cycles.to_string(),
             cr.red.cycles.to_string(),
+            cr.auto.cycles.to_string(),
+            auto_pick(cr),
             fnum(cr.speedup, 2),
             fnum(cr.speedup_conc, 2),
             fnum(cr.speedup_red, 2),
             cr.red.wide.red_beats_saved.to_string(),
-            if cr.sw.numerics_ok && cr.hw.numerics_ok && cr.conc.numerics_ok && cr.red.numerics_ok
+            if cr.sw.numerics_ok
+                && cr.hw.numerics_ok
+                && cr.conc.numerics_ok
+                && cr.red.numerics_ok
+                && cr.auto.numerics_ok
             {
                 "OK"
             } else {
@@ -728,12 +900,16 @@ pub fn chiplet_sweep(
                     .set("resv_tickets_conc", cr.conc.wide.resv_tickets)
                     .set("red_joins", cr.red.wide.red_joins)
                     .set("red_beats_saved", cr.red.wide.red_beats_saved)
+                    .set("mode_auto", auto_pick(cr))
+                    .set("cycles_auto", cr.auto.cycles)
+                    .set("regret", cr.regret)
                     .set(
                         "numerics_ok",
                         cr.sw.numerics_ok
                             && cr.hw.numerics_ok
                             && cr.conc.numerics_ok
-                            && cr.red.numerics_ok,
+                            && cr.red.numerics_ok
+                            && cr.auto.numerics_ok,
                     );
                 o
             })
@@ -895,8 +1071,9 @@ mod tests {
     #[test]
     fn topo_sweep_covers_shapes_and_mcast_wins() {
         let (rows, table, json) = topo_sweep(16, 2, 8, 1);
-        // flat + 2-level tree + 3-level tree + mesh
-        assert_eq!(rows.len(), 4);
+        // flat + 2-level tree + 3-level tree + mesh + ring + torus +
+        // ring-of-meshes
+        assert_eq!(rows.len(), 7);
         for r in &rows {
             assert_topo_row_invariants(r);
             assert!(
@@ -907,7 +1084,7 @@ mod tests {
             );
         }
         assert!(table.render().contains("mcast cyc"));
-        assert_eq!(json.as_arr().unwrap().len(), 4);
+        assert_eq!(json.as_arr().unwrap().len(), 7);
     }
 
     #[test]
@@ -926,6 +1103,30 @@ mod tests {
             .get("broadcast_speedup_geomean")
             .and_then(|v| v.as_f64())
             .is_some());
+        // schema v4: every row carries the auto-tuner columns
+        let o = json.as_arr().unwrap()[0].as_obj().unwrap();
+        assert!(o.contains_key("mode_auto"));
+        assert!(o.contains_key("cycles_auto"));
+        assert!(o.contains_key("regret"));
+    }
+
+    #[test]
+    fn tunesweep_scores_the_model_and_never_loses_to_sw() {
+        let cfg = SocConfig::tiny(4);
+        let ops = [CollOp::Broadcast, CollOp::ReduceScatter];
+        let shapes = [WideShape::Groups, WideShape::Flat];
+        let (rows, table, json) = tunesweep(&cfg, &ops, &shapes, &[1024, 4096]);
+        assert_eq!(rows.len(), 8); // 2 shapes x 2 ops x 2 sizes
+        for r in &rows {
+            assert_coll_row_invariants(r);
+        }
+        assert!(table.render().contains("auto pick"));
+        let o = json.as_obj().unwrap();
+        assert_eq!(o["schema"].as_f64().unwrap() as u64, 4);
+        assert_eq!(o["cells"].as_arr().unwrap().len(), 8);
+        let frac = o["zero_regret_fraction"].as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&frac));
+        assert_eq!(o["never_worse_than_sw"], Json::Bool(true));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! occamy-sim microbench --mode hw --clusters 32 --size 32KiB
 //! occamy-sim toposweep [--endpoints 16]  # topology-shape sweep
 //! occamy-sim collectives [--op all] [--shape all] [--mode both]
+//! occamy-sim tunesweep [--sizes 1k,4k,16k,64k]  # cost-model pick vs measured best
 //! occamy-sim chiplets [--chiplets 1,2,4] [--clusters 16]  # multi-die package sweep
 //! occamy-sim faults [--kind all] [--victim 1]   # fault-injection recovery
 //! occamy-sim qos [--hot 4] [--jobs 4]           # arbitration under serving load
@@ -20,7 +21,7 @@ use std::process::ExitCode;
 use axi_mcast::coordinator::experiments::{
     chiplet_sweep, collectives, collectives_summary, faults_experiment, fig3a, fig3b,
     fig3b_default_clusters, fig3b_default_sizes, fig3b_summary, fig3c, fig3d_schedule,
-    qos_experiment, topo_sweep,
+    qos_experiment, topo_sweep, tunesweep,
 };
 use axi_mcast::coordinator::Report;
 use axi_mcast::occamy::{SocConfig, WideShape};
@@ -97,11 +98,30 @@ const CMDS: &[CmdSpec] = &[
             ("op", "all | broadcast | allgather | reducescatter | allreduce (default all)"),
             ("size", "vector size per collective (default 8KiB)"),
             ("clusters", "cluster count, power of two (default 32)"),
-            ("shape", "all | groups | flat | mesh (wide-network topology, default all)"),
+            (
+                "shape",
+                "all | groups | flat | mesh | ring | torus | ringmesh (wide-network \
+                 topology, default all)",
+            ),
             (
                 "mode",
-                "both | sw | hw | hw-concurrent | hw-reduce (default both; both also \
-                 prints speedups)",
+                "both | sw | hw | hw-concurrent | hw-reduce | auto (default both; both \
+                 also prints speedups; auto lets the cost model pick per cell)",
+            ),
+            ("out", "results directory"),
+            THREADS_OPT,
+        ],
+    },
+    CmdSpec {
+        name: "tunesweep",
+        about: "score the cost-model auto-tuner: its pick vs the measured-best mode per cell",
+        options: &[
+            ("op", "all | broadcast | allgather | reducescatter | allreduce (default all)"),
+            ("sizes", "comma list of vector sizes (default 1k,4k,16k,64k)"),
+            ("clusters", "cluster count, power of two (default 16)"),
+            (
+                "shape",
+                "all | groups | flat | mesh | ring | torus | ringmesh (default all)",
             ),
             ("out", "results directory"),
             THREADS_OPT,
@@ -150,8 +170,11 @@ const CMDS: &[CmdSpec] = &[
         about: "regenerate every figure (fig3a, fig3b, fig3c, fig3d, toposweep, collectives)",
         options: &[
             ("exec", "tile executor for fig3c: rust | pjrt"),
-            ("shape", "forwarded to collectives (all | groups | flat | mesh)"),
-            ("mode", "forwarded to collectives (both | sw | hw | hw-concurrent | hw-reduce)"),
+            ("shape", "forwarded to collectives (all | groups | flat | mesh | ring | ...)"),
+            (
+                "mode",
+                "forwarded to collectives (both | sw | hw | hw-concurrent | hw-reduce | auto)",
+            ),
             ("size", "forwarded to collectives (vector size per collective)"),
             ("out", "results directory (default results)"),
             THREADS_OPT,
@@ -247,6 +270,39 @@ fn run_toposweep(args: &Args, out: Option<&str>) -> Result<(), String> {
     emit(&r)
 }
 
+/// Parse `--shape` into the wide-network shapes to sweep. The named
+/// ring / torus / ring-of-meshes choices use the same compact instances
+/// the default sweep does; every shape is validated against the cluster
+/// count up front so a bad combination fails with a clean message, not
+/// a panic mid-sweep.
+fn parse_shapes(cfg: &SocConfig, s: &str) -> Result<Vec<WideShape>, String> {
+    let shapes = match s {
+        "all" => coll::default_shapes(cfg),
+        "groups" => vec![WideShape::Groups],
+        "flat" => vec![WideShape::Flat],
+        "mesh" => {
+            if cfg.n_groups() < 2 {
+                return Err("--shape mesh needs at least 2 groups of clusters".to_string());
+            }
+            vec![WideShape::Mesh(cfg.n_groups())]
+        }
+        "ring" => vec![WideShape::Ring(4)],
+        "torus" => vec![WideShape::Torus(2, 2)],
+        "ringmesh" => vec![WideShape::RingMesh(2, 2)],
+        s => {
+            return Err(format!(
+                "unknown --shape '{s}' (groups|flat|mesh|ring|torus|ringmesh|all)"
+            ))
+        }
+    };
+    for shape in &shapes {
+        let mut probe = cfg.clone();
+        probe.wide_shape = shape.clone();
+        probe.validate().map_err(|e| format!("--shape {s}: {e}"))?;
+    }
+    Ok(shapes)
+}
+
 fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
     let clusters = args.usize_or("clusters", 32)?;
     if !clusters.is_power_of_two() || clusters < 2 {
@@ -292,18 +348,7 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
             ));
         }
     }
-    let shapes: Vec<WideShape> = match args.get_or("shape", "all") {
-        "all" => coll::default_shapes(&cfg),
-        "groups" => vec![WideShape::Groups],
-        "flat" => vec![WideShape::Flat],
-        "mesh" => {
-            if cfg.n_groups() < 2 {
-                return Err("--shape mesh needs at least 2 groups of clusters".to_string());
-            }
-            vec![WideShape::Mesh(cfg.n_groups())]
-        }
-        s => return Err(format!("unknown --shape '{s}' (groups|flat|mesh|all)")),
-    };
+    let shapes = parse_shapes(&cfg, args.get_or("shape", "all"))?;
     let mut r = Report::new("collectives").to_dir(out);
     match args.get_or("mode", "both") {
         "both" => {
@@ -321,20 +366,28 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
         }
         m => {
             let mode = CollMode::parse(m).ok_or_else(|| {
-                format!("unknown --mode '{m}' (both|sw|hw|hw-concurrent|hw-reduce)")
+                format!("unknown --mode '{m}' (both|sw|hw|hw-concurrent|hw-reduce|auto)")
             })?;
             let mut table = axi_mcast::util::table::Table::new(&[
-                "op", "shape", "KiB", "cycles", "inj W", "mcast AWs", "numerics",
+                "op", "shape", "KiB", "plan", "cycles", "inj W", "mcast AWs", "numerics",
             ]);
             for shape in &shapes {
                 let mut cfg = cfg.clone();
                 cfg.wide_shape = shape.clone();
                 for &op in &ops {
                     let res = run_collective(&cfg, op, mode, bytes);
+                    // under `auto` the plan column shows what the cost
+                    // model resolved the cell to (mode, chunk split)
+                    let plan = res
+                        .plan
+                        .as_ref()
+                        .map(|p| p.describe())
+                        .unwrap_or_else(|| res.mode.name().to_string());
                     table.row(&[
                         res.op.name().to_string(),
                         res.shape.clone(),
                         (res.bytes / 1024).to_string(),
+                        plan,
                         res.cycles.to_string(),
                         res.dma_w_beats.to_string(),
                         res.wide.aw_mcast.to_string(),
@@ -345,6 +398,60 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
             r.table(&format!("Collective operations ({} only)", mode.name()), &table);
         }
     }
+    emit(&r)
+}
+
+fn run_tunesweep(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let clusters = args.usize_or("clusters", 16)?;
+    if !clusters.is_power_of_two() || clusters < 2 {
+        return Err(format!(
+            "--clusters must be a power of two >= 2 (collectives address mask-form sets), \
+             got {clusters}"
+        ));
+    }
+    let mut cfg = SocConfig {
+        n_clusters: clusters,
+        clusters_per_group: clusters.min(4),
+        ..SocConfig::default()
+    };
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    let default_sizes: Vec<u64> = [1u64, 4, 16, 64].iter().map(|k| k * 1024).collect();
+    let sizes = args.u64_list_or("sizes", &default_sizes)?;
+    let step = cfg.wide_bytes as u64 * clusters as u64;
+    for &bytes in &sizes {
+        if bytes == 0 || bytes % step != 0 {
+            return Err(format!(
+                "--sizes entries must be positive multiples of bus width x clusters ({step} B), \
+                 got {bytes}"
+            ));
+        }
+    }
+    let ops: Vec<CollOp> = match args.get_or("op", "all") {
+        "all" => CollOp::ALL.to_vec(),
+        s => vec![CollOp::parse(s).ok_or_else(|| {
+            format!("unknown --op '{s}' (broadcast|allgather|reducescatter|allreduce|all)")
+        })?],
+    };
+    let shapes = parse_shapes(&cfg, args.get_or("shape", "all"))?;
+    let (rows, table, json) = tunesweep(&cfg, &ops, &shapes, &sizes);
+    let hits = rows.iter().filter(|row| row.regret <= 0.0).count();
+    let mut r = Report::new("tunesweep").to_dir(out);
+    r.table(
+        "Auto-tuner scorecard: the cost model's pick vs the measured-best concrete \
+         mode per (op, shape, size) cell (cells whose worst-case footprint overflows \
+         the per-cluster SPM are skipped and counted in the JSON)",
+        &table,
+    );
+    r.section(
+        "Headline",
+        &format!(
+            "zero-regret cells: {hits}/{} ({:.0}%); auto never worse than sw: {}",
+            rows.len(),
+            100.0 * hits as f64 / rows.len().max(1) as f64,
+            rows.iter().all(|row| row.auto.cycles <= row.sw.cycles)
+        ),
+    );
+    r.json("rows", json);
     emit(&r)
 }
 
@@ -584,6 +691,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         }
         "collectives" => {
             run_collectives(args, out)?;
+        }
+        "tunesweep" => {
+            run_tunesweep(args, out)?;
         }
         "chiplets" => {
             run_chiplets(args, out)?;

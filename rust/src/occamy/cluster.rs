@@ -334,6 +334,7 @@ impl Cluster {
                         beat_bytes: self.narrow_bytes,
                         is_mcast: false,
                         exclude: None,
+                        window: None,
                         src: 0,
                         txn,
                         ticket: None,
@@ -361,6 +362,7 @@ impl Cluster {
                         beat_bytes: self.narrow_bytes,
                         is_mcast: dst.count() > 1,
                         exclude: None,
+                        window: None,
                         src: 0,
                         txn,
                         ticket: None,
@@ -563,6 +565,7 @@ mod tests {
             beat_bytes: 8,
             is_mcast: false,
             exclude: None,
+            window: None,
             src: 0,
             txn: 99,
             ticket: None,

@@ -35,6 +35,16 @@ pub enum WideShape {
     /// A fully-connected mesh of this many peer crossbar tiles; the LLC
     /// is hosted on tile 0.
     Mesh(usize),
+    /// A bidirectional span-ordered ring of this many nodes; the LLC is
+    /// hosted on node 0 (see `axi::topology::build_ring`).
+    Ring(usize),
+    /// A `cols`×`rows` 2-D torus, row-major with the X dimension
+    /// innermost; the LLC is hosted on node (0, 0).
+    Torus(usize, usize),
+    /// A ring of `groups` fully-connected mesh groups of `tiles`
+    /// crossbars each, joined by per-group gateway tiles; the LLC is
+    /// hosted on group 0's gateway.
+    RingMesh(usize, usize),
 }
 
 impl WideShape {
@@ -48,6 +58,9 @@ impl WideShape {
                 format!("tree{}", parts.join("x"))
             }
             WideShape::Mesh(tiles) => format!("mesh{tiles}"),
+            WideShape::Ring(nodes) => format!("ring{nodes}"),
+            WideShape::Torus(cols, rows) => format!("torus{cols}x{rows}"),
+            WideShape::RingMesh(groups, tiles) => format!("ringmesh{groups}x{tiles}"),
         }
     }
 }
@@ -428,6 +441,35 @@ impl SocConfig {
                 }
             }
         }
+        match &self.wide_shape {
+            WideShape::Ring(n) => {
+                if *n < 2 || self.n_clusters % n != 0 {
+                    return Err(format!(
+                        "WideShape::Ring({n}) needs >= 2 nodes dividing {} clusters",
+                        self.n_clusters
+                    ));
+                }
+            }
+            WideShape::Torus(cols, rows) => {
+                if *cols < 2 || *rows < 2 || self.n_clusters % (cols * rows) != 0 {
+                    return Err(format!(
+                        "WideShape::Torus({cols}, {rows}) needs >= 2 nodes per dimension \
+                         with cols*rows dividing {} clusters",
+                        self.n_clusters
+                    ));
+                }
+            }
+            WideShape::RingMesh(groups, tiles) => {
+                if *groups < 2 || *tiles < 2 || self.n_clusters % (groups * tiles) != 0 {
+                    return Err(format!(
+                        "WideShape::RingMesh({groups}, {tiles}) needs >= 2 groups of >= 2 \
+                         tiles with groups*tiles dividing {} clusters",
+                        self.n_clusters
+                    ));
+                }
+            }
+            _ => {}
+        }
         let p = &self.package;
         if p.chiplets == 0 {
             return Err("package.chiplets must be >= 1".into());
@@ -442,12 +484,15 @@ impl SocConfig {
             let per_die = self.n_clusters / p.chiplets;
             p.d2d().check().map_err(|e| format!("package: {e}"))?;
             match &self.wide_shape {
-                WideShape::Mesh(_) => {
-                    return Err(
-                        "a chiplet package builds per-die trees; WideShape::Mesh is not \
-                         supported with package.chiplets > 1"
-                            .into(),
-                    );
+                WideShape::Mesh(_)
+                | WideShape::Ring(_)
+                | WideShape::Torus(..)
+                | WideShape::RingMesh(..) => {
+                    return Err(format!(
+                        "a chiplet package builds per-die trees; WideShape::{} is not \
+                         supported with package.chiplets > 1",
+                        self.wide_shape.label()
+                    ));
                 }
                 WideShape::Groups => {
                     if per_die % self.clusters_per_group != 0 {
@@ -587,10 +632,16 @@ mod tests {
         let mut c = SocConfig::tiny(16);
         c.package.chiplets = 3;
         assert!(c.validate().is_err());
-        // a die is a tree: meshes are refused
+        // a die is a tree: meshes and the ring family are refused
         let mut c = SocConfig::tiny(16);
         c.package.chiplets = 2;
         c.wide_shape = WideShape::Mesh(4);
+        assert!(c.validate().is_err());
+        c.wide_shape = WideShape::Ring(4);
+        assert!(c.validate().is_err());
+        c.wide_shape = WideShape::Torus(2, 2);
+        assert!(c.validate().is_err());
+        c.wide_shape = WideShape::RingMesh(2, 2);
         assert!(c.validate().is_err());
         // explicit tree arity must match the per-die split
         let mut c = SocConfig::tiny(16);
@@ -614,6 +665,23 @@ mod tests {
         // chiplets 0 is meaningless
         let mut c = SocConfig::tiny(16);
         c.package.chiplets = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_checks_ring_shapes() {
+        let mut c = SocConfig::tiny(16);
+        c.wide_shape = WideShape::Ring(4);
+        assert!(c.validate().is_ok());
+        c.wide_shape = WideShape::Ring(5); // does not divide 16
+        assert!(c.validate().is_err());
+        c.wide_shape = WideShape::Torus(2, 4);
+        assert!(c.validate().is_ok());
+        c.wide_shape = WideShape::Torus(1, 4); // degenerate dimension
+        assert!(c.validate().is_err());
+        c.wide_shape = WideShape::RingMesh(2, 4);
+        assert!(c.validate().is_ok());
+        c.wide_shape = WideShape::RingMesh(2, 3); // 6 does not divide 16
         assert!(c.validate().is_err());
     }
 

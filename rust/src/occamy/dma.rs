@@ -295,6 +295,7 @@ impl DmaEngine {
                     beat_bytes: self.beat_bytes,
                     is_mcast,
                     exclude: None,
+                    window: None,
                     src: 0,
                     txn,
                     ticket: None,

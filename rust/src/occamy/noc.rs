@@ -20,8 +20,9 @@ use super::config::{
     SocConfig, WideShape, BARRIER_BASE, BARRIER_SIZE, CLUSTER_BASE, CLUSTER_STRIDE, LLC_BASE,
 };
 use crate::axi::topology::{
-    build_chiplets, build_mesh, build_tree, step_xbars_scheduled, sum_xbar_stats, ChipletSpec,
-    EndpointMap, FabricParams, MeshSpec, NodeId, TreeSpec,
+    build_chiplets, build_mesh, build_ring, build_ring_mesh, build_torus2d, build_tree,
+    step_xbars_scheduled, sum_xbar_stats, ChipletSpec, EndpointMap, FabricParams, MeshSpec,
+    NodeId, RingMeshSpec, RingSpec, Torus2dSpec, TreeSpec,
 };
 use crate::axi::types::{LinkId, LinkPool};
 use crate::axi::xbar::{Xbar, XbarStats};
@@ -181,8 +182,14 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
                 );
                 a.clone()
             }
-            (NetKind::Wide, WideShape::Mesh(_)) => {
-                panic!("package.chiplets > 1 builds per-die trees; WideShape::Mesh unsupported")
+            (NetKind::Wide, WideShape::Mesh(_))
+            | (NetKind::Wide, WideShape::Ring(_))
+            | (NetKind::Wide, WideShape::Torus(..))
+            | (NetKind::Wide, WideShape::RingMesh(..)) => {
+                panic!(
+                    "package.chiplets > 1 builds per-die trees; WideShape::{} unsupported",
+                    cfg.wide_shape.label()
+                )
             }
         };
         let n_root_masters = match kind {
@@ -217,25 +224,69 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
     }
 
     if kind == NetKind::Wide {
-        if let WideShape::Mesh(tiles) = cfg.wide_shape {
-            let spec = MeshSpec {
-                name: format!("{kind:?}"),
-                endpoints,
-                tiles,
-                params,
-                services: vec![service],
-            };
-            let built = build_mesh(pool, cfg.link_depth, &spec, |_, _| {});
-            let n_xbars = built.topo.xbars.len();
+        // the peer-routed shapes — mesh and the ring family — host the
+        // LLC on their first node (mesh tile 0 / ring node 0 / group
+        // 0's gateway) and have no tree root
+        let built = match &cfg.wide_shape {
+            WideShape::Mesh(tiles) => {
+                let spec = MeshSpec {
+                    name: format!("{kind:?}"),
+                    endpoints: endpoints.clone(),
+                    tiles: *tiles,
+                    params: params.clone(),
+                    services: vec![service.clone()],
+                };
+                let b = build_mesh(pool, cfg.link_depth, &spec, |_, _| {});
+                Some((b.topo, b.endpoint_m, b.endpoint_s, b.endpoint_nodes, b.service_s))
+            }
+            WideShape::Ring(nodes) => {
+                let spec = RingSpec {
+                    name: format!("{kind:?}"),
+                    endpoints: endpoints.clone(),
+                    nodes: *nodes,
+                    params: params.clone(),
+                    services: vec![service.clone()],
+                };
+                let b = build_ring(pool, cfg.link_depth, &spec, |_, _| {});
+                Some((b.topo, b.endpoint_m, b.endpoint_s, b.endpoint_nodes, b.service_s))
+            }
+            WideShape::Torus(cols, rows) => {
+                let spec = Torus2dSpec {
+                    name: format!("{kind:?}"),
+                    endpoints: endpoints.clone(),
+                    cols: *cols,
+                    rows: *rows,
+                    params: params.clone(),
+                    services: vec![service.clone()],
+                };
+                let b = build_torus2d(pool, cfg.link_depth, &spec, |_, _| {});
+                Some((b.topo, b.endpoint_m, b.endpoint_s, b.endpoint_nodes, b.service_s))
+            }
+            WideShape::RingMesh(groups, tiles) => {
+                let spec = RingMeshSpec {
+                    name: format!("{kind:?}"),
+                    endpoints: endpoints.clone(),
+                    groups: *groups,
+                    tiles: *tiles,
+                    params: params.clone(),
+                    services: vec![service.clone()],
+                };
+                let b = build_ring_mesh(pool, cfg.link_depth, &spec, |_, _| {});
+                Some((b.topo, b.endpoint_m, b.endpoint_s, b.endpoint_nodes, b.service_s))
+            }
+            _ => None,
+        };
+        if let Some((topo, cluster_m, cluster_s, cluster_nodes, service_s)) = built {
+            let n_xbars = topo.xbars.len();
             return Network {
                 kind,
-                resv: built.topo.resv,
-                reduce: built.topo.reduce,
-                cluster_nodes: built.endpoint_nodes,
-                xbars: built.topo.xbars,
-                cluster_m: built.endpoint_m,
-                cluster_s: built.endpoint_s,
-                service_s: built.service_s[0],
+                resv: topo.resv,
+                reduce: topo.reduce,
+                cluster_nodes,
+                xbars: topo.xbars,
+                cluster_m,
+                cluster_s,
+                service_s: service_s[0],
                 ext_m: None,
                 node_die: vec![0; n_xbars],
                 die_roots: Vec::new(),
@@ -257,7 +308,10 @@ pub fn build_network(cfg: &SocConfig, pool: &mut LinkPool, kind: NetKind) -> Net
             );
             a.clone()
         }
-        (NetKind::Wide, WideShape::Mesh(_)) => unreachable!("handled above"),
+        (NetKind::Wide, WideShape::Mesh(_))
+        | (NetKind::Wide, WideShape::Ring(_))
+        | (NetKind::Wide, WideShape::Torus(..))
+        | (NetKind::Wide, WideShape::RingMesh(..)) => unreachable!("handled above"),
     };
     let n_root_masters = match kind {
         NetKind::Narrow => 1, // the barrier unit injects release IRQs
@@ -333,6 +387,9 @@ mod tests {
             (WideShape::Flat, 1),
             (WideShape::Tree(vec![2, 2, 2]), 7), // 4 leaves + 2 mids + root
             (WideShape::Mesh(2), 2),
+            (WideShape::Ring(4), 4),
+            (WideShape::Torus(2, 2), 4),
+            (WideShape::RingMesh(2, 2), 4),
         ] {
             let mut cfg = SocConfig::tiny(8);
             cfg.wide_shape = shape.clone();

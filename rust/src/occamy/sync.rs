@@ -118,6 +118,7 @@ impl BarrierUnit {
                     beat_bytes: self.narrow_bytes,
                     is_mcast: dst.count() > 1,
                     exclude: None,
+                    window: None,
                     src: 0,
                     txn,
                     ticket: None,
@@ -167,6 +168,7 @@ mod tests {
             beat_bytes: 8,
             is_mcast: false,
             exclude: None,
+            window: None,
             src: 0,
             txn,
             ticket: None,

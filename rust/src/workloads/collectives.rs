@@ -4,7 +4,8 @@
 //! and **all-reduce** — run over all `n_clusters` clusters of the
 //! Occamy model, on every wide-network topology shape
 //! ([`WideShape`]: the paper's group/top tree, a flat crossbar, deeper
-//! trees, a mesh of tiles), each in two strategies:
+//! trees, a mesh of tiles, plus the topology zoo's rings, tori and
+//! rings of mesh groups), each in several strategies:
 //!
 //! * [`CollMode::Sw`] — software baselines built from unicast DMA
 //!   transfers: binomial-tree (recursive-doubling) broadcast, ring
@@ -38,6 +39,13 @@
 //!   chunk multicasts down. Broadcast and all-gather have no reduction
 //!   phase, so they reuse the `hw-concurrent` schedules (the mode
 //!   still arms the reservation protocol for them).
+//! * [`CollMode::Auto`] — the cost-model-driven auto-tuner: before the
+//!   run, [`auto_plan`] scores every concrete mode plus the
+//!   concurrent-multicast chunk-split ladder on the analytic fabric
+//!   model ([`crate::axi::costmodel`]) for the configured shape, size
+//!   and package, and the run dispatches to the winner. The
+//!   `tunesweep` experiment measures the pick's regret against the
+//!   measured-best mode per cell.
 //!
 //! The [`CollMode::Hw`] all-gather deliberately does **not** issue N
 //! concurrent global multicasts: on the RTL-faithful fabric two
@@ -86,6 +94,7 @@
 //!   *before* the narrow D2D crossing) — intra-die hw-reduce feeding
 //!   inter-die chunked multicast, entirely in fabric hardware.
 
+use crate::axi::costmodel::{CollPattern, CostModel, D2dCost, SchedMode, ShapeKind};
 use crate::axi::mcast::AddrSet;
 use crate::axi::reduce::ReduceOp;
 use crate::axi::xbar::XbarStats;
@@ -147,6 +156,12 @@ pub enum CollMode {
     /// (`SocConfig::fabric_reduce`, switched on by this mode together
     /// with the reservation protocol), no software combine round-trips.
     HwReduce,
+    /// Cost-model-driven auto-tuning: [`auto_plan`] scores every
+    /// concrete mode (and the concurrent-multicast chunk-split ladder)
+    /// on the analytic fabric model ([`crate::axi::costmodel`]) and
+    /// the run dispatches to the winner. Not part of [`CollMode::ALL`]
+    /// — sweeps measure the concrete modes and `Auto` rides on top.
+    Auto,
 }
 
 impl CollMode {
@@ -156,6 +171,7 @@ impl CollMode {
             CollMode::Hw => "hw-mcast",
             CollMode::HwConc => "hw-concurrent",
             CollMode::HwReduce => "hw-reduce",
+            CollMode::Auto => "auto",
         }
     }
 
@@ -165,10 +181,13 @@ impl CollMode {
             "hw" | "hw-mcast" | "mcast" => Some(CollMode::Hw),
             "hw-concurrent" | "hwconc" | "concurrent" | "conc" => Some(CollMode::HwConc),
             "hw-reduce" | "hwred" | "reduce" | "red" => Some(CollMode::HwReduce),
+            "auto" | "tune" | "tuned" => Some(CollMode::Auto),
             _ => None,
         }
     }
 
+    /// The concrete measurable modes (the auto-tuner picks among
+    /// these; `Auto` itself is deliberately not swept).
     pub const ALL: [CollMode; 4] = [
         CollMode::Sw,
         CollMode::Hw,
@@ -270,9 +289,18 @@ impl CollLayout {
         (self.chunk / 8) as usize
     }
 
-    /// L1 bytes one cluster needs for `(op, mode)`.
+    /// L1 bytes one cluster needs for `(op, mode)`. `Auto` reserves
+    /// the worst case over the concrete modes it may resolve to.
     pub fn footprint(&self, op: CollOp, mode: CollMode) -> u64 {
+        if mode == CollMode::Auto {
+            return CollMode::ALL
+                .iter()
+                .map(|m| self.footprint(op, *m))
+                .max()
+                .unwrap();
+        }
         match (op, mode) {
+            (_, CollMode::Auto) => unreachable!("resolved above"),
             (CollOp::Broadcast, _) => self.gather,
             (CollOp::AllGather, _) => self.work,
             (CollOp::ReduceScatter, CollMode::Sw) => self.slots,
@@ -392,6 +420,22 @@ impl ComputeHandler for CollectiveCompute {
 
 /// Build per-cluster command programs for one `(op, mode)` point.
 pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> Vec<Vec<Cmd>> {
+    programs_chunked(cfg, l, op, mode, 1)
+}
+
+/// [`programs`] with the auto-tuner's chunk knob: every concurrent
+/// chunk multicast is split into `chunks` beat-aligned sub-chunk
+/// multicasts, pipelining fork latency with injection. `chunks = 1`
+/// is the classic one-multicast-per-rank schedule; a split that would
+/// break beat alignment falls back to it. The bytes written are
+/// identical for every split, so results stay bit-exact.
+pub fn programs_chunked(
+    cfg: &SocConfig,
+    l: &CollLayout,
+    op: CollOp,
+    mode: CollMode,
+    chunks: usize,
+) -> Vec<Vec<Cmd>> {
     let n = l.n;
     let l1 = |c: usize, off: u64| cfg.cluster_base(c) + off;
     let uni = |c: usize, off: u64| AddrSet::unicast(l1(c, off));
@@ -399,7 +443,30 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
     let se = l.elems() as u64;
     let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); n];
 
+    let k = if chunks >= 1 && l.chunk % (chunks as u64 * cfg.wide_bytes as u64) == 0 {
+        chunks
+    } else {
+        1
+    };
+    let piece = l.chunk / k as u64;
+    // one rank's leg of the concurrent-multicast phase: k sub-chunk
+    // multicasts back to back, then the usual drain
+    let conc_mcast = |p: &mut Vec<Cmd>, r: usize, src_off: u64, dst_off: u64, tag_base: u64| {
+        for s in 0..k {
+            p.push(Cmd::Dma {
+                src: l1(r, src_off + s as u64 * piece),
+                dst: cfg.cluster_set(0, n, dst_off + s as u64 * piece),
+                bytes: piece,
+                tag: tag_base + (r * k + s) as u64,
+            });
+        }
+        p.push(Cmd::WaitDma);
+    };
+
     match (op, mode) {
+        (_, CollMode::Auto) => {
+            unreachable!("CollMode::Auto resolves to a concrete mode before scheduling")
+        }
         // ---- broadcast ----
         (CollOp::Broadcast, CollMode::Sw) => {
             // binomial tree (recursive doubling): after round t, ranks
@@ -466,13 +533,7 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
                     });
                 }
                 p.push(Cmd::WaitIrq { count: 1 });
-                p.push(Cmd::Dma {
-                    src: l1(r, l.acc + r as u64 * l.chunk),
-                    dst: cfg.cluster_set(0, n, l.acc + r as u64 * l.chunk),
-                    bytes: l.chunk,
-                    tag: 100 + r as u64,
-                });
-                p.push(Cmd::WaitDma);
+                conc_mcast(p, r, l.acc + r as u64 * l.chunk, l.acc + r as u64 * l.chunk, 100);
                 p.push(Cmd::SendIrq {
                     dst: cfg.all_mailboxes(),
                 });
@@ -543,13 +604,8 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
             // slot AT ONCE — n concurrent global multicasts, no gather
             // phase, injected beats = exactly one buffer
             for (r, p) in progs.iter_mut().enumerate() {
-                p.push(Cmd::Dma {
-                    src: l1(r, l.gather + r as u64 * l.chunk),
-                    dst: cfg.cluster_set(0, n, l.gather + r as u64 * l.chunk),
-                    bytes: l.chunk,
-                    tag: r as u64,
-                });
-                p.push(Cmd::WaitDma);
+                let slot = l.gather + r as u64 * l.chunk;
+                conc_mcast(p, r, slot, slot, 0);
                 p.push(Cmd::SendIrq {
                     dst: cfg.all_mailboxes(),
                 });
@@ -650,13 +706,7 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
             // concurrent chunk multicasts re-assemble the full vector
             fabric_reduce_scatter(cfg, l, &mut progs);
             for (r, p) in progs.iter_mut().enumerate() {
-                p.push(Cmd::Dma {
-                    src: l1(r, l.acc),
-                    dst: cfg.cluster_set(0, n, l.gather + r as u64 * l.chunk),
-                    bytes: l.chunk,
-                    tag: 100 + r as u64,
-                });
-                p.push(Cmd::WaitDma);
+                conc_mcast(p, r, l.acc, l.gather + r as u64 * l.chunk, 100);
                 p.push(Cmd::SendIrq {
                     dst: cfg.all_mailboxes(),
                 });
@@ -673,13 +723,7 @@ pub fn programs(cfg: &SocConfig, l: &CollLayout, op: CollOp, mode: CollMode) -> 
             // all-gather collapsed into simultaneous global multicasts
             direct_reduce_scatter(cfg, l, &mut progs);
             for (r, p) in progs.iter_mut().enumerate() {
-                p.push(Cmd::Dma {
-                    src: l1(r, l.acc),
-                    dst: cfg.cluster_set(0, n, l.gather + r as u64 * l.chunk),
-                    bytes: l.chunk,
-                    tag: 100 + r as u64,
-                });
-                p.push(Cmd::WaitDma);
+                conc_mcast(p, r, l.acc, l.gather + r as u64 * l.chunk, 100);
                 p.push(Cmd::SendIrq {
                     dst: cfg.all_mailboxes(),
                 });
@@ -922,6 +966,96 @@ fn ring_reduce_scatter(cfg: &SocConfig, l: &CollLayout, progs: &mut [Vec<Cmd>], 
     }
 }
 
+// ---- auto-tuning ----
+
+/// The auto-tuner's resolved plan for one `(op, size, shape)` point.
+#[derive(Debug, Clone)]
+pub struct CollPlan {
+    /// The concrete mode the run dispatches to.
+    pub mode: CollMode,
+    /// Sub-chunks per concurrent multicast (see [`programs_chunked`]).
+    pub chunks: usize,
+    /// The model's cycle estimate for the pick.
+    pub cost: f64,
+    /// Full scoreboard, cheapest first: `(mode, chunks, est. cycles)`.
+    pub scored: Vec<(CollMode, usize, f64)>,
+}
+
+impl CollPlan {
+    /// Short human-readable form for table rows: `hw-concurrent` or
+    /// `hw-concurrent/2` when the chunk knob is engaged.
+    pub fn describe(&self) -> String {
+        if self.chunks > 1 {
+            format!("{}/{}", self.mode.name(), self.chunks)
+        } else {
+            self.mode.name().to_string()
+        }
+    }
+}
+
+fn shape_kind(cfg: &SocConfig) -> ShapeKind {
+    match &cfg.wide_shape {
+        WideShape::Groups => ShapeKind::Groups {
+            per_group: cfg.clusters_per_group,
+        },
+        WideShape::Flat => ShapeKind::Flat,
+        WideShape::Tree(arity) => ShapeKind::Tree {
+            arity: arity.clone(),
+        },
+        WideShape::Mesh(tiles) => ShapeKind::Mesh { tiles: *tiles },
+        WideShape::Ring(nodes) => ShapeKind::Ring { nodes: *nodes },
+        WideShape::Torus(cols, rows) => ShapeKind::Torus {
+            cols: *cols,
+            rows: *rows,
+        },
+        WideShape::RingMesh(groups, tiles) => ShapeKind::RingMesh {
+            groups: *groups,
+            tiles: *tiles,
+        },
+    }
+}
+
+fn sched_to_mode(s: SchedMode) -> CollMode {
+    match s {
+        SchedMode::Unicast => CollMode::Sw,
+        SchedMode::Mcast => CollMode::Hw,
+        SchedMode::ConcMcast => CollMode::HwConc,
+        SchedMode::FabricReduce => CollMode::HwReduce,
+    }
+}
+
+/// Score every concrete mode × chunk-split candidate for this config's
+/// fabric on the analytic cost model and return the winning plan.
+pub fn auto_plan(cfg: &SocConfig, op: CollOp, bytes: u64) -> CollPlan {
+    let mut model = CostModel::new(cfg.n_clusters, cfg.wide_bytes as u64, shape_kind(cfg));
+    model.max_mcast_outstanding = cfg.fabric_max_mcast_outstanding;
+    model.mcast_w_cooldown = cfg.mcast_w_cooldown;
+    if cfg.package.chiplets > 1 {
+        model.d2d = Some(D2dCost {
+            dies: cfg.package.chiplets,
+            width_ratio: cfg.package.d2d_width_ratio,
+            latency: cfg.package.d2d_latency,
+        });
+    }
+    let pattern = match op {
+        CollOp::Broadcast => CollPattern::Broadcast,
+        CollOp::AllGather => CollPattern::AllGather,
+        CollOp::ReduceScatter => CollPattern::ReduceScatter,
+        CollOp::AllReduce => CollPattern::AllReduce,
+    };
+    let plan = model.plan(pattern, bytes);
+    CollPlan {
+        mode: sched_to_mode(plan.best.mode),
+        chunks: plan.best.chunks,
+        cost: plan.best.cost,
+        scored: plan
+            .scored
+            .iter()
+            .map(|c| (sched_to_mode(c.mode), c.chunks, c.cost))
+            .collect(),
+    }
+}
+
 // ---- running + verification ----
 
 /// One measured collective run.
@@ -943,6 +1077,9 @@ pub struct CollectiveResult {
     /// Reduction combines dispatched through the compute handler.
     pub combines: u64,
     pub numerics_ok: bool,
+    /// The auto-tuner's resolved plan — `Some` only when the run was
+    /// dispatched through [`CollMode::Auto`].
+    pub plan: Option<CollPlan>,
 }
 
 /// Deterministic contribution vector of one rank: small integers stored
@@ -960,7 +1097,30 @@ pub fn rank_values(rank: usize, elems: usize) -> Vec<f64> {
 /// configured system (the wide-network shape comes from
 /// `cfg.wide_shape`), and validate the result buffers bit-exactly
 /// against the scalar reference reduction.
+///
+/// [`CollMode::Auto`] first resolves to a concrete mode + chunk split
+/// through [`auto_plan`]; the result keeps `mode = Auto` and records
+/// the plan.
 pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -> CollectiveResult {
+    if mode == CollMode::Auto {
+        let plan = auto_plan(cfg, op, bytes);
+        let mut r = run_collective_chunked(cfg, op, plan.mode, bytes, plan.chunks);
+        r.mode = CollMode::Auto;
+        r.plan = Some(plan);
+        return r;
+    }
+    run_collective_chunked(cfg, op, mode, bytes, 1)
+}
+
+/// [`run_collective`] with an explicit concurrent-multicast chunk
+/// split (see [`programs_chunked`]); `mode` must be concrete.
+pub fn run_collective_chunked(
+    cfg: &SocConfig,
+    op: CollOp,
+    mode: CollMode,
+    bytes: u64,
+    chunks: usize,
+) -> CollectiveResult {
     let mut cfg = cfg.clone();
     match mode {
         CollMode::Hw => {
@@ -987,6 +1147,7 @@ pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -
             cfg.wide_mcast = false;
             cfg.narrow_mcast = false;
         }
+        CollMode::Auto => unreachable!("run_collective resolves Auto before dispatch"),
     }
     let l = CollLayout::new(&cfg, bytes);
     let fp = l.footprint(op, mode);
@@ -1039,7 +1200,7 @@ pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -
         }
     }
 
-    soc.load_programs(programs(&cfg, &l, op, mode));
+    soc.load_programs(programs_chunked(&cfg, &l, op, mode, chunks));
     let mut handler = CollectiveCompute::new(l.clone());
     let cycles = soc
         .run(
@@ -1123,16 +1284,27 @@ pub fn run_collective(cfg: &SocConfig, op: CollOp, mode: CollMode, bytes: u64) -
         dma_w_beats,
         combines: handler.combines,
         numerics_ok,
+        plan: None,
     }
 }
 
 /// The wide-network shapes the collectives experiment sweeps for a
-/// given config: the paper's group/top tree, a flat crossbar, and (when
-/// more than one group exists) a mesh with one tile per group.
+/// given config: the paper's group/top tree, a flat crossbar, (when
+/// more than one group exists) a mesh with one tile per group, and —
+/// on single-die configs large enough to populate them — the topology
+/// zoo's ring, torus and ring-of-meshes.
 pub fn default_shapes(cfg: &SocConfig) -> Vec<WideShape> {
+    let n = cfg.n_clusters;
     let mut shapes = vec![WideShape::Groups, WideShape::Flat];
     if cfg.n_groups() >= 2 {
         shapes.push(WideShape::Mesh(cfg.n_groups()));
+    }
+    // the peer-routed shapes don't support chiplet packages (per-die
+    // trees only — see SocConfig::validate)
+    if cfg.package.chiplets == 1 && n >= 8 && n % 4 == 0 {
+        shapes.push(WideShape::Ring(4));
+        shapes.push(WideShape::Torus(2, 2));
+        shapes.push(WideShape::RingMesh(2, 2));
     }
     shapes
 }
@@ -1159,6 +1331,13 @@ mod tests {
             assert_eq!(o % c.wide_bytes as u64, 0, "offset {o:#x} misaligned");
         }
         assert!(l.footprint(CollOp::AllReduce, CollMode::Hw) <= c.l1_bytes);
+        // Auto reserves the worst case over the modes it may pick
+        for op in CollOp::ALL {
+            let auto = l.footprint(op, CollMode::Auto);
+            for mode in CollMode::ALL {
+                assert!(auto >= l.footprint(op, mode), "{} auto footprint", op.name());
+            }
+        }
     }
 
     #[test]
@@ -1296,6 +1475,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn auto_resolves_and_matches_its_concrete_pick_exactly() {
+        for op in CollOp::ALL {
+            let r = run_collective(&cfg(8), op, CollMode::Auto, 4096);
+            assert!(r.numerics_ok, "{} auto numerics", op.name());
+            assert_eq!(r.mode, CollMode::Auto);
+            let plan = r.plan.clone().expect("auto run must record its plan");
+            assert!(plan.mode != CollMode::Auto, "the pick must be concrete");
+            assert!(plan.scored.len() >= 4, "scoreboard must cover every mode");
+            let direct = run_collective_chunked(&cfg(8), op, plan.mode, 4096, plan.chunks);
+            assert_eq!(r.cycles, direct.cycles, "{}: auto vs direct run", op.name());
+            assert_eq!(r.dma_w_beats, direct.dma_w_beats);
+        }
+    }
+
+    #[test]
+    fn chunked_schedules_stay_bit_exact_and_preserve_beats() {
+        let base = run_collective_chunked(&cfg(8), CollOp::AllGather, CollMode::HwConc, 4096, 1);
+        let split = run_collective_chunked(&cfg(8), CollOp::AllGather, CollMode::HwConc, 4096, 2);
+        assert!(split.numerics_ok);
+        assert_eq!(base.dma_w_beats, split.dma_w_beats, "same bytes, same beats");
+        assert!(
+            split.wide.aw_mcast > base.wide.aw_mcast,
+            "the split must issue more multicast AWs ({} vs {})",
+            split.wide.aw_mcast,
+            base.wide.aw_mcast
+        );
+        // a split that would break beat alignment falls back to one
+        // multicast per rank and must still be bit-exact
+        let odd = run_collective_chunked(&cfg(4), CollOp::AllGather, CollMode::HwConc, SMALL, 3);
+        assert!(odd.numerics_ok);
     }
 
     #[test]

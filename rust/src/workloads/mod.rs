@@ -26,7 +26,10 @@ pub mod microbench;
 pub mod roofline;
 pub mod topo_sweep;
 
-pub use collectives::{run_collective, CollMode, CollOp, CollectiveResult};
+pub use collectives::{
+    auto_plan, run_collective, run_collective_chunked, CollMode, CollOp, CollPlan,
+    CollectiveResult,
+};
 pub use faults::{run_fault_scenario, run_qos_load, FaultKind, FaultRunResult, QosResult};
 pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
 pub use microbench::{run_microbench, McastMode, MicrobenchResult};

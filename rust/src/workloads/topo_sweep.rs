@@ -1,8 +1,8 @@
 //! Topology-shape sweep: the 1-to-N distribution microbenchmark run
 //! directly on fabrics built by the topology subsystem (no Occamy SoC
-//! around them), across shapes — flat N×N, hierarchical trees, and a
-//! mesh of crossbar tiles — in hardware-multicast vs unicast-train
-//! mode.
+//! around them), across shapes — flat N×N, hierarchical trees, meshes
+//! of crossbar tiles, rings, tori and rings of mesh groups — in
+//! hardware-multicast vs unicast-train mode.
 //!
 //! The scenario reports cycles plus the aggregate [`XbarStats`] so the
 //! multicast claim is visible at beat granularity: one mask-form AW in,
@@ -140,6 +140,7 @@ impl ScriptMaster {
                 beat_bytes: 64,
                 is_mcast: !dest.is_singleton(),
                 exclude: None,
+                window: None,
                 src: 0,
                 txn,
                 ticket: None,
@@ -564,11 +565,15 @@ pub fn default_shapes(n: usize) -> Vec<TopoShape> {
             arity: vec![2, 2, n / 4],
         });
         shapes.push(TopoShape::Mesh { tiles: 4 });
+        shapes.push(TopoShape::Ring { nodes: 4 });
+        shapes.push(TopoShape::Torus { cols: 2, rows: 2 });
+        shapes.push(TopoShape::RingMesh { groups: 2, tiles: 2 });
     } else if n >= 4 {
         shapes.push(TopoShape::Tree {
             arity: vec![2, n / 2],
         });
         shapes.push(TopoShape::Mesh { tiles: 2 });
+        shapes.push(TopoShape::Ring { nodes: 2 });
     }
     shapes
 }
@@ -616,6 +621,9 @@ mod tests {
             TopoShape::Flat,
             TopoShape::Tree { arity: vec![4, 4] },
             TopoShape::Mesh { tiles: 4 },
+            TopoShape::Ring { nodes: 4 },
+            TopoShape::Torus { cols: 2, rows: 2 },
+            TopoShape::RingMesh { groups: 2, tiles: 2 },
         ] {
             for mcast in [false, true] {
                 let seq = run_topo_broadcast_threads(&shape, 16, 2, 8, mcast, 1).unwrap();
@@ -648,6 +656,9 @@ mod tests {
         for shape in [
             TopoShape::Tree { arity: vec![4, 4] },
             TopoShape::Mesh { tiles: 4 },
+            TopoShape::Ring { nodes: 4 },
+            TopoShape::Torus { cols: 2, rows: 2 },
+            TopoShape::RingMesh { groups: 2, tiles: 2 },
         ] {
             let r = run_topo_broadcast(&shape, 16, 1, 4, true).unwrap();
             assert_eq!(

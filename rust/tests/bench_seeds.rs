@@ -1,0 +1,84 @@
+//! Schema-shape sanity for the committed `BENCH_*.json` seeds at the
+//! repo root: every seed must parse, name its bench, carry the schema
+//! version its EXPERIMENTS.md section documents, and any measured rows
+//! must carry the documented columns — so a bench regeneration (the CI
+//! perf jobs) can never silently drift from the documented schema.
+
+use axi_mcast::util::json::Json;
+
+fn load(name: &str) -> Json {
+    let path = format!("{}/../{}", env!("CARGO_MANIFEST_DIR"), name);
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("{path}: invalid JSON: {e}"))
+}
+
+#[test]
+fn collectives_seed_has_schema_v4_shape() {
+    let j = load("BENCH_collectives.json");
+    let o = j.as_obj().unwrap();
+    assert_eq!(o["bench"].as_str(), Some("collectives"));
+    assert_eq!(o["schema"].as_f64().unwrap() as u64, 4);
+    for key in ["config", "rows", "summaries"] {
+        assert!(o.contains_key(key), "BENCH_collectives.json missing {key}");
+    }
+    // measured rows (once a toolchain run replaces the seed) must carry
+    // the v4 auto-tuner columns next to the v3 reduce columns
+    for row in o["rows"].as_arr().unwrap() {
+        let r = row.as_obj().unwrap();
+        for key in [
+            "op",
+            "shape",
+            "cycles_sw",
+            "cycles_hw",
+            "cycles_conc",
+            "cycles_red",
+            "mode_auto",
+            "cycles_auto",
+            "regret",
+            "numerics_ok",
+        ] {
+            assert!(r.contains_key(key), "collectives row missing {key}");
+        }
+    }
+}
+
+#[test]
+fn sim_perf_seed_has_documented_schema_shape() {
+    let j = load("BENCH_sim_perf.json");
+    let o = j.as_obj().unwrap();
+    assert_eq!(o["bench"].as_str(), Some("sim_perf"));
+    // the committed seed is v1 (no toolchain in the authoring
+    // container); `cargo bench --bench sim_perf` regenerates at v2,
+    // folding a v1 file in as `baseline` — both shapes are legal here
+    let schema = o["schema"].as_f64().unwrap() as u64;
+    assert!((1..=2).contains(&schema), "sim_perf schema {schema}");
+    let scenarios = o["scenarios"].as_arr().unwrap();
+    assert!(!scenarios.is_empty(), "sim_perf seed lists no scenarios");
+    for s in scenarios {
+        let s = s.as_obj().unwrap();
+        for key in ["scenario", "variant", "mcycle_per_s", "sim_cycles"] {
+            assert!(s.contains_key(key), "sim_perf scenario missing {key}");
+        }
+    }
+}
+
+/// `BENCH_topo_shapes.json` is bench output, not a committed seed — but
+/// when present (e.g. in a CI workspace after `cargo bench`) it must
+/// match its documented schema too.
+#[test]
+fn topo_shapes_output_when_present_has_schema_v1_shape() {
+    let path = format!("{}/../BENCH_topo_shapes.json", env!("CARGO_MANIFEST_DIR"));
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        return;
+    };
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{path}: invalid JSON: {e}"));
+    let o = j.as_obj().unwrap();
+    assert_eq!(o["bench"].as_str(), Some("topo_shapes"));
+    assert_eq!(o["schema"].as_f64().unwrap() as u64, 1);
+    for row in o["timing"].as_arr().unwrap() {
+        let r = row.as_obj().unwrap();
+        for key in ["shape", "sim_cycles", "mcycle_per_s"] {
+            assert!(r.contains_key(key), "topo_shapes timing row missing {key}");
+        }
+    }
+}

@@ -154,6 +154,7 @@ impl TestMaster {
                 beat_bytes: 64,
                 is_mcast: x.is_mcast,
                 exclude: None,
+                window: None,
                 src: self.idx,
                 txn,
                 ticket: None,

@@ -308,6 +308,9 @@ fn shapes() -> Vec<WideShape> {
         WideShape::Flat,
         WideShape::Tree(vec![2, 2, 2]),
         WideShape::Mesh(2),
+        WideShape::Ring(4),
+        WideShape::Torus(2, 2),
+        WideShape::RingMesh(2, 2),
     ]
 }
 

@@ -372,6 +372,9 @@ fn topo_parallel_random_scripts_property() {
             arity: vec![2, 2, 4],
         },
         TopoShape::Mesh { tiles: 4 },
+        TopoShape::Ring { nodes: 4 },
+        TopoShape::Torus { cols: 2, rows: 2 },
+        TopoShape::RingMesh { groups: 2, tiles: 2 },
     ];
     check(
         "topo-parallel-parity",

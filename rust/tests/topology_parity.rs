@@ -146,6 +146,9 @@ fn prop_random_mcast_scripts_match_flat_end_to_end() {
             arity: vec![2, 2, 4],
         },
         TopoShape::Mesh { tiles: 4 },
+        TopoShape::Ring { nodes: 4 },
+        TopoShape::Torus { cols: 2, rows: 2 },
+        TopoShape::RingMesh { groups: 2, tiles: 2 },
     ];
     check(
         "topology-beat-parity",
@@ -202,6 +205,9 @@ fn broadcast_runs_on_all_shapes_with_invariants() {
             arity: vec![2, 2, 4],
         },
         TopoShape::Mesh { tiles: 4 },
+        TopoShape::Ring { nodes: 4 },
+        TopoShape::Torus { cols: 2, rows: 2 },
+        TopoShape::RingMesh { groups: 2, tiles: 2 },
     ] {
         let uni = run_topo_broadcast(&shape, N_EP, 2, 16, false)
             .unwrap_or_else(|e| panic!("{}: unicast: {e}", shape.label()));
@@ -237,6 +243,9 @@ fn delivered_bases_are_exact() {
     for shape in [
         TopoShape::Tree { arity: vec![4, 4] },
         TopoShape::Mesh { tiles: 4 },
+        TopoShape::Ring { nodes: 4 },
+        TopoShape::Torus { cols: 2, rows: 2 },
+        TopoShape::RingMesh { groups: 2, tiles: 2 },
     ] {
         let r = run_topo_broadcast(&shape, N_EP, 3, 4, true).unwrap();
         for (i, d) in r.deliveries.iter().enumerate() {

@@ -1,0 +1,152 @@
+//! Integration suite for the cost-model collective auto-tuner
+//! (`CollMode::Auto` + `axi::costmodel` + the `tunesweep` experiment):
+//!
+//! * the hard floor — the model's pick is never slower than the
+//!   software baseline, on any reference shape at any swept size;
+//! * bit-exactness — an `Auto` run produces exactly the cycles, beat
+//!   accounting and (bit-exact) result buffers of its resolved
+//!   concrete schedule;
+//! * the plan scoreboard — every concrete mode scored, sorted by
+//!   predicted cost, the winner in front;
+//! * bounded regret — the model lands on a measured-best schedule for
+//!   a healthy majority of `(op, shape, size)` cells.
+
+use axi_mcast::coordinator::experiments::{assert_coll_row_invariants, tunesweep};
+use axi_mcast::occamy::{SocConfig, WideShape};
+use axi_mcast::util::json::Json;
+use axi_mcast::workloads::collectives::{
+    auto_plan, run_collective, run_collective_chunked, CollMode, CollOp,
+};
+
+fn cfg8() -> SocConfig {
+    SocConfig::tiny(8) // 2 groups of 4
+}
+
+/// The reference shapes of the bounded-regret property (the paper's
+/// hierarchy, the flat crossbar, the deep tree and the tile mesh).
+fn reference_shapes() -> Vec<WideShape> {
+    vec![
+        WideShape::Groups,
+        WideShape::Flat,
+        WideShape::Tree(vec![2, 2, 2]),
+        WideShape::Mesh(2),
+    ]
+}
+
+/// Hard acceptance floor: `Auto` never loses to `Sw`, for every op on
+/// every reference shape at small and medium sizes (the invariant
+/// checker also enforces this per row).
+#[test]
+fn auto_never_loses_to_the_software_baseline() {
+    let (rows, _table, json) =
+        tunesweep(&cfg8(), &CollOp::ALL, &reference_shapes(), &[1024, 4096]);
+    assert_eq!(rows.len(), CollOp::ALL.len() * reference_shapes().len() * 2);
+    for r in &rows {
+        assert_coll_row_invariants(r);
+        assert!(
+            r.auto.cycles <= r.sw.cycles,
+            "{} on {} @{}: auto ({}) slower than sw ({})",
+            r.auto.op.name(),
+            r.auto.shape,
+            r.auto.bytes,
+            r.auto.cycles,
+            r.sw.cycles
+        );
+    }
+    let o = json.as_obj().unwrap();
+    assert_eq!(o["never_worse_than_sw"], Json::Bool(true));
+    assert_eq!(o["n_skipped"].as_f64().unwrap() as u64, 0);
+}
+
+/// Bounded regret: the model picks a measured-best schedule on the
+/// majority of cells of the reference sweep. (The acceptance target is
+/// higher; this floor keeps the suite robust to small timing shifts
+/// while still failing loudly if the model degenerates.)
+#[test]
+fn model_hits_the_measured_best_on_most_reference_cells() {
+    let (rows, _table, json) =
+        tunesweep(&cfg8(), &CollOp::ALL, &reference_shapes(), &[1024, 4096]);
+    let o = json.as_obj().unwrap();
+    let frac = o["zero_regret_fraction"].as_f64().unwrap();
+    let losses: Vec<String> = rows
+        .iter()
+        .filter(|r| r.regret > 0.0)
+        .map(|r| {
+            format!(
+                "{} on {} @{}: regret {:.3}",
+                r.auto.op.name(),
+                r.auto.shape,
+                r.auto.bytes,
+                r.regret
+            )
+        })
+        .collect();
+    assert!(
+        frac >= 0.5,
+        "model hit only {:.0}% of cells; misses:\n{}",
+        frac * 100.0,
+        losses.join("\n")
+    );
+}
+
+/// An `Auto` run is its resolved concrete schedule, bit for bit: same
+/// cycle count, same injected beats, bit-exact numerics, and the plan
+/// scoreboard is complete and sorted.
+#[test]
+fn auto_is_bit_exact_against_its_resolved_schedule() {
+    let cfg = cfg8();
+    for shape in reference_shapes() {
+        let mut cfg = cfg.clone();
+        cfg.wide_shape = shape.clone();
+        for op in CollOp::ALL {
+            let auto = run_collective(&cfg, op, CollMode::Auto, 4096);
+            assert!(auto.numerics_ok, "{} on {:?}: numerics", op.name(), shape);
+            assert_eq!(auto.mode, CollMode::Auto);
+            let plan = auto.plan.as_ref().expect("auto records its plan");
+            assert_ne!(plan.mode, CollMode::Auto, "plan must be concrete");
+            // scoreboard: every concrete mode present, costs ascending
+            assert!(plan.scored.len() >= CollMode::ALL.len());
+            for pair in plan.scored.windows(2) {
+                assert!(pair[0].2 <= pair[1].2, "scoreboard out of order");
+            }
+            assert_eq!((plan.mode, plan.chunks), (plan.scored[0].0, plan.scored[0].1));
+            // replaying the pick concretely reproduces the run exactly
+            let direct = run_collective_chunked(&cfg, op, plan.mode, 4096, plan.chunks);
+            assert_eq!(auto.cycles, direct.cycles, "{} on {:?}", op.name(), shape);
+            assert_eq!(auto.dma_w_beats, direct.dma_w_beats);
+            assert_eq!(auto.wide, direct.wide);
+        }
+    }
+}
+
+/// `auto_plan` follows the configured fabric: the plan for a deep ring
+/// differs in predicted cost from the flat crossbar's (the shape term
+/// is live), and multi-die packages raise every fabric schedule.
+#[test]
+fn plans_respond_to_shape_and_package() {
+    let mut flat = cfg8();
+    flat.wide_shape = WideShape::Flat;
+    let mut ring = cfg8();
+    ring.wide_shape = WideShape::Ring(4);
+    let pf = auto_plan(&flat, CollOp::Broadcast, 4096);
+    let pr = auto_plan(&ring, CollOp::Broadcast, 4096);
+    assert!(
+        pr.cost > pf.cost,
+        "ring broadcast must be predicted slower than flat ({} <= {})",
+        pr.cost,
+        pf.cost
+    );
+
+    let single = cfg8();
+    let mut dies = cfg8();
+    dies.package.chiplets = 2;
+    dies.validate().unwrap();
+    let p1 = auto_plan(&single, CollOp::AllGather, 4096);
+    let p2 = auto_plan(&dies, CollOp::AllGather, 4096);
+    assert!(
+        p2.cost > p1.cost,
+        "a 2-die package must raise the predicted all-gather cost ({} <= {})",
+        p2.cost,
+        p1.cost
+    );
+}
