@@ -15,6 +15,7 @@ use crate::workloads::faults::{
 };
 use crate::workloads::matmul::{run_matmul, MatmulMode, MatmulResult, TileExec};
 use crate::workloads::microbench::{run_microbench, McastMode};
+use crate::workloads::serving::{run_serving, ServingParams, ServingResult};
 use crate::workloads::roofline::Roofline;
 use crate::workloads::topo_sweep::{default_shapes, run_topo_broadcast_threads, TopoRunResult};
 
@@ -918,6 +919,213 @@ pub fn chiplet_sweep(
     (rows, table, json)
 }
 
+/// One serving-traffic comparison point: the three concrete strategies
+/// plus the auto-tuner pick for one wide-network shape, under the same
+/// overlapping-requests pipeline (see [`crate::workloads::serving`]).
+#[derive(Debug, Clone)]
+pub struct ServingRow {
+    pub shape: String,
+    /// The fixed cycle budget throughput is scored against: the
+    /// fastest mode's total cycles on this shape (that mode retires
+    /// the whole batch within it by construction).
+    pub budget: u64,
+    pub sw: ServingResult,
+    pub conc: ServingResult,
+    pub red: ServingResult,
+    pub auto: ServingResult,
+}
+
+impl ServingRow {
+    pub fn runs(&self) -> [&ServingResult; 4] {
+        [&self.sw, &self.conc, &self.red, &self.auto]
+    }
+
+    /// Requests of `run` retired within this row's cycle budget.
+    pub fn retired_in_budget(&self, run: &ServingResult) -> usize {
+        run.retired_at.iter().filter(|&&c| c <= self.budget).count()
+    }
+}
+
+/// The serving experiment: the transformer request pipeline on every
+/// requested wide-network shape, `CollMode::{Sw, HwConc, HwReduce,
+/// Auto}`, reporting throughput against a fixed per-shape cycle budget
+/// and per-request tail latency (p50 / p95 / max).
+pub fn serving(
+    cfg: &SocConfig,
+    shapes: &[WideShape],
+    p: &ServingParams,
+) -> (Vec<ServingRow>, Table, Json) {
+    assert!(
+        cfg.n_clusters >= 4,
+        "the serving experiment needs >= 4 clusters (the hw modes degenerate \
+         to the unicast exchange below that and the comparison is vacuous)"
+    );
+    let mut rows = Vec::new();
+    for shape in shapes {
+        let mut cfg = cfg.clone();
+        cfg.wide_shape = shape.clone();
+        let sw = run_serving(&cfg, p, CollMode::Sw);
+        let conc = run_serving(&cfg, p, CollMode::HwConc);
+        let red = run_serving(&cfg, p, CollMode::HwReduce);
+        let auto = run_serving(&cfg, p, CollMode::Auto);
+        let budget = sw.cycles.min(conc.cycles).min(red.cycles).min(auto.cycles);
+        rows.push(ServingRow {
+            shape: sw.shape.clone(),
+            budget,
+            sw,
+            conc,
+            red,
+            auto,
+        });
+    }
+    let mut table = Table::new(&[
+        "shape",
+        "mode",
+        "cycles",
+        "req/Mcyc",
+        "p50",
+        "p95",
+        "max",
+        "retired@budget",
+        "inj W",
+        "red saved",
+        "numerics",
+    ]);
+    for r in &rows {
+        for run in r.runs() {
+            let mode = match run.auto_resolved.as_deref() {
+                Some(pick) => format!("auto({pick})"),
+                None => run.mode.name().to_string(),
+            };
+            table.row(&[
+                r.shape.clone(),
+                mode,
+                run.cycles.to_string(),
+                fnum(run.throughput_rpmc, 1),
+                run.lat_p50.to_string(),
+                run.lat_p95.to_string(),
+                run.lat_max.to_string(),
+                format!("{}/{}", r.retired_in_budget(run), run.requests),
+                run.dma_w_beats.to_string(),
+                run.wide.red_beats_saved.to_string(),
+                if run.numerics_ok { "OK" } else { "FAIL" }.to_string(),
+            ]);
+        }
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .flat_map(|r| {
+                r.runs().map(|run| {
+                    let mut o = Json::obj();
+                    o.set("shape", r.shape.as_str())
+                        .set("mode", run.mode.name())
+                        .set("clusters", run.clusters)
+                        .set("requests", run.requests)
+                        .set("layers", run.layers)
+                        .set("bytes", run.bytes)
+                        .set("moe_every", run.moe_every)
+                        .set("cycles", run.cycles)
+                        .set("throughput_rpmc", run.throughput_rpmc)
+                        .set("lat_p50", run.lat_p50)
+                        .set("lat_p95", run.lat_p95)
+                        .set("lat_max", run.lat_max)
+                        .set("budget", r.budget)
+                        .set("retired_in_budget", r.retired_in_budget(run))
+                        .set("dma_w_beats", run.dma_w_beats)
+                        .set("red_beats_saved", run.wide.red_beats_saved)
+                        .set("resv_tickets", run.wide.resv_tickets)
+                        .set("resv_commits", run.wide.resv_commits)
+                        .set("moe_folds", run.moe_folds)
+                        .set("numerics_ok", run.numerics_ok);
+                    if let Some(pick) = &run.auto_resolved {
+                        o.set("mode_resolved", pick.as_str());
+                    }
+                    o
+                })
+            })
+            .collect(),
+    );
+    (rows, table, json)
+}
+
+/// Sanity-check a [`ServingRow`]: bit-exact activations in every mode,
+/// balanced fork/join beat accounting and drained reservation ledgers
+/// on every run, ordered latency tails, the injection hierarchy
+/// `red <= conc <= sw` W beats, and the equal-work cycle floors — the
+/// hardware schedules move strictly less data through the same
+/// dependency structure, so `conc <= sw`, `red <= sw` and (the cost
+/// model's floor guarantee) `auto <= sw` cycles.
+pub fn assert_serving_row_invariants(r: &ServingRow) {
+    for run in r.runs() {
+        let tag = || format!("serving {} on {}", run.mode.name(), run.shape);
+        assert!(run.numerics_ok, "{}: diverges from the scalar reference", tag());
+        assert_eq!(
+            run.wide.w_beats_out,
+            run.wide.w_beats_in + run.wide.w_fork_extra - run.wide.red_beats_saved,
+            "{}: W fork/join accounting broken",
+            tag()
+        );
+        assert_eq!(run.wide.decerr, 0, "{}: unexpected DECERR", tag());
+        assert!(
+            run.wide.resv_commits >= run.wide.resv_tickets,
+            "{}: reservation tickets not fully drained ({} commits < {} tickets)",
+            tag(),
+            run.wide.resv_commits,
+            run.wide.resv_tickets
+        );
+        assert_eq!(run.latencies.len(), run.requests, "{}: lost requests", tag());
+        assert!(run.lat_p95 >= run.lat_p50, "{}: p95 < p50", tag());
+        assert!(run.lat_max >= run.lat_p95, "{}: max < p95", tag());
+        assert!(
+            run.retired_at.iter().all(|&c| c <= run.cycles),
+            "{}: a request retired after the run ended",
+            tag()
+        );
+    }
+    for run in [&r.conc, &r.red, &r.auto] {
+        assert!(
+            run.dma_w_beats <= r.sw.dma_w_beats,
+            "serving {} on {}: injects more W beats than the baseline ({} > {})",
+            run.mode.name(),
+            run.shape,
+            run.dma_w_beats,
+            r.sw.dma_w_beats
+        );
+        assert!(
+            run.cycles <= r.sw.cycles,
+            "serving {} on {}: slower than the software baseline at equal work \
+             ({} > {})",
+            run.mode.name(),
+            run.shape,
+            run.cycles,
+            r.sw.cycles
+        );
+    }
+    assert!(
+        r.red.dma_w_beats <= r.conc.dma_w_beats,
+        "serving on {}: hw-reduce injects more W beats than hw-concurrent ({} > {})",
+        r.red.shape,
+        r.red.dma_w_beats,
+        r.conc.dma_w_beats
+    );
+    if r.red.clusters >= 4 {
+        assert!(
+            r.red.wide.red_beats_saved > 0,
+            "serving on {}: in-network combining never fired",
+            r.red.shape
+        );
+    }
+    // the budget is the fastest mode's own total, so that mode retires
+    // the whole batch within it
+    assert!(
+        r.runs()
+            .iter()
+            .any(|run| r.retired_in_budget(run) == run.requests),
+        "serving on {}: no mode retires the full batch within the budget",
+        r.sw.shape
+    );
+}
+
 /// The fault-injection experiment: the healthy baseline plus every
 /// [`FaultKind`] run on the same mixed-traffic scenario (concurrent
 /// global multicast + in-network reductions + unicast, one victim
@@ -1147,6 +1355,46 @@ mod tests {
         assert_eq!(json.as_arr().unwrap().len(), 4);
         let o = json.as_arr().unwrap()[2].as_obj().unwrap();
         assert_eq!(o["chiplets"].as_f64().unwrap() as usize, 2);
+    }
+
+    #[test]
+    fn serving_rows_hold_invariants_and_carry_auto() {
+        let cfg = SocConfig::tiny(4);
+        let shapes = [WideShape::Groups, WideShape::Flat];
+        let p = ServingParams {
+            requests: 3,
+            layers: 2,
+            bytes: 1024,
+            moe_every: 2,
+            compute_macs: 64,
+        };
+        let (rows, table, json) = serving(&cfg, &shapes, &p);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_serving_row_invariants(r);
+            // the sweep carries the CollMode::Auto row with its pick
+            assert_eq!(r.auto.mode, CollMode::Auto);
+            assert!(r.auto.auto_resolved.is_some());
+        }
+        let rendered = table.render();
+        assert!(rendered.contains("p95"));
+        assert!(rendered.contains("retired@budget"));
+        let arr = json.as_arr().unwrap();
+        assert_eq!(arr.len(), 8); // 2 shapes x 4 modes
+        let o = arr[0].as_obj().unwrap();
+        for key in [
+            "mode",
+            "cycles",
+            "throughput_rpmc",
+            "lat_p50",
+            "lat_p95",
+            "lat_max",
+            "budget",
+            "retired_in_budget",
+            "numerics_ok",
+        ] {
+            assert!(o.contains_key(key), "serving row missing {key}");
+        }
     }
 
     #[test]

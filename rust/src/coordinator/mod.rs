@@ -8,7 +8,7 @@ pub mod experiments;
 pub mod report;
 
 pub use experiments::{
-    chiplet_sweep, collectives, fig3a, fig3b, fig3c, topo_sweep, tunesweep, ChipletRow, CollRow,
-    Fig3bRow, Fig3cRow, TopoSweepRow,
+    chiplet_sweep, collectives, fig3a, fig3b, fig3c, serving, topo_sweep, tunesweep, ChipletRow,
+    CollRow, Fig3bRow, Fig3cRow, ServingRow, TopoSweepRow,
 };
 pub use report::Report;

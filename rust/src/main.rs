@@ -13,6 +13,7 @@
 //! occamy-sim chiplets [--chiplets 1,2,4] [--clusters 16]  # multi-die package sweep
 //! occamy-sim faults [--kind all] [--victim 1]   # fault-injection recovery
 //! occamy-sim qos [--hot 4] [--jobs 4]           # arbitration under serving load
+//! occamy-sim serving [--requests 8] [--layers 4]  # transformer serving traffic
 //! occamy-sim all [--out results]
 //! ```
 
@@ -21,7 +22,7 @@ use std::process::ExitCode;
 use axi_mcast::coordinator::experiments::{
     chiplet_sweep, collectives, collectives_summary, faults_experiment, fig3a, fig3b,
     fig3b_default_clusters, fig3b_default_sizes, fig3b_summary, fig3c, fig3d_schedule,
-    qos_experiment, topo_sweep, tunesweep,
+    qos_experiment, serving, topo_sweep, tunesweep,
 };
 use axi_mcast::coordinator::Report;
 use axi_mcast::occamy::{SocConfig, WideShape};
@@ -31,6 +32,7 @@ use axi_mcast::workloads::collectives::{self as coll, run_collective, CollMode, 
 use axi_mcast::workloads::faults::FaultKind;
 use axi_mcast::workloads::matmul::{RustTileExec, TileExec};
 use axi_mcast::workloads::microbench::{run_microbench, McastMode};
+use axi_mcast::workloads::serving::ServingParams;
 
 /// Global knob on every simulating command: worker threads for the
 /// parallel stepping engine. Results are bit-identical to sequential.
@@ -135,6 +137,15 @@ const CMDS: &[CmdSpec] = &[
             ("clusters", "total clusters, power of two (default 16)"),
             ("op", "all | broadcast | allgather | reducescatter | allreduce (default all)"),
             ("size", "vector size per collective (default 4KiB)"),
+            (
+                "shape",
+                "groups | flat | mesh (wide-network topology inside each die, default groups)",
+            ),
+            (
+                "mode",
+                "all | sw | hw | hw-concurrent | hw-reduce | auto (default all = the \
+                 full per-die-count comparison)",
+            ),
             ("d2d-width", "D2D beat-serialization ratio, cycles per data beat (default 4)"),
             ("d2d-latency", "D2D hop latency in cycles (default 8)"),
             ("out", "results directory"),
@@ -161,6 +172,26 @@ const CMDS: &[CmdSpec] = &[
             ("hot", "elevated-priority sender cluster (default clusters/2)"),
             ("jobs", "unicast jobs per sender (default 4)"),
             ("size", "bytes per job (default 2048)"),
+            ("out", "results directory"),
+            THREADS_OPT,
+        ],
+    },
+    CmdSpec {
+        name: "serving",
+        about: "serving-scale transformer traffic: chained per-request collectives, \
+                throughput + tail latency per mode",
+        options: &[
+            ("clusters", "tensor-parallel cluster count, power of two >= 4 (default 8)"),
+            ("requests", "concurrent decode requests in flight (default 8)"),
+            ("layers", "transformer layers per request (default 4)"),
+            ("size", "activation bytes per per-layer collective (default 4KiB)"),
+            ("moe-every", "MoE all-to-all every k-th layer; 0 = dense model (default 2)"),
+            ("macs", "modelled per-layer compute MACs between collectives (default 256)"),
+            (
+                "shape",
+                "all | groups | flat | mesh | ring | torus | ringmesh (wide-network \
+                 topology, default all)",
+            ),
             ("out", "results directory"),
             THREADS_OPT,
         ],
@@ -203,10 +234,16 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    if args.flag("help") {
-        if let Some(spec) = CMDS.iter().find(|c| c.name == cmd) {
+    if let Some(spec) = CMDS.iter().find(|c| c.name == cmd) {
+        if args.flag("help") {
             print!("{}", render_cmd_help("occamy-sim", spec));
             return ExitCode::SUCCESS;
+        }
+        // a typo'd option must be an error, not silently ignored — the
+        // parser itself is schema-free, so the schema check lives here
+        if let Err(e) = args.check_known(spec) {
+            eprintln!("argument error: {e}");
+            return ExitCode::FAILURE;
         }
     }
     match run(&cmd, &args) {
@@ -303,6 +340,42 @@ fn parse_shapes(cfg: &SocConfig, s: &str) -> Result<Vec<WideShape>, String> {
     Ok(shapes)
 }
 
+/// Shared `--size` validation for the collectives-family commands
+/// (`collectives`, `tunesweep`, `chiplets`, `serving`): a collective
+/// vector must split into per-cluster chunks of whole bus beats. All
+/// arithmetic is checked u64, so an absurd cluster count or byte count
+/// produces the friendly error instead of wrapping past the check.
+fn validate_coll_size(opt: &str, bytes: u64, clusters: usize, wide_bytes: u32) -> Result<(), String> {
+    let step = (wide_bytes as u64)
+        .checked_mul(clusters as u64)
+        .ok_or_else(|| format!("{opt}: {clusters} clusters overflow the chunk-step arithmetic"))?;
+    if bytes == 0 || bytes % step != 0 {
+        return Err(format!(
+            "{opt} must be a positive multiple of bus width x clusters ({step} B), got {bytes}"
+        ));
+    }
+    Ok(())
+}
+
+/// Landing-zone check for `faults`: each cluster lands one multicast
+/// chunk per rank in a 16 KiB zone. Checked multiply — a huge `--size`
+/// must be reported as oversized, not wrap back under the bound.
+fn faults_zone_fits(bytes: u64, clusters: usize) -> bool {
+    bytes
+        .checked_mul(clusters as u64)
+        .map_or(false, |total| total <= 0x4000)
+}
+
+/// Served-cluster L1 footprint for `qos`: a 32 KiB reserved base plus
+/// each sender's private job slices. `None` means the product chain
+/// overflowed u64; callers treat that as "does not fit".
+fn qos_footprint(senders: usize, jobs: usize, bytes: u64) -> Option<u64> {
+    (senders as u64)
+        .checked_mul(jobs as u64)?
+        .checked_mul(bytes)?
+        .checked_add(0x8000)
+}
+
 fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
     let clusters = args.usize_or("clusters", 32)?;
     if !clusters.is_power_of_two() || clusters < 2 {
@@ -318,12 +391,7 @@ fn run_collectives(args: &Args, out: Option<&str>) -> Result<(), String> {
     };
     cfg.threads = args.usize_or("threads", cfg.threads)?;
     let bytes = args.u64_or("size", 8 * 1024)?;
-    let step = cfg.wide_bytes as u64 * clusters as u64;
-    if bytes == 0 || bytes % step != 0 {
-        return Err(format!(
-            "--size must be a positive multiple of bus width x clusters ({step} B), got {bytes}"
-        ));
-    }
+    validate_coll_size("--size", bytes, clusters, cfg.wide_bytes)?;
     let ops: Vec<CollOp> = match args.get_or("op", "all") {
         "all" => CollOp::ALL.to_vec(),
         s => vec![CollOp::parse(s).ok_or_else(|| {
@@ -417,14 +485,8 @@ fn run_tunesweep(args: &Args, out: Option<&str>) -> Result<(), String> {
     cfg.threads = args.usize_or("threads", cfg.threads)?;
     let default_sizes: Vec<u64> = [1u64, 4, 16, 64].iter().map(|k| k * 1024).collect();
     let sizes = args.u64_list_or("sizes", &default_sizes)?;
-    let step = cfg.wide_bytes as u64 * clusters as u64;
     for &bytes in &sizes {
-        if bytes == 0 || bytes % step != 0 {
-            return Err(format!(
-                "--sizes entries must be positive multiples of bus width x clusters ({step} B), \
-                 got {bytes}"
-            ));
-        }
+        validate_coll_size("--sizes entries", bytes, clusters, cfg.wide_bytes)?;
     }
     let ops: Vec<CollOp> = match args.get_or("op", "all") {
         "all" => CollOp::ALL.to_vec(),
@@ -472,6 +534,20 @@ fn run_chiplets(args: &Args, out: Option<&str>) -> Result<(), String> {
     cfg.package.d2d_width_ratio =
         args.u64_or("d2d-width", cfg.package.d2d_width_ratio as u64)? as u32;
     cfg.package.d2d_latency = args.u64_or("d2d-latency", cfg.package.d2d_latency as u64)? as u32;
+    // `--shape` picks the wide-network topology inside each die; the
+    // sweep axis here is die counts, so exactly one shape at a time.
+    // Set it before the per-count probes below so an invalid
+    // shape x package combination fails with the `--chiplets N:` error.
+    if let Some(s) = args.get("shape") {
+        if s == "all" {
+            return Err(
+                "--shape all is not available on chiplets (the sweep axis is die counts); \
+                 pass a single shape"
+                    .to_string(),
+            );
+        }
+        cfg.wide_shape = parse_shapes(&cfg, s)?.remove(0);
+    }
     let counts: Vec<usize> = args
         .u64_list_or("chiplets", &[1, 2, 4])?
         .into_iter()
@@ -484,27 +560,62 @@ fn run_chiplets(args: &Args, out: Option<&str>) -> Result<(), String> {
         probe.validate().map_err(|e| format!("--chiplets {c}: {e}"))?;
     }
     let bytes = args.u64_or("size", 4 * 1024)?;
-    let step = cfg.wide_bytes as u64 * clusters as u64;
-    if bytes == 0 || bytes % step != 0 {
-        return Err(format!(
-            "--size must be a positive multiple of bus width x clusters ({step} B), got {bytes}"
-        ));
-    }
+    validate_coll_size("--size", bytes, clusters, cfg.wide_bytes)?;
     let ops: Vec<CollOp> = match args.get_or("op", "all") {
         "all" => CollOp::ALL.to_vec(),
         s => vec![CollOp::parse(s).ok_or_else(|| {
             format!("unknown --op '{s}' (broadcast|allgather|reducescatter|allreduce|all)")
         })?],
     };
-    let (_rows, table, json) = chiplet_sweep(&cfg, &ops, &counts, bytes);
     let mut r = Report::new("chiplets").to_dir(out);
-    r.table(
-        "Multi-chiplet package: collectives across die counts (dies joined by \
-         width-converting, latency-bearing D2D links; chiplets=1 is the single-die \
-         reference fabric)",
-        &table,
-    );
-    r.json("rows", json);
+    match args.get_or("mode", "all") {
+        "all" => {
+            let (_rows, table, json) = chiplet_sweep(&cfg, &ops, &counts, bytes);
+            r.table(
+                "Multi-chiplet package: collectives across die counts (dies joined by \
+                 width-converting, latency-bearing D2D links; chiplets=1 is the single-die \
+                 reference fabric)",
+                &table,
+            );
+            r.json("rows", json);
+        }
+        m => {
+            // single-mode path, mirroring `collectives --mode X`: one
+            // run per (die count, op) instead of the 5-way comparison
+            let mode = CollMode::parse(m).ok_or_else(|| {
+                format!("unknown --mode '{m}' (all|sw|hw|hw-concurrent|hw-reduce|auto)")
+            })?;
+            let mut table = axi_mcast::util::table::Table::new(&[
+                "op", "dies", "KiB", "plan", "cycles", "inj W", "mcast AWs", "numerics",
+            ]);
+            for &c in &counts {
+                let mut cfg = cfg.clone();
+                cfg.package.chiplets = c;
+                for &op in &ops {
+                    let res = run_collective(&cfg, op, mode, bytes);
+                    let plan = res
+                        .plan
+                        .as_ref()
+                        .map(|p| p.describe())
+                        .unwrap_or_else(|| res.mode.name().to_string());
+                    table.row(&[
+                        res.op.name().to_string(),
+                        c.to_string(),
+                        (res.bytes / 1024).to_string(),
+                        plan,
+                        res.cycles.to_string(),
+                        res.dma_w_beats.to_string(),
+                        res.wide.aw_mcast.to_string(),
+                        if res.numerics_ok { "OK" } else { "FAIL" }.to_string(),
+                    ]);
+                }
+            }
+            r.table(
+                &format!("Multi-chiplet package ({} only)", mode.name()),
+                &table,
+            );
+        }
+    }
     emit(&r)
 }
 
@@ -544,7 +655,7 @@ fn run_faults(args: &Args, out: Option<&str>) -> Result<(), String> {
         ));
     }
     // each cluster lands one multicast chunk per rank in a 16 KiB zone
-    if bytes * cfg.n_clusters as u64 > 0x4000 {
+    if !faults_zone_fits(bytes, cfg.n_clusters) {
         return Err(format!(
             "--size {bytes} x {} clusters overflows the 16 KiB landing zone",
             cfg.n_clusters
@@ -587,12 +698,13 @@ fn run_qos(args: &Args, out: Option<&str>) -> Result<(), String> {
         ));
     }
     // every sender's jobs land in a private slice of cluster 0's L1
-    let footprint = 0x8000 + (cfg.n_clusters - 1) as u64 * jobs as u64 * bytes;
-    if footprint > cfg.l1_bytes {
+    let footprint = qos_footprint(cfg.n_clusters - 1, jobs, bytes);
+    if footprint.map_or(true, |fp| fp > cfg.l1_bytes) {
         return Err(format!(
-            "--jobs {jobs} x --size {bytes} x {} senders needs {footprint} B of the served \
+            "--jobs {jobs} x --size {bytes} x {} senders needs {} B of the served \
              cluster's L1 ({} available)",
             cfg.n_clusters - 1,
+            footprint.map_or_else(|| "> 2^64".to_string(), |fp| fp.to_string()),
             cfg.l1_bytes
         ));
     }
@@ -601,6 +713,68 @@ fn run_qos(args: &Args, out: Option<&str>) -> Result<(), String> {
     r.table(
         "QoS arbitration under many-to-one serving load (cluster 0 served; \
          the hot cluster carries elevated priority under the priority policies)",
+        &table,
+    );
+    r.json("rows", json);
+    emit(&r)
+}
+
+fn run_serving_cmd(args: &Args, out: Option<&str>) -> Result<(), String> {
+    let clusters = args.usize_or("clusters", 8)?;
+    if !clusters.is_power_of_two() || clusters < 4 {
+        return Err(format!(
+            "--clusters must be a power of two >= 4 (the mode comparison needs multicast \
+             fan-out; below 4 the hw modes degenerate to unicast), got {clusters}"
+        ));
+    }
+    let mut cfg = SocConfig {
+        n_clusters: clusters,
+        clusters_per_group: clusters.min(4),
+        ..SocConfig::default()
+    };
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    let bytes = args.u64_or("size", 4 * 1024)?;
+    validate_coll_size("--size", bytes, clusters, cfg.wide_bytes)?;
+    let p = ServingParams {
+        requests: args.usize_or("requests", 8)?,
+        layers: args.usize_or("layers", 4)?,
+        bytes,
+        moe_every: args.usize_or("moe-every", 2)?,
+        compute_macs: args.u64_or("macs", 256)?,
+    };
+    if p.requests == 0 {
+        return Err("--requests must be >= 1".to_string());
+    }
+    if p.layers == 0 {
+        return Err("--layers must be >= 1".to_string());
+    }
+    // friendly up-front footprint check (the library asserts the same
+    // bound): every request owns a gather + contrib + moe + acc region
+    // in each cluster's L1, below the mailbox page. Checked math — the
+    // same `--jobs x --size x senders` class of product as qos.
+    let spm = cfg.l1_bytes.min(axi_mcast::occamy::config::MAILBOX_OFFSET);
+    let footprint = bytes
+        .checked_mul(3)
+        .and_then(|region| region.checked_add(bytes / clusters as u64))
+        .and_then(|region| region.checked_mul(p.requests as u64));
+    if footprint.map_or(true, |fp| fp > spm) {
+        return Err(format!(
+            "--requests {} x --size {bytes} needs {} B in every cluster's L1 ({spm} B \
+             usable below the mailbox page); fewer requests or a smaller --size",
+            p.requests,
+            footprint.map_or_else(|| "> 2^64".to_string(), |fp| fp.to_string()),
+        ));
+    }
+    let shapes = parse_shapes(&cfg, args.get_or("shape", "all"))?;
+    let (_rows, table, json) = serving(&cfg, &shapes, &p);
+    let mut r = Report::new("serving").to_dir(out);
+    r.table(
+        &format!(
+            "Serving-scale transformer traffic: {} concurrent requests x {} layers \
+             ({} B collectives, MoE every {} layers), dependency-chained per-layer \
+             all-gather -> all-reduce; throughput and tail latency per collective mode",
+            p.requests, p.layers, p.bytes, p.moe_every
+        ),
         &table,
     );
     r.json("rows", json);
@@ -704,6 +878,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         "qos" => {
             run_qos(args, out)?;
         }
+        "serving" => {
+            run_serving_cmd(args, out)?;
+        }
         "all" => {
             let out = Some(args.get_or("out", "results"));
             let (t_a, j_a) = fig3a();
@@ -747,4 +924,143 @@ fn run(cmd: &str, args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown command '{other}' (see --help)")),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    fn spec(name: &str) -> &'static CmdSpec {
+        CMDS.iter().find(|c| c.name == name).unwrap()
+    }
+
+    // ---- satellite: shared size/footprint validation, checked math ----
+
+    #[test]
+    fn validate_coll_size_accepts_multiples_and_rejects_the_rest() {
+        assert!(validate_coll_size("--size", 4096, 8, 64).is_ok());
+        assert!(validate_coll_size("--size", 0, 8, 64).is_err());
+        let err = validate_coll_size("--size", 1000, 8, 64).unwrap_err();
+        assert!(err.contains("512 B"), "{err}");
+        // absurd cluster count must error, not wrap the step to a tiny
+        // value and accept the size
+        assert!(validate_coll_size("--size", 4096, usize::MAX, 64).is_err());
+    }
+
+    #[test]
+    fn faults_zone_check_does_not_wrap() {
+        assert!(faults_zone_fits(512, 8));
+        assert!(!faults_zone_fits(4096, 8));
+        // u64::MAX/2 x 8 wraps to a small number in unchecked math and
+        // would sail past the 16 KiB bound
+        assert!(!faults_zone_fits(u64::MAX / 2, 8));
+    }
+
+    #[test]
+    fn qos_footprint_is_checked() {
+        assert_eq!(qos_footprint(7, 4, 2048), Some(0x8000 + 7 * 4 * 2048));
+        assert_eq!(qos_footprint(7, usize::MAX, u64::MAX / 2), None);
+        let a = args(&["--clusters", "8", "--jobs", "0x4000000000000000", "--size", "1024"]);
+        let err = run_qos(&a, None).unwrap_err();
+        assert!(err.contains("senders"), "{err}");
+    }
+
+    // ---- satellite: unknown options are errors, not silent no-ops ----
+
+    #[test]
+    fn every_simulating_command_declares_threads() {
+        for name in [
+            "fig3b", "fig3c", "microbench", "toposweep", "collectives", "tunesweep", "chiplets",
+            "faults", "qos", "serving", "all",
+        ] {
+            assert!(
+                spec(name).options.iter().any(|(o, _)| *o == "threads"),
+                "{name} lost its --threads option"
+            );
+        }
+    }
+
+    #[test]
+    fn check_known_catches_typos_against_the_real_specs() {
+        // the classic: `--cluster` (singular) used to be swallowed
+        assert!(args(&["--cluster", "8"]).check_known(spec("collectives")).is_err());
+        assert!(args(&["--clusters", "8"]).check_known(spec("collectives")).is_ok());
+        // `all` forwards shape/mode/size to collectives — all declared
+        assert!(args(&["--shape", "ring", "--mode", "auto", "--size", "4k", "--threads", "2"])
+            .check_known(spec("all"))
+            .is_ok());
+    }
+
+    // ---- satellite: chiplets now accepts (and forwards) shape/mode ----
+
+    #[test]
+    fn chiplets_declares_and_forwards_mode_and_shape() {
+        // regression: PR 9 added `--mode auto` / `--shape` to
+        // collectives and `all` but not chiplets; the spec now declares
+        // them and run_chiplets consumes them
+        let sp = spec("chiplets");
+        assert!(sp.options.iter().any(|(o, _)| *o == "mode"));
+        assert!(sp.options.iter().any(|(o, _)| *o == "shape"));
+        let ok = args(&[
+            "--chiplets", "1", "--clusters", "4", "--op", "broadcast", "--size", "256",
+            "--shape", "flat", "--mode", "auto",
+        ]);
+        run_chiplets(&ok, None).expect("single-die flat/auto chiplet run");
+    }
+
+    #[test]
+    fn chiplets_rejects_bad_mode_and_shape_cleanly() {
+        let base = ["--chiplets", "1", "--clusters", "4", "--op", "broadcast", "--size", "256"];
+        let mut bad_mode = base.to_vec();
+        bad_mode.extend(["--mode", "bogus"]);
+        let err = run_chiplets(&args(&bad_mode), None).unwrap_err();
+        assert!(err.contains("--mode"), "{err}");
+
+        let mut bad_shape = base.to_vec();
+        bad_shape.extend(["--shape", "bogus"]);
+        let err = run_chiplets(&args(&bad_shape), None).unwrap_err();
+        assert!(err.contains("--shape"), "{err}");
+
+        let mut all_shapes = base.to_vec();
+        all_shapes.extend(["--shape", "all"]);
+        let err = run_chiplets(&args(&all_shapes), None).unwrap_err();
+        assert!(err.contains("die counts"), "{err}");
+
+        // peer-routed zoo shapes are single-die only: the per-count
+        // probe must reject the combination with the friendly prefix
+        let multi = args(&[
+            "--chiplets", "2", "--clusters", "8", "--op", "broadcast", "--size", "512",
+            "--shape", "ring",
+        ]);
+        let err = run_chiplets(&multi, None).unwrap_err();
+        assert!(err.contains("--chiplets 2"), "{err}");
+    }
+
+    // ---- serving CLI plumbing ----
+
+    #[test]
+    fn serving_validates_its_arguments() {
+        let err = run_serving_cmd(&args(&["--clusters", "3"]), None).unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
+        let err = run_serving_cmd(&args(&["--size", "1000"]), None).unwrap_err();
+        assert!(err.contains("multiple"), "{err}");
+        let err =
+            run_serving_cmd(&args(&["--requests", "0x1000000000000"]), None).unwrap_err();
+        assert!(err.contains("every cluster's L1"), "{err}");
+        let err = run_serving_cmd(&args(&["--layers", "0"]), None).unwrap_err();
+        assert!(err.contains("--layers"), "{err}");
+    }
+
+    #[test]
+    fn serving_cli_runs_a_tiny_batch_end_to_end() {
+        let a = args(&[
+            "--clusters", "4", "--requests", "2", "--layers", "1", "--size", "256",
+            "--moe-every", "0", "--macs", "8", "--shape", "groups",
+        ]);
+        run_serving_cmd(&a, None).expect("tiny serving batch");
+    }
 }

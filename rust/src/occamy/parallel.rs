@@ -461,7 +461,7 @@ impl Soc {
             self.cycles += 1;
             for sh in &mut shards {
                 for ev in sh.events.drain(..) {
-                    handler.exec(ev.cluster, ev.op, ev.arg, &mut self.mem);
+                    handler.exec(ev.cluster, ev.op, ev.arg, self.cycles, &mut self.mem);
                 }
             }
             if all_done(&shards) {

@@ -21,15 +21,20 @@ use crate::sim::Cycle;
 /// Functional compute hook: applies the numeric effect of a cluster's
 /// `Compute` command (op, arg) to the functional memory. The end-to-end
 /// example plugs the PJRT runtime in here; unit tests use [`NopCompute`].
+///
+/// `cy` is the simulated cycle the event retires at — both engines
+/// dispatch after the cycle counter advanced, so timestamps recorded by
+/// a handler are bit-identical across the sequential and parallel
+/// paths (the serving workload uses this for per-request latencies).
 pub trait ComputeHandler {
-    fn exec(&mut self, cluster: usize, op: u32, arg: u64, mem: &mut SocMem);
+    fn exec(&mut self, cluster: usize, op: u32, arg: u64, cy: Cycle, mem: &mut SocMem);
 }
 
 /// No-op handler (timing-only simulations, e.g. the microbenchmark).
 pub struct NopCompute;
 
 impl ComputeHandler for NopCompute {
-    fn exec(&mut self, _cluster: usize, _op: u32, _arg: u64, _mem: &mut SocMem) {}
+    fn exec(&mut self, _cluster: usize, _op: u32, _arg: u64, _cy: Cycle, _mem: &mut SocMem) {}
 }
 
 /// The simulated SoC.
@@ -230,7 +235,7 @@ impl Soc {
         self.cycles += 1;
 
         for ev in self.event_buf.drain(..) {
-            handler.exec(ev.cluster, ev.op, ev.arg, &mut self.mem);
+            handler.exec(ev.cluster, ev.op, ev.arg, self.cycles, &mut self.mem);
         }
     }
 
@@ -654,7 +659,7 @@ mod tests {
         soc.load_programs(progs);
         struct Count(u32);
         impl ComputeHandler for Count {
-            fn exec(&mut self, _c: usize, _op: u32, _a: u64, _m: &mut SocMem) {
+            fn exec(&mut self, _c: usize, _op: u32, _a: u64, _cy: Cycle, _m: &mut SocMem) {
                 self.0 += 1;
             }
         }

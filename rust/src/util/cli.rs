@@ -84,6 +84,25 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.pos
     }
+
+    /// Reject options and flags the command does not declare. The
+    /// parser itself accepts anything (`--key value` needs no schema),
+    /// which silently swallowed typos like `--cluster 8` — the classic
+    /// way a flag *looks* accepted but never reaches the experiment.
+    /// Every subcommand now checks its parsed arguments against its
+    /// [`CmdSpec`]; `--help` is implicitly known.
+    pub fn check_known(&self, spec: &CmdSpec) -> Result<(), String> {
+        let known = |name: &str| name == "help" || spec.options.iter().any(|(o, _)| *o == name);
+        for name in self.opts.keys().chain(self.flags.iter()) {
+            if !known(name) {
+                return Err(format!(
+                    "unknown option '--{name}' for '{}' (see `{} --help`)",
+                    spec.name, spec.name
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// u64 with unit suffixes: accepts `4096`, `4KiB`, `32k`, `4M`, `0x100`.
@@ -181,5 +200,21 @@ mod tests {
         assert_eq!(a.get_or("mode", "hw"), "hw");
         assert_eq!(a.f64_or("util", 0.5).unwrap(), 0.5);
         assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn check_known_rejects_typos_and_accepts_declared() {
+        const SPEC: CmdSpec = CmdSpec {
+            name: "demo",
+            about: "",
+            options: &[("clusters", ""), ("size", "")],
+        };
+        assert!(args(&["--clusters", "8", "--size=1k"]).check_known(&SPEC).is_ok());
+        // --help is implicitly known both as flag and `--help=...`
+        assert!(args(&["--help"]).check_known(&SPEC).is_ok());
+        // typo'd option (valued or bare flag) is an error, not a no-op
+        let err = args(&["--cluster", "8"]).check_known(&SPEC).unwrap_err();
+        assert!(err.contains("--cluster"), "{err}");
+        assert!(args(&["--verbose"]).check_known(&SPEC).is_err());
     }
 }

@@ -353,7 +353,7 @@ impl CollectiveCompute {
 }
 
 impl ComputeHandler for CollectiveCompute {
-    fn exec(&mut self, cluster: usize, op: u32, arg: u64, mem: &mut SocMem) {
+    fn exec(&mut self, cluster: usize, op: u32, arg: u64, _cy: u64, mem: &mut SocMem) {
         let l = &self.layout;
         let base = crate::occamy::config::CLUSTER_BASE
             + cluster as u64 * crate::occamy::config::CLUSTER_STRIDE;

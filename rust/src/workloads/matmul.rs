@@ -161,7 +161,7 @@ impl<'a> MatmulCompute<'a> {
 }
 
 impl ComputeHandler for MatmulCompute<'_> {
-    fn exec(&mut self, cluster: usize, op: u32, arg: u64, mem: &mut SocMem) {
+    fn exec(&mut self, cluster: usize, op: u32, arg: u64, _cy: u64, mem: &mut SocMem) {
         assert_eq!(op, 1, "unknown compute op {op}");
         let l = &self.layout;
         let k_tile = arg as usize;

@@ -18,12 +18,17 @@
 //!   grant-then-hang / dropped completion beats) recovered through the
 //!   per-channel timeout engine, and the QoS serving-load scenario that
 //!   measures priority-vs-round-robin arbitration under contention.
+//! * [`serving`] — the serving-scale transformer traffic generator:
+//!   N concurrent requests, each a dependency-released chain of
+//!   per-layer all-gather / all-reduce (/ MoE all-to-all) collectives,
+//!   measured for throughput and tail latency per [`CollMode`].
 
 pub mod collectives;
 pub mod faults;
 pub mod matmul;
 pub mod microbench;
 pub mod roofline;
+pub mod serving;
 pub mod topo_sweep;
 
 pub use collectives::{
@@ -33,6 +38,7 @@ pub use collectives::{
 pub use faults::{run_fault_scenario, run_qos_load, FaultKind, FaultRunResult, QosResult};
 pub use matmul::{MatmulCompute, MatmulMode, MatmulResult};
 pub use microbench::{run_microbench, McastMode, MicrobenchResult};
+pub use serving::{run_serving, ServingCompute, ServingLayout, ServingParams, ServingResult};
 pub use topo_sweep::{
     run_topo_broadcast, run_topo_broadcast_threads, run_topo_script, run_topo_script_with,
     TopoRunResult,

@@ -1,0 +1,878 @@
+//! Serving-scale transformer traffic on the multicast fabric.
+//!
+//! Every other workload in this crate runs **one collective at a time
+//! from one tenant**. Real serving traffic is nothing like that: a
+//! batch of concurrent requests each walks L transformer layers, and
+//! every layer issues an all-gather into attention, an all-reduce out
+//! of the MLP, and (on MoE models) an all-to-all every k-th layer —
+//! with the *next* collective of a request released only when the
+//! previous one completed. This module is that traffic generator: the
+//! simulator's first heavy-traffic many-user scenario, and the payoff
+//! test for the reservation protocol (PR 4) and the auto-tuner (PR 9)
+//! at scale.
+//!
+//! **Request model.** `requests` concurrent decode chains enter the
+//! system staggered one global step apart (request `q` enters at step
+//! `t = q`), so at steady state up to `min(requests, layers)` requests
+//! have collectives in flight *simultaneously*. Per layer each request
+//! runs:
+//!
+//! 1. **all-gather** — every rank re-assembles the request's sharded
+//!    activation (`Sw`: n−1 unicasts per rank; `HwConc`/`HwReduce`:
+//!    one concurrent global multicast per rank, legal only on the
+//!    reservation protocol);
+//! 2. **attention** compute ([`OP_SERVE_ATTN`]) producing a
+//!    per-rank contribution vector;
+//! 3. **all-reduce (converging half)** — every rank issues tagged
+//!    [`Cmd::DmaReduce`] bursts, chunk `j` converging on rank `j`'s
+//!    per-request `acc` buffer. The *functional* endpoint combine is
+//!    mode-independent (bit-identical whether the fabric combines
+//!    in-network or not); only `HwReduce` arms `fabric_reduce`, which
+//!    combines the converging bursts at the fabric's join points and
+//!    saves upstream beats;
+//! 4. **MLP** compute ([`OP_SERVE_MLP`]) consuming the reduced chunk
+//!    and writing the rank's next-layer activation shard;
+//! 5. every `moe_every`-th layer, a **MoE all-to-all** (expert
+//!    routing: contribution chunk `j` of every rank to rank `j`) and
+//!    its fold ([`OP_SERVE_MOE`]).
+//!
+//! **Dependency release.** The chain dependency (no layer-k collective
+//! before layer-k−1 retired) is enforced by uniform notify rounds:
+//! after each traffic slot every rank sends one interrupt to every
+//! mailbox and waits for `n` ([`Cmd::WaitIrq`] is a blind counter, so
+//! correctness *requires* all ranks to pass the same global sequence
+//! of rounds in the same order — see DESIGN.md §12). A rank therefore
+//! enters a slot only after every rank finished the previous one, and
+//! because its own DMAs drained (`Cmd::WaitDma`) before its notify,
+//! all of the previous slot's data is globally visible. The slots of
+//! one step carry *all* active requests' transfers at once — the
+//! overlapping-tenants traffic the reservation protocol exists for.
+//!
+//! **Bit-exactness.** All values are small integers stored as f64 and
+//! re-compressed through [`squash`] after every combine, so every sum
+//! is exact and the final activations are bit-identical to the scalar
+//! reference ([`serving_reference`]) regardless of mode, thread count
+//! or combine order. Per-request start/retire cycles are captured by
+//! the compute handler through the engine-agnostic event-cycle
+//! parameter, so latency percentiles are also bit-identical across
+//! the sequential and parallel engines.
+
+use crate::axi::mcast::AddrSet;
+use crate::axi::reduce::ReduceOp;
+use crate::axi::xbar::XbarStats;
+use crate::occamy::config::MAILBOX_OFFSET;
+use crate::occamy::{Cmd, ComputeHandler, Soc, SocConfig, SocMem};
+use crate::sim::engine::Watchdog;
+
+use super::collectives::{auto_plan, CollMode, CollOp};
+
+/// Parameters of one serving-traffic run (the system size and topology
+/// come from [`SocConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServingParams {
+    /// Concurrent requests in the batch (chains in flight).
+    pub requests: usize,
+    /// Transformer layers per request (collective chain length).
+    pub layers: usize,
+    /// Activation bytes per request (sharded into `n` chunks).
+    pub bytes: u64,
+    /// MoE all-to-all after every k-th layer; `0` = dense model.
+    pub moe_every: usize,
+    /// MACs per compute phase (attention / MLP / MoE fold delay).
+    pub compute_macs: u64,
+}
+
+impl Default for ServingParams {
+    fn default() -> Self {
+        ServingParams {
+            requests: 8,
+            layers: 4,
+            bytes: 4096,
+            moe_every: 2,
+            compute_macs: 256,
+        }
+    }
+}
+
+/// Per-cluster L1 layout: one region of `region_stride` bytes per
+/// request, all offsets relative to the cluster window base.
+///
+/// ```text
+/// gather[q]   [bytes]   activation, n chunks (AG source slot r + target)
+/// contrib[q]  [bytes]   attention output (all-reduce + MoE source)
+/// moe[q]      [bytes]   MoE receive slots, slot s from sender s
+/// acc[q]      [chunk]   all-reduce destination chunk at this rank
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServingLayout {
+    pub n: usize,
+    pub requests: usize,
+    pub bytes: u64,
+    pub chunk: u64,
+    pub region_stride: u64,
+}
+
+impl ServingLayout {
+    pub fn new(cfg: &SocConfig, requests: usize, bytes: u64) -> ServingLayout {
+        let n = cfg.n_clusters;
+        assert!(n >= 2, "serving needs at least 2 clusters");
+        assert!(
+            n.is_power_of_two(),
+            "serving addresses mask-form sets: n_clusters ({n}) must be a power of two"
+        );
+        assert!(requests >= 1, "serving needs at least 1 request");
+        assert!(
+            bytes > 0 && bytes % (cfg.wide_bytes as u64 * n as u64) == 0,
+            "activation size ({bytes} B) must be a positive multiple of \
+             bus width x clusters ({} B)",
+            cfg.wide_bytes as u64 * n as u64
+        );
+        let chunk = bytes / n as u64;
+        ServingLayout {
+            n,
+            requests,
+            bytes,
+            chunk,
+            region_stride: 3 * bytes + chunk,
+        }
+    }
+
+    pub fn gather(&self, q: usize) -> u64 {
+        q as u64 * self.region_stride
+    }
+    pub fn contrib(&self, q: usize) -> u64 {
+        self.gather(q) + self.bytes
+    }
+    pub fn moe(&self, q: usize) -> u64 {
+        self.gather(q) + 2 * self.bytes
+    }
+    pub fn acc(&self, q: usize) -> u64 {
+        self.gather(q) + 3 * self.bytes
+    }
+    /// Total per-cluster L1 bytes the run touches.
+    pub fn footprint(&self) -> u64 {
+        self.requests as u64 * self.region_stride
+    }
+    pub fn elems(&self) -> usize {
+        (self.bytes / 8) as usize
+    }
+    pub fn chunk_elems(&self) -> usize {
+        (self.chunk / 8) as usize
+    }
+}
+
+// Compute-handler op codes (disjoint from the collectives suite's
+// OP_RS_COMBINE..OP_AR_FINAL = 10..13).
+pub const OP_SERVE_START: u32 = 20;
+pub const OP_SERVE_ATTN: u32 = 21;
+pub const OP_SERVE_MLP: u32 = 22;
+pub const OP_SERVE_MOE: u32 = 23;
+pub const OP_SERVE_DONE: u32 = 24;
+
+fn pack(q: usize, layer: usize) -> u64 {
+    ((q as u64) << 32) | layer as u64
+}
+
+/// Keep every value a small exact integer: all arithmetic maps through
+/// `x mod 1021` (a prime, so layer keys don't collapse the value
+/// space). Inputs stay well under 2^53, every sum is exact in f64, and
+/// the activations cannot grow across layers — the bit-exactness
+/// argument of the whole suite.
+pub fn squash(x: f64) -> f64 {
+    ((x as i64).rem_euclid(1021)) as f64
+}
+
+/// Deterministic initial activation shard of `(request, rank)`: small
+/// integers in [−512, 511] stored as f64.
+pub fn serving_values(q: usize, rank: usize, elems: usize) -> Vec<f64> {
+    let mut rng = crate::util::prng::Pcg::new(
+        0x5E12_71C5_0DE5 ^ ((q * 1024 + rank) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    (0..elems)
+        .map(|_| (rng.next_u64() % 1024) as i64 as f64 - 512.0)
+        .collect()
+}
+
+/// The compute handler: per-phase arithmetic plus per-request timing.
+/// `cy` timestamps come from the engine dispatch (identical across the
+/// sequential and parallel paths), so `start`/`retire` — and every
+/// latency derived from them — are bit-exact across engines.
+pub struct ServingCompute {
+    pub layout: ServingLayout,
+    pub layers: usize,
+    /// Earliest START event cycle per request (entry to layer 0).
+    pub start: Vec<Option<u64>>,
+    /// Latest DONE event cycle per request (last rank finished the
+    /// last layer's compute) — the request's retirement.
+    pub retire: Vec<Option<u64>>,
+    /// `attn_first[q][l]`: earliest attention event of `(q, layer)`
+    /// over all ranks — attention consumes the layer's all-gather, so
+    /// this is when the layer-l collective's result was first used.
+    pub attn_first: Vec<Vec<u64>>,
+    /// `mlp_last[q][l]`: latest MLP / MoE-fold event of `(q, layer)`
+    /// over all ranks — when the layer fully retired.
+    pub mlp_last: Vec<Vec<u64>>,
+    pub moe_folds: u64,
+}
+
+impl ServingCompute {
+    pub fn new(layout: ServingLayout, layers: usize) -> ServingCompute {
+        let r = layout.requests;
+        ServingCompute {
+            layout,
+            layers,
+            start: vec![None; r],
+            retire: vec![None; r],
+            attn_first: vec![vec![u64::MAX; layers]; r],
+            mlp_last: vec![vec![0; layers]; r],
+            moe_folds: 0,
+        }
+    }
+}
+
+impl ComputeHandler for ServingCompute {
+    fn exec(&mut self, cluster: usize, op: u32, arg: u64, cy: u64, mem: &mut SocMem) {
+        let l = &self.layout;
+        let q = (arg >> 32) as usize;
+        let layer = (arg & 0xffff_ffff) as usize;
+        let base = crate::occamy::config::CLUSTER_BASE
+            + cluster as u64 * crate::occamy::config::CLUSTER_STRIDE;
+        let (se, ce) = (l.elems(), l.chunk_elems());
+        let r = cluster;
+        match op {
+            OP_SERVE_START => {
+                let s = &mut self.start[q];
+                *s = Some(s.map_or(cy, |v| v.min(cy)));
+            }
+            OP_SERVE_ATTN => {
+                // toy attention: mix the gathered activation with a
+                // rank-rotated copy and a (request, layer, rank) key
+                let g = mem.read_f64(base + l.gather(q), se);
+                let key = (q + layer + r) as f64;
+                let out: Vec<f64> = (0..se)
+                    .map(|i| squash(g[i] + g[(i + r + 1) % se] + key))
+                    .collect();
+                mem.write_f64(base + l.contrib(q), &out);
+                let c = &mut self.attn_first[q][layer];
+                *c = (*c).min(cy);
+            }
+            OP_SERVE_MLP => {
+                // consume the reduced chunk, write the rank's
+                // next-layer activation shard, and re-zero acc so the
+                // next layer's DmaReduce accumulates from scratch
+                let acc = mem.read_f64(base + l.acc(q), ce);
+                let out: Vec<f64> = acc
+                    .iter()
+                    .map(|&v| squash(v + (layer + 1) as f64))
+                    .collect();
+                mem.write_f64(base + l.gather(q) + r as u64 * l.chunk, &out);
+                mem.write_f64(base + l.acc(q), &vec![0.0; ce]);
+                let c = &mut self.mlp_last[q][layer];
+                *c = (*c).max(cy);
+            }
+            OP_SERVE_MOE => {
+                // fold the routed expert contributions (one slot per
+                // sender) into the rank's activation shard
+                let slot = base + l.gather(q) + r as u64 * l.chunk;
+                let mut g = mem.read_f64(slot, ce);
+                for s in 0..l.n {
+                    let piece = mem.read_f64(base + l.moe(q) + s as u64 * l.chunk, ce);
+                    for i in 0..ce {
+                        g[i] += piece[i];
+                    }
+                }
+                for v in &mut g {
+                    *v = squash(*v);
+                }
+                mem.write_f64(slot, &g);
+                self.moe_folds += 1;
+                let c = &mut self.mlp_last[q][layer];
+                *c = (*c).max(cy);
+            }
+            OP_SERVE_DONE => {
+                let d = &mut self.retire[q];
+                *d = Some(d.map_or(cy, |v| v.max(cy)));
+            }
+            other => panic!("serving: unknown compute op {other}"),
+        }
+    }
+}
+
+/// Scalar reference: replay every request's layer chain functionally on
+/// one canonical activation vector. Returns the final activation per
+/// request (bit-exact target for every rank's shard).
+pub fn serving_reference(n: usize, p: &ServingParams) -> Vec<Vec<f64>> {
+    let se = (p.bytes / 8) as usize;
+    let ce = se / n;
+    let mut out = Vec::with_capacity(p.requests);
+    for q in 0..p.requests {
+        let mut act: Vec<f64> = (0..n).flat_map(|r| serving_values(q, r, ce)).collect();
+        for layer in 0..p.layers {
+            let contribs: Vec<Vec<f64>> = (0..n)
+                .map(|r| {
+                    let key = (q + layer + r) as f64;
+                    (0..se)
+                        .map(|i| squash(act[i] + act[(i + r + 1) % se] + key))
+                        .collect()
+                })
+                .collect();
+            // all-reduce + MLP: chunk j of the summed contributions
+            // lands on rank j, which writes its activation shard
+            for j in 0..n {
+                for i in 0..ce {
+                    let red: f64 = contribs.iter().map(|c| c[j * ce + i]).sum();
+                    act[j * ce + i] = squash(red + (layer + 1) as f64);
+                }
+            }
+            if p.moe_every > 0 && (layer + 1) % p.moe_every == 0 {
+                for j in 0..n {
+                    for i in 0..ce {
+                        let s: f64 = contribs.iter().map(|c| c[j * ce + i]).sum();
+                        act[j * ce + i] = squash(act[j * ce + i] + s);
+                    }
+                }
+            }
+        }
+        out.push(act);
+    }
+    out
+}
+
+/// Whether a layer index triggers the MoE all-to-all.
+fn is_moe_layer(p: &ServingParams, layer: usize) -> bool {
+    p.moe_every > 0 && (layer + 1) % p.moe_every == 0
+}
+
+/// Emit the per-rank command programs: the staggered request pipeline
+/// over `requests + layers - 1` global steps, each step's slots
+/// carrying *every* active request's traffic before one uniform
+/// notify round (see the module docs for why the rounds must be
+/// uniform and identically ordered at every rank).
+fn programs(
+    cfg: &SocConfig,
+    l: &ServingLayout,
+    p: &ServingParams,
+    mode: CollMode,
+) -> Vec<Vec<Cmd>> {
+    let n = l.n;
+    // Concurrent global multicasts only pay off with fan-out to
+    // amortise the reservation handshake; at n = 2 the multicast
+    // degenerates to one destination, so the hw modes fall back to the
+    // unicast exchange (the flags stay armed but unused — the program
+    // and therefore the cycle count match the sw baseline exactly).
+    let use_mcast = matches!(mode, CollMode::HwConc | CollMode::HwReduce) && n >= 4;
+    let steps = p.requests + p.layers - 1;
+    let mut progs: Vec<Vec<Cmd>> = vec![Vec::new(); n];
+    for (r, prog) in progs.iter_mut().enumerate() {
+        let round = |prog: &mut Vec<Cmd>| {
+            prog.push(Cmd::WaitDma);
+            if use_mcast {
+                prog.push(Cmd::SendIrq {
+                    dst: cfg.all_mailboxes(),
+                });
+            } else {
+                for d in 0..n {
+                    prog.push(Cmd::SendIrq {
+                        dst: AddrSet::unicast(cfg.mailbox_addr(d)),
+                    });
+                }
+            }
+            prog.push(Cmd::WaitIrq { count: n as u32 });
+        };
+        for t in 0..steps {
+            let active: Vec<usize> = (0..p.requests)
+                .filter(|&q| t >= q && t - q < p.layers)
+                .collect();
+            for &q in &active {
+                if t == q {
+                    prog.push(Cmd::Compute {
+                        macs: 1,
+                        op: OP_SERVE_START,
+                        arg: pack(q, 0),
+                    });
+                }
+            }
+            // ---- all-gather slot: re-assemble every active
+            // activation (concurrent global collectives, one per
+            // request, all in flight together)
+            for &q in &active {
+                let slot = l.gather(q) + r as u64 * l.chunk;
+                if use_mcast {
+                    prog.push(Cmd::Dma {
+                        src: cfg.cluster_base(r) + slot,
+                        dst: cfg.cluster_set(0, n, slot),
+                        bytes: l.chunk,
+                        tag: 0x100_0000 + (q * n + r) as u64,
+                    });
+                } else {
+                    for d in 0..n {
+                        if d == r {
+                            continue;
+                        }
+                        prog.push(Cmd::Dma {
+                            src: cfg.cluster_base(r) + slot,
+                            dst: AddrSet::unicast(cfg.cluster_base(d) + slot),
+                            bytes: l.chunk,
+                            tag: 0x100_0000 + (q * n + d) as u64,
+                        });
+                    }
+                }
+            }
+            round(prog);
+            for &q in &active {
+                prog.push(Cmd::Compute {
+                    macs: p.compute_macs,
+                    op: OP_SERVE_ATTN,
+                    arg: pack(q, t - q),
+                });
+            }
+            // ---- all-reduce slot: tagged reduction bursts, chunk j
+            // converging on rank j's acc (self included — the local
+            // member combines at its own endpoint)
+            for &q in &active {
+                for j in 0..n {
+                    prog.push(Cmd::DmaReduce {
+                        src: cfg.cluster_base(r) + l.contrib(q) + j as u64 * l.chunk,
+                        dst: cfg.cluster_base(j) + l.acc(q),
+                        bytes: l.chunk,
+                        tag: 0x200_0000 + (q * n + j) as u64,
+                        group: (q * n + j) as u32,
+                        op: ReduceOp::Sum,
+                    });
+                }
+            }
+            round(prog);
+            for &q in &active {
+                prog.push(Cmd::Compute {
+                    macs: p.compute_macs,
+                    op: OP_SERVE_MLP,
+                    arg: pack(q, t - q),
+                });
+            }
+            // ---- MoE all-to-all slot (expert routing), only on steps
+            // where at least one active request hit a MoE layer — the
+            // condition depends only on (t, q, moe_every), so every
+            // rank sees the same round sequence
+            let moe_active: Vec<usize> = active
+                .iter()
+                .copied()
+                .filter(|&q| is_moe_layer(p, t - q))
+                .collect();
+            if !moe_active.is_empty() {
+                for &q in &moe_active {
+                    for j in 0..n {
+                        prog.push(Cmd::Dma {
+                            src: cfg.cluster_base(r) + l.contrib(q) + j as u64 * l.chunk,
+                            dst: AddrSet::unicast(
+                                cfg.cluster_base(j) + l.moe(q) + r as u64 * l.chunk,
+                            ),
+                            bytes: l.chunk,
+                            tag: 0x300_0000 + (q * n + j) as u64,
+                        });
+                    }
+                }
+                round(prog);
+                for &q in &moe_active {
+                    prog.push(Cmd::Compute {
+                        macs: p.compute_macs,
+                        op: OP_SERVE_MOE,
+                        arg: pack(q, t - q),
+                    });
+                }
+            }
+            for &q in &active {
+                if t - q == p.layers - 1 {
+                    prog.push(Cmd::Compute {
+                        macs: 1,
+                        op: OP_SERVE_DONE,
+                        arg: pack(q, t - q),
+                    });
+                }
+            }
+        }
+    }
+    progs
+}
+
+/// One measured serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingResult {
+    pub mode: CollMode,
+    pub shape: String,
+    pub clusters: usize,
+    pub requests: usize,
+    pub layers: usize,
+    pub bytes: u64,
+    pub moe_every: usize,
+    /// Total run cycles (all requests retired and fabric drained).
+    pub cycles: u64,
+    /// Per-request latency, start → retire, indexed by request.
+    pub latencies: Vec<u64>,
+    /// Per-request absolute retirement cycle, indexed by request.
+    pub retired_at: Vec<u64>,
+    pub lat_p50: u64,
+    pub lat_p95: u64,
+    pub lat_max: u64,
+    /// Requests retired per million cycles.
+    pub throughput_rpmc: f64,
+    pub wide: XbarStats,
+    pub dma_w_beats: u64,
+    pub moe_folds: u64,
+    pub numerics_ok: bool,
+    /// Earliest attention event per `(request, layer)` — consumes the
+    /// layer's all-gather (tests assert the chain dependency on it).
+    pub attn_first: Vec<Vec<u64>>,
+    /// Latest MLP / MoE event per `(request, layer)`.
+    pub mlp_last: Vec<Vec<u64>>,
+    /// The concrete mode `CollMode::Auto` resolved to (`None` for
+    /// concrete-mode runs).
+    pub auto_resolved: Option<String>,
+}
+
+/// Nearest-rank percentile on a sorted slice (monotone in `p`, so
+/// `p95 >= p50` by construction).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    let idx = ((p * sorted.len() as f64).ceil() as usize).max(1) - 1;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Resolve `CollMode::Auto` for the serving traffic mix: score the
+/// all-reduce's converging half and the all-gather on the analytic
+/// cost model at the per-request activation size. In-network reduction
+/// wins if the model picks it for the converging pattern; otherwise
+/// any multicast pick maps to the concurrent schedule (serving always
+/// has many tenants in flight — the single-mcast `Hw` schedules don't
+/// apply).
+pub fn resolve_serving_auto(cfg: &SocConfig, bytes: u64) -> CollMode {
+    let rs = auto_plan(cfg, CollOp::ReduceScatter, bytes);
+    if rs.mode == CollMode::HwReduce {
+        return CollMode::HwReduce;
+    }
+    match auto_plan(cfg, CollOp::AllGather, bytes).mode {
+        CollMode::Sw => CollMode::Sw,
+        _ => CollMode::HwConc,
+    }
+}
+
+/// Seed the activations, run the serving pipeline in one mode on the
+/// configured system, and validate every rank's final activation shard
+/// bit-exactly against the scalar reference.
+pub fn run_serving(cfg: &SocConfig, p: &ServingParams, mode: CollMode) -> ServingResult {
+    if mode == CollMode::Auto {
+        let resolved = resolve_serving_auto(cfg, p.bytes);
+        let mut r = run_serving(cfg, p, resolved);
+        r.mode = CollMode::Auto;
+        r.auto_resolved = Some(resolved.name().to_string());
+        return r;
+    }
+    assert!(
+        matches!(mode, CollMode::Sw | CollMode::HwConc | CollMode::HwReduce),
+        "serving sweeps sw / hw-concurrent / hw-reduce / auto (got {})",
+        mode.name()
+    );
+    assert!(p.layers >= 1, "serving needs at least 1 layer");
+    let mut cfg = cfg.clone();
+    match mode {
+        CollMode::Sw => {
+            cfg.wide_mcast = false;
+            cfg.narrow_mcast = false;
+        }
+        CollMode::HwConc => {
+            cfg.wide_mcast = true;
+            cfg.narrow_mcast = true;
+            cfg.e2e_mcast_order = true;
+        }
+        CollMode::HwReduce => {
+            cfg.wide_mcast = true;
+            cfg.narrow_mcast = true;
+            cfg.e2e_mcast_order = true;
+            cfg.fabric_reduce = true;
+        }
+        _ => unreachable!(),
+    }
+    let l = ServingLayout::new(&cfg, p.requests, p.bytes);
+    let fp = l.footprint();
+    assert!(
+        fp <= cfg.l1_bytes && fp <= MAILBOX_OFFSET,
+        "serving: L1 footprint {fp} B ({} requests x {} B regions) exceeds SPM {} \
+         (fewer requests or a smaller --size)",
+        p.requests,
+        l.region_stride,
+        cfg.l1_bytes
+    );
+    let n = l.n;
+    let ce = l.chunk_elems();
+    let mut soc = Soc::new(cfg.clone());
+
+    // in-fabric reduction groups: one per (request, chunk owner),
+    // opened once and reused every layer — each layer's converging
+    // round opens a fresh combine entry per join node, and the held-B
+    // completion plus the WaitDma in the round drains it before the
+    // next layer reuses the group id
+    if mode == CollMode::HwReduce {
+        let members: Vec<usize> = (0..n).collect();
+        for q in 0..p.requests {
+            for j in 0..n {
+                soc.open_reduce_group(
+                    (q * n + j) as u32,
+                    ReduceOp::Sum,
+                    &members,
+                    cfg.cluster_base(j) + l.acc(q),
+                );
+            }
+        }
+    }
+
+    for q in 0..p.requests {
+        for r in 0..n {
+            soc.mem.write_f64(
+                cfg.cluster_base(r) + l.gather(q) + r as u64 * l.chunk,
+                &serving_values(q, r, ce),
+            );
+        }
+    }
+
+    soc.load_programs(programs(&cfg, &l, p, mode));
+    let mut handler = ServingCompute::new(l.clone(), p.layers);
+    let cycles = soc
+        .run(
+            &mut handler,
+            Watchdog {
+                stall_cycles: 500_000,
+                max_cycles: 500_000_000,
+            },
+        )
+        .unwrap_or_else(|e| {
+            panic!(
+                "serving {} on {} ({n} clusters, {} requests x {} layers, {} B): {e}",
+                mode.name(),
+                cfg.wide_shape.label(),
+                p.requests,
+                p.layers,
+                p.bytes
+            )
+        });
+
+    // ---- bit-exact validation against the scalar reference ----
+    let reference = serving_reference(n, p);
+    let mut mismatches = 0u64;
+    let mut first_bad: Option<(usize, usize, usize, f64, f64)> = None;
+    for q in 0..p.requests {
+        for r in 0..n {
+            let base = cfg.cluster_base(r);
+            let got = soc.mem.read_f64(base + l.gather(q) + r as u64 * l.chunk, ce);
+            let want = &reference[q][r * ce..(r + 1) * ce];
+            for (i, (g, w)) in got.iter().zip(want).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    mismatches += 1;
+                    if first_bad.is_none() {
+                        first_bad = Some((q, r, i, *g, *w));
+                    }
+                }
+            }
+            // every layer's MLP re-zeroed acc after consuming it
+            for (i, v) in soc.mem.read_f64(base + l.acc(q), ce).iter().enumerate() {
+                if v.to_bits() != 0 {
+                    mismatches += 1;
+                    if first_bad.is_none() {
+                        first_bad = Some((q, r, i, *v, 0.0));
+                    }
+                }
+            }
+        }
+    }
+    let numerics_ok = mismatches == 0;
+    if let Some((q, r, i, got, want)) = first_bad {
+        eprintln!(
+            "serving {}: {mismatches} mismatches; first at request {q} rank {r} elem {i}: \
+             got {got} want {want}",
+            mode.name()
+        );
+    }
+
+    let latencies: Vec<u64> = (0..p.requests)
+        .map(|q| {
+            let s = handler.start[q].unwrap_or_else(|| panic!("request {q} never started"));
+            let d = handler.retire[q].unwrap_or_else(|| panic!("request {q} never retired"));
+            assert!(d > s, "request {q}: retired at {d} before start {s}");
+            d - s
+        })
+        .collect();
+    let retired_at: Vec<u64> = (0..p.requests)
+        .map(|q| handler.retire[q].unwrap())
+        .collect();
+    let mut sorted = latencies.clone();
+    sorted.sort_unstable();
+    let dma_w_beats: u64 = soc.clusters.iter().map(|c| c.dma.stats.write_beats).sum();
+    ServingResult {
+        mode,
+        shape: cfg.wide_shape.label(),
+        clusters: n,
+        requests: p.requests,
+        layers: p.layers,
+        bytes: p.bytes,
+        moe_every: p.moe_every,
+        cycles,
+        lat_p50: percentile(&sorted, 0.50),
+        lat_p95: percentile(&sorted, 0.95),
+        lat_max: *sorted.last().unwrap(),
+        throughput_rpmc: p.requests as f64 * 1.0e6 / cycles as f64,
+        latencies,
+        retired_at,
+        wide: soc.wide.stats_sum(),
+        dma_w_beats,
+        moe_folds: handler.moe_folds,
+        numerics_ok,
+        attn_first: handler.attn_first,
+        mlp_last: handler.mlp_last,
+        auto_resolved: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> SocConfig {
+        SocConfig::tiny(n)
+    }
+
+    fn small_params(n: usize) -> ServingParams {
+        ServingParams {
+            requests: 3,
+            layers: 3,
+            bytes: 64 * n as u64,
+            moe_every: 2,
+            compute_macs: 64,
+        }
+    }
+
+    #[test]
+    fn layout_regions_are_disjoint_and_fit() {
+        let cfg = tiny(4);
+        let l = ServingLayout::new(&cfg, 4, 1024);
+        assert_eq!(l.chunk, 256);
+        assert!(l.contrib(0) > l.gather(0));
+        assert!(l.moe(0) > l.contrib(0));
+        assert!(l.acc(0) > l.moe(0));
+        assert_eq!(l.gather(1), l.region_stride);
+        assert!(l.footprint() <= cfg.l1_bytes);
+    }
+
+    #[test]
+    fn reference_is_mode_independent_input() {
+        // the reference only depends on (n, params): same call twice
+        // is bit-identical
+        let p = small_params(4);
+        let a = serving_reference(4, &p);
+        let b = serving_reference(4, &p);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), p.requests);
+    }
+
+    #[test]
+    fn sw_run_is_bit_exact_and_tails_ordered() {
+        let cfg = tiny(4);
+        let r = run_serving(&cfg, &small_params(4), CollMode::Sw);
+        assert!(r.numerics_ok);
+        assert!(r.lat_p95 >= r.lat_p50);
+        assert!(r.lat_max >= r.lat_p95);
+        assert_eq!(r.latencies.len(), 3);
+        assert!(r.moe_folds > 0, "moe_every=2 with 3 layers must fold");
+    }
+
+    #[test]
+    fn hw_modes_match_reference_and_inject_less() {
+        let cfg = tiny(4);
+        let p = small_params(4);
+        let sw = run_serving(&cfg, &p, CollMode::Sw);
+        let conc = run_serving(&cfg, &p, CollMode::HwConc);
+        let red = run_serving(&cfg, &p, CollMode::HwReduce);
+        for r in [&sw, &conc, &red] {
+            assert!(r.numerics_ok, "{} diverges", r.mode.name());
+        }
+        assert!(conc.dma_w_beats <= sw.dma_w_beats);
+        assert!(red.dma_w_beats <= conc.dma_w_beats);
+        assert!(red.wide.red_beats_saved > 0, "fabric combining never fired");
+    }
+
+    #[test]
+    fn auto_resolves_and_records_the_pick() {
+        let cfg = tiny(4);
+        let r = run_serving(&cfg, &small_params(4), CollMode::Auto);
+        assert_eq!(r.mode, CollMode::Auto);
+        assert!(r.numerics_ok);
+        let pick = r.auto_resolved.as_deref().unwrap();
+        assert!(["sw", "hw-concurrent", "hw-reduce"].contains(&pick), "{pick}");
+    }
+
+    #[test]
+    fn dependency_chain_is_honored() {
+        let cfg = tiny(4);
+        let r = run_serving(&cfg, &small_params(4), CollMode::HwConc);
+        for q in 0..r.requests {
+            for layer in 1..r.layers {
+                assert!(
+                    r.attn_first[q][layer] > r.mlp_last[q][layer - 1],
+                    "request {q}: layer {layer} attention at {} before layer {} \
+                     retired at {}",
+                    r.attn_first[q][layer],
+                    layer - 1,
+                    r.mlp_last[q][layer - 1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_single_request_single_layer() {
+        let cfg = tiny(4);
+        let p = ServingParams {
+            requests: 1,
+            layers: 1,
+            bytes: 256,
+            moe_every: 0,
+            compute_macs: 8,
+        };
+        for mode in [CollMode::Sw, CollMode::HwConc, CollMode::HwReduce] {
+            let r = run_serving(&cfg, &p, mode);
+            assert!(r.numerics_ok, "{}", mode.name());
+            assert_eq!(r.latencies.len(), 1);
+            assert_eq!(r.lat_p50, r.lat_max);
+            assert_eq!(r.moe_folds, 0);
+        }
+    }
+
+    #[test]
+    fn degenerate_two_clusters() {
+        // n = 2: the hw modes fall back to the unicast exchange (no
+        // fan-out to amortise) but must stay bit-exact
+        let cfg = tiny(2);
+        let p = ServingParams {
+            requests: 2,
+            layers: 2,
+            bytes: 128,
+            moe_every: 1,
+            compute_macs: 8,
+        };
+        for mode in [CollMode::Sw, CollMode::HwConc, CollMode::HwReduce] {
+            let r = run_serving(&cfg, &p, mode);
+            assert!(r.numerics_ok, "{}", mode.name());
+            assert!(r.lat_p95 >= r.lat_p50);
+        }
+    }
+
+    #[test]
+    fn threads_and_force_naive_are_bit_identical() {
+        let p = small_params(4);
+        let base = run_serving(&tiny(4), &p, CollMode::HwReduce);
+        for threads in [2usize, 4] {
+            let mut cfg = tiny(4);
+            cfg.threads = threads;
+            assert_eq!(run_serving(&cfg, &p, CollMode::HwReduce), base, "threads {threads}");
+        }
+        let mut cfg = tiny(4);
+        cfg.force_naive = true;
+        assert_eq!(run_serving(&cfg, &p, CollMode::HwReduce), base, "force_naive");
+    }
+}

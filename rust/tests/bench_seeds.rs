@@ -62,6 +62,39 @@ fn sim_perf_seed_has_documented_schema_shape() {
     }
 }
 
+#[test]
+fn serving_seed_has_schema_v1_shape() {
+    let j = load("BENCH_serving.json");
+    let o = j.as_obj().unwrap();
+    assert_eq!(o["bench"].as_str(), Some("serving"));
+    assert_eq!(o["schema"].as_f64().unwrap() as u64, 1);
+    for key in ["config", "rows", "summaries"] {
+        assert!(o.contains_key(key), "BENCH_serving.json missing {key}");
+    }
+    // measured rows (once a toolchain run replaces the seed) must carry
+    // the documented v1 columns: one object per (shape, mode) with
+    // throughput, the tail-latency triple and the budget columns
+    for row in o["rows"].as_arr().unwrap() {
+        let r = row.as_obj().unwrap();
+        for key in [
+            "shape",
+            "mode",
+            "requests",
+            "layers",
+            "cycles",
+            "throughput_rpmc",
+            "lat_p50",
+            "lat_p95",
+            "lat_max",
+            "budget",
+            "retired_in_budget",
+            "numerics_ok",
+        ] {
+            assert!(r.contains_key(key), "serving row missing {key}");
+        }
+    }
+}
+
 /// `BENCH_topo_shapes.json` is bench output, not a committed seed — but
 /// when present (e.g. in a CI workspace after `cargo bench`) it must
 /// match its documented schema too.

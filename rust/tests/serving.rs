@@ -1,0 +1,178 @@
+//! Integration suite for the serving-scale transformer traffic
+//! generator: N concurrent requests, each a dependency-released chain
+//! of per-layer all-gather -> all-reduce (-> MoE all-to-all)
+//! collectives. Checks the load-bearing properties end to end:
+//!
+//! * dependency ordering — no request touches layer k's collectives
+//!   before its layer k-1 all-reduce retired;
+//! * determinism — the full result (cycles, latencies, stats, payload
+//!   checks) is bit-identical across worker-thread counts and across
+//!   the optimised vs `force_naive` parallel stepping paths;
+//! * degenerate shapes — 1 request, 1 layer, and the 2-cluster system
+//!   where the hw modes legally collapse onto the unicast exchange;
+//! * tail-latency ordering — p50 <= p95 <= max on every run;
+//! * the `coordinator::experiments::serving` row invariants, with the
+//!   `CollMode::Auto` row present and its resolution recorded.
+
+use axi_mcast::coordinator::experiments::{assert_serving_row_invariants, serving};
+use axi_mcast::occamy::{SocConfig, WideShape};
+use axi_mcast::workloads::collectives::CollMode;
+use axi_mcast::workloads::serving::{run_serving, ServingParams};
+
+fn params4() -> ServingParams {
+    ServingParams {
+        requests: 4,
+        layers: 3,
+        bytes: 1024, // 4 clusters => 256 B (4-beat) chunks
+        moe_every: 2,
+        compute_macs: 64,
+    }
+}
+
+/// No layer-k collective may start before the same request's layer-k-1
+/// all-reduce retired: the first ATTN timestamp of layer k (fed by the
+/// layer-k all-gather) must come strictly after the last MLP timestamp
+/// of layer k-1 (which consumed the layer-k-1 all-reduce), on every
+/// request, in every mode. Retirement order also follows the staggered
+/// admission order.
+#[test]
+fn dependency_chain_is_honored_in_every_mode() {
+    let cfg = SocConfig::tiny(4);
+    let p = params4();
+    for mode in [CollMode::Sw, CollMode::HwConc, CollMode::HwReduce] {
+        let r = run_serving(&cfg, &p, mode);
+        assert!(r.numerics_ok);
+        for q in 0..p.requests {
+            for layer in 1..p.layers {
+                assert!(
+                    r.attn_first[q][layer] > r.mlp_last[q][layer - 1],
+                    "{}: request {q} layer {layer} started (cy {}) before layer {} \
+                     retired (cy {})",
+                    mode.name(),
+                    r.attn_first[q][layer],
+                    layer - 1,
+                    r.mlp_last[q][layer - 1]
+                );
+            }
+        }
+        assert!(
+            r.retired_at.windows(2).all(|w| w[0] < w[1]),
+            "{}: staggered requests must retire in admission order: {:?}",
+            mode.name(),
+            r.retired_at
+        );
+    }
+}
+
+/// The whole result — cycles, per-request latencies, crossbar stats,
+/// payload validation — is bit-identical across worker-thread counts
+/// and across the optimised vs force-naive parallel stepping paths.
+#[test]
+fn results_are_bit_identical_across_engines() {
+    let p = params4();
+    let base = run_serving(&SocConfig::tiny(4), &p, CollMode::HwReduce);
+    for threads in [2, 4] {
+        let mut cfg = SocConfig::tiny(4);
+        cfg.threads = threads;
+        assert_eq!(run_serving(&cfg, &p, CollMode::HwReduce), base, "threads={threads}");
+        cfg.force_naive = true;
+        assert_eq!(
+            run_serving(&cfg, &p, CollMode::HwReduce),
+            base,
+            "threads={threads} force_naive"
+        );
+    }
+}
+
+/// Degenerate batch: a single request with a single layer still
+/// produces a validated result with one latency sample in every mode.
+#[test]
+fn single_request_single_layer_works() {
+    let cfg = SocConfig::tiny(4);
+    let p = ServingParams {
+        requests: 1,
+        layers: 1,
+        bytes: 256,
+        moe_every: 0,
+        compute_macs: 16,
+    };
+    for mode in [CollMode::Sw, CollMode::HwConc, CollMode::HwReduce] {
+        let r = run_serving(&cfg, &p, mode);
+        assert!(r.numerics_ok, "{}", mode.name());
+        assert_eq!(r.latencies.len(), 1);
+        assert_eq!(r.lat_p50, r.lat_max);
+        assert_eq!(r.moe_folds, 0);
+    }
+}
+
+/// On 2 clusters a multicast has no fan-out to amortise the
+/// reservation handshake, so the hw modes deliberately emit the same
+/// unicast exchange as sw. hw-concurrent (flags armed, never
+/// exercised) collapses onto sw exactly — equal cycles, latencies and
+/// injected traffic. hw-reduce still arms in-fabric reduction for the
+/// converging DmaReduce rounds, so only its injection-side traffic and
+/// numerics must match.
+#[test]
+fn two_cluster_hw_modes_collapse_onto_sw() {
+    let cfg = SocConfig::tiny(2);
+    let p = ServingParams {
+        requests: 2,
+        layers: 2,
+        bytes: 128,
+        moe_every: 1,
+        compute_macs: 16,
+    };
+    let sw = run_serving(&cfg, &p, CollMode::Sw);
+    assert!(sw.numerics_ok);
+
+    let conc = run_serving(&cfg, &p, CollMode::HwConc);
+    assert!(conc.numerics_ok);
+    assert_eq!(conc.cycles, sw.cycles);
+    assert_eq!(conc.latencies, sw.latencies);
+    assert_eq!(conc.dma_w_beats, sw.dma_w_beats);
+
+    let red = run_serving(&cfg, &p, CollMode::HwReduce);
+    assert!(red.numerics_ok);
+    assert_eq!(red.dma_w_beats, sw.dma_w_beats);
+}
+
+/// Tail statistics are ordered on every mode and throughput is the
+/// declared requests-per-megacycle ratio.
+#[test]
+fn tail_latencies_are_ordered() {
+    let cfg = SocConfig::tiny(4);
+    let p = params4();
+    for mode in [CollMode::Sw, CollMode::HwConc, CollMode::HwReduce, CollMode::Auto] {
+        let r = run_serving(&cfg, &p, mode);
+        assert!(r.lat_p50 <= r.lat_p95, "{}", mode.name());
+        assert!(r.lat_p95 <= r.lat_max, "{}", mode.name());
+        let expect = p.requests as f64 * 1e6 / r.cycles as f64;
+        assert!((r.throughput_rpmc - expect).abs() < 1e-9, "{}", mode.name());
+    }
+}
+
+/// The experiment harness: every (shape, mode) row holds the serving
+/// invariants (hw never slower or chattier than sw at equal work,
+/// ledgers drained, tails ordered) and the auto row records what the
+/// cost model resolved it to.
+#[test]
+fn experiment_rows_hold_invariants_with_auto_present() {
+    let cfg = SocConfig::tiny(4);
+    let p = ServingParams {
+        requests: 3,
+        layers: 2,
+        bytes: 1024,
+        moe_every: 2,
+        compute_macs: 64,
+    };
+    let shapes = [WideShape::Groups, WideShape::Flat];
+    let (rows, _table, json) = serving(&cfg, &shapes, &p);
+    assert_eq!(rows.len(), shapes.len());
+    for row in &rows {
+        assert_serving_row_invariants(row);
+        assert_eq!(row.auto.mode, CollMode::Auto);
+        assert!(row.auto.auto_resolved.is_some());
+    }
+    // one JSON object per (shape, mode)
+    assert_eq!(json.as_arr().unwrap().len(), shapes.len() * 4);
+}
